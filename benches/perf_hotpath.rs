@@ -1,0 +1,149 @@
+//! §Perf harness: micro-benchmarks of every hot-path component, used for
+//! the before/after log in EXPERIMENTS.md §Perf.
+//!
+//!   * axpy + gossip mix (the L3 inner loop) at deep-learning d
+//!   * global average
+//!   * in-proc ring all-reduce (threaded bus)
+//!   * PJRT grad execution + literal round-trip per model
+//!   * a full coordinator step (logreg, n = 32)
+//!
+//!     cargo bench --bench perf_hotpath
+
+use std::rc::Rc;
+
+use gossip_pga::algorithms::AlgorithmKind;
+use gossip_pga::collective::{bus, ring_all_reduce, run_nodes};
+use gossip_pga::coordinator::mixer::{axpy, Mixer};
+use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
+use gossip_pga::costmodel::CostModel;
+use gossip_pga::harness::{fmt_duration, measure, Table};
+use gossip_pga::optim::LrSchedule;
+use gossip_pga::rng::Rng;
+use gossip_pga::runtime::{lit_f32, lit_i32, GradFn, Runtime};
+use gossip_pga::topology::Topology;
+
+fn main() -> anyhow::Result<()> {
+    println!("# §Perf hot-path microbenchmarks\n");
+    let mut t = Table::new(&["component", "config", "mean", "p95", "throughput"]);
+
+    // --- axpy ------------------------------------------------------------
+    let d = 12_235_776; // e2e transformer flat dim
+    let mut rng = Rng::new(1);
+    let x = rng.normal_vec(d, 1.0);
+    let mut out = vec![0.0f32; d];
+    let s = measure(3, 20, || axpy(0.5, &x, &mut out));
+    t.rowv(vec![
+        "axpy (mix inner loop)".into(),
+        format!("d = {d}"),
+        fmt_duration(s.mean),
+        fmt_duration(s.p95),
+        format!("{:.1} GB/s", (d * 8) as f64 / s.mean / 1e9),
+    ]);
+
+    // --- gossip mix, ring n=16 -------------------------------------------
+    for (dd, label) in [(1_000_000usize, "d = 1M"), (12_235_776, "d = 12.2M (e2e)")] {
+        let topo = Topology::ring(16);
+        let mut params: Vec<Vec<f32>> = (0..16).map(|_| rng.normal_vec(dd, 1.0)).collect();
+        let mut mixer = Mixer::new(&topo, dd);
+        let s = measure(2, 10, || mixer.gossip(&mut params));
+        t.rowv(vec![
+            "gossip mix (ring, n=16)".into(),
+            label.into(),
+            fmt_duration(s.mean),
+            fmt_duration(s.p95),
+            format!("{:.1} GB/s", (16 * 3 * dd * 4) as f64 / s.mean / 1e9),
+        ]);
+        let s = measure(2, 10, || mixer.global_average(&mut params));
+        t.rowv(vec![
+            "global average (n=16)".into(),
+            label.into(),
+            fmt_duration(s.mean),
+            fmt_duration(s.p95),
+            format!("{:.1} GB/s", (16 * 2 * dd * 4) as f64 / s.mean / 1e9),
+        ]);
+    }
+
+    // --- threaded ring all-reduce -----------------------------------------
+    let dd = 1_000_000;
+    let s = measure(1, 5, || {
+        let eps = bus(8);
+        run_nodes(eps, move |mut ep| {
+            let mut x = vec![1.0f32; dd];
+            ring_all_reduce(&mut ep, &mut x)?;
+            Ok(())
+        })
+        .unwrap();
+    });
+    t.rowv(vec![
+        "bus ring all-reduce".into(),
+        "n = 8, d = 1M".into(),
+        fmt_duration(s.mean),
+        fmt_duration(s.p95),
+        format!("{:.1} GB/s agg", (8 * 2 * dd * 4) as f64 / s.mean / 1e9),
+    ]);
+
+    // --- PJRT grad exec ----------------------------------------------------
+    let rt = Rc::new(Runtime::load_default()?);
+    for (model, tag) in [("logreg", None), ("mlp", None), ("transformer", Some("tiny"))] {
+        let spec = rt.manifest.find(model, "grad", tag)?.clone();
+        let g = GradFn::new(rt.clone(), &spec.name)?;
+        let dflat = spec.flat_dim;
+        let params = vec![0.01f32; dflat];
+        let mut grad = vec![0.0f32; dflat];
+        let mk_batch = || -> Vec<xla::Literal> {
+            spec.inputs[1..]
+                .iter()
+                .map(|io| {
+                    let n: usize = io.shape.iter().product();
+                    match io.dtype {
+                        gossip_pga::runtime::Dtype::F32 => lit_f32(&vec![0.1; n], &io.shape).unwrap(),
+                        gossip_pga::runtime::Dtype::I32 => lit_i32(&vec![1; n], &io.shape).unwrap(),
+                    }
+                })
+                .collect()
+        };
+        let s = measure(3, 15, || {
+            g.call_into(&params, mk_batch(), &mut grad).unwrap();
+        });
+        t.rowv(vec![
+            format!("PJRT grad exec ({model})"),
+            format!("flat_dim = {dflat}"),
+            fmt_duration(s.mean),
+            fmt_duration(s.p95),
+            format!("{:.0} exec/s", 1.0 / s.mean),
+        ]);
+    }
+
+    // --- full coordinator step --------------------------------------------
+    let n = 32;
+    let (workload, init) = logreg_workload(rt.clone(), n, 256, true, 3)?;
+    let opts = TrainerOptions {
+        algorithm: AlgorithmKind::GossipPga,
+        topology: Topology::ring(n),
+        period: 6,
+        aga_init_period: 4,
+        aga_warmup: 10,
+        lr: LrSchedule::Const { lr: 0.1 },
+        momentum: 0.0,
+        nesterov: false,
+        seed: 3,
+        slowmo: Default::default(),
+        cost: CostModel::calibrated_resnet50(),
+        cost_dim: 25_500_000,
+        log_every: 1000,
+    };
+    let mut trainer = Trainer::new(workload, init, opts);
+    let s = measure(5, 50, || {
+        trainer.step_once().unwrap();
+    });
+    t.rowv(vec![
+        "coordinator step (logreg)".into(),
+        format!("n = {n}, PGA H=6"),
+        fmt_duration(s.mean),
+        fmt_duration(s.p95),
+        format!("{:.0} worker-execs/s", n as f64 / s.mean),
+    ]);
+
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Table 16 (Appendix F.3): the suite without momentum — plain SGD
+//! optimizer, matching the paper's non-accelerated theory exactly.
+//!
+//!     cargo bench --bench tab16_no_momentum
+
+use std::rc::Rc;
+
+use gossip_pga::algorithms::AlgorithmKind;
+use gossip_pga::harness::suite::{run_image, step_scale, RunSpec};
+use gossip_pga::harness::Table;
+use gossip_pga::runtime::Runtime;
+use gossip_pga::topology::Topology;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Rc::new(Runtime::load_default()?);
+    let n = 32;
+    let steps = step_scale(600);
+    println!("# Table 16: plain SGD (no momentum), n = {n}, {steps} steps\n");
+
+    let mut t = Table::new(&["Method", "Acc.%"]);
+    for (label, algo) in [
+        ("Parallel SGD", AlgorithmKind::Parallel),
+        ("Gossip SGD", AlgorithmKind::Gossip),
+        ("Gossip-PGA", AlgorithmKind::GossipPga),
+    ] {
+        let mut spec = RunSpec::image(algo, Topology::one_peer_expo(n), 6, steps);
+        spec.momentum = 0.0; // Table 16's point: drop the acceleration
+        let r = run_image(rt.clone(), &spec, 2048)?;
+        t.rowv(vec![label.to_string(), format!("{:.2}", r.accuracy * 100.0)]);
+    }
+    t.print();
+    println!(
+        "\nExpected shape (paper Table 16): ordering preserved without\n\
+         momentum — Parallel >= PGA > Gossip."
+    );
+    Ok(())
+}

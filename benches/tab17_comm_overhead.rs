@@ -1,0 +1,80 @@
+//! Table 17 (Appendix H): communication overhead of one gossip round vs one
+//! ring all-reduce — model predictions AND measured traffic/time on the
+//! in-proc collective substrate.
+//!
+//!     cargo bench --bench tab17_comm_overhead
+
+use gossip_pga::collective::{bus, gossip_exchange, ring_all_reduce, run_nodes};
+use gossip_pga::costmodel::CostModel;
+use gossip_pga::harness::{fmt_duration, Table};
+use gossip_pga::topology::Topology;
+
+fn main() -> anyhow::Result<()> {
+    // --- model side: reproduce the paper's Table 17 numbers --------------
+    println!("# Table 17 (model): per-iteration comm time, Table 17 calibration\n");
+    let mut t = Table::new(&["Model", "No comm", "All-Reduce", "Gossip (one-peer)"]);
+    for (name, model, d, n) in [
+        ("ResNet-50", CostModel::calibrated_resnet50(), 25_500_000usize, 32usize),
+        ("BERT-Large", CostModel::calibrated_bert(), 330_000_000, 8),
+    ] {
+        let topo = Topology::one_peer_expo(n);
+        t.rowv(vec![
+            name.to_string(),
+            fmt_duration(model.compute),
+            format!("{} (+{})", fmt_duration(model.compute + model.all_reduce(n, d)), fmt_duration(model.all_reduce(n, d))),
+            format!("{} (+{})", fmt_duration(model.compute + model.gossip(&topo, d)), fmt_duration(model.gossip(&topo, d))),
+        ]);
+    }
+    t.print();
+    println!("(paper: ResNet-50 424(278) / 296(150) ms; BERT 1913.8(1468.8) / 1011.5(566.5) ms)\n");
+
+    // --- measured side: the in-proc substrate ----------------------------
+    println!("# Table 17 (measured): in-proc bus, d = 1M floats, n = 8\n");
+    let n = 8;
+    let d = 1_000_000;
+    let mut t2 = Table::new(&["Primitive", "Wall time", "Scalars sent/node", "Model prediction (2d(n-1)/n vs 3d)"]);
+
+    // ring all-reduce
+    let t0 = std::time::Instant::now();
+    let eps = bus(n);
+    let sent = run_nodes(eps, move |mut ep| {
+        let mut x = vec![1.0f32; d];
+        ring_all_reduce(&mut ep, &mut x)?;
+        Ok(ep.scalars_sent)
+    })?;
+    let ar_time = t0.elapsed().as_secs_f64();
+    t2.rowv(vec![
+        "ring all-reduce".into(),
+        fmt_duration(ar_time),
+        sent[0].to_string(),
+        format!("{}", 2 * d * (n - 1) / n),
+    ]);
+
+    // one ring-gossip round
+    let topo = Topology::ring(n);
+    let t0 = std::time::Instant::now();
+    let eps = bus(n);
+    let sent = run_nodes(eps, move |mut ep| {
+        let rank = ep.rank;
+        let x = vec![1.0f32; d];
+        let row = topo.weight_row(rank, 0);
+        let outn: Vec<usize> =
+            topo.in_neighbors(rank, 0).into_iter().filter(|&j| j != rank).collect();
+        gossip_exchange(&mut ep, &x, &row, &outn)?;
+        Ok(ep.scalars_sent)
+    })?;
+    let g_time = t0.elapsed().as_secs_f64();
+    t2.rowv(vec![
+        "ring gossip round".into(),
+        fmt_duration(g_time),
+        sent[0].to_string(),
+        format!("{}", 2 * d),
+    ]);
+    t2.print();
+    println!(
+        "\nExpected shape: all-reduce moves ~2d scalars per node in 2(n-1)\n\
+         latency-bound steps; one gossip round moves 2d (ring) in a single\n\
+         step — the latency gap is what the paper's Table 17 measures."
+    );
+    Ok(())
+}

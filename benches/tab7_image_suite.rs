@@ -1,0 +1,115 @@
+//! Table 7 (+ Figure 2's endpoints): the full image-classification method
+//! suite — Parallel, Local (1x/3x), Gossip (1x/2x), OSGP (overlap-modeled),
+//! Gossip-PGA, Gossip-AGA — accuracy, simulated training time, and
+//! time-to-target.
+//!
+//! Substitution (DESIGN.md): ImageNet/ResNet-50 -> Gaussian-cluster
+//! classification/MLP; communication billed at ResNet-50's d = 25.5M via
+//! the Table 17-calibrated alpha-beta model. OSGP's update rule in a
+//! synchronous simulator equals Gossip SGD; its overlap only changes the
+//! clock, so its time column uses max(compute, comm) per iteration.
+//!
+//!     cargo bench --bench tab7_image_suite
+
+use std::rc::Rc;
+
+use gossip_pga::algorithms::AlgorithmKind;
+use gossip_pga::costmodel::{AlgoCost, CostModel};
+use gossip_pga::harness::suite::{run_image, step_scale, ImageResult, RunSpec};
+use gossip_pga::harness::Table;
+use gossip_pga::runtime::Runtime;
+use gossip_pga::topology::Topology;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Rc::new(Runtime::load_default()?);
+    let n = 32;
+    let base = step_scale(600);
+    let h = 6; // paper's period for Local SGD and Gossip-PGA
+    println!("# Table 7: method suite on the image substitute, n = {n}, H = {h}, base {base} steps\n");
+
+    struct Row {
+        label: String,
+        result: ImageResult,
+        osgp_hours: Option<f64>,
+        steps: usize,
+    }
+
+    let cost = CostModel::calibrated_resnet50();
+    let d = 25_500_000;
+    let mut rows: Vec<Row> = Vec::new();
+    let runs: Vec<(&str, AlgorithmKind, usize, bool)> = vec![
+        ("Parallel SGD", AlgorithmKind::Parallel, base, false),
+        ("Local SGD", AlgorithmKind::Local, base, false),
+        ("Local SGD x3", AlgorithmKind::Local, base * 3, false),
+        ("Gossip SGD", AlgorithmKind::Gossip, base, false),
+        ("Gossip SGD x2", AlgorithmKind::Gossip, base * 2, false),
+        ("OSGP", AlgorithmKind::Gossip, base, true),
+        ("OSGP x2", AlgorithmKind::Gossip, base * 2, true),
+        ("Gossip-PGA", AlgorithmKind::GossipPga, base, false),
+        ("Gossip-AGA", AlgorithmKind::GossipAga, base, false),
+    ];
+    for (label, algo, steps, overlap) in runs {
+        let mut spec = RunSpec::image(algo, Topology::one_peer_expo(n), h, steps);
+        spec.seed = 42 + overlap as u64; // OSGP rows: distinct stochastic run
+        let result = run_image(rt.clone(), &spec, 2048)?;
+        let osgp_hours = overlap.then(|| {
+            // Overlap: per-iteration time = max(compute, comm) + amortized
+            // nothing else; recompute the clock analytically.
+            let topo = Topology::one_peer_expo(n);
+            let per = cost.compute.max(cost.per_iter(AlgoCost::Gossip, &topo, d, h));
+            steps as f64 * per / 3600.0
+        });
+        result
+            .history
+            .write_csv(std::path::Path::new(&format!(
+                "target/bench_out/tab7_{}.csv",
+                label.replace([' ', '/'], "_")
+            )))
+            .ok();
+        rows.push(Row { label: label.to_string(), result, osgp_hours, steps });
+    }
+
+    // Target accuracy: 99% of Parallel SGD's final accuracy (the paper's
+    // "76%" line scaled to this workload).
+    let target_acc = rows[0].result.accuracy * 0.99;
+    // time-to-target needs the accuracy *curve*; we approximate with the
+    // loss curve's first crossing of the loss value at which the parallel
+    // run reached the target accuracy (loss is monotone enough here).
+    let target_loss = rows[0]
+        .result
+        .history
+        .records
+        .last()
+        .map(|r| r.loss * 1.02)
+        .unwrap_or(f64::NAN);
+
+    let mut t = Table::new(&["Method", "Steps", "Acc.%", "Sim hrs", "Steps/hrs to target"]);
+    for row in &rows {
+        let hours = row.osgp_hours.unwrap_or(row.result.sim_hours);
+        let to_target = row
+            .result
+            .history
+            .first_step_below(target_loss)
+            .map(|r| {
+                let frac_hours = hours * (r.step + 1) as f64 / row.steps as f64;
+                format!("{}/{:.2}", r.step + 1, frac_hours)
+            })
+            .unwrap_or_else(|| "N.A.".into());
+        t.rowv(vec![
+            row.label.clone(),
+            row.steps.to_string(),
+            format!("{:.2}", row.result.accuracy * 100.0),
+            format!("{hours:.2}"),
+            to_target,
+        ]);
+    }
+    t.print();
+    println!(
+        "\n(target = 99% of Parallel's accuracy, i.e. {:.2}%)\n\
+         Expected shape (paper Table 7): PGA/AGA match Parallel's accuracy at\n\
+         ~0.65-0.75x its time; Local and Gossip 1x degrade accuracy; their 2x/3x\n\
+         variants recover it only by exceeding Parallel's total time.",
+        target_acc * 100.0
+    );
+    Ok(())
+}

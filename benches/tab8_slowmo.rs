@@ -1,0 +1,44 @@
+//! Table 8: Gossip-PGA vs SlowMo (slow-momentum outer update) with
+//! H in {6, 48}.
+//!
+//! Paper shape: slow momentum helps at large H (it smooths long independent
+//! excursions) but can hurt at small H — i.e. the PGA-vs-SlowMo ordering
+//! flips between H = 6 and H = 48.
+//!
+//!     cargo bench --bench tab8_slowmo
+
+use std::rc::Rc;
+
+use gossip_pga::algorithms::AlgorithmKind;
+use gossip_pga::harness::suite::{run_image, step_scale, RunSpec};
+use gossip_pga::harness::Table;
+use gossip_pga::runtime::Runtime;
+use gossip_pga::topology::Topology;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Rc::new(Runtime::load_default()?);
+    let n = 32;
+    let steps = step_scale(600);
+    println!("# Table 8: Gossip-PGA vs SlowMo, n = {n}, {steps} steps\n");
+
+    let mut t = Table::new(&["Period", "Gossip-PGA acc.%", "SlowMo acc.%"]);
+    for &h in &[6usize, 48] {
+        let mut accs = Vec::new();
+        for algo in [AlgorithmKind::GossipPga, AlgorithmKind::SlowMo] {
+            let spec = RunSpec::image(algo, Topology::one_peer_expo(n), h, steps);
+            let r = run_image(rt.clone(), &spec, 2048)?;
+            accs.push(r.accuracy);
+        }
+        t.rowv(vec![
+            format!("H = {h}"),
+            format!("{:.2}", accs[0] * 100.0),
+            format!("{:.2}", accs[1] * 100.0),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nExpected shape (paper Table 8): PGA >= SlowMo at H = 6; SlowMo\n\
+         catches up (or wins) at H = 48."
+    );
+    Ok(())
+}

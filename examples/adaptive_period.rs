@@ -1,0 +1,85 @@
+//! Gossip-AGA demo: watch the adaptive period grow as the loss falls
+//! (Algorithm 2), and compare against fixed-H Gossip-PGA on the same
+//! simulated-time axis.
+//!
+//!     make artifacts && cargo run --release --example adaptive_period
+
+use std::rc::Rc;
+
+use gossip_pga::algorithms::{AlgorithmKind, CommAction, SlowMoParams};
+use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
+use gossip_pga::costmodel::CostModel;
+use gossip_pga::harness::Table;
+use gossip_pga::optim::LrSchedule;
+use gossip_pga::runtime::Runtime;
+use gossip_pga::topology::Topology;
+
+fn opts(algo: AlgorithmKind, n: usize, seed: u64) -> TrainerOptions {
+    TrainerOptions {
+        algorithm: algo,
+        topology: Topology::ring(n),
+        period: 6,
+        aga_init_period: 4,
+        aga_warmup: 40,
+        lr: LrSchedule::StepDecay { lr: 0.2, every: 1000, factor: 0.5 },
+        momentum: 0.0,
+        nesterov: false,
+        seed,
+        slowmo: SlowMoParams::default(),
+        cost: CostModel::calibrated_resnet50(),
+        cost_dim: 25_500_000,
+        log_every: 50,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = 12;
+    let steps = 900;
+    let seed = 7;
+    let rt = Rc::new(Runtime::load_default()?);
+
+    // --- Gossip-AGA with a sync trace -------------------------------------
+    let (workload, init) = logreg_workload(rt.clone(), n, 2000, true, seed)?;
+    let mut aga = Trainer::new(workload, init, opts(AlgorithmKind::GossipAga, n, seed));
+    println!("# Gossip-AGA on a {n}-node ring: global syncs and the adaptive period\n");
+    let mut t = Table::new(&["sync at iter", "mean loss", "next period H"]);
+    let mut syncs = 0usize;
+    for k in 0..steps {
+        let action = aga.step_once()?;
+        if action == CommAction::GlobalAverage {
+            syncs += 1;
+            t.rowv(vec![
+                k.to_string(),
+                format!("{:.5}", aga.mean_loss()),
+                aga.current_period().to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\n{} global averages over {steps} iterations ({:.1}% of iterations), final H = {}",
+        syncs,
+        100.0 * syncs as f64 / steps as f64,
+        aga.current_period()
+    );
+
+    // --- fixed-H PGA comparison on the simulated clock --------------------
+    let (workload, init) = logreg_workload(rt.clone(), n, 2000, true, seed)?;
+    let mut pga = Trainer::new(workload, init, opts(AlgorithmKind::GossipPga, n, seed));
+    let hist_pga = pga.run(steps, "pga")?;
+    println!(
+        "\nfixed-H PGA (H=6):  final loss {:.5}, sim time {:.2} h",
+        hist_pga.final_loss(),
+        hist_pga.final_sim_hours()
+    );
+    println!(
+        "Gossip-AGA:         final loss {:.5}, sim time {:.2} h",
+        aga.mean_loss(),
+        aga.sim_seconds() / 3600.0
+    );
+    println!(
+        "\nAGA reaches comparable loss while syncing less often late in\n\
+         training — the paper's Table 7/11 runtime advantage."
+    );
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Quickstart: train the paper's §5.1 logistic-regression objective with
+//! Gossip-PGA on an 8-node ring and compare against Parallel & Gossip SGD.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Expected output: three loss curves on the same iteration grid; Gossip-PGA
+//! hugs the Parallel-SGD curve while Gossip SGD lags (the transient stage),
+//! and the simulated wall-clock (alpha-beta model calibrated to the paper's
+//! Table 17 cluster) shows PGA cheaper than Parallel per iteration.
+
+use std::rc::Rc;
+
+use gossip_pga::algorithms::{AlgorithmKind, SlowMoParams};
+use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
+use gossip_pga::costmodel::CostModel;
+use gossip_pga::harness::Table;
+use gossip_pga::metrics::{smooth, transient_stage_scaled};
+use gossip_pga::optim::LrSchedule;
+use gossip_pga::runtime::Runtime;
+use gossip_pga::topology::Topology;
+
+fn main() -> anyhow::Result<()> {
+    let n = 20; // beta = 0.967 on the ring — sparse enough to see the gap
+    let steps = 600;
+    let h = 16;
+    let seed = 42;
+    let topo = Topology::ring(n);
+    println!(
+        "# quickstart: {n}-node ring (beta = {:.4}), non-iid logistic regression, H = {h}\n",
+        topo.beta()
+    );
+
+    let rt = Rc::new(Runtime::load_default()?);
+    let mut histories = Vec::new();
+    for algo in [AlgorithmKind::Parallel, AlgorithmKind::Gossip, AlgorithmKind::GossipPga] {
+        let (workload, init) = logreg_workload(rt.clone(), n, 2000, true, seed)?;
+        let opts = TrainerOptions {
+            algorithm: algo,
+            topology: Topology::ring(n),
+            period: h,
+            aga_init_period: 4,
+            aga_warmup: 50,
+            lr: LrSchedule::StepDecay { lr: 0.2, every: 1000, factor: 0.5 },
+            momentum: 0.0,
+            nesterov: false,
+            seed,
+            slowmo: SlowMoParams::default(),
+            cost: CostModel::calibrated_resnet50(),
+            cost_dim: 25_500_000, // bill comms as if this were ResNet-50
+            log_every: 25,
+        };
+        let mut trainer = Trainer::new(workload, init, opts);
+        let hist = trainer.run(steps, algo.display())?;
+        println!(
+            "{:<14} final loss {:.5}  sim time {:.2} h",
+            algo.display(),
+            hist.final_loss(),
+            hist.final_sim_hours()
+        );
+        histories.push(hist);
+    }
+
+    println!("\nloss curves (every 25 iterations):");
+    let mut t = Table::new(&["iter", "Parallel", "Gossip", "Gossip-PGA"]);
+    for i in 0..histories[0].records.len() {
+        t.rowv(vec![
+            histories[0].records[i].step.to_string(),
+            format!("{:.5}", histories[0].records[i].loss),
+            format!("{:.5}", histories[1].records[i].loss),
+            format!("{:.5}", histories[2].records[i].loss),
+        ]);
+    }
+    t.print();
+
+    let par = histories[0].losses();
+    for (name, hist) in [("Gossip SGD", &histories[1]), ("Gossip-PGA", &histories[2])] {
+        let ts = transient_stage_scaled(&smooth(&hist.losses(), 3), &par, 0.05)
+            .map(|i| (histories[0].records[i].step + 1).to_string())
+            .unwrap_or_else(|| "> budget".into());
+        println!("{name:<12} transient stage ~ {ts} iterations (5%-of-progress band vs Parallel)");
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Topology explorer: beta, C_beta, D_beta, consensus regime and the
+//! theoretical transient-stage orders (paper Tables 2-3) for every built-in
+//! topology across cluster sizes.
+//!
+//!     cargo run --release --example topology_explorer [-- n1 n2 ...]
+
+use gossip_pga::harness::Table;
+use gossip_pga::topology::{spectral, Topology};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<usize> =
+        std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
+    let sizes = if args.is_empty() { vec![16, 32, 64] } else { args };
+    let h = 16;
+
+    for &n in &sizes {
+        println!("\n== n = {n}, H = {h} ==");
+        let mut t = Table::new(&[
+            "topology",
+            "|N_i|",
+            "beta",
+            "1-beta",
+            "C_beta",
+            "D_beta",
+            "regime",
+            "PGA transient (non-iid)",
+            "Gossip transient (non-iid)",
+        ]);
+        for name in ["ring", "grid", "star", "expo", "one-peer-expo", "full"] {
+            let topo = Topology::from_name(name, n)?;
+            let beta = topo.beta();
+            t.rowv(vec![
+                name.to_string(),
+                topo.max_degree_incl_self().to_string(),
+                format!("{beta:.5}"),
+                format!("{:.2e}", 1.0 - beta),
+                format!("{:.2}", spectral::c_beta(beta, h)),
+                format!("{:.2}", spectral::d_beta(beta, h)),
+                match spectral::regime(beta, h) {
+                    spectral::ConsensusRegime::GlobalAveragingDominates => "global-avg",
+                    spectral::ConsensusRegime::GossipDominates => "gossip",
+                }
+                .to_string(),
+                format!("{:.2e}", spectral::transient::pga_noniid(n, beta, h)),
+                format!("{:.2e}", spectral::transient::gossip_noniid(n, beta)),
+            ]);
+        }
+        t.print();
+    }
+    println!(
+        "\nReading the last two columns: Gossip-PGA's transient stage stays\n\
+         bounded by H even as 1-beta -> 0 (ring at large n), while Gossip\n\
+         SGD's blows up as 1/(1-beta)^4 — the paper's Table 2."
+    );
+    Ok(())
+}

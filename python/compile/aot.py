@@ -1,0 +1,252 @@
+"""AOT pipeline: lower every L2 graph to HLO *text* + write the manifest.
+
+Interchange format is HLO text, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` rust crate) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts [--full]
+
+Emits one .hlo.txt per executable variant plus manifest.json describing
+shapes, dtypes and flat-parameter dims — the rust runtime loads executables
+strictly through the manifest (rust/src/runtime/registry.rs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import transformer as T
+from .kernels import fused_update, gossip_mix
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"version": 1, "artifacts": []}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, fn, arg_specs, *, model, kind, flat_dim, inputs, outputs, meta=None):
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        self.manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "model": model,
+                "kind": kind,
+                "flat_dim": flat_dim,
+                "inputs": inputs,
+                "outputs": outputs,
+                "meta": meta or {},
+            }
+        )
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"  wrote {path} ({len(self.manifest['artifacts'])} artifacts)")
+
+
+def emit_logreg(em: Emitter, d: int = 10, m: int = 32):
+    """Paper §5.1 convex experiments. Pallas fused loss+grad inside."""
+    name = f"logreg_grad_d{d}_m{m}"
+    em.emit(
+        name,
+        M.logreg_grad,
+        (_spec((d,)), _spec((m, d)), _spec((m,))),
+        model="logreg",
+        kind="grad",
+        flat_dim=d,
+        inputs=[_io("w", (d,)), _io("x", (m, d)), _io("y", (m,))],
+        outputs=[_io("loss", (1,)), _io("grad", (d,))],
+        meta={"batch": m},
+    )
+    em.emit(
+        f"logreg_step_d{d}_m{m}",
+        M.logreg_fused_step,
+        (_spec((d,)), _spec((m, d)), _spec((m,)), _spec(())),
+        model="logreg",
+        kind="fused_step",
+        flat_dim=d,
+        inputs=[_io("w", (d,)), _io("x", (m, d)), _io("y", (m,)), _io("lr", ())],
+        outputs=[_io("new_w", (d,)), _io("loss", (1,))],
+        meta={"batch": m},
+    )
+
+
+def emit_mlp(em: Emitter, in_dim=32, hidden=128, classes=10, m=64, eval_m=256):
+    """Image-classification substitute (Tables 7/9/10/15/16)."""
+    layout = M.MlpLayout(in_dim, hidden, classes)
+    tag = f"in{in_dim}_h{hidden}_c{classes}"
+
+    def grad_fn(flat, x, y):
+        return M.mlp_grad(flat, x, y, layout, use_pallas=True)
+
+    em.emit(
+        f"mlp_grad_{tag}_m{m}",
+        grad_fn,
+        (_spec((layout.dim,)), _spec((m, in_dim)), _spec((m,), jnp.int32)),
+        model="mlp",
+        kind="grad",
+        flat_dim=layout.dim,
+        inputs=[_io("flat", (layout.dim,)), _io("x", (m, in_dim)), _io("y", (m,), "i32")],
+        outputs=[_io("loss", (1,)), _io("grad", (layout.dim,))],
+        meta={"batch": m, "in_dim": in_dim, "hidden": hidden, "classes": classes},
+    )
+
+    def eval_fn(flat, x, y):
+        return (M.mlp_accuracy(flat, x, y, layout),)
+
+    em.emit(
+        f"mlp_eval_{tag}_m{eval_m}",
+        eval_fn,
+        (_spec((layout.dim,)), _spec((eval_m, in_dim)), _spec((eval_m,), jnp.int32)),
+        model="mlp",
+        kind="eval",
+        flat_dim=layout.dim,
+        inputs=[_io("flat", (layout.dim,)), _io("x", (eval_m, in_dim)), _io("y", (eval_m,), "i32")],
+        outputs=[_io("accuracy", (1,))],
+        meta={"batch": eval_m, "in_dim": in_dim, "hidden": hidden, "classes": classes},
+    )
+
+
+def emit_transformer(em: Emitter, cfg_name: str, batch: int):
+    """BERT substitute (Table 11 / Fig 3) + the e2e example model."""
+    cfg = T.CONFIGS[cfg_name]
+    layout = T.TransformerLayout(cfg)
+    s1 = cfg.seq_len + 1
+
+    def grad_fn(flat, tokens):
+        return T.lm_grad(flat, tokens, layout)
+
+    em.emit(
+        f"transformer_grad_{cfg_name}_b{batch}",
+        grad_fn,
+        (_spec((layout.dim,)), _spec((batch, s1), jnp.int32)),
+        model="transformer",
+        kind="grad",
+        flat_dim=layout.dim,
+        inputs=[_io("flat", (layout.dim,)), _io("tokens", (batch, s1), "i32")],
+        outputs=[_io("loss", (1,)), _io("grad", (layout.dim,))],
+        meta={
+            "config": cfg_name,
+            "batch": batch,
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+        },
+    )
+
+    def loss_fn(flat, tokens):
+        return (jnp.reshape(T.lm_loss(flat, tokens, layout), (1,)),)
+
+    em.emit(
+        f"transformer_loss_{cfg_name}_b{batch}",
+        loss_fn,
+        (_spec((layout.dim,)), _spec((batch, s1), jnp.int32)),
+        model="transformer",
+        kind="eval",
+        flat_dim=layout.dim,
+        inputs=[_io("flat", (layout.dim,)), _io("tokens", (batch, s1), "i32")],
+        outputs=[_io("loss", (1,))],
+        meta={"config": cfg_name, "batch": batch},
+    )
+
+
+def emit_mix(em: Emitter, k: int, d: int):
+    """Gossip-mix executable (validation + demo of the L1 mixing kernel)."""
+
+    def fn(w, stack):
+        return (gossip_mix.gossip_mix(w, stack),)
+
+    em.emit(
+        f"gossip_mix_k{k}_d{d}",
+        fn,
+        (_spec((k,)), _spec((k, d))),
+        model="mix",
+        kind="mix",
+        flat_dim=d,
+        inputs=[_io("weights", (k,)), _io("stack", (k, d))],
+        outputs=[_io("mixed", (d,))],
+        meta={"k": k},
+    )
+
+
+def emit_fused_update(em: Emitter, k: int, d: int):
+    def fn(w, stack, g, lr):
+        return (fused_update.fused_update_mix(w, stack, g, lr),)
+
+    em.emit(
+        f"fused_update_k{k}_d{d}",
+        fn,
+        (_spec((k,)), _spec((k, d)), _spec((d,)), _spec(())),
+        model="mix",
+        kind="fused_update",
+        flat_dim=d,
+        inputs=[_io("weights", (k,)), _io("stack", (k, d)), _io("grad", (d,)), _io("lr", ())],
+        outputs=[_io("mixed", (d,))],
+        meta={"k": k},
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--full", action="store_true", help="also emit the 100M-param config (compile-only)")
+    args = ap.parse_args()
+
+    em = Emitter(args.out_dir)
+    print("[aot] logreg")
+    emit_logreg(em, d=10, m=32)
+    print("[aot] mlp classifier")
+    emit_mlp(em)
+    print("[aot] transformer tiny")
+    emit_transformer(em, "tiny", batch=8)
+    print("[aot] transformer e2e")
+    emit_transformer(em, "e2e", batch=8)
+    if args.full:
+        print("[aot] transformer bert100m (compile-only target)")
+        emit_transformer(em, "bert100m", batch=2)
+    print("[aot] gossip mix kernels")
+    for k in (2, 3, 5):
+        emit_mix(em, k, 10)
+    emit_mix(em, 3, 4096)
+    emit_fused_update(em, 3, 10)
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

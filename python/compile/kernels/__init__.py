@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the Gossip-PGA compute hot-spots.
+
+Every kernel here has a pure-jnp oracle in ref.py and is verified against it
+by python/tests/test_kernels.py (hypothesis sweeps) before any artifact is
+emitted. All kernels run interpret=True — see DESIGN.md §Hardware-Adaptation.
+"""
+
+from . import fused_update, gossip_mix, logistic, mlp, ref  # noqa: F401

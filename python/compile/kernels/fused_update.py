@@ -1,0 +1,77 @@
+"""Pallas kernel: fused local SGD update + gossip mix (one HBM pass).
+
+Algorithm 1 performs, on every non-sync iteration,
+
+    x_i^{k+1/2} = x_i^k - gamma * g_i          (local update)
+    x_i^{k+1}   = sum_{j in N_i} w_ij x_j^{k+1/2}   (gossip)
+
+Neighbors exchange *updated* half-step parameters, so on the receiving node
+only the self row still needs its gradient applied. Running the update and
+the mix as separate ops costs two full HBM round-trips over d; this kernel
+fuses them: each (k, BLOCK_D) tile of the neighbor stack is loaded once, the
+self row is corrected by -gamma*g in VMEM, and the weighted reduction is
+written straight out.
+
+Row convention: stack[0] is the self (pre-update) row.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_D = 2048
+
+
+def _fused_kernel(w_ref, lr_ref, x_ref, g_ref, o_ref):
+    w = w_ref[...]  # (k, 1)
+    lr = lr_ref[0]
+    x = x_ref[...]  # (k, BLOCK_D)
+    g = g_ref[...]  # (BLOCK_D,) self gradient tile
+    x = x.at[0, :].add(-lr * g)
+    o_ref[...] = jnp.sum(w * x, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def fused_update_mix(
+    weights: jax.Array,
+    stack: jax.Array,
+    self_grad: jax.Array,
+    lr: jax.Array,
+    *,
+    block_d: int = DEFAULT_BLOCK_D,
+) -> jax.Array:
+    """Fused update+mix. Matches ref.fused_update_mix.
+
+    Args:
+      weights: (k,) gossip weights, index 0 = self.
+      stack: (k, d) neighbor params; row 0 = self params *before* the update.
+      self_grad: (d,) gradient at the self params.
+      lr: scalar learning rate.
+    Returns:
+      (d,) next iterate x_i^{k+1}.
+    """
+    k, d = stack.shape
+    bd = min(block_d, d)
+    rem = (-d) % bd
+    if rem:
+        stack = jnp.pad(stack, ((0, 0), (0, rem)))
+        self_grad = jnp.pad(self_grad, ((0, rem),))
+    dp = d + rem
+    out = pl.pallas_call(
+        _fused_kernel,
+        grid=(dp // bd,),
+        in_specs=[
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((k, bd), lambda i: (0, i)),
+            pl.BlockSpec((bd,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), stack.dtype),
+        interpret=True,
+    )(weights.reshape(k, 1), jnp.reshape(lr, (1,)).astype(stack.dtype), stack, self_grad)
+    return out[:d]

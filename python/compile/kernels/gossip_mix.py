@@ -1,0 +1,72 @@
+"""Pallas kernel: gossip mixing x_i <- sum_{j in N_i} w_ij x_j.
+
+The gossip step of Algorithm 1 is an HBM-bandwidth-bound weighted reduction
+over the k neighbor parameter vectors. TPU mapping (see DESIGN.md
+§Hardware-Adaptation): the (k, d) neighbor stack is tiled along d with
+BlockSpec((k, BLOCK_D)); each grid step pulls one k×BLOCK_D tile into VMEM,
+reduces it against the (k,) weight row (resident for the whole launch), and
+writes one BLOCK_D output tile. No MXU work — the roofline is HBM bandwidth,
+so the only tunable is BLOCK_D (VMEM footprint vs. grid overhead).
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU numbers are estimated in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile width along d. With k <= 8 neighbors this keeps the resident
+# stack tile at k * 2048 * 4B <= 64 KiB — far under a 16 MiB VMEM budget,
+# leaving room for double buffering of the HBM->VMEM stream.
+DEFAULT_BLOCK_D = 2048
+
+
+def _mix_kernel(w_ref, x_ref, o_ref):
+    """One output tile: o[bd] = sum_k w[k] * x[k, bd]."""
+    w = w_ref[...]  # (k, 1), VMEM-resident across the grid
+    x = x_ref[...]  # (k, BLOCK_D)
+    o_ref[...] = jnp.sum(w * x, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def gossip_mix(weights: jax.Array, stack: jax.Array, *, block_d: int = DEFAULT_BLOCK_D) -> jax.Array:
+    """Weighted neighborhood average via the Pallas kernel.
+
+    Args:
+      weights: (k,) gossip weights (the W row restricted to the neighborhood).
+      stack: (k, d) neighbor parameter vectors, row 0 = self.
+      block_d: tile width along d.
+    Returns:
+      (d,) mixed parameter vector. Matches ref.gossip_mix.
+    """
+    k, d = stack.shape
+    bd = min(block_d, d)
+    # Pad d up to a multiple of the tile so BlockSpec tiling is exact.
+    rem = (-d) % bd
+    padded = jnp.pad(stack, ((0, 0), (0, rem))) if rem else stack
+    dp = d + rem
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(dp // bd,),
+        in_specs=[
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),  # weights: whole, every step
+            pl.BlockSpec((k, bd), lambda i: (0, i)),  # stream stack tiles
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), stack.dtype),
+        interpret=True,
+    )(weights.reshape(k, 1), padded)
+    return out[:d]
+
+
+def vmem_bytes(k: int, block_d: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid step (for §Perf)."""
+    stack_tile = k * block_d * dtype_bytes
+    out_tile = block_d * dtype_bytes
+    weights = k * dtype_bytes
+    return 2 * stack_tile + out_tile + weights  # x2: double buffering

@@ -1,0 +1,118 @@
+"""Pallas kernel: fused logistic loss + analytic gradient (paper §5.1).
+
+The logistic-regression experiments (Figs. 1, 4-7) evaluate, per node per
+iteration,
+
+    loss = (1/M) sum_m ln(1 + exp(-y_m h_m^T w)),
+    grad = -(1/M) X^T (y * sigmoid(-y Xw)).
+
+A naive XLA graph materializes the (M,) logits in HBM twice (forward +
+backward). The fused kernel streams X in (BLOCK_M, d) tiles: each grid step
+computes its tile's logits in VMEM, folds them straight into running loss and
+grad accumulators that live in the (revisited) output tiles. Two matvecs per
+tile — Xw and X^T r — are the MXU work; the accumulators never leave VMEM
+until the launch finishes.
+
+interpret=True: CPU PJRT cannot run Mosaic custom-calls; the grid is executed
+sequentially, which makes the accumulate-into-output pattern exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 128-row tiles: MXU-aligned on real hardware, and small enough that the
+# (BLOCK_M, d) tile + accumulators fit VMEM for any d used in the paper's
+# convex experiments (d = 10).
+DEFAULT_BLOCK_M = 128
+
+
+def _logreg_kernel(x_ref, y_ref, w_ref, loss_ref, grad_ref, *, inv_m: float):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+
+    x = x_ref[...]  # (BLOCK_M, d)
+    y = y_ref[...]  # (BLOCK_M,)
+    w = w_ref[...]  # (d,)
+    z = x @ w  # MXU matvec
+    margin = y * z
+    # Numerically stable ln(1 + exp(-margin)).
+    loss_tile = jnp.sum(jnp.logaddexp(0.0, -margin))
+    residual = y * jax.nn.sigmoid(-margin)  # (BLOCK_M,)
+    grad_tile = -(x.T @ residual)  # MXU matvec, (d,)
+    loss_ref[...] += inv_m * loss_tile
+    grad_ref[...] += inv_m * grad_tile
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def logistic_loss_grad(
+    w: jax.Array, x: jax.Array, y: jax.Array, *, block_m: int = DEFAULT_BLOCK_M
+):
+    """Fused loss+grad. Matches ref.logistic_loss_grad.
+
+    Args:
+      w: (d,) parameters.
+      x: (m, d) features; m is padded internally to a multiple of block_m.
+      y: (m,) labels in {-1, +1}.
+    Returns:
+      (loss (1,), grad (d,)) — loss is a length-1 vector (scalar outputs are
+      awkward as Pallas refs); callers squeeze it.
+    """
+    m, d = x.shape
+    bm = min(block_m, m)
+    rem = (-m) % bm
+    if rem:
+        # Padding rows get y=+1, x=0 => margin 0 => ln 2 loss contribution;
+        # cancel exactly by weighting padded rows with 0 via y=0 trick:
+        # y=0 => margin=0 => logaddexp(0,0)=ln2 as well. Instead pad y with 0
+        # and x with 0, then subtract the known ln2*rem/M? Simpler: pad and
+        # mask with an explicit validity column is overkill for tests — pad
+        # with duplicated first row and correct by scaling is wrong. We pad
+        # x with zeros and y with zeros: margin = 0, sigmoid(-0)=0.5, and the
+        # grad contribution is -x^T(y*0.5) = 0 (x rows are zero). The loss
+        # contribution is ln(2) per padded row, which we subtract below.
+        x = jnp.pad(x, ((0, rem), (0, 0)))
+        y = jnp.pad(y, ((0, rem),))
+    mp = m + rem
+    inv_m = 1.0 / m
+    loss, grad = pl.pallas_call(
+        functools.partial(_logreg_kernel, inv_m=inv_m),
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # revisited accumulator
+            pl.BlockSpec((d,), lambda i: (0,)),  # revisited accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), x.dtype),
+            jax.ShapeDtypeStruct((d,), x.dtype),
+        ],
+        interpret=True,
+    )(x, y, w)
+    if rem:
+        loss = loss - jnp.log(2.0) * rem * inv_m
+    return loss, grad
+
+
+def vmem_bytes(block_m: int, d: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid step (for §Perf)."""
+    x_tile = block_m * d * dtype_bytes
+    vectors = (2 * block_m + 2 * d + 1) * dtype_bytes
+    return 2 * x_tile + vectors  # x2: double-buffered X stream
+
+
+def mxu_flops(m: int, d: int) -> int:
+    """MXU FLOP count per call (two matvecs) for roofline estimates."""
+    return 2 * (2 * m * d)

@@ -1,0 +1,102 @@
+"""Pallas kernel: fused dense + GELU, with a custom VJP for training.
+
+The MLP/transformer feed-forward blocks spend their time in
+out = gelu(x @ W + b). The GPU version round-trips the pre-activation z
+through HBM between the matmul and the activation; on TPU we tile the output
+into MXU-shaped (BLOCK_M, BLOCK_N) blocks with the full K dimension resident,
+apply GELU in VMEM, and never materialize z.
+
+Autodiff: pallas_call has no general AD rule, so the forward is wrapped in a
+jax.custom_vjp whose backward pass is a (tested) closed-form jnp graph. The
+pytest suite checks both the forward against ref.dense_gelu and the VJP
+against jax.grad of the reference.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+
+
+def _dense_gelu_kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]  # (BLOCK_M, K)
+    w = w_ref[...]  # (K, BLOCK_N)
+    b = b_ref[...]  # (BLOCK_N,)
+    z = x @ w + b  # MXU tile
+    o_ref[...] = ref.gelu_tanh(z)
+
+
+def _pallas_forward(x, w, b, block_m, block_n):
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn = min(block_m, m), min(block_n, n)
+    rm, rn = (-m) % bm, (-n) % bn
+    xp = jnp.pad(x, ((0, rm), (0, 0))) if rm else x
+    wp = jnp.pad(w, ((0, 0), (0, rn))) if rn else w
+    bp = jnp.pad(b, ((0, rn),)) if rn else b
+    out = pl.pallas_call(
+        _dense_gelu_kernel,
+        grid=((m + rm) // bm, (n + rn) // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + rm, n + rn), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def dense_gelu(x, w, b, block_m=DEFAULT_BLOCK_M, block_n=DEFAULT_BLOCK_N):
+    """Fused gelu(x @ w + b) with Pallas forward. Matches ref.dense_gelu."""
+    return _pallas_forward(x, w, b, block_m, block_n)
+
+
+def _fwd(x, w, b, block_m, block_n):
+    out = _pallas_forward(x, w, b, block_m, block_n)
+    return out, (x, w, b)
+
+
+def _gelu_tanh_deriv(z):
+    c = ref.SQRT_2_OVER_PI
+    inner = c * (z + 0.044715 * z**3)
+    t = jnp.tanh(inner)
+    dinner = c * (1.0 + 3 * 0.044715 * z**2)
+    return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t**2) * dinner
+
+
+def _bwd(block_m, block_n, res, g):
+    x, w, b = res
+    z = x @ w + b  # recompute (rematerialization beats saving z in HBM)
+    dz = g * _gelu_tanh_deriv(z)
+    dx = dz @ w.T
+    dw = x.T @ dz
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+dense_gelu.defvjp(_fwd, _bwd)
+
+
+def vmem_bytes(block_m: int, block_n: int, k: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one grid step (for §Perf)."""
+    x_tile = block_m * k * dtype_bytes
+    w_tile = k * block_n * dtype_bytes
+    out_tile = block_m * block_n * dtype_bytes
+    return 2 * (x_tile + w_tile) + out_tile + block_n * dtype_bytes
+
+
+def mxu_flops(m: int, k: int, n: int) -> int:
+    """MXU FLOP count per forward call for roofline estimates."""
+    return 2 * m * k * n

@@ -1,0 +1,127 @@
+"""L2: JAX compute graphs for the Gossip-PGA training path.
+
+Every model exposes the same AOT contract (DESIGN.md §1):
+
+    grad_fn(flat_params f32[D], *batch) -> (loss f32[1], grad f32[D])
+
+The rust coordinator (L3) owns optimizers and communication schedules; L2 is
+pure loss+gradient. A fused variant (SGD update folded into the HLO) is also
+emitted for the §Perf L2-fusion ablation.
+
+Models:
+  * logreg      — paper §5.1 convex experiments; forward+grad is the fused
+                  Pallas kernel (kernels.logistic), no autodiff involved.
+  * mlp         — classifier used as the image-classification substitute
+                  (Tables 7/9/10/15/16); hidden layer is the Pallas fused
+                  dense+GELU kernel with its custom VJP.
+  * transformer — causal LM substitute for BERT (Table 11/Fig 3) lives in
+                  transformer.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import logistic as logistic_kernel
+from .kernels import mlp as mlp_kernel
+
+# ----------------------------------------------------------------------------
+# Logistic regression (paper §5.1)
+# ----------------------------------------------------------------------------
+
+
+def logreg_grad(w: jax.Array, x: jax.Array, y: jax.Array):
+    """(loss[1], grad[d]) via the fused Pallas kernel."""
+    loss, grad = logistic_kernel.logistic_loss_grad(w, x, y)
+    return loss, grad
+
+
+def logreg_fused_step(w: jax.Array, x: jax.Array, y: jax.Array, lr: jax.Array):
+    """SGD step folded into the graph: (new_w[d], loss[1]). §Perf ablation."""
+    loss, grad = logistic_kernel.logistic_loss_grad(w, x, y)
+    return w - lr * grad, loss
+
+
+# ----------------------------------------------------------------------------
+# MLP classifier (image-classification substitute)
+# ----------------------------------------------------------------------------
+
+
+class MlpLayout:
+    """Flat-parameter layout for the 2-layer MLP classifier.
+
+    Parameters, in flat order:
+      w1 (in_dim, hidden), b1 (hidden,), w2 (hidden, classes), b2 (classes,)
+    """
+
+    def __init__(self, in_dim: int, hidden: int, classes: int):
+        self.in_dim, self.hidden, self.classes = in_dim, hidden, classes
+        self.shapes = [
+            ("w1", (in_dim, hidden)),
+            ("b1", (hidden,)),
+            ("w2", (hidden, classes)),
+            ("b2", (classes,)),
+        ]
+        self.offsets = {}
+        off = 0
+        for name, shape in self.shapes:
+            size = 1
+            for s in shape:
+                size *= s
+            self.offsets[name] = (off, shape)
+            off += size
+        self.dim = off
+
+    def unflatten(self, flat: jax.Array):
+        out = {}
+        for name, (off, shape) in self.offsets.items():
+            size = 1
+            for s in shape:
+                size *= s
+            out[name] = flat[off : off + size].reshape(shape)
+        return out
+
+    def init(self, key: jax.Array) -> jax.Array:
+        k1, k2 = jax.random.split(key)
+        w1 = jax.random.normal(k1, (self.in_dim, self.hidden)) * (1.0 / jnp.sqrt(self.in_dim))
+        w2 = jax.random.normal(k2, (self.hidden, self.classes)) * (1.0 / jnp.sqrt(self.hidden))
+        return jnp.concatenate(
+            [
+                w1.reshape(-1),
+                jnp.zeros(self.hidden),
+                w2.reshape(-1),
+                jnp.zeros(self.classes),
+            ]
+        ).astype(jnp.float32)
+
+
+def mlp_loss(flat: jax.Array, x: jax.Array, y: jax.Array, layout: MlpLayout, *, use_pallas: bool = True):
+    """Softmax cross-entropy of the 2-layer MLP. y: (m,) int32 class ids."""
+    p = layout.unflatten(flat)
+    if use_pallas:
+        h = mlp_kernel.dense_gelu(x, p["w1"], p["b1"])
+    else:
+        from .kernels import ref
+
+        h = ref.dense_gelu(x, p["w1"], p["b1"])
+    logits = h @ p["w2"] + p["b2"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)
+    return jnp.mean(nll)
+
+
+def mlp_grad(flat: jax.Array, x: jax.Array, y: jax.Array, layout: MlpLayout, *, use_pallas: bool = True):
+    """(loss[1], grad[D]) for the MLP classifier."""
+    loss, grad = jax.value_and_grad(mlp_loss)(flat, x, y, layout, use_pallas=use_pallas)
+    return jnp.reshape(loss, (1,)), grad
+
+
+def mlp_accuracy(flat: jax.Array, x: jax.Array, y: jax.Array, layout: MlpLayout):
+    """Top-1 accuracy (evaluation artifact for the Table 7 suite)."""
+    p = layout.unflatten(flat)
+    from .kernels import ref
+
+    h = ref.dense_gelu(x, p["w1"], p["b1"])
+    logits = h @ p["w2"] + p["b2"]
+    return jnp.reshape(jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32)), (1,))

@@ -1,0 +1,174 @@
+"""L2: causal-LM transformer — the BERT substitute (Table 11 / Fig 3).
+
+A pre-norm decoder-only transformer over a flat f32[D] parameter vector,
+following the repo-wide AOT contract: grad_fn(flat, tokens) -> (loss, grad).
+The flat layout is static (python-int offsets), so slicing lowers to plain
+HLO slices and the whole step fuses into one module.
+
+Configs (see CONFIGS): `tiny` for benches/tests, `e2e` (~12M params) for the
+end-to-end example, `bert100m` provided for scale parity with the paper
+(compile-only in CI — CPU budget).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+CONFIGS = {
+    "tiny": TransformerConfig(vocab=256, d_model=64, n_layers=2, n_heads=4, d_ff=256, seq_len=32),
+    "e2e": TransformerConfig(vocab=1024, d_model=384, n_layers=6, n_heads=6, d_ff=1536, seq_len=64),
+    "bert100m": TransformerConfig(vocab=8192, d_model=768, n_layers=12, n_heads=12, d_ff=3072, seq_len=128),
+}
+
+
+class TransformerLayout:
+    """Static flat-parameter layout: list of (name, shape, offset)."""
+
+    def __init__(self, cfg: TransformerConfig):
+        self.cfg = cfg
+        d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+        entries = [("embed", (v, d)), ("pos", (cfg.seq_len, d))]
+        for layer in range(cfg.n_layers):
+            p = f"l{layer}."
+            entries += [
+                (p + "ln1_g", (d,)),
+                (p + "ln1_b", (d,)),
+                (p + "wq", (d, d)),
+                (p + "wk", (d, d)),
+                (p + "wv", (d, d)),
+                (p + "wo", (d, d)),
+                (p + "ln2_g", (d,)),
+                (p + "ln2_b", (d,)),
+                (p + "w1", (d, ff)),
+                (p + "b1", (ff,)),
+                (p + "w2", (ff, d)),
+                (p + "b2", (d,)),
+            ]
+        # Untied output head: tying halves params but starves the early
+        # bigram-learning signal on plain SGD (the embedding must serve
+        # both roles); an untied head escapes the uniform plateau much
+        # faster, which matters for the CPU-budget e2e run.
+        entries += [("lnf_g", (d,)), ("lnf_b", (d,)), ("head", (d, v))]
+        self.entries = []
+        off = 0
+        for name, shape in entries:
+            size = math.prod(shape)
+            self.entries.append((name, shape, off))
+            off += size
+        self.dim = off
+        self._index = {name: (shape, off) for name, shape, off in self.entries}
+
+    def get(self, flat: jax.Array, name: str) -> jax.Array:
+        shape, off = self._index[name]
+        return flat[off : off + math.prod(shape)].reshape(shape)
+
+    def init(self, key: jax.Array) -> jax.Array:
+        """Scaled-normal init, flat vector."""
+        cfg = self.cfg
+        parts = []
+        for name, shape, _ in self.entries:
+            key, sub = jax.random.split(key)
+            if name.endswith(("_g",)):
+                parts.append(jnp.ones(shape))
+            elif name.endswith(("_b", "b1", "b2")) or name == "pos":
+                if name == "pos":
+                    parts.append(0.01 * jax.random.normal(sub, shape))
+                else:
+                    parts.append(jnp.zeros(shape))
+            else:
+                fan_in = shape[0]
+                scale = 1.0 / math.sqrt(fan_in)
+                # GPT-2-style depth scaling on residual-out projections.
+                if name.endswith(("wo", "w2")):
+                    scale /= math.sqrt(2.0 * cfg.n_layers)
+                parts.append(scale * jax.random.normal(sub, shape))
+        return jnp.concatenate([p.reshape(-1) for p in parts]).astype(jnp.float32)
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return g * (x - mu) * jax.lax.rsqrt(var + eps) + b
+
+
+def _attention(x, layout: TransformerLayout, flat, prefix: str):
+    cfg = layout.cfg
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def proj(name):
+        return (x @ layout.get(flat, prefix + name)).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = proj("wq"), proj("wk"), proj("wv")
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ layout.get(flat, prefix + "wo")
+
+
+def _mlp_block(x, layout: TransformerLayout, flat, prefix: str):
+    from .kernels import ref
+
+    w1, b1 = layout.get(flat, prefix + "w1"), layout.get(flat, prefix + "b1")
+    w2, b2 = layout.get(flat, prefix + "w2"), layout.get(flat, prefix + "b2")
+    h = ref.gelu_tanh(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def forward(flat: jax.Array, tokens: jax.Array, layout: TransformerLayout) -> jax.Array:
+    """Logits (b, s, vocab) for input tokens (b, s) int32."""
+    cfg = layout.cfg
+    x = layout.get(flat, "embed")[tokens] + layout.get(flat, "pos")[None, : tokens.shape[1]]
+    for layer in range(cfg.n_layers):
+        p = f"l{layer}."
+        x = x + _attention(
+            _layer_norm(x, layout.get(flat, p + "ln1_g"), layout.get(flat, p + "ln1_b")),
+            layout,
+            flat,
+            p,
+        )
+        x = x + _mlp_block(
+            _layer_norm(x, layout.get(flat, p + "ln2_g"), layout.get(flat, p + "ln2_b")),
+            layout,
+            flat,
+            p,
+        )
+    x = _layer_norm(x, layout.get(flat, "lnf_g"), layout.get(flat, "lnf_b"))
+    return x @ layout.get(flat, "head")
+
+
+def lm_loss(flat: jax.Array, batch: jax.Array, layout: TransformerLayout) -> jax.Array:
+    """Next-token cross entropy. batch: (b, s+1) int32; predicts batch[:,1:]."""
+    inputs, targets = batch[:, :-1], batch[:, 1:]
+    logits = forward(flat, inputs, layout)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def lm_grad(flat: jax.Array, batch: jax.Array, layout: TransformerLayout):
+    """(loss[1], grad[D]) — the AOT contract for the LM."""
+    loss, grad = jax.value_and_grad(lm_loss)(flat, batch, layout)
+    return jnp.reshape(loss, (1,)), grad

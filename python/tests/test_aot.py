@@ -1,0 +1,88 @@
+"""AOT emission: HLO text parses (has HloModule header, ENTRY, tuple root),
+manifest is valid JSON with consistent shapes."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import transformer as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    em = aot.Emitter(str(out))
+    aot.emit_logreg(em, d=4, m=8)
+    aot.emit_mix(em, 3, 16)
+    em.finish()
+    return out, em.manifest
+
+
+def test_hlo_text_shape(emitted):
+    out, manifest = emitted
+    for art in manifest["artifacts"]:
+        text = (out / art["file"]).read_text()
+        assert text.startswith("HloModule"), art["name"]
+        assert "ENTRY" in text
+        # return_tuple=True => root is a tuple
+        assert "tuple(" in text or "ROOT" in text
+
+
+def test_manifest_valid_json(emitted):
+    out, _ = emitted
+    data = json.loads((out / "manifest.json").read_text())
+    assert data["version"] == 1
+    names = [a["name"] for a in data["artifacts"]]
+    assert len(names) == len(set(names)), "artifact names must be unique"
+    for art in data["artifacts"]:
+        assert art["kind"] in {"grad", "fused_step", "mix", "fused_update", "eval"}
+        for io in art["inputs"] + art["outputs"]:
+            assert io["dtype"] in {"f32", "i32"}
+            assert all(isinstance(s, int) and s > 0 for s in io["shape"]) or io["shape"] == []
+
+
+def test_grad_artifact_io_consistency(emitted):
+    _, manifest = emitted
+    grads = [a for a in manifest["artifacts"] if a["kind"] == "grad"]
+    assert grads
+    for art in grads:
+        # contract: outputs are (loss[1], grad[flat_dim])
+        assert art["outputs"][0]["shape"] == [1]
+        assert art["outputs"][1]["shape"] == [art["flat_dim"]]
+
+
+def test_to_hlo_text_roundtrip_simple():
+    """Sanity: the lowering helper produces text XLA's parser accepts
+    (checked indirectly via structure; rust integration tests do the real
+    load+execute round trip)."""
+
+    def fn(a, b):
+        return (a @ b + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert text.startswith("HloModule")
+    assert "f32[2,2]" in text
+
+
+def test_transformer_tiny_lowering():
+    """The LM grad graph lowers (no data-dependent shapes snuck in)."""
+    cfg = T.CONFIGS["tiny"]
+    layout = T.TransformerLayout(cfg)
+
+    def grad_fn(flat, tokens):
+        return T.lm_grad(flat, tokens, layout)
+
+    specs = (
+        jax.ShapeDtypeStruct((layout.dim,), jnp.float32),
+        jax.ShapeDtypeStruct((2, cfg.seq_len + 1), jnp.int32),
+    )
+    text = aot.to_hlo_text(jax.jit(grad_fn).lower(*specs))
+    assert text.startswith("HloModule")
+    assert f"f32[{layout.dim}]" in text

@@ -1,0 +1,192 @@
+"""Pallas kernels vs pure-jnp oracles (ref.py) — the core L1 signal.
+
+hypothesis sweeps shapes and seeds; assert_allclose against ref.py per the
+repo testing policy (DESIGN.md §6).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import fused_update, gossip_mix, logistic, mlp, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ----------------------------------------------------------------------------
+# logistic: fused loss + grad
+# ----------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(min_value=1, max_value=300),
+    d=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_logistic_matches_ref(m, d, seed):
+    r = _rng(seed)
+    w = jnp.asarray(r.normal(size=d), jnp.float32)
+    x = jnp.asarray(r.normal(size=(m, d)), jnp.float32)
+    y = jnp.asarray(r.choice([-1.0, 1.0], size=m), jnp.float32)
+    loss_k, grad_k = logistic.logistic_loss_grad(w, x, y)
+    loss_r, grad_r = ref.logistic_loss_grad(w, x, y)
+    assert_allclose(float(loss_k[0]), float(loss_r), rtol=2e-5, atol=2e-6)
+    assert_allclose(np.asarray(grad_k), np.asarray(grad_r), rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("block_m", [8, 32, 128])
+def test_logistic_block_size_invariant(block_m):
+    """Tiling must not change the numbers (tile-boundary correctness)."""
+    r = _rng(7)
+    w = jnp.asarray(r.normal(size=10), jnp.float32)
+    x = jnp.asarray(r.normal(size=(100, 10)), jnp.float32)
+    y = jnp.asarray(r.choice([-1.0, 1.0], size=100), jnp.float32)
+    loss_r, grad_r = ref.logistic_loss_grad(w, x, y)
+    loss_k, grad_k = logistic.logistic_loss_grad(w, x, y, block_m=block_m)
+    assert_allclose(float(loss_k[0]), float(loss_r), rtol=2e-5)
+    assert_allclose(np.asarray(grad_k), np.asarray(grad_r), rtol=2e-5, atol=2e-6)
+
+
+def test_logistic_grad_matches_autodiff():
+    """Analytic in-kernel gradient vs jax.grad of the scalar loss."""
+    r = _rng(3)
+    w = jnp.asarray(r.normal(size=10), jnp.float32)
+    x = jnp.asarray(r.normal(size=(64, 10)), jnp.float32)
+    y = jnp.asarray(r.choice([-1.0, 1.0], size=64), jnp.float32)
+    auto = jax.grad(lambda w_: ref.logistic_loss_grad(w_, x, y)[0])(w)
+    _, grad_k = logistic.logistic_loss_grad(w, x, y)
+    assert_allclose(np.asarray(grad_k), np.asarray(auto), rtol=2e-5, atol=2e-6)
+
+
+# ----------------------------------------------------------------------------
+# gossip_mix
+# ----------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.integers(min_value=1, max_value=8),
+    d=st.integers(min_value=1, max_value=5000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gossip_mix_matches_ref(k, d, seed):
+    r = _rng(seed)
+    w = r.random(k)
+    w = jnp.asarray(w / w.sum(), jnp.float32)  # stochastic row
+    stack = jnp.asarray(r.normal(size=(k, d)), jnp.float32)
+    out = gossip_mix.gossip_mix(w, stack, block_d=256)
+    assert_allclose(np.asarray(out), np.asarray(ref.gossip_mix(w, stack)), rtol=2e-5, atol=1e-5)
+
+
+def test_gossip_mix_preserves_mean():
+    """With uniform weights the mix is the exact average (consensus op)."""
+    r = _rng(11)
+    k, d = 4, 1000
+    stack = jnp.asarray(r.normal(size=(k, d)), jnp.float32)
+    w = jnp.full((k,), 1.0 / k, jnp.float32)
+    out = gossip_mix.gossip_mix(w, stack)
+    assert_allclose(np.asarray(out), np.asarray(stack.mean(0)), rtol=2e-5, atol=1e-5)
+
+
+def test_gossip_mix_identity_weight():
+    """w = e_0 must return the self row untouched (W = I => Local SGD)."""
+    r = _rng(13)
+    stack = jnp.asarray(r.normal(size=(3, 257)), jnp.float32)
+    w = jnp.asarray([1.0, 0.0, 0.0], jnp.float32)
+    out = gossip_mix.gossip_mix(w, stack, block_d=64)
+    assert_allclose(np.asarray(out), np.asarray(stack[0]), rtol=1e-6)
+
+
+# ----------------------------------------------------------------------------
+# fused_update
+# ----------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.integers(min_value=1, max_value=6),
+    d=st.integers(min_value=1, max_value=3000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fused_update_matches_ref(k, d, seed):
+    r = _rng(seed)
+    w = r.random(k)
+    w = jnp.asarray(w / w.sum(), jnp.float32)
+    stack = jnp.asarray(r.normal(size=(k, d)), jnp.float32)
+    g = jnp.asarray(r.normal(size=d), jnp.float32)
+    lr = jnp.float32(0.1)
+    out = fused_update.fused_update_mix(w, stack, g, lr, block_d=512)
+    expect = ref.fused_update_mix(w, stack, g, lr)
+    assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=1e-5)
+
+
+def test_fused_update_equals_separate_ops():
+    """Fusion must equal update-then-mix done as two unfused steps."""
+    r = _rng(5)
+    k, d = 3, 100
+    w = jnp.asarray([0.5, 0.25, 0.25], jnp.float32)
+    stack = jnp.asarray(r.normal(size=(k, d)), jnp.float32)
+    g = jnp.asarray(r.normal(size=d), jnp.float32)
+    lr = jnp.float32(0.2)
+    updated = stack.at[0].add(-lr * g)
+    expect = ref.gossip_mix(w, updated)
+    out = fused_update.fused_update_mix(w, stack, g, lr)
+    assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------------
+# mlp fused dense+gelu (+ custom VJP)
+# ----------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(min_value=1, max_value=200),
+    k=st.integers(min_value=1, max_value=48),
+    n=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dense_gelu_matches_ref(m, k, n, seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(k, n)) / np.sqrt(k), jnp.float32)
+    b = jnp.asarray(r.normal(size=n), jnp.float32)
+    out = mlp.dense_gelu(x, w, b, 64, 64)
+    assert_allclose(np.asarray(out), np.asarray(ref.dense_gelu(x, w, b)), rtol=3e-5, atol=3e-6)
+
+
+def test_dense_gelu_vjp_matches_autodiff():
+    """Custom VJP (pallas fwd + closed-form bwd) vs jax.grad of the oracle."""
+    r = _rng(17)
+    x = jnp.asarray(r.normal(size=(16, 8)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(8, 12)) / np.sqrt(8), jnp.float32)
+    b = jnp.asarray(r.normal(size=12), jnp.float32)
+
+    def loss_kernel(x, w, b):
+        return jnp.sum(mlp.dense_gelu(x, w, b) ** 2)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(ref.dense_gelu(x, w, b) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, e in zip(gk, gr):
+        assert_allclose(np.asarray(a), np.asarray(e), rtol=3e-4, atol=3e-5)
+
+
+def test_vmem_estimates_positive():
+    """§Perf helpers are sane: footprints are positive and monotone in tiles."""
+    assert gossip_mix.vmem_bytes(3, 2048) > gossip_mix.vmem_bytes(3, 256)
+    assert logistic.vmem_bytes(128, 10) > 0
+    assert mlp.vmem_bytes(128, 128, 64) > mlp.vmem_bytes(32, 32, 64)
+    assert logistic.mxu_flops(100, 10) == 2 * 2 * 100 * 10

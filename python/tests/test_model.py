@@ -1,0 +1,175 @@
+"""L2 model graphs: gradients vs numerical/autodiff checks, shape contracts,
+and training-sanity (loss decreases under plain SGD)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile import transformer as T
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ----------------------------------------------------------------------------
+# logreg
+# ----------------------------------------------------------------------------
+
+
+def test_logreg_grad_numeric():
+    """Kernel-computed gradient vs central finite differences."""
+    r = _rng(0)
+    d, m = 6, 40
+    w = jnp.asarray(r.normal(size=d), jnp.float32)
+    x = jnp.asarray(r.normal(size=(m, d)), jnp.float32)
+    y = jnp.asarray(r.choice([-1.0, 1.0], size=m), jnp.float32)
+    _, grad = M.logreg_grad(w, x, y)
+    eps = 1e-3
+    for i in range(d):
+        e = jnp.zeros(d).at[i].set(eps)
+        lp, _ = M.logreg_grad(w + e, x, y)
+        lm, _ = M.logreg_grad(w - e, x, y)
+        fd = (float(lp[0]) - float(lm[0])) / (2 * eps)
+        assert abs(fd - float(grad[i])) < 5e-3, f"coord {i}: fd={fd} grad={float(grad[i])}"
+
+
+def test_logreg_fused_step_is_sgd():
+    r = _rng(1)
+    d, m = 10, 32
+    w = jnp.asarray(r.normal(size=d), jnp.float32)
+    x = jnp.asarray(r.normal(size=(m, d)), jnp.float32)
+    y = jnp.asarray(r.choice([-1.0, 1.0], size=m), jnp.float32)
+    lr = jnp.float32(0.3)
+    new_w, loss = M.logreg_fused_step(w, x, y, lr)
+    loss2, grad = M.logreg_grad(w, x, y)
+    assert_allclose(np.asarray(new_w), np.asarray(w - lr * grad), rtol=1e-5, atol=1e-6)
+    assert_allclose(float(loss[0]), float(loss2[0]), rtol=1e-6)
+
+
+def test_logreg_sgd_decreases_loss():
+    r = _rng(2)
+    d, m = 10, 256
+    w_star = r.normal(size=d)
+    x = r.normal(size=(m, d))
+    y = np.where(r.random(m) <= 1.0 / (1.0 + np.exp(-x @ w_star)), 1.0, -1.0)
+    w = jnp.zeros(d, jnp.float32)
+    xj, yj = jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32)
+    losses = []
+    for _ in range(50):
+        loss, grad = M.logreg_grad(w, xj, yj)
+        losses.append(float(loss[0]))
+        w = w - 0.5 * grad
+    assert losses[-1] < 0.6 * losses[0]
+
+
+# ----------------------------------------------------------------------------
+# mlp classifier
+# ----------------------------------------------------------------------------
+
+
+def test_mlp_layout_roundtrip():
+    layout = M.MlpLayout(8, 16, 4)
+    flat = layout.init(jax.random.PRNGKey(0))
+    assert flat.shape == (layout.dim,)
+    p = layout.unflatten(flat)
+    assert p["w1"].shape == (8, 16)
+    assert p["b2"].shape == (4,)
+    # Round-trip: reassembling in layout order reproduces the flat vector.
+    re = jnp.concatenate([p[name].reshape(-1) for name, _ in layout.shapes])
+    assert_allclose(np.asarray(re), np.asarray(flat))
+
+
+def test_mlp_grad_pallas_vs_pure():
+    """Pallas hidden layer and pure-jnp hidden layer agree on loss+grad."""
+    layout = M.MlpLayout(8, 16, 4)
+    flat = layout.init(jax.random.PRNGKey(1))
+    r = _rng(3)
+    x = jnp.asarray(r.normal(size=(32, 8)), jnp.float32)
+    y = jnp.asarray(r.integers(0, 4, size=32), jnp.int32)
+    l1, g1 = M.mlp_grad(flat, x, y, layout, use_pallas=True)
+    l2, g2 = M.mlp_grad(flat, x, y, layout, use_pallas=False)
+    assert_allclose(float(l1[0]), float(l2[0]), rtol=1e-5)
+    assert_allclose(np.asarray(g1), np.asarray(g2), rtol=5e-4, atol=5e-5)
+
+
+def test_mlp_sgd_learns_separable():
+    layout = M.MlpLayout(4, 32, 2)
+    flat = layout.init(jax.random.PRNGKey(2))
+    r = _rng(4)
+    x = r.normal(size=(256, 4)).astype(np.float32)
+    y = (x[:, 0] + x[:, 1] > 0).astype(np.int32)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    for _ in range(60):
+        _, g = M.mlp_grad(flat, xj, yj, layout, use_pallas=False)
+        flat = flat - 0.5 * g
+    acc = float(M.mlp_accuracy(flat, xj, yj, layout)[0])
+    assert acc > 0.9, acc
+
+
+# ----------------------------------------------------------------------------
+# transformer LM
+# ----------------------------------------------------------------------------
+
+
+def test_transformer_layout_dim():
+    cfg = T.CONFIGS["tiny"]
+    layout = T.TransformerLayout(cfg)
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    per_layer = 2 * d + 4 * d * d + 2 * d + d * ff + ff + ff * d + d
+    expect = v * d + cfg.seq_len * d + cfg.n_layers * per_layer + 2 * d + d * v
+    assert layout.dim == expect
+
+
+def test_transformer_grad_contract():
+    layout = T.TransformerLayout(T.CONFIGS["tiny"])
+    flat = layout.init(jax.random.PRNGKey(0))
+    r = _rng(5)
+    batch = jnp.asarray(r.integers(0, 256, size=(2, 33)), jnp.int32)
+    loss, grad = T.lm_grad(flat, batch, layout)
+    assert loss.shape == (1,)
+    assert grad.shape == (layout.dim,)
+    # fresh init => loss close to ln(vocab)
+    assert abs(float(loss[0]) - np.log(256)) < 1.0
+
+
+def test_transformer_sgd_memorizes():
+    """A tiny model must overfit one repeated sequence quickly."""
+    layout = T.TransformerLayout(T.CONFIGS["tiny"])
+    flat = layout.init(jax.random.PRNGKey(3))
+    r = _rng(6)
+    seq = r.integers(0, 256, size=33)
+    batch = jnp.asarray(np.stack([seq] * 2), jnp.int32)
+    first = None
+    for _ in range(30):
+        loss, grad = T.lm_grad(flat, batch, layout)
+        if first is None:
+            first = float(loss[0])
+        flat = flat - 0.5 * grad
+    assert float(loss[0]) < 0.5 * first
+
+
+def test_transformer_causality():
+    """Changing a future token must not change past logits."""
+    layout = T.TransformerLayout(T.CONFIGS["tiny"])
+    flat = layout.init(jax.random.PRNGKey(4))
+    r = _rng(7)
+    toks = r.integers(0, 256, size=(1, 32))
+    t2 = toks.copy()
+    t2[0, -1] = (t2[0, -1] + 1) % 256
+    l1 = T.forward(flat, jnp.asarray(toks, jnp.int32), layout)
+    l2 = T.forward(flat, jnp.asarray(t2, jnp.int32), layout)
+    assert_allclose(np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]), rtol=1e-5, atol=1e-5)
+
+
+def test_e2e_config_size():
+    """The e2e config is in the documented ~10-15M band; bert100m ~90-110M."""
+    e2e = T.TransformerLayout(T.CONFIGS["e2e"]).dim
+    assert 8e6 < e2e < 2e7, e2e
+    big = T.TransformerLayout(T.CONFIGS["bert100m"]).dim
+    assert 8e7 < big < 1.3e8, big

@@ -1,0 +1,315 @@
+//! Communication-schedule policies: the paper's algorithm family.
+//!
+//! Algorithm 1's per-iteration structure is `local update` followed by a
+//! communication action; the algorithms differ *only* in which action they
+//! take at iteration k:
+//!
+//! | algorithm     | action at k (0-based)                              |
+//! |---------------|----------------------------------------------------|
+//! | Parallel SGD  | GlobalAverage every step (W = avg)                 |
+//! | Gossip SGD    | Gossip every step (H = infinity)                   |
+//! | Local SGD     | GlobalAverage when mod(k+1, H)=0, else nothing     |
+//! | Gossip-PGA    | GlobalAverage when mod(k+1, H)=0, else Gossip      |
+//! | Gossip-AGA    | PGA with the adaptive period of Algorithm 2        |
+//! | SlowMo        | PGA schedule + slow-momentum update at each sync   |
+//!
+//! The limiting identities (Remarks after Algorithm 1) — H=1 => Parallel,
+//! W=I => Local, H=inf => Gossip — are tested here and at the coordinator
+//! level (rust/tests/).
+
+use anyhow::{bail, Result};
+
+/// What the coordinator does after the local update at iteration k.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommAction {
+    /// No communication (Local SGD between syncs).
+    None,
+    /// One gossip round with the topology's weight matrix.
+    Gossip,
+    /// Exact global average via ring all-reduce.
+    GlobalAverage,
+}
+
+/// Algorithm family selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgorithmKind {
+    Parallel,
+    Gossip,
+    Local,
+    GossipPga,
+    GossipAga,
+    SlowMo,
+}
+
+impl AlgorithmKind {
+    pub fn from_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "parallel" | "allreduce" => AlgorithmKind::Parallel,
+            "gossip" | "dsgd" => AlgorithmKind::Gossip,
+            "local" => AlgorithmKind::Local,
+            "pga" | "gossip-pga" => AlgorithmKind::GossipPga,
+            "aga" | "gossip-aga" => AlgorithmKind::GossipAga,
+            "slowmo" => AlgorithmKind::SlowMo,
+            other => bail!("unknown algorithm '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgorithmKind::Parallel => "parallel",
+            AlgorithmKind::Gossip => "gossip",
+            AlgorithmKind::Local => "local",
+            AlgorithmKind::GossipPga => "pga",
+            AlgorithmKind::GossipAga => "aga",
+            AlgorithmKind::SlowMo => "slowmo",
+        }
+    }
+
+    /// Paper-style display name for tables.
+    pub fn display(&self) -> &'static str {
+        match self {
+            AlgorithmKind::Parallel => "Parallel SGD",
+            AlgorithmKind::Gossip => "Gossip SGD",
+            AlgorithmKind::Local => "Local SGD",
+            AlgorithmKind::GossipPga => "Gossip-PGA",
+            AlgorithmKind::GossipAga => "Gossip-AGA",
+            AlgorithmKind::SlowMo => "SlowMo",
+        }
+    }
+}
+
+/// A communication schedule: maps iteration index (+ observed mean loss)
+/// to a [`CommAction`]. Stateful because Gossip-AGA adapts its period from
+/// observed losses.
+pub trait Schedule: Send {
+    /// Decide the action after the local update of iteration `k` (0-based).
+    /// `mean_loss` is the across-worker mean training loss at this step
+    /// (used by AGA; other schedules ignore it).
+    fn action(&mut self, k: usize, mean_loss: f64) -> CommAction;
+
+    /// Current period (for logging; `usize::MAX` = never).
+    fn current_period(&self) -> usize;
+}
+
+/// Fixed-period schedules covering Parallel / Gossip / Local / PGA / SlowMo.
+#[derive(Clone, Debug)]
+pub struct FixedSchedule {
+    /// Gossip on non-sync iterations?
+    pub gossip_between: bool,
+    /// Global-average period; `usize::MAX` disables global averaging.
+    pub h: usize,
+}
+
+impl FixedSchedule {
+    pub fn for_kind(kind: AlgorithmKind, h: usize) -> FixedSchedule {
+        match kind {
+            AlgorithmKind::Parallel => FixedSchedule { gossip_between: false, h: 1 },
+            AlgorithmKind::Gossip => FixedSchedule { gossip_between: true, h: usize::MAX },
+            AlgorithmKind::Local => FixedSchedule { gossip_between: false, h },
+            AlgorithmKind::GossipPga | AlgorithmKind::SlowMo => {
+                FixedSchedule { gossip_between: true, h }
+            }
+            AlgorithmKind::GossipAga => panic!("use AgaSchedule for Gossip-AGA"),
+        }
+    }
+}
+
+impl Schedule for FixedSchedule {
+    fn action(&mut self, k: usize, _mean_loss: f64) -> CommAction {
+        if self.h != usize::MAX && (k + 1) % self.h == 0 {
+            CommAction::GlobalAverage
+        } else if self.gossip_between {
+            CommAction::Gossip
+        } else {
+            CommAction::None
+        }
+    }
+
+    fn current_period(&self) -> usize {
+        self.h
+    }
+}
+
+/// Gossip-AGA (Algorithm 2): counter C, warmup running-average F_init, then
+/// H <- ceil(F_init / F(x_k)) * H_init at each global averaging step.
+#[derive(Clone, Debug)]
+pub struct AgaSchedule {
+    pub h_init: usize,
+    pub warmup: usize,
+    h: usize,
+    counter: usize,
+    f_init: f64,
+    f_init_ready: bool,
+}
+
+impl AgaSchedule {
+    pub fn new(h_init: usize, warmup: usize) -> Self {
+        assert!(h_init >= 1);
+        AgaSchedule { h_init, warmup, h: h_init, counter: 0, f_init: 0.0, f_init_ready: false }
+    }
+}
+
+impl Schedule for AgaSchedule {
+    fn action(&mut self, k: usize, mean_loss: f64) -> CommAction {
+        self.counter += 1;
+        if self.counter < self.h {
+            return CommAction::Gossip;
+        }
+        // Global averaging step: update the running loss estimate / period.
+        self.counter = 0;
+        if k < self.warmup || !self.f_init_ready {
+            // Running-average estimate of the initial loss scale.
+            self.f_init = if self.f_init_ready { 0.5 * (self.f_init + mean_loss) } else { mean_loss };
+            self.f_init_ready = true;
+        } else if mean_loss > 1e-12 {
+            // Loss decreased => ratio > 1 => period grows (eq. (9), with the
+            // exponential term removed per App. G's practical note).
+            let ratio = (self.f_init / mean_loss).max(0.0);
+            self.h = ((ratio * self.h_init as f64).ceil() as usize).max(1);
+        }
+        CommAction::GlobalAverage
+    }
+
+    fn current_period(&self) -> usize {
+        self.h
+    }
+}
+
+/// Build the right schedule for a kind.
+pub fn schedule_for(kind: AlgorithmKind, h: usize, aga_init: usize, aga_warmup: usize) -> Box<dyn Schedule> {
+    match kind {
+        AlgorithmKind::GossipAga => Box::new(AgaSchedule::new(aga_init, aga_warmup)),
+        k => Box::new(FixedSchedule::for_kind(k, h)),
+    }
+}
+
+/// SlowMo outer-update hyper-parameters (Wang et al. 2019). The paper's
+/// Table 8 comparison uses the slow-momentum update at every global sync:
+///   u <- beta_s u + (x_prev_sync - x_avg) / gamma_eff
+///   x <- x_prev_sync - alpha_s * gamma_eff * u
+#[derive(Clone, Copy, Debug)]
+pub struct SlowMoParams {
+    pub beta: f64,
+    pub alpha: f64,
+}
+
+impl Default for SlowMoParams {
+    fn default() -> Self {
+        // Wang et al. report beta in [0.4, 0.8]; 0.5 is their robust choice.
+        SlowMoParams { beta: 0.5, alpha: 1.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn actions(kind: AlgorithmKind, h: usize, steps: usize) -> Vec<CommAction> {
+        let mut s = schedule_for(kind, h, 4, 10);
+        (0..steps).map(|k| s.action(k, 1.0)).collect()
+    }
+
+    #[test]
+    fn parallel_always_averages() {
+        assert!(actions(AlgorithmKind::Parallel, 16, 10)
+            .iter()
+            .all(|a| *a == CommAction::GlobalAverage));
+    }
+
+    #[test]
+    fn gossip_never_averages() {
+        assert!(actions(AlgorithmKind::Gossip, 16, 100)
+            .iter()
+            .all(|a| *a == CommAction::Gossip));
+    }
+
+    #[test]
+    fn local_sgd_pattern() {
+        let a = actions(AlgorithmKind::Local, 4, 8);
+        assert_eq!(
+            a,
+            vec![
+                CommAction::None,
+                CommAction::None,
+                CommAction::None,
+                CommAction::GlobalAverage,
+                CommAction::None,
+                CommAction::None,
+                CommAction::None,
+                CommAction::GlobalAverage,
+            ]
+        );
+    }
+
+    #[test]
+    fn pga_pattern_matches_algorithm1() {
+        // mod(k+1, H) == 0 => global average, else gossip.
+        let a = actions(AlgorithmKind::GossipPga, 3, 6);
+        assert_eq!(
+            a,
+            vec![
+                CommAction::Gossip,
+                CommAction::Gossip,
+                CommAction::GlobalAverage,
+                CommAction::Gossip,
+                CommAction::Gossip,
+                CommAction::GlobalAverage,
+            ]
+        );
+    }
+
+    #[test]
+    fn pga_h1_equals_parallel() {
+        assert_eq!(actions(AlgorithmKind::GossipPga, 1, 5), actions(AlgorithmKind::Parallel, 1, 5));
+    }
+
+    #[test]
+    fn aga_period_grows_as_loss_drops() {
+        let mut s = AgaSchedule::new(4, 8);
+        let mut syncs = Vec::new();
+        // Loss decays geometrically; period should increase over time.
+        let mut k = 0;
+        let mut loss = 8.0;
+        for _ in 0..200 {
+            let a = s.action(k, loss);
+            if a == CommAction::GlobalAverage {
+                syncs.push((k, s.current_period()));
+            }
+            loss *= 0.99;
+            k += 1;
+        }
+        assert!(syncs.len() >= 3);
+        let first_h = syncs[1].1;
+        let last_h = syncs.last().unwrap().1;
+        assert!(last_h > first_h, "period should grow: {syncs:?}");
+    }
+
+    #[test]
+    fn aga_never_stalls() {
+        // Even with garbage losses the schedule must keep syncing.
+        let mut s = AgaSchedule::new(2, 4);
+        let mut got_sync = 0;
+        for k in 0..100 {
+            if s.action(k, f64::NAN) == CommAction::GlobalAverage {
+                got_sync += 1;
+            }
+        }
+        assert!(got_sync >= 2);
+        assert!(s.current_period() >= 1);
+    }
+
+    #[test]
+    fn kind_name_roundtrip() {
+        for kind in [
+            AlgorithmKind::Parallel,
+            AlgorithmKind::Gossip,
+            AlgorithmKind::Local,
+            AlgorithmKind::GossipPga,
+            AlgorithmKind::GossipAga,
+            AlgorithmKind::SlowMo,
+        ] {
+            assert_eq!(AlgorithmKind::from_name(kind.name()).unwrap(), kind);
+        }
+        assert!(AlgorithmKind::from_name("sgd2").is_err());
+    }
+}

@@ -1,0 +1,362 @@
+//! In-process collective-communication substrate.
+//!
+//! The paper's cluster (NCCL over 25 Gbps TCP) is replaced by a real
+//! message-passing layer over `std::sync::mpsc` channels: each node owns an
+//! [`Endpoint`] and communicates only by `send`/`recv`, exactly like a
+//! socket-based worker would. On top of the bus we implement the two
+//! primitives Algorithm 1 needs:
+//!
+//! * [`gossip_exchange`] — every node sends its vector to its out-neighbors
+//!   and mixes what it receives with its weight row (the gossip branch);
+//! * [`ring_all_reduce`] — bandwidth-optimal ring all-reduce
+//!   (reduce-scatter + all-gather, 2(n-1) chunked steps), the paper's
+//!   global-averaging primitive (§3, "All-Reduce v.s. multiple Gossips").
+//!
+//! Every endpoint counts bytes and messages so the Table 17 bench can report
+//! measured traffic next to the alpha-beta model's predictions.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{anyhow, Result};
+
+/// A tagged message: (source, payload).
+type Msg = (usize, Vec<f32>);
+
+/// Per-node communication endpoint on the in-proc bus.
+pub struct Endpoint {
+    pub rank: usize,
+    pub n: usize,
+    /// `senders[j]` reaches node j; the self slot is `None` so that a
+    /// node's own channel closes once every *other* node drops — this is
+    /// what turns a crashed peer into a clean error instead of a deadlock
+    /// (see `node_failure_surfaces_as_error_not_hang`).
+    senders: Vec<Option<Sender<Msg>>>,
+    receiver: Receiver<Msg>,
+    /// Out-of-order arrivals parked until requested.
+    parked: Vec<Msg>,
+    /// Traffic accounting (payload f32 count and message count).
+    pub scalars_sent: u64,
+    pub msgs_sent: u64,
+}
+
+/// Build a fully-connected bus of `n` endpoints.
+pub fn bus(n: usize) -> Vec<Endpoint> {
+    let mut senders = Vec::with_capacity(n);
+    let mut receivers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel::<Msg>();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    receivers
+        .into_iter()
+        .enumerate()
+        .map(|(rank, receiver)| Endpoint {
+            rank,
+            n,
+            senders: senders
+                .iter()
+                .enumerate()
+                .map(|(j, tx)| (j != rank).then(|| tx.clone()))
+                .collect(),
+            receiver,
+            parked: Vec::new(),
+            scalars_sent: 0,
+            msgs_sent: 0,
+        })
+        .collect()
+}
+
+impl Endpoint {
+    /// Send `payload` to node `to`.
+    pub fn send(&mut self, to: usize, payload: Vec<f32>) -> Result<()> {
+        self.scalars_sent += payload.len() as u64;
+        self.msgs_sent += 1;
+        self.senders[to]
+            .as_ref()
+            .ok_or_else(|| anyhow!("node {} cannot send to itself", self.rank))?
+            .send((self.rank, payload))
+            .map_err(|_| anyhow!("node {to} hung up"))
+    }
+
+    /// Receive the next message from node `from` (parking others).
+    pub fn recv_from(&mut self, from: usize) -> Result<Vec<f32>> {
+        if let Some(pos) = self.parked.iter().position(|(src, _)| *src == from) {
+            return Ok(self.parked.remove(pos).1);
+        }
+        loop {
+            let (src, payload) =
+                self.receiver.recv().map_err(|_| anyhow!("bus closed waiting for {from}"))?;
+            if src == from {
+                return Ok(payload);
+            }
+            self.parked.push((src, payload));
+        }
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        self.scalars_sent * 4
+    }
+}
+
+/// One gossip round: node `rank` broadcasts `x` to its out-neighbors and
+/// returns the weighted mix of what it receives.
+///
+/// `weight_row` is the node's row of W: `(j, w_ij)` over in-neighbors
+/// (self included). For the symmetric/static topologies out-neighbors ==
+/// in-neighbors; for the directed one-peer graph the out-peer is the node
+/// that lists `rank` among its in-neighbors — callers pass `out_neighbors`
+/// explicitly so both cases are handled uniformly.
+pub fn gossip_exchange(
+    ep: &mut Endpoint,
+    x: &[f32],
+    weight_row: &[(usize, f64)],
+    out_neighbors: &[usize],
+) -> Result<Vec<f32>> {
+    for &j in out_neighbors {
+        if j != ep.rank {
+            ep.send(j, x.to_vec())?;
+        }
+    }
+    let mut acc = vec![0.0f32; x.len()];
+    for &(j, w) in weight_row {
+        let w = w as f32;
+        if j == ep.rank {
+            for (a, b) in acc.iter_mut().zip(x) {
+                *a += w * b;
+            }
+        } else {
+            let recv = ep.recv_from(j)?;
+            anyhow::ensure!(recv.len() == x.len(), "length mismatch from {j}");
+            for (a, b) in acc.iter_mut().zip(&recv) {
+                *a += w * b;
+            }
+        }
+    }
+    Ok(acc)
+}
+
+/// Bandwidth-optimal ring all-reduce: after the call every node holds the
+/// element-wise **average** of all inputs.
+///
+/// Classic two-phase schedule over the ring `rank -> rank+1`:
+/// reduce-scatter (n-1 steps, each sending one d/n chunk) then all-gather
+/// (n-1 steps). Total traffic per node: 2 d (n-1)/n scalars — the 2·theta·d
+/// of the paper's cost model.
+pub fn ring_all_reduce(ep: &mut Endpoint, x: &mut [f32]) -> Result<()> {
+    let n = ep.n;
+    if n == 1 {
+        return Ok(());
+    }
+    let d = x.len();
+    let next = (ep.rank + 1) % n;
+    let prev = (ep.rank + n - 1) % n;
+    // Chunk boundaries: chunk c covers [bound[c], bound[c+1]).
+    let bounds: Vec<usize> = (0..=n).map(|c| c * d / n).collect();
+    let chunk = |c: usize| bounds[c % n]..bounds[c % n + 1];
+
+    // Reduce-scatter: at step s, send chunk (rank - s), reduce into
+    // chunk (rank - s - 1).
+    for s in 0..n - 1 {
+        let send_c = (ep.rank + n - s) % n;
+        let recv_c = (ep.rank + n - s - 1) % n;
+        ep.send(next, x[chunk(send_c)].to_vec())?;
+        let data = ep.recv_from(prev)?;
+        for (a, b) in x[chunk(recv_c)].iter_mut().zip(&data) {
+            *a += b;
+        }
+    }
+    // All-gather: at step s, send chunk (rank + 1 - s) (now fully reduced).
+    for s in 0..n - 1 {
+        let send_c = (ep.rank + 1 + n - s) % n;
+        let recv_c = (ep.rank + n - s) % n;
+        ep.send(next, x[chunk(send_c)].to_vec())?;
+        let data = ep.recv_from(prev)?;
+        x[chunk(recv_c)].copy_from_slice(&data);
+    }
+    // Average.
+    let inv = 1.0 / n as f32;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+    Ok(())
+}
+
+/// Run `f` on every endpoint concurrently (one thread per node) and return
+/// the per-node results in rank order. This is how the collectives are
+/// exercised — each node is an independent thread exchanging messages, the
+/// same concurrency structure as a real deployment.
+pub fn run_nodes<T, F>(endpoints: Vec<Endpoint>, f: F) -> Result<Vec<T>>
+where
+    T: Send + 'static,
+    F: Fn(Endpoint) -> Result<T> + Send + Sync + 'static,
+{
+    let f = std::sync::Arc::new(f);
+    let mut handles = Vec::new();
+    for ep in endpoints {
+        let f = f.clone();
+        handles.push(std::thread::spawn(move || f(ep)));
+    }
+    handles
+        .into_iter()
+        .map(|h| h.join().map_err(|_| anyhow!("node thread panicked"))?)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    #[test]
+    fn send_recv_basic() {
+        let mut eps = bus(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, vec![1.0, 2.0]).unwrap();
+        assert_eq!(b.recv_from(0).unwrap(), vec![1.0, 2.0]);
+        assert_eq!(a.bytes_sent(), 8);
+    }
+
+    #[test]
+    fn recv_parks_out_of_order() {
+        let mut eps = bus(3);
+        let mut c = eps.pop().unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(2, vec![1.0]).unwrap();
+        b.send(2, vec![2.0]).unwrap();
+        // Ask for b's first even though a's arrived first.
+        assert_eq!(c.recv_from(1).unwrap(), vec![2.0]);
+        assert_eq!(c.recv_from(0).unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn ring_all_reduce_averages() {
+        let n = 5;
+        let d = 17; // deliberately not divisible by n
+        let eps = bus(n);
+        let results = run_nodes(eps, move |mut ep| {
+            let mut x: Vec<f32> = (0..d).map(|j| (ep.rank * d + j) as f32).collect();
+            ring_all_reduce(&mut ep, &mut x)?;
+            Ok(x)
+        })
+        .unwrap();
+        // Expected average: for position j, mean over ranks of (r*d + j).
+        let mean_rank = (0..n).sum::<usize>() as f32 / n as f32;
+        for x in &results {
+            for (j, v) in x.iter().enumerate() {
+                let expect = mean_rank * d as f32 + j as f32;
+                assert!((v - expect).abs() < 1e-3, "pos {j}: {v} vs {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_all_reduce_traffic_is_2d() {
+        // Per-node traffic must be 2 d (n-1)/n scalars (the model's 2 theta d).
+        let n = 4;
+        let d = 400;
+        let eps = bus(n);
+        let sent = run_nodes(eps, move |mut ep| {
+            let mut x = vec![1.0f32; d];
+            ring_all_reduce(&mut ep, &mut x)?;
+            Ok(ep.scalars_sent)
+        })
+        .unwrap();
+        for s in sent {
+            assert_eq!(s, (2 * d * (n - 1) / n) as u64);
+        }
+    }
+
+    #[test]
+    fn gossip_exchange_matches_matrix_product() {
+        // One gossip round over a ring == multiplying the stacked state by W.
+        let n = 6;
+        let d = 3;
+        let topo = Topology::ring(n);
+        let w = topo.weight_matrix(0);
+        let eps = bus(n);
+        let topo2 = topo.clone();
+        let results = run_nodes(eps, move |mut ep| {
+            let x: Vec<f32> = (0..d).map(|j| (ep.rank * 10 + j) as f32).collect();
+            let row = topo2.weight_row(ep.rank, 0);
+            let outn: Vec<usize> =
+                topo2.in_neighbors(ep.rank, 0).into_iter().filter(|&j| j != ep.rank).collect();
+            gossip_exchange(&mut ep, &x, &row, &outn)
+        })
+        .unwrap();
+        for i in 0..n {
+            for j in 0..d {
+                let expect: f64 = (0..n).map(|k| w[(i, k)] * (k * 10 + j) as f64).sum();
+                assert!((results[i][j] as f64 - expect).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_preserves_global_mean() {
+        // Doubly-stochastic W preserves the average of the ensemble.
+        let n = 8;
+        let d = 5;
+        let topo = Topology::grid(n);
+        let eps = bus(n);
+        let results = run_nodes(eps, move |mut ep| {
+            let x: Vec<f32> = (0..d).map(|j| ((ep.rank + 1) * (j + 2)) as f32).collect();
+            let row = topo.weight_row(ep.rank, 0);
+            let outn: Vec<usize> =
+                topo.in_neighbors(ep.rank, 0).into_iter().filter(|&j| j != ep.rank).collect();
+            gossip_exchange(&mut ep, &x, &row, &outn)
+        })
+        .unwrap();
+        for j in 0..d {
+            let before: f32 = (0..n).map(|i| ((i + 1) * (j + 2)) as f32).sum::<f32>() / n as f32;
+            let after: f32 = results.iter().map(|x| x[j]).sum::<f32>() / n as f32;
+            assert!((before - after).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn node_failure_surfaces_as_error_not_hang() {
+        // Failure injection: node 0 crashes before participating in the
+        // all-reduce. Its ring neighbor must get a clean error (the sender
+        // side hangs up), not a deadlock.
+        let mut eps = bus(3);
+        let c = eps.pop().unwrap();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        drop(a); // node 0 crashes
+        let hb = std::thread::spawn(move || {
+            let mut ep = b;
+            let mut x = vec![1.0f32; 9];
+            ring_all_reduce(&mut ep, &mut x)
+        });
+        let hc = std::thread::spawn(move || {
+            let mut ep = c;
+            let mut x = vec![1.0f32; 9];
+            ring_all_reduce(&mut ep, &mut x)
+        });
+        // At least one of the survivors must observe the failure; neither
+        // may hang (join() returning at all proves no deadlock).
+        let rb = hb.join().unwrap();
+        let rc = hc.join().unwrap();
+        assert!(rb.is_err() || rc.is_err());
+    }
+
+    #[test]
+    fn message_to_dead_node_errors() {
+        let mut eps = bus(2);
+        let b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        drop(b);
+        assert!(a.send(1, vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn all_reduce_single_node_noop() {
+        let mut eps = bus(1);
+        let mut x = vec![3.0f32, 4.0];
+        ring_all_reduce(&mut eps[0], &mut x).unwrap();
+        assert_eq!(x, vec![3.0, 4.0]);
+    }
+}

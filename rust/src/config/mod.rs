@@ -1,0 +1,360 @@
+//! Experiment configuration system.
+//!
+//! A TOML-subset parser ([`Toml`]) plus the typed [`ExperimentConfig`] that
+//! the launcher (`gossip-pga train`) and the benches consume. Supported
+//! syntax: `[section.sub]` headers, `key = value` with strings, integers,
+//! floats, booleans and flat arrays, `#` comments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::algorithms::AlgorithmKind;
+use crate::topology::Topology;
+
+/// A parsed TOML-subset document: dotted-path -> value.
+#[derive(Clone, Debug, Default)]
+pub struct Toml {
+    pub values: BTreeMap<String, Value>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml> {
+        let mut doc = Toml::default();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(section) = line.strip_prefix('[') {
+                let section =
+                    section.strip_suffix(']').ok_or_else(|| anyhow!("line {}: bad section", lineno + 1))?;
+                prefix = section.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let path = if prefix.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{prefix}.{}", key.trim())
+            };
+            let v = parse_value(value.trim())
+                .with_context(|| format!("line {}: value for '{path}'", lineno + 1))?;
+            doc.values.insert(path, v);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Toml> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Toml::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_usize().ok_or_else(|| anyhow!("'{key}' must be a non-negative integer")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_f64().ok_or_else(|| anyhow!("'{key}' must be numeric")),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> Result<String> {
+        match self.get(key) {
+            None => Ok(default.to_string()),
+            Some(v) => Ok(v.as_str().ok_or_else(|| anyhow!("'{key}' must be a string"))?.to_string()),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_bool().ok_or_else(|| anyhow!("'{key}' must be a bool")),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if !s.contains(['.', 'e', 'E']) {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+/// Typed experiment configuration consumed by the launcher and benches.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Number of nodes.
+    pub nodes: usize,
+    /// Topology name (see [`Topology::from_name`]).
+    pub topology: String,
+    /// Algorithm (parallel | gossip | local | pga | aga | slowmo).
+    pub algorithm: AlgorithmKind,
+    /// Global averaging period H.
+    pub period: usize,
+    /// AGA initial period / warmup iterations.
+    pub aga_init_period: usize,
+    pub aga_warmup: usize,
+    /// Model artifact name prefix ("logreg", "mlp", "transformer").
+    pub model: String,
+    /// Transformer config tag when model == transformer.
+    pub model_tag: String,
+    pub steps: usize,
+    pub lr: f64,
+    pub lr_decay_every: usize,
+    pub lr_decay_factor: f64,
+    pub warmup_steps: usize,
+    pub momentum: f64,
+    pub nesterov: bool,
+    pub seed: u64,
+    /// Data heterogeneity: true = non-iid (per-node distributions).
+    pub non_iid: bool,
+    pub samples_per_node: usize,
+    pub batch: usize,
+    pub log_every: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            nodes: 8,
+            topology: "ring".into(),
+            algorithm: AlgorithmKind::GossipPga,
+            period: 16,
+            aga_init_period: 4,
+            aga_warmup: 50,
+            model: "logreg".into(),
+            model_tag: "tiny".into(),
+            steps: 500,
+            lr: 0.2,
+            lr_decay_every: 1000,
+            lr_decay_factor: 0.5,
+            warmup_steps: 0,
+            momentum: 0.0,
+            nesterov: false,
+            seed: 42,
+            non_iid: true,
+            samples_per_node: 8000,
+            batch: 32,
+            log_every: 50,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_toml(doc: &Toml) -> Result<Self> {
+        let d = ExperimentConfig::default();
+        let cfg = ExperimentConfig {
+            nodes: doc.get_usize("cluster.nodes", d.nodes)?,
+            topology: doc.get_str("cluster.topology", &d.topology)?,
+            algorithm: AlgorithmKind::from_name(&doc.get_str("algorithm.name", "pga")?)?,
+            period: doc.get_usize("algorithm.period", d.period)?,
+            aga_init_period: doc.get_usize("algorithm.aga_init_period", d.aga_init_period)?,
+            aga_warmup: doc.get_usize("algorithm.aga_warmup", d.aga_warmup)?,
+            model: doc.get_str("model.name", &d.model)?,
+            model_tag: doc.get_str("model.tag", &d.model_tag)?,
+            steps: doc.get_usize("train.steps", d.steps)?,
+            lr: doc.get_f64("train.lr", d.lr)?,
+            lr_decay_every: doc.get_usize("train.lr_decay_every", d.lr_decay_every)?,
+            lr_decay_factor: doc.get_f64("train.lr_decay_factor", d.lr_decay_factor)?,
+            warmup_steps: doc.get_usize("train.warmup_steps", d.warmup_steps)?,
+            momentum: doc.get_f64("train.momentum", d.momentum)?,
+            nesterov: doc.get_bool("train.nesterov", d.nesterov)?,
+            seed: doc.get_usize("train.seed", d.seed as usize)? as u64,
+            non_iid: doc.get_bool("data.non_iid", d.non_iid)?,
+            samples_per_node: doc.get_usize("data.samples_per_node", d.samples_per_node)?,
+            batch: doc.get_usize("data.batch", d.batch)?,
+            log_every: doc.get_usize("train.log_every", d.log_every)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.nodes >= 1, "nodes must be >= 1");
+        anyhow::ensure!(self.period >= 1, "period H must be >= 1");
+        anyhow::ensure!(self.steps >= 1, "steps must be >= 1");
+        anyhow::ensure!(self.lr > 0.0, "lr must be positive");
+        anyhow::ensure!((0.0..1.0).contains(&self.momentum), "momentum in [0,1)");
+        Topology::from_name(&self.topology, self.nodes)?;
+        Ok(())
+    }
+
+    pub fn topology(&self) -> Topology {
+        Topology::from_name(&self.topology, self.nodes).expect("validated")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let doc = Toml::parse(
+            r#"
+            # experiment
+            top = "ring"
+            [cluster]
+            nodes = 20         # inline comment
+            frac = 0.5
+            flag = true
+            arr = [1, 2, 3]
+            [a.b]
+            s = "x # not a comment"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("top").unwrap().as_str().unwrap(), "ring");
+        assert_eq!(doc.get("cluster.nodes").unwrap().as_usize().unwrap(), 20);
+        assert_eq!(doc.get("cluster.frac").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(doc.get("cluster.flag").unwrap().as_bool().unwrap(), true);
+        assert_eq!(
+            doc.get("cluster.arr").unwrap(),
+            &Value::Arr(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+        assert_eq!(doc.get("a.b.s").unwrap().as_str().unwrap(), "x # not a comment");
+    }
+
+    #[test]
+    fn parse_rejects_bad_lines() {
+        assert!(Toml::parse("[unclosed").is_err());
+        assert!(Toml::parse("novalue").is_err());
+        assert!(Toml::parse("k = ").is_err());
+        assert!(Toml::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn experiment_defaults_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn experiment_from_toml_overrides() {
+        let doc = Toml::parse(
+            r#"
+            [cluster]
+            nodes = 20
+            topology = "grid"
+            [algorithm]
+            name = "gossip"
+            [train]
+            steps = 100
+            lr = 0.05
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.nodes, 20);
+        assert_eq!(cfg.topology, "grid");
+        assert_eq!(cfg.algorithm, AlgorithmKind::Gossip);
+        assert_eq!(cfg.steps, 100);
+        assert!((cfg.lr - 0.05).abs() < 1e-12);
+        // untouched default
+        assert_eq!(cfg.batch, 32);
+    }
+
+    #[test]
+    fn experiment_validation_rejects() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.period = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.topology = "nonsense".into();
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.momentum = 1.5;
+        assert!(cfg.validate().is_err());
+    }
+}

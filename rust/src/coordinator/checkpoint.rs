@@ -1,0 +1,196 @@
+//! Checkpointing: save/restore the full training state (worker parameters,
+//! optimizer velocities, step counter, simulated clock) to a compact
+//! binary file, so long runs resume exactly.
+//!
+//! Format (little-endian):
+//!   magic "GPGA" | u32 version | u64 step | f64 sim_seconds |
+//!   u32 n | u32 d | n * d f32 params | u8 has_velocity |
+//!   [n * d f32 velocities]
+//!
+//! No serde offline — the writer/reader below is the substrate.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"GPGA";
+const VERSION: u32 = 1;
+
+/// A snapshot of trainer state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub sim_seconds: f64,
+    /// Per-worker flat parameters (n x d).
+    pub params: Vec<Vec<f32>>,
+    /// Per-worker optimizer velocities (empty when momentum == 0).
+    pub velocities: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let n = self.params.len();
+        let d = self.params.first().map_or(0, |p| p.len());
+        anyhow::ensure!(self.params.iter().all(|p| p.len() == d), "ragged params");
+        let has_vel = !self.velocities.is_empty();
+        if has_vel {
+            anyhow::ensure!(
+                self.velocities.len() == n && self.velocities.iter().all(|v| v.len() == d),
+                "velocity shape mismatch"
+            );
+        }
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&self.step.to_le_bytes())?;
+        f.write_all(&self.sim_seconds.to_le_bytes())?;
+        f.write_all(&(n as u32).to_le_bytes())?;
+        f.write_all(&(d as u32).to_le_bytes())?;
+        for p in &self.params {
+            write_f32s(&mut f, p)?;
+        }
+        f.write_all(&[has_vel as u8])?;
+        if has_vel {
+            for v in &self.velocities {
+                write_f32s(&mut f, v)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a gossip-pga checkpoint (bad magic)");
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let step = read_u64(&mut f)?;
+        let sim_seconds = read_f64(&mut f)?;
+        let n = read_u32(&mut f)? as usize;
+        let d = read_u32(&mut f)? as usize;
+        anyhow::ensure!(n < 1 << 20 && d < 1 << 31, "implausible checkpoint dims {n}x{d}");
+        let mut params = Vec::with_capacity(n);
+        for _ in 0..n {
+            params.push(read_f32s(&mut f, d)?);
+        }
+        let mut flag = [0u8; 1];
+        f.read_exact(&mut flag)?;
+        let velocities = if flag[0] == 1 {
+            let mut vs = Vec::with_capacity(n);
+            for _ in 0..n {
+                vs.push(read_f32s(&mut f, d)?);
+            }
+            vs
+        } else {
+            Vec::new()
+        };
+        Ok(Checkpoint { step, sim_seconds, params, velocities })
+    }
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    // Bulk-write via byte view (f32 -> LE bytes; LE hosts are a straight copy).
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f64<R: Read>(r: &mut R) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("gpga_ckpt_{}_{name}.bin", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_with_velocities() {
+        let mut rng = Rng::new(1);
+        let ck = Checkpoint {
+            step: 1234,
+            sim_seconds: 56.78,
+            params: (0..3).map(|_| rng.normal_vec(17, 1.0)).collect(),
+            velocities: (0..3).map(|_| rng.normal_vec(17, 0.1)).collect(),
+        };
+        let path = tmp("vel");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn roundtrip_without_velocities() {
+        let ck = Checkpoint {
+            step: 1,
+            sim_seconds: 0.0,
+            params: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            velocities: Vec::new(),
+        };
+        let path = tmp("novel");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let path = tmp("garbage");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_ragged_params() {
+        let ck = Checkpoint {
+            step: 0,
+            sim_seconds: 0.0,
+            params: vec![vec![1.0], vec![1.0, 2.0]],
+            velocities: Vec::new(),
+        };
+        assert!(ck.save(&tmp("ragged")).is_err());
+    }
+}

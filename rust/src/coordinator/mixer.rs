@@ -1,0 +1,359 @@
+//! The gossip-mixing engine: the L3 hot path.
+//!
+//! Applies one communication action to the ensemble of worker parameter
+//! vectors, in place and without per-step allocation (scratch buffers are
+//! owned by the [`Mixer`] and reused). The weighted-sum inner loop is the
+//! rust counterpart of the Pallas `gossip_mix` kernel; equality between the
+//! two is asserted by `rust/tests/integration_runtime.rs`.
+
+use crate::topology::Topology;
+
+/// Reusable mixing engine over `n` workers x `d` parameters.
+pub struct Mixer {
+    n: usize,
+    d: usize,
+    /// Scratch: next-iterate buffers, swapped with worker params after mix.
+    scratch: Vec<Vec<f32>>,
+    /// Cached weight rows per round: rows[round][i] = Vec<(j, w)>.
+    rows: Vec<Vec<Vec<(usize, f32)>>>,
+    rounds: usize,
+    /// Gossip rounds executed so far (advances the time-varying topology).
+    pub gossip_clock: usize,
+}
+
+impl Mixer {
+    pub fn new(topo: &Topology, d: usize) -> Mixer {
+        let n = topo.n;
+        let rounds = topo.rounds();
+        let rows = (0..rounds)
+            .map(|r| {
+                (0..n)
+                    .map(|i| {
+                        topo.weight_row(i, r)
+                            .into_iter()
+                            .map(|(j, w)| (j, w as f32))
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        Mixer { n, d, scratch: vec![vec![0.0; d]; n], rows, rounds, gossip_clock: 0 }
+    }
+
+    /// One gossip round: params[i] <- sum_j w_ij params[j]. Advances the
+    /// topology clock (matters for one-peer exponential graphs).
+    ///
+    /// §Perf: rows of 2 or 3 neighbors (one-peer / ring — the common cases)
+    /// are fused into a single output pass instead of init + (k-1) axpy
+    /// passes: one write traversal of d instead of k, ~1.5x measured (see
+    /// EXPERIMENTS.md §Perf).
+    pub fn gossip(&mut self, params: &mut [Vec<f32>]) {
+        debug_assert_eq!(params.len(), self.n);
+        let round = self.gossip_clock % self.rounds;
+        for i in 0..self.n {
+            let row = &self.rows[round][i];
+            let out = &mut self.scratch[i];
+            match row.len() {
+                1 => out.copy_from_slice(&params[row[0].0]),
+                2 => {
+                    let (j0, w0) = row[0];
+                    let (j1, w1) = row[1];
+                    fused2(w0, &params[j0], w1, &params[j1], out);
+                }
+                3 => {
+                    let (j0, w0) = row[0];
+                    let (j1, w1) = row[1];
+                    let (j2, w2) = row[2];
+                    fused3(w0, &params[j0], w1, &params[j1], w2, &params[j2], out);
+                }
+                _ => {
+                    // General case: init with the first source, accumulate.
+                    let (j0, w0) = row[0];
+                    let src0 = &params[j0];
+                    for (o, s) in out.iter_mut().zip(src0) {
+                        *o = w0 * s;
+                    }
+                    for &(j, w) in &row[1..] {
+                        axpy(w, &params[j], out);
+                    }
+                }
+            }
+        }
+        for (p, s) in params.iter_mut().zip(&mut self.scratch) {
+            std::mem::swap(p, s);
+        }
+        self.gossip_clock += 1;
+    }
+
+    /// One gossip round where each node's *transmitted* vector is
+    /// transformed by `transmit(j, x_j)` (e.g. compressed, see
+    /// [`crate::compress`]); the self term always uses the local copy.
+    /// `params[i] <- w_ii x_i + sum_{j != i} w_ij transmit(j, x_j)`.
+    pub fn gossip_with<F>(&mut self, params: &mut [Vec<f32>], mut transmit: F)
+    where
+        F: FnMut(usize, &[f32]) -> Vec<f32>,
+    {
+        debug_assert_eq!(params.len(), self.n);
+        let round = self.gossip_clock % self.rounds;
+        // Which nodes are actually listened to this round?
+        let mut needed = vec![false; self.n];
+        for i in 0..self.n {
+            for &(j, _) in &self.rows[round][i] {
+                if j != i {
+                    needed[j] = true;
+                }
+            }
+        }
+        let tx: Vec<Option<Vec<f32>>> = (0..self.n)
+            .map(|j| needed[j].then(|| transmit(j, &params[j])))
+            .collect();
+        for i in 0..self.n {
+            let row = &self.rows[round][i];
+            let out = &mut self.scratch[i];
+            out.iter_mut().for_each(|v| *v = 0.0);
+            for &(j, w) in row {
+                let src: &[f32] =
+                    if j == i { &params[i] } else { tx[j].as_deref().expect("needed") };
+                axpy(w, src, out);
+            }
+        }
+        for (p, s) in params.iter_mut().zip(&mut self.scratch) {
+            std::mem::swap(p, s);
+        }
+        self.gossip_clock += 1;
+    }
+
+    /// Exact global average (the All-Reduce step): every worker gets the
+    /// ensemble mean.
+    pub fn global_average(&mut self, params: &mut [Vec<f32>]) {
+        debug_assert_eq!(params.len(), self.n);
+        let (first, rest) = self.scratch.split_first_mut().expect("n >= 1");
+        let mean = first;
+        mean.copy_from_slice(&params[0]);
+        for p in &params[1..] {
+            for (m, v) in mean.iter_mut().zip(p) {
+                *m += v;
+            }
+        }
+        let inv = 1.0 / self.n as f32;
+        for m in mean.iter_mut() {
+            *m *= inv;
+        }
+        for p in params.iter_mut() {
+            p.copy_from_slice(mean);
+        }
+        let _ = rest;
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+}
+
+/// out = w0*a + w1*b in a single pass.
+#[inline]
+pub fn fused2(w0: f32, a: &[f32], w1: f32, b: &[f32], out: &mut [f32]) {
+    debug_assert!(a.len() == out.len() && b.len() == out.len());
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = w0 * x + w1 * y;
+    }
+}
+
+/// out = w0*a + w1*b + w2*c in a single pass (ring row).
+#[inline]
+pub fn fused3(w0: f32, a: &[f32], w1: f32, b: &[f32], w2: f32, c: &[f32], out: &mut [f32]) {
+    debug_assert!(a.len() == out.len() && b.len() == out.len() && c.len() == out.len());
+    for (((o, x), y), z) in out.iter_mut().zip(a).zip(b).zip(c) {
+        *o = w0 * x + w1 * y + w2 * z;
+    }
+}
+
+/// out += a * x, 8-wide unrolled (the hot inner loop; see EXPERIMENTS.md
+/// §Perf for the measured effect vs. the naive zip loop).
+#[inline]
+pub fn axpy(a: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let chunks = x.len() / 8;
+    let (xh, xt) = x.split_at(chunks * 8);
+    let (oh, ot) = out.split_at_mut(chunks * 8);
+    for (xc, oc) in xh.chunks_exact(8).zip(oh.chunks_exact_mut(8)) {
+        oc[0] += a * xc[0];
+        oc[1] += a * xc[1];
+        oc[2] += a * xc[2];
+        oc[3] += a * xc[3];
+        oc[4] += a * xc[4];
+        oc[5] += a * xc[5];
+        oc[6] += a * xc[6];
+        oc[7] += a * xc[7];
+    }
+    for (o, v) in ot.iter_mut().zip(xt) {
+        *o += a * v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::consensus_distance;
+    use crate::rng::Rng;
+
+    fn random_params(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_vec(d, 1.0)).collect()
+    }
+
+    #[test]
+    fn axpy_matches_naive() {
+        let mut rng = Rng::new(1);
+        for len in [0, 1, 7, 8, 9, 100] {
+            let x = rng.normal_vec(len, 1.0);
+            let mut out = rng.normal_vec(len, 1.0);
+            let mut expect = out.clone();
+            for (e, v) in expect.iter_mut().zip(&x) {
+                *e += 0.3 * v;
+            }
+            axpy(0.3, &x, &mut out);
+            assert_eq!(out, expect, "len {len}");
+        }
+    }
+
+    #[test]
+    fn gossip_matches_matrix_multiply() {
+        let topo = Topology::ring(6);
+        let w = topo.weight_matrix(0);
+        let mut params = random_params(6, 4, 2);
+        let expect: Vec<Vec<f32>> = (0..6)
+            .map(|i| {
+                (0..4)
+                    .map(|c| {
+                        (0..6).map(|j| w[(i, j)] as f32 * params[j][c]).sum::<f32>()
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut mixer = Mixer::new(&topo, 4);
+        mixer.gossip(&mut params);
+        for (p, e) in params.iter().zip(&expect) {
+            for (a, b) in p.iter().zip(e) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_preserves_mean() {
+        let topo = Topology::grid(9);
+        let mut params = random_params(9, 16, 3);
+        let mean_before: Vec<f64> = (0..16)
+            .map(|c| params.iter().map(|p| p[c] as f64).sum::<f64>() / 9.0)
+            .collect();
+        let mut mixer = Mixer::new(&topo, 16);
+        for _ in 0..5 {
+            mixer.gossip(&mut params);
+        }
+        for c in 0..16 {
+            let after: f64 = params.iter().map(|p| p[c] as f64).sum::<f64>() / 9.0;
+            assert!((after - mean_before[c]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gossip_contracts_consensus() {
+        let topo = Topology::ring(10);
+        let mut params = random_params(10, 8, 4);
+        let before = consensus_distance(&params);
+        let mut mixer = Mixer::new(&topo, 8);
+        mixer.gossip(&mut params);
+        let after = consensus_distance(&params);
+        assert!(after < before, "{after} !< {before}");
+        // And beta^2 bounds the per-step contraction in expectation-ish:
+        // one deterministic step must satisfy after <= beta^2 * before.
+        let beta = topo.beta();
+        assert!(after <= beta * beta * before * 1.01, "{after} vs {}", beta * beta * before);
+    }
+
+    #[test]
+    fn global_average_zeroes_consensus() {
+        let topo = Topology::ring(7);
+        let mut params = random_params(7, 8, 5);
+        let mut mixer = Mixer::new(&topo, 8);
+        mixer.global_average(&mut params);
+        assert!(consensus_distance(&params) < 1e-10);
+        for p in &params[1..] {
+            assert_eq!(p, &params[0]);
+        }
+    }
+
+    #[test]
+    fn one_peer_expo_full_period_averages_pow2() {
+        // For n = 2^tau, tau one-peer rounds reach exact consensus.
+        let n = 8;
+        let topo = Topology::one_peer_expo(n);
+        let mut params = random_params(n, 4, 6);
+        let mean: Vec<f32> = (0..4)
+            .map(|c| params.iter().map(|p| p[c]).sum::<f32>() / n as f32)
+            .collect();
+        let mut mixer = Mixer::new(&topo, 4);
+        for _ in 0..topo.rounds() {
+            mixer.gossip(&mut params);
+        }
+        for p in &params {
+            for (a, m) in p.iter().zip(&mean) {
+                assert!((a - m).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_with_identity_matches_gossip() {
+        let topo = Topology::grid(9);
+        let params = random_params(9, 16, 8);
+        let mut a = params.clone();
+        let mut b = params.clone();
+        let mut m1 = Mixer::new(&topo, 16);
+        let mut m2 = Mixer::new(&topo, 16);
+        m1.gossip(&mut a);
+        m2.gossip_with(&mut b, |_j, x| x.to_vec());
+        for (pa, pb) in a.iter().zip(&b) {
+            for (x, y) in pa.iter().zip(pb) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_with_compression_stays_near_plain() {
+        use crate::compress::{Codec, Int8};
+        let topo = Topology::ring(6);
+        let params = random_params(6, 256, 9);
+        let mut plain = params.clone();
+        let mut comp = params.clone();
+        let mut m1 = Mixer::new(&topo, 256);
+        let mut m2 = Mixer::new(&topo, 256);
+        m1.gossip(&mut plain);
+        let codec = Int8::default();
+        m2.gossip_with(&mut comp, |_j, x| codec.compress(x).dense);
+        for (pa, pb) in plain.iter().zip(&comp) {
+            for (x, y) in pa.iter().zip(pb) {
+                assert!((x - y).abs() < 0.05, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_topology_is_noop() {
+        // W = I via a 1-node "full" graph per worker is equivalent to Local
+        // SGD's no-comm branch; emulate with ring(1)... instead verify that
+        // a star row with weight 1 on self leaves params unchanged.
+        let topo = Topology::ring(3);
+        let mut mixer = Mixer::new(&topo, 4);
+        // Overwrite cached rows with identity.
+        for i in 0..3 {
+            mixer.rows[0][i] = vec![(i, 1.0)];
+        }
+        let mut params = random_params(3, 4, 7);
+        let before = params.clone();
+        mixer.gossip(&mut params);
+        assert_eq!(params, before);
+    }
+}

@@ -1,0 +1,490 @@
+//! The training coordinator: Algorithm 1 (and its whole family) over n
+//! workers, with the model compute executed through PJRT.
+//!
+//! Per iteration k (the paper's main recursion, eq. (10)):
+//!   1. every worker samples a local minibatch and executes the AOT grad
+//!      graph: `(loss, g_i) = grad(x_i, batch_i)`;
+//!   2. local optimizer update `x_i <- x_i - gamma (momentum) g_i`;
+//!   3. the [`Schedule`] decides the communication action:
+//!      gossip mix, exact global average (ring all-reduce), or nothing;
+//!   4. the [`SimClock`] advances by the alpha-beta cost of the action so a
+//!      single-process run reports paper-style wall-clock columns.
+//!
+//! Workers are deterministic: worker i's batch stream is `seed.split(i)`,
+//! so every experiment is replayable bit-for-bit.
+
+pub mod checkpoint;
+pub mod mixer;
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::algorithms::{schedule_for, AlgorithmKind, CommAction, Schedule, SlowMoParams};
+use crate::config::ExperimentConfig;
+use crate::costmodel::{CostModel, SimClock};
+use crate::data::{ClusterData, LogRegData, TokenCorpus};
+use crate::metrics::{consensus_distance, History, Record};
+use crate::model;
+use crate::optim::{LrSchedule, Optimizer};
+use crate::rng::Rng;
+use crate::runtime::{lit_f32, lit_i32, EvalFn, GradFn, Runtime};
+use crate::topology::Topology;
+
+/// The workload: dataset + AOT executables + batch plumbing.
+pub enum Workload {
+    LogReg { data: LogRegData, grad: GradFn },
+    Mlp { data: ClusterData, grad: GradFn, eval: Option<EvalFn> },
+    Lm { corpus: TokenCorpus, grad: GradFn, eval: Option<EvalFn>, seq_plus_one: usize },
+}
+
+impl Workload {
+    pub fn grad_fn(&self) -> &GradFn {
+        match self {
+            Workload::LogReg { grad, .. } => grad,
+            Workload::Mlp { grad, .. } => grad,
+            Workload::Lm { grad, .. } => grad,
+        }
+    }
+
+    pub fn flat_dim(&self) -> usize {
+        self.grad_fn().flat_dim()
+    }
+
+    fn batch_size(&self) -> usize {
+        self.grad_fn().spec.meta_usize("batch").unwrap_or(32)
+    }
+
+    /// Build this step's batch literals for `worker`.
+    fn sample(&self, worker: usize, rng: &mut Rng, scratch: &mut BatchScratch) -> Result<Vec<xla::Literal>> {
+        match self {
+            Workload::LogReg { data, grad } => {
+                let m = self.batch_size();
+                data.sample_batch(worker, m, rng, &mut scratch.x, &mut scratch.yf);
+                Ok(vec![
+                    lit_f32(&scratch.x, &grad.spec.inputs[1].shape)?,
+                    lit_f32(&scratch.yf, &grad.spec.inputs[2].shape)?,
+                ])
+            }
+            Workload::Mlp { data, grad, .. } => {
+                let m = self.batch_size();
+                data.sample_batch(worker, m, rng, &mut scratch.x, &mut scratch.yi);
+                Ok(vec![
+                    lit_f32(&scratch.x, &grad.spec.inputs[1].shape)?,
+                    lit_i32(&scratch.yi, &grad.spec.inputs[2].shape)?,
+                ])
+            }
+            Workload::Lm { corpus, grad, seq_plus_one, .. } => {
+                let b = self.batch_size();
+                corpus.sample_batch(b, *seq_plus_one, rng, &mut scratch.yi);
+                Ok(vec![lit_i32(&scratch.yi, &grad.spec.inputs[1].shape)?])
+            }
+        }
+    }
+}
+
+#[derive(Default)]
+struct BatchScratch {
+    x: Vec<f32>,
+    yf: Vec<f32>,
+    yi: Vec<i32>,
+}
+
+/// Everything the trainer needs beyond the workload.
+pub struct TrainerOptions {
+    pub algorithm: AlgorithmKind,
+    pub topology: Topology,
+    pub period: usize,
+    pub aga_init_period: usize,
+    pub aga_warmup: usize,
+    pub lr: LrSchedule,
+    pub momentum: f64,
+    pub nesterov: bool,
+    pub seed: u64,
+    pub slowmo: SlowMoParams,
+    /// Cost model for the simulated clock; `cost_dim` lets a small stand-in
+    /// model emulate the paper's full-size model in the time columns
+    /// (e.g. the MLP suite bills communication at ResNet-50's d = 25.5e6).
+    pub cost: CostModel,
+    pub cost_dim: usize,
+    /// Record a metrics row every `log_every` steps (consensus distance is
+    /// O(n d), so dense logging of big models costs time).
+    pub log_every: usize,
+}
+
+impl TrainerOptions {
+    pub fn from_config(cfg: &ExperimentConfig, cost_dim: usize) -> TrainerOptions {
+        TrainerOptions {
+            algorithm: cfg.algorithm,
+            topology: cfg.topology(),
+            period: cfg.period,
+            aga_init_period: cfg.aga_init_period,
+            aga_warmup: cfg.aga_warmup,
+            lr: LrSchedule::StepDecay {
+                lr: cfg.lr,
+                every: cfg.lr_decay_every,
+                factor: cfg.lr_decay_factor,
+            },
+            momentum: cfg.momentum,
+            nesterov: cfg.nesterov,
+            seed: cfg.seed,
+            slowmo: SlowMoParams::default(),
+            cost: CostModel::calibrated_resnet50(),
+            cost_dim,
+            log_every: cfg.log_every,
+        }
+    }
+}
+
+/// Per-worker state.
+struct Worker {
+    params: Vec<f32>,
+    opt: Optimizer,
+    rng: Rng,
+    grad: Vec<f32>,
+    loss: f32,
+}
+
+/// The coordinator.
+pub struct Trainer {
+    pub workload: Workload,
+    opts: TrainerOptions,
+    workers: Vec<Worker>,
+    mixer: mixer::Mixer,
+    schedule: Box<dyn Schedule>,
+    clock: SimClock,
+    /// SlowMo outer state (parameters at last sync + slow momentum buffer).
+    slowmo_prev: Vec<f32>,
+    slowmo_u: Vec<f32>,
+    step: usize,
+    scratch: BatchScratch,
+    /// Parameter matrix view used by the mixer (moved in/out each action).
+    params_buf: Vec<Vec<f32>>,
+}
+
+impl Trainer {
+    pub fn new(workload: Workload, init_params: Vec<f32>, opts: TrainerOptions) -> Trainer {
+        let n = opts.topology.n;
+        let d = workload.flat_dim();
+        assert_eq!(init_params.len(), d, "init params must match flat_dim");
+        let root = Rng::new(opts.seed ^ 0x7EA1);
+        let workers = (0..n)
+            .map(|i| Worker {
+                params: init_params.clone(),
+                opt: if opts.momentum > 0.0 {
+                    Optimizer::momentum_sgd(opts.momentum, opts.nesterov)
+                } else {
+                    Optimizer::sgd()
+                },
+                rng: root.split(i as u64),
+                grad: vec![0.0; d],
+                loss: 0.0,
+            })
+            .collect();
+        let mixer = mixer::Mixer::new(&opts.topology, d);
+        let schedule = schedule_for(opts.algorithm, opts.period, opts.aga_init_period, opts.aga_warmup);
+        let slowmo_prev = if opts.algorithm == AlgorithmKind::SlowMo { init_params.clone() } else { Vec::new() };
+        let slowmo_u = if opts.algorithm == AlgorithmKind::SlowMo { vec![0.0; d] } else { Vec::new() };
+        Trainer {
+            workload,
+            opts,
+            workers,
+            mixer,
+            schedule,
+            clock: SimClock::default(),
+            slowmo_prev,
+            slowmo_u,
+            step: 0,
+            scratch: BatchScratch::default(),
+            params_buf: (0..n).map(|_| vec![0.0; d]).collect(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Mean worker loss at the last executed step.
+    pub fn mean_loss(&self) -> f64 {
+        self.workers.iter().map(|w| w.loss as f64).sum::<f64>() / self.workers.len() as f64
+    }
+
+    /// Average parameters across workers (x-bar), e.g. for evaluation.
+    pub fn mean_params(&self) -> Vec<f32> {
+        let d = self.workers[0].params.len();
+        let mut mean = vec![0.0f32; d];
+        for w in &self.workers {
+            for (m, v) in mean.iter_mut().zip(&w.params) {
+                *m += v;
+            }
+        }
+        let inv = 1.0 / self.workers.len() as f32;
+        mean.iter_mut().for_each(|m| *m *= inv);
+        mean
+    }
+
+    pub fn worker_params(&self, i: usize) -> &[f32] {
+        &self.workers[i].params
+    }
+
+    pub fn sim_seconds(&self) -> f64 {
+        self.clock.seconds
+    }
+
+    pub fn current_period(&self) -> usize {
+        self.schedule.current_period()
+    }
+
+    /// Execute one iteration of Algorithm 1; returns the action taken.
+    pub fn step_once(&mut self) -> Result<CommAction> {
+        let k = self.step;
+        let lr = self.opts.lr.at(k);
+        // 1+2: local gradient + update per worker.
+        for i in 0..self.workers.len() {
+            let batch = {
+                let w = &mut self.workers[i];
+                self.workload.sample(i, &mut w.rng, &mut self.scratch)?
+            };
+            let w = &mut self.workers[i];
+            w.loss = self.workload.grad_fn().call_into(&w.params, batch, &mut w.grad)?;
+            w.opt.step(&mut w.params, &w.grad, lr);
+        }
+        let mean_loss = self.mean_loss();
+        // 3: communication action.
+        let action = self.schedule.action(k, mean_loss);
+        match action {
+            CommAction::None => {}
+            CommAction::Gossip => {
+                self.with_param_matrix(|mixer, params| mixer.gossip(params));
+            }
+            CommAction::GlobalAverage => {
+                self.with_param_matrix(|mixer, params| mixer.global_average(params));
+                if self.opts.algorithm == AlgorithmKind::SlowMo {
+                    self.slowmo_outer_update(lr);
+                }
+            }
+        }
+        // 4: simulated clock.
+        let dt = self.opts.cost.compute
+            + match action {
+                CommAction::None => 0.0,
+                CommAction::Gossip => self.opts.cost.gossip(&self.opts.topology, self.opts.cost_dim),
+                CommAction::GlobalAverage => {
+                    self.opts.cost.all_reduce(self.opts.topology.n, self.opts.cost_dim)
+                }
+            };
+        self.clock.advance(dt);
+        self.step += 1;
+        Ok(action)
+    }
+
+    /// Move worker params into the contiguous matrix, run `f`, move back.
+    fn with_param_matrix<F: FnOnce(&mut mixer::Mixer, &mut [Vec<f32>])>(&mut self, f: F) {
+        for (buf, w) in self.params_buf.iter_mut().zip(&mut self.workers) {
+            std::mem::swap(buf, &mut w.params);
+        }
+        f(&mut self.mixer, &mut self.params_buf);
+        for (buf, w) in self.params_buf.iter_mut().zip(&mut self.workers) {
+            std::mem::swap(buf, &mut w.params);
+        }
+    }
+
+    /// SlowMo (Wang et al. 2019) outer update at a sync point. All workers
+    /// hold the same averaged x at this point.
+    fn slowmo_outer_update(&mut self, lr: f64) {
+        let gamma = lr.max(1e-12) as f32;
+        let beta = self.opts.slowmo.beta as f32;
+        let alpha = self.opts.slowmo.alpha as f32;
+        let avg = self.workers[0].params.clone();
+        for ((u, prev), a) in self.slowmo_u.iter_mut().zip(&mut self.slowmo_prev).zip(&avg) {
+            *u = beta * *u + (*prev - *a) / gamma;
+            *prev -= alpha * gamma * *u;
+        }
+        for w in &mut self.workers {
+            w.params.copy_from_slice(&self.slowmo_prev);
+        }
+    }
+
+    fn consensus(&self) -> f64 {
+        // consensus_distance over a view of worker params.
+        let params: Vec<Vec<f32>> = self.workers.iter().map(|w| w.params.clone()).collect();
+        consensus_distance(&params)
+    }
+
+    /// The paper's plotted quantity: the global objective
+    /// f(x-bar) = (1/n) sum_i f_i(x-bar) evaluated at the AVERAGED
+    /// parameters on a fixed per-node eval batch. (The mean of local
+    /// losses at local params under-reports divergence: drifted workers
+    /// look "better" on their own shards — Definition 1's heterogeneity.)
+    pub fn global_loss(&mut self) -> Result<f64> {
+        let mean = self.mean_params();
+        let d = mean.len();
+        let mut grad_sink = vec![0.0f32; d];
+        let mut total = 0.0f64;
+        let n = self.workers.len();
+        let base = Rng::new(self.opts.seed ^ 0xE7A1_0055);
+        // 4 fixed batches per node: low-noise eval (the transient-stage
+        // gaps live in the 3rd decimal of the convex objective).
+        const EVAL_BATCHES: usize = 4;
+        for i in 0..n {
+            let mut rng = base.split(i as u64); // FIXED eval stream per node
+            for _ in 0..EVAL_BATCHES {
+                let batch = self.workload.sample(i, &mut rng, &mut self.scratch)?;
+                total += self.workload.grad_fn().call_into(&mean, batch, &mut grad_sink)? as f64;
+            }
+        }
+        Ok(total / (n * EVAL_BATCHES) as f64)
+    }
+
+    /// Snapshot the full training state (see [`checkpoint`]).
+    pub fn checkpoint(&self) -> checkpoint::Checkpoint {
+        let velocities: Vec<Vec<f32>> =
+            self.workers.iter().filter_map(|w| w.opt.velocity_buf().map(|v| v.to_vec())).collect();
+        checkpoint::Checkpoint {
+            step: self.step as u64,
+            sim_seconds: self.clock.seconds,
+            params: self.workers.iter().map(|w| w.params.clone()).collect(),
+            velocities: if velocities.len() == self.workers.len() { velocities } else { Vec::new() },
+        }
+    }
+
+    /// Restore a snapshot (params, velocities, step counter, sim clock).
+    /// The workload/data/schedule must match the one the snapshot came
+    /// from; parameter shape is validated.
+    pub fn restore(&mut self, ck: &checkpoint::Checkpoint) -> Result<()> {
+        anyhow::ensure!(ck.params.len() == self.workers.len(), "checkpoint node count");
+        let d = self.workload.flat_dim();
+        anyhow::ensure!(ck.params.iter().all(|p| p.len() == d), "checkpoint flat_dim");
+        for (w, p) in self.workers.iter_mut().zip(&ck.params) {
+            w.params.copy_from_slice(p);
+        }
+        if !ck.velocities.is_empty() {
+            for (w, v) in self.workers.iter_mut().zip(&ck.velocities) {
+                w.opt.set_velocity(v);
+            }
+        }
+        self.step = ck.step as usize;
+        self.clock.seconds = ck.sim_seconds;
+        Ok(())
+    }
+
+    /// Run `steps` iterations, recording metrics every `log_every` steps
+    /// (plus the final step). Returns the history.
+    pub fn run(&mut self, steps: usize, label: &str) -> Result<History> {
+        let mut hist = History::new(label);
+        // Recording f(x-bar) costs one extra grad pass per node; for the
+        // large LM workload the curve uses the (iid) mean train loss
+        // instead.
+        let cheap_eval = !matches!(self.workload, Workload::Lm { .. });
+        for s in 0..steps {
+            self.step_once()?;
+            let last = s + 1 == steps;
+            if s % self.opts.log_every.max(1) == 0 || last {
+                let loss =
+                    if cheap_eval { self.global_loss()? } else { self.mean_loss() };
+                hist.push(Record {
+                    step: self.step - 1,
+                    loss,
+                    consensus: self.consensus(),
+                    lr: self.opts.lr.at(self.step - 1),
+                    sim_seconds: self.clock.seconds,
+                });
+            }
+        }
+        Ok(hist)
+    }
+}
+
+/// Build a logistic-regression workload from the default artifacts
+/// (paper §5.1 experiments).
+pub fn logreg_workload(
+    rt: Rc<Runtime>,
+    n: usize,
+    samples_per_node: usize,
+    non_iid: bool,
+    seed: u64,
+) -> Result<(Workload, Vec<f32>)> {
+    let spec = rt.manifest.find("logreg", "grad", None)?.clone();
+    let grad = GradFn::new(rt, &spec.name)?;
+    let d = spec.flat_dim;
+    let data = LogRegData::generate(n, d, samples_per_node, non_iid, seed);
+    let init = model::logreg_layout(d).init(seed);
+    Ok((Workload::LogReg { data, grad }, init))
+}
+
+/// Build the MLP classification workload (image-classification substitute).
+pub fn mlp_workload(
+    rt: Rc<Runtime>,
+    n: usize,
+    samples_per_node: usize,
+    non_iid: bool,
+    seed: u64,
+) -> Result<(Workload, Vec<f32>)> {
+    let spec = rt.manifest.find("mlp", "grad", None)?.clone();
+    let in_dim = spec.meta_usize("in_dim").unwrap();
+    let hidden = spec.meta_usize("hidden").unwrap();
+    let classes = spec.meta_usize("classes").unwrap();
+    let eval_spec = rt.manifest.find("mlp", "eval", None).ok().cloned();
+    let grad = GradFn::new(rt.clone(), &spec.name)?;
+    let eval = match eval_spec {
+        Some(e) => Some(EvalFn::new(rt, &e.name)?),
+        None => None,
+    };
+    let eval_batch = eval.as_ref().map(|e| e.spec.meta_usize("batch").unwrap_or(256)).unwrap_or(256);
+    let data = ClusterData::generate(n, in_dim, classes, samples_per_node, eval_batch, non_iid, seed);
+    let init = model::mlp_layout(in_dim, hidden, classes).init(seed);
+    Ok((Workload::Mlp { data, grad, eval }, init))
+}
+
+/// Build the LM workload (BERT substitute) for a transformer config tag.
+pub fn lm_workload(rt: Rc<Runtime>, tag: &str, seed: u64) -> Result<(Workload, Vec<f32>)> {
+    let spec = rt.manifest.find("transformer", "grad", Some(tag))?.clone();
+    let cfg = model::TransformerConfig {
+        vocab: spec.meta_usize("vocab").unwrap(),
+        d_model: spec.meta_usize("d_model").unwrap(),
+        n_layers: spec.meta_usize("n_layers").unwrap(),
+        n_heads: spec.meta_usize("n_heads").unwrap(),
+        d_ff: spec.meta_usize("d_ff").unwrap(),
+        seq_len: spec.meta_usize("seq_len").unwrap(),
+    };
+    let eval_spec = rt.manifest.find("transformer", "eval", Some(tag)).ok().cloned();
+    let grad = GradFn::new(rt.clone(), &spec.name)?;
+    let eval = match eval_spec {
+        Some(e) => Some(EvalFn::new(rt, &e.name)?),
+        None => None,
+    };
+    let corpus = TokenCorpus::new(cfg.vocab, 4, seed);
+    let init = model::transformer_layout(&cfg).init(seed);
+    Ok((Workload::Lm { corpus, grad, eval, seq_plus_one: cfg.seq_len + 1 }, init))
+}
+
+/// Evaluate the MLP workload's held-out accuracy at the mean parameters.
+pub fn mlp_eval_accuracy(trainer: &Trainer) -> Result<Option<f32>> {
+    if let Workload::Mlp { data, eval: Some(eval), .. } = &trainer.workload {
+        let mean = trainer.mean_params();
+        let batch = vec![
+            lit_f32(&data.eval_x, &eval.spec.inputs[1].shape)?,
+            lit_i32(&data.eval_y, &eval.spec.inputs[2].shape)?,
+        ];
+        return Ok(Some(eval.call(&mean, &batch)?));
+    }
+    Ok(None)
+}
+
+/// Evaluate the LM workload's held-out loss at the mean parameters.
+pub fn lm_eval_loss(trainer: &Trainer, eval_batches: usize, seed: u64) -> Result<Option<f32>> {
+    if let Workload::Lm { corpus, eval: Some(eval), seq_plus_one, .. } = &trainer.workload {
+        let mean = trainer.mean_params();
+        let b = eval.spec.meta_usize("batch").unwrap_or(8);
+        let mut rng = Rng::new(seed ^ 0xE7A1);
+        let mut toks = Vec::new();
+        let mut total = 0.0f32;
+        for _ in 0..eval_batches {
+            corpus.sample_batch(b, *seq_plus_one, &mut rng, &mut toks);
+            let batch = vec![lit_i32(&toks, &eval.spec.inputs[1].shape)?];
+            total += eval.call(&mean, &batch)?;
+        }
+        return Ok(Some(total / eval_batches as f32));
+    }
+    Ok(None)
+}

@@ -1,0 +1,191 @@
+//! The paper's alpha-beta communication time model (§3.4, Appendix D/H).
+//!
+//! `alpha` = point-to-point latency, `theta` = per-scalar transfer time.
+//! For a d-dimensional model:
+//!
+//! * All-Reduce global average: `2 theta d + n alpha`           (§3.4)
+//! * one gossip round:          `|N_i| theta d + alpha`          (§3.4)
+//! * Gossip-PGA amortized:      gossip + all-reduce / H
+//! * Local SGD amortized:       all-reduce / H
+//!
+//! Constants are calibrated from the paper's own measurements (Appendix H,
+//! Table 17): ResNet-50 (d = 25.5 M): all-reduce 278 ms, gossip 150 ms on a
+//! one-peer graph (|N_i| = 2 incl. self), n = 32 nodes.
+
+use crate::topology::Topology;
+
+/// alpha-beta link model.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Point-to-point latency (seconds).
+    pub alpha: f64,
+    /// Transfer time per f32 scalar (seconds).
+    pub theta: f64,
+    /// Per-iteration compute time (seconds) — added to every algorithm
+    /// uniformly ("both have the same computational overhead per iteration").
+    pub compute: f64,
+}
+
+impl CostModel {
+    /// Calibrated against the paper's Table 17 ResNet-50 row (25 Gbps TCP):
+    /// gossip (one-peer, 2 transfers of d) ~ 150 ms, all-reduce ~ 278 ms,
+    /// compute 146 ms, n = 32, d = 25.5e6.
+    ///
+    /// gossip = 2 theta d + alpha       => theta ~ 150e-3 / (2 * 25.5e6)
+    /// allreduce = 2 theta d + n alpha  => alpha ~ (278 - 150) ms / 32
+    pub fn calibrated_resnet50() -> Self {
+        let d = 25.5e6;
+        let theta = 150e-3 / (2.0 * d);
+        let alpha = (278e-3 - 2.0 * theta * d) / 32.0;
+        CostModel { alpha, theta, compute: 146e-3 }
+    }
+
+    /// Calibrated against the BERT-Large row: gossip 566.5 ms,
+    /// all-reduce 1468.8 ms, compute 445 ms, d = 330e6, n = 8.
+    pub fn calibrated_bert() -> Self {
+        let d = 330e6;
+        let theta = 566.5e-3 / (2.0 * d);
+        let alpha = (1468.8e-3 - 2.0 * theta * d) / 8.0;
+        CostModel { alpha, theta, compute: 445e-3 }
+    }
+
+    /// A generic datacenter-ish model for analytic tables.
+    pub fn generic() -> Self {
+        CostModel { alpha: 1e-4, theta: 3e-9, compute: 0.0 }
+    }
+
+    /// All-Reduce time for a d-dimensional model over n nodes: 2 theta d + n alpha.
+    pub fn all_reduce(&self, n: usize, d: usize) -> f64 {
+        2.0 * self.theta * d as f64 + n as f64 * self.alpha
+    }
+
+    /// One gossip round: |N_i| theta d + alpha, with |N_i| the max
+    /// neighborhood size (paper counts self in |N_i|; the self "transfer"
+    /// is free, so we count transfers = |N_i| - 1 ... the paper's §3.4
+    /// formula uses |N_i| directly; we follow the paper).
+    pub fn gossip(&self, topo: &Topology, d: usize) -> f64 {
+        topo.max_degree_incl_self() as f64 * self.theta * d as f64 + self.alpha
+    }
+
+    /// Per-iteration communication time of each algorithm (amortized).
+    pub fn per_iter(&self, algo: AlgoCost, topo: &Topology, d: usize, h: usize) -> f64 {
+        let n = topo.n;
+        match algo {
+            AlgoCost::Parallel => self.all_reduce(n, d),
+            AlgoCost::Gossip => self.gossip(topo, d),
+            AlgoCost::Local => self.all_reduce(n, d) / h as f64,
+            AlgoCost::GossipPga => self.gossip(topo, d) + self.all_reduce(n, d) / h as f64,
+        }
+    }
+
+    /// Wall-clock time for `iters` iterations including compute.
+    pub fn total_time(&self, algo: AlgoCost, topo: &Topology, d: usize, h: usize, iters: usize) -> f64 {
+        iters as f64 * (self.compute + self.per_iter(algo, topo, d, h))
+    }
+}
+
+/// Communication pattern classes the model distinguishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoCost {
+    Parallel,
+    Gossip,
+    Local,
+    GossipPga,
+}
+
+/// Transient *time* = transient iterations x per-iteration comm time —
+/// the quantity of Tables 5 and 12–14.
+pub fn transient_time(
+    model: &CostModel,
+    algo: AlgoCost,
+    topo: &Topology,
+    d: usize,
+    h: usize,
+    transient_iters: f64,
+) -> f64 {
+    transient_iters * (model.compute + model.per_iter(algo, topo, d, h))
+}
+
+/// A simulated clock that the coordinator advances as it executes; lets a
+/// single-process run report paper-style wall-clock columns.
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    pub seconds: f64,
+}
+
+impl SimClock {
+    pub fn advance(&mut self, dt: f64) {
+        self.seconds += dt;
+    }
+    pub fn hours(&self) -> f64 {
+        self.seconds / 3600.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_reproduces_table17_resnet() {
+        let m = CostModel::calibrated_resnet50();
+        let d = 25_500_000;
+        let ar = m.all_reduce(32, d);
+        assert!((ar - 0.278).abs() < 1e-3, "all-reduce {ar}");
+        // One-peer gossip (degree incl self = 2).
+        let topo = Topology::one_peer_expo(32);
+        let g = m.gossip(&topo, d);
+        assert!((g - 0.150).abs() < 5e-3, "gossip {g}");
+    }
+
+    #[test]
+    fn calibration_reproduces_table17_bert() {
+        let m = CostModel::calibrated_bert();
+        let ar = m.all_reduce(8, 330_000_000);
+        assert!((ar - 1.4688).abs() < 1e-2, "all-reduce {ar}");
+    }
+
+    #[test]
+    fn gossip_cheaper_than_allreduce_at_scale() {
+        // The paper's premise (Table 17): one-peer gossip < all-reduce at
+        // scale — the n*alpha latency term dominates. (On a ring, gossip
+        // moves 3 theta d vs all-reduce's 2 theta d, so the advantage is
+        // specifically a latency advantage; the paper's clusters use the
+        // one-peer exponential graph for deep runs.)
+        let m = CostModel::calibrated_resnet50();
+        let topo = Topology::one_peer_expo(64);
+        let d = 25_000_000;
+        assert!(m.gossip(&topo, d) < m.all_reduce(64, d));
+    }
+
+    #[test]
+    fn pga_amortization_shrinks_with_h() {
+        let m = CostModel::generic();
+        let topo = Topology::ring(32);
+        let d = 1_000_000;
+        let t_h4 = m.per_iter(AlgoCost::GossipPga, &topo, d, 4);
+        let t_h48 = m.per_iter(AlgoCost::GossipPga, &topo, d, 48);
+        assert!(t_h48 < t_h4);
+        // And PGA(H) is bounded below by plain gossip.
+        assert!(t_h48 > m.per_iter(AlgoCost::Gossip, &topo, d, 1));
+    }
+
+    #[test]
+    fn pga_per_iter_cheaper_than_parallel() {
+        // For H >= 2 and reasonable n, PGA's amortized comm < all-reduce.
+        let m = CostModel::calibrated_resnet50();
+        let topo = Topology::one_peer_expo(32);
+        let d = 25_500_000;
+        let pga = m.per_iter(AlgoCost::GossipPga, &topo, d, 6);
+        let par = m.per_iter(AlgoCost::Parallel, &topo, d, 1);
+        assert!(pga < par, "pga {pga} vs parallel {par}");
+    }
+
+    #[test]
+    fn sim_clock_accumulates() {
+        let mut c = SimClock::default();
+        c.advance(1800.0);
+        c.advance(1800.0);
+        assert!((c.hours() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,184 @@
+//! Bench harness substrate: timing, summary statistics and table printing.
+//!
+//! criterion is unavailable offline, so the `benches/` targets (one per
+//! paper table/figure, `harness = false`) use this module: warmup +
+//! repeated measurement, robust stats, and aligned/markdown table output
+//! matching the paper's rows.
+
+pub mod suite;
+
+use std::time::Instant;
+
+/// Summary statistics over a sample of measurements (seconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let pct = |p: f64| xs[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats { n, mean, std: var.sqrt(), min: xs[0], max: xs[n - 1], p50: pct(0.5), p95: pct(0.95) }
+    }
+
+    pub fn fmt_mean(&self) -> String {
+        fmt_duration(self.mean)
+    }
+}
+
+/// Human-friendly duration formatting.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.2} s", secs)
+    } else {
+        format!("{:.2} h", secs / 3600.0)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `iters` measured runs.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    Stats::from_samples(samples)
+}
+
+/// Aligned console table (the benches print paper-style rows with this).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowv(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as a markdown-ish aligned table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let line = |cells: &[String], w: &[usize], out: &mut String| {
+            out.push('|');
+            for (c, width) in cells.iter().zip(w) {
+                out.push_str(&format!(" {:<width$} |", c, width = width));
+            }
+            out.push('\n');
+        };
+        line(&self.headers, &w, &mut out);
+        out.push('|');
+        for width in &w {
+            out.push_str(&format!("{:-<1$}|", "", width + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &w, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float like the paper's tables (2 decimals, or sci for extremes).
+pub fn fmt_f(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1e5 || x.abs() < 1e-3 {
+        format!("{x:.2e}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_known_values() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.std - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measure_runs_and_counts() {
+        let mut count = 0;
+        let s = measure(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Method", "Acc.%"]);
+        t.row(&["Parallel SGD".into(), "76.26".into()]);
+        t.row(&["Gossip-PGA".into(), "76.28".into()]);
+        let r = t.render();
+        assert!(r.contains("| Method"));
+        assert!(r.lines().count() == 4);
+        // All lines same length (alignment).
+        let lens: Vec<usize> = r.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn fmt_duration_bands() {
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-5).ends_with("µs"));
+        assert!(fmt_duration(5e-2).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with(" s"));
+        assert!(fmt_duration(7200.0).ends_with(" h"));
+    }
+}

@@ -1,0 +1,201 @@
+//! Shared experiment-suite plumbing for the `benches/` targets (one bench
+//! per paper table/figure). Each bench assembles rows from these helpers so
+//! the workload wiring lives in one place.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::algorithms::AlgorithmKind;
+use crate::coordinator::{
+    lm_eval_loss, lm_workload, logreg_workload, mlp_eval_accuracy, mlp_workload, Trainer,
+    TrainerOptions,
+};
+use crate::costmodel::CostModel;
+use crate::metrics::History;
+use crate::optim::LrSchedule;
+use crate::runtime::Runtime;
+use crate::topology::Topology;
+
+/// Scale factor for bench step counts: set `GOSSIP_PGA_FAST=1` to run the
+/// suite at 1/4 scale (single-core CI), default full scale.
+pub fn step_scale(steps: usize) -> usize {
+    if std::env::var("GOSSIP_PGA_FAST").is_ok() {
+        (steps / 4).max(10)
+    } else {
+        steps
+    }
+}
+
+/// One experiment specification shared by the suites.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub algo: AlgorithmKind,
+    pub topology: Topology,
+    pub h: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub non_iid: bool,
+    pub lr: LrSchedule,
+    pub momentum: f64,
+    pub log_every: usize,
+    /// Cost model + emulated model size for the simulated clock.
+    pub cost: CostModel,
+    pub cost_dim: usize,
+    pub aga_init: usize,
+    pub aga_warmup: usize,
+}
+
+impl RunSpec {
+    /// Defaults for the convex §5.1 experiments (Figs. 1/4-7).
+    pub fn logreg(algo: AlgorithmKind, topology: Topology, h: usize, non_iid: bool, steps: usize) -> RunSpec {
+        RunSpec {
+            algo,
+            topology,
+            h,
+            steps,
+            seed: 42,
+            non_iid,
+            // Paper §5.1: gamma = 0.2, halved every 1000 iterations.
+            lr: LrSchedule::StepDecay { lr: 0.2, every: 1000, factor: 0.5 },
+            momentum: 0.0,
+            log_every: 20,
+            cost: CostModel::calibrated_resnet50(),
+            cost_dim: 25_500_000,
+            aga_init: 4,
+            aga_warmup: 50,
+        }
+    }
+
+    /// Defaults for the image-classification substitute (Tables 7-10, 15-16).
+    pub fn image(algo: AlgorithmKind, topology: Topology, h: usize, steps: usize) -> RunSpec {
+        RunSpec {
+            algo,
+            topology,
+            h,
+            steps,
+            seed: 42,
+            non_iid: false,
+            lr: LrSchedule::WarmupMilestones {
+                lr: 0.2,
+                warmup: steps / 20,
+                milestones: vec![steps / 4, steps / 2, steps * 3 / 4],
+                factor: 0.1,
+            },
+            momentum: 0.9,
+            log_every: 10,
+            cost: CostModel::calibrated_resnet50(),
+            cost_dim: 25_500_000, // bill comms as ResNet-50
+            aga_init: 4,
+            aga_warmup: steps / 20,
+        }
+    }
+
+    /// Defaults for the LM substitute (Table 11 / Fig. 3).
+    pub fn lm(algo: AlgorithmKind, topology: Topology, h: usize, steps: usize) -> RunSpec {
+        RunSpec {
+            algo,
+            topology,
+            h,
+            steps,
+            seed: 42,
+            non_iid: false,
+            lr: LrSchedule::WarmupPoly { lr: 0.5, warmup: steps / 20, total: steps, power: 1.0 },
+            momentum: 0.9,
+            log_every: 10,
+            cost: CostModel::calibrated_bert(),
+            cost_dim: 330_000_000, // bill comms as BERT-Large
+            aga_init: 4,
+            aga_warmup: steps / 20,
+        }
+    }
+
+    fn options(&self) -> TrainerOptions {
+        TrainerOptions {
+            algorithm: self.algo,
+            topology: self.topology.clone(),
+            period: self.h,
+            aga_init_period: self.aga_init,
+            aga_warmup: self.aga_warmup,
+            lr: self.lr.clone(),
+            momentum: self.momentum,
+            nesterov: self.momentum > 0.0,
+            seed: self.seed,
+            slowmo: Default::default(),
+            cost: self.cost,
+            cost_dim: self.cost_dim,
+            log_every: self.log_every,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{} (H={})", self.algo.display(), self.h)
+    }
+}
+
+/// Run the §5.1 logistic-regression experiment; returns the loss history.
+pub fn run_logreg(rt: Rc<Runtime>, spec: &RunSpec, samples_per_node: usize) -> Result<History> {
+    let (workload, init) = logreg_workload(rt, spec.topology.n, samples_per_node, spec.non_iid, spec.seed)?;
+    let mut trainer = Trainer::new(workload, init, spec.options());
+    trainer.run(spec.steps, &spec.label())
+}
+
+/// Image-suite result row.
+pub struct ImageResult {
+    pub history: History,
+    pub accuracy: f32,
+    pub sim_hours: f64,
+    pub final_period: usize,
+}
+
+/// Run the MLP classification suite; returns curve + eval accuracy + time.
+pub fn run_image(rt: Rc<Runtime>, spec: &RunSpec, samples_per_node: usize) -> Result<ImageResult> {
+    let (workload, init) = mlp_workload(rt, spec.topology.n, samples_per_node, spec.non_iid, spec.seed)?;
+    let mut trainer = Trainer::new(workload, init, spec.options());
+    let history = trainer.run(spec.steps, &spec.label())?;
+    let accuracy = mlp_eval_accuracy(&trainer)?.unwrap_or(f32::NAN);
+    Ok(ImageResult {
+        accuracy,
+        sim_hours: trainer.sim_seconds() / 3600.0,
+        final_period: trainer.current_period(),
+        history,
+    })
+}
+
+/// LM-suite result row.
+pub struct LmResult {
+    pub history: History,
+    pub eval_loss: f32,
+    pub sim_hours: f64,
+}
+
+/// Run the transformer-LM suite on a config tag ("tiny" for benches).
+pub fn run_lm(rt: Rc<Runtime>, spec: &RunSpec, tag: &str) -> Result<LmResult> {
+    let (workload, init) = lm_workload(rt, tag, spec.seed)?;
+    let mut trainer = Trainer::new(workload, init, spec.options());
+    let history = trainer.run(spec.steps, &spec.label())?;
+    let eval_loss = lm_eval_loss(&trainer, 4, spec.seed)?.unwrap_or(f32::NAN);
+    Ok(LmResult { history, eval_loss, sim_hours: trainer.sim_seconds() / 3600.0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_scale_fast_mode() {
+        std::env::remove_var("GOSSIP_PGA_FAST");
+        assert_eq!(step_scale(800), 800);
+    }
+
+    #[test]
+    fn specs_build_options() {
+        let s = RunSpec::logreg(AlgorithmKind::GossipPga, Topology::ring(8), 16, true, 100);
+        let o = s.options();
+        assert_eq!(o.period, 16);
+        let s = RunSpec::image(AlgorithmKind::Parallel, Topology::one_peer_expo(8), 1, 200);
+        assert!(s.momentum > 0.0);
+        let s = RunSpec::lm(AlgorithmKind::GossipAga, Topology::one_peer_expo(8), 6, 200);
+        assert_eq!(s.cost_dim, 330_000_000);
+    }
+}

@@ -1,0 +1,83 @@
+//! # gossip-pga
+//!
+//! Production-style reproduction of **"Accelerating Gossip SGD with Periodic
+//! Global Averaging"** (Chen, Yuan et al., ICML 2021) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! This crate is Layer 3: the distributed-training *coordinator*. It owns
+//! the cluster topology, the gossip / all-reduce collectives, the
+//! communication-schedule policies (Parallel SGD, Gossip SGD, Local SGD,
+//! Gossip-PGA, Gossip-AGA, SlowMo), the optimizers, the metrics and the
+//! launcher CLI. Model compute (loss + gradient) is AOT-compiled from
+//! JAX/Pallas into XLA HLO at build time (`make artifacts`) and executed
+//! through PJRT ([`runtime`]); Python never runs on the training path.
+//!
+//! ## Layout
+//!
+//! Substrates (everything is built in-repo — the offline vendor set only
+//! provides `xla` + `anyhow`):
+//! * [`rng`] — splitmix64 / xoshiro256** PRNGs + distributions.
+//! * [`linalg`] — dense matrices, power iteration for the spectral gap.
+//! * [`jsonio`] — JSON parser/writer (artifact manifest, metrics dumps).
+//! * [`config`] — TOML-subset experiment config system.
+//! * [`topology`] — graphs, doubly-stochastic gossip matrices, beta.
+//! * [`collective`] — in-proc message bus, neighbor exchange, ring
+//!   all-reduce (reduce-scatter + all-gather), byte/latency accounting.
+//! * [`costmodel`] — the paper's alpha-beta communication time model (§3.4,
+//!   App. D/H).
+//! * [`harness`] — timing/stats/table printing for the bench suite.
+//! * [`proptest`] — a minimal randomized-property test kit.
+//!
+//! Core:
+//! * [`runtime`] — PJRT client + artifact registry (loads `artifacts/`).
+//! * [`model`] — rust-side model descriptors mirrored from the manifest.
+//! * [`data`] — synthetic datasets (paper §5.1 logistic data, cluster
+//!   classification, token corpus) + iid/non-iid sharding.
+//! * [`optim`] — SGD / momentum / Nesterov + LR schedules.
+//! * [`algorithms`] — the paper's communication schedules.
+//! * [`coordinator`] — the per-step training pipeline over n workers.
+//! * [`metrics`] — loss curves, consensus distance, transient-stage
+//!   detection, reporters.
+
+pub mod algorithms;
+pub mod collective;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod harness;
+pub mod jsonio;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod proptest;
+pub mod rng;
+pub mod runtime;
+pub mod topology;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default location of AOT artifacts relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory from the current working directory or the
+/// `GOSSIP_PGA_ARTIFACTS` environment variable (tests and benches run from
+/// various target dirs).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("GOSSIP_PGA_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return ARTIFACTS_DIR.into();
+        }
+    }
+}

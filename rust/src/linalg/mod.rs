@@ -1,0 +1,258 @@
+//! Dense linear algebra substrate.
+//!
+//! Just enough for the paper's spectral machinery: row-major [`Mat`],
+//! matvec/matmul, norms, and deflated power iteration to compute
+//! `beta = ||W - (1/n) 11^T||_2` (Assumption 3 / Remark 1) for any gossip
+//! matrix. No external BLAS — n here is the *node count* (<= a few hundred),
+//! not the model dimension.
+
+use crate::rng::Rng;
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// The averaging matrix (1/n) 11^T.
+    pub fn avg(n: usize) -> Self {
+        Mat { rows: n, cols: n, data: vec![1.0 / n as f64; n * n] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Mat { rows: r, cols: c, data: rows.into_iter().flatten().collect() }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// C = A B.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows);
+        let mut c = Mat::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += a * bv;
+                }
+            }
+        }
+        c
+    }
+
+    /// A - B.
+    pub fn sub(&self, b: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (b.rows, b.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&b.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |row sum - 1| — doubly-stochastic check helper.
+    pub fn row_sum_err(&self) -> f64 {
+        (0..self.rows)
+            .map(|i| (self.row(i).iter().sum::<f64>() - 1.0).abs())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn col_sum_err(&self) -> f64 {
+        let mut worst: f64 = 0.0;
+        for j in 0..self.cols {
+            let s: f64 = (0..self.rows).map(|i| self[(i, j)]).sum();
+            worst = worst.max((s - 1.0).abs());
+        }
+        worst
+    }
+
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                if (self[(i, j)] - self[(j, i)]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+fn norm2(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Largest singular value of A via power iteration on A^T A.
+///
+/// Deterministic start vector derived from `seed`; converges to |sigma_max|
+/// within `tol` (relative) or `max_iter` iterations.
+pub fn spectral_norm(a: &Mat, seed: u64) -> f64 {
+    let at = a.transpose();
+    let mut rng = Rng::new(seed);
+    let mut v: Vec<f64> = (0..a.cols).map(|_| rng.normal()).collect();
+    let n = norm2(&v).max(1e-300);
+    v.iter_mut().for_each(|x| *x /= n);
+    let mut lambda = 0.0;
+    for _ in 0..2000 {
+        let w = at.matvec(&a.matvec(&v)); // A^T A v
+        let nw = norm2(&w);
+        if nw < 1e-300 {
+            return 0.0;
+        }
+        let new_lambda = nw;
+        v = w.iter().map(|x| x / nw).collect();
+        if (new_lambda - lambda).abs() <= 1e-12 * new_lambda.max(1.0) {
+            lambda = new_lambda;
+            break;
+        }
+        lambda = new_lambda;
+    }
+    lambda.sqrt()
+}
+
+/// `beta = ||W - (1/n) 11^T||_2` — the paper's connectivity measure.
+pub fn beta_of(w: &Mat) -> f64 {
+    assert_eq!(w.rows, w.cols);
+    let deflated = w.sub(&Mat::avg(w.rows));
+    spectral_norm(&deflated, 0x5EED)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_identity() {
+        let i3 = Mat::eye(3);
+        assert_eq!(i3.matvec(&[1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(vec![vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn spectral_norm_diagonal() {
+        let mut d = Mat::eye(4);
+        d[(2, 2)] = -3.5; // largest singular value 3.5
+        assert!((spectral_norm(&d, 1) - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spectral_norm_rank_one() {
+        // ||u v^T||_2 = |u| |v|
+        let u = [1.0, 2.0];
+        let v = [3.0, 4.0];
+        let mut a = Mat::zeros(2, 2);
+        for i in 0..2 {
+            for j in 0..2 {
+                a[(i, j)] = u[i] * v[j];
+            }
+        }
+        let expect = (5.0f64).sqrt() * 5.0;
+        assert!((spectral_norm(&a, 2) - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn beta_of_full_averaging_is_zero() {
+        // W = (1/n)11^T => W - avg = 0 => beta = 0.
+        assert!(beta_of(&Mat::avg(8)) < 1e-9);
+    }
+
+    #[test]
+    fn beta_of_identity_is_one() {
+        // W = I: null(I-W) is all of R^n but beta = ||I - avg|| = 1.
+        assert!((beta_of(&Mat::eye(6)) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_col_sums() {
+        let a = Mat::avg(5);
+        assert!(a.row_sum_err() < 1e-12);
+        assert!(a.col_sum_err() < 1e-12);
+        assert!(a.is_symmetric(1e-12));
+    }
+}

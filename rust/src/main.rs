@@ -1,0 +1,182 @@
+//! `gossip-pga` — launcher CLI.
+//!
+//! Subcommands:
+//!   train [--config exp.toml] [--set key=value ...]   run one experiment
+//!   topo  [--n N]                                     topology/beta report
+//!   check                                             verify artifacts load
+//!
+//! (clap is unavailable offline; flags are parsed by the tiny parser below.)
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+use gossip_pga::config::{ExperimentConfig, Toml};
+use gossip_pga::coordinator::{self, TrainerOptions};
+use gossip_pga::costmodel::CostModel;
+use gossip_pga::harness::Table;
+use gossip_pga::runtime::Runtime;
+use gossip_pga::topology::{spectral, Topology};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("topo") => cmd_topo(&args[1..]),
+        Some("check") => cmd_check(),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}' (try 'help')"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "gossip-pga — Gossip SGD with Periodic Global Averaging (ICML 2021)\n\
+         \n\
+         USAGE:\n\
+           gossip-pga train [--config exp.toml] [--set key=value ...]\n\
+           gossip-pga topo [--n N]\n\
+           gossip-pga check\n\
+         \n\
+         Config keys (TOML paths, also usable with --set):\n\
+           cluster.nodes, cluster.topology (ring|grid|star|full|expo|one-peer-expo)\n\
+           algorithm.name (parallel|gossip|local|pga|aga|slowmo), algorithm.period\n\
+           model.name (logreg|mlp|transformer), model.tag (tiny|e2e)\n\
+           train.steps, train.lr, train.momentum, train.seed, data.non_iid"
+    );
+}
+
+/// Parse `--flag value` pairs; returns (flags, leftovers).
+fn parse_flags(args: &[String]) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            let val = args.get(i + 1).ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?;
+            out.push((name.to_string(), val.clone()));
+            i += 2;
+        } else {
+            bail!("unexpected argument '{a}'");
+        }
+    }
+    Ok(out)
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args)?;
+    let mut doc = Toml::default();
+    for (name, val) in &flags {
+        match name.as_str() {
+            "config" => {
+                doc = Toml::load(std::path::Path::new(val))?;
+            }
+            "set" => {
+                let (k, v) = val
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("--set wants key=value, got '{val}'"))?;
+                let parsed = Toml::parse(&format!("{k} = {v}"))
+                    .or_else(|_| Toml::parse(&format!("{k} = \"{v}\"")))?;
+                doc.values.extend(parsed.values);
+            }
+            other => bail!("unknown flag --{other}"),
+        }
+    }
+    let cfg = ExperimentConfig::from_toml(&doc).context("building experiment config")?;
+    let topo = cfg.topology();
+    println!(
+        "# {} | {} nodes on {} (beta = {:.4}) | H = {} | {} steps",
+        cfg.algorithm.display(),
+        cfg.nodes,
+        cfg.topology,
+        topo.beta(),
+        cfg.period,
+        cfg.steps
+    );
+
+    let rt = Rc::new(Runtime::load_default().context("loading artifacts (run `make artifacts`)")?);
+    let (workload, init) = match cfg.model.as_str() {
+        "logreg" => coordinator::logreg_workload(rt, cfg.nodes, cfg.samples_per_node, cfg.non_iid, cfg.seed)?,
+        "mlp" => coordinator::mlp_workload(rt, cfg.nodes, cfg.samples_per_node, cfg.non_iid, cfg.seed)?,
+        "transformer" => coordinator::lm_workload(rt, &cfg.model_tag, cfg.seed)?,
+        other => bail!("unknown model '{other}'"),
+    };
+    let cost_dim = workload.flat_dim();
+    let mut opts = TrainerOptions::from_config(&cfg, cost_dim);
+    opts.cost = CostModel::calibrated_resnet50();
+    let mut trainer = coordinator::Trainer::new(workload, init, opts);
+
+    let t0 = std::time::Instant::now();
+    let hist = trainer.run(cfg.steps, cfg.algorithm.name())?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    for r in &hist.records {
+        println!(
+            "step {:>6}  loss {:.5}  consensus {:.3e}  lr {:.4}  sim_t {:.1}s",
+            r.step, r.loss, r.consensus, r.lr, r.sim_seconds
+        );
+    }
+    println!(
+        "# done: final loss {:.5} | sim time {:.2} h | wall {:.1}s | final H {}",
+        hist.final_loss(),
+        hist.final_sim_hours(),
+        wall,
+        trainer.current_period()
+    );
+    if let Some(acc) = coordinator::mlp_eval_accuracy(&trainer)? {
+        println!("# eval accuracy: {:.2}%", acc * 100.0);
+    }
+    if let Some(loss) = coordinator::lm_eval_loss(&trainer, 4, cfg.seed)? {
+        println!("# eval LM loss: {loss:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_topo(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args)?;
+    let n: usize = flags
+        .iter()
+        .find(|(k, _)| k == "n")
+        .map(|(_, v)| v.parse())
+        .transpose()?
+        .unwrap_or(32);
+    let mut t = Table::new(&["topology", "beta", "1-beta", "C_beta(H=16)", "D_beta(H=16)", "regime"]);
+    for name in ["ring", "grid", "star", "expo", "one-peer-expo", "full"] {
+        let topo = Topology::from_name(name, n)?;
+        let beta = topo.beta();
+        t.rowv(vec![
+            name.to_string(),
+            format!("{beta:.5}"),
+            format!("{:.2e}", 1.0 - beta),
+            format!("{:.3}", spectral::c_beta(beta, 16)),
+            format!("{:.3}", spectral::d_beta(beta, 16)),
+            format!("{:?}", spectral::regime(beta, 16)),
+        ]);
+    }
+    println!("n = {n}");
+    t.print();
+    Ok(())
+}
+
+fn cmd_check() -> Result<()> {
+    let rt = Runtime::load_default()?;
+    println!("artifacts dir: {}", rt.manifest.dir.display());
+    let mut t = Table::new(&["artifact", "model", "kind", "flat_dim", "compiles"]);
+    let names: Vec<String> = rt.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+    for name in names {
+        let a = rt.manifest.by_name(&name)?.clone();
+        let ok = rt.executable(&name).map(|_| "yes").unwrap_or("NO");
+        t.rowv(vec![a.name, a.model, a.kind, a.flat_dim.to_string(), ok.to_string()]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,263 @@
+//! Metrics: loss curves, consensus distance, transient-stage detection and
+//! reporters (CSV / JSON / console).
+//!
+//! The transient stage (paper §1.1) is "the iterations before an algorithm
+//! reaches its linear-speedup stage"; empirically (Fig. 1 caption) it is
+//! measured by "counting iterations before an algorithm exactly matches the
+//! convergence curve of Parallel SGD". [`transient_stage`] implements that
+//! detector: the last iteration after which the algorithm's curve stays
+//! within a relative `tol` band of the parallel-SGD reference.
+
+use crate::jsonio::{self, Json};
+
+/// One logged training step.
+#[derive(Clone, Copy, Debug)]
+pub struct Record {
+    pub step: usize,
+    /// Mean training loss across workers.
+    pub loss: f64,
+    /// Consensus distance (1/n) sum_i ||x_i - x_bar||^2.
+    pub consensus: f64,
+    pub lr: f64,
+    /// Simulated wall-clock (cost-model) seconds since start.
+    pub sim_seconds: f64,
+}
+
+/// A training history for one run.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub label: String,
+    pub records: Vec<Record>,
+}
+
+impl History {
+    pub fn new(label: impl Into<String>) -> History {
+        History { label: label.into(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: Record) {
+        self.records.push(r);
+    }
+
+    pub fn losses(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.loss).collect()
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.records.last().map_or(f64::NAN, |r| r.loss)
+    }
+
+    pub fn final_sim_hours(&self) -> f64 {
+        self.records.last().map_or(0.0, |r| r.sim_seconds / 3600.0)
+    }
+
+    /// First step whose loss falls at or below `target` (paper's
+    /// "epochs/hrs to 76%" columns); None if never reached.
+    pub fn first_step_below(&self, target: f64) -> Option<&Record> {
+        self.records.iter().find(|r| r.loss <= target)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,loss,consensus,lr,sim_seconds\n");
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                r.step, r.loss, r.consensus, r.lr, r.sim_seconds
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        jsonio::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("steps", jsonio::num_arr(&self.records.iter().map(|r| r.step as f64).collect::<Vec<_>>())),
+            ("loss", jsonio::num_arr(&self.losses())),
+            (
+                "consensus",
+                jsonio::num_arr(&self.records.iter().map(|r| r.consensus).collect::<Vec<_>>()),
+            ),
+            (
+                "sim_seconds",
+                jsonio::num_arr(&self.records.iter().map(|r| r.sim_seconds).collect::<Vec<_>>()),
+            ),
+        ])
+    }
+
+    pub fn write_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Consensus distance (1/n) sum_i ||x_i - x_bar||^2 over worker params.
+pub fn consensus_distance(params: &[Vec<f32>]) -> f64 {
+    let n = params.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let d = params[0].len();
+    let mut mean = vec![0.0f64; d];
+    for p in params {
+        for (m, v) in mean.iter_mut().zip(p) {
+            *m += *v as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut total = 0.0;
+    for p in params {
+        for (m, v) in mean.iter().zip(p) {
+            let diff = *v as f64 - m;
+            total += diff * diff;
+        }
+    }
+    total / n as f64
+}
+
+/// Empirical transient stage: smallest t such that for every logged step
+/// >= t the candidate's loss is within `tol` (relative) of the reference
+/// (Parallel SGD) loss at the same step. Both histories must be logged on
+/// the same step grid. Returns `None` if the curves never merge.
+pub fn transient_stage(candidate: &[f64], reference: &[f64], tol: f64) -> Option<usize> {
+    assert_eq!(candidate.len(), reference.len(), "histories on different grids");
+    let n = candidate.len();
+    if n == 0 {
+        return None;
+    }
+    // Walk backwards: find the last index that is OUT of the band.
+    let mut last_bad = None;
+    for i in (0..n).rev() {
+        let r = reference[i].abs().max(1e-12);
+        if (candidate[i] - reference[i]).abs() / r > tol {
+            last_bad = Some(i);
+            break;
+        }
+    }
+    match last_bad {
+        None => Some(0),
+        Some(i) if i + 1 < n => Some(i + 1),
+        Some(_) => None, // still diverged at the end
+    }
+}
+
+/// Progress-scaled transient detector: the band is `frac` of the
+/// reference's TOTAL progress (initial loss - floor) rather than relative
+/// to the loss value — robust when the objective plateaus high (non-iid
+/// floors near ln 2) and the method gaps live in the last decimals.
+/// Returns the first index after which the candidate stays inside the band.
+pub fn transient_stage_scaled(candidate: &[f64], reference: &[f64], frac: f64) -> Option<usize> {
+    assert_eq!(candidate.len(), reference.len());
+    let n = reference.len();
+    if n == 0 {
+        return None;
+    }
+    let floor = reference
+        .iter()
+        .chain(candidate.iter())
+        .fold(f64::INFINITY, |m, &x| m.min(x));
+    let progress = (reference[0] - floor).max(1e-12);
+    let band = frac * progress;
+    let mut last_bad = None;
+    for i in (0..n).rev() {
+        if (candidate[i] - reference[i]).abs() > band {
+            last_bad = Some(i);
+            break;
+        }
+    }
+    match last_bad {
+        None => Some(0),
+        Some(i) if i + 1 < n => Some(i + 1),
+        Some(_) => None,
+    }
+}
+
+/// Smooth a curve with a trailing moving average (stabilizes the detector
+/// against minibatch noise before comparing runs).
+pub fn smooth(xs: &[f64], window: usize) -> Vec<f64> {
+    let w = window.max(1);
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = 0.0;
+    for i in 0..xs.len() {
+        acc += xs[i];
+        if i >= w {
+            acc -= xs[i - w];
+        }
+        out.push(acc / (i.min(w - 1) + 1) as f64);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consensus_zero_when_equal() {
+        let p = vec![vec![1.0f32, 2.0]; 5];
+        assert!(consensus_distance(&p) < 1e-12);
+    }
+
+    #[test]
+    fn consensus_known_value() {
+        // two workers at +-1 around mean 0: each ||x_i - x_bar||^2 = d.
+        let p = vec![vec![1.0f32; 4], vec![-1.0f32; 4]];
+        assert!((consensus_distance(&p) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transient_detects_merge_point() {
+        // Candidate is off by 50% until step 10, then identical.
+        let reference: Vec<f64> = (0..50).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let mut candidate = reference.clone();
+        for i in 0..10 {
+            candidate[i] *= 1.5;
+        }
+        assert_eq!(transient_stage(&candidate, &reference, 0.05), Some(10));
+    }
+
+    #[test]
+    fn transient_zero_when_identical() {
+        let r: Vec<f64> = (0..20).map(|i| (i as f64).exp().recip()).collect();
+        assert_eq!(transient_stage(&r, &r, 0.01), Some(0));
+    }
+
+    #[test]
+    fn transient_none_when_diverged() {
+        let reference = vec![1.0; 20];
+        let candidate = vec![2.0; 20];
+        assert_eq!(transient_stage(&candidate, &reference, 0.05), None);
+    }
+
+    #[test]
+    fn smooth_flattens_noise() {
+        let noisy: Vec<f64> = (0..100).map(|i| 1.0 + if i % 2 == 0 { 0.1 } else { -0.1 }).collect();
+        let s = smooth(&noisy, 10);
+        assert!(s[50..].iter().all(|&x| (x - 1.0).abs() < 0.02));
+    }
+
+    #[test]
+    fn history_csv_and_target() {
+        let mut h = History::new("test");
+        for i in 0..5 {
+            h.push(Record {
+                step: i,
+                loss: 1.0 / (i + 1) as f64,
+                consensus: 0.0,
+                lr: 0.1,
+                sim_seconds: i as f64,
+            });
+        }
+        assert_eq!(h.first_step_below(0.35).unwrap().step, 2);
+        assert!(h.first_step_below(0.0).is_none());
+        let csv = h.to_csv();
+        assert_eq!(csv.lines().count(), 6);
+        assert!(csv.starts_with("step,loss"));
+        let j = h.to_json().dump();
+        assert!(j.contains("\"label\":\"test\""));
+    }
+}

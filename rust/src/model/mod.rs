@@ -1,0 +1,218 @@
+//! Rust-side model descriptors: flat-parameter layouts mirrored from the
+//! Python L2 definitions, used to initialize worker parameters without
+//! touching Python at runtime.
+//!
+//! The layouts are reconstructed from the manifest's hyper-parameter meta
+//! and cross-checked against its `flat_dim` (tests + a hard assert in the
+//! constructors), so a drift between `python/compile/*.py` and this module
+//! fails loudly instead of silently mis-initializing.
+
+use crate::rng::Rng;
+
+/// One tensor entry in a flat layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl Entry {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Init style per tensor, mirroring python's initializers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Init {
+    Zero,
+    One,
+    /// N(0, scale^2)
+    Normal(f64),
+}
+
+/// A flat-parameter layout.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub entries: Vec<Entry>,
+    inits: Vec<Init>,
+    pub dim: usize,
+}
+
+impl Layout {
+    fn build(specs: Vec<(String, Vec<usize>, Init)>) -> Layout {
+        let mut entries = Vec::with_capacity(specs.len());
+        let mut inits = Vec::with_capacity(specs.len());
+        let mut offset = 0;
+        for (name, shape, init) in specs {
+            let size: usize = shape.iter().product();
+            entries.push(Entry { name, shape, offset });
+            inits.push(init);
+            offset += size;
+        }
+        Layout { entries, inits, dim: offset }
+    }
+
+    /// Initialize a flat parameter vector (identical across workers, per
+    /// Algorithm 1's requirement that x_i^(0) be equal).
+    pub fn init(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut flat = vec![0.0f32; self.dim];
+        for (e, init) in self.entries.iter().zip(&self.inits) {
+            let slice = &mut flat[e.offset..e.offset + e.size()];
+            match init {
+                Init::Zero => {}
+                Init::One => slice.fill(1.0),
+                Init::Normal(scale) => {
+                    for v in slice.iter_mut() {
+                        *v = (rng.normal() * scale) as f32;
+                    }
+                }
+            }
+        }
+        flat
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+/// Logistic regression: a single (d,) weight vector, zero-initialized
+/// (paper §5.1 starts all runs from the same point).
+pub fn logreg_layout(d: usize) -> Layout {
+    Layout::build(vec![("w".into(), vec![d], Init::Zero)])
+}
+
+/// The 2-layer MLP classifier, mirroring `python/compile/model.MlpLayout`.
+pub fn mlp_layout(in_dim: usize, hidden: usize, classes: usize) -> Layout {
+    Layout::build(vec![
+        ("w1".into(), vec![in_dim, hidden], Init::Normal(1.0 / (in_dim as f64).sqrt())),
+        ("b1".into(), vec![hidden], Init::Zero),
+        ("w2".into(), vec![hidden, classes], Init::Normal(1.0 / (hidden as f64).sqrt())),
+        ("b2".into(), vec![classes], Init::Zero),
+    ])
+}
+
+/// Transformer hyper-parameters (mirrors `transformer.TransformerConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct TransformerConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+}
+
+/// The decoder-only LM, mirroring `transformer.TransformerLayout`.
+pub fn transformer_layout(cfg: &TransformerConfig) -> Layout {
+    let d = cfg.d_model;
+    let ff = cfg.d_ff;
+    let dscale = 1.0 / (d as f64).sqrt();
+    let depth = (2.0 * cfg.n_layers as f64).sqrt();
+    let mut specs: Vec<(String, Vec<usize>, Init)> = vec![
+        ("embed".into(), vec![cfg.vocab, d], Init::Normal(1.0 / (cfg.vocab as f64).sqrt())),
+        ("pos".into(), vec![cfg.seq_len, d], Init::Normal(0.01)),
+    ];
+    for layer in 0..cfg.n_layers {
+        let p = format!("l{layer}.");
+        specs.push((p.clone() + "ln1_g", vec![d], Init::One));
+        specs.push((p.clone() + "ln1_b", vec![d], Init::Zero));
+        specs.push((p.clone() + "wq", vec![d, d], Init::Normal(dscale)));
+        specs.push((p.clone() + "wk", vec![d, d], Init::Normal(dscale)));
+        specs.push((p.clone() + "wv", vec![d, d], Init::Normal(dscale)));
+        specs.push((p.clone() + "wo", vec![d, d], Init::Normal(dscale / depth)));
+        specs.push((p.clone() + "ln2_g", vec![d], Init::One));
+        specs.push((p.clone() + "ln2_b", vec![d], Init::Zero));
+        specs.push((p.clone() + "w1", vec![d, ff], Init::Normal(dscale)));
+        specs.push((p.clone() + "b1", vec![ff], Init::Zero));
+        specs.push((p.clone() + "w2", vec![ff, d], Init::Normal((1.0 / (ff as f64).sqrt()) / depth)));
+        specs.push((p + "b2", vec![d], Init::Zero));
+    }
+    specs.push(("lnf_g".into(), vec![d], Init::One));
+    specs.push(("lnf_b".into(), vec![d], Init::Zero));
+    // Untied output head (see python/compile/transformer.py for why).
+    specs.push(("head".into(), vec![d, cfg.vocab], Init::Normal(dscale)));
+    Layout::build(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logreg_layout_dim() {
+        assert_eq!(logreg_layout(10).dim, 10);
+        let flat = logreg_layout(10).init(0);
+        assert!(flat.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn mlp_layout_matches_python_formula() {
+        // python: in*h + h + h*c + c
+        let l = mlp_layout(32, 128, 10);
+        assert_eq!(l.dim, 32 * 128 + 128 + 128 * 10 + 10);
+        assert_eq!(l.entry("w2").unwrap().offset, 32 * 128 + 128);
+    }
+
+    #[test]
+    fn transformer_layout_matches_python_formula() {
+        let cfg = TransformerConfig { vocab: 256, d_model: 64, n_layers: 2, n_heads: 4, d_ff: 256, seq_len: 32 };
+        let l = transformer_layout(&cfg);
+        let d = 64;
+        let per_layer = 2 * d + 4 * d * d + 2 * d + d * 256 + 256 + 256 * d + d;
+        assert_eq!(l.dim, 256 * d + 32 * d + 2 * per_layer + 2 * d + d * 256);
+    }
+
+    #[test]
+    fn init_statistics() {
+        let l = mlp_layout(64, 64, 8);
+        let flat = l.init(7);
+        // gains/biases zero, weights ~ N(0, 1/64): check w1 std.
+        let w1 = &flat[..64 * 64];
+        let mean: f64 = w1.iter().map(|&x| x as f64).sum::<f64>() / w1.len() as f64;
+        let var: f64 = w1.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / w1.len() as f64;
+        assert!(mean.abs() < 0.01, "{mean}");
+        assert!((var - 1.0 / 64.0).abs() < 0.005, "{var}");
+        let b1 = &flat[64 * 64..64 * 64 + 64];
+        assert!(b1.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let l = mlp_layout(8, 8, 2);
+        assert_eq!(l.init(3), l.init(3));
+        assert_ne!(l.init(3), l.init(4));
+    }
+
+    #[test]
+    fn layouts_match_manifest_if_present() {
+        let dir = crate::artifacts_dir();
+        if let Ok(m) = crate::runtime::manifest::Manifest::load(&dir) {
+            for a in &m.artifacts {
+                let dim = match a.model.as_str() {
+                    "logreg" => logreg_layout(a.flat_dim).dim,
+                    "mlp" => mlp_layout(
+                        a.meta_usize("in_dim").unwrap(),
+                        a.meta_usize("hidden").unwrap(),
+                        a.meta_usize("classes").unwrap(),
+                    )
+                    .dim,
+                    "transformer" if a.kind == "grad" => transformer_layout(&TransformerConfig {
+                        vocab: a.meta_usize("vocab").unwrap(),
+                        d_model: a.meta_usize("d_model").unwrap(),
+                        n_layers: a.meta_usize("n_layers").unwrap(),
+                        n_heads: a.meta_usize("n_heads").unwrap(),
+                        d_ff: a.meta_usize("d_ff").unwrap(),
+                        seq_len: a.meta_usize("seq_len").unwrap(),
+                    })
+                    .dim,
+                    _ => continue,
+                };
+                assert_eq!(dim, a.flat_dim, "layout drift for artifact {}", a.name);
+            }
+        }
+    }
+}

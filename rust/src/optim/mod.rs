@@ -1,0 +1,216 @@
+//! Optimizers and learning-rate schedules (L3-owned; the AOT graphs emit
+//! loss + gradient only).
+//!
+//! The paper trains with Nesterov momentum SGD for ImageNet (App. F.1) and
+//! plain SGD for the convex experiments and Table 16. LR schedules: the
+//! convex runs halve gamma every 1000 iterations; deep runs use warmup +
+//! step decay.
+
+/// Learning-rate schedule.
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Const {
+        lr: f64,
+    },
+    /// Multiply by `factor` every `every` steps (paper §5.1: 0.5 / 1000).
+    StepDecay {
+        lr: f64,
+        every: usize,
+        factor: f64,
+    },
+    /// Linear warmup for `warmup` steps, then multiply by `factor` at each
+    /// milestone (paper App. F.1: warmup 5 epochs, /10 at 30/60/90).
+    WarmupMilestones {
+        lr: f64,
+        warmup: usize,
+        milestones: Vec<usize>,
+        factor: f64,
+    },
+    /// Linear warmup then polynomial decay to zero at `total` (BERT, F.1).
+    WarmupPoly {
+        lr: f64,
+        warmup: usize,
+        total: usize,
+        power: f64,
+    },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f64 {
+        match self {
+            LrSchedule::Const { lr } => *lr,
+            LrSchedule::StepDecay { lr, every, factor } => {
+                lr * factor.powi((step / every.max(&1usize)) as i32)
+            }
+            LrSchedule::WarmupMilestones { lr, warmup, milestones, factor } => {
+                if step < *warmup {
+                    lr * (step + 1) as f64 / *warmup as f64
+                } else {
+                    let passed = milestones.iter().filter(|&&m| step >= m).count() as i32;
+                    lr * factor.powi(passed)
+                }
+            }
+            LrSchedule::WarmupPoly { lr, warmup, total, power } => {
+                if step < *warmup {
+                    lr * (step + 1) as f64 / *warmup as f64
+                } else if step >= *total {
+                    0.0
+                } else {
+                    let frac = (total - step) as f64 / (total - warmup) as f64;
+                    lr * frac.powf(*power)
+                }
+            }
+        }
+    }
+}
+
+/// Per-worker first-order optimizer state.
+#[derive(Clone, Debug)]
+pub struct Optimizer {
+    pub momentum: f64,
+    pub nesterov: bool,
+    /// Velocity buffer (empty until first step when momentum == 0).
+    velocity: Vec<f32>,
+}
+
+impl Optimizer {
+    pub fn sgd() -> Self {
+        Optimizer { momentum: 0.0, nesterov: false, velocity: Vec::new() }
+    }
+
+    pub fn momentum_sgd(momentum: f64, nesterov: bool) -> Self {
+        assert!((0.0..1.0).contains(&momentum));
+        Optimizer { momentum, nesterov, velocity: Vec::new() }
+    }
+
+    /// Velocity buffer view, if momentum is active and a step has run
+    /// (checkpointing).
+    pub fn velocity_buf(&self) -> Option<&[f32]> {
+        (!self.velocity.is_empty()).then_some(self.velocity.as_slice())
+    }
+
+    /// Restore the velocity buffer (checkpoint resume).
+    pub fn set_velocity(&mut self, v: &[f32]) {
+        self.velocity = v.to_vec();
+    }
+
+    /// In-place parameter update given the gradient and step LR.
+    ///
+    /// Heavy-ball: v <- mu v + g;           x <- x - lr v
+    /// Nesterov:   v <- mu v + g;           x <- x - lr (g + mu v)
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f64) {
+        debug_assert_eq!(params.len(), grad.len());
+        let lr = lr as f32;
+        if self.momentum == 0.0 {
+            for (p, g) in params.iter_mut().zip(grad) {
+                *p -= lr * g;
+            }
+            return;
+        }
+        if self.velocity.len() != params.len() {
+            self.velocity = vec![0.0; params.len()];
+        }
+        let mu = self.momentum as f32;
+        if self.nesterov {
+            for ((p, g), v) in params.iter_mut().zip(grad).zip(&mut self.velocity) {
+                *v = mu * *v + g;
+                *p -= lr * (g + mu * *v);
+            }
+        } else {
+            for ((p, g), v) in params.iter_mut().zip(grad).zip(&mut self.velocity) {
+                *v = mu * *v + g;
+                *p -= lr * *v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_schedule() {
+        let s = LrSchedule::Const { lr: 0.1 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(10_000), 0.1);
+    }
+
+    #[test]
+    fn step_decay_halves_every_1000() {
+        // Paper §5.1: initialized 0.2, halved every 1000 iterations.
+        let s = LrSchedule::StepDecay { lr: 0.2, every: 1000, factor: 0.5 };
+        assert_eq!(s.at(0), 0.2);
+        assert_eq!(s.at(999), 0.2);
+        assert_eq!(s.at(1000), 0.1);
+        assert_eq!(s.at(2500), 0.05);
+    }
+
+    #[test]
+    fn warmup_milestones_profile() {
+        let s = LrSchedule::WarmupMilestones {
+            lr: 1.0,
+            warmup: 10,
+            milestones: vec![30, 60, 90],
+            factor: 0.1,
+        };
+        assert!(s.at(0) < s.at(9));
+        assert_eq!(s.at(10), 1.0);
+        assert!((s.at(30) - 0.1).abs() < 1e-12);
+        assert!((s.at(95) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warmup_poly_hits_zero() {
+        let s = LrSchedule::WarmupPoly { lr: 1.0, warmup: 5, total: 100, power: 1.0 };
+        assert!(s.at(0) < 1.0);
+        assert!((s.at(5) - 1.0).abs() < 1e-2);
+        assert!(s.at(100) == 0.0);
+        assert!(s.at(50) > s.at(80));
+    }
+
+    #[test]
+    fn sgd_step_matches_formula() {
+        let mut opt = Optimizer::sgd();
+        let mut p = vec![1.0f32, 2.0];
+        opt.step(&mut p, &[0.5, -1.0], 0.1);
+        assert!((p[0] - 0.95).abs() < 1e-6);
+        assert!((p[1] - 2.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn heavy_ball_accumulates_velocity() {
+        let mut opt = Optimizer::momentum_sgd(0.9, false);
+        let mut p = vec![0.0f32];
+        opt.step(&mut p, &[1.0], 1.0); // v=1, p=-1
+        opt.step(&mut p, &[1.0], 1.0); // v=1.9, p=-2.9
+        assert!((p[0] + 2.9).abs() < 1e-6, "{}", p[0]);
+    }
+
+    #[test]
+    fn nesterov_differs_from_heavy_ball() {
+        let mut hb = Optimizer::momentum_sgd(0.9, false);
+        let mut nag = Optimizer::momentum_sgd(0.9, true);
+        let mut p1 = vec![0.0f32];
+        let mut p2 = vec![0.0f32];
+        for _ in 0..3 {
+            hb.step(&mut p1, &[1.0], 0.1);
+            nag.step(&mut p2, &[1.0], 0.1);
+        }
+        assert!((p1[0] - p2[0]).abs() > 1e-6);
+        // Nesterov looks ahead: larger effective step in the same direction.
+        assert!(p2[0] < p1[0]);
+    }
+
+    #[test]
+    fn momentum_converges_on_quadratic() {
+        // minimize 0.5 x^2: gradient = x.
+        let mut opt = Optimizer::momentum_sgd(0.9, true);
+        let mut p = vec![10.0f32];
+        for _ in 0..200 {
+            let g = [p[0]];
+            opt.step(&mut p, &g, 0.05);
+        }
+        assert!(p[0].abs() < 1e-2, "{}", p[0]);
+    }
+}

@@ -1,0 +1,102 @@
+//! Minimal randomized-property testing kit (proptest is unavailable
+//! offline).
+//!
+//! No shrinking — on failure the kit reports the exact seed + case index so
+//! the failing input is reproducible with `PROP_SEED=<seed>`. Case counts
+//! default to 64 and can be raised with `PROP_CASES`.
+//!
+//! ```ignore
+//! proptest::check("mix preserves mean", |rng| {
+//!     let n = 2 + rng.below(16) as usize;
+//!     /* build input, return Ok(()) or Err(description) */
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Per-case verdict: `Err(msg)` fails the property with context.
+pub type CaseResult = Result<(), String>;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Run `prop` over `PROP_CASES` random cases; panic with seed on failure.
+pub fn check<F: FnMut(&mut Rng) -> CaseResult>(name: &str, mut prop: F) {
+    let seed = env_u64("PROP_SEED", 0xC0FFEE);
+    let cases = env_u64("PROP_CASES", 64);
+    let root = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = root.split(case);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> CaseResult {
+    if a.len() != b.len() {
+        return Err(format!("length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol * (1.0 + x.abs().max(y.abs())) {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Assert a scalar predicate with a labelled message.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivially true", |_| {
+            count += 1;
+            Ok(())
+        });
+        assert!(count >= 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn failing_property_panics_with_seed() {
+        check("always false", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_tolerates_noise() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-5).is_err());
+    }
+
+    #[test]
+    fn cases_are_deterministic_per_seed() {
+        let mut first = Vec::new();
+        check("capture", |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("capture again", |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

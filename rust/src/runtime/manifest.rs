@@ -1,0 +1,199 @@
+//! Artifact manifest: the typed mirror of `artifacts/manifest.json` that
+//! `python/compile/aot.py` emits. The runtime loads executables strictly
+//! through this — no hard-coded shapes on the rust side.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::jsonio::Json;
+
+/// Element type of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(anyhow!("unsupported dtype '{other}'")),
+        }
+    }
+}
+
+/// One tensor port of an artifact.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT-compiled executable.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub model: String,
+    pub kind: String,
+    pub flat_dim: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize())
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn parse_io(v: &Json) -> Result<IoSpec> {
+    let shape = v
+        .req("shape")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|s| s.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(IoSpec {
+        name: v.req_str("name")?.to_string(),
+        shape,
+        dtype: Dtype::from_str(v.req_str("dtype")?)?,
+    })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {} (run `make artifacts`)", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        anyhow::ensure!(root.req_usize("version")? == 1, "unsupported manifest version");
+        let mut artifacts = Vec::new();
+        for a in root.req("artifacts")?.as_arr().ok_or_else(|| anyhow!("artifacts not array"))? {
+            let meta = match a.get("meta") {
+                Some(Json::Obj(m)) => m.clone(),
+                _ => BTreeMap::new(),
+            };
+            artifacts.push(ArtifactSpec {
+                name: a.req_str("name")?.to_string(),
+                file: dir.join(a.req_str("file")?),
+                model: a.req_str("model")?.to_string(),
+                kind: a.req_str("kind")?.to_string(),
+                flat_dim: a.req_usize("flat_dim")?,
+                inputs: a
+                    .req("inputs")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("inputs not array"))?
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .req("outputs")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("outputs not array"))?
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<Vec<_>>>()?,
+                meta,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Exact-name lookup.
+    pub fn by_name(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// First artifact matching model + kind (+ optional meta tag).
+    pub fn find(&self, model: &str, kind: &str, tag: Option<&str>) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| {
+                a.model == model
+                    && a.kind == kind
+                    && tag.map_or(true, |t| {
+                        a.meta.get("config").and_then(|v| v.as_str()) == Some(t)
+                    })
+            })
+            .ok_or_else(|| anyhow!("no artifact for model={model} kind={kind} tag={tag:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn load_minimal() {
+        let dir = std::env::temp_dir().join(format!("gpga_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(
+            &dir,
+            r#"{"version":1,"artifacts":[{"name":"a","file":"a.hlo.txt","model":"logreg",
+                "kind":"grad","flat_dim":10,
+                "inputs":[{"name":"w","shape":[10],"dtype":"f32"}],
+                "outputs":[{"name":"loss","shape":[1],"dtype":"f32"}],
+                "meta":{"batch":32}}]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.by_name("a").unwrap();
+        assert_eq!(a.flat_dim, 10);
+        assert_eq!(a.inputs[0].elements(), 10);
+        assert_eq!(a.meta_usize("batch"), Some(32));
+        assert!(m.by_name("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let dir = std::env::temp_dir().join(format!("gpga_manifest_v_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, r#"{"version":2,"artifacts":[]}"#);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        let dir = crate::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find("logreg", "grad", None).is_ok());
+            assert!(m.find("transformer", "grad", Some("tiny")).is_ok());
+            // every referenced file exists
+            for a in &m.artifacts {
+                assert!(a.file.exists(), "{:?}", a.file);
+            }
+        }
+    }
+}

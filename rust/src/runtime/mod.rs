@@ -1,0 +1,230 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! training hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. All graphs were lowered with
+//! `return_tuple=True`, so outputs decompose via `Literal::to_tuple`.
+//!
+//! Compiled executables are cached per artifact name; typed wrappers
+//! ([`GradFn`], [`EvalFn`], [`MixFn`]) enforce the manifest's I/O contract
+//! and offer `*_into` variants that write into caller buffers (the zero-
+//! alloc path the coordinator uses every step).
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactSpec, Dtype, IoSpec, Manifest};
+
+/// The process-wide PJRT runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` and connect the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Load from the auto-discovered artifacts directory.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&crate::artifacts_dir())
+    }
+
+    /// Compile (or fetch the cached) executable for a manifest artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.by_name(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", name))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Raw execution: literals in, tuple-decomposed literals out.
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self.manifest.by_name(name)?;
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "artifact '{name}' wants {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("decomposing tuple of {name}: {e:?}"))
+    }
+}
+
+/// Build an f32 literal of the given logical shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    anyhow::ensure!(data.len() == n, "literal wants {n} elements, got {}", data.len());
+    let flat = xla::Literal::vec1(data);
+    if shape.len() == 1 || shape.is_empty() {
+        if shape.is_empty() {
+            // scalar
+            return flat
+                .reshape(&[])
+                .map_err(|e| anyhow!("reshape scalar: {e:?}"));
+        }
+        return Ok(flat);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+    flat.reshape(&dims).map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+/// Build an i32 literal of the given logical shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    anyhow::ensure!(data.len() == n, "literal wants {n} elements, got {}", data.len());
+    let flat = xla::Literal::vec1(data);
+    if shape.len() <= 1 {
+        return Ok(flat);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+    flat.reshape(&dims).map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+/// Copy a literal's f32 payload into `out` without allocating.
+pub fn lit_copy_f32(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
+    lit.copy_raw_to(out).map_err(|e| anyhow!("copy_raw_to: {e:?}"))
+}
+
+/// Typed wrapper for `kind = "grad"` artifacts:
+/// `(flat_params, batch...) -> (loss, grad)`.
+pub struct GradFn {
+    rt: Rc<Runtime>,
+    pub spec: ArtifactSpec,
+}
+
+impl GradFn {
+    pub fn new(rt: Rc<Runtime>, name: &str) -> Result<GradFn> {
+        let spec = rt.manifest.by_name(name)?.clone();
+        anyhow::ensure!(
+            spec.kind == "grad",
+            "artifact '{name}' is kind '{}', want 'grad'",
+            spec.kind
+        );
+        rt.executable(name)?; // compile eagerly
+        Ok(GradFn { rt, spec })
+    }
+
+    pub fn flat_dim(&self) -> usize {
+        self.spec.flat_dim
+    }
+
+    /// Execute with freshly built batch literals (each step's batch is new
+    /// data, so the caller constructs them and hands over ownership);
+    /// writes grad into `grad_out` and returns the loss.
+    pub fn call_into(
+        &self,
+        params: &[f32],
+        batch: Vec<xla::Literal>,
+        grad_out: &mut [f32],
+    ) -> Result<f32> {
+        anyhow::ensure!(params.len() == self.spec.flat_dim, "params length");
+        anyhow::ensure!(grad_out.len() == self.spec.flat_dim, "grad_out length");
+        let mut inputs = Vec::with_capacity(1 + batch.len());
+        inputs.push(lit_f32(params, &self.spec.inputs[0].shape)?);
+        inputs.extend(batch);
+        let outs = self.rt.run(&self.spec.name, &inputs)?;
+        anyhow::ensure!(outs.len() == 2, "grad artifact must return (loss, grad)");
+        let loss = outs[0].to_vec::<f32>().map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        lit_copy_f32(&outs[1], grad_out)?;
+        Ok(loss)
+    }
+}
+
+/// Clone a literal (the crate exposes no Clone; round-trip via raw bytes).
+pub fn clone_literal(lit: &xla::Literal) -> Result<xla::Literal> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match lit.ty().map_err(|e| anyhow!("ty: {e:?}"))? {
+        xla::ElementType::F32 => {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            lit_f32(&v, &dims)
+        }
+        xla::ElementType::S32 => {
+            let v = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            lit_i32(&v, &dims)
+        }
+        other => Err(anyhow!("clone_literal: unsupported {other:?}")),
+    }
+}
+
+/// Typed wrapper for `kind = "eval"` artifacts: returns the scalar metric.
+pub struct EvalFn {
+    rt: Rc<Runtime>,
+    pub spec: ArtifactSpec,
+}
+
+impl EvalFn {
+    pub fn new(rt: Rc<Runtime>, name: &str) -> Result<EvalFn> {
+        let spec = rt.manifest.by_name(name)?.clone();
+        anyhow::ensure!(spec.kind == "eval", "artifact '{name}' is not eval");
+        rt.executable(name)?;
+        Ok(EvalFn { rt, spec })
+    }
+
+    pub fn call(&self, params: &[f32], batch: &[xla::Literal]) -> Result<f32> {
+        let mut inputs = Vec::with_capacity(1 + batch.len());
+        inputs.push(lit_f32(params, &self.spec.inputs[0].shape)?);
+        for b in batch {
+            inputs.push(clone_literal(b)?);
+        }
+        let outs = self.rt.run(&self.spec.name, &inputs)?;
+        Ok(outs[0].to_vec::<f32>().map_err(|e| anyhow!("eval out: {e:?}"))?[0])
+    }
+}
+
+/// Typed wrapper for the Pallas gossip-mix artifacts (`kind = "mix"`).
+pub struct MixFn {
+    rt: Rc<Runtime>,
+    pub spec: ArtifactSpec,
+}
+
+impl MixFn {
+    pub fn new(rt: Rc<Runtime>, name: &str) -> Result<MixFn> {
+        let spec = rt.manifest.by_name(name)?.clone();
+        anyhow::ensure!(spec.kind == "mix", "artifact '{name}' is not mix");
+        rt.executable(name)?;
+        Ok(MixFn { rt, spec })
+    }
+
+    /// `weights: (k,)`, `stack: (k*d,)` row-major -> mixed `(d,)`.
+    pub fn call(&self, weights: &[f32], stack: &[f32]) -> Result<Vec<f32>> {
+        let k = self.spec.inputs[0].shape[0];
+        let d = self.spec.inputs[1].shape[1];
+        anyhow::ensure!(weights.len() == k && stack.len() == k * d, "mix shapes");
+        let inputs = vec![lit_f32(weights, &[k])?, lit_f32(stack, &[k, d])?];
+        let outs = self.rt.run(&self.spec.name, &inputs)?;
+        outs[0].to_vec::<f32>().map_err(|e| anyhow!("mix out: {e:?}"))
+    }
+}

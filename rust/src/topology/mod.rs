@@ -1,0 +1,427 @@
+//! Network topologies and doubly-stochastic gossip matrices (paper §3).
+//!
+//! A [`Topology`] produces, for each communication round, the set of
+//! in-neighbors of every node and the weight matrix `W` satisfying
+//! Assumption 3 (`W 1 = 1`, `1^T W = 1^T`). Static graphs (ring, grid/torus,
+//! hypercube, star, fully-connected, static exponential) use
+//! uniform-neighbor or Metropolis–Hastings weights; the **one-peer
+//! exponential** graph (Assran et al. 2019) is time-varying: round r pairs
+//! node `i` with `i ± 2^(r mod log2 n)` with weight 1/2.
+//!
+//! `beta = ||W - (1/n)11^T||_2` (Remark 1) is computed by deflated power
+//! iteration ([`crate::linalg::beta_of`]); for time-varying graphs
+//! [`Topology::beta`] returns the per-period effective value
+//! `||prod_r (W_r - avg)||_2^(1/R)`.
+
+pub mod spectral;
+
+use crate::linalg::{beta_of, spectral_norm, Mat};
+
+/// Graph families used across the paper's experiments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Cycle; |N_i| = 3 including self. 1 - beta = O(1/n^2).
+    Ring,
+    /// 2-D torus (the paper's "grid"); |N_i| = 5 including self.
+    /// 1 - beta = O(1/n).
+    Grid,
+    /// log2(n)-dimensional hypercube (n must be a power of two).
+    Hypercube,
+    /// Hub-and-spoke; Metropolis–Hastings weights (non-regular).
+    Star,
+    /// Complete graph: W = (1/n)11^T, beta = 0 — Parallel SGD's implicit
+    /// topology.
+    Full,
+    /// Static exponential: neighbors at hop distances 2^j.
+    StaticExponential,
+    /// Time-varying one-peer exponential (Assran et al. 2019): a single
+    /// directed peer per round, W_r = (I + P_r)/2.
+    OnePeerExponential,
+}
+
+/// A communication topology over `n` nodes.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub kind: TopologyKind,
+    pub n: usize,
+    /// Grid factorization (rows, cols); unused otherwise.
+    grid: (usize, usize),
+}
+
+impl Topology {
+    pub fn new(kind: TopologyKind, n: usize) -> Self {
+        assert!(n >= 1);
+        if kind == TopologyKind::Hypercube {
+            assert!(n.is_power_of_two(), "hypercube needs power-of-two n, got {n}");
+        }
+        let grid = if kind == TopologyKind::Grid { factor_near_square(n) } else { (n, 1) };
+        Topology { kind, n, grid }
+    }
+
+    pub fn ring(n: usize) -> Self {
+        Self::new(TopologyKind::Ring, n)
+    }
+    pub fn grid(n: usize) -> Self {
+        Self::new(TopologyKind::Grid, n)
+    }
+    pub fn hypercube(n: usize) -> Self {
+        Self::new(TopologyKind::Hypercube, n)
+    }
+    pub fn star(n: usize) -> Self {
+        Self::new(TopologyKind::Star, n)
+    }
+    pub fn full(n: usize) -> Self {
+        Self::new(TopologyKind::Full, n)
+    }
+    pub fn static_expo(n: usize) -> Self {
+        Self::new(TopologyKind::StaticExponential, n)
+    }
+    pub fn one_peer_expo(n: usize) -> Self {
+        Self::new(TopologyKind::OnePeerExponential, n)
+    }
+
+    /// Parse a CLI/config name.
+    pub fn from_name(name: &str, n: usize) -> anyhow::Result<Self> {
+        Ok(match name {
+            "ring" => Self::ring(n),
+            "grid" | "torus" => Self::grid(n),
+            "hypercube" => Self::hypercube(n),
+            "star" => Self::star(n),
+            "full" | "complete" => Self::full(n),
+            "expo" | "static-expo" => Self::static_expo(n),
+            "one-peer-expo" | "one-peer" => Self::one_peer_expo(n),
+            other => anyhow::bail!("unknown topology '{other}'"),
+        })
+    }
+
+    /// Number of distinct rounds before the schedule repeats
+    /// (1 for static graphs, log2ceil(n) for one-peer exponential).
+    pub fn rounds(&self) -> usize {
+        match self.kind {
+            TopologyKind::OnePeerExponential => log2_ceil(self.n).max(1),
+            _ => 1,
+        }
+    }
+
+    pub fn is_time_varying(&self) -> bool {
+        self.rounds() > 1
+    }
+
+    /// Undirected neighbor set of `i` **excluding** self, for static kinds.
+    fn static_neighbors(&self, i: usize) -> Vec<usize> {
+        let n = self.n;
+        match self.kind {
+            TopologyKind::Ring => {
+                if n == 1 {
+                    vec![]
+                } else if n == 2 {
+                    vec![1 - i]
+                } else {
+                    vec![(i + n - 1) % n, (i + 1) % n]
+                }
+            }
+            TopologyKind::Grid => {
+                let (r, c) = self.grid;
+                let (y, x) = (i / c, i % c);
+                let mut v = vec![
+                    ((y + r - 1) % r) * c + x,
+                    ((y + 1) % r) * c + x,
+                    y * c + (x + c - 1) % c,
+                    y * c + (x + 1) % c,
+                ];
+                v.sort_unstable();
+                v.dedup();
+                v.retain(|&j| j != i);
+                v
+            }
+            TopologyKind::Hypercube => (0..log2_ceil(n)).map(|b| i ^ (1 << b)).collect(),
+            TopologyKind::Star => {
+                if i == 0 {
+                    (1..n).collect()
+                } else {
+                    vec![0]
+                }
+            }
+            TopologyKind::Full => (0..n).filter(|&j| j != i).collect(),
+            TopologyKind::StaticExponential => {
+                let mut v = Vec::new();
+                let mut hop = 1;
+                while hop < n {
+                    v.push((i + hop) % n);
+                    v.push((i + n - hop % n) % n);
+                    hop *= 2;
+                }
+                v.sort_unstable();
+                v.dedup();
+                v.retain(|&j| j != i);
+                v
+            }
+            TopologyKind::OnePeerExponential => unreachable!("time-varying"),
+        }
+    }
+
+    /// In-neighbors of node `i` at communication round `round`,
+    /// **including self** (the gossip step always mixes the self row).
+    pub fn in_neighbors(&self, i: usize, round: usize) -> Vec<usize> {
+        match self.kind {
+            TopologyKind::OnePeerExponential => {
+                if self.n == 1 {
+                    return vec![i];
+                }
+                let hop = 1usize << (round % self.rounds());
+                let peer = (i + hop) % self.n;
+                if peer == i {
+                    vec![i]
+                } else {
+                    vec![i, peer]
+                }
+            }
+            _ => {
+                let mut v = self.static_neighbors(i);
+                v.push(i);
+                v.sort_unstable();
+                v
+            }
+        }
+    }
+
+    /// Weight row of node `i` at `round`: `(j, w_ij)` over in-neighbors.
+    ///
+    /// Regular graphs get uniform weights 1/|N_i|; non-regular static
+    /// graphs (star, and any grid with r or c == 1 collapsing degrees) get
+    /// Metropolis–Hastings weights, which keep W doubly stochastic.
+    pub fn weight_row(&self, i: usize, round: usize) -> Vec<(usize, f64)> {
+        match self.kind {
+            TopologyKind::OnePeerExponential => {
+                let nb = self.in_neighbors(i, round);
+                if nb.len() == 1 {
+                    vec![(i, 1.0)]
+                } else {
+                    nb.into_iter().map(|j| (j, 0.5)).collect()
+                }
+            }
+            TopologyKind::Full => (0..self.n).map(|j| (j, 1.0 / self.n as f64)).collect(),
+            _ if self.is_regular() => {
+                let nb = self.in_neighbors(i, round);
+                let w = 1.0 / nb.len() as f64;
+                nb.into_iter().map(|j| (j, w)).collect()
+            }
+            _ => {
+                // Metropolis–Hastings: w_ij = 1/(1 + max(d_i, d_j)),
+                // w_ii = 1 - sum_j w_ij.
+                let di = self.static_neighbors(i).len();
+                let mut row: Vec<(usize, f64)> = Vec::new();
+                let mut self_w = 1.0;
+                for j in self.static_neighbors(i) {
+                    let dj = self.static_neighbors(j).len();
+                    let w = 1.0 / (1.0 + di.max(dj) as f64);
+                    self_w -= w;
+                    row.push((j, w));
+                }
+                row.push((i, self_w));
+                row.sort_unstable_by_key(|&(j, _)| j);
+                row
+            }
+        }
+    }
+
+    fn is_regular(&self) -> bool {
+        !matches!(self.kind, TopologyKind::Star)
+    }
+
+    /// Full weight matrix at `round`.
+    pub fn weight_matrix(&self, round: usize) -> Mat {
+        let mut w = Mat::zeros(self.n, self.n);
+        for i in 0..self.n {
+            for (j, v) in self.weight_row(i, round) {
+                w[(i, j)] = v;
+            }
+        }
+        w
+    }
+
+    /// The paper's connectivity measure. For time-varying graphs this is
+    /// the per-period effective value `||prod_r (W_r - avg)||^(1/R)` —
+    /// the geometric-mean contraction per gossip step.
+    pub fn beta(&self) -> f64 {
+        if self.n == 1 {
+            return 0.0;
+        }
+        if !self.is_time_varying() {
+            return beta_of(&self.weight_matrix(0));
+        }
+        let rounds = self.rounds();
+        let avg = Mat::avg(self.n);
+        let mut prod = self.weight_matrix(0).sub(&avg);
+        for r in 1..rounds {
+            prod = self.weight_matrix(r).sub(&avg).matmul(&prod);
+        }
+        spectral_norm(&prod, 0xBEEF).powf(1.0 / rounds as f64).min(1.0 - 1e-12)
+    }
+
+    /// Max in-neighborhood size incl. self (the paper's |N_i| in §3.4).
+    pub fn max_degree_incl_self(&self) -> usize {
+        (0..self.rounds())
+            .flat_map(|r| (0..self.n).map(move |i| (i, r)))
+            .map(|(i, r)| self.in_neighbors(i, r).len())
+            .max()
+            .unwrap_or(1)
+    }
+}
+
+fn log2_ceil(n: usize) -> usize {
+    let mut bits = 0;
+    while (1usize << bits) < n {
+        bits += 1;
+    }
+    bits
+}
+
+/// Factor n into (r, c) with r*c == n and r as close to sqrt(n) as possible.
+fn factor_near_square(n: usize) -> (usize, usize) {
+    let mut best = (n, 1);
+    let mut r = (n as f64).sqrt() as usize;
+    while r >= 1 {
+        if n % r == 0 {
+            best = (r, n / r);
+            break;
+        }
+        r -= 1;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_doubly_stochastic(t: &Topology) {
+        for r in 0..t.rounds() {
+            let w = t.weight_matrix(r);
+            assert!(w.row_sum_err() < 1e-12, "{:?} round {r} rows", t.kind);
+            assert!(w.col_sum_err() < 1e-12, "{:?} round {r} cols", t.kind);
+            for v in &w.data {
+                assert!(*v >= -1e-15, "{:?} negative weight {v}", t.kind);
+            }
+        }
+    }
+
+    #[test]
+    fn all_kinds_doubly_stochastic() {
+        for t in [
+            Topology::ring(12),
+            Topology::grid(12),
+            Topology::hypercube(16),
+            Topology::star(9),
+            Topology::full(7),
+            Topology::static_expo(12),
+            Topology::one_peer_expo(12),
+        ] {
+            assert_doubly_stochastic(&t);
+        }
+    }
+
+    #[test]
+    fn ring_neighborhood_is_three() {
+        let t = Topology::ring(10);
+        for i in 0..10 {
+            assert_eq!(t.in_neighbors(i, 0).len(), 3); // paper §3.4: |N_i|=3
+        }
+    }
+
+    #[test]
+    fn grid_neighborhood_is_five() {
+        let t = Topology::grid(16); // 4x4 torus
+        for i in 0..16 {
+            assert_eq!(t.in_neighbors(i, 0).len(), 5); // paper §3.4: |N_i|=5
+        }
+    }
+
+    #[test]
+    fn full_is_exact_averaging() {
+        let t = Topology::full(6);
+        assert!(t.beta() < 1e-9);
+    }
+
+    #[test]
+    fn ring_beta_scales_inverse_square() {
+        // 1 - beta = O(1/n^2): beta(2n) gap ~ 1/4 of beta(n) gap.
+        let g20 = 1.0 - Topology::ring(20).beta();
+        let g40 = 1.0 - Topology::ring(40).beta();
+        let ratio = g20 / g40;
+        assert!((3.0..5.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn grid_better_connected_than_ring() {
+        let n = 36;
+        assert!(Topology::grid(n).beta() < Topology::ring(n).beta());
+    }
+
+    #[test]
+    fn expo_better_connected_than_grid() {
+        let n = 32;
+        assert!(Topology::static_expo(n).beta() < Topology::grid(n).beta());
+    }
+
+    #[test]
+    fn ring_beta_matches_closed_form() {
+        // Uniform 1/3 ring: beta = (1 + 2 cos(2 pi/n)) / 3.
+        let n = 24;
+        let expect = (1.0 + 2.0 * (2.0 * std::f64::consts::PI / n as f64).cos()) / 3.0;
+        assert!((Topology::ring(n).beta() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn one_peer_period_is_log2() {
+        assert_eq!(Topology::one_peer_expo(16).rounds(), 4);
+        assert_eq!(Topology::one_peer_expo(20).rounds(), 5);
+    }
+
+    #[test]
+    fn one_peer_power_of_two_reaches_consensus() {
+        // For n = 2^tau, one period of one-peer exponential gossip computes
+        // the exact average: prod_r W_r = avg.
+        let t = Topology::one_peer_expo(8);
+        let mut prod = t.weight_matrix(0);
+        for r in 1..t.rounds() {
+            prod = t.weight_matrix(r).matmul(&prod);
+        }
+        let diff = prod.sub(&Mat::avg(8));
+        assert!(diff.frobenius_norm() < 1e-12);
+        assert!(t.beta() < 1e-3);
+    }
+
+    #[test]
+    fn star_metropolis_hastings_valid() {
+        let t = Topology::star(8);
+        let w = t.weight_matrix(0);
+        assert!(w.is_symmetric(1e-12));
+        // hub self-weight: 1 - 7 * 1/8
+        assert!((w[(0, 0)] - (1.0 - 7.0 / 8.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grid_factorization() {
+        assert_eq!(factor_near_square(20), (4, 5));
+        assert_eq!(factor_near_square(100), (10, 10));
+        assert_eq!(factor_near_square(7), (1, 7));
+    }
+
+    #[test]
+    fn from_name_roundtrip() {
+        for name in ["ring", "grid", "star", "full", "expo", "one-peer-expo"] {
+            assert!(Topology::from_name(name, 8).is_ok(), "{name}");
+        }
+        assert!(Topology::from_name("mesh", 8).is_err());
+    }
+
+    #[test]
+    fn n_equals_one_degenerate() {
+        for t in [Topology::ring(1), Topology::one_peer_expo(1), Topology::full(1)] {
+            assert_eq!(t.in_neighbors(0, 0), vec![0]);
+            assert_eq!(t.weight_row(0, 0), vec![(0, 1.0)]);
+            assert!(t.beta() < 1e-12);
+        }
+    }
+}

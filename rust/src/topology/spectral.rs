@@ -1,0 +1,221 @@
+//! Spectral quantities and transient-stage theory (paper §1.1, Tables 2–3,
+//! Appendix D).
+//!
+//! Everything is a closed-form function of `beta`, `H` and `n`:
+//!   C_beta = sum_{k=0}^{H-1} beta^k = (1 - beta^H)/(1 - beta)
+//!   D_beta = min{H, 1/(1 - beta)}
+//! plus the transient-stage orders of Appendix D used by the theory benches.
+
+/// C_beta = (1 - beta^H) / (1 - beta), the paper's gossip-decay sum.
+pub fn c_beta(beta: f64, h: usize) -> f64 {
+    assert!((0.0..=1.0).contains(&beta));
+    if beta >= 1.0 - 1e-15 {
+        return h as f64;
+    }
+    (1.0 - beta.powi(h as i32)) / (1.0 - beta)
+}
+
+/// D_beta = min{H, 1/(1-beta)} — which force dominates consensus
+/// (Lemma 4 / Remark 8).
+pub fn d_beta(beta: f64, h: usize) -> f64 {
+    if beta >= 1.0 - 1e-15 {
+        return h as f64;
+    }
+    (h as f64).min(1.0 / (1.0 - beta))
+}
+
+/// Which consensus force dominates (Scenario I/II of §B.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConsensusRegime {
+    /// 1/(1-beta) >= H: large/sparse network — global averaging dominates.
+    GlobalAveragingDominates,
+    /// 1/(1-beta) < H: small/dense network — gossip dominates.
+    GossipDominates,
+}
+
+pub fn regime(beta: f64, h: usize) -> ConsensusRegime {
+    if 1.0 / (1.0 - beta) >= h as f64 {
+        ConsensusRegime::GlobalAveragingDominates
+    } else {
+        ConsensusRegime::GossipDominates
+    }
+}
+
+/// Transient-stage orders (iterations), Appendix D.1. These are Omega(...)
+/// orders — constants dropped — used to compare *growth*, not absolutes.
+pub mod transient {
+    use super::{c_beta, d_beta};
+
+    /// Gossip SGD, iid: n^3 beta^4 / (1-beta)^2.
+    pub fn gossip_iid(n: usize, beta: f64) -> f64 {
+        (n as f64).powi(3) * beta.powi(4) / (1.0 - beta).powi(2)
+    }
+
+    /// Gossip SGD, non-iid: n^3 beta^4 / (1-beta)^4.
+    pub fn gossip_noniid(n: usize, beta: f64) -> f64 {
+        (n as f64).powi(3) * beta.powi(4) / (1.0 - beta).powi(4)
+    }
+
+    /// Gossip-PGA, iid: n^3 beta^4 C_beta^2.
+    pub fn pga_iid(n: usize, beta: f64, h: usize) -> f64 {
+        (n as f64).powi(3) * beta.powi(4) * c_beta(beta, h).powi(2)
+    }
+
+    /// Gossip-PGA, non-iid: n^3 beta^4 C_beta^2 D_beta^2.
+    pub fn pga_noniid(n: usize, beta: f64, h: usize) -> f64 {
+        (n as f64).powi(3) * beta.powi(4) * c_beta(beta, h).powi(2) * d_beta(beta, h).powi(2)
+    }
+
+    /// Local SGD, iid: n^3 H^2.
+    pub fn local_iid(n: usize, h: usize) -> f64 {
+        (n as f64).powi(3) * (h as f64).powi(2)
+    }
+
+    /// Local SGD, non-iid: n^3 H^4.
+    pub fn local_noniid(n: usize, h: usize) -> f64 {
+        (n as f64).powi(3) * (h as f64).powi(4)
+    }
+}
+
+/// Convergence-rate bound evaluator (Theorems 1–2, eq. (7)/(8)):
+///   sigma/sqrt(nT) + C^{1/3} beta^{2/3}(sigma^{2/3} + D^{1/3} b^{2/3})/T^{2/3}
+///   + beta D / T
+/// Used by the Table 4/6 analytic benches to tabulate rates at measured beta.
+#[derive(Clone, Copy, Debug)]
+pub struct RateParams {
+    pub n: usize,
+    pub beta: f64,
+    pub h: usize,
+    pub sigma: f64,
+    pub b: f64,
+}
+
+impl RateParams {
+    pub fn bound(&self, t: f64) -> f64 {
+        let cb = c_beta(self.beta, self.h);
+        let db = d_beta(self.beta, self.h);
+        let term1 = self.sigma / (self.n as f64 * t).sqrt();
+        let term2 = cb.powf(1.0 / 3.0)
+            * self.beta.powf(2.0 / 3.0)
+            * (self.sigma.powf(2.0 / 3.0) + db.powf(1.0 / 3.0) * self.b.powf(2.0 / 3.0))
+            / t.powf(2.0 / 3.0);
+        let term3 = self.beta * db / t;
+        term1 + term2 + term3
+    }
+
+    /// First T at which the SGD term dominates both overhead terms —
+    /// the empirical-side definition of the transient boundary.
+    pub fn transient_boundary(&self) -> f64 {
+        let mut lo = 1.0f64;
+        let mut hi = 1e18f64;
+        let dominated = |t: f64| {
+            let sgd = self.sigma.max(1e-9) / (self.n as f64 * t).sqrt();
+            let cb = c_beta(self.beta, self.h);
+            let db = d_beta(self.beta, self.h);
+            let ovh = cb.powf(1.0 / 3.0)
+                * self.beta.powf(2.0 / 3.0)
+                * (self.sigma.powf(2.0 / 3.0) + db.powf(1.0 / 3.0) * self.b.powf(2.0 / 3.0))
+                / t.powf(2.0 / 3.0)
+                + self.beta * db / t;
+            sgd >= ovh
+        };
+        if dominated(lo) {
+            return lo;
+        }
+        for _ in 0..200 {
+            let mid = (lo * hi).sqrt();
+            if dominated(mid) {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c_beta_limits() {
+        // beta -> 0 => C -> 1; beta -> 1 => C -> H (Remarks 2-3).
+        assert!((c_beta(1e-12, 16) - 1.0).abs() < 1e-9);
+        assert!((c_beta(1.0, 16) - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn c_beta_below_min_h_inv_gap() {
+        // Table 2 caption: C_beta < min{1/(1-beta), H}.
+        for &beta in &[0.1, 0.5, 0.9, 0.99, 0.999] {
+            for &h in &[2usize, 8, 16, 64] {
+                let c = c_beta(beta, h);
+                assert!(c < (h as f64).min(1.0 / (1.0 - beta)) + 1e-12, "beta={beta} h={h}");
+            }
+        }
+    }
+
+    #[test]
+    fn d_beta_piecewise() {
+        assert_eq!(d_beta(0.5, 16), 2.0); // 1/(1-0.5) = 2 < 16
+        assert_eq!(d_beta(0.99, 16), 16.0); // 1/(0.01) = 100 > 16
+    }
+
+    #[test]
+    fn regime_switch() {
+        assert_eq!(regime(0.99, 16), ConsensusRegime::GlobalAveragingDominates);
+        assert_eq!(regime(0.5, 16), ConsensusRegime::GossipDominates);
+    }
+
+    #[test]
+    fn pga_always_shorter_than_gossip() {
+        // Table 2's claim: PGA transient <= Gossip transient for any beta, H.
+        for &beta in &[0.3, 0.9, 0.99, 0.998] {
+            for &h in &[4usize, 16, 64] {
+                let n = 50;
+                assert!(
+                    transient::pga_noniid(n, beta, h) <= transient::gossip_noniid(n, beta) + 1e-9,
+                    "beta={beta} h={h}"
+                );
+                assert!(transient::pga_iid(n, beta, h) <= transient::gossip_iid(n, beta) + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn pga_always_shorter_than_local() {
+        // Table 3's claim (C_beta < H, beta < 1).
+        for &beta in &[0.1, 0.5, 0.9, 0.99] {
+            for &h in &[4usize, 16, 64] {
+                let n = 50;
+                assert!(transient::pga_noniid(n, beta, h) < transient::local_noniid(n, h));
+                assert!(transient::pga_iid(n, beta, h) < transient::local_iid(n, h));
+            }
+        }
+    }
+
+    #[test]
+    fn rate_bound_decreases_in_t() {
+        let p = RateParams { n: 20, beta: 0.97, h: 16, sigma: 1.0, b: 1.0 };
+        assert!(p.bound(1e4) > p.bound(1e6));
+    }
+
+    #[test]
+    fn transient_boundary_monotone_in_beta() {
+        let mk = |beta| RateParams { n: 50, beta, h: 16, sigma: 1.0, b: 1.0 };
+        assert!(mk(0.99).transient_boundary() > mk(0.5).transient_boundary());
+    }
+
+    #[test]
+    fn transient_boundary_tracks_theory_order() {
+        // Doubling n should scale the non-iid PGA boundary roughly by n^3
+        // (the dominant term) — check the measured boundary grows
+        // superlinearly at least.
+        let mk = |n| RateParams { n, beta: 0.95, h: 16, sigma: 1.0, b: 1.0 };
+        let t1 = mk(20).transient_boundary();
+        let t2 = mk(40).transient_boundary();
+        let ratio = t2 / t1;
+        assert!((5.0..12.0).contains(&ratio), "expected ~8x (n^3), got {ratio}");
+    }
+}

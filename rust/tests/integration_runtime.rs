@@ -1,0 +1,217 @@
+//! Integration: AOT artifacts load, compile and execute through PJRT with
+//! numerics matching rust-side oracles.
+
+use std::rc::Rc;
+
+use gossip_pga::coordinator::mixer::axpy;
+use gossip_pga::rng::Rng;
+use gossip_pga::runtime::{lit_f32, lit_i32, GradFn, MixFn, Runtime};
+
+fn runtime() -> Rc<Runtime> {
+    Rc::new(Runtime::load_default().expect("run `make artifacts` first"))
+}
+
+/// Rust-side oracle of the logistic loss+grad (mirrors kernels/ref.py).
+fn logreg_ref(w: &[f32], x: &[f32], y: &[f32], d: usize) -> (f32, Vec<f32>) {
+    let m = y.len();
+    let mut loss = 0.0f64;
+    let mut grad = vec![0.0f64; d];
+    for s in 0..m {
+        let row = &x[s * d..(s + 1) * d];
+        let z: f64 = row.iter().zip(w).map(|(a, b)| *a as f64 * *b as f64).sum();
+        let margin = y[s] as f64 * z;
+        // ln(1 + exp(-margin)), stable
+        loss += if margin > 0.0 {
+            (-margin).exp().ln_1p()
+        } else {
+            -margin + margin.exp().ln_1p()
+        };
+        let sig = 1.0 / (1.0 + margin.exp());
+        for (g, a) in grad.iter_mut().zip(row) {
+            *g -= y[s] as f64 * sig * *a as f64;
+        }
+    }
+    (
+        (loss / m as f64) as f32,
+        grad.into_iter().map(|g| (g / m as f64) as f32).collect(),
+    )
+}
+
+#[test]
+fn all_artifacts_compile() {
+    let rt = runtime();
+    let names: Vec<String> = rt.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+    assert!(names.len() >= 10, "expected a full artifact set, got {names:?}");
+    for name in names {
+        rt.executable(&name).unwrap_or_else(|e| panic!("compiling {name}: {e:#}"));
+    }
+}
+
+#[test]
+fn logreg_grad_matches_rust_oracle() {
+    let rt = runtime();
+    let spec = rt.manifest.find("logreg", "grad", None).unwrap().clone();
+    let d = spec.flat_dim;
+    let m = spec.meta_usize("batch").unwrap();
+    let mut rng = Rng::new(42);
+    let w = rng.normal_vec(d, 0.5);
+    let x = rng.normal_vec(m * d, 1.5);
+    let y: Vec<f32> = (0..m).map(|_| rng.sign_label(0.5)).collect();
+
+    let grad_fn = GradFn::new(rt, &spec.name).unwrap();
+    let mut grad = vec![0.0f32; d];
+    let batch = vec![
+        lit_f32(&x, &spec.inputs[1].shape).unwrap(),
+        lit_f32(&y, &spec.inputs[2].shape).unwrap(),
+    ];
+    let loss = grad_fn.call_into(&w, batch, &mut grad).unwrap();
+
+    let (loss_ref, grad_ref) = logreg_ref(&w, &x, &y, d);
+    assert!((loss - loss_ref).abs() < 2e-5 * (1.0 + loss_ref.abs()), "{loss} vs {loss_ref}");
+    for (a, b) in grad.iter().zip(&grad_ref) {
+        assert!((a - b).abs() < 2e-5 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn pallas_mix_artifact_matches_rust_mixer() {
+    // The Pallas gossip_mix kernel (HLO artifact) and the rust hot-path
+    // mixing loop must agree: they are the same operator at L1 and L3.
+    let rt = runtime();
+    let spec = rt.manifest.by_name("gossip_mix_k3_d4096").unwrap().clone();
+    let k = spec.inputs[0].shape[0];
+    let d = spec.inputs[1].shape[1];
+    let mut rng = Rng::new(7);
+    let weights: Vec<f32> = {
+        let raw: Vec<f32> = (0..k).map(|_| rng.f32() + 0.1).collect();
+        let s: f32 = raw.iter().sum();
+        raw.into_iter().map(|w| w / s).collect()
+    };
+    let stack = rng.normal_vec(k * d, 1.0);
+
+    let mix = MixFn::new(rt, &spec.name).unwrap();
+    let out = mix.call(&weights, &stack).unwrap();
+
+    // rust oracle via axpy (the Mixer inner loop).
+    let mut expect = vec![0.0f32; d];
+    for j in 0..k {
+        axpy(weights[j], &stack[j * d..(j + 1) * d], &mut expect);
+    }
+    for (a, b) in out.iter().zip(&expect) {
+        assert!((a - b).abs() < 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn fused_update_artifact_matches_unfused() {
+    let rt = runtime();
+    let spec = rt.manifest.by_name("fused_update_k3_d10").unwrap().clone();
+    let (k, d) = (3usize, 10usize);
+    let mut rng = Rng::new(9);
+    let weights = vec![0.5f32, 0.25, 0.25];
+    let stack = rng.normal_vec(k * d, 1.0);
+    let grad = rng.normal_vec(d, 1.0);
+    let lr = 0.2f32;
+
+    let inputs = vec![
+        lit_f32(&weights, &[k]).unwrap(),
+        lit_f32(&stack, &[k, d]).unwrap(),
+        lit_f32(&grad, &[d]).unwrap(),
+        lit_f32(&[lr], &[]).unwrap(),
+    ];
+    let outs = rt.run(&spec.name, &inputs).unwrap();
+    let fused = outs[0].to_vec::<f32>().unwrap();
+
+    // Unfused oracle: update row 0, then weighted sum.
+    let mut updated = stack.clone();
+    for (u, g) in updated[..d].iter_mut().zip(&grad) {
+        *u -= lr * g;
+    }
+    let mut expect = vec![0.0f32; d];
+    for j in 0..k {
+        axpy(weights[j], &updated[j * d..(j + 1) * d], &mut expect);
+    }
+    for (a, b) in fused.iter().zip(&expect) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn mlp_grad_executes_and_is_finite() {
+    let rt = runtime();
+    let spec = rt.manifest.find("mlp", "grad", None).unwrap().clone();
+    let d = spec.flat_dim;
+    let m = spec.meta_usize("batch").unwrap();
+    let in_dim = spec.meta_usize("in_dim").unwrap();
+    let classes = spec.meta_usize("classes").unwrap();
+    let layout = gossip_pga::model::mlp_layout(in_dim, spec.meta_usize("hidden").unwrap(), classes);
+    let flat = layout.init(3);
+    let mut rng = Rng::new(5);
+    let x = rng.normal_vec(m * in_dim, 1.0);
+    let y: Vec<i32> = (0..m).map(|_| rng.below(classes as u64) as i32).collect();
+
+    let grad_fn = GradFn::new(rt, &spec.name).unwrap();
+    let mut grad = vec![0.0f32; d];
+    let batch = vec![
+        lit_f32(&x, &spec.inputs[1].shape).unwrap(),
+        lit_i32(&y, &spec.inputs[2].shape).unwrap(),
+    ];
+    let loss = grad_fn.call_into(&flat, batch, &mut grad).unwrap();
+    // Fresh init on `classes` classes: loss near ln(classes).
+    assert!((loss - (classes as f32).ln()).abs() < 0.5, "loss {loss}");
+    assert!(grad.iter().all(|g| g.is_finite()));
+    assert!(grad.iter().any(|g| g.abs() > 1e-8), "gradient all-zero");
+}
+
+#[test]
+fn transformer_tiny_grad_executes() {
+    let rt = runtime();
+    let spec = rt.manifest.find("transformer", "grad", Some("tiny")).unwrap().clone();
+    let d = spec.flat_dim;
+    let cfg = gossip_pga::model::TransformerConfig {
+        vocab: spec.meta_usize("vocab").unwrap(),
+        d_model: spec.meta_usize("d_model").unwrap(),
+        n_layers: spec.meta_usize("n_layers").unwrap(),
+        n_heads: spec.meta_usize("n_heads").unwrap(),
+        d_ff: spec.meta_usize("d_ff").unwrap(),
+        seq_len: spec.meta_usize("seq_len").unwrap(),
+    };
+    let flat = gossip_pga::model::transformer_layout(&cfg).init(11);
+    let b = spec.meta_usize("batch").unwrap();
+    let mut rng = Rng::new(13);
+    let toks: Vec<i32> =
+        (0..b * (cfg.seq_len + 1)).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+
+    let grad_fn = GradFn::new(rt, &spec.name).unwrap();
+    let mut grad = vec![0.0f32; d];
+    let batch = vec![lit_i32(&toks, &spec.inputs[1].shape).unwrap()];
+    let loss = grad_fn.call_into(&flat, batch, &mut grad).unwrap();
+    // Uniform-random tokens + fresh init: loss ~ ln(vocab).
+    assert!((loss - (cfg.vocab as f32).ln()).abs() < 1.0, "loss {loss}");
+    assert!(grad.iter().all(|g| g.is_finite()));
+}
+
+#[test]
+fn grad_execution_is_deterministic() {
+    let rt = runtime();
+    let spec = rt.manifest.find("logreg", "grad", None).unwrap().clone();
+    let d = spec.flat_dim;
+    let m = spec.meta_usize("batch").unwrap();
+    let mut rng = Rng::new(21);
+    let w = rng.normal_vec(d, 1.0);
+    let x = rng.normal_vec(m * d, 1.0);
+    let y: Vec<f32> = (0..m).map(|_| rng.sign_label(0.5)).collect();
+    let grad_fn = GradFn::new(rt, &spec.name).unwrap();
+    let mut g1 = vec![0.0f32; d];
+    let mut g2 = vec![0.0f32; d];
+    let mk = || {
+        vec![
+            lit_f32(&x, &spec.inputs[1].shape).unwrap(),
+            lit_f32(&y, &spec.inputs[2].shape).unwrap(),
+        ]
+    };
+    let l1 = grad_fn.call_into(&w, mk(), &mut g1).unwrap();
+    let l2 = grad_fn.call_into(&w, mk(), &mut g2).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(g1, g2);
+}

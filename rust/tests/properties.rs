@@ -1,0 +1,217 @@
+//! Randomized property tests (in-repo kit, see `gossip_pga::proptest`)
+//! over the coordinator's invariants.
+
+use gossip_pga::collective::{bus, gossip_exchange, ring_all_reduce, run_nodes};
+use gossip_pga::coordinator::mixer::Mixer;
+use gossip_pga::linalg::beta_of;
+use gossip_pga::metrics::consensus_distance;
+use gossip_pga::proptest::{assert_close, check, ensure};
+use gossip_pga::topology::{spectral, Topology, TopologyKind};
+
+fn random_topology(rng: &mut gossip_pga::rng::Rng, n: usize) -> Topology {
+    match rng.below(6) {
+        0 => Topology::ring(n),
+        1 => Topology::grid(n),
+        2 => Topology::star(n),
+        3 => Topology::full(n),
+        4 => Topology::static_expo(n),
+        _ => Topology::one_peer_expo(n),
+    }
+}
+
+#[test]
+fn prop_weight_matrices_doubly_stochastic() {
+    check("W doubly stochastic for every topology/round", |rng| {
+        let n = 2 + rng.below(24) as usize;
+        let topo = random_topology(rng, n);
+        for r in 0..topo.rounds() {
+            let w = topo.weight_matrix(r);
+            ensure(w.row_sum_err() < 1e-9, format!("{:?} n={n} rows", topo.kind))?;
+            ensure(w.col_sum_err() < 1e-9, format!("{:?} n={n} cols", topo.kind))?;
+            ensure(
+                w.data.iter().all(|&v| v >= -1e-12),
+                format!("{:?} n={n} negative weight", topo.kind),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_beta_in_unit_interval() {
+    check("beta in [0, 1) for connected topologies", |rng| {
+        let n = 2 + rng.below(20) as usize;
+        let topo = random_topology(rng, n);
+        let beta = topo.beta();
+        ensure(
+            (0.0..1.0).contains(&beta),
+            format!("{:?} n={n}: beta={beta}", topo.kind),
+        )
+    });
+}
+
+#[test]
+fn prop_mixing_preserves_ensemble_mean() {
+    check("gossip mixing preserves the ensemble mean", |rng| {
+        let n = 2 + rng.below(12) as usize;
+        let d = 1 + rng.below(64) as usize;
+        let topo = random_topology(rng, n);
+        let mut params: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let mean_before: Vec<f32> = (0..d)
+            .map(|c| params.iter().map(|p| p[c]).sum::<f32>() / n as f32)
+            .collect();
+        let mut mixer = Mixer::new(&topo, d);
+        let rounds = 1 + rng.below(4) as usize;
+        for _ in 0..rounds {
+            mixer.gossip(&mut params);
+        }
+        let mean_after: Vec<f32> =
+            (0..d).map(|c| params.iter().map(|p| p[c]).sum::<f32>() / n as f32).collect();
+        assert_close(&mean_after, &mean_before, 1e-4)
+    });
+}
+
+#[test]
+fn prop_mixing_contracts_consensus_by_beta_squared() {
+    // One gossip round satisfies ||x' - xbar'||^2 <= beta^2 ||x - xbar||^2
+    // for STATIC symmetric topologies (the deterministic Lemma behind the
+    // paper's consensus lemmas).
+    check("per-round consensus contraction <= beta^2", |rng| {
+        let n = 3 + rng.below(16) as usize;
+        let topo = match rng.below(3) {
+            0 => Topology::ring(n),
+            1 => Topology::grid(n),
+            _ => Topology::static_expo(n),
+        };
+        let d = 1 + rng.below(32) as usize;
+        let mut params: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let before = consensus_distance(&params);
+        let mut mixer = Mixer::new(&topo, d);
+        mixer.gossip(&mut params);
+        let after = consensus_distance(&params);
+        let beta = topo.beta();
+        ensure(
+            after <= beta * beta * before * (1.0 + 1e-3) + 1e-9,
+            format!("{:?} n={n}: {after} > beta^2 * {before}", topo.kind),
+        )
+    });
+}
+
+#[test]
+fn prop_global_average_is_projection() {
+    check("global average is idempotent and exact", |rng| {
+        let n = 2 + rng.below(12) as usize;
+        let d = 1 + rng.below(64) as usize;
+        let topo = Topology::ring(n);
+        let mut params: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 2.0)).collect();
+        let mean: Vec<f32> =
+            (0..d).map(|c| params.iter().map(|p| p[c]).sum::<f32>() / n as f32).collect();
+        let mut mixer = Mixer::new(&topo, d);
+        mixer.global_average(&mut params);
+        for p in &params {
+            assert_close(p, &mean, 1e-5)?;
+        }
+        let snapshot = params.clone();
+        mixer.global_average(&mut params); // idempotent up to f32 rounding
+        for (p, s) in params.iter().zip(&snapshot) {
+            assert_close(p, s, 1e-6)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ring_allreduce_equals_sequential_sum() {
+    check("ring all-reduce == sequential mean over the bus", |rng| {
+        let n = 2 + rng.below(8) as usize;
+        let d = 1 + rng.below(200) as usize;
+        let inputs: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let expect: Vec<f32> =
+            (0..d).map(|c| inputs.iter().map(|p| p[c]).sum::<f32>() / n as f32).collect();
+        let eps = bus(n);
+        let inputs2 = inputs.clone();
+        let results = run_nodes(eps, move |mut ep| {
+            let mut x = inputs2[ep.rank].clone();
+            ring_all_reduce(&mut ep, &mut x)?;
+            Ok(x)
+        })
+        .map_err(|e| e.to_string())?;
+        for r in &results {
+            assert_close(r, &expect, 1e-4)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bus_gossip_equals_mixer() {
+    // The threaded message-passing gossip and the in-place Mixer are two
+    // implementations of the same operator x <- Wx.
+    check("bus gossip == mixer gossip", |rng| {
+        let n = 2 + rng.below(10) as usize;
+        let kind = match rng.below(3) {
+            0 => TopologyKind::Ring,
+            1 => TopologyKind::Grid,
+            _ => TopologyKind::StaticExponential,
+        };
+        let topo = Topology::new(kind, n);
+        let d = 1 + rng.below(32) as usize;
+        let params: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
+
+        let mut mixed = params.clone();
+        let mut mixer = Mixer::new(&topo, d);
+        mixer.gossip(&mut mixed);
+
+        let eps = bus(n);
+        let topo2 = topo.clone();
+        let params2 = params.clone();
+        let bus_out = run_nodes(eps, move |mut ep| {
+            let rank = ep.rank;
+            let row = topo2.weight_row(rank, 0);
+            let outn: Vec<usize> =
+                topo2.in_neighbors(rank, 0).into_iter().filter(|&j| j != rank).collect();
+            gossip_exchange(&mut ep, &params2[rank], &row, &outn)
+        })
+        .map_err(|e| e.to_string())?;
+        for (a, b) in bus_out.iter().zip(&mixed) {
+            assert_close(a, b, 1e-4)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_c_beta_d_beta_inequalities() {
+    // Table 2's caption inequality chain, for random beta/H.
+    check("C_beta <= min{1/(1-beta), H} = D_beta bound", |rng| {
+        let beta = rng.range(0.01, 0.999);
+        let h = 1 + rng.below(128) as usize;
+        let c = spectral::c_beta(beta, h);
+        let d = spectral::d_beta(beta, h);
+        ensure(c <= d + 1e-9, format!("C={c} > D={d} (beta={beta}, H={h})"))?;
+        ensure(c <= h as f64 + 1e-9, "C > H")?;
+        ensure(c <= 1.0 / (1.0 - beta) + 1e-9, "C > 1/(1-beta)")
+    });
+}
+
+#[test]
+fn prop_beta_of_convex_combination_with_avg_shrinks() {
+    // Mixing any doubly-stochastic W with the averaging matrix reduces beta:
+    // beta((1-t) W + t avg) = (1-t) beta(W).
+    check("beta shrinks linearly under averaging interpolation", |rng| {
+        let n = 3 + rng.below(10) as usize;
+        let topo = Topology::ring(n);
+        let w = topo.weight_matrix(0);
+        let avg = gossip_pga::linalg::Mat::avg(n);
+        let t = rng.range(0.1, 0.9);
+        let mut mixed = gossip_pga::linalg::Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                mixed[(i, j)] = (1.0 - t) * w[(i, j)] + t * avg[(i, j)];
+            }
+        }
+        let expect = (1.0 - t) * beta_of(&w);
+        let got = beta_of(&mixed);
+        ensure((got - expect).abs() < 1e-6, format!("{got} vs {expect}"))
+    });
+}
