@@ -7,7 +7,7 @@
 //!
 //!     cargo bench --bench abl_compression
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gossip_pga::compress::{Codec, ErrorFeedback, Identity, Int8, TopK};
 use gossip_pga::coordinator::mixer::Mixer;
@@ -15,6 +15,7 @@ use gossip_pga::coordinator::{logreg_workload, Workload};
 use gossip_pga::harness::suite::step_scale;
 use gossip_pga::harness::Table;
 use gossip_pga::model::logreg_layout;
+use gossip_pga::params::ParamMatrix;
 use gossip_pga::rng::Rng;
 use gossip_pga::runtime::{lit_f32, Runtime};
 use gossip_pga::topology::Topology;
@@ -22,7 +23,7 @@ use gossip_pga::topology::Topology;
 /// A hand-rolled PGA loop with compressed gossip (the Trainer always mixes
 /// exactly; this bench owns the mixing to inject codecs).
 fn run(
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     codec_for: &mut dyn FnMut(usize) -> Box<dyn FnMut(&[f32]) -> (Vec<f32>, usize)>,
     steps: usize,
     n: usize,
@@ -36,7 +37,7 @@ fn run(
     let d = grad.flat_dim();
     let topo = Topology::ring(n);
     let mut mixer = Mixer::new(&topo, d);
-    let mut params: Vec<Vec<f32>> = vec![init; n];
+    let mut params = ParamMatrix::broadcast(n, &init);
     let _ = logreg_layout(d);
     let mut rngs: Vec<Rng> = (0..n).map(|i| Rng::new(7).split(i as u64)).collect();
     let mut gbuf = vec![0.0f32; d];
@@ -54,15 +55,15 @@ fn run(
                 lit_f32(&x, &grad.spec.inputs[1].shape)?,
                 lit_f32(&y, &grad.spec.inputs[2].shape)?,
             ];
-            let loss = grad.call_into(&params[i], lits, &mut gbuf)?;
+            let loss = grad.call_into(params.row(i), lits, &mut gbuf)?;
             last_loss += loss as f64 / n as f64;
-            for (p, g) in params[i].iter_mut().zip(&gbuf) {
+            for (p, g) in params.row_mut(i).iter_mut().zip(&gbuf) {
                 *p -= 0.2 * g;
             }
         }
         if (k + 1) % h == 0 {
             // exact global average
-            mixer.global_average(&mut params);
+            mixer.global_average(&mut params, 1);
         } else {
             mixer.gossip_with(&mut params, |j, xj| {
                 let (dense, bytes) = codecs[j](xj);
@@ -75,7 +76,7 @@ fn run(
 }
 
 fn main() -> anyhow::Result<()> {
-    let rt = Rc::new(Runtime::load_default()?);
+    let rt = Arc::new(Runtime::load_default()?);
     let steps = step_scale(400);
     let (n, h) = (12usize, 8usize);
     println!("# Ablation: compressed gossip under Gossip-PGA (ring n = {n}, H = {h}, {steps} steps)\n");

@@ -8,7 +8,7 @@
 //!
 //!     cargo bench --bench fig6_vs_local
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gossip_pga::algorithms::AlgorithmKind;
 use gossip_pga::harness::suite::{run_logreg, step_scale, RunSpec};
@@ -18,7 +18,7 @@ use gossip_pga::runtime::Runtime;
 use gossip_pga::topology::Topology;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Rc::new(Runtime::load_default()?);
+    let rt = Arc::new(Runtime::load_default()?);
     let steps = step_scale(1000);
     let n = 36;
     let h = 16;

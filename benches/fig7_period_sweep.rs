@@ -6,7 +6,7 @@
 //!
 //!     cargo bench --bench fig7_period_sweep
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gossip_pga::algorithms::AlgorithmKind;
 use gossip_pga::harness::suite::{run_logreg, step_scale, RunSpec};
@@ -15,7 +15,7 @@ use gossip_pga::runtime::Runtime;
 use gossip_pga::topology::Topology;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Rc::new(Runtime::load_default()?);
+    let rt = Arc::new(Runtime::load_default()?);
     let steps = step_scale(1200);
     let n = 36;
     println!("# Figure 7: PGA vs Local SGD on the grid, H sweep, non-iid, n = {n}\n");

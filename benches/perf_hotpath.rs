@@ -6,10 +6,12 @@
 //!   * in-proc ring all-reduce (threaded bus)
 //!   * PJRT grad execution + literal round-trip per model
 //!   * a full coordinator step (logreg, n = 32)
+//!   * sequential vs threaded coordinator step (n = 16) — the scaling
+//!     headline; also asserts both runs end bit-identical
 //!
 //!     cargo bench --bench perf_hotpath
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gossip_pga::algorithms::AlgorithmKind;
 use gossip_pga::collective::{bus, ring_all_reduce, run_nodes};
@@ -18,9 +20,33 @@ use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::CostModel;
 use gossip_pga::harness::{fmt_duration, measure, Table};
 use gossip_pga::optim::LrSchedule;
+use gossip_pga::params::ParamMatrix;
 use gossip_pga::rng::Rng;
 use gossip_pga::runtime::{lit_f32, lit_i32, GradFn, Runtime};
 use gossip_pga::topology::Topology;
+
+fn random_matrix(rng: &mut Rng, n: usize, d: usize) -> ParamMatrix {
+    ParamMatrix::random(rng, n, d, 1.0)
+}
+
+fn trainer_opts(n: usize, threads: usize) -> TrainerOptions {
+    TrainerOptions {
+        algorithm: AlgorithmKind::GossipPga,
+        topology: Topology::ring(n),
+        period: 6,
+        aga_init_period: 4,
+        aga_warmup: 10,
+        lr: LrSchedule::Const { lr: 0.1 },
+        momentum: 0.0,
+        nesterov: false,
+        seed: 3,
+        slowmo: Default::default(),
+        cost: CostModel::calibrated_resnet50(),
+        cost_dim: 25_500_000,
+        log_every: 1000,
+        threads,
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     println!("# §Perf hot-path microbenchmarks\n");
@@ -41,19 +67,22 @@ fn main() -> anyhow::Result<()> {
     ]);
 
     // --- gossip mix, ring n=16 -------------------------------------------
+    let threads_avail = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
     for (dd, label) in [(1_000_000usize, "d = 1M"), (12_235_776, "d = 12.2M (e2e)")] {
         let topo = Topology::ring(16);
-        let mut params: Vec<Vec<f32>> = (0..16).map(|_| rng.normal_vec(dd, 1.0)).collect();
+        let mut params = random_matrix(&mut rng, 16, dd);
         let mut mixer = Mixer::new(&topo, dd);
-        let s = measure(2, 10, || mixer.gossip(&mut params));
-        t.rowv(vec![
-            "gossip mix (ring, n=16)".into(),
-            label.into(),
-            fmt_duration(s.mean),
-            fmt_duration(s.p95),
-            format!("{:.1} GB/s", (16 * 3 * dd * 4) as f64 / s.mean / 1e9),
-        ]);
-        let s = measure(2, 10, || mixer.global_average(&mut params));
+        for threads in [1usize, threads_avail] {
+            let s = measure(2, 10, || mixer.gossip(&mut params, threads));
+            t.rowv(vec![
+                format!("gossip mix (ring, n=16, t={threads})"),
+                label.into(),
+                fmt_duration(s.mean),
+                fmt_duration(s.p95),
+                format!("{:.1} GB/s", (16 * 3 * dd * 4) as f64 / s.mean / 1e9),
+            ]);
+        }
+        let s = measure(2, 10, || mixer.global_average(&mut params, 1));
         t.rowv(vec![
             "global average (n=16)".into(),
             label.into(),
@@ -83,7 +112,7 @@ fn main() -> anyhow::Result<()> {
     ]);
 
     // --- PJRT grad exec ----------------------------------------------------
-    let rt = Rc::new(Runtime::load_default()?);
+    let rt = Arc::new(Runtime::load_default()?);
     for (model, tag) in [("logreg", None), ("mlp", None), ("transformer", Some("tiny"))] {
         let spec = rt.manifest.find(model, "grad", tag)?.clone();
         let g = GradFn::new(rt.clone(), &spec.name)?;
@@ -117,22 +146,7 @@ fn main() -> anyhow::Result<()> {
     // --- full coordinator step --------------------------------------------
     let n = 32;
     let (workload, init) = logreg_workload(rt.clone(), n, 256, true, 3)?;
-    let opts = TrainerOptions {
-        algorithm: AlgorithmKind::GossipPga,
-        topology: Topology::ring(n),
-        period: 6,
-        aga_init_period: 4,
-        aga_warmup: 10,
-        lr: LrSchedule::Const { lr: 0.1 },
-        momentum: 0.0,
-        nesterov: false,
-        seed: 3,
-        slowmo: Default::default(),
-        cost: CostModel::calibrated_resnet50(),
-        cost_dim: 25_500_000,
-        log_every: 1000,
-    };
-    let mut trainer = Trainer::new(workload, init, opts);
+    let mut trainer = Trainer::new(workload, init, trainer_opts(n, 1))?;
     let s = measure(5, 50, || {
         trainer.step_once().unwrap();
     });
@@ -142,6 +156,50 @@ fn main() -> anyhow::Result<()> {
         fmt_duration(s.mean),
         fmt_duration(s.p95),
         format!("{:.0} worker-execs/s", n as f64 / s.mean),
+    ]);
+
+    // --- sequential vs threaded coordinator step ---------------------------
+    // Same seed, same step count: the throughput ratio is the parallel
+    // speedup, and the final parameters must agree bit-for-bit.
+    let n = 16;
+    let threads = threads_avail.min(n).max(2);
+    let (workload_seq, init_seq) = logreg_workload(rt.clone(), n, 256, true, 3)?;
+    let (workload_thr, init_thr) = logreg_workload(rt.clone(), n, 256, true, 3)?;
+    let mut seq = Trainer::new(workload_seq, init_seq, trainer_opts(n, 1))?;
+    let mut thr = Trainer::new(workload_thr, init_thr, trainer_opts(n, threads))?;
+    let s_seq = measure(5, 50, || {
+        seq.step_once().unwrap();
+    });
+    let s_thr = measure(5, 50, || {
+        thr.step_once().unwrap();
+    });
+    for i in 0..n {
+        assert_eq!(
+            seq.worker_params(i),
+            thr.worker_params(i),
+            "threaded run diverged from sequential at worker {i}"
+        );
+    }
+    t.rowv(vec![
+        "coordinator step, sequential".into(),
+        format!("n = {n}, PGA H=6, threads=1"),
+        fmt_duration(s_seq.mean),
+        fmt_duration(s_seq.p95),
+        format!("{:.0} worker-execs/s", n as f64 / s_seq.mean),
+    ]);
+    t.rowv(vec![
+        "coordinator step, threaded".into(),
+        format!("n = {n}, PGA H=6, threads={threads}"),
+        fmt_duration(s_thr.mean),
+        fmt_duration(s_thr.p95),
+        format!("{:.0} worker-execs/s", n as f64 / s_thr.mean),
+    ]);
+    t.rowv(vec![
+        "  -> threaded speedup".into(),
+        format!("{threads} threads"),
+        format!("{:.2}x", s_seq.mean / s_thr.mean),
+        "-".into(),
+        "(params bit-identical)".into(),
     ]);
 
     t.print();

@@ -7,7 +7,7 @@
 //!
 //!     cargo bench --bench tab10_scaling
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gossip_pga::algorithms::AlgorithmKind;
 use gossip_pga::harness::suite::{run_image, step_scale, RunSpec};
@@ -16,7 +16,7 @@ use gossip_pga::runtime::Runtime;
 use gossip_pga::topology::Topology;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Rc::new(Runtime::load_default()?);
+    let rt = Arc::new(Runtime::load_default()?);
     let budget = step_scale(4800); // total sample budget: steps(n) = budget / n
     println!("# Table 10: scaling (fixed total sample budget = {budget} worker-steps)\n");
 

@@ -8,7 +8,7 @@
 //!
 //!     cargo bench --bench tab11_bert_suite
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gossip_pga::algorithms::AlgorithmKind;
 use gossip_pga::harness::suite::{run_lm, step_scale, RunSpec};
@@ -17,7 +17,7 @@ use gossip_pga::runtime::Runtime;
 use gossip_pga::topology::Topology;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Rc::new(Runtime::load_default()?);
+    let rt = Arc::new(Runtime::load_default()?);
     let n = 8; // the paper's BERT runs use 8 nodes
     let base = step_scale(400);
     let h = 6;

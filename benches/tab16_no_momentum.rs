@@ -3,7 +3,7 @@
 //!
 //!     cargo bench --bench tab16_no_momentum
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gossip_pga::algorithms::AlgorithmKind;
 use gossip_pga::harness::suite::{run_image, step_scale, RunSpec};
@@ -12,7 +12,7 @@ use gossip_pga::runtime::Runtime;
 use gossip_pga::topology::Topology;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Rc::new(Runtime::load_default()?);
+    let rt = Arc::new(Runtime::load_default()?);
     let n = 32;
     let steps = step_scale(600);
     println!("# Table 16: plain SGD (no momentum), n = {n}, {steps} steps\n");

@@ -11,7 +11,7 @@
 //!
 //!     cargo bench --bench tab7_image_suite
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gossip_pga::algorithms::AlgorithmKind;
 use gossip_pga::costmodel::{AlgoCost, CostModel};
@@ -21,7 +21,7 @@ use gossip_pga::runtime::Runtime;
 use gossip_pga::topology::Topology;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Rc::new(Runtime::load_default()?);
+    let rt = Arc::new(Runtime::load_default()?);
     let n = 32;
     let base = step_scale(600);
     let h = 6; // paper's period for Local SGD and Gossip-PGA

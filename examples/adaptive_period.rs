@@ -4,7 +4,7 @@
 //!
 //!     make artifacts && cargo run --release --example adaptive_period
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gossip_pga::algorithms::{AlgorithmKind, CommAction, SlowMoParams};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
@@ -29,6 +29,7 @@ fn opts(algo: AlgorithmKind, n: usize, seed: u64) -> TrainerOptions {
         cost: CostModel::calibrated_resnet50(),
         cost_dim: 25_500_000,
         log_every: 50,
+        threads: 1,
     }
 }
 
@@ -36,11 +37,11 @@ fn main() -> anyhow::Result<()> {
     let n = 12;
     let steps = 900;
     let seed = 7;
-    let rt = Rc::new(Runtime::load_default()?);
+    let rt = Arc::new(Runtime::load_default()?);
 
     // --- Gossip-AGA with a sync trace -------------------------------------
     let (workload, init) = logreg_workload(rt.clone(), n, 2000, true, seed)?;
-    let mut aga = Trainer::new(workload, init, opts(AlgorithmKind::GossipAga, n, seed));
+    let mut aga = Trainer::new(workload, init, opts(AlgorithmKind::GossipAga, n, seed))?;
     println!("# Gossip-AGA on a {n}-node ring: global syncs and the adaptive period\n");
     let mut t = Table::new(&["sync at iter", "mean loss", "next period H"]);
     let mut syncs = 0usize;
@@ -65,7 +66,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- fixed-H PGA comparison on the simulated clock --------------------
     let (workload, init) = logreg_workload(rt.clone(), n, 2000, true, seed)?;
-    let mut pga = Trainer::new(workload, init, opts(AlgorithmKind::GossipPga, n, seed));
+    let mut pga = Trainer::new(workload, init, opts(AlgorithmKind::GossipPga, n, seed))?;
     let hist_pga = pga.run(steps, "pga")?;
     println!(
         "\nfixed-H PGA (H=6):  final loss {:.5}, sim time {:.2} h",

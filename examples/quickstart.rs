@@ -8,7 +8,7 @@
 //! and the simulated wall-clock (alpha-beta model calibrated to the paper's
 //! Table 17 cluster) shows PGA cheaper than Parallel per iteration.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gossip_pga::algorithms::{AlgorithmKind, SlowMoParams};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
         topo.beta()
     );
 
-    let rt = Rc::new(Runtime::load_default()?);
+    let rt = Arc::new(Runtime::load_default()?);
     let mut histories = Vec::new();
     for algo in [AlgorithmKind::Parallel, AlgorithmKind::Gossip, AlgorithmKind::GossipPga] {
         let (workload, init) = logreg_workload(rt.clone(), n, 2000, true, seed)?;
@@ -48,8 +48,9 @@ fn main() -> anyhow::Result<()> {
             cost: CostModel::calibrated_resnet50(),
             cost_dim: 25_500_000, // bill comms as if this were ResNet-50
             log_every: 25,
+            threads: 1,
         };
-        let mut trainer = Trainer::new(workload, init, opts);
+        let mut trainer = Trainer::new(workload, init, opts)?;
         let hist = trainer.run(steps, algo.display())?;
         println!(
             "{:<14} final loss {:.5}  sim time {:.2} h",

@@ -7,13 +7,13 @@
 //!     make artifacts && cargo run --release --example train_transformer
 //!
 //! Flags: --nodes N --steps S --tag tiny|e2e --algo pga|gossip|... --h H
-//!        --out csv_path
+//!        --threads T --out csv_path
 //!
 //! The synthetic corpus is an order-1 Markov chain with entropy floor
 //! ~ln(4)+noise (= the best achievable loss); watching the loss fall from
 //! ln(vocab) ~ 8.3 toward ~2 is the learning signal.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gossip_pga::algorithms::{AlgorithmKind, SlowMoParams};
 use gossip_pga::coordinator::{lm_eval_loss, lm_workload, Trainer, TrainerOptions};
@@ -36,13 +36,14 @@ fn main() -> anyhow::Result<()> {
     let tag = flag(&args, "tag", "e2e");
     let algo = AlgorithmKind::from_name(&flag(&args, "algo", "pga"))?;
     let h: usize = flag(&args, "h", "6").parse()?;
+    let threads: usize = flag(&args, "threads", "1").parse()?;
     let out = flag(&args, "out", "target/e2e_loss.csv");
     let lr: f64 = flag(&args, "lr", "0.1").parse()?;
     let momentum: f64 = flag(&args, "momentum", "0.9").parse()?;
     let seed = 1234;
 
     let topo = Topology::one_peer_expo(n);
-    let rt = Rc::new(Runtime::load_default()?);
+    let rt = Arc::new(Runtime::load_default()?);
     let (workload, init) = lm_workload(rt, &tag, seed)?;
     let d = workload.flat_dim();
     println!(
@@ -75,8 +76,9 @@ fn main() -> anyhow::Result<()> {
         cost: CostModel::calibrated_bert(),
         cost_dim: 330_000_000,
         log_every: 1,
+        threads,
     };
-    let mut trainer = Trainer::new(workload, init, opts);
+    let mut trainer = Trainer::new(workload, init, opts)?;
 
     let wall0 = std::time::Instant::now();
     let mut hist = gossip_pga::metrics::History::new(format!("{}-{tag}", algo.name()));

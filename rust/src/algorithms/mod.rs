@@ -78,6 +78,17 @@ impl AlgorithmKind {
     }
 }
 
+/// Mutable schedule state worth checkpointing (today: Gossip-AGA's
+/// adaptive-period recursion). Fixed schedules are stateless and export
+/// `None`; losing this state on resume silently resets Algorithm 2.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AgaState {
+    pub h: usize,
+    pub counter: usize,
+    pub f_init: f64,
+    pub f_init_ready: bool,
+}
+
 /// A communication schedule: maps iteration index (+ observed mean loss)
 /// to a [`CommAction`]. Stateful because Gossip-AGA adapts its period from
 /// observed losses.
@@ -89,6 +100,15 @@ pub trait Schedule: Send {
 
     /// Current period (for logging; `usize::MAX` = never).
     fn current_period(&self) -> usize;
+
+    /// Snapshot mutable state for checkpointing (`None` = stateless).
+    fn export_state(&self) -> Option<AgaState> {
+        None
+    }
+
+    /// Restore state exported by [`Schedule::export_state`] (no-op for
+    /// stateless schedules).
+    fn import_state(&mut self, _state: &AgaState) {}
 }
 
 /// Fixed-period schedules covering Parallel / Gossip / Local / PGA / SlowMo.
@@ -101,16 +121,22 @@ pub struct FixedSchedule {
 }
 
 impl FixedSchedule {
-    pub fn for_kind(kind: AlgorithmKind, h: usize) -> FixedSchedule {
-        match kind {
+    pub fn for_kind(kind: AlgorithmKind, h: usize) -> Result<FixedSchedule> {
+        // `action` computes (k + 1) % h, so h = 0 (e.g. `period = 0` in a
+        // config file) would panic with a divide-by-zero mid-training.
+        // Reject it up front for every kind that consults h.
+        if h == 0 && matches!(kind, AlgorithmKind::Local | AlgorithmKind::GossipPga | AlgorithmKind::SlowMo) {
+            bail!("{} requires a global-averaging period H >= 1, got 0", kind.display());
+        }
+        Ok(match kind {
             AlgorithmKind::Parallel => FixedSchedule { gossip_between: false, h: 1 },
             AlgorithmKind::Gossip => FixedSchedule { gossip_between: true, h: usize::MAX },
             AlgorithmKind::Local => FixedSchedule { gossip_between: false, h },
             AlgorithmKind::GossipPga | AlgorithmKind::SlowMo => {
                 FixedSchedule { gossip_between: true, h }
             }
-            AlgorithmKind::GossipAga => panic!("use AgaSchedule for Gossip-AGA"),
-        }
+            AlgorithmKind::GossipAga => bail!("use AgaSchedule for Gossip-AGA"),
+        })
     }
 }
 
@@ -143,9 +169,11 @@ pub struct AgaSchedule {
 }
 
 impl AgaSchedule {
-    pub fn new(h_init: usize, warmup: usize) -> Self {
-        assert!(h_init >= 1);
-        AgaSchedule { h_init, warmup, h: h_init, counter: 0, f_init: 0.0, f_init_ready: false }
+    pub fn new(h_init: usize, warmup: usize) -> Result<Self> {
+        if h_init == 0 {
+            bail!("Gossip-AGA requires an initial period H_init >= 1, got 0");
+        }
+        Ok(AgaSchedule { h_init, warmup, h: h_init, counter: 0, f_init: 0.0, f_init_ready: false })
     }
 }
 
@@ -173,14 +201,35 @@ impl Schedule for AgaSchedule {
     fn current_period(&self) -> usize {
         self.h
     }
+
+    fn export_state(&self) -> Option<AgaState> {
+        Some(AgaState {
+            h: self.h,
+            counter: self.counter,
+            f_init: self.f_init,
+            f_init_ready: self.f_init_ready,
+        })
+    }
+
+    fn import_state(&mut self, state: &AgaState) {
+        self.h = state.h.max(1);
+        self.counter = state.counter;
+        self.f_init = state.f_init;
+        self.f_init_ready = state.f_init_ready;
+    }
 }
 
-/// Build the right schedule for a kind.
-pub fn schedule_for(kind: AlgorithmKind, h: usize, aga_init: usize, aga_warmup: usize) -> Box<dyn Schedule> {
-    match kind {
-        AlgorithmKind::GossipAga => Box::new(AgaSchedule::new(aga_init, aga_warmup)),
-        k => Box::new(FixedSchedule::for_kind(k, h)),
-    }
+/// Build the right schedule for a kind (validates the period arguments).
+pub fn schedule_for(
+    kind: AlgorithmKind,
+    h: usize,
+    aga_init: usize,
+    aga_warmup: usize,
+) -> Result<Box<dyn Schedule>> {
+    Ok(match kind {
+        AlgorithmKind::GossipAga => Box::new(AgaSchedule::new(aga_init, aga_warmup)?),
+        k => Box::new(FixedSchedule::for_kind(k, h)?),
+    })
 }
 
 /// SlowMo outer-update hyper-parameters (Wang et al. 2019). The paper's
@@ -205,7 +254,7 @@ mod tests {
     use super::*;
 
     fn actions(kind: AlgorithmKind, h: usize, steps: usize) -> Vec<CommAction> {
-        let mut s = schedule_for(kind, h, 4, 10);
+        let mut s = schedule_for(kind, h, 4, 10).unwrap();
         (0..steps).map(|k| s.action(k, 1.0)).collect()
     }
 
@@ -264,8 +313,43 @@ mod tests {
     }
 
     #[test]
+    fn zero_period_is_rejected_not_divide_by_zero() {
+        // `period = 0` in a config used to reach `(k + 1) % 0` and panic.
+        for kind in [AlgorithmKind::Local, AlgorithmKind::GossipPga, AlgorithmKind::SlowMo] {
+            assert!(FixedSchedule::for_kind(kind, 0).is_err(), "{kind:?}");
+            assert!(schedule_for(kind, 0, 4, 10).is_err(), "{kind:?}");
+        }
+        // Parallel / Gossip never consult h; h = 0 is accepted there.
+        assert!(FixedSchedule::for_kind(AlgorithmKind::Parallel, 0).is_ok());
+        assert!(FixedSchedule::for_kind(AlgorithmKind::Gossip, 0).is_ok());
+        assert!(AgaSchedule::new(0, 10).is_err());
+        assert!(schedule_for(AlgorithmKind::GossipAga, 8, 0, 10).is_err());
+    }
+
+    #[test]
+    fn aga_state_export_import_roundtrip() {
+        let mut s = AgaSchedule::new(4, 8).unwrap();
+        let mut loss = 8.0;
+        for k in 0..40 {
+            s.action(k, loss);
+            loss *= 0.95;
+        }
+        let st = s.export_state().expect("AGA exports state");
+        let mut fresh = AgaSchedule::new(4, 8).unwrap();
+        assert_ne!(fresh.export_state().unwrap(), st);
+        fresh.import_state(&st);
+        assert_eq!(fresh.export_state().unwrap(), st);
+        // Replays identically from the imported state.
+        for k in 40..80 {
+            assert_eq!(fresh.action(k, 1.0), s.action(k, 1.0), "k={k}");
+        }
+        // Fixed schedules are stateless.
+        assert!(FixedSchedule::for_kind(AlgorithmKind::GossipPga, 4).unwrap().export_state().is_none());
+    }
+
+    #[test]
     fn aga_period_grows_as_loss_drops() {
-        let mut s = AgaSchedule::new(4, 8);
+        let mut s = AgaSchedule::new(4, 8).unwrap();
         let mut syncs = Vec::new();
         // Loss decays geometrically; period should increase over time.
         let mut k = 0;
@@ -287,7 +371,7 @@ mod tests {
     #[test]
     fn aga_never_stalls() {
         // Even with garbage losses the schedule must keep syncing.
-        let mut s = AgaSchedule::new(2, 4);
+        let mut s = AgaSchedule::new(2, 4).unwrap();
         let mut got_sync = 0;
         for k in 0..100 {
             if s.action(k, f64::NAN) == CommAction::GlobalAverage {

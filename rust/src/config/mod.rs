@@ -203,6 +203,9 @@ pub struct ExperimentConfig {
     pub samples_per_node: usize,
     pub batch: usize,
     pub log_every: usize,
+    /// Worker threads for the per-step phase 1-2 fan-out and row-parallel
+    /// mixing (1 = sequential; results are bit-identical at any value).
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -228,6 +231,7 @@ impl Default for ExperimentConfig {
             samples_per_node: 8000,
             batch: 32,
             log_every: 50,
+            threads: 1,
         }
     }
 }
@@ -256,6 +260,7 @@ impl ExperimentConfig {
             samples_per_node: doc.get_usize("data.samples_per_node", d.samples_per_node)?,
             batch: doc.get_usize("data.batch", d.batch)?,
             log_every: doc.get_usize("train.log_every", d.log_every)?,
+            threads: doc.get_usize("train.threads", d.threads)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -263,10 +268,17 @@ impl ExperimentConfig {
 
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.nodes >= 1, "nodes must be >= 1");
-        anyhow::ensure!(self.period >= 1, "period H must be >= 1");
+        // H = 0 would hit `(k + 1) % 0` in the schedule — reject here (and
+        // again in FixedSchedule::for_kind for non-config construction).
+        anyhow::ensure!(self.period >= 1, "period H must be >= 1 (got 0)");
+        anyhow::ensure!(
+            self.aga_init_period >= 1,
+            "aga_init_period H_init must be >= 1 (got 0)"
+        );
         anyhow::ensure!(self.steps >= 1, "steps must be >= 1");
         anyhow::ensure!(self.lr > 0.0, "lr must be positive");
         anyhow::ensure!((0.0..1.0).contains(&self.momentum), "momentum in [0,1)");
+        anyhow::ensure!(self.threads >= 1, "threads must be >= 1");
         Topology::from_name(&self.topology, self.nodes)?;
         Ok(())
     }
@@ -351,10 +363,27 @@ mod tests {
         cfg.period = 0;
         assert!(cfg.validate().is_err());
         let mut cfg = ExperimentConfig::default();
+        cfg.aga_init_period = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.threads = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
         cfg.topology = "nonsense".into();
         assert!(cfg.validate().is_err());
         let mut cfg = ExperimentConfig::default();
         cfg.momentum = 1.5;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn threads_parse_from_toml() {
+        let doc = Toml::parse("[train]\nthreads = 4\n").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.threads, 4);
+        // default is sequential
+        assert_eq!(ExperimentConfig::default().threads, 1);
+        let doc = Toml::parse("[train]\nthreads = 0\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
     }
 }

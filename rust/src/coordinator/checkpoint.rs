@@ -1,11 +1,26 @@
-//! Checkpointing: save/restore the full training state (worker parameters,
-//! optimizer velocities, step counter, simulated clock) to a compact
-//! binary file, so long runs resume exactly.
+//! Checkpointing: save/restore the full training state to a compact binary
+//! file, so long runs resume exactly.
 //!
-//! Format (little-endian):
+//! "Full" means everything the trainer mutates while stepping — not just
+//! parameters: worker parameters (n x d), optimizer velocities, step
+//! counter, simulated clock, the mixer's gossip clock (one-peer-expo must
+//! resume mid-period, not at round 0), Gossip-AGA's adaptive-period state
+//! (h / counter / F_init), SlowMo's outer buffers (x_prev_sync, slow
+//! momentum u), and each worker's 256-bit RNG state (so batch streams
+//! continue mid-stream). A v2 checkpoint restored into a *fresh* process
+//! replays bit-identically to an unbroken run.
+//!
+//! Format v2 (little-endian):
 //!   magic "GPGA" | u32 version | u64 step | f64 sim_seconds |
 //!   u32 n | u32 d | n * d f32 params | u8 has_velocity |
-//!   [n * d f32 velocities]
+//!   [n * d f32 velocities] | u64 gossip_clock | u8 has_schedule |
+//!   [u64 h | u64 counter | f64 f_init | u8 f_init_ready] |
+//!   u8 has_slowmo | [d f32 prev | d f32 u] |
+//!   u8 has_rng | [n * 4 u64 worker RNG states]
+//!
+//! v1 files (which end after the velocity block) still load; the extra
+//! state defaults to "unset" so old checkpoints keep their old meaning
+//! (callers must replay the data streams themselves, as before).
 //!
 //! No serde offline — the writer/reader below is the substrate.
 
@@ -14,18 +29,38 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::algorithms::AgaState;
+use crate::params::ParamMatrix;
+
 const MAGIC: &[u8; 4] = b"GPGA";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+
+/// SlowMo outer-loop state (Wang et al. 2019): the parameters at the last
+/// global sync and the slow-momentum buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlowMoState {
+    pub prev: Vec<f32>,
+    pub u: Vec<f32>,
+}
 
 /// A snapshot of trainer state.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
     pub step: u64,
     pub sim_seconds: f64,
-    /// Per-worker flat parameters (n x d).
-    pub params: Vec<Vec<f32>>,
-    /// Per-worker optimizer velocities (empty when momentum == 0).
-    pub velocities: Vec<Vec<f32>>,
+    /// Worker parameters, n x d.
+    pub params: ParamMatrix,
+    /// Optimizer velocities, n x d (None when momentum == 0 / pre-step).
+    pub velocities: Option<ParamMatrix>,
+    /// Gossip rounds executed (the time-varying topology's clock).
+    pub gossip_clock: u64,
+    /// Adaptive-schedule state (None for fixed schedules / v1 files).
+    pub schedule: Option<AgaState>,
+    /// SlowMo outer buffers (None for other algorithms / v1 files).
+    pub slowmo: Option<SlowMoState>,
+    /// Per-worker xoshiro256** states, n entries (empty for v1 files —
+    /// those resumes must replay the data streams externally).
+    pub rng_states: Vec<[u64; 4]>,
 }
 
 impl Checkpoint {
@@ -33,16 +68,29 @@ impl Checkpoint {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent).ok();
         }
-        let n = self.params.len();
-        let d = self.params.first().map_or(0, |p| p.len());
-        anyhow::ensure!(self.params.iter().all(|p| p.len() == d), "ragged params");
-        let has_vel = !self.velocities.is_empty();
-        if has_vel {
+        let n = self.params.n();
+        let d = self.params.d();
+        if let Some(v) = &self.velocities {
             anyhow::ensure!(
-                self.velocities.len() == n && self.velocities.iter().all(|v| v.len() == d),
-                "velocity shape mismatch"
+                v.n() == n && v.d() == d,
+                "velocity shape {}x{} mismatches params {}x{}",
+                v.n(),
+                v.d(),
+                n,
+                d
             );
         }
+        if let Some(sm) = &self.slowmo {
+            anyhow::ensure!(
+                sm.prev.len() == d && sm.u.len() == d,
+                "slowmo buffer length mismatch"
+            );
+        }
+        anyhow::ensure!(
+            self.rng_states.is_empty() || self.rng_states.len() == n,
+            "rng state count {} mismatches {n} workers",
+            self.rng_states.len()
+        );
         let mut f = std::io::BufWriter::new(
             std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
         );
@@ -52,13 +100,28 @@ impl Checkpoint {
         f.write_all(&self.sim_seconds.to_le_bytes())?;
         f.write_all(&(n as u32).to_le_bytes())?;
         f.write_all(&(d as u32).to_le_bytes())?;
-        for p in &self.params {
-            write_f32s(&mut f, p)?;
+        write_f32s(&mut f, self.params.as_slice())?;
+        f.write_all(&[self.velocities.is_some() as u8])?;
+        if let Some(v) = &self.velocities {
+            write_f32s(&mut f, v.as_slice())?;
         }
-        f.write_all(&[has_vel as u8])?;
-        if has_vel {
-            for v in &self.velocities {
-                write_f32s(&mut f, v)?;
+        f.write_all(&self.gossip_clock.to_le_bytes())?;
+        f.write_all(&[self.schedule.is_some() as u8])?;
+        if let Some(st) = &self.schedule {
+            f.write_all(&(st.h as u64).to_le_bytes())?;
+            f.write_all(&(st.counter as u64).to_le_bytes())?;
+            f.write_all(&st.f_init.to_le_bytes())?;
+            f.write_all(&[st.f_init_ready as u8])?;
+        }
+        f.write_all(&[self.slowmo.is_some() as u8])?;
+        if let Some(sm) = &self.slowmo {
+            write_f32s(&mut f, &sm.prev)?;
+            write_f32s(&mut f, &sm.u)?;
+        }
+        f.write_all(&[!self.rng_states.is_empty() as u8])?;
+        for st in &self.rng_states {
+            for w in st {
+                f.write_all(&w.to_le_bytes())?;
             }
         }
         Ok(())
@@ -74,47 +137,103 @@ impl Checkpoint {
             bail!("not a gossip-pga checkpoint (bad magic)");
         }
         let version = read_u32(&mut f)?;
-        if version != VERSION {
-            bail!("unsupported checkpoint version {version}");
+        if version == 0 || version > VERSION {
+            bail!("unsupported checkpoint version {version} (this build reads 1..={VERSION})");
         }
         let step = read_u64(&mut f)?;
         let sim_seconds = read_f64(&mut f)?;
         let n = read_u32(&mut f)? as usize;
         let d = read_u32(&mut f)? as usize;
         anyhow::ensure!(n < 1 << 20 && d < 1 << 31, "implausible checkpoint dims {n}x{d}");
-        let mut params = Vec::with_capacity(n);
-        for _ in 0..n {
-            params.push(read_f32s(&mut f, d)?);
-        }
-        let mut flag = [0u8; 1];
-        f.read_exact(&mut flag)?;
-        let velocities = if flag[0] == 1 {
-            let mut vs = Vec::with_capacity(n);
-            for _ in 0..n {
-                vs.push(read_f32s(&mut f, d)?);
-            }
-            vs
+        let params = ParamMatrix::from_flat(n, d, read_f32s(&mut f, n * d)?);
+        let velocities = if read_u8(&mut f)? == 1 {
+            Some(ParamMatrix::from_flat(n, d, read_f32s(&mut f, n * d)?))
         } else {
-            Vec::new()
+            None
         };
-        Ok(Checkpoint { step, sim_seconds, params, velocities })
+        // v1 files end here; the stateful extras default to "unset".
+        let (gossip_clock, schedule, slowmo, rng_states) = if version >= 2 {
+            let clock = read_u64(&mut f)?;
+            let schedule = if read_u8(&mut f)? == 1 {
+                Some(AgaState {
+                    h: read_u64(&mut f)? as usize,
+                    counter: read_u64(&mut f)? as usize,
+                    f_init: read_f64(&mut f)?,
+                    f_init_ready: read_u8(&mut f)? == 1,
+                })
+            } else {
+                None
+            };
+            let slowmo = if read_u8(&mut f)? == 1 {
+                Some(SlowMoState { prev: read_f32s(&mut f, d)?, u: read_f32s(&mut f, d)? })
+            } else {
+                None
+            };
+            let rng_states = if read_u8(&mut f)? == 1 {
+                let mut states = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let mut st = [0u64; 4];
+                    for w in st.iter_mut() {
+                        *w = read_u64(&mut f)?;
+                    }
+                    states.push(st);
+                }
+                states
+            } else {
+                Vec::new()
+            };
+            (clock, schedule, slowmo, rng_states)
+        } else {
+            (0, None, None, Vec::new())
+        };
+        Ok(Checkpoint {
+            step,
+            sim_seconds,
+            params,
+            velocities,
+            gossip_clock,
+            schedule,
+            slowmo,
+            rng_states,
+        })
     }
 }
 
+/// Elements staged per I/O chunk: checkpoints can be multi-GB (n x d at
+/// BERT scale), so the byte staging buffer stays bounded (~4 MiB) instead
+/// of doubling peak memory with a full-payload temporary.
+const IO_CHUNK: usize = 1 << 20;
+
 fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
-    // Bulk-write via byte view (f32 -> LE bytes; LE hosts are a straight copy).
-    let mut buf = Vec::with_capacity(xs.len() * 4);
-    for x in xs {
-        buf.extend_from_slice(&x.to_le_bytes());
+    let mut buf = Vec::with_capacity(IO_CHUNK.min(xs.len()) * 4);
+    for chunk in xs.chunks(IO_CHUNK.max(1)) {
+        buf.clear();
+        for x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
     }
-    w.write_all(&buf)?;
     Ok(())
 }
 
 fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
-    let mut buf = vec![0u8; n * 4];
-    r.read_exact(&mut buf)?;
-    Ok(buf.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+    let mut out = Vec::with_capacity(n);
+    let mut buf = vec![0u8; IO_CHUNK.min(n.max(1)) * 4];
+    let mut remaining = n;
+    while remaining > 0 {
+        let take = remaining.min(IO_CHUNK);
+        let bytes = &mut buf[..take * 4];
+        r.read_exact(bytes)?;
+        out.extend(bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])));
+        remaining -= take;
+    }
+    Ok(out)
+}
+
+fn read_u8<R: Read>(r: &mut R) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
 }
 
 fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
@@ -144,14 +263,21 @@ mod tests {
         std::env::temp_dir().join(format!("gpga_ckpt_{}_{name}.bin", std::process::id()))
     }
 
+    fn random_matrix(n: usize, d: usize, seed: u64, scale: f32) -> ParamMatrix {
+        ParamMatrix::random(&mut Rng::new(seed), n, d, scale)
+    }
+
     #[test]
     fn roundtrip_with_velocities() {
-        let mut rng = Rng::new(1);
         let ck = Checkpoint {
             step: 1234,
             sim_seconds: 56.78,
-            params: (0..3).map(|_| rng.normal_vec(17, 1.0)).collect(),
-            velocities: (0..3).map(|_| rng.normal_vec(17, 0.1)).collect(),
+            params: random_matrix(3, 17, 1, 1.0),
+            velocities: Some(random_matrix(3, 17, 2, 0.1)),
+            gossip_clock: 0,
+            schedule: None,
+            slowmo: None,
+            rng_states: Vec::new(),
         };
         let path = tmp("vel");
         ck.save(&path).unwrap();
@@ -165,13 +291,69 @@ mod tests {
         let ck = Checkpoint {
             step: 1,
             sim_seconds: 0.0,
-            params: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
-            velocities: Vec::new(),
+            params: ParamMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]),
+            velocities: None,
+            gossip_clock: 7,
+            schedule: None,
+            slowmo: None,
+            rng_states: Vec::new(),
         };
         let path = tmp("novel");
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(ck, back);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn roundtrip_full_stateful_fields() {
+        // The state-loss regression: gossip clock, AGA recursion state and
+        // SlowMo outer buffers must all survive the file.
+        let d = 9;
+        let mut rng = Rng::new(3);
+        let ck = Checkpoint {
+            step: 77,
+            sim_seconds: 12.5,
+            params: random_matrix(4, d, 4, 1.0),
+            velocities: Some(random_matrix(4, d, 5, 0.2)),
+            gossip_clock: 41,
+            schedule: Some(AgaState { h: 12, counter: 5, f_init: 0.6931, f_init_ready: true }),
+            slowmo: Some(SlowMoState {
+                prev: rng.normal_vec(d, 1.0),
+                u: rng.normal_vec(d, 0.5),
+            }),
+            rng_states: (0..4u64).map(|i| Rng::new(i).state()).collect(),
+        };
+        let path = tmp("stateful");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn loads_v1_files_with_default_extras() {
+        // Hand-write the v1 layout: it ends right after the velocity block.
+        let path = tmp("v1");
+        let params = vec![1.0f32, 2.0, 3.0, 4.0]; // n=2, d=2
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"GPGA");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&9u64.to_le_bytes());
+        bytes.extend_from_slice(&2.5f64.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        for x in &params {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        bytes.push(0); // no velocities
+        std::fs::write(&path, &bytes).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 9);
+        assert_eq!(back.params.as_slice(), &params[..]);
+        assert_eq!(back.gossip_clock, 0);
+        assert!(back.schedule.is_none() && back.slowmo.is_none() && back.velocities.is_none());
+        assert!(back.rng_states.is_empty());
         std::fs::remove_file(path).ok();
     }
 
@@ -184,13 +366,43 @@ mod tests {
     }
 
     #[test]
-    fn rejects_ragged_params() {
+    fn rejects_future_version() {
+        let path = tmp("future");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"GPGA");
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_velocity_shape_mismatch() {
         let ck = Checkpoint {
             step: 0,
             sim_seconds: 0.0,
-            params: vec![vec![1.0], vec![1.0, 2.0]],
-            velocities: Vec::new(),
+            params: ParamMatrix::zeros(2, 3),
+            velocities: Some(ParamMatrix::zeros(2, 4)),
+            gossip_clock: 0,
+            schedule: None,
+            slowmo: None,
+            rng_states: Vec::new(),
         };
-        assert!(ck.save(&tmp("ragged")).is_err());
+        assert!(ck.save(&tmp("velmis")).is_err());
+    }
+
+    #[test]
+    fn rejects_rng_state_count_mismatch() {
+        let ck = Checkpoint {
+            step: 0,
+            sim_seconds: 0.0,
+            params: ParamMatrix::zeros(3, 2),
+            velocities: None,
+            gossip_clock: 0,
+            schedule: None,
+            slowmo: None,
+            rng_states: vec![[1, 2, 3, 4]; 2], // 2 states for 3 workers
+        };
+        assert!(ck.save(&tmp("rngmis")).is_err());
     }
 }

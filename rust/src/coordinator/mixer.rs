@@ -1,23 +1,35 @@
 //! The gossip-mixing engine: the L3 hot path.
 //!
-//! Applies one communication action to the ensemble of worker parameter
-//! vectors, in place and without per-step allocation (scratch buffers are
-//! owned by the [`Mixer`] and reused). The weighted-sum inner loop is the
-//! rust counterpart of the Pallas `gossip_mix` kernel; equality between the
-//! two is asserted by `rust/tests/integration_runtime.rs`.
+//! Applies one communication action to the contiguous [`ParamMatrix`] of
+//! worker parameters, in place and without per-step allocation: the mixer
+//! owns a same-shape scratch matrix, writes the next iterate into it, and
+//! swaps storage with the input (an O(1) pointer exchange). The weighted-sum
+//! inner loop is the rust counterpart of the Pallas `gossip_mix` kernel;
+//! equality between the two is asserted by `rust/tests/integration_runtime.rs`.
+//!
+//! §Threads: every output row i depends only on *input* rows, so the row
+//! loop shards freely across `threads` scoped workers (disjoint
+//! `chunks_mut(d)` views of the scratch). Each row's arithmetic is
+//! identical in sequential and threaded runs — results are bit-equal by
+//! construction, asserted by `rust/tests/properties.rs`.
 
+use crate::params::ParamMatrix;
 use crate::topology::Topology;
 
 /// Reusable mixing engine over `n` workers x `d` parameters.
 pub struct Mixer {
     n: usize,
     d: usize,
-    /// Scratch: next-iterate buffers, swapped with worker params after mix.
-    scratch: Vec<Vec<f32>>,
+    /// Scratch: the next-iterate matrix, storage-swapped with the input
+    /// after each mix.
+    scratch: ParamMatrix,
+    /// Mean buffer for [`Mixer::global_average`].
+    mean: Vec<f32>,
     /// Cached weight rows per round: rows[round][i] = Vec<(j, w)>.
     rows: Vec<Vec<Vec<(usize, f32)>>>,
     rounds: usize,
     /// Gossip rounds executed so far (advances the time-varying topology).
+    /// Checkpointed: one-peer-expo must resume mid-period, not at round 0.
     pub gossip_clock: usize,
 }
 
@@ -37,63 +49,65 @@ impl Mixer {
                     .collect()
             })
             .collect();
-        Mixer { n, d, scratch: vec![vec![0.0; d]; n], rows, rounds, gossip_clock: 0 }
+        Mixer {
+            n,
+            d,
+            scratch: ParamMatrix::zeros(n, d),
+            mean: vec![0.0; d],
+            rows,
+            rounds,
+            gossip_clock: 0,
+        }
     }
 
-    /// One gossip round: params[i] <- sum_j w_ij params[j]. Advances the
-    /// topology clock (matters for one-peer exponential graphs).
+    /// One gossip round: row(i) <- sum_j w_ij row(j), sharded over
+    /// `threads` scoped workers. Advances the topology clock (matters for
+    /// one-peer exponential graphs).
     ///
     /// §Perf: rows of 2 or 3 neighbors (one-peer / ring — the common cases)
     /// are fused into a single output pass instead of init + (k-1) axpy
     /// passes: one write traversal of d instead of k, ~1.5x measured (see
     /// EXPERIMENTS.md §Perf).
-    pub fn gossip(&mut self, params: &mut [Vec<f32>]) {
-        debug_assert_eq!(params.len(), self.n);
+    pub fn gossip(&mut self, params: &mut ParamMatrix, threads: usize) {
+        debug_assert!(params.n() == self.n && params.d() == self.d);
         let round = self.gossip_clock % self.rounds;
-        for i in 0..self.n {
-            let row = &self.rows[round][i];
-            let out = &mut self.scratch[i];
-            match row.len() {
-                1 => out.copy_from_slice(&params[row[0].0]),
-                2 => {
-                    let (j0, w0) = row[0];
-                    let (j1, w1) = row[1];
-                    fused2(w0, &params[j0], w1, &params[j1], out);
-                }
-                3 => {
-                    let (j0, w0) = row[0];
-                    let (j1, w1) = row[1];
-                    let (j2, w2) = row[2];
-                    fused3(w0, &params[j0], w1, &params[j1], w2, &params[j2], out);
-                }
-                _ => {
-                    // General case: init with the first source, accumulate.
-                    let (j0, w0) = row[0];
-                    let src0 = &params[j0];
-                    for (o, s) in out.iter_mut().zip(src0) {
-                        *o = w0 * s;
-                    }
-                    for &(j, w) in &row[1..] {
-                        axpy(w, &params[j], out);
-                    }
-                }
+        let weight_rows = &self.rows[round];
+        let d = self.d;
+        let src = &*params;
+        let t = threads.max(1).min(self.n);
+        if t <= 1 {
+            for (i, out) in self.scratch.rows_mut().enumerate() {
+                mix_row(&weight_rows[i], src, out);
             }
+        } else {
+            let per = (self.n + t - 1) / t;
+            let scratch = self.scratch.as_mut_slice();
+            std::thread::scope(|s| {
+                for (ci, chunk) in scratch.chunks_mut(per * d).enumerate() {
+                    s.spawn(move || {
+                        for (k, out) in chunk.chunks_mut(d).enumerate() {
+                            mix_row(&weight_rows[ci * per + k], src, out);
+                        }
+                    });
+                }
+            });
         }
-        for (p, s) in params.iter_mut().zip(&mut self.scratch) {
-            std::mem::swap(p, s);
-        }
+        params.swap_data(&mut self.scratch);
         self.gossip_clock += 1;
     }
 
     /// One gossip round where each node's *transmitted* vector is
     /// transformed by `transmit(j, x_j)` (e.g. compressed, see
     /// [`crate::compress`]); the self term always uses the local copy.
-    /// `params[i] <- w_ii x_i + sum_{j != i} w_ij transmit(j, x_j)`.
-    pub fn gossip_with<F>(&mut self, params: &mut [Vec<f32>], mut transmit: F)
+    /// `row(i) <- w_ii x_i + sum_{j != i} w_ij transmit(j, x_j)`.
+    ///
+    /// Sequential: `transmit` is `FnMut` (codecs carry error-feedback
+    /// state), so the transmit pass is inherently ordered by node index.
+    pub fn gossip_with<F>(&mut self, params: &mut ParamMatrix, mut transmit: F)
     where
         F: FnMut(usize, &[f32]) -> Vec<f32>,
     {
-        debug_assert_eq!(params.len(), self.n);
+        debug_assert!(params.n() == self.n && params.d() == self.d);
         let round = self.gossip_clock % self.rounds;
         // Which nodes are actually listened to this round?
         let mut needed = vec![false; self.n];
@@ -105,48 +119,124 @@ impl Mixer {
             }
         }
         let tx: Vec<Option<Vec<f32>>> = (0..self.n)
-            .map(|j| needed[j].then(|| transmit(j, &params[j])))
+            .map(|j| needed[j].then(|| transmit(j, params.row(j))))
             .collect();
-        for i in 0..self.n {
-            let row = &self.rows[round][i];
-            let out = &mut self.scratch[i];
-            out.iter_mut().for_each(|v| *v = 0.0);
-            for &(j, w) in row {
+        for (i, out) in self.scratch.rows_mut().enumerate() {
+            out.fill(0.0);
+            for &(j, w) in &self.rows[round][i] {
                 let src: &[f32] =
-                    if j == i { &params[i] } else { tx[j].as_deref().expect("needed") };
+                    if j == i { params.row(i) } else { tx[j].as_deref().expect("needed") };
                 axpy(w, src, out);
             }
         }
-        for (p, s) in params.iter_mut().zip(&mut self.scratch) {
-            std::mem::swap(p, s);
-        }
+        params.swap_data(&mut self.scratch);
         self.gossip_clock += 1;
     }
 
     /// Exact global average (the All-Reduce step): every worker gets the
-    /// ensemble mean.
-    pub fn global_average(&mut self, params: &mut [Vec<f32>]) {
-        debug_assert_eq!(params.len(), self.n);
-        let (first, rest) = self.scratch.split_first_mut().expect("n >= 1");
-        let mean = first;
-        mean.copy_from_slice(&params[0]);
-        for p in &params[1..] {
-            for (m, v) in mean.iter_mut().zip(p) {
-                *m += v;
+    /// ensemble mean. Threaded runs shard the mean by column ranges and the
+    /// broadcast by rows; per-column accumulation order (rows ascending) is
+    /// fixed, so all thread counts agree bitwise.
+    pub fn global_average(&mut self, params: &mut ParamMatrix, threads: usize) {
+        debug_assert!(params.n() == self.n && params.d() == self.d);
+        let n = self.n;
+        let d = self.d;
+        let inv = 1.0 / n as f32;
+        let t = threads.max(1);
+        let src = params.as_slice();
+        if t <= 1 || d < 2 {
+            self.mean.copy_from_slice(&src[..d]);
+            for r in 1..n {
+                for (m, v) in self.mean.iter_mut().zip(&src[r * d..(r + 1) * d]) {
+                    *m += v;
+                }
             }
+            for m in self.mean.iter_mut() {
+                *m *= inv;
+            }
+        } else {
+            let per = (d + t - 1) / t;
+            let mean = self.mean.as_mut_slice();
+            std::thread::scope(|s| {
+                for (ci, mchunk) in mean.chunks_mut(per).enumerate() {
+                    s.spawn(move || {
+                        let off = ci * per;
+                        let len = mchunk.len();
+                        mchunk.copy_from_slice(&src[off..off + len]);
+                        for r in 1..n {
+                            let row = &src[r * d + off..r * d + off + len];
+                            for (m, v) in mchunk.iter_mut().zip(row) {
+                                *m += v;
+                            }
+                        }
+                        for m in mchunk.iter_mut() {
+                            *m *= inv;
+                        }
+                    });
+                }
+            });
         }
-        let inv = 1.0 / self.n as f32;
-        for m in mean.iter_mut() {
-            *m *= inv;
+        let mean = &self.mean;
+        let rt = t.min(n);
+        if rt <= 1 {
+            for row in params.rows_mut() {
+                row.copy_from_slice(mean);
+            }
+        } else {
+            let per = (n + rt - 1) / rt;
+            std::thread::scope(|s| {
+                for chunk in params.as_mut_slice().chunks_mut(per * d) {
+                    s.spawn(move || {
+                        for row in chunk.chunks_mut(d) {
+                            row.copy_from_slice(mean);
+                        }
+                    });
+                }
+            });
         }
-        for p in params.iter_mut() {
-            p.copy_from_slice(mean);
-        }
-        let _ = rest;
     }
 
     pub fn d(&self) -> usize {
         self.d
+    }
+}
+
+/// One output row: out = sum_j w_ij * src.row(j), with the 2/3-neighbor
+/// fast paths fused into a single pass.
+fn mix_row(row: &[(usize, f32)], src: &ParamMatrix, out: &mut [f32]) {
+    match row.len() {
+        0 => out.fill(0.0),
+        1 => {
+            let (j0, w0) = row[0];
+            if w0 == 1.0 {
+                out.copy_from_slice(src.row(j0));
+            } else {
+                for (o, x) in out.iter_mut().zip(src.row(j0)) {
+                    *o = w0 * x;
+                }
+            }
+        }
+        2 => {
+            let (j0, w0) = row[0];
+            let (j1, w1) = row[1];
+            fused2(w0, src.row(j0), w1, src.row(j1), out);
+        }
+        3 => {
+            let (j0, w0) = row[0];
+            let (j1, w1) = row[1];
+            let (j2, w2) = row[2];
+            fused3(w0, src.row(j0), w1, src.row(j1), w2, src.row(j2), out);
+        }
+        _ => {
+            // General case: init with the first source, accumulate.
+            let (j0, w0) = row[0];
+            for (o, s) in out.iter_mut().zip(src.row(j0)) {
+                *o = w0 * s;
+            }
+            for &(j, w) in &row[1..] {
+                axpy(w, src.row(j), out);
+            }
+        }
     }
 }
 
@@ -197,9 +287,8 @@ mod tests {
     use crate::metrics::consensus_distance;
     use crate::rng::Rng;
 
-    fn random_params(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
-        let mut rng = Rng::new(seed);
-        (0..n).map(|_| rng.normal_vec(d, 1.0)).collect()
+    fn random_params(n: usize, d: usize, seed: u64) -> ParamMatrix {
+        ParamMatrix::random(&mut Rng::new(seed), n, d, 1.0)
     }
 
     #[test]
@@ -226,14 +315,14 @@ mod tests {
             .map(|i| {
                 (0..4)
                     .map(|c| {
-                        (0..6).map(|j| w[(i, j)] as f32 * params[j][c]).sum::<f32>()
+                        (0..6).map(|j| w[(i, j)] as f32 * params.row(j)[c]).sum::<f32>()
                     })
                     .collect()
             })
             .collect();
         let mut mixer = Mixer::new(&topo, 4);
-        mixer.gossip(&mut params);
-        for (p, e) in params.iter().zip(&expect) {
+        mixer.gossip(&mut params, 1);
+        for (p, e) in params.rows().zip(&expect) {
             for (a, b) in p.iter().zip(e) {
                 assert!((a - b).abs() < 1e-5);
             }
@@ -244,16 +333,13 @@ mod tests {
     fn gossip_preserves_mean() {
         let topo = Topology::grid(9);
         let mut params = random_params(9, 16, 3);
-        let mean_before: Vec<f64> = (0..16)
-            .map(|c| params.iter().map(|p| p[c] as f64).sum::<f64>() / 9.0)
-            .collect();
+        let mean_before = params.mean_row();
         let mut mixer = Mixer::new(&topo, 16);
         for _ in 0..5 {
-            mixer.gossip(&mut params);
+            mixer.gossip(&mut params, 1);
         }
-        for c in 0..16 {
-            let after: f64 = params.iter().map(|p| p[c] as f64).sum::<f64>() / 9.0;
-            assert!((after - mean_before[c]).abs() < 1e-4);
+        for (after, before) in params.mean_row().iter().zip(&mean_before) {
+            assert!((after - before).abs() < 1e-4);
         }
     }
 
@@ -263,7 +349,7 @@ mod tests {
         let mut params = random_params(10, 8, 4);
         let before = consensus_distance(&params);
         let mut mixer = Mixer::new(&topo, 8);
-        mixer.gossip(&mut params);
+        mixer.gossip(&mut params, 1);
         let after = consensus_distance(&params);
         assert!(after < before, "{after} !< {before}");
         // And beta^2 bounds the per-step contraction in expectation-ish:
@@ -273,14 +359,44 @@ mod tests {
     }
 
     #[test]
+    fn threaded_gossip_is_bit_identical_to_sequential() {
+        for topo in [Topology::ring(10), Topology::one_peer_expo(8), Topology::grid(9)] {
+            let n = topo.n;
+            let mut seq = random_params(n, 33, 5);
+            let mut thr = seq.clone();
+            let mut m1 = Mixer::new(&topo, 33);
+            let mut m2 = Mixer::new(&topo, 33);
+            for _ in 0..topo.rounds() + 2 {
+                m1.gossip(&mut seq, 1);
+                m2.gossip(&mut thr, 4);
+                assert_eq!(seq, thr, "{:?}", topo.kind);
+            }
+            m1.global_average(&mut seq, 1);
+            m2.global_average(&mut thr, 4);
+            assert_eq!(seq, thr, "{:?} global average", topo.kind);
+        }
+    }
+
+    #[test]
+    fn threaded_gossip_handles_more_threads_than_rows() {
+        let topo = Topology::ring(3);
+        let mut a = random_params(3, 7, 12);
+        let mut b = a.clone();
+        Mixer::new(&topo, 7).gossip(&mut a, 64);
+        Mixer::new(&topo, 7).gossip(&mut b, 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn global_average_zeroes_consensus() {
         let topo = Topology::ring(7);
         let mut params = random_params(7, 8, 5);
         let mut mixer = Mixer::new(&topo, 8);
-        mixer.global_average(&mut params);
+        mixer.global_average(&mut params, 1);
         assert!(consensus_distance(&params) < 1e-10);
-        for p in &params[1..] {
-            assert_eq!(p, &params[0]);
+        let first = params.row(0).to_vec();
+        for i in 1..7 {
+            assert_eq!(params.row(i), &first[..]);
         }
     }
 
@@ -290,14 +406,12 @@ mod tests {
         let n = 8;
         let topo = Topology::one_peer_expo(n);
         let mut params = random_params(n, 4, 6);
-        let mean: Vec<f32> = (0..4)
-            .map(|c| params.iter().map(|p| p[c]).sum::<f32>() / n as f32)
-            .collect();
+        let mean = params.mean_row();
         let mut mixer = Mixer::new(&topo, 4);
         for _ in 0..topo.rounds() {
-            mixer.gossip(&mut params);
+            mixer.gossip(&mut params, 1);
         }
-        for p in &params {
+        for p in params.rows() {
             for (a, m) in p.iter().zip(&mean) {
                 assert!((a - m).abs() < 1e-5);
             }
@@ -312,9 +426,9 @@ mod tests {
         let mut b = params.clone();
         let mut m1 = Mixer::new(&topo, 16);
         let mut m2 = Mixer::new(&topo, 16);
-        m1.gossip(&mut a);
+        m1.gossip(&mut a, 1);
         m2.gossip_with(&mut b, |_j, x| x.to_vec());
-        for (pa, pb) in a.iter().zip(&b) {
+        for (pa, pb) in a.rows().zip(b.rows()) {
             for (x, y) in pa.iter().zip(pb) {
                 assert!((x - y).abs() < 1e-6);
             }
@@ -330,10 +444,10 @@ mod tests {
         let mut comp = params.clone();
         let mut m1 = Mixer::new(&topo, 256);
         let mut m2 = Mixer::new(&topo, 256);
-        m1.gossip(&mut plain);
+        m1.gossip(&mut plain, 1);
         let codec = Int8::default();
         m2.gossip_with(&mut comp, |_j, x| codec.compress(x).dense);
-        for (pa, pb) in plain.iter().zip(&comp) {
+        for (pa, pb) in plain.rows().zip(comp.rows()) {
             for (x, y) in pa.iter().zip(pb) {
                 assert!((x - y).abs() < 0.05, "{x} vs {y}");
             }
@@ -342,9 +456,8 @@ mod tests {
 
     #[test]
     fn identity_topology_is_noop() {
-        // W = I via a 1-node "full" graph per worker is equivalent to Local
-        // SGD's no-comm branch; emulate with ring(1)... instead verify that
-        // a star row with weight 1 on self leaves params unchanged.
+        // A row with weight 1 on self must leave params bit-unchanged (the
+        // single-neighbor fast path takes the copy branch).
         let topo = Topology::ring(3);
         let mut mixer = Mixer::new(&topo, 4);
         // Overwrite cached rows with identity.
@@ -353,7 +466,7 @@ mod tests {
         }
         let mut params = random_params(3, 4, 7);
         let before = params.clone();
-        mixer.gossip(&mut params);
+        mixer.gossip(&mut params, 1);
         assert_eq!(params, before);
     }
 }

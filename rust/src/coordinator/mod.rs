@@ -10,13 +10,23 @@
 //!   4. the [`SimClock`] advances by the alpha-beta cost of the action so a
 //!      single-process run reports paper-style wall-clock columns.
 //!
-//! Workers are deterministic: worker i's batch stream is `seed.split(i)`,
-//! so every experiment is replayable bit-for-bit.
+//! Storage: all worker parameters live in one contiguous
+//! [`ParamMatrix`] (worker i = row i). Phases 1-2 shard workers across
+//! [`TrainerOptions::threads`] scoped threads — each worker owns its RNG,
+//! gradient buffer, batch scratch and parameter row, so the split is
+//! data-race-free by construction — and the gossip mix shards output rows
+//! the same way. This is how the deployed decentralized baselines run
+//! (one process per node); here it buys back the n-fold serialization tax
+//! of simulating n workers on one thread.
+//!
+//! Workers are deterministic: worker i's batch stream is `seed.split(i)`
+//! and every reduction fixes its order, so sequential and threaded runs of
+//! the same seed agree bit-for-bit (asserted by rust/tests/properties.rs).
 
 pub mod checkpoint;
 pub mod mixer;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -27,6 +37,7 @@ use crate::data::{ClusterData, LogRegData, TokenCorpus};
 use crate::metrics::{consensus_distance, History, Record};
 use crate::model;
 use crate::optim::{LrSchedule, Optimizer};
+use crate::params::ParamMatrix;
 use crate::rng::Rng;
 use crate::runtime::{lit_f32, lit_i32, EvalFn, GradFn, Runtime};
 use crate::topology::Topology;
@@ -55,7 +66,8 @@ impl Workload {
         self.grad_fn().spec.meta_usize("batch").unwrap_or(32)
     }
 
-    /// Build this step's batch literals for `worker`.
+    /// Build this step's batch literals for `worker`. `&self` + caller-owned
+    /// rng/scratch: safe to call for distinct workers concurrently.
     fn sample(&self, worker: usize, rng: &mut Rng, scratch: &mut BatchScratch) -> Result<Vec<xla::Literal>> {
         match self {
             Workload::LogReg { data, grad } => {
@@ -110,6 +122,9 @@ pub struct TrainerOptions {
     /// Record a metrics row every `log_every` steps (consensus distance is
     /// O(n d), so dense logging of big models costs time).
     pub log_every: usize,
+    /// Worker threads for phases 1-2 and the row-parallel mix. 1 =
+    /// sequential (the default); results are bit-identical at any value.
+    pub threads: usize,
 }
 
 impl TrainerOptions {
@@ -132,17 +147,20 @@ impl TrainerOptions {
             cost: CostModel::calibrated_resnet50(),
             cost_dim,
             log_every: cfg.log_every,
+            threads: cfg.threads,
         }
     }
 }
 
-/// Per-worker state.
+/// Per-worker state (everything but the parameter row, which lives in the
+/// trainer's [`ParamMatrix`]). Each worker owns its batch scratch so
+/// phase 1-2 can run one worker per thread.
 struct Worker {
-    params: Vec<f32>,
     opt: Optimizer,
     rng: Rng,
     grad: Vec<f32>,
     loss: f32,
+    scratch: BatchScratch,
 }
 
 /// The coordinator.
@@ -150,6 +168,8 @@ pub struct Trainer {
     pub workload: Workload,
     opts: TrainerOptions,
     workers: Vec<Worker>,
+    /// n x d worker parameters (worker i = row i).
+    params: ParamMatrix,
     mixer: mixer::Mixer,
     schedule: Box<dyn Schedule>,
     clock: SimClock,
@@ -157,20 +177,19 @@ pub struct Trainer {
     slowmo_prev: Vec<f32>,
     slowmo_u: Vec<f32>,
     step: usize,
-    scratch: BatchScratch,
-    /// Parameter matrix view used by the mixer (moved in/out each action).
-    params_buf: Vec<Vec<f32>>,
+    /// Scratch for [`Trainer::global_loss`] / mean-parameter evaluation.
+    eval_scratch: BatchScratch,
+    mean_buf: Vec<f32>,
 }
 
 impl Trainer {
-    pub fn new(workload: Workload, init_params: Vec<f32>, opts: TrainerOptions) -> Trainer {
+    pub fn new(workload: Workload, init_params: Vec<f32>, opts: TrainerOptions) -> Result<Trainer> {
         let n = opts.topology.n;
         let d = workload.flat_dim();
-        assert_eq!(init_params.len(), d, "init params must match flat_dim");
+        anyhow::ensure!(init_params.len() == d, "init params must match flat_dim");
         let root = Rng::new(opts.seed ^ 0x7EA1);
         let workers = (0..n)
             .map(|i| Worker {
-                params: init_params.clone(),
                 opt: if opts.momentum > 0.0 {
                     Optimizer::momentum_sgd(opts.momentum, opts.nesterov)
                 } else {
@@ -179,29 +198,37 @@ impl Trainer {
                 rng: root.split(i as u64),
                 grad: vec![0.0; d],
                 loss: 0.0,
+                scratch: BatchScratch::default(),
             })
             .collect();
+        let params = ParamMatrix::broadcast(n, &init_params);
         let mixer = mixer::Mixer::new(&opts.topology, d);
-        let schedule = schedule_for(opts.algorithm, opts.period, opts.aga_init_period, opts.aga_warmup);
-        let slowmo_prev = if opts.algorithm == AlgorithmKind::SlowMo { init_params.clone() } else { Vec::new() };
+        let schedule = schedule_for(opts.algorithm, opts.period, opts.aga_init_period, opts.aga_warmup)?;
+        let slowmo_prev = if opts.algorithm == AlgorithmKind::SlowMo { init_params } else { Vec::new() };
         let slowmo_u = if opts.algorithm == AlgorithmKind::SlowMo { vec![0.0; d] } else { Vec::new() };
-        Trainer {
+        Ok(Trainer {
             workload,
             opts,
             workers,
+            params,
             mixer,
             schedule,
             clock: SimClock::default(),
             slowmo_prev,
             slowmo_u,
             step: 0,
-            scratch: BatchScratch::default(),
-            params_buf: (0..n).map(|_| vec![0.0; d]).collect(),
-        }
+            eval_scratch: BatchScratch::default(),
+            mean_buf: vec![0.0; d],
+        })
     }
 
     pub fn n(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Effective worker-thread count for this trainer.
+    fn threads(&self) -> usize {
+        self.opts.threads.max(1).min(self.workers.len())
     }
 
     /// Mean worker loss at the last executed step.
@@ -211,20 +238,16 @@ impl Trainer {
 
     /// Average parameters across workers (x-bar), e.g. for evaluation.
     pub fn mean_params(&self) -> Vec<f32> {
-        let d = self.workers[0].params.len();
-        let mut mean = vec![0.0f32; d];
-        for w in &self.workers {
-            for (m, v) in mean.iter_mut().zip(&w.params) {
-                *m += v;
-            }
-        }
-        let inv = 1.0 / self.workers.len() as f32;
-        mean.iter_mut().for_each(|m| *m *= inv);
-        mean
+        self.params.mean_row()
     }
 
     pub fn worker_params(&self, i: usize) -> &[f32] {
-        &self.workers[i].params
+        self.params.row(i)
+    }
+
+    /// The live parameter matrix (read-only view).
+    pub fn param_matrix(&self) -> &ParamMatrix {
+        &self.params
     }
 
     pub fn sim_seconds(&self) -> f64 {
@@ -235,30 +258,72 @@ impl Trainer {
         self.schedule.current_period()
     }
 
+    /// The mixer's gossip-round clock (drives time-varying topologies;
+    /// checkpointed).
+    pub fn gossip_clock(&self) -> usize {
+        self.mixer.gossip_clock
+    }
+
+    /// Overwrite the gossip clock (resume plumbing / test hook; normal
+    /// restores go through [`Trainer::restore`]).
+    pub fn set_gossip_clock(&mut self, rounds: usize) {
+        self.mixer.gossip_clock = rounds;
+    }
+
     /// Execute one iteration of Algorithm 1; returns the action taken.
     pub fn step_once(&mut self) -> Result<CommAction> {
         let k = self.step;
         let lr = self.opts.lr.at(k);
-        // 1+2: local gradient + update per worker.
-        for i in 0..self.workers.len() {
-            let batch = {
-                let w = &mut self.workers[i];
-                self.workload.sample(i, &mut w.rng, &mut self.scratch)?
-            };
-            let w = &mut self.workers[i];
-            w.loss = self.workload.grad_fn().call_into(&w.params, batch, &mut w.grad)?;
-            w.opt.step(&mut w.params, &w.grad, lr);
+        let threads = self.threads();
+        // 1+2: local gradient + update, one parameter row per worker.
+        let d = self.params.d();
+        let workload = &self.workload;
+        if threads <= 1 {
+            for (i, (w, row)) in self.workers.iter_mut().zip(self.params.rows_mut()).enumerate() {
+                step_worker(workload, i, w, row, lr)?;
+            }
+        } else {
+            let per = (self.workers.len() + threads - 1) / threads;
+            // Split the field borrows up front so the scope closure only
+            // captures plain locals (no whole-`self` capture).
+            let workers = &mut self.workers;
+            let rows = self.params.as_mut_slice();
+            let results: Vec<Result<()>> = std::thread::scope(|s| {
+                let handles: Vec<_> = workers
+                    .chunks_mut(per)
+                    .zip(rows.chunks_mut(per * d))
+                    .enumerate()
+                    .map(|(ci, (wchunk, rchunk))| {
+                        s.spawn(move || -> Result<()> {
+                            for (j, (w, row)) in
+                                wchunk.iter_mut().zip(rchunk.chunks_mut(d)).enumerate()
+                            {
+                                step_worker(workload, ci * per + j, w, row, lr)?;
+                            }
+                            Ok(())
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("worker thread panicked")).collect()
+            });
+            for r in results {
+                r?;
+            }
         }
         let mean_loss = self.mean_loss();
-        // 3: communication action.
+        // 3: communication action. Pass the UNCAPPED thread count: gossip
+        // caps at n rows internally, but the global-average mean shards by
+        // columns of d and can use more threads than workers (determinism
+        // holds at any count).
+        let comm_threads = self.opts.threads.max(1);
         let action = self.schedule.action(k, mean_loss);
         match action {
             CommAction::None => {}
             CommAction::Gossip => {
-                self.with_param_matrix(|mixer, params| mixer.gossip(params));
+                self.mixer.gossip(&mut self.params, comm_threads);
             }
             CommAction::GlobalAverage => {
-                self.with_param_matrix(|mixer, params| mixer.global_average(params));
+                self.mixer.global_average(&mut self.params, comm_threads);
                 if self.opts.algorithm == AlgorithmKind::SlowMo {
                     self.slowmo_outer_update(lr);
                 }
@@ -278,37 +343,24 @@ impl Trainer {
         Ok(action)
     }
 
-    /// Move worker params into the contiguous matrix, run `f`, move back.
-    fn with_param_matrix<F: FnOnce(&mut mixer::Mixer, &mut [Vec<f32>])>(&mut self, f: F) {
-        for (buf, w) in self.params_buf.iter_mut().zip(&mut self.workers) {
-            std::mem::swap(buf, &mut w.params);
-        }
-        f(&mut self.mixer, &mut self.params_buf);
-        for (buf, w) in self.params_buf.iter_mut().zip(&mut self.workers) {
-            std::mem::swap(buf, &mut w.params);
-        }
-    }
-
     /// SlowMo (Wang et al. 2019) outer update at a sync point. All workers
     /// hold the same averaged x at this point.
     fn slowmo_outer_update(&mut self, lr: f64) {
         let gamma = lr.max(1e-12) as f32;
         let beta = self.opts.slowmo.beta as f32;
         let alpha = self.opts.slowmo.alpha as f32;
-        let avg = self.workers[0].params.clone();
-        for ((u, prev), a) in self.slowmo_u.iter_mut().zip(&mut self.slowmo_prev).zip(&avg) {
-            *u = beta * *u + (*prev - *a) / gamma;
-            *prev -= alpha * gamma * *u;
+        {
+            let avg = self.params.row(0);
+            for ((u, prev), a) in self.slowmo_u.iter_mut().zip(&mut self.slowmo_prev).zip(avg) {
+                *u = beta * *u + (*prev - *a) / gamma;
+                *prev -= alpha * gamma * *u;
+            }
         }
-        for w in &mut self.workers {
-            w.params.copy_from_slice(&self.slowmo_prev);
-        }
+        self.params.fill_rows(&self.slowmo_prev);
     }
 
     fn consensus(&self) -> f64 {
-        // consensus_distance over a view of worker params.
-        let params: Vec<Vec<f32>> = self.workers.iter().map(|w| w.params.clone()).collect();
-        consensus_distance(&params)
+        consensus_distance(&self.params)
     }
 
     /// The paper's plotted quantity: the global objective
@@ -317,8 +369,8 @@ impl Trainer {
     /// losses at local params under-reports divergence: drifted workers
     /// look "better" on their own shards — Definition 1's heterogeneity.)
     pub fn global_loss(&mut self) -> Result<f64> {
-        let mean = self.mean_params();
-        let d = mean.len();
+        self.params.mean_into(&mut self.mean_buf);
+        let d = self.mean_buf.len();
         let mut grad_sink = vec![0.0f32; d];
         let mut total = 0.0f64;
         let n = self.workers.len();
@@ -329,38 +381,142 @@ impl Trainer {
         for i in 0..n {
             let mut rng = base.split(i as u64); // FIXED eval stream per node
             for _ in 0..EVAL_BATCHES {
-                let batch = self.workload.sample(i, &mut rng, &mut self.scratch)?;
-                total += self.workload.grad_fn().call_into(&mean, batch, &mut grad_sink)? as f64;
+                let batch = self.workload.sample(i, &mut rng, &mut self.eval_scratch)?;
+                total +=
+                    self.workload.grad_fn().call_into(&self.mean_buf, batch, &mut grad_sink)? as f64;
             }
         }
         Ok(total / (n * EVAL_BATCHES) as f64)
     }
 
-    /// Snapshot the full training state (see [`checkpoint`]).
-    pub fn checkpoint(&self) -> checkpoint::Checkpoint {
-        let velocities: Vec<Vec<f32>> =
-            self.workers.iter().filter_map(|w| w.opt.velocity_buf().map(|v| v.to_vec())).collect();
-        checkpoint::Checkpoint {
+    /// Snapshot the full training state (see [`checkpoint`]): parameters,
+    /// velocities, counters, the gossip clock, adaptive-schedule state and
+    /// SlowMo outer buffers. Errors if only a strict subset of workers has
+    /// velocity state (a partial snapshot could not resume exactly).
+    pub fn checkpoint(&self) -> Result<checkpoint::Checkpoint> {
+        let n = self.workers.len();
+        let d = self.params.d();
+        let with_vel = self.workers.iter().filter(|w| w.opt.velocity_buf().is_some()).count();
+        let velocities = if with_vel == 0 {
+            None
+        } else if with_vel == n {
+            let mut vels = ParamMatrix::zeros(n, d);
+            for (i, w) in self.workers.iter().enumerate() {
+                let v = w.opt.velocity_buf().expect("counted above");
+                anyhow::ensure!(
+                    v.len() == d,
+                    "worker {i} velocity has {} entries, params have {d}",
+                    v.len()
+                );
+                vels.copy_row_from(i, v);
+            }
+            Some(vels)
+        } else {
+            anyhow::bail!(
+                "velocity state present on {with_vel}/{n} workers — refusing to write a partial checkpoint"
+            );
+        };
+        let slowmo = (self.opts.algorithm == AlgorithmKind::SlowMo).then(|| {
+            checkpoint::SlowMoState { prev: self.slowmo_prev.clone(), u: self.slowmo_u.clone() }
+        });
+        Ok(checkpoint::Checkpoint {
             step: self.step as u64,
             sim_seconds: self.clock.seconds,
-            params: self.workers.iter().map(|w| w.params.clone()).collect(),
-            velocities: if velocities.len() == self.workers.len() { velocities } else { Vec::new() },
-        }
+            params: self.params.clone(),
+            velocities,
+            gossip_clock: self.mixer.gossip_clock as u64,
+            schedule: self.schedule.export_state(),
+            slowmo,
+            rng_states: self.workers.iter().map(|w| w.rng.state()).collect(),
+        })
     }
 
-    /// Restore a snapshot (params, velocities, step counter, sim clock).
-    /// The workload/data/schedule must match the one the snapshot came
-    /// from; parameter shape is validated.
+    /// Restore a snapshot (params, velocities, counters, gossip clock,
+    /// schedule + SlowMo state, worker RNG streams). A v2 checkpoint makes
+    /// a fresh trainer replay bit-identically to the unbroken run; for v1
+    /// files (no RNG block) the caller must replay the data streams itself.
+    /// The workload/data/schedule config must match the one the snapshot
+    /// came from; shapes are validated.
     pub fn restore(&mut self, ck: &checkpoint::Checkpoint) -> Result<()> {
-        anyhow::ensure!(ck.params.len() == self.workers.len(), "checkpoint node count");
-        let d = self.workload.flat_dim();
-        anyhow::ensure!(ck.params.iter().all(|p| p.len() == d), "checkpoint flat_dim");
-        for (w, p) in self.workers.iter_mut().zip(&ck.params) {
-            w.params.copy_from_slice(p);
+        let n = self.workers.len();
+        let d = self.params.d();
+        anyhow::ensure!(
+            ck.params.n() == n && ck.params.d() == d,
+            "checkpoint is {}x{}, trainer is {n}x{d}",
+            ck.params.n(),
+            ck.params.d()
+        );
+        self.params.as_mut_slice().copy_from_slice(ck.params.as_slice());
+        match &ck.velocities {
+            Some(v) => {
+                anyhow::ensure!(
+                    v.n() == n && v.d() == d,
+                    "checkpoint velocities are {}x{}, trainer is {n}x{d}",
+                    v.n(),
+                    v.d()
+                );
+                for (w, row) in self.workers.iter_mut().zip(v.rows()) {
+                    w.opt.set_velocity(row);
+                }
+            }
+            None => {
+                // Snapshot predates the first momentum step (or momentum is
+                // off): clear any live velocity so the resumed trajectory
+                // matches the original.
+                for w in self.workers.iter_mut() {
+                    w.opt.set_velocity(&[]);
+                }
+            }
         }
-        if !ck.velocities.is_empty() {
-            for (w, v) in self.workers.iter_mut().zip(&ck.velocities) {
-                w.opt.set_velocity(v);
+        self.mixer.gossip_clock = ck.gossip_clock as usize;
+        match &ck.schedule {
+            Some(st) => self.schedule.import_state(st),
+            None => {
+                // v1 / fixed-schedule snapshot: rebuild the schedule from
+                // config so no adapted state from *this* process leaks past
+                // the restore point (mirrors the velocity reset above).
+                self.schedule = schedule_for(
+                    self.opts.algorithm,
+                    self.opts.period,
+                    self.opts.aga_init_period,
+                    self.opts.aga_warmup,
+                )?;
+            }
+        }
+        if self.opts.algorithm == AlgorithmKind::SlowMo {
+            match &ck.slowmo {
+                Some(sm) => {
+                    anyhow::ensure!(
+                        sm.prev.len() == d && sm.u.len() == d,
+                        "checkpoint slowmo buffers have {} / {} entries, want {d}",
+                        sm.prev.len(),
+                        sm.u.len()
+                    );
+                    self.slowmo_prev.clear();
+                    self.slowmo_prev.extend_from_slice(&sm.prev);
+                    self.slowmo_u.clear();
+                    self.slowmo_u.extend_from_slice(&sm.u);
+                }
+                None => {
+                    // v1 snapshot without outer state: re-anchor the outer
+                    // loop at the restored ensemble mean with zero slow
+                    // momentum (exact resume is impossible without it).
+                    self.params.mean_into(&mut self.mean_buf);
+                    self.slowmo_prev.clear();
+                    self.slowmo_prev.extend_from_slice(&self.mean_buf);
+                    self.slowmo_u.clear();
+                    self.slowmo_u.resize(d, 0.0);
+                }
+            }
+        }
+        if !ck.rng_states.is_empty() {
+            anyhow::ensure!(
+                ck.rng_states.len() == n,
+                "checkpoint has {} rng states for {n} workers",
+                ck.rng_states.len()
+            );
+            for (w, st) in self.workers.iter_mut().zip(&ck.rng_states) {
+                w.rng = Rng::from_state(*st);
             }
         }
         self.step = ck.step as usize;
@@ -395,10 +551,26 @@ impl Trainer {
     }
 }
 
+/// Phase 1-2 for one worker: sample its batch, run the AOT grad graph,
+/// apply the local optimizer step to its parameter row. Free function so
+/// the scoped worker threads can call it without touching the trainer.
+fn step_worker(
+    workload: &Workload,
+    i: usize,
+    w: &mut Worker,
+    row: &mut [f32],
+    lr: f64,
+) -> Result<()> {
+    let batch = workload.sample(i, &mut w.rng, &mut w.scratch)?;
+    w.loss = workload.grad_fn().call_into(row, batch, &mut w.grad)?;
+    w.opt.step(row, &w.grad, lr);
+    Ok(())
+}
+
 /// Build a logistic-regression workload from the default artifacts
 /// (paper §5.1 experiments).
 pub fn logreg_workload(
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     n: usize,
     samples_per_node: usize,
     non_iid: bool,
@@ -414,7 +586,7 @@ pub fn logreg_workload(
 
 /// Build the MLP classification workload (image-classification substitute).
 pub fn mlp_workload(
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     n: usize,
     samples_per_node: usize,
     non_iid: bool,
@@ -437,7 +609,7 @@ pub fn mlp_workload(
 }
 
 /// Build the LM workload (BERT substitute) for a transformer config tag.
-pub fn lm_workload(rt: Rc<Runtime>, tag: &str, seed: u64) -> Result<(Workload, Vec<f32>)> {
+pub fn lm_workload(rt: Arc<Runtime>, tag: &str, seed: u64) -> Result<(Workload, Vec<f32>)> {
     let spec = rt.manifest.find("transformer", "grad", Some(tag))?.clone();
     let cfg = model::TransformerConfig {
         vocab: spec.meta_usize("vocab").unwrap(),

@@ -2,7 +2,7 @@
 //! per paper table/figure). Each bench assembles rows from these helpers so
 //! the workload wiring lives in one place.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -44,6 +44,8 @@ pub struct RunSpec {
     pub cost_dim: usize,
     pub aga_init: usize,
     pub aga_warmup: usize,
+    /// Worker threads (1 = sequential; see `TrainerOptions::threads`).
+    pub threads: usize,
 }
 
 impl RunSpec {
@@ -64,6 +66,7 @@ impl RunSpec {
             cost_dim: 25_500_000,
             aga_init: 4,
             aga_warmup: 50,
+            threads: 1,
         }
     }
 
@@ -88,6 +91,7 @@ impl RunSpec {
             cost_dim: 25_500_000, // bill comms as ResNet-50
             aga_init: 4,
             aga_warmup: steps / 20,
+            threads: 1,
         }
     }
 
@@ -107,6 +111,7 @@ impl RunSpec {
             cost_dim: 330_000_000, // bill comms as BERT-Large
             aga_init: 4,
             aga_warmup: steps / 20,
+            threads: 1,
         }
     }
 
@@ -125,6 +130,7 @@ impl RunSpec {
             cost: self.cost,
             cost_dim: self.cost_dim,
             log_every: self.log_every,
+            threads: self.threads,
         }
     }
 
@@ -134,9 +140,9 @@ impl RunSpec {
 }
 
 /// Run the §5.1 logistic-regression experiment; returns the loss history.
-pub fn run_logreg(rt: Rc<Runtime>, spec: &RunSpec, samples_per_node: usize) -> Result<History> {
+pub fn run_logreg(rt: Arc<Runtime>, spec: &RunSpec, samples_per_node: usize) -> Result<History> {
     let (workload, init) = logreg_workload(rt, spec.topology.n, samples_per_node, spec.non_iid, spec.seed)?;
-    let mut trainer = Trainer::new(workload, init, spec.options());
+    let mut trainer = Trainer::new(workload, init, spec.options())?;
     trainer.run(spec.steps, &spec.label())
 }
 
@@ -149,9 +155,9 @@ pub struct ImageResult {
 }
 
 /// Run the MLP classification suite; returns curve + eval accuracy + time.
-pub fn run_image(rt: Rc<Runtime>, spec: &RunSpec, samples_per_node: usize) -> Result<ImageResult> {
+pub fn run_image(rt: Arc<Runtime>, spec: &RunSpec, samples_per_node: usize) -> Result<ImageResult> {
     let (workload, init) = mlp_workload(rt, spec.topology.n, samples_per_node, spec.non_iid, spec.seed)?;
-    let mut trainer = Trainer::new(workload, init, spec.options());
+    let mut trainer = Trainer::new(workload, init, spec.options())?;
     let history = trainer.run(spec.steps, &spec.label())?;
     let accuracy = mlp_eval_accuracy(&trainer)?.unwrap_or(f32::NAN);
     Ok(ImageResult {
@@ -170,9 +176,9 @@ pub struct LmResult {
 }
 
 /// Run the transformer-LM suite on a config tag ("tiny" for benches).
-pub fn run_lm(rt: Rc<Runtime>, spec: &RunSpec, tag: &str) -> Result<LmResult> {
+pub fn run_lm(rt: Arc<Runtime>, spec: &RunSpec, tag: &str) -> Result<LmResult> {
     let (workload, init) = lm_workload(rt, tag, spec.seed)?;
-    let mut trainer = Trainer::new(workload, init, spec.options());
+    let mut trainer = Trainer::new(workload, init, spec.options())?;
     let history = trainer.run(spec.steps, &spec.label())?;
     let eval_loss = lm_eval_loss(&trainer, 4, spec.seed)?.unwrap_or(f32::NAN);
     Ok(LmResult { history, eval_loss, sim_hours: trainer.sim_seconds() / 3600.0 })

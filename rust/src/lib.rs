@@ -29,13 +29,19 @@
 //! * [`proptest`] — a minimal randomized-property test kit.
 //!
 //! Core:
-//! * [`runtime`] — PJRT client + artifact registry (loads `artifacts/`).
+//! * [`runtime`] — PJRT client + artifact registry (loads `artifacts/`);
+//!   shared across worker threads (`Arc<Runtime>`, RwLock'd executable
+//!   cache).
+//! * [`params`] — the contiguous n x d [`params::ParamMatrix`] every
+//!   training phase operates on (worker i = row i, row-major).
 //! * [`model`] — rust-side model descriptors mirrored from the manifest.
 //! * [`data`] — synthetic datasets (paper §5.1 logistic data, cluster
 //!   classification, token corpus) + iid/non-iid sharding.
 //! * [`optim`] — SGD / momentum / Nesterov + LR schedules.
 //! * [`algorithms`] — the paper's communication schedules.
-//! * [`coordinator`] — the per-step training pipeline over n workers.
+//! * [`coordinator`] — the per-step training pipeline over n workers,
+//!   sharded across `train.threads` worker threads (bit-identical to the
+//!   sequential run at any thread count).
 //! * [`metrics`] — loss curves, consensus distance, transient-stage
 //!   detection, reporters.
 
@@ -52,6 +58,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod optim;
+pub mod params;
 pub mod proptest;
 pub mod rng;
 pub mod runtime;

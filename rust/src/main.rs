@@ -1,13 +1,14 @@
 //! `gossip-pga` — launcher CLI.
 //!
 //! Subcommands:
-//!   train [--config exp.toml] [--set key=value ...]   run one experiment
+//!   train [--config exp.toml] [--set key=value ...] [--threads N]
+//!                                                     run one experiment
 //!   topo  [--n N]                                     topology/beta report
 //!   check                                             verify artifacts load
 //!
 //! (clap is unavailable offline; flags are parsed by the tiny parser below.)
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 use gossip_pga::config::{ExperimentConfig, Toml};
@@ -43,7 +44,7 @@ fn print_help() {
         "gossip-pga — Gossip SGD with Periodic Global Averaging (ICML 2021)\n\
          \n\
          USAGE:\n\
-           gossip-pga train [--config exp.toml] [--set key=value ...]\n\
+           gossip-pga train [--config exp.toml] [--set key=value ...] [--threads N]\n\
            gossip-pga topo [--n N]\n\
            gossip-pga check\n\
          \n\
@@ -51,7 +52,8 @@ fn print_help() {
            cluster.nodes, cluster.topology (ring|grid|star|full|expo|one-peer-expo)\n\
            algorithm.name (parallel|gossip|local|pga|aga|slowmo), algorithm.period\n\
            model.name (logreg|mlp|transformer), model.tag (tiny|e2e)\n\
-           train.steps, train.lr, train.momentum, train.seed, data.non_iid"
+           train.steps, train.lr, train.momentum, train.seed, data.non_iid\n\
+           train.threads (worker threads; --threads N is shorthand)"
     );
 }
 
@@ -75,11 +77,16 @@ fn parse_flags(args: &[String]) -> Result<Vec<(String, String)>> {
 fn cmd_train(args: &[String]) -> Result<()> {
     let flags = parse_flags(args)?;
     let mut doc = Toml::default();
+    // --config loads first, regardless of flag order, so --set/--threads
+    // always override the file (a trailing --config must not discard them).
+    for (name, val) in &flags {
+        if name == "config" {
+            doc = Toml::load(std::path::Path::new(val))?;
+        }
+    }
     for (name, val) in &flags {
         match name.as_str() {
-            "config" => {
-                doc = Toml::load(std::path::Path::new(val))?;
-            }
+            "config" => {}
             "set" => {
                 let (k, v) = val
                     .split_once('=')
@@ -88,22 +95,28 @@ fn cmd_train(args: &[String]) -> Result<()> {
                     .or_else(|_| Toml::parse(&format!("{k} = \"{v}\"")))?;
                 doc.values.extend(parsed.values);
             }
+            "threads" => {
+                let parsed = Toml::parse(&format!("train.threads = {val}"))
+                    .with_context(|| format!("--threads wants an integer, got '{val}'"))?;
+                doc.values.extend(parsed.values);
+            }
             other => bail!("unknown flag --{other}"),
         }
     }
     let cfg = ExperimentConfig::from_toml(&doc).context("building experiment config")?;
     let topo = cfg.topology();
     println!(
-        "# {} | {} nodes on {} (beta = {:.4}) | H = {} | {} steps",
+        "# {} | {} nodes on {} (beta = {:.4}) | H = {} | {} steps | {} thread(s)",
         cfg.algorithm.display(),
         cfg.nodes,
         cfg.topology,
         topo.beta(),
         cfg.period,
-        cfg.steps
+        cfg.steps,
+        cfg.threads
     );
 
-    let rt = Rc::new(Runtime::load_default().context("loading artifacts (run `make artifacts`)")?);
+    let rt = Arc::new(Runtime::load_default().context("loading artifacts (run `make artifacts`)")?);
     let (workload, init) = match cfg.model.as_str() {
         "logreg" => coordinator::logreg_workload(rt, cfg.nodes, cfg.samples_per_node, cfg.non_iid, cfg.seed)?,
         "mlp" => coordinator::mlp_workload(rt, cfg.nodes, cfg.samples_per_node, cfg.non_iid, cfg.seed)?,
@@ -113,7 +126,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let cost_dim = workload.flat_dim();
     let mut opts = TrainerOptions::from_config(&cfg, cost_dim);
     opts.cost = CostModel::calibrated_resnet50();
-    let mut trainer = coordinator::Trainer::new(workload, init, opts);
+    let mut trainer = coordinator::Trainer::new(workload, init, opts)?;
 
     let t0 = std::time::Instant::now();
     let hist = trainer.run(cfg.steps, cfg.algorithm.name())?;

@@ -9,6 +9,7 @@
 //! within a relative `tol` band of the parallel-SGD reference.
 
 use crate::jsonio::{self, Json};
+use crate::params::ParamMatrix;
 
 /// One logged training step.
 #[derive(Clone, Copy, Debug)]
@@ -93,15 +94,29 @@ impl History {
     }
 }
 
-/// Consensus distance (1/n) sum_i ||x_i - x_bar||^2 over worker params.
-pub fn consensus_distance(params: &[Vec<f32>]) -> f64 {
-    let n = params.len();
+/// Consensus distance (1/n) sum_i ||x_i - x_bar||^2 over the contiguous
+/// worker parameter matrix (no per-call copy — the trainer logs this
+/// directly off its live [`ParamMatrix`]).
+pub fn consensus_distance(params: &ParamMatrix) -> f64 {
+    consensus_distance_iter(params.n(), params.d(), params.rows())
+}
+
+/// [`consensus_distance`] over loose per-worker rows (test/interop helper).
+pub fn consensus_distance_rows(params: &[Vec<f32>]) -> f64 {
+    let d = params.first().map_or(0, |p| p.len());
+    consensus_distance_iter(params.len(), d, params.iter().map(|p| p.as_slice()))
+}
+
+fn consensus_distance_iter<'a>(
+    n: usize,
+    d: usize,
+    rows: impl Iterator<Item = &'a [f32]> + Clone,
+) -> f64 {
     if n == 0 {
         return 0.0;
     }
-    let d = params[0].len();
     let mut mean = vec![0.0f64; d];
-    for p in params {
+    for p in rows.clone() {
         for (m, v) in mean.iter_mut().zip(p) {
             *m += *v as f64;
         }
@@ -110,7 +125,7 @@ pub fn consensus_distance(params: &[Vec<f32>]) -> f64 {
         *m /= n as f64;
     }
     let mut total = 0.0;
-    for p in params {
+    for p in rows {
         for (m, v) in mean.iter().zip(p) {
             let diff = *v as f64 - m;
             total += diff * diff;
@@ -199,14 +214,22 @@ mod tests {
     #[test]
     fn consensus_zero_when_equal() {
         let p = vec![vec![1.0f32, 2.0]; 5];
-        assert!(consensus_distance(&p) < 1e-12);
+        assert!(consensus_distance_rows(&p) < 1e-12);
+        assert!(consensus_distance(&ParamMatrix::from_rows(&p)) < 1e-12);
     }
 
     #[test]
     fn consensus_known_value() {
         // two workers at +-1 around mean 0: each ||x_i - x_bar||^2 = d.
         let p = vec![vec![1.0f32; 4], vec![-1.0f32; 4]];
-        assert!((consensus_distance(&p) - 4.0).abs() < 1e-9);
+        assert!((consensus_distance_rows(&p) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn consensus_matrix_matches_rows() {
+        let rows = vec![vec![0.5f32, -1.0, 3.0], vec![2.0, 0.0, -0.5], vec![1.0, 1.0, 1.0]];
+        let m = ParamMatrix::from_rows(&rows);
+        assert_eq!(consensus_distance(&m), consensus_distance_rows(&rows));
     }
 
     #[test]

@@ -1,0 +1,246 @@
+//! Contiguous parameter storage for the worker ensemble.
+//!
+//! [`ParamMatrix`] is the single n x d `Vec<f32>` behind the whole training
+//! loop: worker i's parameters are row i (`data[i*d .. (i+1)*d]`, row-major).
+//! The mixer, the trainer, the metrics and the checkpointer all operate on
+//! this one allocation, which buys:
+//!
+//! * cache-friendly gossip mixing — a weighted-sum pass streams rows
+//!   sequentially instead of chasing `Vec<Vec<f32>>` pointers;
+//! * zero-copy hand-off between phases — no more per-action swap dance
+//!   moving worker vectors in and out of a scratch matrix;
+//! * safe parallelism — `as_mut_slice().chunks_mut(d)` splits the matrix
+//!   into disjoint per-row (or per-row-block) `&mut [f32]` views that scoped
+//!   threads can own simultaneously.
+//!
+//! Determinism note: every op here fixes its accumulation order (rows
+//! ascending, columns ascending) so results are bit-identical regardless of
+//! how callers shard the work across threads.
+
+/// Dense n x d row-major f32 matrix of per-worker parameter vectors.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamMatrix {
+    n: usize,
+    d: usize,
+    data: Vec<f32>,
+}
+
+impl ParamMatrix {
+    /// All-zeros n x d matrix.
+    pub fn zeros(n: usize, d: usize) -> ParamMatrix {
+        ParamMatrix { n, d, data: vec![0.0; n * d] }
+    }
+
+    /// n copies of one initial parameter vector (the usual trainer start).
+    pub fn broadcast(n: usize, row: &[f32]) -> ParamMatrix {
+        let d = row.len();
+        let mut data = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            data.extend_from_slice(row);
+        }
+        ParamMatrix { n, d, data }
+    }
+
+    /// n x d matrix of N(0, scale^2) entries, drawn row-major from `rng`
+    /// (test/bench helper).
+    pub fn random(rng: &mut crate::rng::Rng, n: usize, d: usize, scale: f32) -> ParamMatrix {
+        ParamMatrix { n, d, data: rng.normal_vec(n * d, scale) }
+    }
+
+    /// Build from per-worker rows; panics on ragged input.
+    pub fn from_rows(rows: &[Vec<f32>]) -> ParamMatrix {
+        let n = rows.len();
+        let d = rows.first().map_or(0, |r| r.len());
+        assert!(rows.iter().all(|r| r.len() == d), "ragged rows");
+        let mut data = Vec::with_capacity(n * d);
+        for r in rows {
+            data.extend_from_slice(r);
+        }
+        ParamMatrix { n, d, data }
+    }
+
+    /// Take ownership of a flat row-major buffer (len must be n*d).
+    pub fn from_flat(n: usize, d: usize, data: Vec<f32>) -> ParamMatrix {
+        assert_eq!(data.len(), n * d, "flat buffer length");
+        ParamMatrix { n, d, data }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// The whole matrix as one flat row-major slice.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat view; `chunks_mut(d)` yields disjoint row views that can
+    /// be distributed across threads.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Iterate rows (ascending worker index).
+    pub fn rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.d.max(1))
+    }
+
+    /// Iterate disjoint mutable rows (ascending worker index).
+    pub fn rows_mut(&mut self) -> impl Iterator<Item = &mut [f32]> {
+        self.data.chunks_exact_mut(self.d.max(1))
+    }
+
+    /// Copy `src` into row i.
+    pub fn copy_row_from(&mut self, i: usize, src: &[f32]) {
+        self.row_mut(i).copy_from_slice(src);
+    }
+
+    /// Overwrite every row with `row` (e.g. the SlowMo outer iterate).
+    pub fn fill_rows(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.d, "row length");
+        for r in self.rows_mut() {
+            r.copy_from_slice(row);
+        }
+    }
+
+    /// out += a * row(i)  (axpy against one stored row).
+    pub fn axpy_row(&self, i: usize, a: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d);
+        for (o, v) in out.iter_mut().zip(self.row(i)) {
+            *o += a * v;
+        }
+    }
+
+    /// Column-wise mean over rows, written into `out` (len d). Accumulates
+    /// in f32, rows ascending — the exact op the trainer always used, so the
+    /// mean is bit-identical to the historical `mean_params`.
+    pub fn mean_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.d, "mean_into length");
+        out.fill(0.0);
+        for r in self.rows() {
+            for (m, v) in out.iter_mut().zip(r) {
+                *m += v;
+            }
+        }
+        let inv = 1.0 / self.n as f32;
+        for m in out.iter_mut() {
+            *m *= inv;
+        }
+    }
+
+    /// Column-wise mean over rows as a fresh vector.
+    pub fn mean_row(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.d];
+        self.mean_into(&mut out);
+        out
+    }
+
+    /// O(1) storage swap with a same-shape matrix (mixer double-buffering).
+    pub fn swap_data(&mut self, other: &mut ParamMatrix) {
+        assert!(self.n == other.n && self.d == other.d, "shape mismatch");
+        std::mem::swap(&mut self.data, &mut other.data);
+    }
+
+    /// Copy out as per-worker rows (interop/debug; allocates).
+    pub fn to_rows(&self) -> Vec<Vec<f32>> {
+        self.rows().map(|r| r.to_vec()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_and_rows() {
+        let m = ParamMatrix::broadcast(3, &[1.0, 2.0]);
+        assert_eq!((m.n(), m.d()), (3, 2));
+        for r in m.rows() {
+            assert_eq!(r, &[1.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn row_views_are_disjoint_and_indexed() {
+        let mut m = ParamMatrix::zeros(4, 3);
+        for (i, r) in m.rows_mut().enumerate() {
+            r.fill(i as f32);
+        }
+        assert_eq!(m.row(0), &[0.0; 3]);
+        assert_eq!(m.row(3), &[3.0; 3]);
+        assert_eq!(m.as_slice().len(), 12);
+    }
+
+    #[test]
+    fn from_rows_roundtrip() {
+        let rows = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let m = ParamMatrix::from_rows(&rows);
+        assert_eq!(m.to_rows(), rows);
+        assert_eq!(m.as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn from_rows_rejects_ragged() {
+        ParamMatrix::from_rows(&[vec![1.0f32], vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn mean_matches_naive() {
+        let m = ParamMatrix::from_rows(&[vec![1.0f32, 0.0], vec![3.0, 2.0]]);
+        assert_eq!(m.mean_row(), vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn axpy_row_accumulates() {
+        let m = ParamMatrix::from_rows(&[vec![1.0f32, 2.0], vec![10.0, 20.0]]);
+        let mut out = vec![1.0f32, 1.0];
+        m.axpy_row(1, 0.5, &mut out);
+        assert_eq!(out, vec![6.0, 11.0]);
+    }
+
+    #[test]
+    fn fill_rows_broadcasts() {
+        let mut m = ParamMatrix::zeros(3, 2);
+        m.fill_rows(&[7.0, 8.0]);
+        assert!(m.rows().all(|r| r == [7.0, 8.0]));
+    }
+
+    #[test]
+    fn swap_data_is_o1_exchange() {
+        let mut a = ParamMatrix::broadcast(2, &[1.0]);
+        let mut b = ParamMatrix::broadcast(2, &[2.0]);
+        a.swap_data(&mut b);
+        assert_eq!(a.row(0), &[2.0]);
+        assert_eq!(b.row(0), &[1.0]);
+    }
+
+    #[test]
+    fn chunked_mut_views_split_rows_cleanly() {
+        // The pattern the threaded trainer uses: chunk the flat buffer by
+        // (rows_per_thread * d) and re-chunk by d inside each piece.
+        let mut m = ParamMatrix::zeros(5, 4);
+        let d = m.d();
+        let per = 2usize;
+        for (ci, chunk) in m.as_mut_slice().chunks_mut(per * d).enumerate() {
+            for (k, row) in chunk.chunks_mut(d).enumerate() {
+                row.fill((ci * per + k) as f32);
+            }
+        }
+        for i in 0..5 {
+            assert!(m.row(i).iter().all(|&v| v == i as f32), "row {i}");
+        }
+    }
+}

@@ -10,23 +10,59 @@
 //! ([`GradFn`], [`EvalFn`], [`MixFn`]) enforce the manifest's I/O contract
 //! and offer `*_into` variants that write into caller buffers (the zero-
 //! alloc path the coordinator uses every step).
+//!
+//! The runtime is shared across worker threads (`Arc<Runtime>`): the
+//! executable cache is behind an `RwLock` so the steady-state path is a
+//! read-lock + `Arc` clone, and `execute` runs concurrently from the
+//! coordinator's per-worker threads.
 
 pub mod manifest;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, RwLock};
 
 use anyhow::{anyhow, Context, Result};
 
 pub use manifest::{ArtifactSpec, Dtype, IoSpec, Manifest};
 
-/// The process-wide PJRT runtime.
+/// The PJRT client handle, scoped so the thread-safety assertion covers
+/// exactly the FFI type and nothing else in [`Runtime`].
+struct SharedClient(xla::PjRtClient);
+
+/// A compiled executable shared across worker threads via `Arc`.
+pub struct SharedExecutable(xla::PjRtLoadedExecutable);
+
+// SAFETY: the PJRT C API is thread-safe by contract — clients, loaded
+// executables and `execute` calls may be used concurrently from multiple
+// threads (XLA's CPU client serializes internally where required). These
+// impls additionally REQUIRE that the vendored `xla` wrapper keeps its
+// handles free of non-atomic Rust-side shared state: in particular it must
+// NOT hold an `Rc` of the client inside `PjRtLoadedExecutable` the way
+// upstream xla-rs once did (a non-atomic refcount cloned/dropped during
+// `execute` would race). Re-verify that invariant whenever the vendored
+// crate is updated. The impls are deliberately on these two newtypes only,
+// so any future non-thread-safe field added to `Runtime` re-enters the
+// compiler's auto Send/Sync derivation instead of being silently asserted
+// safe.
+unsafe impl Send for SharedClient {}
+unsafe impl Sync for SharedClient {}
+unsafe impl Send for SharedExecutable {}
+unsafe impl Sync for SharedExecutable {}
+
+impl std::ops::Deref for SharedExecutable {
+    type Target = xla::PjRtLoadedExecutable;
+    fn deref(&self) -> &Self::Target {
+        &self.0
+    }
+}
+
+/// The process-wide PJRT runtime (Send + Sync by composition of the
+/// newtypes above; shared across worker threads as `Arc<Runtime>`).
 pub struct Runtime {
-    client: xla::PjRtClient,
+    client: SharedClient,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    cache: RwLock<HashMap<String, Arc<SharedExecutable>>>,
 }
 
 impl Runtime {
@@ -34,7 +70,7 @@ impl Runtime {
     pub fn load(dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(Runtime { client: SharedClient(client), manifest, cache: RwLock::new(HashMap::new()) })
     }
 
     /// Load from the auto-discovered artifacts directory.
@@ -43,8 +79,8 @@ impl Runtime {
     }
 
     /// Compile (or fetch the cached) executable for a manifest artifact.
-    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(name) {
+    pub fn executable(&self, name: &str) -> Result<Arc<SharedExecutable>> {
+        if let Some(exe) = self.cache.read().expect("runtime cache poisoned").get(name) {
             return Ok(exe.clone());
         }
         let spec = self.manifest.by_name(name)?;
@@ -55,11 +91,13 @@ impl Runtime {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
+            .0
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {}: {e:?}", name))?;
-        let exe = Rc::new(exe);
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
+        // Two threads may race to compile the same artifact; the first
+        // insert wins so every caller shares one executable.
+        let mut cache = self.cache.write().expect("runtime cache poisoned");
+        Ok(cache.entry(name.to_string()).or_insert_with(|| Arc::new(SharedExecutable(exe))).clone())
     }
 
     /// Raw execution: literals in, tuple-decomposed literals out.
@@ -105,7 +143,12 @@ pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
     let n: usize = shape.iter().product::<usize>().max(1);
     anyhow::ensure!(data.len() == n, "literal wants {n} elements, got {}", data.len());
     let flat = xla::Literal::vec1(data);
-    if shape.len() <= 1 {
+    if shape.is_empty() {
+        // scalar: reshape to rank 0 (mirrors lit_f32; a rank-1 literal here
+        // would fail the executable's parameter-shape check).
+        return flat.reshape(&[]).map_err(|e| anyhow!("reshape scalar: {e:?}"));
+    }
+    if shape.len() == 1 {
         return Ok(flat);
     }
     let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
@@ -120,12 +163,12 @@ pub fn lit_copy_f32(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
 /// Typed wrapper for `kind = "grad"` artifacts:
 /// `(flat_params, batch...) -> (loss, grad)`.
 pub struct GradFn {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     pub spec: ArtifactSpec,
 }
 
 impl GradFn {
-    pub fn new(rt: Rc<Runtime>, name: &str) -> Result<GradFn> {
+    pub fn new(rt: Arc<Runtime>, name: &str) -> Result<GradFn> {
         let spec = rt.manifest.by_name(name)?.clone();
         anyhow::ensure!(
             spec.kind == "grad",
@@ -181,12 +224,12 @@ pub fn clone_literal(lit: &xla::Literal) -> Result<xla::Literal> {
 
 /// Typed wrapper for `kind = "eval"` artifacts: returns the scalar metric.
 pub struct EvalFn {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     pub spec: ArtifactSpec,
 }
 
 impl EvalFn {
-    pub fn new(rt: Rc<Runtime>, name: &str) -> Result<EvalFn> {
+    pub fn new(rt: Arc<Runtime>, name: &str) -> Result<EvalFn> {
         let spec = rt.manifest.by_name(name)?.clone();
         anyhow::ensure!(spec.kind == "eval", "artifact '{name}' is not eval");
         rt.executable(name)?;
@@ -206,12 +249,12 @@ impl EvalFn {
 
 /// Typed wrapper for the Pallas gossip-mix artifacts (`kind = "mix"`).
 pub struct MixFn {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     pub spec: ArtifactSpec,
 }
 
 impl MixFn {
-    pub fn new(rt: Rc<Runtime>, name: &str) -> Result<MixFn> {
+    pub fn new(rt: Arc<Runtime>, name: &str) -> Result<MixFn> {
         let spec = rt.manifest.by_name(name)?.clone();
         anyhow::ensure!(spec.kind == "mix", "artifact '{name}' is not mix");
         rt.executable(name)?;

@@ -1,14 +1,14 @@
 //! Integration: AOT artifacts load, compile and execute through PJRT with
 //! numerics matching rust-side oracles.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gossip_pga::coordinator::mixer::axpy;
 use gossip_pga::rng::Rng;
 use gossip_pga::runtime::{lit_f32, lit_i32, GradFn, MixFn, Runtime};
 
-fn runtime() -> Rc<Runtime> {
-    Rc::new(Runtime::load_default().expect("run `make artifacts` first"))
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::load_default().expect("run `make artifacts` first"))
 }
 
 /// Rust-side oracle of the logistic loss+grad (mirrors kernels/ref.py).

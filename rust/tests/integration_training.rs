@@ -2,7 +2,7 @@
 //! compute under every communication schedule, and the paper's structural
 //! identities hold at the system level.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use gossip_pga::algorithms::{AlgorithmKind, SlowMoParams};
 use gossip_pga::coordinator::{logreg_workload, mlp_workload, Trainer, TrainerOptions};
@@ -12,8 +12,8 @@ use gossip_pga::optim::LrSchedule;
 use gossip_pga::runtime::Runtime;
 use gossip_pga::topology::Topology;
 
-fn runtime() -> Rc<Runtime> {
-    Rc::new(Runtime::load_default().expect("run `make artifacts` first"))
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::load_default().expect("run `make artifacts` first"))
 }
 
 fn opts(algo: AlgorithmKind, topo: Topology, h: usize, seed: u64) -> TrainerOptions {
@@ -31,13 +31,14 @@ fn opts(algo: AlgorithmKind, topo: Topology, h: usize, seed: u64) -> TrainerOpti
         cost: CostModel::calibrated_resnet50(),
         cost_dim: 25_500_000,
         log_every: 10,
+        threads: 1,
     }
 }
 
 fn logreg_trainer_with(algo: AlgorithmKind, n: usize, h: usize, seed: u64, non_iid: bool) -> Trainer {
     let rt = runtime();
     let (workload, init) = logreg_workload(rt, n, 512, non_iid, seed).unwrap();
-    Trainer::new(workload, init, opts(algo, Topology::ring(n), h.max(1), seed))
+    Trainer::new(workload, init, opts(algo, Topology::ring(n), h.max(1), seed)).unwrap()
 }
 
 fn logreg_trainer(algo: AlgorithmKind, n: usize, h: usize, seed: u64) -> Trainer {
@@ -108,8 +109,7 @@ fn global_average_zeroes_consensus_distance() {
     // After any step that synced (k+1 % 4 == 0), workers agree exactly.
     for k in 0..12 {
         t.step_once().unwrap();
-        let params: Vec<Vec<f32>> = (0..6).map(|i| t.worker_params(i).to_vec()).collect();
-        let c = consensus_distance(&params);
+        let c = consensus_distance(t.param_matrix());
         if (k + 1) % 4 == 0 {
             assert!(c < 1e-10, "step {k}: consensus {c} after sync");
         }
@@ -124,8 +124,7 @@ fn local_sgd_never_mixes_between_syncs() {
     let mut prev = 0.0;
     for k in 0..5 {
         t.step_once().unwrap();
-        let params: Vec<Vec<f32>> = (0..4).map(|i| t.worker_params(i).to_vec()).collect();
-        let c = consensus_distance(&params);
+        let c = consensus_distance(t.param_matrix());
         assert!(c > prev, "step {k}: consensus should grow between syncs");
         prev = c;
     }
@@ -137,8 +136,7 @@ fn gossip_contracts_but_never_zeroes_consensus() {
     for _ in 0..30 {
         t.step_once().unwrap();
     }
-    let params: Vec<Vec<f32>> = (0..8).map(|i| t.worker_params(i).to_vec()).collect();
-    let c = consensus_distance(&params);
+    let c = consensus_distance(t.param_matrix());
     assert!(c > 0.0, "gossip alone should not reach exact consensus");
     assert!(c < 1.0, "but it must keep consensus bounded");
 }
@@ -196,7 +194,7 @@ fn sim_clock_orders_algorithms_correctly() {
         let rt = runtime();
         let (w, init) = logreg_workload(rt, n, 128, false, 2).unwrap();
         let o = opts(algo, Topology::one_peer_expo(n), 6, 2);
-        Trainer::new(w, init, o)
+        Trainer::new(w, init, o).unwrap()
     };
     let mut par = mk(AlgorithmKind::Parallel);
     let mut pga = mk(AlgorithmKind::GossipPga);
@@ -231,7 +229,7 @@ fn checkpoint_resume_is_exact() {
         a.step_once().unwrap();
     }
     let path = std::env::temp_dir().join(format!("gpga_it_ckpt_{}.bin", std::process::id()));
-    a.checkpoint().save(&path).unwrap();
+    a.checkpoint().unwrap().save(&path).unwrap();
     for _ in 0..30 {
         a.step_once().unwrap();
     }
@@ -256,10 +254,9 @@ fn checkpoint_resume_is_exact() {
 #[test]
 fn checkpoint_rejects_shape_mismatch() {
     let a = logreg_trainer(AlgorithmKind::GossipPga, 4, 8, 1);
-    let mut ck = a.checkpoint();
-    ck.params.pop(); // wrong node count
-    let mut b = logreg_trainer(AlgorithmKind::GossipPga, 4, 8, 1);
-    assert!(b.restore(&ck).is_err());
+    let ck = a.checkpoint().unwrap(); // n = 4
+    let mut b = logreg_trainer(AlgorithmKind::GossipPga, 5, 8, 1);
+    assert!(b.restore(&ck).is_err(), "node-count mismatch must be rejected");
 }
 
 #[test]
@@ -268,7 +265,7 @@ fn mlp_workload_trains() {
     let (workload, init) = mlp_workload(rt, 4, 512, false, 3).unwrap();
     let mut o = opts(AlgorithmKind::GossipPga, Topology::ring(4), 6, 3);
     o.lr = LrSchedule::Const { lr: 0.1 };
-    let mut t = Trainer::new(workload, init, o);
+    let mut t = Trainer::new(workload, init, o).unwrap();
     let hist = t.run(80, "mlp").unwrap();
     let first = hist.records.first().unwrap().loss;
     assert!(hist.final_loss() < 0.7 * first, "{} -> {}", first, hist.final_loss());

@@ -1,11 +1,27 @@
 //! Randomized property tests (in-repo kit, see `gossip_pga::proptest`)
-//! over the coordinator's invariants.
+//! over the coordinator's invariants, plus the threading and
+//! checkpoint-resume equivalences:
+//!
+//! * threaded (`threads = 4`) and sequential (`threads = 1`) trainers are
+//!   bit-identical across all six `AlgorithmKind`s on ring and
+//!   one-peer-expo topologies;
+//! * a checkpoint -> restore -> replay run matches an unbroken run for the
+//!   stateful algorithms (Gossip-AGA's adaptive period, SlowMo's outer
+//!   buffers, the mixer's gossip clock).
 
+use std::sync::Arc;
+
+use gossip_pga::algorithms::AlgorithmKind;
 use gossip_pga::collective::{bus, gossip_exchange, ring_all_reduce, run_nodes};
 use gossip_pga::coordinator::mixer::Mixer;
+use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
+use gossip_pga::costmodel::CostModel;
 use gossip_pga::linalg::beta_of;
 use gossip_pga::metrics::consensus_distance;
+use gossip_pga::optim::LrSchedule;
+use gossip_pga::params::ParamMatrix;
 use gossip_pga::proptest::{assert_close, check, ensure};
+use gossip_pga::runtime::Runtime;
 use gossip_pga::topology::{spectral, Topology, TopologyKind};
 
 fn random_topology(rng: &mut gossip_pga::rng::Rng, n: usize) -> Topology {
@@ -17,6 +33,10 @@ fn random_topology(rng: &mut gossip_pga::rng::Rng, n: usize) -> Topology {
         4 => Topology::static_expo(n),
         _ => Topology::one_peer_expo(n),
     }
+}
+
+fn random_matrix(rng: &mut gossip_pga::rng::Rng, n: usize, d: usize, scale: f32) -> ParamMatrix {
+    ParamMatrix::random(rng, n, d, scale)
 }
 
 #[test]
@@ -56,18 +76,38 @@ fn prop_mixing_preserves_ensemble_mean() {
         let n = 2 + rng.below(12) as usize;
         let d = 1 + rng.below(64) as usize;
         let topo = random_topology(rng, n);
-        let mut params: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
-        let mean_before: Vec<f32> = (0..d)
-            .map(|c| params.iter().map(|p| p[c]).sum::<f32>() / n as f32)
-            .collect();
+        let mut params = random_matrix(rng, n, d, 1.0);
+        let mean_before = params.mean_row();
         let mut mixer = Mixer::new(&topo, d);
         let rounds = 1 + rng.below(4) as usize;
         for _ in 0..rounds {
-            mixer.gossip(&mut params);
+            mixer.gossip(&mut params, 1);
         }
-        let mean_after: Vec<f32> =
-            (0..d).map(|c| params.iter().map(|p| p[c]).sum::<f32>() / n as f32).collect();
-        assert_close(&mean_after, &mean_before, 1e-4)
+        assert_close(&params.mean_row(), &mean_before, 1e-4)
+    });
+}
+
+#[test]
+fn prop_threaded_mix_bit_identical_to_sequential() {
+    // The tentpole invariant: every thread count computes the exact same
+    // matrix (mix rows and mean columns have fixed accumulation order).
+    check("gossip/global-average agree for any thread count", |rng| {
+        let n = 2 + rng.below(16) as usize;
+        let d = 1 + rng.below(96) as usize;
+        let threads = 2 + rng.below(7) as usize;
+        let topo = random_topology(rng, n);
+        let mut seq = random_matrix(rng, n, d, 1.0);
+        let mut thr = seq.clone();
+        let mut m1 = Mixer::new(&topo, d);
+        let mut m2 = Mixer::new(&topo, d);
+        for _ in 0..topo.rounds().min(3) {
+            m1.gossip(&mut seq, 1);
+            m2.gossip(&mut thr, threads);
+            ensure(seq == thr, format!("{:?} n={n} d={d} t={threads}: gossip diverged", topo.kind))?;
+        }
+        m1.global_average(&mut seq, 1);
+        m2.global_average(&mut thr, threads);
+        ensure(seq == thr, format!("{:?} n={n} d={d} t={threads}: average diverged", topo.kind))
     });
 }
 
@@ -84,10 +124,10 @@ fn prop_mixing_contracts_consensus_by_beta_squared() {
             _ => Topology::static_expo(n),
         };
         let d = 1 + rng.below(32) as usize;
-        let mut params: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let mut params = random_matrix(rng, n, d, 1.0);
         let before = consensus_distance(&params);
         let mut mixer = Mixer::new(&topo, d);
-        mixer.gossip(&mut params);
+        mixer.gossip(&mut params, 1);
         let after = consensus_distance(&params);
         let beta = topo.beta();
         ensure(
@@ -103,17 +143,16 @@ fn prop_global_average_is_projection() {
         let n = 2 + rng.below(12) as usize;
         let d = 1 + rng.below(64) as usize;
         let topo = Topology::ring(n);
-        let mut params: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 2.0)).collect();
-        let mean: Vec<f32> =
-            (0..d).map(|c| params.iter().map(|p| p[c]).sum::<f32>() / n as f32).collect();
+        let mut params = random_matrix(rng, n, d, 2.0);
+        let mean = params.mean_row();
         let mut mixer = Mixer::new(&topo, d);
-        mixer.global_average(&mut params);
-        for p in &params {
+        mixer.global_average(&mut params, 1);
+        for p in params.rows() {
             assert_close(p, &mean, 1e-5)?;
         }
         let snapshot = params.clone();
-        mixer.global_average(&mut params); // idempotent up to f32 rounding
-        for (p, s) in params.iter().zip(&snapshot) {
+        mixer.global_average(&mut params, 1); // idempotent up to f32 rounding
+        for (p, s) in params.rows().zip(snapshot.rows()) {
             assert_close(p, s, 1e-6)?;
         }
         Ok(())
@@ -156,24 +195,24 @@ fn prop_bus_gossip_equals_mixer() {
         };
         let topo = Topology::new(kind, n);
         let d = 1 + rng.below(32) as usize;
-        let params: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
+        let params = random_matrix(rng, n, d, 1.0);
 
         let mut mixed = params.clone();
         let mut mixer = Mixer::new(&topo, d);
-        mixer.gossip(&mut mixed);
+        mixer.gossip(&mut mixed, 1);
 
         let eps = bus(n);
         let topo2 = topo.clone();
-        let params2 = params.clone();
+        let rows2 = params.to_rows();
         let bus_out = run_nodes(eps, move |mut ep| {
             let rank = ep.rank;
             let row = topo2.weight_row(rank, 0);
             let outn: Vec<usize> =
                 topo2.in_neighbors(rank, 0).into_iter().filter(|&j| j != rank).collect();
-            gossip_exchange(&mut ep, &params2[rank], &row, &outn)
+            gossip_exchange(&mut ep, &rows2[rank], &row, &outn)
         })
         .map_err(|e| e.to_string())?;
-        for (a, b) in bus_out.iter().zip(&mixed) {
+        for (a, b) in bus_out.iter().zip(mixed.rows()) {
             assert_close(a, b, 1e-4)?;
         }
         Ok(())
@@ -214,4 +253,191 @@ fn prop_beta_of_convex_combination_with_avg_shrinks() {
         let got = beta_of(&mixed);
         ensure((got - expect).abs() < 1e-6, format!("{got} vs {expect}"))
     });
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end trainer equivalences (need the AOT artifacts, like the
+// integration tests).
+// ---------------------------------------------------------------------------
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::load_default().expect("run `make artifacts` first"))
+}
+
+const ALL_KINDS: [AlgorithmKind; 6] = [
+    AlgorithmKind::Parallel,
+    AlgorithmKind::Gossip,
+    AlgorithmKind::Local,
+    AlgorithmKind::GossipPga,
+    AlgorithmKind::GossipAga,
+    AlgorithmKind::SlowMo,
+];
+
+fn trainer_opts(
+    algo: AlgorithmKind,
+    topo: Topology,
+    momentum: f64,
+    threads: usize,
+) -> TrainerOptions {
+    TrainerOptions {
+        algorithm: algo,
+        topology: topo,
+        period: 4,
+        aga_init_period: 2,
+        aga_warmup: 4,
+        lr: LrSchedule::StepDecay { lr: 0.2, every: 1000, factor: 0.5 },
+        momentum,
+        nesterov: momentum > 0.0,
+        seed: 9,
+        slowmo: Default::default(),
+        cost: CostModel::calibrated_resnet50(),
+        cost_dim: 25_500_000,
+        log_every: 5,
+        threads,
+    }
+}
+
+fn logreg_trainer(
+    rt: &Arc<Runtime>,
+    algo: AlgorithmKind,
+    topo: Topology,
+    momentum: f64,
+    threads: usize,
+) -> Trainer {
+    let (workload, init) = logreg_workload(rt.clone(), topo.n, 256, true, 9).unwrap();
+    Trainer::new(workload, init, trainer_opts(algo, topo, momentum, threads)).unwrap()
+}
+
+#[test]
+fn threaded_trainer_bit_identical_across_all_algorithms() {
+    // threads = 4 vs threads = 1 must produce identical parameters AND
+    // identical histories (losses, consensus, sim clock) for every
+    // algorithm on both a static ring and the time-varying one-peer graph.
+    let rt = runtime();
+    let steps = 14;
+    for mk_topo in [Topology::ring as fn(usize) -> Topology, Topology::one_peer_expo] {
+        for algo in ALL_KINDS {
+            let topo = mk_topo(4);
+            let kind = format!("{:?}/{:?}", algo, topo.kind);
+            let mut seq = logreg_trainer(&rt, algo, mk_topo(4), 0.0, 1);
+            let mut thr = logreg_trainer(&rt, algo, mk_topo(4), 0.0, 4);
+            let h_seq = seq.run(steps, "seq").unwrap();
+            let h_thr = thr.run(steps, "thr").unwrap();
+            assert_eq!(h_seq.losses(), h_thr.losses(), "{kind}: losses diverged");
+            for (a, b) in h_seq.records.iter().zip(&h_thr.records) {
+                assert_eq!(a.consensus, b.consensus, "{kind}: consensus diverged");
+                assert_eq!(a.sim_seconds, b.sim_seconds, "{kind}: sim clock diverged");
+            }
+            for i in 0..seq.n() {
+                assert_eq!(
+                    seq.worker_params(i),
+                    thr.worker_params(i),
+                    "{kind}: worker {i} params diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_trainer_bit_identical_with_momentum() {
+    // Momentum exercises the per-worker velocity buffers across threads.
+    let rt = runtime();
+    let mut seq = logreg_trainer(&rt, AlgorithmKind::GossipPga, Topology::ring(5), 0.9, 1);
+    let mut thr = logreg_trainer(&rt, AlgorithmKind::GossipPga, Topology::ring(5), 0.9, 4);
+    for _ in 0..12 {
+        seq.step_once().unwrap();
+        thr.step_once().unwrap();
+    }
+    for i in 0..5 {
+        assert_eq!(seq.worker_params(i), thr.worker_params(i), "worker {i}");
+    }
+}
+
+#[test]
+fn aga_checkpoint_restore_replays_bit_identically() {
+    // Unbroken run `a` vs a checkpoint restored into a FRESH trainer (the
+    // real crash-resume scenario: no in-process replay). Covers the
+    // previously-lost state: worker RNG streams, the mixer's gossip clock
+    // (mid one-peer period at step 21) and AGA's adaptive-period recursion.
+    let rt = runtime();
+    let mk = |threads| {
+        logreg_trainer(&rt, AlgorithmKind::GossipAga, Topology::one_peer_expo(4), 0.9, threads)
+    };
+    let mut a = mk(1);
+    for _ in 0..21 {
+        a.step_once().unwrap();
+    }
+    let ck = a.checkpoint().unwrap();
+    assert!(ck.schedule.is_some(), "AGA must checkpoint its schedule state");
+    assert!(ck.velocities.is_some(), "momentum run must checkpoint velocities");
+    assert!(ck.gossip_clock > 0, "21 AGA steps must have gossiped");
+    assert_eq!(ck.rng_states.len(), a.n(), "worker RNG streams must be checkpointed");
+    let h_at_ck = a.current_period();
+    for _ in 0..21 {
+        a.step_once().unwrap();
+    }
+
+    // Fresh trainer, no replay — everything must come from the checkpoint.
+    let mut b = mk(4); // resume on a different thread count, same bits
+    b.restore(&ck).unwrap();
+    assert_eq!(b.gossip_clock() as u64, ck.gossip_clock, "restored gossip clock");
+    assert_eq!(b.current_period(), h_at_ck, "restored AGA period");
+    for _ in 0..21 {
+        b.step_once().unwrap();
+    }
+    for i in 0..a.n() {
+        assert_eq!(a.worker_params(i), b.worker_params(i), "worker {i}");
+    }
+    assert_eq!(a.sim_seconds(), b.sim_seconds());
+}
+
+#[test]
+fn slowmo_checkpoint_restore_replays_bit_identically() {
+    // SlowMo's outer buffers (x_prev_sync, slow momentum u) mutate at every
+    // global sync; checkpoint at step 10 (after the step-8 sync), resume,
+    // and the next syncs at 12/16/20 must match the unbroken run exactly.
+    let rt = runtime();
+    let mk = || logreg_trainer(&rt, AlgorithmKind::SlowMo, Topology::ring(4), 0.9, 1);
+    let mut a = mk();
+    for _ in 0..10 {
+        a.step_once().unwrap();
+    }
+    let ck = a.checkpoint().unwrap();
+    assert!(ck.slowmo.is_some(), "SlowMo must checkpoint its outer buffers");
+    for _ in 0..14 {
+        a.step_once().unwrap();
+    }
+
+    // Fresh trainer, no replay: restore must be a faithful roundtrip of
+    // every stateful field, and the continuation must match the unbroken
+    // run exactly.
+    let mut b = mk();
+    b.restore(&ck).unwrap();
+    assert_eq!(b.checkpoint().unwrap(), ck);
+    for _ in 0..14 {
+        b.step_once().unwrap();
+    }
+    for i in 0..a.n() {
+        assert_eq!(a.worker_params(i), b.worker_params(i), "worker {i}");
+    }
+}
+
+#[test]
+fn restore_into_fresh_trainer_restores_adaptive_period() {
+    // The AGA state is *live* after restore: a fresh trainer (period still
+    // H_init) picks up the grown period from the checkpoint alone.
+    let rt = runtime();
+    let mut a = logreg_trainer(&rt, AlgorithmKind::GossipAga, Topology::ring(4), 0.0, 1);
+    for _ in 0..120 {
+        a.step_once().unwrap();
+    }
+    let ck = a.checkpoint().unwrap();
+    let grown = a.current_period();
+    assert!(grown > 2, "AGA period should have grown past H_init=2, got {grown}");
+
+    let mut fresh = logreg_trainer(&rt, AlgorithmKind::GossipAga, Topology::ring(4), 0.0, 1);
+    assert_eq!(fresh.current_period(), 2, "fresh AGA starts at H_init");
+    fresh.restore(&ck).unwrap();
+    assert_eq!(fresh.current_period(), grown, "restore must carry the adaptive period");
 }

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# One-shot verification gate for every PR:
+#   1. tier-1: release build + full test suite (ROADMAP.md)
+#   2. formatting: cargo fmt --check
+#   3. lints: cargo clippy -D warnings
+#
+# Usage: scripts/verify.sh [--fast]
+#   --fast   sets GOSSIP_PGA_FAST=1 so bench-derived tests run at 1/4 scale.
+#
+# Integration tests and benches need the AOT artifacts (`make artifacts`);
+# unit tests run without them.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--fast" ]]; then
+  export GOSSIP_PGA_FAST=1
+fi
+
+echo "==> tier-1: cargo build --release"
+cargo build --release
+
+echo "==> tier-1: cargo test -q"
+cargo test -q
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+echo "==> verify OK"
