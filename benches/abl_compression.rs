@@ -12,6 +12,7 @@ use std::sync::Arc;
 use gossip_pga::compress::{Codec, ErrorFeedback, Identity, Int8, TopK};
 use gossip_pga::coordinator::mixer::Mixer;
 use gossip_pga::coordinator::{logreg_workload, Workload};
+use gossip_pga::exec::WorkerPool;
 use gossip_pga::harness::suite::step_scale;
 use gossip_pga::harness::Table;
 use gossip_pga::model::logreg_layout;
@@ -37,6 +38,7 @@ fn run(
     let d = grad.flat_dim();
     let topo = Topology::ring(n);
     let mut mixer = Mixer::new(&topo, d);
+    let pool = WorkerPool::new(1); // this bench's loop is single-threaded
     let mut params = ParamMatrix::broadcast(n, &init);
     let _ = logreg_layout(d);
     let mut rngs: Vec<Rng> = (0..n).map(|i| Rng::new(7).split(i as u64)).collect();
@@ -63,7 +65,7 @@ fn run(
         }
         if (k + 1) % h == 0 {
             // exact global average
-            mixer.global_average(&mut params, 1);
+            mixer.global_average(&mut params, &pool)?;
         } else {
             mixer.gossip_with(&mut params, |j, xj| {
                 let (dense, bytes) = codecs[j](xj);

@@ -3,11 +3,15 @@
 //!
 //!   * axpy + gossip mix (the L3 inner loop) at deep-learning d
 //!   * global average
+//!   * task dispatch: per-step scoped spawn vs the persistent pool — the
+//!     pooled-vs-scoped headline (why `exec::WorkerPool` exists)
 //!   * in-proc ring all-reduce (threaded bus)
 //!   * PJRT grad execution + literal round-trip per model
 //!   * a full coordinator step (logreg, n = 32)
-//!   * sequential vs threaded coordinator step (n = 16) — the scaling
+//!   * sequential vs pooled coordinator step (n = 16) — the scaling
 //!     headline; also asserts both runs end bit-identical
+//!   * overlap (double-buffered async gossip) vs BSP at the same thread
+//!     count — the async-gossip headline; asserts bit-identical finals
 //!
 //!     cargo bench --bench perf_hotpath
 
@@ -18,6 +22,7 @@ use gossip_pga::collective::{bus, ring_all_reduce, run_nodes};
 use gossip_pga::coordinator::mixer::{axpy, Mixer};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::CostModel;
+use gossip_pga::exec::WorkerPool;
 use gossip_pga::harness::{fmt_duration, measure, Table};
 use gossip_pga::optim::LrSchedule;
 use gossip_pga::params::ParamMatrix;
@@ -29,7 +34,7 @@ fn random_matrix(rng: &mut Rng, n: usize, d: usize) -> ParamMatrix {
     ParamMatrix::random(rng, n, d, 1.0)
 }
 
-fn trainer_opts(n: usize, threads: usize) -> TrainerOptions {
+fn trainer_opts(n: usize, threads: usize, overlap: bool) -> TrainerOptions {
     TrainerOptions {
         algorithm: AlgorithmKind::GossipPga,
         topology: Topology::ring(n),
@@ -45,6 +50,7 @@ fn trainer_opts(n: usize, threads: usize) -> TrainerOptions {
         cost_dim: 25_500_000,
         log_every: 1000,
         threads,
+        overlap,
     }
 }
 
@@ -66,14 +72,66 @@ fn main() -> anyhow::Result<()> {
         format!("{:.1} GB/s", (d * 8) as f64 / s.mean / 1e9),
     ]);
 
-    // --- gossip mix, ring n=16 -------------------------------------------
+    // --- task dispatch: scoped spawn vs persistent pool --------------------
+    // The pooled-vs-scoped row pair: identical tiny jobs (the small-d
+    // regime where PR 1's per-step spawn/join cost dominated), dispatched
+    // through std::thread::scope vs the parked pool.
     let threads_avail = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let dispatch_t = threads_avail.clamp(2, 8);
+    let work: Vec<f32> = rng.normal_vec(1 << 14, 1.0);
+    let s_scoped = measure(10, 300, || {
+        std::thread::scope(|s| {
+            for _ in 0..dispatch_t {
+                let w = &work;
+                s.spawn(move || std::hint::black_box(w.iter().sum::<f32>()));
+            }
+        });
+    });
+    let pool = WorkerPool::new(dispatch_t);
+    let s_pooled = measure(10, 300, || {
+        pool.run(
+            (0..dispatch_t)
+                .map(|_| {
+                    let w = &work;
+                    move || {
+                        std::hint::black_box(w.iter().sum::<f32>());
+                        Ok(())
+                    }
+                })
+                .collect::<Vec<_>>(),
+        )
+        .unwrap();
+    });
+    t.rowv(vec![
+        "task dispatch, scoped spawn".into(),
+        format!("{dispatch_t} jobs x 16k f32"),
+        fmt_duration(s_scoped.mean),
+        fmt_duration(s_scoped.p95),
+        format!("{:.0} batches/s", 1.0 / s_scoped.mean),
+    ]);
+    t.rowv(vec![
+        "task dispatch, pooled".into(),
+        format!("{dispatch_t} jobs x 16k f32"),
+        fmt_duration(s_pooled.mean),
+        fmt_duration(s_pooled.p95),
+        format!("{:.0} batches/s", 1.0 / s_pooled.mean),
+    ]);
+    t.rowv(vec![
+        "  -> pooled vs scoped".into(),
+        format!("{dispatch_t} threads"),
+        format!("{:.2}x", s_scoped.mean / s_pooled.mean),
+        "-".into(),
+        "(persistent pool, no spawn/join)".into(),
+    ]);
+
+    // --- gossip mix, ring n=16 -------------------------------------------
     for (dd, label) in [(1_000_000usize, "d = 1M"), (12_235_776, "d = 12.2M (e2e)")] {
         let topo = Topology::ring(16);
         let mut params = random_matrix(&mut rng, 16, dd);
         let mut mixer = Mixer::new(&topo, dd);
         for threads in [1usize, threads_avail] {
-            let s = measure(2, 10, || mixer.gossip(&mut params, threads));
+            let mix_pool = WorkerPool::new(threads);
+            let s = measure(2, 10, || mixer.gossip(&mut params, &mix_pool).unwrap());
             t.rowv(vec![
                 format!("gossip mix (ring, n=16, t={threads})"),
                 label.into(),
@@ -82,7 +140,8 @@ fn main() -> anyhow::Result<()> {
                 format!("{:.1} GB/s", (16 * 3 * dd * 4) as f64 / s.mean / 1e9),
             ]);
         }
-        let s = measure(2, 10, || mixer.global_average(&mut params, 1));
+        let seq_pool = WorkerPool::new(1);
+        let s = measure(2, 10, || mixer.global_average(&mut params, &seq_pool).unwrap());
         t.rowv(vec![
             "global average (n=16)".into(),
             label.into(),
@@ -146,7 +205,7 @@ fn main() -> anyhow::Result<()> {
     // --- full coordinator step --------------------------------------------
     let n = 32;
     let (workload, init) = logreg_workload(rt.clone(), n, 256, true, 3)?;
-    let mut trainer = Trainer::new(workload, init, trainer_opts(n, 1))?;
+    let mut trainer = Trainer::new(workload, init, trainer_opts(n, 1, false))?;
     let s = measure(5, 50, || {
         trainer.step_once().unwrap();
     });
@@ -158,15 +217,15 @@ fn main() -> anyhow::Result<()> {
         format!("{:.0} worker-execs/s", n as f64 / s.mean),
     ]);
 
-    // --- sequential vs threaded coordinator step ---------------------------
+    // --- sequential vs pooled coordinator step -----------------------------
     // Same seed, same step count: the throughput ratio is the parallel
     // speedup, and the final parameters must agree bit-for-bit.
     let n = 16;
     let threads = threads_avail.min(n).max(2);
     let (workload_seq, init_seq) = logreg_workload(rt.clone(), n, 256, true, 3)?;
     let (workload_thr, init_thr) = logreg_workload(rt.clone(), n, 256, true, 3)?;
-    let mut seq = Trainer::new(workload_seq, init_seq, trainer_opts(n, 1))?;
-    let mut thr = Trainer::new(workload_thr, init_thr, trainer_opts(n, threads))?;
+    let mut seq = Trainer::new(workload_seq, init_seq, trainer_opts(n, 1, false))?;
+    let mut thr = Trainer::new(workload_thr, init_thr, trainer_opts(n, threads, false))?;
     let s_seq = measure(5, 50, || {
         seq.step_once().unwrap();
     });
@@ -177,7 +236,7 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(
             seq.worker_params(i),
             thr.worker_params(i),
-            "threaded run diverged from sequential at worker {i}"
+            "pooled run diverged from sequential at worker {i}"
         );
     }
     t.rowv(vec![
@@ -188,18 +247,63 @@ fn main() -> anyhow::Result<()> {
         format!("{:.0} worker-execs/s", n as f64 / s_seq.mean),
     ]);
     t.rowv(vec![
-        "coordinator step, threaded".into(),
+        "coordinator step, pooled".into(),
         format!("n = {n}, PGA H=6, threads={threads}"),
         fmt_duration(s_thr.mean),
         fmt_duration(s_thr.p95),
         format!("{:.0} worker-execs/s", n as f64 / s_thr.mean),
     ]);
     t.rowv(vec![
-        "  -> threaded speedup".into(),
+        "  -> pooled speedup".into(),
         format!("{threads} threads"),
         format!("{:.2}x", s_seq.mean / s_thr.mean),
         "-".into(),
         "(params bit-identical)".into(),
+    ]);
+
+    // --- overlap (double-buffered async gossip) vs BSP ---------------------
+    // Same thread count, same seed: overlap hides the round-t mix behind
+    // round t+1's sampling phase. Both trainers take the same number of
+    // steps; after a final drain their parameters must agree bit-for-bit
+    // (the schedule-equivalence contract).
+    let (workload_bsp, init_bsp) = logreg_workload(rt.clone(), n, 256, true, 3)?;
+    let (workload_ovl, init_ovl) = logreg_workload(rt.clone(), n, 256, true, 3)?;
+    let mut bsp = Trainer::new(workload_bsp, init_bsp, trainer_opts(n, threads, false))?;
+    let mut ovl = Trainer::new(workload_ovl, init_ovl, trainer_opts(n, threads, true))?;
+    let s_bsp = measure(5, 60, || {
+        bsp.step_once().unwrap();
+    });
+    let s_ovl = measure(5, 60, || {
+        ovl.step_once().unwrap();
+    });
+    ovl.drain().unwrap();
+    for i in 0..n {
+        assert_eq!(
+            bsp.worker_params(i),
+            ovl.worker_params(i),
+            "overlap run diverged from BSP at worker {i}"
+        );
+    }
+    t.rowv(vec![
+        "coordinator step, BSP".into(),
+        format!("n = {n}, PGA H=6, threads={threads}"),
+        fmt_duration(s_bsp.mean),
+        fmt_duration(s_bsp.p95),
+        format!("{:.0} worker-execs/s", n as f64 / s_bsp.mean),
+    ]);
+    t.rowv(vec![
+        "coordinator step, overlap".into(),
+        format!("n = {n}, PGA H=6, threads={threads}, async gossip"),
+        fmt_duration(s_ovl.mean),
+        fmt_duration(s_ovl.p95),
+        format!("{:.0} worker-execs/s", n as f64 / s_ovl.mean),
+    ]);
+    t.rowv(vec![
+        "  -> overlap vs BSP".into(),
+        format!("{threads} threads"),
+        format!("{:.2}x", s_bsp.mean / s_ovl.mean),
+        "-".into(),
+        "(params bit-identical after drain)".into(),
     ]);
 
     t.print();

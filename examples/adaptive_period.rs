@@ -30,6 +30,7 @@ fn opts(algo: AlgorithmKind, n: usize, seed: u64) -> TrainerOptions {
         cost_dim: 25_500_000,
         log_every: 50,
         threads: 1,
+        overlap: false,
     }
 }
 

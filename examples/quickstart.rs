@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
             cost_dim: 25_500_000, // bill comms as if this were ResNet-50
             log_every: 25,
             threads: 1,
+            overlap: false,
         };
         let mut trainer = Trainer::new(workload, init, opts)?;
         let hist = trainer.run(steps, algo.display())?;

@@ -7,7 +7,7 @@
 //!     make artifacts && cargo run --release --example train_transformer
 //!
 //! Flags: --nodes N --steps S --tag tiny|e2e --algo pga|gossip|... --h H
-//!        --threads T --out csv_path
+//!        --threads T --overlap true --out csv_path
 //!
 //! The synthetic corpus is an order-1 Markov chain with entropy floor
 //! ~ln(4)+noise (= the best achievable loss); watching the loss fall from
@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
     let algo = AlgorithmKind::from_name(&flag(&args, "algo", "pga"))?;
     let h: usize = flag(&args, "h", "6").parse()?;
     let threads: usize = flag(&args, "threads", "1").parse()?;
+    let overlap: bool = flag(&args, "overlap", "false").parse()?;
     let out = flag(&args, "out", "target/e2e_loss.csv");
     let lr: f64 = flag(&args, "lr", "0.1").parse()?;
     let momentum: f64 = flag(&args, "momentum", "0.9").parse()?;
@@ -77,6 +78,7 @@ fn main() -> anyhow::Result<()> {
         cost_dim: 330_000_000,
         log_every: 1,
         threads,
+        overlap,
     };
     let mut trainer = Trainer::new(workload, init, opts)?;
 
@@ -100,6 +102,7 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+    trainer.drain()?; // overlap mode: complete the in-flight mix before eval
     let eval = lm_eval_loss(&trainer, 8, seed)?;
     hist.write_csv(std::path::Path::new(&out))?;
     println!(

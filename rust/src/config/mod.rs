@@ -203,9 +203,14 @@ pub struct ExperimentConfig {
     pub samples_per_node: usize,
     pub batch: usize,
     pub log_every: usize,
-    /// Worker threads for the per-step phase 1-2 fan-out and row-parallel
-    /// mixing (1 = sequential; results are bit-identical at any value).
+    /// Size of the persistent worker pool the per-step phases, the
+    /// row-parallel mix and the eval pass shard across (1 = sequential;
+    /// results are bit-identical at any value).
     pub threads: usize,
+    /// Double-buffered async gossip: overlap the round-t mix with round
+    /// t+1's sampling phase (bit-identical to BSP at every global-averaging
+    /// boundary). Off by default.
+    pub overlap: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -232,6 +237,7 @@ impl Default for ExperimentConfig {
             batch: 32,
             log_every: 50,
             threads: 1,
+            overlap: false,
         }
     }
 }
@@ -261,6 +267,7 @@ impl ExperimentConfig {
             batch: doc.get_usize("data.batch", d.batch)?,
             log_every: doc.get_usize("train.log_every", d.log_every)?,
             threads: doc.get_usize("train.threads", d.threads)?,
+            overlap: doc.get_bool("train.overlap", d.overlap)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -385,5 +392,19 @@ mod tests {
         assert_eq!(ExperimentConfig::default().threads, 1);
         let doc = Toml::parse("[train]\nthreads = 0\n").unwrap();
         assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn overlap_parse_from_toml() {
+        let doc = Toml::parse("[train]\noverlap = true\nthreads = 4\n").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert!(cfg.overlap);
+        // default is BSP, and overlap composes with threads = 1 (it
+        // degenerates to the synchronous schedule).
+        assert!(!ExperimentConfig::default().overlap);
+        let doc = Toml::parse("[train]\noverlap = true\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).unwrap().overlap);
+        let doc = Toml::parse("[train]\noverlap = 3\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err(), "overlap must be a bool");
     }
 }

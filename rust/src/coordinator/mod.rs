@@ -11,17 +11,33 @@
 //!      single-process run reports paper-style wall-clock columns.
 //!
 //! Storage: all worker parameters live in one contiguous
-//! [`ParamMatrix`] (worker i = row i). Phases 1-2 shard workers across
-//! [`TrainerOptions::threads`] scoped threads — each worker owns its RNG,
-//! gradient buffer, batch scratch and parameter row, so the split is
-//! data-race-free by construction — and the gossip mix shards output rows
-//! the same way. This is how the deployed decentralized baselines run
-//! (one process per node); here it buys back the n-fold serialization tax
-//! of simulating n workers on one thread.
+//! [`ParamMatrix`] (worker i = row i). Phases 1-2, the gossip mix, the
+//! global-average mean and the eval pass all shard across one persistent
+//! [`WorkerPool`] of [`TrainerOptions::threads`] parked threads (see
+//! [`crate::exec`] for the determinism contract) — each worker owns its
+//! RNG, gradient buffer, batch scratch and parameter row, so the split is
+//! data-race-free by construction. This is how the deployed decentralized
+//! baselines run (one process per node); here it buys back the n-fold
+//! serialization tax of simulating n workers on one thread, without the
+//! per-step thread spawn/join the PR-1 scoped version paid.
+//!
+//! §Overlap ([`TrainerOptions::overlap`] / `--overlap`): the double-buffer
+//! mode. A gossip round issued at step t runs asynchronously on the pool
+//! ([`mixer::Mixer::gossip_async`]) while the main thread begins step t+1's
+//! parameter-independent sampling phase; the mix is drained before step
+//! t+1's gradients read the rows. The OPERATIONS and their order on the
+//! parameter matrix are exactly the BSP schedule's, so overlapped runs are
+//! bit-identical to BSP runs at every drained boundary — in particular at
+//! every global-averaging step k·H, where the synchronous all-reduce acts
+//! as the barrier (asserted by `rust/tests/properties.rs`). Between drains
+//! the public accessors ([`Trainer::worker_params`] etc.) see the PRE-mix
+//! iterate; call [`Trainer::drain`] first for exact state. Checkpointing
+//! drains (never drops) the in-flight mix.
 //!
 //! Workers are deterministic: worker i's batch stream is `seed.split(i)`
-//! and every reduction fixes its order, so sequential and threaded runs of
-//! the same seed agree bit-for-bit (asserted by rust/tests/properties.rs).
+//! and every reduction fixes its order, so sequential, pooled and
+//! overlapped runs of the same seed agree bit-for-bit at synchronization
+//! points (asserted by rust/tests/properties.rs).
 
 pub mod checkpoint;
 pub mod mixer;
@@ -34,7 +50,8 @@ use crate::algorithms::{schedule_for, AlgorithmKind, CommAction, Schedule, SlowM
 use crate::config::ExperimentConfig;
 use crate::costmodel::{CostModel, SimClock};
 use crate::data::{ClusterData, LogRegData, TokenCorpus};
-use crate::metrics::{consensus_distance, History, Record};
+use crate::exec::WorkerPool;
+use crate::metrics::{consensus_distance_pooled, History, Record};
 use crate::model;
 use crate::optim::{LrSchedule, Optimizer};
 use crate::params::ParamMatrix;
@@ -66,32 +83,51 @@ impl Workload {
         self.grad_fn().spec.meta_usize("batch").unwrap_or(32)
     }
 
-    /// Build this step's batch literals for `worker`. `&self` + caller-owned
-    /// rng/scratch: safe to call for distinct workers concurrently.
-    fn sample(&self, worker: usize, rng: &mut Rng, scratch: &mut BatchScratch) -> Result<Vec<xla::Literal>> {
+    /// Draw this step's batch for `worker` into `scratch` (pure RNG + copy
+    /// work, no XLA). `&self` + caller-owned rng/scratch: safe to call for
+    /// distinct workers concurrently. Split from [`Workload::literals`] so
+    /// overlap mode can sample while the previous round's mix is still in
+    /// flight — sampling never reads parameters.
+    fn sample_scratch(&self, worker: usize, rng: &mut Rng, scratch: &mut BatchScratch) {
         match self {
-            Workload::LogReg { data, grad } => {
-                let m = self.batch_size();
-                data.sample_batch(worker, m, rng, &mut scratch.x, &mut scratch.yf);
-                Ok(vec![
-                    lit_f32(&scratch.x, &grad.spec.inputs[1].shape)?,
-                    lit_f32(&scratch.yf, &grad.spec.inputs[2].shape)?,
-                ])
+            Workload::LogReg { data, .. } => {
+                data.sample_batch(worker, self.batch_size(), rng, &mut scratch.x, &mut scratch.yf);
             }
-            Workload::Mlp { data, grad, .. } => {
-                let m = self.batch_size();
-                data.sample_batch(worker, m, rng, &mut scratch.x, &mut scratch.yi);
-                Ok(vec![
-                    lit_f32(&scratch.x, &grad.spec.inputs[1].shape)?,
-                    lit_i32(&scratch.yi, &grad.spec.inputs[2].shape)?,
-                ])
+            Workload::Mlp { data, .. } => {
+                data.sample_batch(worker, self.batch_size(), rng, &mut scratch.x, &mut scratch.yi);
             }
-            Workload::Lm { corpus, grad, seq_plus_one, .. } => {
-                let b = self.batch_size();
-                corpus.sample_batch(b, *seq_plus_one, rng, &mut scratch.yi);
+            Workload::Lm { corpus, seq_plus_one, .. } => {
+                corpus.sample_batch(self.batch_size(), *seq_plus_one, rng, &mut scratch.yi);
+            }
+        }
+    }
+
+    /// Build the XLA batch literals from a filled `scratch`.
+    fn literals(&self, scratch: &BatchScratch) -> Result<Vec<xla::Literal>> {
+        match self {
+            Workload::LogReg { grad, .. } => Ok(vec![
+                lit_f32(&scratch.x, &grad.spec.inputs[1].shape)?,
+                lit_f32(&scratch.yf, &grad.spec.inputs[2].shape)?,
+            ]),
+            Workload::Mlp { grad, .. } => Ok(vec![
+                lit_f32(&scratch.x, &grad.spec.inputs[1].shape)?,
+                lit_i32(&scratch.yi, &grad.spec.inputs[2].shape)?,
+            ]),
+            Workload::Lm { grad, .. } => {
                 Ok(vec![lit_i32(&scratch.yi, &grad.spec.inputs[1].shape)?])
             }
         }
+    }
+
+    /// Sample + build literals in one call (the eval path).
+    fn sample(
+        &self,
+        worker: usize,
+        rng: &mut Rng,
+        scratch: &mut BatchScratch,
+    ) -> Result<Vec<xla::Literal>> {
+        self.sample_scratch(worker, rng, scratch);
+        self.literals(scratch)
     }
 }
 
@@ -122,9 +158,15 @@ pub struct TrainerOptions {
     /// Record a metrics row every `log_every` steps (consensus distance is
     /// O(n d), so dense logging of big models costs time).
     pub log_every: usize,
-    /// Worker threads for phases 1-2 and the row-parallel mix. 1 =
-    /// sequential (the default); results are bit-identical at any value.
+    /// Size of the persistent worker pool that phases 1-2, the mix and the
+    /// eval pass shard across. 1 = sequential (the default); results are
+    /// bit-identical at any value.
     pub threads: usize,
+    /// Double-buffered async gossip: overlap the round-t mix with round
+    /// t+1's sampling phase. Bit-identical to BSP at every drained
+    /// boundary (and trivially so at every k·H global average); off by
+    /// default.
+    pub overlap: bool,
 }
 
 impl TrainerOptions {
@@ -148,13 +190,14 @@ impl TrainerOptions {
             cost_dim,
             log_every: cfg.log_every,
             threads: cfg.threads,
+            overlap: cfg.overlap,
         }
     }
 }
 
 /// Per-worker state (everything but the parameter row, which lives in the
 /// trainer's [`ParamMatrix`]). Each worker owns its batch scratch so
-/// phase 1-2 can run one worker per thread.
+/// phase 1-2 can run one worker per pool job.
 struct Worker {
     opt: Optimizer,
     rng: Rng,
@@ -168,17 +211,22 @@ pub struct Trainer {
     pub workload: Workload,
     opts: TrainerOptions,
     workers: Vec<Worker>,
+    /// In-flight overlap mix, if any. Declared BEFORE `params`/`mixer`: on
+    /// drop its Ticket blocks until the background jobs release their raw
+    /// views of those buffers.
+    pending: Option<mixer::PendingMix>,
     /// n x d worker parameters (worker i = row i).
     params: ParamMatrix,
     mixer: mixer::Mixer,
+    /// The persistent execution engine every parallel phase shards across.
+    pool: WorkerPool,
     schedule: Box<dyn Schedule>,
     clock: SimClock,
     /// SlowMo outer state (parameters at last sync + slow momentum buffer).
     slowmo_prev: Vec<f32>,
     slowmo_u: Vec<f32>,
     step: usize,
-    /// Scratch for [`Trainer::global_loss`] / mean-parameter evaluation.
-    eval_scratch: BatchScratch,
+    /// Scratch for [`Trainer::global_loss`] mean-parameter evaluation.
     mean_buf: Vec<f32>,
 }
 
@@ -203,6 +251,7 @@ impl Trainer {
             .collect();
         let params = ParamMatrix::broadcast(n, &init_params);
         let mixer = mixer::Mixer::new(&opts.topology, d);
+        let pool = WorkerPool::new(opts.threads);
         let schedule = schedule_for(opts.algorithm, opts.period, opts.aga_init_period, opts.aga_warmup)?;
         let slowmo_prev = if opts.algorithm == AlgorithmKind::SlowMo { init_params } else { Vec::new() };
         let slowmo_u = if opts.algorithm == AlgorithmKind::SlowMo { vec![0.0; d] } else { Vec::new() };
@@ -210,14 +259,15 @@ impl Trainer {
             workload,
             opts,
             workers,
+            pending: None,
             params,
             mixer,
+            pool,
             schedule,
             clock: SimClock::default(),
             slowmo_prev,
             slowmo_u,
             step: 0,
-            eval_scratch: BatchScratch::default(),
             mean_buf: vec![0.0; d],
         })
     }
@@ -226,9 +276,10 @@ impl Trainer {
         self.workers.len()
     }
 
-    /// Effective worker-thread count for this trainer.
-    fn threads(&self) -> usize {
-        self.opts.threads.max(1).min(self.workers.len())
+    /// The persistent worker pool (sharding policy, poison state). Exposed
+    /// so harnesses can inspect — or deliberately poison — the engine.
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
     }
 
     /// Mean worker loss at the last executed step.
@@ -237,15 +288,18 @@ impl Trainer {
     }
 
     /// Average parameters across workers (x-bar), e.g. for evaluation.
+    /// Overlap note: reflects the last DRAINED state; see [`Trainer::drain`].
     pub fn mean_params(&self) -> Vec<f32> {
         self.params.mean_row()
     }
 
+    /// Worker i's parameter row (overlap note: last drained state).
     pub fn worker_params(&self, i: usize) -> &[f32] {
         self.params.row(i)
     }
 
-    /// The live parameter matrix (read-only view).
+    /// The live parameter matrix (read-only view; overlap note: last
+    /// drained state).
     pub fn param_matrix(&self) -> &ParamMatrix {
         &self.params
     }
@@ -270,60 +324,56 @@ impl Trainer {
         self.mixer.gossip_clock = rounds;
     }
 
+    /// Complete the in-flight overlap mix, if any. After this the visible
+    /// state is bit-identical to the BSP schedule at the same step. No-op
+    /// when nothing is pending (always, in BSP mode).
+    pub fn drain(&mut self) -> Result<()> {
+        if let Some(pending) = self.pending.take() {
+            self.mixer.finish_gossip(&mut self.params, pending)?;
+        }
+        Ok(())
+    }
+
     /// Execute one iteration of Algorithm 1; returns the action taken.
+    ///
+    /// BSP mode: phases 1-2, then the communication action, synchronously.
+    /// Overlap mode: sample first (parameter-independent), drain the
+    /// previous round's mix, run gradients + optimizer, then LAUNCH this
+    /// round's gossip on the pool and return while it runs. Global
+    /// averages stay synchronous — they are the schedule's barriers.
     pub fn step_once(&mut self) -> Result<CommAction> {
         let k = self.step;
         let lr = self.opts.lr.at(k);
-        let threads = self.threads();
-        // 1+2: local gradient + update, one parameter row per worker.
-        let d = self.params.d();
-        let workload = &self.workload;
-        if threads <= 1 {
-            for (i, (w, row)) in self.workers.iter_mut().zip(self.params.rows_mut()).enumerate() {
-                step_worker(workload, i, w, row, lr)?;
-            }
+        if self.opts.overlap {
+            self.sample_phase()?;
+            self.drain()?;
+            self.grad_phase(lr, true)?;
         } else {
-            let per = (self.workers.len() + threads - 1) / threads;
-            // Split the field borrows up front so the scope closure only
-            // captures plain locals (no whole-`self` capture).
-            let workers = &mut self.workers;
-            let rows = self.params.as_mut_slice();
-            let results: Vec<Result<()>> = std::thread::scope(|s| {
-                let handles: Vec<_> = workers
-                    .chunks_mut(per)
-                    .zip(rows.chunks_mut(per * d))
-                    .enumerate()
-                    .map(|(ci, (wchunk, rchunk))| {
-                        s.spawn(move || -> Result<()> {
-                            for (j, (w, row)) in
-                                wchunk.iter_mut().zip(rchunk.chunks_mut(d)).enumerate()
-                            {
-                                step_worker(workload, ci * per + j, w, row, lr)?;
-                            }
-                            Ok(())
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("worker thread panicked")).collect()
-            });
-            for r in results {
-                r?;
-            }
+            debug_assert!(self.pending.is_none());
+            self.grad_phase(lr, false)?;
         }
         let mean_loss = self.mean_loss();
-        // 3: communication action. Pass the UNCAPPED thread count: gossip
-        // caps at n rows internally, but the global-average mean shards by
-        // columns of d and can use more threads than workers (determinism
-        // holds at any count).
-        let comm_threads = self.opts.threads.max(1);
+        // 3: communication action (the pool caps its own shard counts —
+        // gossip at n rows, the global-average mean at d columns; one
+        // policy, `WorkerPool::shards`).
         let action = self.schedule.action(k, mean_loss);
         match action {
             CommAction::None => {}
             CommAction::Gossip => {
-                self.mixer.gossip(&mut self.params, comm_threads);
+                if self.opts.overlap {
+                    // SAFETY: until drain() completes this round, the
+                    // trainer never takes &mut to params (accessors are
+                    // read-only, every mutating path drains first), never
+                    // drops the mixer before the pending mix (field order),
+                    // and never leaks the PendingMix.
+                    let pending = unsafe { self.mixer.gossip_async(&self.params, &self.pool) }?;
+                    self.pending = Some(pending);
+                } else {
+                    self.mixer.gossip(&mut self.params, &self.pool)?;
+                }
             }
             CommAction::GlobalAverage => {
-                self.mixer.global_average(&mut self.params, comm_threads);
+                self.mixer.global_average(&mut self.params, &self.pool)?;
                 if self.opts.algorithm == AlgorithmKind::SlowMo {
                     self.slowmo_outer_update(lr);
                 }
@@ -343,6 +393,62 @@ impl Trainer {
         Ok(action)
     }
 
+    /// Phase 0 (overlap mode): every worker draws its batch into its own
+    /// scratch, sharded across the pool. Pure RNG work — runs while the
+    /// previous round's mix is still in flight.
+    fn sample_phase(&mut self) -> Result<()> {
+        let n = self.workers.len();
+        let t = self.pool.shards(n);
+        let per = (n + t - 1) / t;
+        let workload = &self.workload;
+        self.pool.run(
+            self.workers
+                .chunks_mut(per)
+                .enumerate()
+                .map(|(ci, wchunk)| {
+                    move || {
+                        for (j, w) in wchunk.iter_mut().enumerate() {
+                            workload.sample_scratch(ci * per + j, &mut w.rng, &mut w.scratch);
+                        }
+                        Ok(())
+                    }
+                })
+                .collect(),
+        )
+    }
+
+    /// Phases 1-2: local gradient + optimizer update, one parameter row per
+    /// worker, sharded across the pool. With `presampled` the batch comes
+    /// from the worker's scratch (overlap mode); otherwise each worker
+    /// samples inline first — the exact same RNG draws in the same
+    /// per-worker order either way.
+    fn grad_phase(&mut self, lr: f64, presampled: bool) -> Result<()> {
+        let d = self.params.d();
+        let n = self.workers.len();
+        let t = self.pool.shards(n);
+        let per = (n + t - 1) / t;
+        let workload = &self.workload;
+        let workers = &mut self.workers;
+        let rows = self.params.row_blocks_mut(per);
+        self.pool.run(
+            workers
+                .chunks_mut(per)
+                .zip(rows)
+                .enumerate()
+                .map(|(ci, (wchunk, rchunk))| {
+                    move || {
+                        for (j, (w, row)) in
+                            wchunk.iter_mut().zip(rchunk.chunks_mut(d)).enumerate()
+                        {
+                            step_worker(workload, ci * per + j, w, row, lr, presampled)?;
+                        }
+                        Ok(())
+                    }
+                })
+                .collect(),
+        )
+    }
+
     /// SlowMo (Wang et al. 2019) outer update at a sync point. All workers
     /// hold the same averaged x at this point.
     fn slowmo_outer_update(&mut self, lr: f64) {
@@ -360,7 +466,7 @@ impl Trainer {
     }
 
     fn consensus(&self) -> f64 {
-        consensus_distance(&self.params)
+        consensus_distance_pooled(&self.params, &self.pool)
     }
 
     /// The paper's plotted quantity: the global objective
@@ -368,32 +474,61 @@ impl Trainer {
     /// parameters on a fixed per-node eval batch. (The mean of local
     /// losses at local params under-reports divergence: drifted workers
     /// look "better" on their own shards — Definition 1's heterogeneity.)
+    ///
+    /// Sharded across the pool, one slot per node; the node totals reduce
+    /// in ascending order, so every pool size produces the same bits.
+    /// Drains the in-flight mix first (the mean must see the post-mix
+    /// iterate, like the BSP schedule would).
     pub fn global_loss(&mut self) -> Result<f64> {
+        self.drain()?;
         self.params.mean_into(&mut self.mean_buf);
-        let d = self.mean_buf.len();
-        let mut grad_sink = vec![0.0f32; d];
-        let mut total = 0.0f64;
         let n = self.workers.len();
-        let base = Rng::new(self.opts.seed ^ 0xE7A1_0055);
+        let d = self.mean_buf.len();
         // 4 fixed batches per node: low-noise eval (the transient-stage
         // gaps live in the 3rd decimal of the convex objective).
         const EVAL_BATCHES: usize = 4;
-        for i in 0..n {
-            let mut rng = base.split(i as u64); // FIXED eval stream per node
-            for _ in 0..EVAL_BATCHES {
-                let batch = self.workload.sample(i, &mut rng, &mut self.eval_scratch)?;
-                total +=
-                    self.workload.grad_fn().call_into(&self.mean_buf, batch, &mut grad_sink)? as f64;
-            }
-        }
-        Ok(total / (n * EVAL_BATCHES) as f64)
+        let base = Rng::new(self.opts.seed ^ 0xE7A1_0055);
+        let workload = &self.workload;
+        let mean = &self.mean_buf;
+        let mut node_totals = vec![0.0f64; n];
+        let t = self.pool.shards(n);
+        let per = (n + t - 1) / t;
+        self.pool.run(
+            node_totals
+                .chunks_mut(per)
+                .enumerate()
+                .map(|(ci, chunk)| {
+                    let base = &base;
+                    move || {
+                        let mut scratch = BatchScratch::default();
+                        let mut grad_sink = vec![0.0f32; d];
+                        for (j, slot) in chunk.iter_mut().enumerate() {
+                            let i = ci * per + j;
+                            let mut rng = base.split(i as u64); // FIXED eval stream per node
+                            let mut total = 0.0f64;
+                            for _ in 0..EVAL_BATCHES {
+                                let batch = workload.sample(i, &mut rng, &mut scratch)?;
+                                total += workload.grad_fn().call_into(mean, batch, &mut grad_sink)?
+                                    as f64;
+                            }
+                            *slot = total;
+                        }
+                        Ok(())
+                    }
+                })
+                .collect(),
+        )?;
+        Ok(node_totals.iter().sum::<f64>() / (n * EVAL_BATCHES) as f64)
     }
 
     /// Snapshot the full training state (see [`checkpoint`]): parameters,
     /// velocities, counters, the gossip clock, adaptive-schedule state and
-    /// SlowMo outer buffers. Errors if only a strict subset of workers has
-    /// velocity state (a partial snapshot could not resume exactly).
-    pub fn checkpoint(&self) -> Result<checkpoint::Checkpoint> {
+    /// SlowMo outer buffers. DRAINS the in-flight overlap mix first — the
+    /// snapshot must be a BSP step boundary, never a half-mixed state.
+    /// Errors if only a strict subset of workers has velocity state (a
+    /// partial snapshot could not resume exactly).
+    pub fn checkpoint(&mut self) -> Result<checkpoint::Checkpoint> {
+        self.drain()?;
         let n = self.workers.len();
         let d = self.params.d();
         let with_vel = self.workers.iter().filter(|w| w.opt.velocity_buf().is_some()).count();
@@ -436,8 +571,10 @@ impl Trainer {
     /// a fresh trainer replay bit-identically to the unbroken run; for v1
     /// files (no RNG block) the caller must replay the data streams itself.
     /// The workload/data/schedule config must match the one the snapshot
-    /// came from; shapes are validated.
+    /// came from; shapes are validated. Any in-flight mix is drained first
+    /// (its result is then overwritten wholesale).
     pub fn restore(&mut self, ck: &checkpoint::Checkpoint) -> Result<()> {
+        self.drain()?;
         let n = self.workers.len();
         let d = self.params.d();
         anyhow::ensure!(
@@ -525,7 +662,9 @@ impl Trainer {
     }
 
     /// Run `steps` iterations, recording metrics every `log_every` steps
-    /// (plus the final step). Returns the history.
+    /// (plus the final step). Returns the history. Logged rows always
+    /// observe DRAINED state, so BSP and overlap runs log identical
+    /// histories.
     pub fn run(&mut self, steps: usize, label: &str) -> Result<History> {
         let mut hist = History::new(label);
         // Recording f(x-bar) costs one extra grad pass per node; for the
@@ -536,6 +675,7 @@ impl Trainer {
             self.step_once()?;
             let last = s + 1 == steps;
             if s % self.opts.log_every.max(1) == 0 || last {
+                self.drain()?;
                 let loss =
                     if cheap_eval { self.global_loss()? } else { self.mean_loss() };
                 hist.push(Record {
@@ -547,21 +687,27 @@ impl Trainer {
                 });
             }
         }
+        self.drain()?;
         Ok(hist)
     }
 }
 
-/// Phase 1-2 for one worker: sample its batch, run the AOT grad graph,
-/// apply the local optimizer step to its parameter row. Free function so
-/// the scoped worker threads can call it without touching the trainer.
+/// Phase 1-2 for one worker: sample its batch (unless presampled by the
+/// overlap phase 0), run the AOT grad graph, apply the local optimizer step
+/// to its parameter row. Free function so the pool jobs can call it without
+/// touching the trainer.
 fn step_worker(
     workload: &Workload,
     i: usize,
     w: &mut Worker,
     row: &mut [f32],
     lr: f64,
+    presampled: bool,
 ) -> Result<()> {
-    let batch = workload.sample(i, &mut w.rng, &mut w.scratch)?;
+    if !presampled {
+        workload.sample_scratch(i, &mut w.rng, &mut w.scratch);
+    }
+    let batch = workload.literals(&w.scratch)?;
     w.loss = workload.grad_fn().call_into(row, batch, &mut w.grad)?;
     w.opt.step(row, &w.grad, lr);
     Ok(())

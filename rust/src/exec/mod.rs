@@ -1,0 +1,476 @@
+//! The persistent execution engine: a long-lived [`WorkerPool`] behind
+//! every parallel phase of the training loop.
+//!
+//! PR 1 sharded phases 1-2 and the gossip mix across `std::thread::scope`
+//! threads spawned *per step*; at small d the spawn/join cost dominates the
+//! actual row work (see `benches/perf_hotpath.rs`, "task dispatch" rows).
+//! This module replaces that with `threads` parked OS threads created once
+//! per [`crate::coordinator::Trainer`]: each step broadcasts a batch of
+//! jobs onto a shared queue, the workers drain it, and the caller collects
+//! the per-job outcomes in index order.
+//!
+//! §Determinism contract. The pool adds NO nondeterminism:
+//!
+//! * every job owns a disjoint slice of the output (rows of the
+//!   [`crate::params::ParamMatrix`], column ranges of a mean, per-node
+//!   eval slots), so execution order across jobs cannot matter;
+//! * every reduction a job performs fixes its accumulation order (rows
+//!   ascending, columns ascending) — the same additions in the same order
+//!   as the sequential loop;
+//! * job *results* are collected and reported in job-index order, so even
+//!   error selection is deterministic.
+//!
+//! Together these make pooled, scoped and sequential execution bit-identical
+//! (asserted by `rust/tests/properties.rs`).
+//!
+//! §Sharding policy. [`WorkerPool::shards`] is the ONE policy for how many
+//! ways a parallel region splits: `min(pool size, work items)`, never 0.
+//! PR 1 had two policies (phases capped at n workers, the mix left
+//! uncapped) — every call site now asks the pool.
+//!
+//! §Failure. A job that returns `Err` fails its batch cleanly (first error
+//! in index order wins). A job that PANICS poisons the pool: the panic is
+//! caught on the worker thread, the batch reports `Err`, and every later
+//! submission is refused with `Err` immediately — the trainer surfaces a
+//! broken step as a `Result`, never as a hang or an abort
+//! (`rust/tests/exec_pool.rs` proves this under a watchdog timeout).
+//!
+//! §Async. [`WorkerPool::submit`] enqueues `'static` jobs without blocking
+//! and returns a [`Ticket`]; this is what double-buffered overlap mode
+//! rides on (the round-t gossip mix runs here while the main thread starts
+//! round t+1). Dropping a `Ticket` BLOCKS until its jobs finish — in-flight
+//! jobs hold raw views of the parameter buffers, so the ticket is the
+//! lifetime anchor that makes early teardown sound.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Result};
+
+/// A boxed job with caller-chosen lifetime (see [`WorkerPool::run`] for the
+/// lifetime-erasure contract).
+type Job<'a> = Box<dyn FnOnce() -> Result<()> + Send + 'a>;
+
+/// Internal queue entry: the job already wrapped with panic capture and the
+/// result send.
+type QueuedTask = Box<dyn FnOnce() + Send + 'static>;
+
+/// Per-job outcome shipped back to the submitting thread. The error is a
+/// rendered string (panic payloads and `anyhow` chains are not `Clone`).
+type Outcome = (usize, Result<(), String>);
+
+struct Queue {
+    tasks: VecDeque<QueuedTask>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    available: Condvar,
+    /// Set when any job panics; checked (and refused) on every submission.
+    poisoned: AtomicBool,
+}
+
+/// A fixed-size pool of parked worker threads (see module docs).
+///
+/// Size 1 is the sequential mode: no threads are spawned and every job runs
+/// inline on the calling thread, so `--threads 1` keeps the zero-overhead
+/// hot path it had before the pool existed (results are bit-identical
+/// either way).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads` workers (clamped to >= 1; size 1 spawns
+    /// nothing and runs jobs inline).
+    pub fn new(threads: usize) -> WorkerPool {
+        let size = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { tasks: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+            poisoned: AtomicBool::new(false),
+        });
+        let handles = if size >= 2 {
+            (0..size)
+                .map(|i| {
+                    let shared = shared.clone();
+                    std::thread::Builder::new()
+                        .name(format!("gpga-pool-{i}"))
+                        .spawn(move || worker_loop(&shared))
+                        .expect("spawning pool worker")
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        WorkerPool { shared, handles, size }
+    }
+
+    /// Worker-thread count (>= 1).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// THE sharding policy: how many ways to split `items` units of work.
+    /// `min(size, items)` and never 0 — phases cap at n workers, a column
+    /// mean caps at d columns, and every call site agrees (the PR-1 split
+    /// between capped phases and an uncapped mix is gone).
+    pub fn shards(&self, items: usize) -> usize {
+        self.size.min(items).max(1)
+    }
+
+    /// True once any job has panicked; the pool refuses further work.
+    pub fn poisoned(&self) -> bool {
+        self.shared.poisoned.load(Ordering::Acquire)
+    }
+
+    /// Run a batch of borrowing jobs to completion, blocking the caller.
+    /// Outcomes are reported in job-index order: the first failing index
+    /// decides the returned error, independent of execution interleaving.
+    ///
+    /// Jobs may borrow from the caller's stack (`&mut` chunks of a matrix,
+    /// `&Workload`, ...): the borrows are erased to `'static` internally,
+    /// which is sound because this method does not return until every job
+    /// has finished (a panicked job still reports completion — it is caught
+    /// on the worker thread, never unwound across the queue).
+    pub fn run<'a, F>(&self, jobs: Vec<F>) -> Result<()>
+    where
+        F: FnOnce() -> Result<()> + Send + 'a,
+    {
+        let boxed: Vec<Job<'a>> = jobs.into_iter().map(|f| Box::new(f) as Job<'a>).collect();
+        // SAFETY: the jobs (and therefore every borrow they capture) are
+        // complete before this function returns — `Ticket::wait` below
+        // receives one outcome per job, and a `Ticket` cannot outlive this
+        // call. Erasing the lifetime never lets a borrow escape.
+        let eternal: Vec<Job<'static>> =
+            unsafe { std::mem::transmute::<Vec<Job<'a>>, Vec<Job<'static>>>(boxed) };
+        self.submit_boxed(eternal)?.wait()
+    }
+
+    /// Enqueue `'static` jobs without blocking; the returned [`Ticket`]
+    /// collects their outcomes. This is the overlap primitive: the caller
+    /// keeps running while the pool works.
+    pub fn submit<F>(&self, jobs: Vec<F>) -> Result<Ticket>
+    where
+        F: FnOnce() -> Result<()> + Send + 'static,
+    {
+        self.submit_boxed(jobs.into_iter().map(|f| Box::new(f) as Job<'static>).collect())
+    }
+
+    fn submit_boxed(&self, jobs: Vec<Job<'static>>) -> Result<Ticket> {
+        if self.poisoned() {
+            bail!("worker pool is poisoned by an earlier job panic");
+        }
+        let count = jobs.len();
+        let (tx, rx) = channel::<Outcome>();
+        if self.handles.is_empty() {
+            // Sequential pool: run inline, with the same panic capture and
+            // poisoning semantics as the threaded path.
+            for (idx, job) in jobs.into_iter().enumerate() {
+                execute(&self.shared, idx, job, &tx);
+            }
+            return Ok(Ticket { remaining: count, collected: Vec::with_capacity(count), rx });
+        }
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue lock");
+            for (idx, job) in jobs.into_iter().enumerate() {
+                let tx = tx.clone();
+                let shared = self.shared.clone();
+                q.tasks.push_back(Box::new(move || execute(&shared, idx, job, &tx)));
+            }
+        }
+        self.shared.available.notify_all();
+        Ok(Ticket { remaining: count, collected: Vec::with_capacity(count), rx })
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue lock");
+            q.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            // Workers drain the queue before honoring shutdown, so any
+            // still-queued job (e.g. an unfinished async mix whose Ticket
+            // was leaked) completes rather than vanishing.
+            h.join().expect("pool worker thread");
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().expect("pool queue lock");
+            loop {
+                if let Some(t) = q.tasks.pop_front() {
+                    break Some(t);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = shared.available.wait(q).expect("pool queue wait");
+            }
+        };
+        match task {
+            Some(t) => t(),
+            None => return,
+        }
+    }
+}
+
+/// Run one job, converting a panic into a poisoned pool + an `Err` outcome.
+/// Exactly one outcome is sent per job — the invariant that makes waiting
+/// hang-free.
+fn execute(shared: &Shared, idx: usize, job: Job<'static>, tx: &Sender<Outcome>) {
+    let outcome = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)) {
+        Ok(Ok(())) => Ok(()),
+        Ok(Err(e)) => Err(format!("{e:#}")),
+        Err(payload) => {
+            shared.poisoned.store(true, Ordering::Release);
+            Err(format!("job panicked: {}", panic_message(&payload)))
+        }
+    };
+    // The receiver only disappears after all outcomes are drained (the
+    // Ticket blocks in drop), so a send failure is benign teardown.
+    let _ = tx.send((idx, outcome));
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// Receipt for a batch of in-flight jobs ([`WorkerPool::submit`]).
+///
+/// `wait` consumes the ticket and reports the batch outcome (first failing
+/// job in index order). Dropping a ticket without waiting still BLOCKS
+/// until all jobs have finished: in-flight jobs may hold raw views of
+/// caller-owned buffers (the double-buffered gossip mix does), so the
+/// ticket going away must mean the jobs are done.
+pub struct Ticket {
+    remaining: usize,
+    collected: Vec<Outcome>,
+    rx: Receiver<Outcome>,
+}
+
+impl Ticket {
+    fn collect_all(&mut self) {
+        while self.remaining > 0 {
+            match self.rx.recv() {
+                Ok(outcome) => {
+                    self.collected.push(outcome);
+                    self.remaining -= 1;
+                }
+                // Senders live inside the queued jobs; disconnection before
+                // all outcomes arrive means the pool was torn down
+                // mid-batch. Record it and stop (wait() reports it).
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Block until every job in the batch has finished; `Err` carries the
+    /// first failure in job-index order.
+    pub fn wait(mut self) -> Result<()> {
+        self.collect_all();
+        if self.remaining > 0 {
+            bail!("worker pool shut down with {} job(s) unfinished", self.remaining);
+        }
+        self.collected.sort_by_key(|(idx, _)| *idx);
+        for (idx, outcome) in std::mem::take(&mut self.collected) {
+            if let Err(msg) = outcome {
+                bail!("pool job {idx} failed: {msg}");
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        self.collect_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    /// Run `f` on a watchdog thread; panic if it does not finish in time.
+    /// Every poisoning/panic test runs under this so a regression shows up
+    /// as a test FAILURE, never as a hung suite.
+    fn with_timeout(secs: u64, f: impl FnOnce() + Send + 'static) {
+        let (tx, rx) = channel();
+        let h = std::thread::spawn(move || {
+            f();
+            tx.send(()).ok();
+        });
+        match rx.recv_timeout(Duration::from_secs(secs)) {
+            Ok(()) => h.join().expect("watchdog body"),
+            Err(_) => panic!("timed out after {secs}s — the pool hung"),
+        }
+    }
+
+    #[test]
+    fn run_executes_every_job_at_every_size() {
+        for size in [1usize, 2, 3, 8] {
+            let pool = WorkerPool::new(size);
+            let counter = AtomicUsize::new(0);
+            let jobs: Vec<_> = (0..7)
+                .map(|_| {
+                    let counter = &counter;
+                    move || {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                        Ok(())
+                    }
+                })
+                .collect();
+            pool.run(jobs).unwrap();
+            assert_eq!(counter.load(Ordering::Relaxed), 7, "size {size}");
+        }
+    }
+
+    #[test]
+    fn run_jobs_borrow_disjoint_chunks() {
+        // The trainer's exact pattern: jobs own disjoint &mut chunks of one
+        // caller-stack buffer.
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0usize; 10];
+        let jobs: Vec<_> = data
+            .chunks_mut(3)
+            .enumerate()
+            .map(|(ci, chunk)| {
+                move || {
+                    for v in chunk.iter_mut() {
+                        *v = ci + 1;
+                    }
+                    Ok(())
+                }
+            })
+            .collect();
+        pool.run(jobs).unwrap();
+        assert_eq!(data, vec![1, 1, 1, 2, 2, 2, 3, 3, 3, 4]);
+    }
+
+    #[test]
+    fn shards_is_the_unified_policy() {
+        let pool = WorkerPool::new(8);
+        assert_eq!(pool.size(), 8);
+        assert_eq!(pool.shards(3), 3, "caps at the work-item count");
+        assert_eq!(pool.shards(100), 8, "caps at the pool size");
+        assert_eq!(pool.shards(0), 1, "never zero");
+        assert_eq!(WorkerPool::new(0).size(), 1, "size clamps to >= 1");
+        assert_eq!(WorkerPool::new(1).shards(16), 1);
+    }
+
+    #[test]
+    fn first_error_in_index_order_wins() {
+        let pool = WorkerPool::new(3);
+        let jobs: Vec<_> = (0..5)
+            .map(|i| move || if i == 1 || i == 3 { bail!("job {i} says no") } else { Ok(()) })
+            .collect();
+        let err = pool.run(jobs).unwrap_err().to_string();
+        assert!(err.contains("job 1"), "want the LOWEST failing index, got: {err}");
+        assert!(!pool.poisoned(), "clean Err must not poison the pool");
+    }
+
+    #[test]
+    fn panic_poisons_and_errs_without_hanging() {
+        with_timeout(30, || {
+            for size in [1usize, 2] {
+                let pool = WorkerPool::new(size);
+                let jobs: Vec<_> = (0..3)
+                    .map(|i| {
+                        move || -> Result<()> {
+                            if i == 1 {
+                                panic!("boom at job {i}");
+                            }
+                            Ok(())
+                        }
+                    })
+                    .collect();
+                let err = pool.run(jobs).unwrap_err().to_string();
+                assert!(err.contains("panicked"), "size {size}: {err}");
+                assert!(err.contains("boom"), "size {size}: panic payload lost: {err}");
+                assert!(pool.poisoned(), "size {size}");
+                // Poisoned pool refuses new work immediately (no hang).
+                let refused = pool.run(vec![|| Ok(())]).unwrap_err().to_string();
+                assert!(refused.contains("poisoned"), "size {size}: {refused}");
+            }
+        });
+    }
+
+    #[test]
+    fn submit_runs_in_background_and_wait_collects() {
+        let pool = WorkerPool::new(2);
+        let done = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<_> = (0..4)
+            .map(|_| {
+                let done = done.clone();
+                move || {
+                    done.fetch_add(1, Ordering::Relaxed);
+                    Ok(())
+                }
+            })
+            .collect();
+        let ticket = pool.submit(jobs).unwrap();
+        ticket.wait().unwrap();
+        assert_eq!(done.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn dropping_a_ticket_blocks_until_jobs_finish() {
+        let pool = WorkerPool::new(2);
+        let flag = Arc::new(AtomicBool::new(false));
+        let f = flag.clone();
+        let ticket = pool
+            .submit(vec![move || {
+                std::thread::sleep(Duration::from_millis(50));
+                f.store(true, Ordering::Release);
+                Ok(())
+            }])
+            .unwrap();
+        drop(ticket);
+        assert!(
+            flag.load(Ordering::Acquire),
+            "ticket drop returned before its job completed"
+        );
+    }
+
+    #[test]
+    fn pool_drop_finishes_queued_work() {
+        with_timeout(30, || {
+            let pool = WorkerPool::new(2);
+            let done = Arc::new(AtomicUsize::new(0));
+            let jobs: Vec<_> = (0..16)
+                .map(|_| {
+                    let done = done.clone();
+                    move || {
+                        std::thread::sleep(Duration::from_millis(2));
+                        done.fetch_add(1, Ordering::Relaxed);
+                        Ok(())
+                    }
+                })
+                .collect();
+            let ticket = pool.submit(jobs).unwrap();
+            drop(pool); // workers drain the queue before exiting
+            ticket.wait().unwrap();
+            assert_eq!(done.load(Ordering::Relaxed), 16);
+        });
+    }
+}

@@ -44,8 +44,10 @@ pub struct RunSpec {
     pub cost_dim: usize,
     pub aga_init: usize,
     pub aga_warmup: usize,
-    /// Worker threads (1 = sequential; see `TrainerOptions::threads`).
+    /// Worker-pool size (1 = sequential; see `TrainerOptions::threads`).
     pub threads: usize,
+    /// Double-buffered async gossip (see `TrainerOptions::overlap`).
+    pub overlap: bool,
 }
 
 impl RunSpec {
@@ -67,6 +69,7 @@ impl RunSpec {
             aga_init: 4,
             aga_warmup: 50,
             threads: 1,
+            overlap: false,
         }
     }
 
@@ -92,6 +95,7 @@ impl RunSpec {
             aga_init: 4,
             aga_warmup: steps / 20,
             threads: 1,
+            overlap: false,
         }
     }
 
@@ -112,6 +116,7 @@ impl RunSpec {
             aga_init: 4,
             aga_warmup: steps / 20,
             threads: 1,
+            overlap: false,
         }
     }
 
@@ -131,6 +136,7 @@ impl RunSpec {
             cost_dim: self.cost_dim,
             log_every: self.log_every,
             threads: self.threads,
+            overlap: self.overlap,
         }
     }
 

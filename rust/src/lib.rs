@@ -39,9 +39,14 @@
 //!   classification, token corpus) + iid/non-iid sharding.
 //! * [`optim`] — SGD / momentum / Nesterov + LR schedules.
 //! * [`algorithms`] — the paper's communication schedules.
+//! * [`exec`] — the persistent execution engine: one parked
+//!   [`exec::WorkerPool`] per trainer that phases 1-2, the gossip mix and
+//!   the eval pass shard across, plus the async job tickets behind
+//!   double-buffered overlap mode (see the module's determinism contract).
 //! * [`coordinator`] — the per-step training pipeline over n workers,
-//!   sharded across `train.threads` worker threads (bit-identical to the
-//!   sequential run at any thread count).
+//!   sharded across the `train.threads`-sized pool (bit-identical to the
+//!   sequential run at any thread count); `--overlap` runs the gossip mix
+//!   concurrently with the next step's sampling phase.
 //! * [`metrics`] — loss curves, consensus distance, transient-stage
 //!   detection, reporters.
 
@@ -52,6 +57,7 @@ pub mod config;
 pub mod coordinator;
 pub mod costmodel;
 pub mod data;
+pub mod exec;
 pub mod harness;
 pub mod jsonio;
 pub mod linalg;

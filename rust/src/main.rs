@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   train [--config exp.toml] [--set key=value ...] [--threads N]
-//!                                                     run one experiment
+//!         [--overlap]                                 run one experiment
 //!   topo  [--n N]                                     topology/beta report
 //!   check                                             verify artifacts load
 //!
@@ -45,6 +45,7 @@ fn print_help() {
          \n\
          USAGE:\n\
            gossip-pga train [--config exp.toml] [--set key=value ...] [--threads N]\n\
+                            [--overlap]\n\
            gossip-pga topo [--n N]\n\
            gossip-pga check\n\
          \n\
@@ -53,17 +54,35 @@ fn print_help() {
            algorithm.name (parallel|gossip|local|pga|aga|slowmo), algorithm.period\n\
            model.name (logreg|mlp|transformer), model.tag (tiny|e2e)\n\
            train.steps, train.lr, train.momentum, train.seed, data.non_iid\n\
-           train.threads (worker threads; --threads N is shorthand)"
+           train.threads (worker-pool size; --threads N is shorthand)\n\
+           train.overlap (double-buffered async gossip; --overlap is shorthand)"
     );
 }
 
-/// Parse `--flag value` pairs; returns (flags, leftovers).
+/// Flags that may appear bare (`--overlap`) or with an explicit boolean
+/// (`--overlap false`).
+const BOOL_FLAGS: &[&str] = &["overlap"];
+
+/// Parse `--flag value` pairs (boolean flags may omit the value).
 fn parse_flags(args: &[String]) -> Result<Vec<(String, String)>> {
     let mut out = Vec::new();
     let mut i = 0;
     while i < args.len() {
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
+            if BOOL_FLAGS.contains(&name) {
+                match args.get(i + 1).map(|s| s.as_str()) {
+                    Some(v @ ("true" | "false")) => {
+                        out.push((name.to_string(), v.to_string()));
+                        i += 2;
+                    }
+                    _ => {
+                        out.push((name.to_string(), "true".to_string()));
+                        i += 1;
+                    }
+                }
+                continue;
+            }
             let val = args.get(i + 1).ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?;
             out.push((name.to_string(), val.clone()));
             i += 2;
@@ -100,20 +119,26 @@ fn cmd_train(args: &[String]) -> Result<()> {
                     .with_context(|| format!("--threads wants an integer, got '{val}'"))?;
                 doc.values.extend(parsed.values);
             }
+            "overlap" => {
+                let parsed = Toml::parse(&format!("train.overlap = {val}"))
+                    .with_context(|| format!("--overlap wants a bool, got '{val}'"))?;
+                doc.values.extend(parsed.values);
+            }
             other => bail!("unknown flag --{other}"),
         }
     }
     let cfg = ExperimentConfig::from_toml(&doc).context("building experiment config")?;
     let topo = cfg.topology();
     println!(
-        "# {} | {} nodes on {} (beta = {:.4}) | H = {} | {} steps | {} thread(s)",
+        "# {} | {} nodes on {} (beta = {:.4}) | H = {} | {} steps | {} thread(s){}",
         cfg.algorithm.display(),
         cfg.nodes,
         cfg.topology,
         topo.beta(),
         cfg.period,
         cfg.steps,
-        cfg.threads
+        cfg.threads,
+        if cfg.overlap { " | overlap" } else { "" }
     );
 
     let rt = Arc::new(Runtime::load_default().context("loading artifacts (run `make artifacts`)")?);

@@ -8,6 +8,7 @@
 //! detector: the last iteration after which the algorithm's curve stays
 //! within a relative `tol` band of the parallel-SGD reference.
 
+use crate::exec::WorkerPool;
 use crate::jsonio::{self, Json};
 use crate::params::ParamMatrix;
 
@@ -99,6 +100,77 @@ impl History {
 /// directly off its live [`ParamMatrix`]).
 pub fn consensus_distance(params: &ParamMatrix) -> f64 {
     consensus_distance_iter(params.n(), params.d(), params.rows())
+}
+
+/// [`consensus_distance`] sharded across the worker pool — the logging-path
+/// variant (consensus is O(n d), the last big sequential loop PR 1 left on
+/// that path). Deterministic at ANY pool size: the column means accumulate
+/// rows-ascending per column, each row's squared distance reduces
+/// columns-ascending into its own slot, and the slots reduce in row order —
+/// the same additions in the same order regardless of sharding. (The
+/// scalar [`consensus_distance`] groups its f64 total differently, so the
+/// two can differ in the last ulps; within one variant all shard counts are
+/// bit-identical.) Falls back to the scalar path if the pool is poisoned.
+pub fn consensus_distance_pooled(params: &ParamMatrix, pool: &WorkerPool) -> f64 {
+    let (n, d) = (params.n(), params.d());
+    if n == 0 || d == 0 {
+        return 0.0;
+    }
+    let src = params.as_slice();
+    // Phase A: column-sharded mean.
+    let mut mean = vec![0.0f64; d];
+    let t = pool.shards(d);
+    let per = (d + t - 1) / t;
+    let mean_jobs: Vec<_> = mean
+        .chunks_mut(per)
+        .enumerate()
+        .map(|(ci, mchunk)| {
+            move || {
+                let off = ci * per;
+                for r in 0..n {
+                    let row = &src[r * d + off..r * d + off + mchunk.len()];
+                    for (m, v) in mchunk.iter_mut().zip(row) {
+                        *m += *v as f64;
+                    }
+                }
+                for m in mchunk.iter_mut() {
+                    *m /= n as f64;
+                }
+                Ok(())
+            }
+        })
+        .collect();
+    if pool.run(mean_jobs).is_err() {
+        return consensus_distance(params);
+    }
+    // Phase B: row-sharded squared distances, one slot per row.
+    let mut slots = vec![0.0f64; n];
+    let t = pool.shards(n);
+    let per = (n + t - 1) / t;
+    let mean_ref = &mean;
+    let slot_jobs: Vec<_> = slots
+        .chunks_mut(per)
+        .enumerate()
+        .map(|(ci, chunk)| {
+            move || {
+                for (j, slot) in chunk.iter_mut().enumerate() {
+                    let i = ci * per + j;
+                    let row = &src[i * d..(i + 1) * d];
+                    let mut acc = 0.0f64;
+                    for (m, v) in mean_ref.iter().zip(row) {
+                        let diff = *v as f64 - m;
+                        acc += diff * diff;
+                    }
+                    *slot = acc;
+                }
+                Ok(())
+            }
+        })
+        .collect();
+    if pool.run(slot_jobs).is_err() {
+        return consensus_distance(params);
+    }
+    slots.iter().sum::<f64>() / n as f64
 }
 
 /// [`consensus_distance`] over loose per-worker rows (test/interop helper).
@@ -230,6 +302,29 @@ mod tests {
         let rows = vec![vec![0.5f32, -1.0, 3.0], vec![2.0, 0.0, -0.5], vec![1.0, 1.0, 1.0]];
         let m = ParamMatrix::from_rows(&rows);
         assert_eq!(consensus_distance(&m), consensus_distance_rows(&rows));
+    }
+
+    #[test]
+    fn consensus_pooled_matches_scalar_within_rounding() {
+        let m = ParamMatrix::random(&mut crate::rng::Rng::new(5), 7, 33, 1.0);
+        let scalar = consensus_distance(&m);
+        let pooled = consensus_distance_pooled(&m, &WorkerPool::new(1));
+        assert!(
+            (scalar - pooled).abs() <= 1e-12 * scalar.max(1.0),
+            "{scalar} vs {pooled}"
+        );
+    }
+
+    #[test]
+    fn consensus_pooled_is_shard_count_invariant() {
+        // The logging-path determinism contract: every pool size produces
+        // the exact same bits (fixed accumulation orders throughout).
+        let m = ParamMatrix::random(&mut crate::rng::Rng::new(9), 6, 41, 2.0);
+        let reference = consensus_distance_pooled(&m, &WorkerPool::new(1));
+        for threads in [2usize, 3, 5, 16] {
+            let got = consensus_distance_pooled(&m, &WorkerPool::new(threads));
+            assert!(got == reference, "threads {threads}: {got} != {reference}");
+        }
     }
 
     #[test]

@@ -147,10 +147,18 @@ impl ParamMatrix {
         out
     }
 
-    /// O(1) storage swap with a same-shape matrix (mixer double-buffering).
+    /// O(1) storage swap with a same-shape matrix (mixer double-buffering;
+    /// in overlap mode this is the drain's buffer flip).
     pub fn swap_data(&mut self, other: &mut ParamMatrix) {
         assert!(self.n == other.n && self.d == other.d, "shape mismatch");
         std::mem::swap(&mut self.data, &mut other.data);
+    }
+
+    /// Disjoint blocks of `per` consecutive rows, each as one flat mutable
+    /// slice (the worker pool's sharding view; the last block may be
+    /// shorter). Safe to hand one block per pool job.
+    pub fn row_blocks_mut(&mut self, per: usize) -> impl Iterator<Item = &mut [f32]> {
+        self.data.chunks_mut(per.max(1) * self.d.max(1))
     }
 
     /// Copy out as per-worker rows (interop/debug; allocates).
@@ -229,12 +237,12 @@ mod tests {
 
     #[test]
     fn chunked_mut_views_split_rows_cleanly() {
-        // The pattern the threaded trainer uses: chunk the flat buffer by
-        // (rows_per_thread * d) and re-chunk by d inside each piece.
+        // The pattern the pooled trainer uses: blocks of rows_per_job rows,
+        // re-chunked by d inside each job.
         let mut m = ParamMatrix::zeros(5, 4);
         let d = m.d();
         let per = 2usize;
-        for (ci, chunk) in m.as_mut_slice().chunks_mut(per * d).enumerate() {
+        for (ci, chunk) in m.row_blocks_mut(per).enumerate() {
             for (k, row) in chunk.chunks_mut(d).enumerate() {
                 row.fill((ci * per + k) as f32);
             }
@@ -242,5 +250,12 @@ mod tests {
         for i in 0..5 {
             assert!(m.row(i).iter().all(|&v| v == i as f32), "row {i}");
         }
+    }
+
+    #[test]
+    fn row_blocks_mut_covers_all_rows_with_short_tail() {
+        let mut m = ParamMatrix::zeros(5, 3);
+        let blocks: Vec<usize> = m.row_blocks_mut(2).map(|b| b.len()).collect();
+        assert_eq!(blocks, vec![6, 6, 3], "2+2+1 rows of d=3");
     }
 }

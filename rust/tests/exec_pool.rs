@@ -1,0 +1,143 @@
+//! The pool's failure path, end to end: a job that PANICS must poison the
+//! [`WorkerPool`] and surface as an `Err` from `Trainer::step_once` — never
+//! a hang, never an abort. Every test here runs under a watchdog timeout so
+//! a deadlock regression fails loudly instead of wedging the suite (no
+//! `#[should_panic]` anywhere: panics stay on the pool's worker threads).
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use gossip_pga::algorithms::AlgorithmKind;
+use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
+use gossip_pga::costmodel::CostModel;
+use gossip_pga::exec::WorkerPool;
+use gossip_pga::optim::LrSchedule;
+use gossip_pga::runtime::Runtime;
+use gossip_pga::topology::Topology;
+
+/// Run `f` on a watchdog thread; FAIL (don't hang) if it overruns.
+fn with_timeout(secs: u64, f: impl FnOnce() + Send + 'static) {
+    let (tx, rx) = channel();
+    let h = std::thread::spawn(move || {
+        f();
+        tx.send(()).ok();
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) => h.join().expect("watchdog body"),
+        Err(_) => panic!("timed out after {secs}s — the pool hung instead of failing"),
+    }
+}
+
+fn trainer(threads: usize) -> Trainer {
+    let rt = Arc::new(Runtime::load_default().expect("run `make artifacts` first"));
+    let (workload, init) = logreg_workload(rt, 4, 256, true, 21).unwrap();
+    let opts = TrainerOptions {
+        algorithm: AlgorithmKind::GossipPga,
+        topology: Topology::ring(4),
+        period: 4,
+        aga_init_period: 2,
+        aga_warmup: 4,
+        lr: LrSchedule::Const { lr: 0.2 },
+        momentum: 0.0,
+        nesterov: false,
+        seed: 21,
+        slowmo: Default::default(),
+        cost: CostModel::calibrated_resnet50(),
+        cost_dim: 25_500_000,
+        log_every: 10,
+        threads,
+        overlap: false,
+    };
+    Trainer::new(workload, init, opts).unwrap()
+}
+
+#[test]
+fn panicking_job_poisons_pool_and_step_once_returns_err() {
+    with_timeout(120, || {
+        for threads in [1usize, 3] {
+            let mut t = trainer(threads);
+            t.step_once().unwrap_or_else(|e| panic!("healthy step failed: {e:#}"));
+
+            // Poison the engine the way a buggy worker closure would: a job
+            // that panics mid-batch.
+            let err = t
+                .pool()
+                .run(vec![|| -> anyhow::Result<()> { panic!("injected worker bug") }])
+                .expect_err("a panicking job must report Err");
+            assert!(
+                err.to_string().contains("panicked"),
+                "threads={threads}: {err:#}"
+            );
+            assert!(t.pool().poisoned(), "threads={threads}: pool must be poisoned");
+
+            // The trainer must now FAIL its step as a clean Result — not
+            // hang waiting for workers, not abort the process.
+            let step = t.step_once();
+            let msg = format!("{:#}", step.expect_err("step on a poisoned pool must Err"));
+            assert!(msg.contains("poisoned"), "threads={threads}: {msg}");
+        }
+    });
+}
+
+#[test]
+fn poisoned_pool_refuses_async_overlap_work_too() {
+    with_timeout(120, || {
+        let rt = Arc::new(Runtime::load_default().expect("run `make artifacts` first"));
+        let (workload, init) = logreg_workload(rt, 4, 256, true, 22).unwrap();
+        let opts = TrainerOptions {
+            algorithm: AlgorithmKind::Gossip, // gossips every step
+            topology: Topology::ring(4),
+            period: 4,
+            aga_init_period: 2,
+            aga_warmup: 4,
+            lr: LrSchedule::Const { lr: 0.2 },
+            momentum: 0.0,
+            nesterov: false,
+            seed: 22,
+            slowmo: Default::default(),
+            cost: CostModel::calibrated_resnet50(),
+            cost_dim: 25_500_000,
+            log_every: 10,
+            threads: 2,
+            overlap: true,
+        };
+        let mut t = Trainer::new(workload, init, opts).unwrap();
+        t.step_once().unwrap(); // leaves a mix in flight
+        t.drain().unwrap();
+        let _ = t
+            .pool()
+            .run(vec![|| -> anyhow::Result<()> { panic!("injected worker bug") }]);
+        assert!(t.pool().poisoned());
+        // Both the pooled phases and the async gossip submission must
+        // surface the poison as Err, and dropping the trainer (with
+        // whatever is left) must not hang.
+        assert!(t.step_once().is_err(), "overlap step on a poisoned pool must Err");
+        drop(t);
+    });
+}
+
+#[test]
+fn standalone_pool_failure_path_is_hang_free() {
+    // No artifacts needed: the pure exec-layer contract. One panicking job
+    // in a 16-job batch across a small pool — the batch errs, later
+    // batches err immediately, nothing hangs, and teardown joins cleanly.
+    with_timeout(60, || {
+        let pool = WorkerPool::new(3);
+        let jobs: Vec<_> = (0..16)
+            .map(|i| {
+                move || -> anyhow::Result<()> {
+                    if i == 11 {
+                        panic!("job {i} exploded");
+                    }
+                    Ok(())
+                }
+            })
+            .collect();
+        let err = pool.run(jobs).expect_err("batch with a panicking job");
+        assert!(err.to_string().contains("panicked"), "{err:#}");
+        assert!(pool.poisoned());
+        assert!(pool.run(vec![|| Ok(())]).is_err(), "poisoned pool must refuse work");
+        drop(pool); // join must not deadlock (covered by the watchdog)
+    });
+}

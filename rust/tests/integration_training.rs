@@ -32,6 +32,7 @@ fn opts(algo: AlgorithmKind, topo: Topology, h: usize, seed: u64) -> TrainerOpti
         cost_dim: 25_500_000,
         log_every: 10,
         threads: 1,
+        overlap: false,
     }
 }
 
@@ -253,10 +254,102 @@ fn checkpoint_resume_is_exact() {
 
 #[test]
 fn checkpoint_rejects_shape_mismatch() {
-    let a = logreg_trainer(AlgorithmKind::GossipPga, 4, 8, 1);
+    let mut a = logreg_trainer(AlgorithmKind::GossipPga, 4, 8, 1);
     let ck = a.checkpoint().unwrap(); // n = 4
     let mut b = logreg_trainer(AlgorithmKind::GossipPga, 5, 8, 1);
     assert!(b.restore(&ck).is_err(), "node-count mismatch must be rejected");
+}
+
+/// Build an overlap-capable trainer with explicit threads/overlap (the
+/// checkpoint-mid-overlap scenarios sweep both; non-iid like the other
+/// checkpoint tests).
+fn overlap_trainer(n: usize, h: usize, seed: u64, threads: usize, overlap: bool) -> Trainer {
+    let rt = runtime();
+    let (workload, init) = logreg_workload(rt, n, 512, true, seed).unwrap();
+    let mut o = opts(AlgorithmKind::GossipPga, Topology::ring(n), h, seed);
+    o.momentum = 0.9;
+    o.nesterov = true;
+    o.threads = threads;
+    o.overlap = overlap;
+    Trainer::new(workload, init, o).unwrap()
+}
+
+#[test]
+fn checkpoint_mid_overlap_drains_and_resumes_bit_exactly() {
+    // H = 8: after 13 steps the last action was a gossip whose mix is
+    // still in flight on the pool. checkpoint() must DRAIN it (the
+    // snapshot is then a clean BSP step-13 boundary, gossip clock
+    // included), never drop it. Restoring into a fresh process — here a
+    // fresh trainer, overlap on or off, any pool size — must continue
+    // bit-identically to the unbroken run.
+    let mut a = overlap_trainer(4, 8, 55, 4, true);
+    for _ in 0..13 {
+        a.step_once().unwrap();
+    }
+    let path = std::env::temp_dir().join(format!("gpga_ovl_ckpt_{}.bin", std::process::id()));
+    let ck = a.checkpoint().unwrap();
+    assert_eq!(ck.gossip_clock, 12, "steps 1..13 minus the step-8 sync: 12 drained gossips");
+    ck.save(&path).unwrap();
+    for _ in 0..19 {
+        a.step_once().unwrap();
+    }
+    a.drain().unwrap();
+
+    let loaded = gossip_pga::coordinator::checkpoint::Checkpoint::load(&path).unwrap();
+    // Resume in overlap mode on a different pool size…
+    let mut b = overlap_trainer(4, 8, 55, 2, true);
+    b.restore(&loaded).unwrap();
+    for _ in 0..19 {
+        b.step_once().unwrap();
+    }
+    b.drain().unwrap();
+    // …and in plain BSP mode: the drained snapshot is schedule-agnostic.
+    let mut c = overlap_trainer(4, 8, 55, 1, false);
+    c.restore(&loaded).unwrap();
+    for _ in 0..19 {
+        c.step_once().unwrap();
+    }
+    for i in 0..4 {
+        assert_eq!(a.worker_params(i), b.worker_params(i), "overlap resume: worker {i}");
+        assert_eq!(a.worker_params(i), c.worker_params(i), "BSP resume: worker {i}");
+    }
+    assert_eq!(a.sim_seconds(), b.sim_seconds());
+    assert_eq!(a.sim_seconds(), c.sim_seconds());
+    assert_eq!(a.gossip_clock(), b.gossip_clock());
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn overlap_trainer_decreases_loss_and_syncs_exactly() {
+    // End-to-end sanity for the async path itself: overlap training learns
+    // (iid data, so the loss has real room to fall), and at every k·H
+    // boundary the (synchronous) global average still zeroes consensus
+    // exactly.
+    let rt = runtime();
+    let (workload, init) = logreg_workload(rt, 6, 512, false, 5).unwrap();
+    let mut o = opts(AlgorithmKind::GossipPga, Topology::ring(6), 4, 5);
+    o.threads = 3;
+    o.overlap = true;
+    let mut t = Trainer::new(workload, init, o).unwrap();
+    let mut first = None;
+    for k in 0..150 {
+        t.step_once().unwrap();
+        if (k + 1) % 4 == 0 {
+            let c = consensus_distance(t.param_matrix());
+            assert!(c < 1e-10, "step {k}: consensus {c} after sync");
+        }
+        if k == 0 {
+            t.drain().unwrap();
+            first = Some(t.global_loss().unwrap());
+        }
+    }
+    t.drain().unwrap();
+    let final_loss = t.global_loss().unwrap();
+    let first = first.unwrap();
+    assert!(
+        final_loss < 0.8 * first,
+        "overlap run failed to learn: {first} -> {final_loss}"
+    );
 }
 
 #[test]

@@ -1,13 +1,21 @@
 //! Randomized property tests (in-repo kit, see `gossip_pga::proptest`)
-//! over the coordinator's invariants, plus the threading and
-//! checkpoint-resume equivalences:
+//! over the coordinator's invariants, plus the schedule-equivalence and
+//! checkpoint-resume suites:
 //!
-//! * threaded (`threads = 4`) and sequential (`threads = 1`) trainers are
-//!   bit-identical across all six `AlgorithmKind`s on ring and
-//!   one-peer-expo topologies;
+//! * pooled execution (any `threads`, explicitly including {1, 2, 3, 8})
+//!   is bit-identical to the sequential reference across all six
+//!   `AlgorithmKind`s — the scoped per-step threading it replaced held the
+//!   same contract, so pooled == scoped == sequential;
+//! * overlap mode (double-buffered async gossip) matches BSP exactly at
+//!   every global-averaging boundary k·H across ring/grid/one-peer-expo
+//!   topologies, and bit-exactly everywhere after a drain;
 //! * a checkpoint -> restore -> replay run matches an unbroken run for the
 //!   stateful algorithms (Gossip-AGA's adaptive period, SlowMo's outer
 //!   buffers, the mixer's gossip clock).
+//!
+//! scripts/verify.sh runs this suite at `PROPTEST_CASES=16` under both
+//! `GOSSIP_PGA_TEST_THREADS=1` and `=4` (the env var feeds the pooled
+//! thread-count candidates below).
 
 use std::sync::Arc;
 
@@ -16,6 +24,7 @@ use gossip_pga::collective::{bus, gossip_exchange, ring_all_reduce, run_nodes};
 use gossip_pga::coordinator::mixer::Mixer;
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::CostModel;
+use gossip_pga::exec::WorkerPool;
 use gossip_pga::linalg::beta_of;
 use gossip_pga::metrics::consensus_distance;
 use gossip_pga::optim::LrSchedule;
@@ -23,6 +32,15 @@ use gossip_pga::params::ParamMatrix;
 use gossip_pga::proptest::{assert_close, check, ensure};
 use gossip_pga::runtime::Runtime;
 use gossip_pga::topology::{spectral, Topology, TopologyKind};
+
+/// The pooled thread count scripts/verify.sh sweeps (1 and 4); defaults
+/// to 4 for plain `cargo test`.
+fn test_threads() -> usize {
+    std::env::var("GOSSIP_PGA_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+}
 
 fn random_topology(rng: &mut gossip_pga::rng::Rng, n: usize) -> Topology {
     match rng.below(6) {
@@ -79,19 +97,20 @@ fn prop_mixing_preserves_ensemble_mean() {
         let mut params = random_matrix(rng, n, d, 1.0);
         let mean_before = params.mean_row();
         let mut mixer = Mixer::new(&topo, d);
+        let pool = WorkerPool::new(1);
         let rounds = 1 + rng.below(4) as usize;
         for _ in 0..rounds {
-            mixer.gossip(&mut params, 1);
+            mixer.gossip(&mut params, &pool).unwrap();
         }
         assert_close(&params.mean_row(), &mean_before, 1e-4)
     });
 }
 
 #[test]
-fn prop_threaded_mix_bit_identical_to_sequential() {
-    // The tentpole invariant: every thread count computes the exact same
+fn prop_pooled_mix_bit_identical_to_sequential() {
+    // The tentpole invariant: every pool size computes the exact same
     // matrix (mix rows and mean columns have fixed accumulation order).
-    check("gossip/global-average agree for any thread count", |rng| {
+    check("gossip/global-average agree for any pool size", |rng| {
         let n = 2 + rng.below(16) as usize;
         let d = 1 + rng.below(96) as usize;
         let threads = 2 + rng.below(7) as usize;
@@ -100,14 +119,46 @@ fn prop_threaded_mix_bit_identical_to_sequential() {
         let mut thr = seq.clone();
         let mut m1 = Mixer::new(&topo, d);
         let mut m2 = Mixer::new(&topo, d);
+        let p1 = WorkerPool::new(1);
+        let pt = WorkerPool::new(threads);
         for _ in 0..topo.rounds().min(3) {
-            m1.gossip(&mut seq, 1);
-            m2.gossip(&mut thr, threads);
+            m1.gossip(&mut seq, &p1).unwrap();
+            m2.gossip(&mut thr, &pt).unwrap();
             ensure(seq == thr, format!("{:?} n={n} d={d} t={threads}: gossip diverged", topo.kind))?;
         }
-        m1.global_average(&mut seq, 1);
-        m2.global_average(&mut thr, threads);
+        m1.global_average(&mut seq, &p1).unwrap();
+        m2.global_average(&mut thr, &pt).unwrap();
         ensure(seq == thr, format!("{:?} n={n} d={d} t={threads}: average diverged", topo.kind))
+    });
+}
+
+#[test]
+fn prop_async_mix_bit_identical_to_sync() {
+    // Double-buffer invariant: gossip_async + finish_gossip produce the
+    // same bits as the synchronous call, round for round.
+    check("async gossip == sync gossip", |rng| {
+        let n = 2 + rng.below(12) as usize;
+        let d = 1 + rng.below(64) as usize;
+        let threads = 1 + rng.below(8) as usize;
+        let topo = random_topology(rng, n);
+        let mut sync = random_matrix(rng, n, d, 1.0);
+        let mut asy = sync.clone();
+        let mut m1 = Mixer::new(&topo, d);
+        let mut m2 = Mixer::new(&topo, d);
+        let pool = WorkerPool::new(threads);
+        for round in 0..topo.rounds().min(3) {
+            m1.gossip(&mut sync, &pool).unwrap();
+            // SAFETY: asy and m2 outlive the round; finish_gossip runs
+            // before the next access.
+            let pending = unsafe { m2.gossip_async(&asy, &pool) }
+                .map_err(|e| format!("gossip_async: {e:#}"))?;
+            m2.finish_gossip(&mut asy, pending).map_err(|e| format!("finish: {e:#}"))?;
+            ensure(
+                sync == asy,
+                format!("{:?} n={n} d={d} t={threads} round {round}: diverged", topo.kind),
+            )?;
+        }
+        ensure(m1.gossip_clock == m2.gossip_clock, "gossip clocks diverged")
     });
 }
 
@@ -127,7 +178,7 @@ fn prop_mixing_contracts_consensus_by_beta_squared() {
         let mut params = random_matrix(rng, n, d, 1.0);
         let before = consensus_distance(&params);
         let mut mixer = Mixer::new(&topo, d);
-        mixer.gossip(&mut params, 1);
+        mixer.gossip(&mut params, &WorkerPool::new(1)).unwrap();
         let after = consensus_distance(&params);
         let beta = topo.beta();
         ensure(
@@ -146,12 +197,13 @@ fn prop_global_average_is_projection() {
         let mut params = random_matrix(rng, n, d, 2.0);
         let mean = params.mean_row();
         let mut mixer = Mixer::new(&topo, d);
-        mixer.global_average(&mut params, 1);
+        let pool = WorkerPool::new(1);
+        mixer.global_average(&mut params, &pool).unwrap();
         for p in params.rows() {
             assert_close(p, &mean, 1e-5)?;
         }
         let snapshot = params.clone();
-        mixer.global_average(&mut params, 1); // idempotent up to f32 rounding
+        mixer.global_average(&mut params, &pool).unwrap(); // idempotent up to f32 rounding
         for (p, s) in params.rows().zip(snapshot.rows()) {
             assert_close(p, s, 1e-6)?;
         }
@@ -199,7 +251,7 @@ fn prop_bus_gossip_equals_mixer() {
 
         let mut mixed = params.clone();
         let mut mixer = Mixer::new(&topo, d);
-        mixer.gossip(&mut mixed, 1);
+        mixer.gossip(&mut mixed, &WorkerPool::new(1)).unwrap();
 
         let eps = bus(n);
         let topo2 = topo.clone();
@@ -294,6 +346,7 @@ fn trainer_opts(
         cost_dim: 25_500_000,
         log_every: 5,
         threads,
+        overlap: false,
     }
 }
 
@@ -308,19 +361,41 @@ fn logreg_trainer(
     Trainer::new(workload, init, trainer_opts(algo, topo, momentum, threads)).unwrap()
 }
 
+/// Like [`logreg_trainer`] but with the overlap switch and period exposed
+/// (the schedule-equivalence suites sweep both).
+fn logreg_trainer_cfg(
+    rt: &Arc<Runtime>,
+    algo: AlgorithmKind,
+    topo: Topology,
+    momentum: f64,
+    threads: usize,
+    overlap: bool,
+    period: usize,
+) -> Trainer {
+    let (workload, init) = logreg_workload(rt.clone(), topo.n, 256, true, 9).unwrap();
+    let mut opts = trainer_opts(algo, topo, momentum, threads);
+    opts.overlap = overlap;
+    opts.period = period;
+    Trainer::new(workload, init, opts).unwrap()
+}
+
 #[test]
-fn threaded_trainer_bit_identical_across_all_algorithms() {
-    // threads = 4 vs threads = 1 must produce identical parameters AND
-    // identical histories (losses, consensus, sim clock) for every
-    // algorithm on both a static ring and the time-varying one-peer graph.
+fn pooled_trainer_bit_identical_across_all_algorithms() {
+    // The pool at GOSSIP_PGA_TEST_THREADS (default 4) vs the sequential
+    // reference must produce identical parameters AND identical histories
+    // (losses, consensus, sim clock) for every algorithm on both a static
+    // ring and the time-varying one-peer graph. The per-step scoped
+    // threading this pool replaced held the same contract, so this pins
+    // pooled == scoped == sequential.
     let rt = runtime();
     let steps = 14;
+    let t = test_threads();
     for mk_topo in [Topology::ring as fn(usize) -> Topology, Topology::one_peer_expo] {
         for algo in ALL_KINDS {
             let topo = mk_topo(4);
-            let kind = format!("{:?}/{:?}", algo, topo.kind);
+            let kind = format!("{:?}/{:?}/t={t}", algo, topo.kind);
             let mut seq = logreg_trainer(&rt, algo, mk_topo(4), 0.0, 1);
-            let mut thr = logreg_trainer(&rt, algo, mk_topo(4), 0.0, 4);
+            let mut thr = logreg_trainer(&rt, algo, mk_topo(4), 0.0, t);
             let h_seq = seq.run(steps, "seq").unwrap();
             let h_thr = thr.run(steps, "thr").unwrap();
             assert_eq!(h_seq.losses(), h_thr.losses(), "{kind}: losses diverged");
@@ -340,8 +415,37 @@ fn threaded_trainer_bit_identical_across_all_algorithms() {
 }
 
 #[test]
-fn threaded_trainer_bit_identical_with_momentum() {
-    // Momentum exercises the per-worker velocity buffers across threads.
+fn pooled_trainer_bit_identical_for_thread_counts_1_2_3_8() {
+    // The explicit schedule-equivalence sweep from the issue: pool sizes
+    // 1, 2, 3 and 8 all reproduce the sequential reference bit-for-bit.
+    // 8 > n = 5 also exercises the shards() cap (more threads than
+    // workers).
+    let rt = runtime();
+    let steps = 12;
+    let mut reference = logreg_trainer(&rt, AlgorithmKind::GossipPga, Topology::ring(5), 0.9, 1);
+    for _ in 0..steps {
+        reference.step_once().unwrap();
+    }
+    for threads in [1usize, 2, 3, 8] {
+        let mut t = logreg_trainer(&rt, AlgorithmKind::GossipPga, Topology::ring(5), 0.9, threads);
+        assert_eq!(t.pool().size(), threads.max(1));
+        for _ in 0..steps {
+            t.step_once().unwrap();
+        }
+        for i in 0..t.n() {
+            assert_eq!(
+                reference.worker_params(i),
+                t.worker_params(i),
+                "threads={threads}: worker {i} params diverged"
+            );
+        }
+        assert_eq!(reference.sim_seconds(), t.sim_seconds(), "threads={threads}");
+    }
+}
+
+#[test]
+fn pooled_trainer_bit_identical_with_momentum() {
+    // Momentum exercises the per-worker velocity buffers across pool jobs.
     let rt = runtime();
     let mut seq = logreg_trainer(&rt, AlgorithmKind::GossipPga, Topology::ring(5), 0.9, 1);
     let mut thr = logreg_trainer(&rt, AlgorithmKind::GossipPga, Topology::ring(5), 0.9, 4);
@@ -351,6 +455,159 @@ fn threaded_trainer_bit_identical_with_momentum() {
     }
     for i in 0..5 {
         assert_eq!(seq.worker_params(i), thr.worker_params(i), "worker {i}");
+    }
+}
+
+#[test]
+fn more_threads_than_workers_uses_one_policy_and_matches_sequential() {
+    // The PR-1 policy split (phases capped at n, the mix uncapped) is gone:
+    // WorkerPool::shards is the single policy. n = 2 workers on an 8-thread
+    // pool must match the sequential run exactly — phases and gossip shard
+    // 2 ways, the global-average mean shards by columns (d = 10 > 8, so 8
+    // ways), all bit-identical by fixed accumulation order.
+    let rt = runtime();
+    let mut seq = logreg_trainer(&rt, AlgorithmKind::GossipPga, Topology::ring(2), 0.9, 1);
+    let mut wide = logreg_trainer(&rt, AlgorithmKind::GossipPga, Topology::ring(2), 0.9, 8);
+    assert_eq!(wide.pool().size(), 8);
+    assert_eq!(wide.pool().shards(2), 2, "phase/gossip shard count caps at n");
+    for _ in 0..13 {
+        seq.step_once().unwrap();
+        wide.step_once().unwrap();
+    }
+    for i in 0..2 {
+        assert_eq!(seq.worker_params(i), wide.worker_params(i), "worker {i}");
+    }
+    assert_eq!(seq.sim_seconds(), wide.sim_seconds());
+}
+
+#[test]
+fn prop_pooled_trainer_matches_sequential_reference() {
+    // Randomized schedule equivalence: random algorithm, topology, pool
+    // size and momentum — the pooled trainer must reproduce the sequential
+    // reference bit-for-bit, step by step.
+    let rt = runtime();
+    check("pooled trainer == sequential trainer", |rng| {
+        let n = 3 + rng.below(3) as usize; // 3..5
+        let algo = ALL_KINDS[rng.below(6) as usize];
+        let topo_a = rng_topo_pick(n, rng);
+        let topo_b = topo_a.clone();
+        let threads = [2usize, 3, 8, test_threads()][rng.below(4) as usize];
+        let momentum = if rng.below(2) == 0 { 0.0 } else { 0.9 };
+        let steps = 6 + rng.below(5) as usize;
+        let mut seq = logreg_trainer(&rt, algo, topo_a, momentum, 1);
+        let mut thr = logreg_trainer(&rt, algo, topo_b, momentum, threads);
+        for k in 0..steps {
+            let a = seq.step_once().map_err(|e| format!("seq: {e:#}"))?;
+            let b = thr.step_once().map_err(|e| format!("thr: {e:#}"))?;
+            ensure(a == b, format!("step {k}: actions diverged ({a:?} vs {b:?})"))?;
+            ensure(
+                seq.mean_loss() == thr.mean_loss(),
+                format!("step {k}: losses diverged"),
+            )?;
+        }
+        for i in 0..seq.n() {
+            ensure(
+                seq.worker_params(i) == thr.worker_params(i),
+                format!("{algo:?} n={n} t={threads}: worker {i} diverged"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_overlap_matches_bsp_at_global_averaging_boundaries() {
+    // The async-gossip schedule-equivalence property: at every k·H step the
+    // global average is a synchronous barrier, so the overlapped trainer's
+    // VISIBLE state must equal BSP bit-for-bit there — across ring, grid
+    // and one-peer-expo topologies, any pool size, with and without
+    // momentum. Mid-interval the mean loss (computed post-phases) must
+    // also agree at every step, and after a final drain the full state
+    // matches.
+    let rt = runtime();
+    check("overlap == BSP at k*H boundaries", |rng| {
+        let n = 3 + rng.below(3) as usize; // 3..5
+        let topo = match rng.below(3) {
+            0 => Topology::ring(n),
+            1 => Topology::grid(n),
+            _ => Topology::one_peer_expo(n),
+        };
+        let h = 2 + rng.below(3) as usize; // H in 2..4
+        let threads = [1usize, 2, 4, test_threads()][rng.below(4) as usize];
+        let momentum = if rng.below(2) == 0 { 0.0 } else { 0.9 };
+        let algo =
+            if rng.below(4) == 0 { AlgorithmKind::SlowMo } else { AlgorithmKind::GossipPga };
+        let steps = h * 3;
+        let mut bsp = logreg_trainer_cfg(&rt, algo, topo.clone(), momentum, threads, false, h);
+        let mut ovl = logreg_trainer_cfg(&rt, algo, topo.clone(), momentum, threads, true, h);
+        for k in 0..steps {
+            let a = bsp.step_once().map_err(|e| format!("bsp: {e:#}"))?;
+            let b = ovl.step_once().map_err(|e| format!("ovl: {e:#}"))?;
+            ensure(a == b, format!("step {k}: actions diverged"))?;
+            ensure(
+                bsp.mean_loss() == ovl.mean_loss(),
+                format!("{:?} H={h} t={threads} step {k}: losses diverged", topo.kind),
+            )?;
+            if (k + 1) % h == 0 {
+                // Global-averaging boundary: nothing in flight, the states
+                // must agree without any drain.
+                for i in 0..bsp.n() {
+                    ensure(
+                        bsp.worker_params(i) == ovl.worker_params(i),
+                        format!(
+                            "{:?} H={h} t={threads} boundary {}: worker {i} diverged",
+                            topo.kind,
+                            k + 1
+                        ),
+                    )?;
+                }
+            }
+        }
+        ovl.drain().map_err(|e| format!("drain: {e:#}"))?;
+        for i in 0..bsp.n() {
+            ensure(
+                bsp.worker_params(i) == ovl.worker_params(i),
+                format!("{:?} H={h} t={threads} final: worker {i} diverged", topo.kind),
+            )?;
+        }
+        ensure(bsp.sim_seconds() == ovl.sim_seconds(), "sim clocks diverged")?;
+        ensure(bsp.gossip_clock() == ovl.gossip_clock(), "gossip clocks diverged")
+    });
+}
+
+#[test]
+fn overlap_run_history_is_bit_identical_to_bsp() {
+    // Trainer::run drains before every logged row, so the overlap history
+    // (losses, consensus, sim clock) is the BSP history, bit for bit.
+    let rt = runtime();
+    let steps = 17;
+    let mk = |overlap| {
+        logreg_trainer_cfg(
+            &rt,
+            AlgorithmKind::GossipPga,
+            Topology::one_peer_expo(4),
+            0.9,
+            test_threads(),
+            overlap,
+            4,
+        )
+    };
+    let h_bsp = mk(false).run(steps, "bsp").unwrap();
+    let h_ovl = mk(true).run(steps, "ovl").unwrap();
+    assert_eq!(h_bsp.losses(), h_ovl.losses());
+    for (a, b) in h_bsp.records.iter().zip(&h_ovl.records) {
+        assert_eq!(a.consensus, b.consensus, "consensus diverged at step {}", a.step);
+        assert_eq!(a.sim_seconds, b.sim_seconds, "sim clock diverged at step {}", a.step);
+    }
+}
+
+/// Helper for the randomized trainer property: pick a topology without
+/// holding a borrow on the rng across the trainer builds.
+fn rng_topo_pick(n: usize, rng: &mut gossip_pga::rng::Rng) -> Topology {
+    match rng.below(3) {
+        0 => Topology::ring(n),
+        1 => Topology::grid(n),
+        _ => Topology::one_peer_expo(n),
     }
 }
 

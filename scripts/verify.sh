@@ -1,8 +1,12 @@
 #!/usr/bin/env bash
 # One-shot verification gate for every PR:
 #   1. tier-1: release build + full test suite (ROADMAP.md)
-#   2. formatting: cargo fmt --check
-#   3. lints: cargo clippy -D warnings
+#   2. schedule-equivalence property suite at PROPTEST_CASES=16, swept over
+#      GOSSIP_PGA_TEST_THREADS=1 and =4 (pooled == scoped == sequential;
+#      overlap == BSP at every k*H boundary)
+#   3. formatting: cargo fmt --check
+#   4. lints: cargo clippy -D warnings (this is also the rust/src/exec/
+#      gate — any new warning there fails the run)
 #
 # Usage: scripts/verify.sh [--fast]
 #   --fast   sets GOSSIP_PGA_FAST=1 so bench-derived tests run at 1/4 scale.
@@ -23,10 +27,19 @@ cargo build --release
 echo "==> tier-1: cargo test -q"
 cargo test -q
 
+echo "==> schedule-equivalence properties (PROPTEST_CASES=16, threads=1)"
+PROPTEST_CASES=16 GOSSIP_PGA_TEST_THREADS=1 cargo test -q --test properties
+
+# threads=4 is also the in-test default, so tier-1 already covered these 16
+# cases at 64; this run is kept as the explicit, cheap contract gate the
+# issue asks for (and stays meaningful if the defaults ever change).
+echo "==> schedule-equivalence properties (PROPTEST_CASES=16, threads=4)"
+PROPTEST_CASES=16 GOSSIP_PGA_TEST_THREADS=4 cargo test -q --test properties
+
 echo "==> cargo fmt --check"
 cargo fmt --check
 
-echo "==> cargo clippy -- -D warnings"
+echo "==> cargo clippy -- -D warnings  (includes the rust/src/exec/ gate)"
 cargo clippy --all-targets -- -D warnings
 
 echo "==> verify OK"
