@@ -67,11 +67,11 @@ fn run(
             // exact global average
             mixer.global_average(&mut params, &pool)?;
         } else {
-            mixer.gossip_with(&mut params, |j, xj| {
+            mixer.gossip_with(&mut params, &pool, |j, xj| {
                 let (dense, bytes) = codecs[j](xj);
                 wire_bytes += bytes as u64;
                 dense
-            });
+            })?;
         }
     }
     Ok((last_loss, wire_bytes))

@@ -19,6 +19,7 @@ use std::sync::Arc;
 
 use gossip_pga::algorithms::AlgorithmKind;
 use gossip_pga::collective::{bus, ring_all_reduce, run_nodes};
+use gossip_pga::comm::{BackendKind, BusBackend, CommBackend, Compression, SharedBackend};
 use gossip_pga::coordinator::mixer::{axpy, Mixer};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::CostModel;
@@ -51,6 +52,8 @@ fn trainer_opts(n: usize, threads: usize, overlap: bool) -> TrainerOptions {
         log_every: 1000,
         threads,
         overlap,
+        backend: BackendKind::Shared,
+        compression: Compression::None,
     }
 }
 
@@ -169,6 +172,78 @@ fn main() -> anyhow::Result<()> {
         fmt_duration(s.p95),
         format!("{:.1} GB/s agg", (8 * 2 * dd * 4) as f64 / s.mean / 1e9),
     ]);
+
+    // --- CommPlane: bus backend vs shared backend gossip --------------------
+    // The price of real message passing relative to the in-proc fused mix,
+    // at the same pool size; the final matrices must agree bit-for-bit
+    // (the unified-plane equivalence contract).
+    {
+        let n = 16;
+        let dd = 1_000_000usize;
+        let topo = Topology::ring(n);
+        let cost = CostModel::calibrated_resnet50();
+        let mut p_shared = random_matrix(&mut rng, n, dd);
+        let mut p_bus = p_shared.clone();
+        let mut shared =
+            SharedBackend::new(&topo, dd, cost, 25_500_000, Compression::None);
+        let mut busb =
+            BusBackend::new(&topo, dd, cost, 25_500_000, Compression::None, true);
+        let comm_pool = WorkerPool::new(threads_avail.clamp(2, 8));
+        let s_shared = measure(2, 10, || {
+            shared.gossip(&mut p_shared, &comm_pool).unwrap();
+        });
+        let s_bus = measure(2, 10, || {
+            busb.gossip(&mut p_bus, &comm_pool).unwrap();
+        });
+        assert_eq!(
+            shared.gossip_clock(),
+            busb.gossip_clock(),
+            "backends ran different round counts"
+        );
+        assert_eq!(p_shared, p_bus, "bus gossip diverged from shared gossip");
+        t.rowv(vec![
+            "gossip, shared backend".into(),
+            format!("ring n = {n}, d = 1M"),
+            fmt_duration(s_shared.mean),
+            fmt_duration(s_shared.p95),
+            format!("{:.1} GB/s", (n * 3 * dd * 4) as f64 / s_shared.mean / 1e9),
+        ]);
+        t.rowv(vec![
+            "gossip, bus backend".into(),
+            format!("ring n = {n}, d = 1M"),
+            fmt_duration(s_bus.mean),
+            fmt_duration(s_bus.p95),
+            format!("{:.1} GB/s", (n * 3 * dd * 4) as f64 / s_bus.mean / 1e9),
+        ]);
+        t.rowv(vec![
+            "  -> bus vs shared".into(),
+            "real send/recv + copies".into(),
+            format!("{:.2}x slower", s_bus.mean / s_shared.mean),
+            "-".into(),
+            "(params bit-identical)".into(),
+        ]);
+        let s_shared_avg = measure(1, 5, || {
+            shared.global_average(&mut p_shared, &comm_pool).unwrap();
+        });
+        let s_bus_avg = measure(1, 5, || {
+            busb.global_average(&mut p_bus, &comm_pool).unwrap();
+        });
+        assert_eq!(p_shared, p_bus, "bus global average diverged from shared");
+        t.rowv(vec![
+            "global average, shared backend".into(),
+            format!("n = {n}, d = 1M"),
+            fmt_duration(s_shared_avg.mean),
+            fmt_duration(s_shared_avg.p95),
+            format!("{:.1} GB/s", (n * 2 * dd * 4) as f64 / s_shared_avg.mean / 1e9),
+        ]);
+        t.rowv(vec![
+            "global average, bus backend".into(),
+            format!("n = {n}, d = 1M, chunked exchange"),
+            fmt_duration(s_bus_avg.mean),
+            fmt_duration(s_bus_avg.p95),
+            format!("{:.1} GB/s", (n * 2 * dd * 4) as f64 / s_bus_avg.mean / 1e9),
+        ]);
+    }
 
     // --- PJRT grad exec ----------------------------------------------------
     let rt = Arc::new(Runtime::load_default()?);

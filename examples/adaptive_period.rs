@@ -7,6 +7,7 @@
 use std::sync::Arc;
 
 use gossip_pga::algorithms::{AlgorithmKind, CommAction, SlowMoParams};
+use gossip_pga::comm::{BackendKind, Compression};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::CostModel;
 use gossip_pga::harness::Table;
@@ -31,6 +32,8 @@ fn opts(algo: AlgorithmKind, n: usize, seed: u64) -> TrainerOptions {
         log_every: 50,
         threads: 1,
         overlap: false,
+        backend: BackendKind::Shared,
+        compression: Compression::None,
     }
 }
 

@@ -11,6 +11,7 @@
 use std::sync::Arc;
 
 use gossip_pga::algorithms::{AlgorithmKind, SlowMoParams};
+use gossip_pga::comm::{BackendKind, Compression};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::CostModel;
 use gossip_pga::harness::Table;
@@ -50,6 +51,8 @@ fn main() -> anyhow::Result<()> {
             log_every: 25,
             threads: 1,
             overlap: false,
+            backend: BackendKind::Shared,
+            compression: Compression::None,
         };
         let mut trainer = Trainer::new(workload, init, opts)?;
         let hist = trainer.run(steps, algo.display())?;

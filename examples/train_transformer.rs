@@ -16,6 +16,7 @@
 use std::sync::Arc;
 
 use gossip_pga::algorithms::{AlgorithmKind, SlowMoParams};
+use gossip_pga::comm::{BackendKind, Compression};
 use gossip_pga::coordinator::{lm_eval_loss, lm_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::CostModel;
 use gossip_pga::optim::LrSchedule;
@@ -79,6 +80,8 @@ fn main() -> anyhow::Result<()> {
         log_every: 1,
         threads,
         overlap,
+        backend: BackendKind::Shared,
+        compression: Compression::None,
     };
     let mut trainer = Trainer::new(workload, init, opts)?;
 
@@ -87,12 +90,19 @@ fn main() -> anyhow::Result<()> {
     for k in 0..steps {
         trainer.step_once()?;
         let loss = trainer.mean_loss();
+        // Overlap note: comm_stats() counts completed (drained) actions, so
+        // with --overlap the traffic columns lag the sim clock by the one
+        // in-flight gossip round; Trainer::run drains before logging and
+        // has no such offset. Acceptable for this example's coarse curve.
+        let comm = trainer.comm_stats();
         hist.push(gossip_pga::metrics::Record {
             step: k,
             loss,
             consensus: 0.0, // O(n d) to compute; skipped at 12M params
             lr: 0.0,
             sim_seconds: trainer.sim_seconds(),
+            comm_scalars: comm.scalars_sent,
+            comm_msgs: comm.msgs,
         });
         if k % 10 == 0 || k + 1 == steps {
             println!(

@@ -101,6 +101,14 @@ pub trait Schedule: Send {
     /// Current period (for logging; `usize::MAX` = never).
     fn current_period(&self) -> usize;
 
+    /// Can this schedule ever emit [`CommAction::GlobalAverage`]? Lets the
+    /// communication plane size its all-reduce edge set at construction
+    /// (pure-gossip schedules skip the all-to-all setup). Conservative
+    /// default: yes.
+    fn uses_global_average(&self) -> bool {
+        true
+    }
+
     /// Snapshot mutable state for checkpointing (`None` = stateless).
     fn export_state(&self) -> Option<AgaState> {
         None
@@ -153,6 +161,10 @@ impl Schedule for FixedSchedule {
 
     fn current_period(&self) -> usize {
         self.h
+    }
+
+    fn uses_global_average(&self) -> bool {
+        self.h != usize::MAX
     }
 }
 
@@ -380,6 +392,26 @@ mod tests {
         }
         assert!(got_sync >= 2);
         assert!(s.current_period() >= 1);
+    }
+
+    #[test]
+    fn uses_global_average_tracks_the_action_set() {
+        // The comm plane sizes its all-reduce edges from this query; it
+        // must agree with the actions each schedule actually emits.
+        for kind in [
+            AlgorithmKind::Parallel,
+            AlgorithmKind::Gossip,
+            AlgorithmKind::Local,
+            AlgorithmKind::GossipPga,
+            AlgorithmKind::GossipAga,
+            AlgorithmKind::SlowMo,
+        ] {
+            let mut s = schedule_for(kind, 4, 2, 4).unwrap();
+            let claims = s.uses_global_average();
+            let emits =
+                (0..64).any(|k| s.action(k, 1.0) == CommAction::GlobalAverage);
+            assert_eq!(claims, emits, "{kind:?}");
+        }
     }
 
     #[test]

@@ -12,8 +12,18 @@
 //!   (reduce-scatter + all-gather, 2(n-1) chunked steps), the paper's
 //!   global-averaging primitive (§3, "All-Reduce v.s. multiple Gossips").
 //!
-//! Every endpoint counts bytes and messages so the Table 17 bench can report
-//! measured traffic next to the alpha-beta model's predictions.
+//! Every endpoint counts wire scalars and messages so the Table 17 bench —
+//! and, since the unified CommPlane ([`crate::comm`]), every *training run*
+//! on the bus backend — can report measured traffic next to the alpha-beta
+//! model's predictions.
+//!
+//! §Sparse setup: an endpoint holds sender channels only for the edges it
+//! was built with ([`bus_for`]); a ring of 10 000 nodes allocates 2 senders
+//! per node, not 9 999. [`bus`] remains the fully-connected convenience for
+//! the all-to-all cases. A node's receive channel closes once every
+//! in-neighbor's endpoint drops, which is what turns a crashed peer into a
+//! clean `Err` instead of a deadlock (see
+//! `node_failure_surfaces_as_error_not_hang`).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
@@ -26,57 +36,90 @@ type Msg = (usize, Vec<f32>);
 pub struct Endpoint {
     pub rank: usize,
     pub n: usize,
-    /// `senders[j]` reaches node j; the self slot is `None` so that a
-    /// node's own channel closes once every *other* node drops — this is
-    /// what turns a crashed peer into a clean error instead of a deadlock
-    /// (see `node_failure_surfaces_as_error_not_hang`).
-    senders: Vec<Option<Sender<Msg>>>,
+    /// Outgoing channels, sorted by target rank; only the edges this bus
+    /// was built with exist (no self edge — a node never holds its own
+    /// sender, so its receiver closes when all in-neighbors drop).
+    senders: Vec<(usize, Sender<Msg>)>,
     receiver: Receiver<Msg>,
     /// Out-of-order arrivals parked until requested.
     parked: Vec<Msg>,
-    /// Traffic accounting (payload f32 count and message count).
+    /// Traffic accounting: wire scalars (f32-equivalents billed per send)
+    /// and message count.
     pub scalars_sent: u64,
     pub msgs_sent: u64,
 }
 
-/// Build a fully-connected bus of `n` endpoints.
+/// Build a fully-connected bus of `n` endpoints (all-to-all edges).
 pub fn bus(n: usize) -> Vec<Endpoint> {
-    let mut senders = Vec::with_capacity(n);
-    let mut receivers = Vec::with_capacity(n);
+    let full: Vec<Vec<usize>> =
+        (0..n).map(|i| (0..n).filter(|&j| j != i).collect()).collect();
+    bus_for(n, &full)
+}
+
+/// Build a bus with exactly the sender channels in `out_edges`
+/// (`out_edges[i]` = the targets node i can send to; self entries are
+/// ignored, duplicates deduplicated). Sparse topologies pay O(edges) setup
+/// instead of the old fully-connected O(n^2) sender table.
+pub fn bus_for(n: usize, out_edges: &[Vec<usize>]) -> Vec<Endpoint> {
+    assert_eq!(out_edges.len(), n, "one edge list per node");
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
     for _ in 0..n {
         let (tx, rx) = channel::<Msg>();
-        senders.push(tx);
-        receivers.push(rx);
+        txs.push(tx);
+        rxs.push(rx);
     }
-    receivers
-        .into_iter()
+    rxs.into_iter()
         .enumerate()
-        .map(|(rank, receiver)| Endpoint {
-            rank,
-            n,
-            senders: senders
-                .iter()
-                .enumerate()
-                .map(|(j, tx)| (j != rank).then(|| tx.clone()))
-                .collect(),
-            receiver,
-            parked: Vec::new(),
-            scalars_sent: 0,
-            msgs_sent: 0,
+        .map(|(rank, receiver)| {
+            let mut targets: Vec<usize> =
+                out_edges[rank].iter().copied().filter(|&j| j != rank).collect();
+            targets.sort_unstable();
+            targets.dedup();
+            Endpoint {
+                rank,
+                n,
+                senders: targets
+                    .into_iter()
+                    .map(|j| {
+                        assert!(j < n, "edge {rank}->{j} out of range for n={n}");
+                        (j, txs[j].clone())
+                    })
+                    .collect(),
+                receiver,
+                parked: Vec::new(),
+                scalars_sent: 0,
+                msgs_sent: 0,
+            }
         })
         .collect()
 }
 
 impl Endpoint {
-    /// Send `payload` to node `to`.
+    /// Send `payload` to node `to`, billing its dense length on the wire.
     pub fn send(&mut self, to: usize, payload: Vec<f32>) -> Result<()> {
-        self.scalars_sent += payload.len() as u64;
-        self.msgs_sent += 1;
-        self.senders[to]
-            .as_ref()
-            .ok_or_else(|| anyhow!("node {} cannot send to itself", self.rank))?
+        let wire = payload.len() as u64;
+        self.send_billed(to, payload, wire)
+    }
+
+    /// Send `payload` to node `to`, billing `wire_scalars` f32-equivalents
+    /// (the compressed-gossip path ships the dense vector the simulator
+    /// mixes but charges the codec's wire size, keeping traffic accounting
+    /// honest — see [`crate::compress::Compressed::wire_bytes`]).
+    pub fn send_billed(&mut self, to: usize, payload: Vec<f32>, wire_scalars: u64) -> Result<()> {
+        let idx = self
+            .senders
+            .binary_search_by_key(&to, |(j, _)| *j)
+            .map_err(|_| anyhow!("node {} has no channel to node {to}", self.rank))?;
+        // Count only delivered messages: a refused or hung-up send is not
+        // traffic (tests assert both failure paths leave counters alone).
+        self.senders[idx]
+            .1
             .send((self.rank, payload))
-            .map_err(|_| anyhow!("node {to} hung up"))
+            .map_err(|_| anyhow!("node {to} hung up"))?;
+        self.scalars_sent += wire_scalars;
+        self.msgs_sent += 1;
+        Ok(())
     }
 
     /// Receive the next message from node `from` (parking others).
@@ -104,9 +147,9 @@ impl Endpoint {
 ///
 /// `weight_row` is the node's row of W: `(j, w_ij)` over in-neighbors
 /// (self included). For the symmetric/static topologies out-neighbors ==
-/// in-neighbors; for the directed one-peer graph the out-peer is the node
-/// that lists `rank` among its in-neighbors — callers pass `out_neighbors`
-/// explicitly so both cases are handled uniformly.
+/// in-neighbors; for the directed one-peer graph they differ — pass
+/// [`crate::topology::Topology::out_neighbors`] so both cases are handled
+/// uniformly.
 pub fn gossip_exchange(
     ep: &mut Endpoint,
     x: &[f32],
@@ -136,13 +179,40 @@ pub fn gossip_exchange(
     Ok(acc)
 }
 
+/// Chunk boundaries of the ring all-reduce: chunk c covers
+/// `[c*d/n, (c+1)*d/n)`. Shared with the byte-accounting tests and the
+/// [`crate::comm::BusBackend`]'s chunked global average so every layer
+/// agrees on the same chunk math.
+pub fn ring_chunk_bounds(n: usize, d: usize) -> Vec<usize> {
+    (0..=n).map(|c| c * d / n).collect()
+}
+
+/// Exact per-node wire scalars of [`ring_all_reduce`]: rank r sends n-1 of
+/// the n chunks once per phase — reduce-scatter skips `chunk((r+1) % n)`
+/// and all-gather skips `chunk((r+2) % n)` — so the per-rank total is
+/// `2d - len(chunk(r+1)) - len(chunk(r+2))`.
+pub fn ring_all_reduce_scalars(n: usize, d: usize, rank: usize) -> u64 {
+    if n == 1 {
+        return 0;
+    }
+    let bounds = ring_chunk_bounds(n, d);
+    let len = |c: usize| (bounds[c % n + 1] - bounds[c % n]) as u64;
+    let mut total = 0u64;
+    for s in 0..n - 1 {
+        total += len((rank + n - s) % n); // reduce-scatter step s
+        total += len((rank + 1 + n - s) % n); // all-gather step s
+    }
+    total
+}
+
 /// Bandwidth-optimal ring all-reduce: after the call every node holds the
 /// element-wise **average** of all inputs.
 ///
 /// Classic two-phase schedule over the ring `rank -> rank+1`:
 /// reduce-scatter (n-1 steps, each sending one d/n chunk) then all-gather
 /// (n-1 steps). Total traffic per node: 2 d (n-1)/n scalars — the 2·theta·d
-/// of the paper's cost model.
+/// of the paper's cost model. Requires the `rank -> rank+1` edge to exist
+/// on the bus (a [`bus_for`] ring-successor edge set suffices).
 pub fn ring_all_reduce(ep: &mut Endpoint, x: &mut [f32]) -> Result<()> {
     let n = ep.n;
     if n == 1 {
@@ -151,8 +221,7 @@ pub fn ring_all_reduce(ep: &mut Endpoint, x: &mut [f32]) -> Result<()> {
     let d = x.len();
     let next = (ep.rank + 1) % n;
     let prev = (ep.rank + n - 1) % n;
-    // Chunk boundaries: chunk c covers [bound[c], bound[c+1]).
-    let bounds: Vec<usize> = (0..=n).map(|c| c * d / n).collect();
+    let bounds = ring_chunk_bounds(n, d);
     let chunk = |c: usize| bounds[c % n]..bounds[c % n + 1];
 
     // Reduce-scatter: at step s, send chunk (rank - s), reduce into
@@ -219,6 +288,18 @@ mod tests {
     }
 
     #[test]
+    fn send_billed_overrides_wire_size() {
+        let mut eps = bus(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        // Dense payload of 4 scalars billed as 1 (e.g. aggressive top-k).
+        a.send_billed(1, vec![0.0, 0.0, 3.0, 0.0], 1).unwrap();
+        assert_eq!(a.scalars_sent, 1);
+        assert_eq!(a.msgs_sent, 1);
+        assert_eq!(b.recv_from(0).unwrap().len(), 4, "dense payload intact");
+    }
+
+    #[test]
     fn recv_parks_out_of_order() {
         let mut eps = bus(3);
         let mut c = eps.pop().unwrap();
@@ -229,6 +310,36 @@ mod tests {
         // Ask for b's first even though a's arrived first.
         assert_eq!(c.recv_from(1).unwrap(), vec![2.0]);
         assert_eq!(c.recv_from(0).unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn sparse_bus_rejects_missing_edge() {
+        // Ring edges only: 0 -> {1, 2} is not an edge in a 4-ring.
+        let edges: Vec<Vec<usize>> =
+            (0..4).map(|i: usize| vec![(i + 1) % 4, (i + 3) % 4]).collect();
+        let mut eps = bus_for(4, &edges);
+        assert!(eps[0].send(1, vec![1.0]).is_ok());
+        let err = eps[0].send(2, vec![1.0]).unwrap_err().to_string();
+        assert!(err.contains("no channel"), "{err}");
+        // A refused send must not count as traffic.
+        assert_eq!(eps[0].msgs_sent, 1);
+        assert_eq!(eps[0].scalars_sent, 1);
+        // Self sends are never an edge.
+        assert!(eps[0].send(0, vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn sparse_bus_sender_table_is_degree_sized() {
+        let n = 64;
+        let edges: Vec<Vec<usize>> =
+            (0..n).map(|i: usize| vec![(i + 1) % n, (i + n - 1) % n]).collect();
+        for ep in bus_for(n, &edges) {
+            assert_eq!(ep.senders.len(), 2, "ring node holds exactly 2 senders");
+        }
+        // The fully-connected convenience still works.
+        for ep in bus(5) {
+            assert_eq!(ep.senders.len(), 4);
+        }
     }
 
     #[test]
@@ -253,6 +364,54 @@ mod tests {
     }
 
     #[test]
+    fn ring_all_reduce_non_power_of_two_and_tiny_sizes() {
+        // Satellite sweep: n in {1, 2, 3, 5, 7, 8} x d in {1, 3, 17, 64},
+        // including d < n (empty chunks on some ranks).
+        for n in [1usize, 2, 3, 5, 7, 8] {
+            for d in [1usize, 3, 17, 64] {
+                let eps = bus(n);
+                let results = run_nodes(eps, move |mut ep| {
+                    let mut x: Vec<f32> =
+                        (0..d).map(|j| ((ep.rank + 1) * (j + 1)) as f32).collect();
+                    ring_all_reduce(&mut ep, &mut x)?;
+                    Ok(x)
+                })
+                .unwrap();
+                for (r, x) in results.iter().enumerate() {
+                    for (j, v) in x.iter().enumerate() {
+                        let expect = (0..n).map(|i| ((i + 1) * (j + 1)) as f32).sum::<f32>()
+                            / n as f32;
+                        assert!(
+                            (v - expect).abs() < 1e-3,
+                            "n={n} d={d} rank {r} pos {j}: {v} vs {expect}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_all_reduce_runs_on_successor_only_edges() {
+        // The all-reduce needs exactly the rank -> rank+1 edge; a sparse
+        // bus with only those edges must complete it.
+        let n = 6;
+        let d = 25;
+        let edges: Vec<Vec<usize>> = (0..n).map(|i: usize| vec![(i + 1) % n]).collect();
+        let eps = bus_for(n, &edges);
+        let results = run_nodes(eps, move |mut ep| {
+            let mut x = vec![(ep.rank + 1) as f32; d];
+            ring_all_reduce(&mut ep, &mut x)?;
+            Ok(x)
+        })
+        .unwrap();
+        let expect = (1..=n).sum::<usize>() as f32 / n as f32;
+        for x in &results {
+            assert!(x.iter().all(|v| (v - expect).abs() < 1e-4));
+        }
+    }
+
+    #[test]
     fn ring_all_reduce_traffic_is_2d() {
         // Per-node traffic must be 2 d (n-1)/n scalars (the model's 2 theta d).
         let n = 4;
@@ -270,27 +429,92 @@ mod tests {
     }
 
     #[test]
-    fn gossip_exchange_matches_matrix_product() {
-        // One gossip round over a ring == multiplying the stacked state by W.
-        let n = 6;
+    fn ring_all_reduce_traffic_matches_chunk_math() {
+        // Byte-accounting invariant: the measured per-edge scalars equal
+        // the 2(n-1)-step chunk schedule exactly, and sum to
+        // sum_ranks 2(d - len(chunk(rank+1))) = 2d(n-1) over all nodes,
+        // even when d does not divide by n.
+        for (n, d) in [(4usize, 400usize), (5, 17), (3, 7), (7, 64), (2, 1), (6, 5)] {
+            let eps = bus(n);
+            let sent = run_nodes(eps, move |mut ep| {
+                let mut x = vec![1.0f32; d];
+                ring_all_reduce(&mut ep, &mut x)?;
+                Ok((ep.rank, ep.scalars_sent, ep.msgs_sent))
+            })
+            .unwrap();
+            let mut total = 0u64;
+            for (rank, scalars, msgs) in sent {
+                let expect = ring_all_reduce_scalars(n, d, rank);
+                assert_eq!(scalars, expect, "n={n} d={d} rank {rank}");
+                assert_eq!(msgs, 2 * (n as u64 - 1), "n={n} d={d} rank {rank} msgs");
+                total += scalars;
+            }
+            assert_eq!(total, 2 * (n as u64 - 1) * d as u64, "n={n} d={d} total");
+        }
+    }
+
+    #[test]
+    fn gossip_exchange_matches_matrix_product_every_kind() {
+        // One gossip round over the bus == multiplying the stacked state by
+        // W(round), on EVERY TopologyKind (the directed one-peer graph
+        // exercises out-neighbors != in-neighbors on every round).
         let d = 3;
-        let topo = Topology::ring(n);
-        let w = topo.weight_matrix(0);
-        let eps = bus(n);
+        for topo in [
+            Topology::ring(6),
+            Topology::grid(6),
+            Topology::hypercube(8),
+            Topology::star(5),
+            Topology::full(5),
+            Topology::static_expo(7),
+            Topology::one_peer_expo(6),
+        ] {
+            let n = topo.n;
+            for round in 0..topo.rounds() {
+                let w = topo.weight_matrix(round);
+                let eps = bus(n);
+                let topo2 = topo.clone();
+                let results = run_nodes(eps, move |mut ep| {
+                    let x: Vec<f32> = (0..d).map(|j| (ep.rank * 10 + j) as f32).collect();
+                    let row = topo2.weight_row(ep.rank, round);
+                    let outn = topo2.out_neighbors(ep.rank, round);
+                    gossip_exchange(&mut ep, &x, &row, &outn)
+                })
+                .unwrap();
+                for i in 0..n {
+                    for j in 0..d {
+                        let expect: f64 =
+                            (0..n).map(|k| w[(i, k)] * (k * 10 + j) as f64).sum();
+                        assert!(
+                            (results[i][j] as f64 - expect).abs() < 1e-4,
+                            "{:?} round {round} node {i} col {j}",
+                            topo.kind
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_exchange_works_on_topology_sized_sparse_bus() {
+        // The satellite's point: endpoints built from the topology's
+        // out-neighbors (no fully-connected table) carry a gossip round.
+        let topo = Topology::ring(8);
+        let d = 4;
+        let edges: Vec<Vec<usize>> = (0..topo.n).map(|i| topo.out_neighbors(i, 0)).collect();
+        let eps = bus_for(topo.n, &edges);
         let topo2 = topo.clone();
         let results = run_nodes(eps, move |mut ep| {
-            let x: Vec<f32> = (0..d).map(|j| (ep.rank * 10 + j) as f32).collect();
+            let x = vec![(ep.rank + 1) as f32; d];
             let row = topo2.weight_row(ep.rank, 0);
-            let outn: Vec<usize> =
-                topo2.in_neighbors(ep.rank, 0).into_iter().filter(|&j| j != ep.rank).collect();
+            let outn = topo2.out_neighbors(ep.rank, 0);
             gossip_exchange(&mut ep, &x, &row, &outn)
         })
         .unwrap();
-        for i in 0..n {
-            for j in 0..d {
-                let expect: f64 = (0..n).map(|k| w[(i, k)] * (k * 10 + j) as f64).sum();
-                assert!((results[i][j] as f64 - expect).abs() < 1e-4);
-            }
+        let w = topo.weight_matrix(0);
+        for i in 0..topo.n {
+            let expect: f64 = (0..topo.n).map(|k| w[(i, k)] * (k + 1) as f64).sum();
+            assert!((results[i][0] as f64 - expect).abs() < 1e-5);
         }
     }
 
@@ -304,8 +528,7 @@ mod tests {
         let results = run_nodes(eps, move |mut ep| {
             let x: Vec<f32> = (0..d).map(|j| ((ep.rank + 1) * (j + 2)) as f32).collect();
             let row = topo.weight_row(ep.rank, 0);
-            let outn: Vec<usize> =
-                topo.in_neighbors(ep.rank, 0).into_iter().filter(|&j| j != ep.rank).collect();
+            let outn = topo.out_neighbors(ep.rank, 0);
             gossip_exchange(&mut ep, &x, &row, &outn)
         })
         .unwrap();
@@ -313,6 +536,29 @@ mod tests {
             let before: f32 = (0..n).map(|i| ((i + 1) * (j + 2)) as f32).sum::<f32>() / n as f32;
             let after: f32 = results.iter().map(|x| x[j]).sum::<f32>() / n as f32;
             assert!((before - after).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn one_peer_gossip_counts_one_message_per_node() {
+        // Directed one-peer round: every node transmits exactly once.
+        let topo = Topology::one_peer_expo(8);
+        let d = 16;
+        for round in 0..topo.rounds() {
+            let eps = bus(topo.n);
+            let topo2 = topo.clone();
+            let sent = run_nodes(eps, move |mut ep| {
+                let x = vec![1.0f32; d];
+                let row = topo2.weight_row(ep.rank, round);
+                let outn = topo2.out_neighbors(ep.rank, round);
+                gossip_exchange(&mut ep, &x, &row, &outn)?;
+                Ok((ep.msgs_sent, ep.scalars_sent))
+            })
+            .unwrap();
+            for (msgs, scalars) in sent {
+                assert_eq!(msgs, 1, "round {round}");
+                assert_eq!(scalars, d as u64, "round {round}");
+            }
         }
     }
 
@@ -344,12 +590,39 @@ mod tests {
     }
 
     #[test]
+    fn node_failure_on_sparse_bus_still_errors_cleanly() {
+        // The crashed-peer => clean-Err property survives the sparse sender
+        // table: with ring-successor edges only, dropping node 0 hangs up
+        // node 1's inbound channel (and 2's once 1 exits).
+        let edges: Vec<Vec<usize>> = (0..3).map(|i: usize| vec![(i + 1) % 3]).collect();
+        let mut eps = bus_for(3, &edges);
+        let c = eps.pop().unwrap();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        drop(a);
+        let hb = std::thread::spawn(move || {
+            let mut ep = b;
+            let mut x = vec![1.0f32; 9];
+            ring_all_reduce(&mut ep, &mut x)
+        });
+        let hc = std::thread::spawn(move || {
+            let mut ep = c;
+            let mut x = vec![1.0f32; 9];
+            ring_all_reduce(&mut ep, &mut x)
+        });
+        let rb = hb.join().unwrap();
+        let rc = hc.join().unwrap();
+        assert!(rb.is_err() || rc.is_err());
+    }
+
+    #[test]
     fn message_to_dead_node_errors() {
         let mut eps = bus(2);
         let b = eps.pop().unwrap();
         let mut a = eps.pop().unwrap();
         drop(b);
         assert!(a.send(1, vec![1.0]).is_err());
+        assert_eq!((a.msgs_sent, a.scalars_sent), (0, 0), "undelivered sends are not traffic");
     }
 
     #[test]
@@ -358,5 +631,7 @@ mod tests {
         let mut x = vec![3.0f32, 4.0];
         ring_all_reduce(&mut eps[0], &mut x).unwrap();
         assert_eq!(x, vec![3.0, 4.0]);
+        assert_eq!(eps[0].scalars_sent, 0);
+        assert_eq!(ring_all_reduce_scalars(1, 2, 0), 0);
     }
 }

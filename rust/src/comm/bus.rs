@@ -1,0 +1,472 @@
+//! [`BusBackend`]: the message-passing communication plane.
+//!
+//! One [`Endpoint`] per worker, built once with exactly the sender edges
+//! the run needs (the topology's out-neighbors across all rounds, plus the
+//! all-to-all chunk-exchange edges when the schedule global-averages).
+//! Every transmitted vector is actually serialized onto a channel and
+//! received on the other side — the same code path the `tab17` bench
+//! measures — so the traffic a training run reports IS measured traffic,
+//! read back from the endpoint counters.
+//!
+//! §Execution model: collectives run as *phases* sharded across the
+//! trainer's [`WorkerPool`] with a barrier between send- and receive-sides
+//! (channels are buffered, so a phase's receives can never block on a
+//! same-phase send). This keeps one persistent engine for compute AND
+//! communication at any pool size — including 1 — with deterministic
+//! results: each node's arithmetic is self-contained and
+//! [`Endpoint::recv_from`] selects by source, so scheduling order cannot
+//! leak into the bits.
+//!
+//! §Equivalence: the receive-side mix calls the same [`mix_row_src`]
+//! kernel with the same f32 weight rows in the same order as the shared
+//! mixer, and the global average accumulates rank-ascending per chunk —
+//! the shared mean's exact operation order. Uncompressed trajectories are
+//! therefore bit-identical to [`super::SharedBackend`]'s (asserted by
+//! `rust/tests/comm_backends.rs`). The chunked reduce-scatter/all-gather
+//! moves the bandwidth-optimal ring's aggregate traffic (2 d (n-1)
+//! scalars); the latency-bound ring schedule itself remains available as
+//! [`crate::collective::ring_all_reduce`] for the bench suite.
+//!
+//! §Time: charged per actual message — `alpha` per send on the busiest
+//! node's critical path plus `theta` per wire scalar, scaled to the
+//! emulated `cost_dim` (the same emulation the shared backend bills).
+
+use anyhow::{bail, ensure, Result};
+
+use super::{export_residuals, import_residuals, BackendKind, CommBackend, CommStats, Compression};
+use crate::collective::{bus_for, ring_chunk_bounds, Endpoint};
+use crate::compress::{Codec, ErrorFeedback};
+use crate::coordinator::mixer::{mix_row_src, weight_rows_f32};
+use crate::costmodel::CostModel;
+use crate::exec::WorkerPool;
+use crate::params::ParamMatrix;
+use crate::topology::Topology;
+
+/// The message-passing backend (see module docs).
+pub struct BusBackend {
+    n: usize,
+    d: usize,
+    rounds: usize,
+    /// Weight rows per round (same f32 quantization as the shared mixer).
+    rows: Vec<Vec<Vec<(usize, f32)>>>,
+    /// Out-neighbors per round (transmit targets, excl. self).
+    outn: Vec<Vec<Vec<usize>>>,
+    endpoints: Vec<Endpoint>,
+    scratch: ParamMatrix,
+    /// Global-average chunk boundaries (`ring_chunk_bounds`).
+    bounds: Vec<usize>,
+    /// Whether the all-to-all chunk-exchange edges were built.
+    with_global: bool,
+    compressors: Vec<Option<ErrorFeedback<Box<dyn Codec>>>>,
+    cost: CostModel,
+    cost_dim: usize,
+    pub gossip_clock: usize,
+    total: CommStats,
+    /// Set when a collective fails mid-flight: the channels may hold
+    /// half-delivered payloads, so the backend refuses further work
+    /// instead of silently mixing stale rounds.
+    failed: bool,
+}
+
+impl BusBackend {
+    /// Build the bus for `topo`. `with_global` adds the all-to-all
+    /// chunk-exchange edges the global average needs — pass `false` for
+    /// pure-gossip schedules so large sparse graphs keep O(edges) setup.
+    pub fn new(
+        topo: &Topology,
+        d: usize,
+        cost: CostModel,
+        cost_dim: usize,
+        compression: Compression,
+        with_global: bool,
+    ) -> BusBackend {
+        let n = topo.n;
+        let rounds = topo.rounds();
+        // Same quantization site as the shared mixer (bit-equality is
+        // structural, not two parallel copies).
+        let rows = weight_rows_f32(topo);
+        let outn: Vec<Vec<Vec<usize>>> =
+            (0..rounds).map(|r| (0..n).map(|j| topo.out_neighbors(j, r)).collect()).collect();
+        // Sender edges: union of the gossip transmit sets over all rounds,
+        // plus all-to-all when the schedule global-averages.
+        let edges: Vec<Vec<usize>> = (0..n)
+            .map(|j| {
+                let mut e: Vec<usize> = if with_global {
+                    (0..n).filter(|&i| i != j).collect()
+                } else {
+                    outn.iter().flat_map(|per_round| per_round[j].iter().copied()).collect()
+                };
+                e.sort_unstable();
+                e.dedup();
+                e
+            })
+            .collect();
+        BusBackend {
+            n,
+            d,
+            rounds,
+            rows,
+            outn,
+            endpoints: bus_for(n, &edges),
+            scratch: ParamMatrix::zeros(n, d),
+            bounds: ring_chunk_bounds(n, d),
+            with_global,
+            compressors: compression.build(n, d),
+            cost,
+            cost_dim,
+            gossip_clock: 0,
+            total: CommStats::default(),
+            failed: false,
+        }
+    }
+
+    /// Snapshot the per-endpoint counters (delta accounting per action).
+    fn traffic_snapshot(&self) -> Vec<(u64, u64)> {
+        self.endpoints.iter().map(|e| (e.scalars_sent, e.msgs_sent)).collect()
+    }
+
+    /// Stats incurred since `before`: totals across nodes, time charged per
+    /// actual message on the busiest node's critical path — the max over
+    /// nodes of that node's own alpha-beta cost (message count and wire
+    /// scalars taken together, so asymmetric topologies aren't billed a
+    /// mix-and-match of two different nodes' worst terms).
+    fn stats_since(&self, before: &[(u64, u64)]) -> CommStats {
+        let scale = self.cost_dim as f64 / self.d.max(1) as f64;
+        let mut scalars = 0u64;
+        let mut msgs = 0u64;
+        let mut critical = 0.0f64;
+        for (ep, &(s0, m0)) in self.endpoints.iter().zip(before) {
+            let ds = ep.scalars_sent - s0;
+            let dm = ep.msgs_sent - m0;
+            scalars += ds;
+            msgs += dm;
+            let node_cost =
+                dm as f64 * self.cost.alpha + ds as f64 * scale * self.cost.theta;
+            critical = critical.max(node_cost);
+        }
+        CommStats { scalars_sent: scalars, msgs, sim_seconds: critical }
+    }
+}
+
+impl BusBackend {
+    fn gossip_inner(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommStats> {
+        debug_assert!(params.n() == self.n && params.d() == self.d);
+        let n = self.n;
+        let d = self.d;
+        let round = self.gossip_clock % self.rounds;
+        let before = self.traffic_snapshot();
+        let t = pool.shards(n);
+        let per = (n + t - 1) / t;
+        // Phase A — transmit: each node compresses once and ships the
+        // payload to every out-neighbor (send is buffered, never blocks).
+        {
+            let outn = &self.outn[round];
+            let src = params.as_slice();
+            pool.run(
+                self.endpoints
+                    .chunks_mut(per)
+                    .zip(self.compressors.chunks_mut(per))
+                    .enumerate()
+                    .map(|(ci, (eps, comps))| {
+                        move || {
+                            for (k, (ep, comp)) in
+                                eps.iter_mut().zip(comps.iter_mut()).enumerate()
+                            {
+                                let j = ci * per + k;
+                                let targets = &outn[j];
+                                if targets.is_empty() {
+                                    continue;
+                                }
+                                let x = &src[j * d..(j + 1) * d];
+                                let (mut payload, wire) = match comp.as_mut() {
+                                    Some(ef) => {
+                                        let c = ef.compress(x);
+                                        let wire = (c.wire_bytes as u64).div_ceil(4);
+                                        (c.dense, wire)
+                                    }
+                                    None => (x.to_vec(), d as u64),
+                                };
+                                // Clone per extra neighbor only; the last
+                                // send takes the buffer itself.
+                                let last = targets.len() - 1;
+                                for (t, &to) in targets.iter().enumerate() {
+                                    let msg = if t == last {
+                                        std::mem::take(&mut payload)
+                                    } else {
+                                        payload.clone()
+                                    };
+                                    ep.send_billed(to, msg, wire)?;
+                                }
+                            }
+                            Ok(())
+                        }
+                    })
+                    .collect(),
+            )?;
+        }
+        // Phase B — receive + mix: the same kernel, rows and order as the
+        // shared mixer (bit-identical by construction).
+        {
+            let rows = &self.rows[round];
+            let src = params.as_slice();
+            pool.run(
+                self.endpoints
+                    .chunks_mut(per)
+                    .zip(self.scratch.row_blocks_mut(per))
+                    .enumerate()
+                    .map(|(ci, (eps, block))| {
+                        move || {
+                            for (k, (ep, out)) in
+                                eps.iter_mut().zip(block.chunks_mut(d)).enumerate()
+                            {
+                                let i = ci * per + k;
+                                let row = &rows[i];
+                                let mut recvd: Vec<(usize, Vec<f32>)> =
+                                    Vec::with_capacity(row.len());
+                                for &(j, _) in row {
+                                    if j != i {
+                                        let v = ep.recv_from(j)?;
+                                        ensure!(
+                                            v.len() == d,
+                                            "node {i}: message from {j} carries {} of {d} scalars",
+                                            v.len()
+                                        );
+                                        recvd.push((j, v));
+                                    }
+                                }
+                                mix_row_src(
+                                    row,
+                                    |j| {
+                                        if j == i {
+                                            &src[i * d..(i + 1) * d]
+                                        } else {
+                                            let (_, v) = recvd
+                                                .iter()
+                                                .find(|(jj, _)| *jj == j)
+                                                .expect("received above");
+                                            &v[..]
+                                        }
+                                    },
+                                    out,
+                                );
+                            }
+                            Ok(())
+                        }
+                    })
+                    .collect(),
+            )?;
+        }
+        params.swap_data(&mut self.scratch);
+        self.gossip_clock += 1;
+        let stats = self.stats_since(&before);
+        self.total.merge(stats);
+        Ok(stats)
+    }
+
+    fn global_average_inner(
+        &mut self,
+        params: &mut ParamMatrix,
+        pool: &WorkerPool,
+    ) -> Result<CommStats> {
+        debug_assert!(params.n() == self.n && params.d() == self.d);
+        debug_assert!(self.with_global, "checked by the trait wrapper");
+        let n = self.n;
+        let d = self.d;
+        let inv = 1.0f32 / n as f32;
+        let before = self.traffic_snapshot();
+        let t = pool.shards(n);
+        let per = (n + t - 1) / t;
+        let bounds = &self.bounds;
+        // Phase A — reduce-scatter sends: node i ships chunk j of its row
+        // directly to node j (empty chunks ship nothing).
+        {
+            let src = params.as_slice();
+            pool.run(
+                self.endpoints
+                    .chunks_mut(per)
+                    .enumerate()
+                    .map(|(ci, eps)| {
+                        move || {
+                            for (k, ep) in eps.iter_mut().enumerate() {
+                                let i = ci * per + k;
+                                let xi = &src[i * d..(i + 1) * d];
+                                for j in 0..n {
+                                    if j != i && bounds[j + 1] > bounds[j] {
+                                        ep.send(j, xi[bounds[j]..bounds[j + 1]].to_vec())?;
+                                    }
+                                }
+                            }
+                            Ok(())
+                        }
+                    })
+                    .collect(),
+            )?;
+        }
+        // Phase B — reduce + gather sends: node i sums its chunk over all
+        // ranks ASCENDING (the shared mean's exact accumulation order:
+        // copy rank 0, add ranks 1..n, multiply by 1/n), stores it in its
+        // scratch row, and broadcasts the reduced chunk. Per-sender FIFO
+        // keeps these gather messages behind phase A's scatter messages.
+        {
+            let src = params.as_slice();
+            pool.run(
+                self.endpoints
+                    .chunks_mut(per)
+                    .zip(self.scratch.row_blocks_mut(per))
+                    .enumerate()
+                    .map(|(ci, (eps, block))| {
+                        move || {
+                            for (k, (ep, srow)) in
+                                eps.iter_mut().zip(block.chunks_mut(d)).enumerate()
+                            {
+                                let i = ci * per + k;
+                                let (lo, hi) = (bounds[i], bounds[i + 1]);
+                                if hi == lo {
+                                    continue;
+                                }
+                                let len = hi - lo;
+                                let mut acc: Vec<f32> = if i == 0 {
+                                    src[lo..hi].to_vec()
+                                } else {
+                                    let v = ep.recv_from(0)?;
+                                    ensure!(
+                                        v.len() == len,
+                                        "chunk from 0 has {} of {len}",
+                                        v.len()
+                                    );
+                                    v
+                                };
+                                for j in 1..n {
+                                    if j == i {
+                                        let own = &src[j * d + lo..j * d + hi];
+                                        for (a, b) in acc.iter_mut().zip(own) {
+                                            *a += b;
+                                        }
+                                    } else {
+                                        let v = ep.recv_from(j)?;
+                                        ensure!(
+                                            v.len() == len,
+                                            "chunk from {j} has {} of {len}",
+                                            v.len()
+                                        );
+                                        for (a, b) in acc.iter_mut().zip(&v) {
+                                            *a += b;
+                                        }
+                                    }
+                                }
+                                for a in acc.iter_mut() {
+                                    *a *= inv;
+                                }
+                                srow[lo..hi].copy_from_slice(&acc);
+                                // Broadcast the reduced chunk; the last
+                                // send takes the buffer itself (acc is
+                                // dead after this loop).
+                                let last = if i == n - 1 { n.wrapping_sub(2) } else { n - 1 };
+                                for j in 0..n {
+                                    if j != i {
+                                        let msg = if j == last {
+                                            std::mem::take(&mut acc)
+                                        } else {
+                                            acc.clone()
+                                        };
+                                        ep.send(j, msg)?;
+                                    }
+                                }
+                            }
+                            Ok(())
+                        }
+                    })
+                    .collect(),
+            )?;
+        }
+        // Phase C — assemble: every node fills the rest of its mean row
+        // from the other ranks' reduced chunks (its own is already
+        // in place). All rows end bit-identical.
+        {
+            pool.run(
+                self.endpoints
+                    .chunks_mut(per)
+                    .zip(self.scratch.row_blocks_mut(per))
+                    .enumerate()
+                    .map(|(ci, (eps, block))| {
+                        move || {
+                            for (k, (ep, srow)) in
+                                eps.iter_mut().zip(block.chunks_mut(d)).enumerate()
+                            {
+                                let i = ci * per + k;
+                                for j in 0..n {
+                                    if j != i && bounds[j + 1] > bounds[j] {
+                                        let v = ep.recv_from(j)?;
+                                        ensure!(
+                                            v.len() == bounds[j + 1] - bounds[j],
+                                            "reduced chunk from {j} has wrong length"
+                                        );
+                                        srow[bounds[j]..bounds[j + 1]].copy_from_slice(&v);
+                                    }
+                                }
+                            }
+                            Ok(())
+                        }
+                    })
+                    .collect(),
+            )?;
+        }
+        params.swap_data(&mut self.scratch);
+        let stats = self.stats_since(&before);
+        self.total.merge(stats);
+        Ok(stats)
+    }
+}
+
+impl CommBackend for BusBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Bus
+    }
+
+    fn gossip(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommStats> {
+        ensure!(!self.failed, "bus backend is poisoned by an earlier failed collective");
+        let result = self.gossip_inner(params, pool);
+        self.failed |= result.is_err();
+        result
+    }
+
+    fn global_average(
+        &mut self,
+        params: &mut ParamMatrix,
+        pool: &WorkerPool,
+    ) -> Result<CommStats> {
+        ensure!(!self.failed, "bus backend is poisoned by an earlier failed collective");
+        // A missing edge set is a clean configuration error, not a
+        // half-delivered collective — don't poison for it.
+        if !self.with_global {
+            bail!("bus backend was built without all-reduce edges (pure-gossip schedule)");
+        }
+        let result = self.global_average_inner(params, pool);
+        self.failed |= result.is_err();
+        result
+    }
+
+    fn gossip_clock(&self) -> usize {
+        self.gossip_clock
+    }
+
+    fn set_gossip_clock(&mut self, rounds: usize) {
+        self.gossip_clock = rounds;
+    }
+
+    fn total(&self) -> CommStats {
+        self.total
+    }
+
+    fn restore_total(&mut self, total: CommStats) {
+        self.total = total;
+    }
+
+    fn export_compressor_state(&self) -> Option<ParamMatrix> {
+        export_residuals(&self.compressors, self.d)
+    }
+
+    fn import_compressor_state(&mut self, state: Option<&ParamMatrix>) -> Result<()> {
+        import_residuals(&mut self.compressors, self.d, state)
+    }
+}

@@ -1,0 +1,440 @@
+//! The unified CommPlane: one pluggable communication backend behind every
+//! training run.
+//!
+//! The paper's central trade-off (§3, "All-Reduce v.s. multiple Gossips";
+//! Table 17) is about *measured* communication, so the code that trains and
+//! the code that measures must be the same code. This module makes the
+//! communication layer a first-class, swappable component:
+//!
+//! * [`CommBackend`] — the contract: `gossip`, `global_average`, optional
+//!   async `gossip_async`/`finish`, every call returning the [`CommStats`]
+//!   it incurred (wire scalars, messages, simulated alpha-beta seconds).
+//! * [`SharedBackend`] — the shared-memory hot path: the pool-sharded
+//!   [`crate::coordinator::mixer::Mixer`] (overlap mode included), with
+//!   traffic *predicted* from the topology (the counts a message-passing
+//!   run of the same schedule would measure) and time billed by the
+//!   paper's alpha-beta formulas.
+//! * [`BusBackend`] — the message-passing plane: one
+//!   [`crate::collective::Endpoint`] per worker, every transmitted vector
+//!   actually sent/received over channels (compression included), traffic
+//!   *measured* at the endpoints and time charged per actual message.
+//!
+//! Both backends drive the same [`mix_row_src`] kernel with the same weight
+//! rows in the same order, so — with identity/no compression — their
+//! parameter trajectories are **bit-identical**, and their `CommStats`
+//! agree exactly (asserted by `rust/tests/comm_backends.rs` and the
+//! rewritten `benches/tab17_comm_overhead.rs`). Select with
+//! `TrainerOptions::backend` / `comm.backend` / `--backend {shared,bus}`.
+
+pub mod bus;
+pub mod shared;
+
+pub use bus::BusBackend;
+pub use shared::SharedBackend;
+
+use anyhow::{bail, Result};
+
+use crate::algorithms::CommAction;
+use crate::compress::{Codec, ErrorFeedback, Int8, TopK};
+use crate::coordinator::mixer::PendingMix;
+use crate::exec::WorkerPool;
+use crate::params::ParamMatrix;
+use crate::topology::Topology;
+
+/// Traffic + simulated time incurred by one communication action (or
+/// accumulated over a run). `scalars_sent` counts f32-equivalents on the
+/// wire (compressed messages bill `ceil(wire_bytes / 4)`); `sim_seconds`
+/// is the alpha-beta clock charge for the action.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommStats {
+    pub scalars_sent: u64,
+    pub msgs: u64,
+    pub sim_seconds: f64,
+}
+
+impl CommStats {
+    /// Accumulate another action's stats into this total.
+    pub fn merge(&mut self, other: CommStats) {
+        self.scalars_sent += other.scalars_sent;
+        self.msgs += other.msgs;
+        self.sim_seconds += other.sim_seconds;
+    }
+
+    /// Wire bytes (4 bytes per f32-equivalent).
+    pub fn bytes_sent(&self) -> u64 {
+        self.scalars_sent * 4
+    }
+}
+
+/// Which communication plane a trainer runs on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pool-sharded shared-memory mixer (the in-proc hot path; default).
+    #[default]
+    Shared,
+    /// Message-passing bus: one endpoint per worker, real send/recv.
+    Bus,
+}
+
+impl BackendKind {
+    pub fn from_name(name: &str) -> Result<BackendKind> {
+        Ok(match name {
+            "shared" | "mixer" => BackendKind::Shared,
+            "bus" | "collective" => BackendKind::Bus,
+            other => bail!("unknown comm backend '{other}' (shared | bus)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Shared => "shared",
+            BackendKind::Bus => "bus",
+        }
+    }
+}
+
+/// Gossip-message compression applied on the transmit path of either
+/// backend (the paper's §2 "orthogonal techniques"; see
+/// [`crate::compress`]). Every node carries its own error-feedback
+/// residual, so per-node compression state is identical across backends.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum Compression {
+    /// Transmit raw vectors (the default; keeps the fused no-copy mixer
+    /// path on the shared backend).
+    #[default]
+    None,
+    /// Top-k magnitude sparsification, keeping `frac` of coordinates.
+    TopK { frac: f64 },
+    /// Per-block int8 linear quantization.
+    Int8 { block: usize },
+}
+
+impl Compression {
+    /// Parse a config/CLI triple (`comm.compression`, `comm.topk_frac`,
+    /// `comm.int8_block`).
+    pub fn from_parts(name: &str, topk_frac: f64, int8_block: usize) -> Result<Compression> {
+        Ok(match name {
+            "none" | "identity" => Compression::None,
+            "topk" => {
+                if !(topk_frac > 0.0 && topk_frac <= 1.0) {
+                    bail!("comm.topk_frac must be in (0, 1], got {topk_frac}");
+                }
+                Compression::TopK { frac: topk_frac }
+            }
+            "int8" => {
+                if int8_block == 0 {
+                    bail!("comm.int8_block must be >= 1");
+                }
+                Compression::Int8 { block: int8_block }
+            }
+            other => bail!("unknown compression '{other}' (none | topk | int8)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Compression::None => "none",
+            Compression::TopK { .. } => "topk",
+            Compression::Int8 { .. } => "int8",
+        }
+    }
+
+    /// Build the per-node transmit codecs (`None` when no compression is
+    /// configured — backends then take their raw fast paths).
+    pub(crate) fn build(&self, n: usize, d: usize) -> Vec<Option<ErrorFeedback<Box<dyn Codec>>>> {
+        (0..n)
+            .map(|_| -> Option<ErrorFeedback<Box<dyn Codec>>> {
+                let codec: Box<dyn Codec> = match *self {
+                    Compression::None => return None,
+                    Compression::TopK { frac } => Box::new(TopK { frac }),
+                    Compression::Int8 { block } => Box::new(Int8 { block }),
+                };
+                Some(ErrorFeedback::new(codec, d))
+            })
+            .collect()
+    }
+}
+
+/// Backend-owned payload of an in-flight round. Opaque to callers; each
+/// backend adds its own variant, so async support for a new plane (e.g. a
+/// tagged-message bus round) extends this enum without touching the trait
+/// boundary.
+pub(crate) enum PendingPayload {
+    /// A [`crate::coordinator::mixer::Mixer::gossip_async`] ticket.
+    SharedMix(PendingMix),
+}
+
+/// An in-flight asynchronous gossip round on a [`CommBackend`] (overlap
+/// mode). Carries the stats the round will incur so the caller can advance
+/// its clock at issue time; hand it back to [`CommBackend::finish`] of the
+/// SAME backend to complete the round.
+pub struct PendingComm {
+    pub(crate) payload: PendingPayload,
+    pub(crate) stats: CommStats,
+}
+
+impl PendingComm {
+    /// The traffic/time this round incurs (known at issue time).
+    pub fn stats(&self) -> CommStats {
+        self.stats
+    }
+}
+
+/// One pluggable communication plane: the two actions Algorithm 1 needs,
+/// each reporting what it cost. Implementations must be deterministic —
+/// identical inputs produce identical parameter bits at any pool size.
+pub trait CommBackend: Send {
+    fn kind(&self) -> BackendKind;
+
+    /// One gossip round: row(i) <- sum_j w_ij transmit(row(j)); advances
+    /// the topology round clock. On `Err` the parameters are untouched and
+    /// the clock unadvanced — but the backend itself must be treated as
+    /// FAILED and not reused (a message-passing plane may hold half-
+    /// delivered payloads; [`BusBackend`] poisons itself and refuses
+    /// further collectives, mirroring the worker pool's panic semantics).
+    fn gossip(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommStats>;
+
+    /// Exact global average: every worker ends up holding the ensemble
+    /// mean (the paper's All-Reduce step).
+    fn global_average(&mut self, params: &mut ParamMatrix, pool: &WorkerPool)
+        -> Result<CommStats>;
+
+    /// Begin an asynchronous gossip round, if this backend supports
+    /// overlap; `Ok(None)` means unsupported and callers fall back to the
+    /// synchronous [`CommBackend::gossip`].
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`crate::coordinator::mixer::Mixer::gossip_async`]:
+    /// until [`CommBackend::finish`] returns (or the [`PendingComm`] is
+    /// dropped, which blocks), `params` must not be mutated, moved-from or
+    /// dropped, this backend must outlive the round, and the `PendingComm`
+    /// must not be leaked.
+    unsafe fn gossip_async(
+        &mut self,
+        _params: &ParamMatrix,
+        _pool: &WorkerPool,
+    ) -> Result<Option<PendingComm>> {
+        Ok(None)
+    }
+
+    /// Complete a round started by [`CommBackend::gossip_async`].
+    fn finish(&mut self, _params: &mut ParamMatrix, _pending: PendingComm) -> Result<CommStats> {
+        bail!("this backend has no asynchronous gossip")
+    }
+
+    /// Gossip rounds executed so far (drives time-varying topologies;
+    /// checkpointed by the trainer).
+    fn gossip_clock(&self) -> usize;
+
+    /// Overwrite the round clock (checkpoint restore).
+    fn set_gossip_clock(&mut self, rounds: usize);
+
+    /// Cumulative measured traffic/time since construction (completed
+    /// actions only; an un-finished async round is not yet counted).
+    fn total(&self) -> CommStats;
+
+    /// Overwrite the cumulative traffic counters (checkpoint restore — a
+    /// resumed run's `comm_scalars`/`comm_msgs` columns continue from the
+    /// snapshot instead of restarting at zero).
+    fn restore_total(&mut self, total: CommStats);
+
+    /// Snapshot the per-node compressor state (error-feedback residuals)
+    /// as an n x d matrix; `None` when no compression is configured.
+    fn export_compressor_state(&self) -> Option<ParamMatrix>;
+
+    /// Restore state from [`CommBackend::export_compressor_state`].
+    /// `None` zeroes the residuals (fresh-start semantics for checkpoints
+    /// that predate compressor state).
+    fn import_compressor_state(&mut self, state: Option<&ParamMatrix>) -> Result<()>;
+}
+
+/// Shared impl for [`CommBackend::export_compressor_state`]: stack the
+/// per-node error-feedback residuals into one n x d matrix.
+pub(crate) fn export_residuals(
+    comps: &[Option<ErrorFeedback<Box<dyn Codec>>>],
+    d: usize,
+) -> Option<ParamMatrix> {
+    if comps.iter().all(|c| c.is_none()) {
+        return None;
+    }
+    let mut m = ParamMatrix::zeros(comps.len(), d);
+    for (i, c) in comps.iter().enumerate() {
+        m.copy_row_from(i, c.as_ref().expect("compression is all-or-nothing").residual());
+    }
+    Some(m)
+}
+
+/// Shared impl for [`CommBackend::import_compressor_state`].
+pub(crate) fn import_residuals(
+    comps: &mut [Option<ErrorFeedback<Box<dyn Codec>>>],
+    d: usize,
+    state: Option<&ParamMatrix>,
+) -> Result<()> {
+    match state {
+        Some(m) => {
+            anyhow::ensure!(
+                comps.iter().any(|c| c.is_some()),
+                "checkpoint carries compressor residuals but this run has compression disabled"
+            );
+            anyhow::ensure!(
+                m.n() == comps.len() && m.d() == d,
+                "compressor residuals are {}x{}, backend is {}x{d}",
+                m.n(),
+                m.d(),
+                comps.len()
+            );
+            for (c, row) in comps.iter_mut().zip(m.rows()) {
+                c.as_mut().expect("compression is all-or-nothing").set_residual(row);
+            }
+        }
+        None => {
+            // Pre-v3 checkpoint or uncompressed snapshot: residuals restart
+            // at zero, exactly like a fresh trainer's.
+            for c in comps.iter_mut().flatten() {
+                c.reset_residual();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Wire traffic of one identity-payload gossip round at `round`: every
+/// node sends its d-vector to each of its out-neighbors. Returns
+/// `(scalars, msgs)` summed over all nodes — the counts a bus run
+/// measures and the shared backend predicts.
+pub fn gossip_traffic(topo: &Topology, round: usize, d: usize) -> (u64, u64) {
+    let mut scalars = 0u64;
+    let mut msgs = 0u64;
+    for j in 0..topo.n {
+        let deg = topo.out_neighbors(j, round).len() as u64;
+        msgs += deg;
+        scalars += deg * d as u64;
+    }
+    (scalars, msgs)
+}
+
+/// Wire traffic of the bus plane's chunked global average (direct
+/// reduce-scatter + all-gather over [`crate::collective::ring_chunk_bounds`]
+/// chunks): `(scalars, msgs)` summed over all nodes. Total scalars are
+/// exactly `2 d (n-1)` — the bandwidth-optimal ring's aggregate — while
+/// empty chunks (d < n) send nothing.
+pub fn global_average_traffic(n: usize, d: usize) -> (u64, u64) {
+    let bounds = crate::collective::ring_chunk_bounds(n, d);
+    let len = |c: usize| bounds[c + 1] - bounds[c];
+    let mut scalars = 0u64;
+    let mut msgs = 0u64;
+    for i in 0..n {
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            if len(j) > 0 {
+                // reduce-scatter: i ships chunk j of its row to node j
+                scalars += len(j) as u64;
+                msgs += 1;
+            }
+            if len(i) > 0 {
+                // all-gather: i ships its reduced chunk to node j
+                scalars += len(i) as u64;
+                msgs += 1;
+            }
+        }
+    }
+    (scalars, msgs)
+}
+
+/// Analytic traffic `(scalars, msgs)` of a whole action sequence — THE
+/// reference the equivalence suite and the tab17 accounting gate check
+/// measured counts against (one definition, so the gates cannot drift
+/// apart). Gossip rounds advance through the topology's round cycle in
+/// order, exactly like a backend's gossip clock.
+pub fn schedule_traffic(topo: &Topology, d: usize, actions: &[CommAction]) -> (u64, u64) {
+    let mut gossip_round = 0usize;
+    let mut scalars = 0u64;
+    let mut msgs = 0u64;
+    for a in actions {
+        match a {
+            CommAction::Gossip => {
+                let (s, m) = gossip_traffic(topo, gossip_round % topo.rounds(), d);
+                scalars += s;
+                msgs += m;
+                gossip_round += 1;
+            }
+            CommAction::GlobalAverage => {
+                let (s, m) = global_average_traffic(topo.n, d);
+                scalars += s;
+                msgs += m;
+            }
+            CommAction::None => {}
+        }
+    }
+    (scalars, msgs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_merge_and_bytes() {
+        let mut a = CommStats { scalars_sent: 10, msgs: 2, sim_seconds: 0.5 };
+        a.merge(CommStats { scalars_sent: 5, msgs: 1, sim_seconds: 0.25 });
+        assert_eq!(a.scalars_sent, 15);
+        assert_eq!(a.msgs, 3);
+        assert!((a.sim_seconds - 0.75).abs() < 1e-12);
+        assert_eq!(a.bytes_sent(), 60);
+    }
+
+    #[test]
+    fn backend_kind_names_roundtrip() {
+        for k in [BackendKind::Shared, BackendKind::Bus] {
+            assert_eq!(BackendKind::from_name(k.name()).unwrap(), k);
+        }
+        assert!(BackendKind::from_name("carrier-pigeon").is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Shared);
+    }
+
+    #[test]
+    fn compression_parses_and_validates() {
+        assert_eq!(Compression::from_parts("none", 0.1, 64).unwrap(), Compression::None);
+        assert_eq!(
+            Compression::from_parts("topk", 0.25, 64).unwrap(),
+            Compression::TopK { frac: 0.25 }
+        );
+        assert_eq!(
+            Compression::from_parts("int8", 0.1, 128).unwrap(),
+            Compression::Int8 { block: 128 }
+        );
+        assert!(Compression::from_parts("topk", 0.0, 64).is_err());
+        assert!(Compression::from_parts("topk", 1.5, 64).is_err());
+        assert!(Compression::from_parts("int8", 0.1, 0).is_err());
+        assert!(Compression::from_parts("zip", 0.1, 64).is_err());
+    }
+
+    #[test]
+    fn gossip_traffic_matches_hand_counts() {
+        // Ring n=6: every node transmits to 2 neighbors.
+        let (s, m) = gossip_traffic(&Topology::ring(6), 0, 10);
+        assert_eq!((s, m), (120, 12));
+        // One-peer: exactly one transmit per node, every round.
+        let topo = Topology::one_peer_expo(8);
+        for r in 0..topo.rounds() {
+            assert_eq!(gossip_traffic(&topo, r, 5), (40, 8));
+        }
+        // n = 1: silence.
+        assert_eq!(gossip_traffic(&Topology::ring(1), 0, 7), (0, 0));
+    }
+
+    #[test]
+    fn global_average_traffic_totals_2d_n_minus_1() {
+        for (n, d) in [(4usize, 400usize), (5, 17), (3, 2), (8, 64), (1, 9)] {
+            let (scalars, _msgs) = global_average_traffic(n, d);
+            assert_eq!(scalars, 2 * (n as u64 - 1) * d as u64, "n={n} d={d}");
+        }
+        // d < n: empty chunks send nothing, message count shrinks.
+        let (s, m) = global_average_traffic(4, 2);
+        assert_eq!(s, 2 * 3 * 2);
+        assert!(m < 2 * 4 * 3, "empty chunks must be skipped, got {m} msgs");
+    }
+}

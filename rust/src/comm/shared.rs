@@ -1,0 +1,197 @@
+//! [`SharedBackend`]: the shared-memory communication plane — the
+//! pool-sharded [`Mixer`] hot path promoted behind the [`CommBackend`]
+//! contract.
+//!
+//! Parameter arithmetic is exactly the pre-CommPlane trainer's: the fused
+//! `mix_row` kernel for plain gossip, [`Mixer::gossip_async`] for overlap
+//! mode, the fixed-order column mean for the global average. What this
+//! wrapper adds is the accounting: every action reports the [`CommStats`] a
+//! message-passing run of the same schedule would measure (out-neighbor
+//! transmit counts for gossip, the chunked reduce-scatter/all-gather
+//! traffic for the global average) and bills the paper's alpha-beta model
+//! time — `|N_i| theta d + alpha` per gossip round, `2 theta d + n alpha`
+//! per all-reduce (§3.4), at the emulated `cost_dim`.
+
+use anyhow::Result;
+
+use super::{
+    export_residuals, global_average_traffic, gossip_traffic, import_residuals, BackendKind,
+    CommBackend, CommStats, Compression, PendingComm, PendingPayload,
+};
+use crate::compress::{Codec, ErrorFeedback};
+use crate::coordinator::mixer::Mixer;
+use crate::costmodel::CostModel;
+use crate::exec::WorkerPool;
+use crate::params::ParamMatrix;
+use crate::topology::Topology;
+
+/// The in-proc shared-memory backend (see module docs).
+pub struct SharedBackend {
+    mixer: Mixer,
+    rounds: usize,
+    /// Per-round `(scalars, msgs)` of an identity-payload gossip round.
+    round_traffic: Vec<(u64, u64)>,
+    /// Per-round per-node out-degree (compressed-gossip accounting).
+    outdeg: Vec<Vec<u64>>,
+    /// Model-billed times at the emulated `cost_dim`.
+    gossip_sim: f64,
+    gossip_alpha: f64,
+    allreduce_sim: f64,
+    /// Bus-equivalent `(scalars, msgs)` of one global average.
+    allreduce_traffic: (u64, u64),
+    /// Per-node transmit codecs — the single source of truth for whether
+    /// compression is on (`build` makes them all-Some or all-None).
+    compressors: Vec<Option<ErrorFeedback<Box<dyn Codec>>>>,
+    total: CommStats,
+}
+
+impl SharedBackend {
+    pub fn new(
+        topo: &Topology,
+        d: usize,
+        cost: CostModel,
+        cost_dim: usize,
+        compression: Compression,
+    ) -> SharedBackend {
+        let n = topo.n;
+        let rounds = topo.rounds();
+        let round_traffic = (0..rounds).map(|r| gossip_traffic(topo, r, d)).collect();
+        let outdeg = (0..rounds)
+            .map(|r| (0..n).map(|j| topo.out_neighbors(j, r).len() as u64).collect())
+            .collect();
+        let compressors = compression.build(n, d);
+        SharedBackend {
+            mixer: Mixer::new(topo, d),
+            rounds,
+            round_traffic,
+            outdeg,
+            gossip_sim: cost.gossip(topo, cost_dim),
+            gossip_alpha: cost.alpha,
+            allreduce_sim: cost.all_reduce(n, cost_dim),
+            allreduce_traffic: global_average_traffic(n, d),
+            compressors,
+            total: CommStats::default(),
+        }
+    }
+
+    /// The wrapped mixer (test/bench hook).
+    pub fn mixer(&mut self) -> &mut Mixer {
+        &mut self.mixer
+    }
+
+    /// Whether the transmit path compresses (n >= 1 always; `build` makes
+    /// the codecs all-or-nothing).
+    fn compressed(&self) -> bool {
+        self.compressors[0].is_some()
+    }
+}
+
+impl CommBackend for SharedBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Shared
+    }
+
+    fn gossip(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommStats> {
+        let round = self.mixer.gossip_clock % self.rounds;
+        let stats = if self.compressed() {
+            // Compressed transmit path: per-node error-feedback codecs feed
+            // the mixer's transmit hook; wire size is billed per message
+            // (one compression per node, one message per out-neighbor —
+            // exactly what the bus backend ships).
+            let outdeg = &self.outdeg[round];
+            let comps = &mut self.compressors;
+            let mut scalars = 0u64;
+            let mut msgs = 0u64;
+            self.mixer.gossip_with(params, pool, |j, x| {
+                let ef = comps[j].as_mut().expect("compressed backend has per-node codecs");
+                let c = ef.compress(x);
+                let wire = (c.wire_bytes as u64).div_ceil(4);
+                scalars += outdeg[j] * wire;
+                msgs += outdeg[j];
+                c.dense
+            })?;
+            // Bill the theta term at the compressed fraction of the ideal
+            // identity traffic; the latency term is payload-independent.
+            let (ideal_scalars, _) = self.round_traffic[round];
+            let sim = if ideal_scalars == 0 {
+                self.gossip_sim
+            } else {
+                self.gossip_alpha
+                    + (self.gossip_sim - self.gossip_alpha) * scalars as f64
+                        / ideal_scalars as f64
+            };
+            CommStats { scalars_sent: scalars, msgs, sim_seconds: sim }
+        } else {
+            self.mixer.gossip(params, pool)?;
+            let (scalars, msgs) = self.round_traffic[round];
+            CommStats { scalars_sent: scalars, msgs, sim_seconds: self.gossip_sim }
+        };
+        self.total.merge(stats);
+        Ok(stats)
+    }
+
+    fn global_average(
+        &mut self,
+        params: &mut ParamMatrix,
+        pool: &WorkerPool,
+    ) -> Result<CommStats> {
+        self.mixer.global_average(params, pool)?;
+        let (scalars, msgs) = self.allreduce_traffic;
+        let stats = CommStats { scalars_sent: scalars, msgs, sim_seconds: self.allreduce_sim };
+        self.total.merge(stats);
+        Ok(stats)
+    }
+
+    unsafe fn gossip_async(
+        &mut self,
+        params: &ParamMatrix,
+        pool: &WorkerPool,
+    ) -> Result<Option<PendingComm>> {
+        if self.compressed() {
+            // The compressed transmit pass is ordered (error-feedback
+            // state), so it cannot double-buffer; fall back to sync (the
+            // mix pass still shards across the pool).
+            return Ok(None);
+        }
+        let round = self.mixer.gossip_clock % self.rounds;
+        let (scalars, msgs) = self.round_traffic[round];
+        let mix = self.mixer.gossip_async(params, pool)?;
+        Ok(Some(PendingComm {
+            payload: PendingPayload::SharedMix(mix),
+            stats: CommStats { scalars_sent: scalars, msgs, sim_seconds: self.gossip_sim },
+        }))
+    }
+
+    fn finish(&mut self, params: &mut ParamMatrix, pending: PendingComm) -> Result<CommStats> {
+        let stats = pending.stats;
+        let PendingPayload::SharedMix(mix) = pending.payload;
+        self.mixer.finish_gossip(params, mix)?;
+        self.total.merge(stats);
+        Ok(stats)
+    }
+
+    fn gossip_clock(&self) -> usize {
+        self.mixer.gossip_clock
+    }
+
+    fn set_gossip_clock(&mut self, rounds: usize) {
+        self.mixer.gossip_clock = rounds;
+    }
+
+    fn total(&self) -> CommStats {
+        self.total
+    }
+
+    fn restore_total(&mut self, total: CommStats) {
+        self.total = total;
+    }
+
+    fn export_compressor_state(&self) -> Option<ParamMatrix> {
+        export_residuals(&self.compressors, self.mixer.d())
+    }
+
+    fn import_compressor_state(&mut self, state: Option<&ParamMatrix>) -> Result<()> {
+        let d = self.mixer.d();
+        import_residuals(&mut self.compressors, d, state)
+    }
+}

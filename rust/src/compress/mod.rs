@@ -32,6 +32,17 @@ pub trait Codec: Send {
     fn name(&self) -> &'static str;
 }
 
+/// Boxed codecs are codecs too (the comm backends store per-node
+/// `ErrorFeedback<Box<dyn Codec>>` chosen at config time).
+impl<C: Codec + ?Sized> Codec for Box<C> {
+    fn compress(&self, x: &[f32]) -> Compressed {
+        (**self).compress(x)
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
 /// No compression.
 pub struct Identity;
 
@@ -127,6 +138,23 @@ impl<C: Codec> ErrorFeedback<C> {
             *r = c - o;
         }
         out
+    }
+
+    /// The accumulated compression error (checkpointable state — a resumed
+    /// run must re-inject exactly what the interrupted one was carrying).
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    /// Overwrite the residual (checkpoint restore).
+    pub fn set_residual(&mut self, r: &[f32]) {
+        assert_eq!(r.len(), self.residual.len(), "residual length mismatch");
+        self.residual.copy_from_slice(r);
+    }
+
+    /// Zero the residual (fresh-start semantics for pre-v3 checkpoints).
+    pub fn reset_residual(&mut self) {
+        self.residual.fill(0.0);
     }
 
     pub fn name(&self) -> &'static str {

@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::algorithms::AlgorithmKind;
+use crate::comm::{BackendKind, Compression};
 use crate::topology::Topology;
 
 /// A parsed TOML-subset document: dotted-path -> value.
@@ -211,6 +212,15 @@ pub struct ExperimentConfig {
     /// t+1's sampling phase (bit-identical to BSP at every global-averaging
     /// boundary). Off by default.
     pub overlap: bool,
+    /// Communication backend: "shared" (in-proc mixer, default) or "bus"
+    /// (message-passing endpoints with measured traffic).
+    pub backend: String,
+    /// Gossip compression: "none" (default), "topk" or "int8".
+    pub compression: String,
+    /// Fraction of coordinates top-k keeps (when compression = "topk").
+    pub topk_frac: f64,
+    /// Quantization block size (when compression = "int8").
+    pub int8_block: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -238,6 +248,10 @@ impl Default for ExperimentConfig {
             log_every: 50,
             threads: 1,
             overlap: false,
+            backend: "shared".into(),
+            compression: "none".into(),
+            topk_frac: 0.1,
+            int8_block: 1024,
         }
     }
 }
@@ -268,6 +282,10 @@ impl ExperimentConfig {
             log_every: doc.get_usize("train.log_every", d.log_every)?,
             threads: doc.get_usize("train.threads", d.threads)?,
             overlap: doc.get_bool("train.overlap", d.overlap)?,
+            backend: doc.get_str("comm.backend", &d.backend)?,
+            compression: doc.get_str("comm.compression", &d.compression)?,
+            topk_frac: doc.get_f64("comm.topk_frac", d.topk_frac)?,
+            int8_block: doc.get_usize("comm.int8_block", d.int8_block)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -287,11 +305,23 @@ impl ExperimentConfig {
         anyhow::ensure!((0.0..1.0).contains(&self.momentum), "momentum in [0,1)");
         anyhow::ensure!(self.threads >= 1, "threads must be >= 1");
         Topology::from_name(&self.topology, self.nodes)?;
+        self.backend_kind()?;
+        self.compression_kind()?;
         Ok(())
     }
 
     pub fn topology(&self) -> Topology {
         Topology::from_name(&self.topology, self.nodes).expect("validated")
+    }
+
+    /// Parsed communication backend ([`BackendKind`]).
+    pub fn backend_kind(&self) -> Result<BackendKind> {
+        BackendKind::from_name(&self.backend)
+    }
+
+    /// Parsed gossip compression ([`Compression`]).
+    pub fn compression_kind(&self) -> Result<Compression> {
+        Compression::from_parts(&self.compression, self.topk_frac, self.int8_block)
     }
 }
 
@@ -391,6 +421,36 @@ mod tests {
         // default is sequential
         assert_eq!(ExperimentConfig::default().threads, 1);
         let doc = Toml::parse("[train]\nthreads = 0\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn comm_backend_parse_from_toml() {
+        let doc = Toml::parse("[comm]\nbackend = \"bus\"\n").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.backend_kind().unwrap(), BackendKind::Bus);
+        // default is the shared-memory mixer
+        assert_eq!(ExperimentConfig::default().backend_kind().unwrap(), BackendKind::Shared);
+        let doc = Toml::parse("[comm]\nbackend = \"smoke-signals\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn comm_compression_parse_from_toml() {
+        let doc = Toml::parse("[comm]\ncompression = \"topk\"\ntopk_frac = 0.25\n").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.compression_kind().unwrap(), Compression::TopK { frac: 0.25 });
+        let doc = Toml::parse("[comm]\ncompression = \"int8\"\nint8_block = 256\n").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.compression_kind().unwrap(), Compression::Int8 { block: 256 });
+        assert_eq!(
+            ExperimentConfig::default().compression_kind().unwrap(),
+            Compression::None
+        );
+        // Out-of-range knobs are rejected at validate time.
+        let doc = Toml::parse("[comm]\ncompression = \"topk\"\ntopk_frac = 2.0\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+        let doc = Toml::parse("[comm]\ncompression = \"int8\"\nint8_block = 0\n").unwrap();
         assert!(ExperimentConfig::from_toml(&doc).is_err());
     }
 

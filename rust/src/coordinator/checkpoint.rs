@@ -6,21 +6,33 @@
 //! counter, simulated clock, the mixer's gossip clock (one-peer-expo must
 //! resume mid-period, not at round 0), Gossip-AGA's adaptive-period state
 //! (h / counter / F_init), SlowMo's outer buffers (x_prev_sync, slow
-//! momentum u), and each worker's 256-bit RNG state (so batch streams
-//! continue mid-stream). A v2 checkpoint restored into a *fresh* process
-//! replays bit-identically to an unbroken run.
+//! momentum u), each worker's 256-bit RNG state (so batch streams
+//! continue mid-stream), and — since v3 — the CommPlane's cumulative
+//! traffic counters plus any compressed-gossip error-feedback residuals.
+//! A v2+ checkpoint restored into a *fresh* process replays
+//! bit-identically to an unbroken run (v3 for compressed runs).
 //!
-//! Format v2 (little-endian):
+//! Format v3 (little-endian):
 //!   magic "GPGA" | u32 version | u64 step | f64 sim_seconds |
 //!   u32 n | u32 d | n * d f32 params | u8 has_velocity |
 //!   [n * d f32 velocities] | u64 gossip_clock | u8 has_schedule |
 //!   [u64 h | u64 counter | f64 f_init | u8 f_init_ready] |
 //!   u8 has_slowmo | [d f32 prev | d f32 u] |
-//!   u8 has_rng | [n * 4 u64 worker RNG states]
+//!   u8 has_rng | [n * 4 u64 worker RNG states] |
+//!   u8 has_comm | [u64 scalars_sent | u64 msgs | f64 comm_sim_seconds] |
+//!   u8 has_ef | [u8 codec (1 = topk, 2 = int8) | f64 topk_frac |
+//!                u64 int8_block | n * d f32 error-feedback residuals]
 //!
-//! v1 files (which end after the velocity block) still load; the extra
-//! state defaults to "unset" so old checkpoints keep their old meaning
-//! (callers must replay the data streams themselves, as before).
+//! The v3 tail carries the CommPlane's cumulative traffic counters (so a
+//! resumed run's comm_scalars/comm_msgs columns continue rather than
+//! restarting at zero) and the per-node error-feedback residuals of
+//! compressed-gossip runs (so compressed resumes are exact too).
+//!
+//! v1 files (which end after the velocity block) and v2 files (which end
+//! after the RNG block) still load; the extra state defaults to "unset"
+//! so old checkpoints keep their old meaning (for v1, callers must replay
+//! the data streams themselves, as before; for pre-v3, traffic counters
+//! and residuals restart at zero).
 //!
 //! No serde offline — the writer/reader below is the substrate.
 
@@ -30,10 +42,11 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::algorithms::AgaState;
+use crate::comm::{CommStats, Compression};
 use crate::params::ParamMatrix;
 
 const MAGIC: &[u8; 4] = b"GPGA";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
 /// SlowMo outer-loop state (Wang et al. 2019): the parameters at the last
 /// global sync and the slow-momentum buffer.
@@ -61,6 +74,15 @@ pub struct Checkpoint {
     /// Per-worker xoshiro256** states, n entries (empty for v1 files —
     /// those resumes must replay the data streams externally).
     pub rng_states: Vec<[u64; 4]>,
+    /// Cumulative CommPlane traffic at snapshot time (None for pre-v3
+    /// files — counters restart at zero on such resumes).
+    pub comm: Option<CommStats>,
+    /// Per-node error-feedback residuals of a compressed-gossip run,
+    /// n x d (None when compression is off / pre-v3 files).
+    pub ef_residuals: Option<ParamMatrix>,
+    /// The codec that produced `ef_residuals` — restoring into a run with
+    /// a different codec/parameters must be rejected, not silently mixed.
+    pub ef_compression: Option<Compression>,
 }
 
 impl Checkpoint {
@@ -90,6 +112,22 @@ impl Checkpoint {
             self.rng_states.is_empty() || self.rng_states.len() == n,
             "rng state count {} mismatches {n} workers",
             self.rng_states.len()
+        );
+        if let Some(r) = &self.ef_residuals {
+            anyhow::ensure!(
+                r.n() == n && r.d() == d,
+                "residual shape {}x{} mismatches params {}x{}",
+                r.n(),
+                r.d(),
+                n,
+                d
+            );
+        }
+        let has_codec =
+            matches!(self.ef_compression, Some(c) if c != Compression::None);
+        anyhow::ensure!(
+            self.ef_residuals.is_some() == has_codec,
+            "ef_residuals and ef_compression must identify the same codec state"
         );
         let mut f = std::io::BufWriter::new(
             std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
@@ -123,6 +161,24 @@ impl Checkpoint {
             for w in st {
                 f.write_all(&w.to_le_bytes())?;
             }
+        }
+        f.write_all(&[self.comm.is_some() as u8])?;
+        if let Some(c) = &self.comm {
+            f.write_all(&c.scalars_sent.to_le_bytes())?;
+            f.write_all(&c.msgs.to_le_bytes())?;
+            f.write_all(&c.sim_seconds.to_le_bytes())?;
+        }
+        f.write_all(&[self.ef_residuals.is_some() as u8])?;
+        if let Some(r) = &self.ef_residuals {
+            let (codec, frac, block) = match self.ef_compression {
+                Some(Compression::TopK { frac }) => (1u8, frac, 0u64),
+                Some(Compression::Int8 { block }) => (2u8, 0.0, block as u64),
+                _ => unreachable!("validated above"),
+            };
+            f.write_all(&[codec])?;
+            f.write_all(&frac.to_le_bytes())?;
+            f.write_all(&block.to_le_bytes())?;
+            write_f32s(&mut f, r.as_slice())?;
         }
         Ok(())
     }
@@ -186,6 +242,36 @@ impl Checkpoint {
         } else {
             (0, None, None, Vec::new())
         };
+        let (comm, ef_residuals, ef_compression) = if version >= 3 {
+            let comm = if read_u8(&mut f)? == 1 {
+                Some(CommStats {
+                    scalars_sent: read_u64(&mut f)?,
+                    msgs: read_u64(&mut f)?,
+                    sim_seconds: read_f64(&mut f)?,
+                })
+            } else {
+                None
+            };
+            let (ef_residuals, ef_compression) = if read_u8(&mut f)? == 1 {
+                let codec = read_u8(&mut f)?;
+                let frac = read_f64(&mut f)?;
+                let block = read_u64(&mut f)? as usize;
+                let compression = match codec {
+                    1 => Compression::TopK { frac },
+                    2 => Compression::Int8 { block },
+                    other => bail!("unknown checkpoint codec tag {other}"),
+                };
+                (
+                    Some(ParamMatrix::from_flat(n, d, read_f32s(&mut f, n * d)?)),
+                    Some(compression),
+                )
+            } else {
+                (None, None)
+            };
+            (comm, ef_residuals, ef_compression)
+        } else {
+            (None, None, None)
+        };
         Ok(Checkpoint {
             step,
             sim_seconds,
@@ -195,6 +281,9 @@ impl Checkpoint {
             schedule,
             slowmo,
             rng_states,
+            comm,
+            ef_residuals,
+            ef_compression,
         })
     }
 }
@@ -278,6 +367,9 @@ mod tests {
             schedule: None,
             slowmo: None,
             rng_states: Vec::new(),
+            comm: None,
+            ef_residuals: None,
+            ef_compression: None,
         };
         let path = tmp("vel");
         ck.save(&path).unwrap();
@@ -297,6 +389,9 @@ mod tests {
             schedule: None,
             slowmo: None,
             rng_states: Vec::new(),
+            comm: None,
+            ef_residuals: None,
+            ef_compression: None,
         };
         let path = tmp("novel");
         ck.save(&path).unwrap();
@@ -323,6 +418,9 @@ mod tests {
                 u: rng.normal_vec(d, 0.5),
             }),
             rng_states: (0..4u64).map(|i| Rng::new(i).state()).collect(),
+            comm: Some(CommStats { scalars_sent: 123_456, msgs: 789, sim_seconds: 4.2 }),
+            ef_residuals: Some(random_matrix(4, d, 6, 0.01)),
+            ef_compression: Some(Compression::TopK { frac: 0.25 }),
         };
         let path = tmp("stateful");
         ck.save(&path).unwrap();
@@ -354,7 +452,42 @@ mod tests {
         assert_eq!(back.gossip_clock, 0);
         assert!(back.schedule.is_none() && back.slowmo.is_none() && back.velocities.is_none());
         assert!(back.rng_states.is_empty());
+        assert!(back.comm.is_none() && back.ef_residuals.is_none());
+        assert!(back.ef_compression.is_none());
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_residual_shape_mismatch() {
+        let ck = Checkpoint {
+            step: 0,
+            sim_seconds: 0.0,
+            params: ParamMatrix::zeros(2, 3),
+            velocities: None,
+            gossip_clock: 0,
+            schedule: None,
+            slowmo: None,
+            rng_states: Vec::new(),
+            comm: None,
+            ef_residuals: Some(ParamMatrix::zeros(2, 4)),
+            ef_compression: Some(Compression::Int8 { block: 64 }),
+        };
+        assert!(ck.save(&tmp("efmis")).is_err());
+        // Residuals without a codec identity are rejected too.
+        let ck = Checkpoint {
+            step: 0,
+            sim_seconds: 0.0,
+            params: ParamMatrix::zeros(2, 3),
+            velocities: None,
+            gossip_clock: 0,
+            schedule: None,
+            slowmo: None,
+            rng_states: Vec::new(),
+            comm: None,
+            ef_residuals: Some(ParamMatrix::zeros(2, 3)),
+            ef_compression: None,
+        };
+        assert!(ck.save(&tmp("efnocodec")).is_err());
     }
 
     #[test]
@@ -387,6 +520,9 @@ mod tests {
             schedule: None,
             slowmo: None,
             rng_states: Vec::new(),
+            comm: None,
+            ef_residuals: None,
+            ef_compression: None,
         };
         assert!(ck.save(&tmp("velmis")).is_err());
     }
@@ -402,6 +538,9 @@ mod tests {
             schedule: None,
             slowmo: None,
             rng_states: vec![[1, 2, 3, 4]; 2], // 2 states for 3 workers
+            comm: None,
+            ef_residuals: None,
+            ef_compression: None,
         };
         assert!(ck.save(&tmp("rngmis")).is_err());
     }

@@ -48,22 +48,26 @@ pub struct Mixer {
     pub gossip_clock: usize,
 }
 
+/// The per-round f32-quantized weight rows (`rows[round][i] = [(j, w)]`)
+/// that EVERY mixing implementation consumes. One quantization site — the
+/// shared mixer and the message-passing [`crate::comm::BusBackend`] both
+/// build their row tables here, so cross-backend bit-equality is
+/// structural rather than two copies that could drift.
+pub fn weight_rows_f32(topo: &Topology) -> Vec<Vec<Vec<(usize, f32)>>> {
+    (0..topo.rounds())
+        .map(|r| {
+            (0..topo.n)
+                .map(|i| topo.weight_row(i, r).into_iter().map(|(j, w)| (j, w as f32)).collect())
+                .collect()
+        })
+        .collect()
+}
+
 impl Mixer {
     pub fn new(topo: &Topology, d: usize) -> Mixer {
         let n = topo.n;
         let rounds = topo.rounds();
-        let rows = (0..rounds)
-            .map(|r| {
-                (0..n)
-                    .map(|i| {
-                        topo.weight_row(i, r)
-                            .into_iter()
-                            .map(|(j, w)| (j, w as f32))
-                            .collect()
-                    })
-                    .collect()
-            })
-            .collect();
+        let rows = weight_rows_f32(topo);
         Mixer {
             n,
             d,
@@ -219,9 +223,16 @@ impl Mixer {
     /// [`crate::compress`]); the self term always uses the local copy.
     /// `row(i) <- w_ii x_i + sum_{j != i} w_ij transmit(j, x_j)`.
     ///
-    /// Sequential: `transmit` is `FnMut` (codecs carry error-feedback
-    /// state), so the transmit pass is inherently ordered by node index.
-    pub fn gossip_with<F>(&mut self, params: &mut ParamMatrix, mut transmit: F)
+    /// The transmit pass is inherently sequential — `transmit` is `FnMut`
+    /// (codecs carry error-feedback state), ordered by node index. The mix
+    /// pass over the materialized messages shards across `pool` like the
+    /// plain gossip path (bit-identical at any pool size).
+    pub fn gossip_with<F>(
+        &mut self,
+        params: &mut ParamMatrix,
+        pool: &WorkerPool,
+        mut transmit: F,
+    ) -> Result<()>
     where
         F: FnMut(usize, &[f32]) -> Vec<f32>,
     {
@@ -240,16 +251,39 @@ impl Mixer {
         let tx: Vec<Option<Vec<f32>>> = (0..self.n)
             .map(|j| needed[j].then(|| transmit(j, params.row(j))))
             .collect();
-        for (i, out) in self.scratch.rows_mut().enumerate() {
-            out.fill(0.0);
-            for &(j, w) in &self.rows[round][i] {
-                let src: &[f32] =
-                    if j == i { params.row(i) } else { tx[j].as_deref().expect("needed") };
-                axpy(w, src, out);
+        // Same fused kernel as the plain gossip path (and as the bus
+        // backend's receive-side mix), so identity-compressed rounds are
+        // bit-identical to uncompressed ones across every backend.
+        let d = self.d;
+        let rows = &self.rows[round];
+        let src = params.as_slice();
+        let tx = &tx;
+        let t = pool.shards(self.n);
+        if t <= 1 {
+            for (i, out) in self.scratch.rows_mut().enumerate() {
+                mix_row_with(&rows[i], i, src, d, tx, out);
             }
+        } else {
+            let per = (self.n + t - 1) / t;
+            pool.run(
+                self.scratch
+                    .row_blocks_mut(per)
+                    .enumerate()
+                    .map(|(ci, chunk)| {
+                        move || {
+                            for (k, out) in chunk.chunks_mut(d).enumerate() {
+                                let i = ci * per + k;
+                                mix_row_with(&rows[i], i, src, d, tx, out);
+                            }
+                            Ok(())
+                        }
+                    })
+                    .collect(),
+            )?;
         }
         params.swap_data(&mut self.scratch);
         self.gossip_clock += 1;
+        Ok(())
     }
 
     /// Exact global average (the All-Reduce step): every worker gets the
@@ -349,7 +383,45 @@ pub struct PendingMix {
 /// pass. Operating on the flat slice (not `&ParamMatrix`) lets the async
 /// jobs and the scoped jobs share one kernel.
 fn mix_row(row: &[(usize, f32)], src: &[f32], d: usize, out: &mut [f32]) {
-    let srow = |j: usize| &src[j * d..(j + 1) * d];
+    mix_row_src(row, |j| &src[j * d..(j + 1) * d], out)
+}
+
+/// One transmit-transformed output row (the `gossip_with` kernel): self
+/// term from the live matrix, every other term from the materialized
+/// message table. Free function so the pooled jobs can call it without
+/// borrowing the mixer.
+fn mix_row_with(
+    row: &[(usize, f32)],
+    i: usize,
+    src: &[f32],
+    d: usize,
+    tx: &[Option<Vec<f32>>],
+    out: &mut [f32],
+) {
+    mix_row_src(
+        row,
+        |j| {
+            if j == i {
+                &src[i * d..(i + 1) * d]
+            } else {
+                tx[j].as_deref().expect("transmitted above")
+            }
+        },
+        out,
+    )
+}
+
+/// The weighted-row kernel over an arbitrary source lookup: out = sum_j
+/// w_ij * src_of(j), with the 2/3-neighbor fast paths fused into a single
+/// pass. This is THE mixing arithmetic — the in-place mixer, the
+/// compressed transmit path and the message-passing
+/// [`crate::comm::BusBackend`] all call it, which is what makes backends
+/// bit-identical: same terms, same order, same rounding.
+pub fn mix_row_src<'s>(
+    row: &[(usize, f32)],
+    srow: impl Fn(usize) -> &'s [f32],
+    out: &mut [f32],
+) {
     match row.len() {
         0 => out.fill(0.0),
         1 => {
@@ -638,12 +710,28 @@ mod tests {
         let mut m1 = Mixer::new(&topo, 16);
         let mut m2 = Mixer::new(&topo, 16);
         m1.gossip(&mut a, &seq()).unwrap();
-        m2.gossip_with(&mut b, |_j, x| x.to_vec());
+        m2.gossip_with(&mut b, &seq(), |_j, x| x.to_vec()).unwrap();
         for (pa, pb) in a.rows().zip(b.rows()) {
             for (x, y) in pa.iter().zip(pb) {
                 assert!((x - y).abs() < 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn gossip_with_pooled_mix_is_bit_identical_to_sequential() {
+        // The transmit pass is ordered, but the mix pass shards: every
+        // pool size must produce the same bits.
+        let topo = Topology::grid(9);
+        let params = random_params(9, 33, 15);
+        let mut a = params.clone();
+        let mut b = params.clone();
+        let mut m1 = Mixer::new(&topo, 33);
+        let mut m2 = Mixer::new(&topo, 33);
+        let pool = WorkerPool::new(4);
+        m1.gossip_with(&mut a, &seq(), |_j, x| x.to_vec()).unwrap();
+        m2.gossip_with(&mut b, &pool, |_j, x| x.to_vec()).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]
@@ -657,7 +745,7 @@ mod tests {
         let mut m2 = Mixer::new(&topo, 256);
         m1.gossip(&mut plain, &seq()).unwrap();
         let codec = Int8::default();
-        m2.gossip_with(&mut comp, |_j, x| codec.compress(x).dense);
+        m2.gossip_with(&mut comp, &seq(), |_j, x| codec.compress(x).dense).unwrap();
         for (pa, pb) in plain.rows().zip(comp.rows()) {
             for (x, y) in pa.iter().zip(pb) {
                 assert!((x - y).abs() < 0.05, "{x} vs {y}");

@@ -5,10 +5,14 @@
 //!   1. every worker samples a local minibatch and executes the AOT grad
 //!      graph: `(loss, g_i) = grad(x_i, batch_i)`;
 //!   2. local optimizer update `x_i <- x_i - gamma (momentum) g_i`;
-//!   3. the [`Schedule`] decides the communication action:
-//!      gossip mix, exact global average (ring all-reduce), or nothing;
-//!   4. the [`SimClock`] advances by the alpha-beta cost of the action so a
-//!      single-process run reports paper-style wall-clock columns.
+//!   3. the [`Schedule`] decides the communication action — gossip mix,
+//!      exact global average, or nothing — executed on the pluggable
+//!      [`CommBackend`] ([`TrainerOptions::backend`]: the shared-memory
+//!      mixer or the message-passing bus), which reports the [`CommStats`]
+//!      it incurred;
+//!   4. the [`SimClock`] advances by the backend's alpha-beta charge so a
+//!      single-process run reports paper-style wall-clock columns, and the
+//!      cumulative traffic flows into every logged [`Record`].
 //!
 //! Storage: all worker parameters live in one contiguous
 //! [`ParamMatrix`] (worker i = row i). Phases 1-2, the gossip mix, the
@@ -47,6 +51,9 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::algorithms::{schedule_for, AlgorithmKind, CommAction, Schedule, SlowMoParams};
+use crate::comm::{
+    BackendKind, BusBackend, CommBackend, CommStats, Compression, PendingComm, SharedBackend,
+};
 use crate::config::ExperimentConfig;
 use crate::costmodel::{CostModel, SimClock};
 use crate::data::{ClusterData, LogRegData, TokenCorpus};
@@ -139,6 +146,7 @@ struct BatchScratch {
 }
 
 /// Everything the trainer needs beyond the workload.
+#[derive(Clone)]
 pub struct TrainerOptions {
     pub algorithm: AlgorithmKind,
     pub topology: Topology,
@@ -167,6 +175,13 @@ pub struct TrainerOptions {
     /// boundary (and trivially so at every k·H global average); off by
     /// default.
     pub overlap: bool,
+    /// Which communication plane to run on: the shared-memory mixer
+    /// (default) or the message-passing bus. Uncompressed trajectories are
+    /// bit-identical across backends; only the accounting model differs
+    /// (predicted vs measured).
+    pub backend: BackendKind,
+    /// Gossip-message compression on the transmit path (either backend).
+    pub compression: Compression,
 }
 
 impl TrainerOptions {
@@ -191,6 +206,8 @@ impl TrainerOptions {
             log_every: cfg.log_every,
             threads: cfg.threads,
             overlap: cfg.overlap,
+            backend: cfg.backend_kind().expect("validated"),
+            compression: cfg.compression_kind().expect("validated"),
         }
     }
 }
@@ -211,13 +228,15 @@ pub struct Trainer {
     pub workload: Workload,
     opts: TrainerOptions,
     workers: Vec<Worker>,
-    /// In-flight overlap mix, if any. Declared BEFORE `params`/`mixer`: on
-    /// drop its Ticket blocks until the background jobs release their raw
-    /// views of those buffers.
-    pending: Option<mixer::PendingMix>,
+    /// In-flight overlap mix, if any. Declared BEFORE `params`/`backend`:
+    /// on drop its Ticket blocks until the background jobs release their
+    /// raw views of those buffers.
+    pending: Option<PendingComm>,
     /// n x d worker parameters (worker i = row i).
     params: ParamMatrix,
-    mixer: mixer::Mixer,
+    /// The pluggable communication plane (shared-memory mixer or
+    /// message-passing bus; [`TrainerOptions::backend`]).
+    backend: Box<dyn CommBackend>,
     /// The persistent execution engine every parallel phase shards across.
     pool: WorkerPool,
     schedule: Box<dyn Schedule>,
@@ -250,9 +269,27 @@ impl Trainer {
             })
             .collect();
         let params = ParamMatrix::broadcast(n, &init_params);
-        let mixer = mixer::Mixer::new(&opts.topology, d);
-        let pool = WorkerPool::new(opts.threads);
         let schedule = schedule_for(opts.algorithm, opts.period, opts.aga_init_period, opts.aga_warmup)?;
+        let backend: Box<dyn CommBackend> = match opts.backend {
+            BackendKind::Shared => Box::new(SharedBackend::new(
+                &opts.topology,
+                d,
+                opts.cost,
+                opts.cost_dim,
+                opts.compression,
+            )),
+            // The schedule itself says whether it can ever global-average
+            // (pure-gossip schedules skip the all-to-all edge setup).
+            BackendKind::Bus => Box::new(BusBackend::new(
+                &opts.topology,
+                d,
+                opts.cost,
+                opts.cost_dim,
+                opts.compression,
+                schedule.uses_global_average(),
+            )),
+        };
+        let pool = WorkerPool::new(opts.threads);
         let slowmo_prev = if opts.algorithm == AlgorithmKind::SlowMo { init_params } else { Vec::new() };
         let slowmo_u = if opts.algorithm == AlgorithmKind::SlowMo { vec![0.0; d] } else { Vec::new() };
         Ok(Trainer {
@@ -261,7 +298,7 @@ impl Trainer {
             workers,
             pending: None,
             params,
-            mixer,
+            backend,
             pool,
             schedule,
             clock: SimClock::default(),
@@ -312,16 +349,29 @@ impl Trainer {
         self.schedule.current_period()
     }
 
-    /// The mixer's gossip-round clock (drives time-varying topologies;
+    /// The backend's gossip-round clock (drives time-varying topologies;
     /// checkpointed).
     pub fn gossip_clock(&self) -> usize {
-        self.mixer.gossip_clock
+        self.backend.gossip_clock()
     }
 
     /// Overwrite the gossip clock (resume plumbing / test hook; normal
     /// restores go through [`Trainer::restore`]).
     pub fn set_gossip_clock(&mut self, rounds: usize) {
-        self.mixer.gossip_clock = rounds;
+        self.backend.set_gossip_clock(rounds);
+    }
+
+    /// Which communication backend this trainer runs on.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.kind()
+    }
+
+    /// Cumulative measured communication (wire scalars, messages,
+    /// alpha-beta seconds) over all completed actions — the same
+    /// accounting on either backend. Overlap note: an in-flight async
+    /// round is counted once drained.
+    pub fn comm_stats(&self) -> CommStats {
+        self.backend.total()
     }
 
     /// Complete the in-flight overlap mix, if any. After this the visible
@@ -329,7 +379,7 @@ impl Trainer {
     /// when nothing is pending (always, in BSP mode).
     pub fn drain(&mut self) -> Result<()> {
         if let Some(pending) = self.pending.take() {
-            self.mixer.finish_gossip(&mut self.params, pending)?;
+            self.backend.finish(&mut self.params, pending)?;
         }
         Ok(())
     }
@@ -355,40 +405,47 @@ impl Trainer {
         let mean_loss = self.mean_loss();
         // 3: communication action (the pool caps its own shard counts —
         // gossip at n rows, the global-average mean at d columns; one
-        // policy, `WorkerPool::shards`).
+        // policy, `WorkerPool::shards`). Every action reports the
+        // CommStats it incurred; the backend accumulates the run total.
         let action = self.schedule.action(k, mean_loss);
-        match action {
-            CommAction::None => {}
+        let stats = match action {
+            CommAction::None => CommStats::default(),
             CommAction::Gossip => {
+                let mut issued = None;
                 if self.opts.overlap {
                     // SAFETY: until drain() completes this round, the
                     // trainer never takes &mut to params (accessors are
                     // read-only, every mutating path drains first), never
-                    // drops the mixer before the pending mix (field order),
-                    // and never leaks the PendingMix.
-                    let pending = unsafe { self.mixer.gossip_async(&self.params, &self.pool) }?;
-                    self.pending = Some(pending);
-                } else {
-                    self.mixer.gossip(&mut self.params, &self.pool)?;
+                    // drops the backend before the pending mix (field
+                    // order), and never leaks the PendingComm.
+                    issued = unsafe { self.backend.gossip_async(&self.params, &self.pool) }?;
+                }
+                match issued {
+                    Some(pending) => {
+                        // Clock charges at issue time — the round WILL
+                        // complete (or the run fails), same as BSP billing.
+                        let s = pending.stats();
+                        self.pending = Some(pending);
+                        s
+                    }
+                    // Backend without async support (bus, or compressed
+                    // transmit): the schedule falls back to the
+                    // synchronous round, bit-identical either way.
+                    None => self.backend.gossip(&mut self.params, &self.pool)?,
                 }
             }
             CommAction::GlobalAverage => {
-                self.mixer.global_average(&mut self.params, &self.pool)?;
+                let s = self.backend.global_average(&mut self.params, &self.pool)?;
                 if self.opts.algorithm == AlgorithmKind::SlowMo {
                     self.slowmo_outer_update(lr);
                 }
+                s
             }
-        }
-        // 4: simulated clock.
-        let dt = self.opts.cost.compute
-            + match action {
-                CommAction::None => 0.0,
-                CommAction::Gossip => self.opts.cost.gossip(&self.opts.topology, self.opts.cost_dim),
-                CommAction::GlobalAverage => {
-                    self.opts.cost.all_reduce(self.opts.topology.n, self.opts.cost_dim)
-                }
-            };
-        self.clock.advance(dt);
+        };
+        // 4: simulated clock — compute plus whatever the backend billed
+        // for the action (the shared backend bills the paper's alpha-beta
+        // formulas, so this is the exact pre-CommPlane clock).
+        self.clock.advance(self.opts.cost.compute + stats.sim_seconds);
         self.step += 1;
         Ok(action)
     }
@@ -522,8 +579,9 @@ impl Trainer {
     }
 
     /// Snapshot the full training state (see [`checkpoint`]): parameters,
-    /// velocities, counters, the gossip clock, adaptive-schedule state and
-    /// SlowMo outer buffers. DRAINS the in-flight overlap mix first — the
+    /// velocities, counters, the gossip clock, adaptive-schedule state,
+    /// SlowMo outer buffers, the backend's cumulative traffic counters and
+    /// any compressor residuals. DRAINS the in-flight overlap mix first — the
     /// snapshot must be a BSP step boundary, never a half-mixed state.
     /// Errors if only a strict subset of workers has velocity state (a
     /// partial snapshot could not resume exactly).
@@ -554,15 +612,20 @@ impl Trainer {
         let slowmo = (self.opts.algorithm == AlgorithmKind::SlowMo).then(|| {
             checkpoint::SlowMoState { prev: self.slowmo_prev.clone(), u: self.slowmo_u.clone() }
         });
+        let ef_residuals = self.backend.export_compressor_state();
+        let ef_compression = ef_residuals.as_ref().map(|_| self.opts.compression);
         Ok(checkpoint::Checkpoint {
             step: self.step as u64,
             sim_seconds: self.clock.seconds,
             params: self.params.clone(),
             velocities,
-            gossip_clock: self.mixer.gossip_clock as u64,
+            gossip_clock: self.backend.gossip_clock() as u64,
             schedule: self.schedule.export_state(),
             slowmo,
             rng_states: self.workers.iter().map(|w| w.rng.state()).collect(),
+            comm: Some(self.backend.total()),
+            ef_residuals,
+            ef_compression,
         })
     }
 
@@ -605,7 +668,23 @@ impl Trainer {
                 }
             }
         }
-        self.mixer.gossip_clock = ck.gossip_clock as usize;
+        self.backend.set_gossip_clock(ck.gossip_clock as usize);
+        // Traffic counters continue from the snapshot (pre-v3 files carry
+        // none — counters restart at zero, documented in `checkpoint`).
+        self.backend.restore_total(ck.comm.unwrap_or_default());
+        // Compressed runs: re-inject the exact error-feedback residuals the
+        // interrupted run was carrying (None zeroes them). The codec that
+        // produced them must match this run's — residuals are meaningless
+        // under a different compression scheme.
+        if let Some(c) = ck.ef_compression {
+            anyhow::ensure!(
+                c == self.opts.compression,
+                "checkpoint residuals were written by {:?} compression, this run uses {:?}",
+                c,
+                self.opts.compression
+            );
+        }
+        self.backend.import_compressor_state(ck.ef_residuals.as_ref())?;
         match &ck.schedule {
             Some(st) => self.schedule.import_state(st),
             None => {
@@ -678,12 +757,15 @@ impl Trainer {
                 self.drain()?;
                 let loss =
                     if cheap_eval { self.global_loss()? } else { self.mean_loss() };
+                let comm = self.backend.total();
                 hist.push(Record {
                     step: self.step - 1,
                     loss,
                     consensus: self.consensus(),
                     lr: self.opts.lr.at(self.step - 1),
                     sim_seconds: self.clock.seconds,
+                    comm_scalars: comm.scalars_sent,
+                    comm_msgs: comm.msgs,
                 });
             }
         }

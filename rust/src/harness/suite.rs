@@ -7,6 +7,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::algorithms::AlgorithmKind;
+use crate::comm::{BackendKind, Compression};
 use crate::coordinator::{
     lm_eval_loss, lm_workload, logreg_workload, mlp_eval_accuracy, mlp_workload, Trainer,
     TrainerOptions,
@@ -48,6 +49,8 @@ pub struct RunSpec {
     pub threads: usize,
     /// Double-buffered async gossip (see `TrainerOptions::overlap`).
     pub overlap: bool,
+    /// Communication plane (see `TrainerOptions::backend`).
+    pub backend: BackendKind,
 }
 
 impl RunSpec {
@@ -70,6 +73,7 @@ impl RunSpec {
             aga_warmup: 50,
             threads: 1,
             overlap: false,
+            backend: BackendKind::Shared,
         }
     }
 
@@ -96,6 +100,7 @@ impl RunSpec {
             aga_warmup: steps / 20,
             threads: 1,
             overlap: false,
+            backend: BackendKind::Shared,
         }
     }
 
@@ -117,6 +122,7 @@ impl RunSpec {
             aga_warmup: steps / 20,
             threads: 1,
             overlap: false,
+            backend: BackendKind::Shared,
         }
     }
 
@@ -137,6 +143,8 @@ impl RunSpec {
             log_every: self.log_every,
             threads: self.threads,
             overlap: self.overlap,
+            backend: self.backend,
+            compression: Compression::None,
         }
     }
 

@@ -150,6 +150,12 @@ pub fn num_arr(v: &[f64]) -> Json {
     Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
 }
 
+/// Counter arrays (traffic accounting). Exact for values < 2^53 — far
+/// beyond any run's scalar counts; dumped as integers.
+pub fn u64_arr(v: &[u64]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,

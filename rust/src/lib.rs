@@ -21,8 +21,9 @@
 //! * [`jsonio`] — JSON parser/writer (artifact manifest, metrics dumps).
 //! * [`config`] — TOML-subset experiment config system.
 //! * [`topology`] — graphs, doubly-stochastic gossip matrices, beta.
-//! * [`collective`] — in-proc message bus, neighbor exchange, ring
-//!   all-reduce (reduce-scatter + all-gather), byte/latency accounting.
+//! * [`collective`] — in-proc message bus (sparse, topology-sized sender
+//!   tables), neighbor exchange, ring all-reduce (reduce-scatter +
+//!   all-gather), byte/latency accounting.
 //! * [`costmodel`] — the paper's alpha-beta communication time model (§3.4,
 //!   App. D/H).
 //! * [`harness`] — timing/stats/table printing for the bench suite.
@@ -39,6 +40,10 @@
 //!   classification, token corpus) + iid/non-iid sharding.
 //! * [`optim`] — SGD / momentum / Nesterov + LR schedules.
 //! * [`algorithms`] — the paper's communication schedules.
+//! * [`comm`] — the unified CommPlane: one pluggable [`comm::CommBackend`]
+//!   (shared-memory mixer or message-passing bus) behind every training
+//!   run, with end-to-end [`comm::CommStats`] traffic accounting; select
+//!   with `comm.backend` / `--backend {shared,bus}`.
 //! * [`exec`] — the persistent execution engine: one parked
 //!   [`exec::WorkerPool`] per trainer that phases 1-2, the gossip mix and
 //!   the eval pass shard across, plus the async job tickets behind
@@ -52,6 +57,7 @@
 
 pub mod algorithms;
 pub mod collective;
+pub mod comm;
 pub mod compress;
 pub mod config;
 pub mod coordinator;

@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   train [--config exp.toml] [--set key=value ...] [--threads N]
-//!         [--overlap]                                 run one experiment
+//!         [--overlap] [--backend shared|bus]          run one experiment
 //!   topo  [--n N]                                     topology/beta report
 //!   check                                             verify artifacts load
 //!
@@ -45,7 +45,7 @@ fn print_help() {
          \n\
          USAGE:\n\
            gossip-pga train [--config exp.toml] [--set key=value ...] [--threads N]\n\
-                            [--overlap]\n\
+                            [--overlap] [--backend shared|bus]\n\
            gossip-pga topo [--n N]\n\
            gossip-pga check\n\
          \n\
@@ -55,7 +55,9 @@ fn print_help() {
            model.name (logreg|mlp|transformer), model.tag (tiny|e2e)\n\
            train.steps, train.lr, train.momentum, train.seed, data.non_iid\n\
            train.threads (worker-pool size; --threads N is shorthand)\n\
-           train.overlap (double-buffered async gossip; --overlap is shorthand)"
+           train.overlap (double-buffered async gossip; --overlap is shorthand)\n\
+           comm.backend (shared|bus; --backend is shorthand)\n\
+           comm.compression (none|topk|int8), comm.topk_frac, comm.int8_block"
     );
 }
 
@@ -124,13 +126,18 @@ fn cmd_train(args: &[String]) -> Result<()> {
                     .with_context(|| format!("--overlap wants a bool, got '{val}'"))?;
                 doc.values.extend(parsed.values);
             }
+            "backend" => {
+                let parsed = Toml::parse(&format!("comm.backend = \"{val}\""))
+                    .with_context(|| format!("--backend wants shared|bus, got '{val}'"))?;
+                doc.values.extend(parsed.values);
+            }
             other => bail!("unknown flag --{other}"),
         }
     }
     let cfg = ExperimentConfig::from_toml(&doc).context("building experiment config")?;
     let topo = cfg.topology();
     println!(
-        "# {} | {} nodes on {} (beta = {:.4}) | H = {} | {} steps | {} thread(s){}",
+        "# {} | {} nodes on {} (beta = {:.4}) | H = {} | {} steps | {} thread(s){} | {} backend{}",
         cfg.algorithm.display(),
         cfg.nodes,
         cfg.topology,
@@ -138,7 +145,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
         cfg.period,
         cfg.steps,
         cfg.threads,
-        if cfg.overlap { " | overlap" } else { "" }
+        if cfg.overlap { " | overlap" } else { "" },
+        cfg.backend,
+        if cfg.compression == "none" {
+            String::new()
+        } else {
+            format!(" | {} compression", cfg.compression)
+        }
     );
 
     let rt = Arc::new(Runtime::load_default().context("loading artifacts (run `make artifacts`)")?);
@@ -169,6 +182,15 @@ fn cmd_train(args: &[String]) -> Result<()> {
         hist.final_sim_hours(),
         wall,
         trainer.current_period()
+    );
+    let comm = trainer.comm_stats();
+    println!(
+        "# traffic ({} backend): {} msgs | {} scalars ({:.2} MB) | {:.1}s comm sim time",
+        trainer.backend_kind().name(),
+        comm.msgs,
+        comm.scalars_sent,
+        comm.bytes_sent() as f64 / 1e6,
+        comm.sim_seconds
     );
     if let Some(acc) = coordinator::mlp_eval_accuracy(&trainer)? {
         println!("# eval accuracy: {:.2}%", acc * 100.0);

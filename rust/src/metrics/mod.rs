@@ -23,6 +23,11 @@ pub struct Record {
     pub lr: f64,
     /// Simulated wall-clock (cost-model) seconds since start.
     pub sim_seconds: f64,
+    /// Cumulative wire scalars (f32-equivalents) the run's communication
+    /// backend has moved up to this step (see [`crate::comm::CommStats`]).
+    pub comm_scalars: u64,
+    /// Cumulative message count over the same accounting.
+    pub comm_msgs: u64,
 }
 
 /// A training history for one run.
@@ -60,11 +65,12 @@ impl History {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut out = String::from("step,loss,consensus,lr,sim_seconds\n");
+        let mut out =
+            String::from("step,loss,consensus,lr,sim_seconds,comm_scalars,comm_msgs\n");
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{},{}\n",
-                r.step, r.loss, r.consensus, r.lr, r.sim_seconds
+                "{},{},{},{},{},{},{}\n",
+                r.step, r.loss, r.consensus, r.lr, r.sim_seconds, r.comm_scalars, r.comm_msgs
             ));
         }
         out
@@ -82,6 +88,14 @@ impl History {
             (
                 "sim_seconds",
                 jsonio::num_arr(&self.records.iter().map(|r| r.sim_seconds).collect::<Vec<_>>()),
+            ),
+            (
+                "comm_scalars",
+                jsonio::u64_arr(&self.records.iter().map(|r| r.comm_scalars).collect::<Vec<_>>()),
+            ),
+            (
+                "comm_msgs",
+                jsonio::u64_arr(&self.records.iter().map(|r| r.comm_msgs).collect::<Vec<_>>()),
             ),
         ])
     }
@@ -368,6 +382,8 @@ mod tests {
                 consensus: 0.0,
                 lr: 0.1,
                 sim_seconds: i as f64,
+                comm_scalars: 100 * i as u64,
+                comm_msgs: 2 * i as u64,
             });
         }
         assert_eq!(h.first_step_below(0.35).unwrap().step, 2);
@@ -375,7 +391,11 @@ mod tests {
         let csv = h.to_csv();
         assert_eq!(csv.lines().count(), 6);
         assert!(csv.starts_with("step,loss"));
+        assert!(csv.lines().next().unwrap().ends_with("comm_scalars,comm_msgs"));
+        assert!(csv.lines().nth(3).unwrap().ends_with(",200,4"));
         let j = h.to_json().dump();
         assert!(j.contains("\"label\":\"test\""));
+        assert!(j.contains("\"comm_scalars\":[0,100,200,300,400]"));
+        assert!(j.contains("\"comm_msgs\":[0,2,4,6,8]"));
     }
 }

@@ -259,6 +259,35 @@ impl Topology {
         spectral_norm(&prod, 0xBEEF).powf(1.0 / rounds as f64).min(1.0 - 1e-12)
     }
 
+    /// Out-neighbors of node `i` at `round`, **excluding** self: the nodes
+    /// that list `i` among their in-neighbors, i.e. the destinations `i`
+    /// must transmit to on a real message-passing link. For the undirected
+    /// static kinds this is just the (symmetric) neighbor set; for the
+    /// directed one-peer exponential graph it is the single inverse-hop
+    /// peer `(i - 2^r) mod n`. Sorted ascending, deduplicated.
+    pub fn out_neighbors(&self, i: usize, round: usize) -> Vec<usize> {
+        match self.kind {
+            TopologyKind::OnePeerExponential => {
+                if self.n == 1 {
+                    return vec![];
+                }
+                let hop = (1usize << (round % self.rounds())) % self.n;
+                let peer = (i + self.n - hop) % self.n;
+                if peer == i {
+                    vec![]
+                } else {
+                    vec![peer]
+                }
+            }
+            _ => {
+                let mut v = self.static_neighbors(i);
+                v.sort_unstable();
+                v.dedup();
+                v
+            }
+        }
+    }
+
     /// Max in-neighborhood size incl. self (the paper's |N_i| in §3.4).
     pub fn max_degree_incl_self(&self) -> usize {
         (0..self.rounds())
@@ -414,6 +443,50 @@ mod tests {
             assert!(Topology::from_name(name, 8).is_ok(), "{name}");
         }
         assert!(Topology::from_name("mesh", 8).is_err());
+    }
+
+    #[test]
+    fn out_neighbors_invert_in_neighbors() {
+        // j in out(i, r)  <=>  i in in(j, r) \ {j}: the transmit sets the
+        // bus backend derives must be exactly the inverse of the listen
+        // sets the weight rows consume, on every kind and round.
+        for t in [
+            Topology::ring(9),
+            Topology::grid(12),
+            Topology::hypercube(8),
+            Topology::star(7),
+            Topology::full(6),
+            Topology::static_expo(10),
+            Topology::one_peer_expo(12),
+            Topology::one_peer_expo(8),
+        ] {
+            for r in 0..t.rounds() {
+                for i in 0..t.n {
+                    for j in 0..t.n {
+                        let sends = t.out_neighbors(i, r).contains(&j);
+                        let listens = j != i && t.in_neighbors(j, r).contains(&i);
+                        assert_eq!(
+                            sends, listens,
+                            "{:?} n={} round {r}: edge {i}->{j}",
+                            t.kind, t.n
+                        );
+                    }
+                    assert!(
+                        !t.out_neighbors(i, r).contains(&i),
+                        "{:?} round {r}: self in out({i})",
+                        t.kind
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_peer_out_neighbor_is_inverse_hop() {
+        let t = Topology::one_peer_expo(8);
+        // Round 1: hop = 2; node 5 listens to 7, so node 7 transmits to 5.
+        assert_eq!(t.in_neighbors(5, 1), vec![5, 7]);
+        assert_eq!(t.out_neighbors(7, 1), vec![5]);
     }
 
     #[test]

@@ -1,0 +1,543 @@
+//! Backend-equivalence property suite for the unified CommPlane
+//! (`rust/src/comm/`).
+//!
+//! Contract under test: for all six algorithms' schedules on
+//! ring / grid / one-peer-exponential, the message-passing `BusBackend`
+//! and the shared-memory `SharedBackend` produce
+//!
+//! * **bit-identical** `ParamMatrix` trajectories with no compression
+//!   (same `mix_row_src` kernel, same weight rows, same fixed-order mean),
+//! * trajectories within 1e-6 with TopK / Int8 compression (in practice
+//!   also bit-identical: per-node error-feedback codecs run the same ops),
+//! * **identical `CommStats`** (scalars, messages), which also match the
+//!   analytic counts the tab17 bench derives for the same schedule —
+//!   measured-at-the-endpoints == predicted-from-the-topology.
+//!
+//! The schedule-level tests drive the backends directly with deterministic
+//! pseudo-gradient perturbations, so they need no AOT artifacts; the
+//! trainer-level test at the bottom needs `make artifacts` like the other
+//! integration suites.
+
+use std::sync::Arc;
+
+use gossip_pga::algorithms::{schedule_for, AlgorithmKind, CommAction};
+use gossip_pga::comm::{
+    schedule_traffic, BackendKind, BusBackend, CommBackend, CommStats, Compression, SharedBackend,
+};
+use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
+use gossip_pga::costmodel::CostModel;
+use gossip_pga::exec::WorkerPool;
+use gossip_pga::metrics::consensus_distance;
+use gossip_pga::optim::LrSchedule;
+use gossip_pga::params::ParamMatrix;
+use gossip_pga::rng::Rng;
+use gossip_pga::runtime::Runtime;
+use gossip_pga::topology::Topology;
+
+const ALL_KINDS: [AlgorithmKind; 6] = [
+    AlgorithmKind::Parallel,
+    AlgorithmKind::Gossip,
+    AlgorithmKind::Local,
+    AlgorithmKind::GossipPga,
+    AlgorithmKind::GossipAga,
+    AlgorithmKind::SlowMo,
+];
+
+fn backend_for(
+    kind: BackendKind,
+    topo: &Topology,
+    d: usize,
+    compression: Compression,
+    algo: AlgorithmKind,
+) -> Box<dyn CommBackend> {
+    let cost = CostModel::calibrated_resnet50();
+    match kind {
+        BackendKind::Shared => Box::new(SharedBackend::new(topo, d, cost, d, compression)),
+        BackendKind::Bus => Box::new(BusBackend::new(
+            topo,
+            d,
+            cost,
+            d,
+            compression,
+            algo != AlgorithmKind::Gossip,
+        )),
+    }
+}
+
+/// Deterministic stand-in for the local-update phase: the same per-step
+/// pseudo-gradient is applied on every backend's copy, so any divergence
+/// comes from the communication plane alone.
+fn perturb(params: &mut ParamMatrix, step: usize) {
+    let mut rng = Rng::new(0xFEED ^ (step as u64).wrapping_mul(0x9E37_79B9));
+    let noise = rng.normal_vec(params.n() * params.d(), 0.05);
+    for (p, g) in params.as_mut_slice().iter_mut().zip(&noise) {
+        *p -= g;
+    }
+}
+
+/// One schedule-replay scenario (shared across the equivalence tests).
+struct Replay {
+    algo: AlgorithmKind,
+    topo: Topology,
+    d: usize,
+    steps: usize,
+    h: usize,
+    threads: usize,
+    compression: Compression,
+}
+
+impl Replay {
+    /// Replay the schedule on one backend; returns the final matrix, the
+    /// per-step actions and the backend's cumulative stats.
+    fn run(&self, kind: BackendKind) -> (ParamMatrix, Vec<CommAction>, CommStats) {
+        let pool = WorkerPool::new(self.threads);
+        let mut params = ParamMatrix::random(&mut Rng::new(31), self.topo.n, self.d, 1.0);
+        let mut backend = backend_for(kind, &self.topo, self.d, self.compression, self.algo);
+        let mut schedule = schedule_for(self.algo, self.h, 2, 4).unwrap();
+        let mut actions = Vec::new();
+        for k in 0..self.steps {
+            perturb(&mut params, k);
+            // Deterministic loss stream keeps AGA's adaptive period
+            // identical across backends.
+            let action = schedule.action(k, 1.0 / (k as f64 + 1.0));
+            match action {
+                CommAction::Gossip => {
+                    backend.gossip(&mut params, &pool).unwrap();
+                }
+                CommAction::GlobalAverage => {
+                    backend.global_average(&mut params, &pool).unwrap();
+                }
+                CommAction::None => {}
+            }
+            actions.push(action);
+        }
+        (params, actions, backend.total())
+    }
+}
+
+#[test]
+fn bus_matches_shared_bit_for_bit_all_algorithms_all_topologies() {
+    // The acceptance property: six algorithms x {ring, grid,
+    // one-peer-expo} x pool sizes {1, 3} — identical trajectories
+    // (bit-for-bit, uncompressed) and identical measured-vs-predicted
+    // traffic, which also equals the analytic schedule counts.
+    let d = 13;
+    let steps = 12;
+    let h = 3;
+    for mk in [
+        Topology::ring as fn(usize) -> Topology,
+        Topology::grid,
+        Topology::one_peer_expo,
+    ] {
+        for algo in ALL_KINDS {
+            for threads in [1usize, 3] {
+                let topo = mk(5);
+                let label = format!("{:?}/{:?}/t={threads}", algo, topo.kind);
+                let spec = Replay {
+                    algo,
+                    topo: topo.clone(),
+                    d,
+                    steps,
+                    h,
+                    threads,
+                    compression: Compression::None,
+                };
+                let (p_shared, a_shared, s_shared) = spec.run(BackendKind::Shared);
+                let (p_bus, a_bus, s_bus) = spec.run(BackendKind::Bus);
+                assert_eq!(a_shared, a_bus, "{label}: schedules diverged");
+                assert_eq!(p_shared, p_bus, "{label}: trajectories diverged");
+                assert_eq!(
+                    (s_shared.scalars_sent, s_shared.msgs),
+                    (s_bus.scalars_sent, s_bus.msgs),
+                    "{label}: traffic accounting diverged"
+                );
+                let expect = schedule_traffic(&topo, d, &a_shared);
+                assert_eq!(
+                    (s_bus.scalars_sent, s_bus.msgs),
+                    expect,
+                    "{label}: measured traffic != analytic schedule counts"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bus_matches_shared_on_non_power_of_two_and_d_smaller_than_n() {
+    // Chunked global average with empty chunks (d < n) and odd sizes.
+    for (n, d) in [(5usize, 3usize), (7, 1), (6, 64), (2, 2)] {
+        let topo = Topology::ring(n);
+        let spec = Replay {
+            algo: AlgorithmKind::GossipPga,
+            topo: topo.clone(),
+            d,
+            steps: 10,
+            h: 2,
+            threads: 2,
+            compression: Compression::None,
+        };
+        let (p_shared, actions, s_shared) = spec.run(BackendKind::Shared);
+        let (p_bus, _, s_bus) = spec.run(BackendKind::Bus);
+        assert_eq!(p_shared, p_bus, "n={n} d={d}");
+        assert_eq!(s_shared.scalars_sent, s_bus.scalars_sent, "n={n} d={d}");
+        assert_eq!(s_shared.msgs, s_bus.msgs, "n={n} d={d}");
+        assert_eq!(
+            (s_bus.scalars_sent, s_bus.msgs),
+            schedule_traffic(&topo, d, &actions),
+            "n={n} d={d}"
+        );
+    }
+}
+
+#[test]
+fn single_node_degenerates_cleanly_on_both_backends() {
+    for kind in [BackendKind::Shared, BackendKind::Bus] {
+        let spec = Replay {
+            algo: AlgorithmKind::GossipPga,
+            topo: Topology::ring(1),
+            d: 6,
+            steps: 8,
+            h: 2,
+            threads: 1,
+            compression: Compression::None,
+        };
+        let (p, _, stats) = spec.run(kind);
+        assert_eq!(p.n(), 1);
+        assert_eq!(stats.scalars_sent, 0, "{kind:?}: a lone node sends nothing");
+        assert_eq!(stats.msgs, 0, "{kind:?}");
+    }
+}
+
+#[test]
+fn compressed_gossip_stays_within_1e6_across_backends() {
+    // TopK and Int8 transmit paths: per-node error-feedback codecs run the
+    // same operations on both planes, so the trajectories agree far inside
+    // the 1e-6 acceptance band (and the wire accounting agrees exactly).
+    let d = 64;
+    let steps = 10;
+    for compression in
+        [Compression::TopK { frac: 0.25 }, Compression::Int8 { block: 16 }]
+    {
+        for mk in [Topology::ring as fn(usize) -> Topology, Topology::one_peer_expo] {
+            let topo = mk(4);
+            let label = format!("{:?}/{:?}", compression, topo.kind);
+            let spec = Replay {
+                algo: AlgorithmKind::GossipPga,
+                topo: topo.clone(),
+                d,
+                steps,
+                h: 3,
+                threads: 2,
+                compression,
+            };
+            let (p_shared, _, s_shared) = spec.run(BackendKind::Shared);
+            let (p_bus, _, s_bus) = spec.run(BackendKind::Bus);
+            for (a, b) in p_shared.as_slice().iter().zip(p_bus.as_slice()) {
+                assert!((a - b).abs() <= 1e-6, "{label}: {a} vs {b}");
+            }
+            let gap = (consensus_distance(&p_shared) - consensus_distance(&p_bus)).abs();
+            assert!(gap <= 1e-6, "{label}: consensus gap {gap}");
+            assert_eq!(
+                (s_shared.scalars_sent, s_shared.msgs),
+                (s_bus.scalars_sent, s_bus.msgs),
+                "{label}: compressed wire accounting diverged"
+            );
+            // Compression must actually compress relative to identity.
+            let (identity_scalars, _) = schedule_traffic(
+                &topo,
+                d,
+                &(0..steps)
+                    .map(|k| {
+                        if (k + 1) % 3 == 0 {
+                            CommAction::GlobalAverage
+                        } else {
+                            CommAction::Gossip
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            );
+            assert!(
+                s_bus.scalars_sent < identity_scalars,
+                "{label}: {} !< {identity_scalars}",
+                s_bus.scalars_sent
+            );
+        }
+    }
+}
+
+#[test]
+fn pure_gossip_bus_needs_no_allreduce_edges_and_global_average_errors() {
+    // The sparse-setup satellite: a gossip-only bus is built without the
+    // all-to-all chunk-exchange edges; asking it to global-average is a
+    // clean Err, not a hang.
+    let topo = Topology::ring(6);
+    let mut backend = BusBackend::new(
+        &topo,
+        8,
+        CostModel::calibrated_resnet50(),
+        8,
+        Compression::None,
+        false,
+    );
+    let pool = WorkerPool::new(2);
+    let mut params = ParamMatrix::random(&mut Rng::new(3), 6, 8, 1.0);
+    backend.gossip(&mut params, &pool).unwrap();
+    let err = backend.global_average(&mut params, &pool).unwrap_err().to_string();
+    assert!(err.contains("without all-reduce edges"), "{err}");
+}
+
+#[test]
+fn bus_time_charge_is_per_message() {
+    // One ring gossip round: busiest node sends 2 messages of d scalars =>
+    // sim = 2 alpha + 2 d theta (cost_dim == d, so no scaling).
+    let topo = Topology::ring(6);
+    let d = 100;
+    let cost = CostModel::generic();
+    let mut backend = BusBackend::new(&topo, d, cost, d, Compression::None, true);
+    let pool = WorkerPool::new(1);
+    let mut params = ParamMatrix::random(&mut Rng::new(5), 6, d, 1.0);
+    let stats = backend.gossip(&mut params, &pool).unwrap();
+    let expect = 2.0 * cost.alpha + 2.0 * d as f64 * cost.theta;
+    assert!(
+        (stats.sim_seconds - expect).abs() < 1e-12,
+        "{} vs {expect}",
+        stats.sim_seconds
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Trainer-level equivalence (needs the AOT artifacts, like the integration
+// tests): the full training loop — PJRT gradients, optimizer, schedule —
+// produces identical runs on either backend, and the trainer's reported
+// CommStats match the analytic schedule counts.
+// ---------------------------------------------------------------------------
+
+fn trainer_with_backend(
+    rt: &Arc<Runtime>,
+    algo: AlgorithmKind,
+    backend: BackendKind,
+    threads: usize,
+) -> Trainer {
+    let n = 4;
+    let (workload, init) = logreg_workload(rt.clone(), n, 256, true, 17).unwrap();
+    let opts = TrainerOptions {
+        algorithm: algo,
+        topology: Topology::ring(n),
+        period: 4,
+        aga_init_period: 2,
+        aga_warmup: 4,
+        lr: LrSchedule::Const { lr: 0.2 },
+        momentum: 0.9,
+        nesterov: true,
+        seed: 17,
+        slowmo: Default::default(),
+        cost: CostModel::calibrated_resnet50(),
+        cost_dim: 25_500_000,
+        log_every: 5,
+        threads,
+        overlap: false,
+        backend,
+        compression: Compression::None,
+    };
+    Trainer::new(workload, init, opts).unwrap()
+}
+
+#[test]
+fn trainer_on_bus_matches_trainer_on_shared() {
+    let rt = Arc::new(Runtime::load_default().expect("run `make artifacts` first"));
+    let steps = 12;
+    for algo in [AlgorithmKind::GossipPga, AlgorithmKind::Gossip, AlgorithmKind::Local] {
+        let mut shared = trainer_with_backend(&rt, algo, BackendKind::Shared, 1);
+        let mut bus = trainer_with_backend(&rt, algo, BackendKind::Bus, 3);
+        let mut actions = Vec::new();
+        for k in 0..steps {
+            let a = shared.step_once().unwrap();
+            let b = bus.step_once().unwrap();
+            assert_eq!(a, b, "{algo:?} step {k}: actions diverged");
+            assert_eq!(
+                shared.mean_loss(),
+                bus.mean_loss(),
+                "{algo:?} step {k}: losses diverged"
+            );
+            actions.push(a);
+        }
+        for i in 0..shared.n() {
+            assert_eq!(
+                shared.worker_params(i),
+                bus.worker_params(i),
+                "{algo:?}: worker {i} diverged across backends"
+            );
+        }
+        let s_shared = shared.comm_stats();
+        let s_bus = bus.comm_stats();
+        assert_eq!(
+            (s_shared.scalars_sent, s_shared.msgs),
+            (s_bus.scalars_sent, s_bus.msgs),
+            "{algo:?}: trainer traffic accounting diverged"
+        );
+        let topo = Topology::ring(4);
+        let d = shared.param_matrix().d();
+        assert_eq!(
+            (s_bus.scalars_sent, s_bus.msgs),
+            schedule_traffic(&topo, d, &actions),
+            "{algo:?}: trainer CommStats != tab17-style analytic counts"
+        );
+        assert_eq!(shared.gossip_clock(), bus.gossip_clock(), "{algo:?}");
+    }
+}
+
+#[test]
+fn checkpoint_resumes_comm_totals_and_compressor_residuals_exactly() {
+    // The v3 checkpoint tail: (a) cumulative traffic counters continue
+    // across a resume instead of restarting at zero; (b) a compressed run
+    // (per-node error-feedback residuals) resumes bit-exactly.
+    let rt = Arc::new(Runtime::load_default().expect("run `make artifacts` first"));
+    for backend in [BackendKind::Shared, BackendKind::Bus] {
+        let mk = || {
+            let (workload, init) = logreg_workload(rt.clone(), 4, 256, true, 23).unwrap();
+            let opts = TrainerOptions {
+                algorithm: AlgorithmKind::GossipPga,
+                topology: Topology::ring(4),
+                period: 4,
+                aga_init_period: 2,
+                aga_warmup: 4,
+                lr: LrSchedule::Const { lr: 0.2 },
+                momentum: 0.9,
+                nesterov: true,
+                seed: 23,
+                slowmo: Default::default(),
+                cost: CostModel::calibrated_resnet50(),
+                cost_dim: 25_500_000,
+                log_every: 5,
+                threads: 2,
+                overlap: false,
+                backend,
+                compression: Compression::TopK { frac: 0.5 },
+            };
+            Trainer::new(workload, init, opts).unwrap()
+        };
+        let mut a = mk();
+        for _ in 0..9 {
+            a.step_once().unwrap();
+        }
+        let ck = a.checkpoint().unwrap();
+        assert!(
+            ck.ef_residuals.is_some(),
+            "{backend:?}: compressed run must checkpoint its residuals"
+        );
+        let at_ck = ck.comm.expect("v3 checkpoints carry comm totals");
+        assert_eq!(at_ck, a.comm_stats(), "{backend:?}: snapshot != live totals");
+        assert!(at_ck.scalars_sent > 0, "{backend:?}: 9 steps must have sent traffic");
+        for _ in 0..9 {
+            a.step_once().unwrap();
+        }
+
+        let mut b = mk();
+        b.restore(&ck).unwrap();
+        assert_eq!(
+            b.comm_stats(),
+            at_ck,
+            "{backend:?}: restored totals must continue from the snapshot"
+        );
+        for _ in 0..9 {
+            b.step_once().unwrap();
+        }
+        for i in 0..a.n() {
+            assert_eq!(
+                a.worker_params(i),
+                b.worker_params(i),
+                "{backend:?}: compressed resume diverged at worker {i}"
+            );
+        }
+        let (sa, sb) = (a.comm_stats(), b.comm_stats());
+        assert_eq!(
+            (sa.scalars_sent, sa.msgs),
+            (sb.scalars_sent, sb.msgs),
+            "{backend:?}: resumed traffic accounting diverged"
+        );
+    }
+}
+
+#[test]
+fn restoring_compressed_checkpoint_into_uncompressed_run_is_rejected() {
+    let rt = Arc::new(Runtime::load_default().expect("run `make artifacts` first"));
+    let (workload, init) = logreg_workload(rt.clone(), 4, 256, true, 23).unwrap();
+    let mut opts = TrainerOptions {
+        algorithm: AlgorithmKind::GossipPga,
+        topology: Topology::ring(4),
+        period: 4,
+        aga_init_period: 2,
+        aga_warmup: 4,
+        lr: LrSchedule::Const { lr: 0.2 },
+        momentum: 0.0,
+        nesterov: false,
+        seed: 23,
+        slowmo: Default::default(),
+        cost: CostModel::calibrated_resnet50(),
+        cost_dim: 25_500_000,
+        log_every: 5,
+        threads: 1,
+        overlap: false,
+        backend: BackendKind::Shared,
+        compression: Compression::Int8 { block: 64 },
+    };
+    let mut compressed = Trainer::new(workload, init, opts.clone()).unwrap();
+    for _ in 0..3 {
+        compressed.step_once().unwrap();
+    }
+    let ck = compressed.checkpoint().unwrap();
+    assert!(ck.ef_residuals.is_some());
+    assert_eq!(ck.ef_compression, Some(Compression::Int8 { block: 64 }));
+    // Restoring into an uncompressed run must be rejected...
+    let mut plain_opts = opts.clone();
+    plain_opts.compression = Compression::None;
+    let (workload, init) = logreg_workload(rt.clone(), 4, 256, true, 23).unwrap();
+    let mut plain = Trainer::new(workload, init, plain_opts).unwrap();
+    let err = plain.restore(&ck).unwrap_err().to_string();
+    assert!(err.contains("compression"), "{err}");
+    // ...and so must a run with a different codec (or parameters): the
+    // residuals are meaningless under another compression scheme.
+    opts.compression = Compression::TopK { frac: 0.5 };
+    let (workload, init) = logreg_workload(rt, 4, 256, true, 23).unwrap();
+    let mut other_codec = Trainer::new(workload, init, opts).unwrap();
+    let err = other_codec.restore(&ck).unwrap_err().to_string();
+    assert!(err.contains("this run uses"), "{err}");
+}
+
+#[test]
+fn overlap_on_bus_falls_back_to_sync_and_matches_bsp() {
+    // The bus has no async gossip; --overlap must degrade to the exact
+    // synchronous schedule, not fail or fork the trajectory.
+    let rt = Arc::new(Runtime::load_default().expect("run `make artifacts` first"));
+    let mut bsp = trainer_with_backend(&rt, AlgorithmKind::GossipPga, BackendKind::Bus, 2);
+    let (workload, init) = logreg_workload(rt, 4, 256, true, 17).unwrap();
+    let opts_overlap = TrainerOptions {
+        algorithm: AlgorithmKind::GossipPga,
+        topology: Topology::ring(4),
+        period: 4,
+        aga_init_period: 2,
+        aga_warmup: 4,
+        lr: LrSchedule::Const { lr: 0.2 },
+        momentum: 0.9,
+        nesterov: true,
+        seed: 17,
+        slowmo: Default::default(),
+        cost: CostModel::calibrated_resnet50(),
+        cost_dim: 25_500_000,
+        log_every: 5,
+        threads: 2,
+        overlap: true,
+        backend: BackendKind::Bus,
+        compression: Compression::None,
+    };
+    let mut ovl = Trainer::new(workload, init, opts_overlap).unwrap();
+    for _ in 0..9 {
+        bsp.step_once().unwrap();
+        ovl.step_once().unwrap();
+    }
+    ovl.drain().unwrap();
+    for i in 0..bsp.n() {
+        assert_eq!(bsp.worker_params(i), ovl.worker_params(i), "worker {i}");
+    }
+    assert_eq!(bsp.sim_seconds(), ovl.sim_seconds());
+}

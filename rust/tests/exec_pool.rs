@@ -9,6 +9,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use gossip_pga::algorithms::AlgorithmKind;
+use gossip_pga::comm::{BackendKind, Compression};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::CostModel;
 use gossip_pga::exec::WorkerPool;
@@ -48,6 +49,8 @@ fn trainer(threads: usize) -> Trainer {
         log_every: 10,
         threads,
         overlap: false,
+        backend: BackendKind::Shared,
+        compression: Compression::None,
     };
     Trainer::new(workload, init, opts).unwrap()
 }
@@ -101,6 +104,8 @@ fn poisoned_pool_refuses_async_overlap_work_too() {
             log_every: 10,
             threads: 2,
             overlap: true,
+            backend: BackendKind::Shared,
+            compression: Compression::None,
         };
         let mut t = Trainer::new(workload, init, opts).unwrap();
         t.step_once().unwrap(); // leaves a mix in flight

@@ -5,6 +5,7 @@
 use std::sync::Arc;
 
 use gossip_pga::algorithms::{AlgorithmKind, SlowMoParams};
+use gossip_pga::comm::{BackendKind, Compression};
 use gossip_pga::coordinator::{logreg_workload, mlp_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::CostModel;
 use gossip_pga::metrics::consensus_distance;
@@ -33,6 +34,8 @@ fn opts(algo: AlgorithmKind, topo: Topology, h: usize, seed: u64) -> TrainerOpti
         log_every: 10,
         threads: 1,
         overlap: false,
+        backend: BackendKind::Shared,
+        compression: Compression::None,
     }
 }
 

@@ -21,6 +21,7 @@ use std::sync::Arc;
 
 use gossip_pga::algorithms::AlgorithmKind;
 use gossip_pga::collective::{bus, gossip_exchange, ring_all_reduce, run_nodes};
+use gossip_pga::comm::{BackendKind, Compression};
 use gossip_pga::coordinator::mixer::Mixer;
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::CostModel;
@@ -347,6 +348,8 @@ fn trainer_opts(
         log_every: 5,
         threads,
         overlap: false,
+        backend: BackendKind::Shared,
+        compression: Compression::None,
     }
 }
 

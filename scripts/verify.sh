@@ -1,18 +1,23 @@
 #!/usr/bin/env bash
-# One-shot verification gate for every PR:
-#   1. tier-1: release build + full test suite (ROADMAP.md)
-#   2. schedule-equivalence property suite at PROPTEST_CASES=16, swept over
+# One-shot verification gate for every PR, fail-fast ordered:
+#   1. formatting: cargo fmt --check            (seconds — run it first)
+#   2. lints: cargo clippy -D warnings          (this is also the
+#      rust/src/exec/ gate — any new warning there fails the run)
+#   3. tier-1: release build + full test suite (ROADMAP.md)
+#   4. schedule-equivalence property suite at PROPTEST_CASES=16, swept over
 #      GOSSIP_PGA_TEST_THREADS=1 and =4 (pooled == scoped == sequential;
-#      overlap == BSP at every k*H boundary)
-#   3. formatting: cargo fmt --check
-#   4. lints: cargo clippy -D warnings (this is also the rust/src/exec/
-#      gate — any new warning there fails the run)
+#      overlap == BSP at every k*H boundary; bus backend == shared backend)
+#   5. comm-accounting smoke: the rewritten tab17 bench replays a schedule
+#      on both CommPlane backends and asserts measured == predicted ==
+#      analytic traffic (it needs no AOT artifacts), so backend accounting
+#      cannot silently rot.
 #
 # Usage: scripts/verify.sh [--fast]
-#   --fast   sets GOSSIP_PGA_FAST=1 so bench-derived tests run at 1/4 scale.
+#   --fast   sets GOSSIP_PGA_FAST=1 so bench-derived tests run at reduced
+#            scale (the tab17 smoke always runs in fast mode).
 #
 # Integration tests and benches need the AOT artifacts (`make artifacts`);
-# unit tests run without them.
+# unit tests and the tab17 smoke run without them.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -20,6 +25,12 @@ cd "$(dirname "$0")/.."
 if [[ "${1:-}" == "--fast" ]]; then
   export GOSSIP_PGA_FAST=1
 fi
+
+echo "==> cargo fmt --check  (fail fast)"
+cargo fmt --check
+
+echo "==> cargo clippy -- -D warnings  (includes the rust/src/exec/ gate)"
+cargo clippy --all-targets -- -D warnings
 
 echo "==> tier-1: cargo build --release"
 cargo build --release
@@ -36,10 +47,7 @@ PROPTEST_CASES=16 GOSSIP_PGA_TEST_THREADS=1 cargo test -q --test properties
 echo "==> schedule-equivalence properties (PROPTEST_CASES=16, threads=4)"
 PROPTEST_CASES=16 GOSSIP_PGA_TEST_THREADS=4 cargo test -q --test properties
 
-echo "==> cargo fmt --check"
-cargo fmt --check
-
-echo "==> cargo clippy -- -D warnings  (includes the rust/src/exec/ gate)"
-cargo clippy --all-targets -- -D warnings
+echo "==> CommPlane accounting smoke (tab17, fast mode)"
+GOSSIP_PGA_FAST=1 cargo bench --bench tab17_comm_overhead
 
 echo "==> verify OK"
