@@ -22,7 +22,7 @@ use gossip_pga::collective::{bus, ring_all_reduce, run_nodes};
 use gossip_pga::comm::{BackendKind, BusBackend, CommBackend, Compression, SharedBackend};
 use gossip_pga::coordinator::mixer::{axpy, Mixer};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
-use gossip_pga::costmodel::CostModel;
+use gossip_pga::costmodel::{CostModel, NodeCosts};
 use gossip_pga::exec::WorkerPool;
 use gossip_pga::harness::{fmt_duration, measure, Table};
 use gossip_pga::optim::LrSchedule;
@@ -49,6 +49,8 @@ fn trainer_opts(n: usize, threads: usize, overlap: bool) -> TrainerOptions {
         slowmo: Default::default(),
         cost: CostModel::calibrated_resnet50(),
         cost_dim: 25_500_000,
+        node_costs: None,
+        stealing: false,
         log_every: 1000,
         threads,
         overlap,
@@ -181,13 +183,13 @@ fn main() -> anyhow::Result<()> {
         let n = 16;
         let dd = 1_000_000usize;
         let topo = Topology::ring(n);
-        let cost = CostModel::calibrated_resnet50();
+        let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), n);
         let mut p_shared = random_matrix(&mut rng, n, dd);
         let mut p_bus = p_shared.clone();
         let mut shared =
-            SharedBackend::new(&topo, dd, cost, 25_500_000, Compression::None);
+            SharedBackend::new(&topo, dd, &costs, 25_500_000, Compression::None);
         let mut busb =
-            BusBackend::new(&topo, dd, cost, 25_500_000, Compression::None, true);
+            BusBackend::new(&topo, dd, &costs, 25_500_000, Compression::None, true);
         let comm_pool = WorkerPool::new(threads_avail.clamp(2, 8));
         let s_shared = measure(2, 10, || {
             shared.gossip(&mut p_shared, &comm_pool).unwrap();
@@ -380,6 +382,67 @@ fn main() -> anyhow::Result<()> {
         "-".into(),
         "(params bit-identical after drain)".into(),
     ]);
+
+    // --- work-stealing vs static sharding under a 4x straggler ---------------
+    // A simulated straggler (node 2: 4x compute + latency in the cost
+    // table) only bends the virtual clocks, so stealing's job here is the
+    // REAL wall-clock: over-split chunks let idle threads drain the queue
+    // while an unlucky thread grinds. Both runs must end bit-identical to
+    // each other AND carry identical virtual clocks (billing is
+    // pool-independent).
+    {
+        let straggler =
+            NodeCosts::homogeneous(CostModel::calibrated_resnet50(), n).with_straggler(2, 4.0)?;
+        let mk = |stealing: bool| -> anyhow::Result<Trainer> {
+            let (workload, init) = logreg_workload(rt.clone(), n, 256, true, 3)?;
+            let mut opts = trainer_opts(n, threads, false);
+            opts.stealing = stealing;
+            opts.node_costs = Some(straggler.clone());
+            Trainer::new(workload, init, opts)
+        };
+        let mut stat = mk(false)?;
+        let mut steal = mk(true)?;
+        let s_static = measure(5, 50, || {
+            stat.step_once().unwrap();
+        });
+        let s_steal = measure(5, 50, || {
+            steal.step_once().unwrap();
+        });
+        for i in 0..n {
+            assert_eq!(
+                stat.worker_params(i),
+                steal.worker_params(i),
+                "stealing run diverged from static sharding at worker {i}"
+            );
+        }
+        assert_eq!(
+            stat.sim_seconds(),
+            steal.sim_seconds(),
+            "virtual clocks must not depend on the chunking policy"
+        );
+        assert!(stat.straggler_slack() > 0.0, "the seeded straggler must open clock slack");
+        t.rowv(vec![
+            "coordinator step, static shards".into(),
+            format!("n = {n}, 4x straggler, threads={threads}"),
+            fmt_duration(s_static.mean),
+            fmt_duration(s_static.p95),
+            format!("{:.0} worker-execs/s", n as f64 / s_static.mean),
+        ]);
+        t.rowv(vec![
+            "coordinator step, work stealing".into(),
+            format!("n = {n}, 4x straggler, threads={threads}"),
+            fmt_duration(s_steal.mean),
+            fmt_duration(s_steal.p95),
+            format!("{:.0} worker-execs/s", n as f64 / s_steal.mean),
+        ]);
+        t.rowv(vec![
+            "  -> stealing vs static".into(),
+            format!("{threads} threads, grain 4"),
+            format!("{:.2}x", s_static.mean / s_steal.mean),
+            "-".into(),
+            "(params + clocks bit-identical)".into(),
+        ]);
+    }
 
     t.print();
     Ok(())

@@ -3,11 +3,19 @@
 //! H = sqrt(n) (Appendix D.2).
 //!
 //! Uses the paper's own alpha-beta model, calibrated to its Table 17
-//! measurements, with the measured beta of each topology.
+//! measurements, with the measured beta of each topology. Since the
+//! virtual-time refactor the per-action times come from the same
+//! [`VirtualClocks`] engine the trainer bills (via
+//! [`NodeCosts::gossip_critical`] / [`NodeCosts::all_reduce_critical`] —
+//! one-round critical paths), not a parallel copy of the formulas; on the
+//! homogeneous table used here the values are bit-identical to the old
+//! scalar `CostModel` arithmetic (asserted below), so every printed number
+//! is unchanged. A final section shows the same accounting under a 4x
+//! straggler — the heterogeneous regime the scalar model could not express.
 //!
 //!     cargo bench --bench tab5_transient_time
 
-use gossip_pga::costmodel::{AlgoCost, CostModel};
+use gossip_pga::costmodel::{AlgoCost, CostModel, NodeCosts};
 use gossip_pga::harness::{fmt_duration, Table};
 use gossip_pga::topology::spectral::transient;
 use gossip_pga::topology::Topology;
@@ -17,7 +25,8 @@ fn main() -> anyhow::Result<()> {
     let d = 25_500_000; // ResNet-50
     println!(
         "# Tables 5/12/13/14: transient time, H = sqrt(n), d = 25.5M\n\
-         # (alpha = {:.2e} s, theta = {:.2e} s/scalar — Table 17 calibration)\n",
+         # (alpha = {:.2e} s, theta = {:.2e} s/scalar — Table 17 calibration;\n\
+         #  per-action times from the VirtualClocks engine, homogeneous table)\n",
         model.alpha, model.theta
     );
 
@@ -49,8 +58,17 @@ fn main() -> anyhow::Result<()> {
             } else {
                 (transient::gossip_iid(n, beta), transient::pga_iid(n, beta, h))
             };
-            let g_comm = model.per_iter(AlgoCost::Gossip, &topo, d, h);
-            let p_comm = model.per_iter(AlgoCost::GossipPga, &topo, d, h);
+            // Per-iteration comm from the clock engine: one-round critical
+            // paths, amortized exactly like CostModel::per_iter.
+            let costs = NodeCosts::homogeneous(model, n);
+            let gossip = costs.gossip_critical(&topo, d);
+            let allreduce = costs.all_reduce_critical(&topo, d);
+            let g_comm = gossip;
+            let p_comm = gossip + allreduce / h as f64;
+            // The homogeneous regression anchor: the clock-derived values
+            // ARE the scalar model's, bit for bit.
+            assert_eq!(g_comm, model.per_iter(AlgoCost::Gossip, &topo, d, h));
+            assert_eq!(p_comm, model.per_iter(AlgoCost::GossipPga, &topo, d, h));
             let g_time = g_it * g_comm;
             let p_time = p_it * p_comm;
             t.rowv(vec![
@@ -72,7 +90,41 @@ fn main() -> anyhow::Result<()> {
     println!(
         "Expected shape (paper App. D.2): although PGA pays more per iteration\n\
          (amortized all-reduce), its transient time is orders of magnitude\n\
-         shorter — O(n^5.5) vs O(n^7)-O(n^11) depending on the scenario."
+         shorter — O(n^5.5) vs O(n^7)-O(n^11) depending on the scenario.\n"
+    );
+
+    // --- heterogeneous coda: the same accounting under a 4x straggler ------
+    println!("== Straggler coda: per-iteration comm under node 0 at 4x (compute+latency) ==");
+    let mut t = Table::new(&[
+        "topology",
+        "n",
+        "Gossip/iter (hom -> slow)",
+        "All-Reduce/iter (hom -> slow)",
+        "Gossip degr.",
+        "All-Reduce degr.",
+    ]);
+    for (name, n) in [("ring", 36usize), ("one-peer-expo", 32)] {
+        let topo = Topology::from_name(name, n)?;
+        let hom = NodeCosts::homogeneous(model, n);
+        let slow = hom.clone().with_straggler(0, 4.0)?;
+        let g0 = hom.gossip_critical(&topo, d);
+        let g1 = slow.gossip_critical(&topo, d);
+        let a0 = hom.all_reduce_critical(&topo, d);
+        let a1 = slow.all_reduce_critical(&topo, d);
+        t.rowv(vec![
+            name.to_string(),
+            n.to_string(),
+            format!("{} -> {}", fmt_duration(g0), fmt_duration(g1)),
+            format!("{} -> {}", fmt_duration(a0), fmt_duration(a1)),
+            format!("{:.2}x", g1 / g0),
+            format!("{:.2}x", a1 / a0),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nAll-Reduce pays the straggler's latency n times per round, gossip\n\
+         pays it once — the n*alpha term of §3.4 is exactly what a slow node\n\
+         amplifies (see benches/tab17_comm_overhead.rs for the asserted gate)."
     );
     Ok(())
 }

@@ -29,6 +29,8 @@ fn opts(algo: AlgorithmKind, n: usize, seed: u64) -> TrainerOptions {
         slowmo: SlowMoParams::default(),
         cost: CostModel::calibrated_resnet50(),
         cost_dim: 25_500_000,
+        node_costs: None,
+        stealing: false,
         log_every: 50,
         threads: 1,
         overlap: false,

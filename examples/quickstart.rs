@@ -48,8 +48,10 @@ fn main() -> anyhow::Result<()> {
             slowmo: SlowMoParams::default(),
             cost: CostModel::calibrated_resnet50(),
             cost_dim: 25_500_000, // bill comms as if this were ResNet-50
+            node_costs: None,
             log_every: 25,
             threads: 1,
+            stealing: false,
             overlap: false,
             backend: BackendKind::Shared,
             compression: Compression::None,

@@ -77,6 +77,8 @@ fn main() -> anyhow::Result<()> {
         // cluster (Table 17 calibration).
         cost: CostModel::calibrated_bert(),
         cost_dim: 330_000_000,
+        node_costs: None,
+        stealing: false,
         log_every: 1,
         threads,
         overlap,
@@ -103,6 +105,9 @@ fn main() -> anyhow::Result<()> {
             sim_seconds: trainer.sim_seconds(),
             comm_scalars: comm.scalars_sent,
             comm_msgs: comm.msgs,
+            sim_min_seconds: trainer.sim_seconds_min(),
+            straggler_slack: trainer.straggler_slack(),
+            barrier_wait: comm.barrier_wait,
         });
         if k % 10 == 0 || k + 1 == steps {
             println!(

@@ -27,17 +27,23 @@
 //! scalars); the latency-bound ring schedule itself remains available as
 //! [`crate::collective::ring_all_reduce`] for the bench suite.
 //!
-//! §Time: charged per actual message — `alpha` per send on the busiest
-//! node's critical path plus `theta` per wire scalar, scaled to the
-//! emulated `cost_dim` (the same emulation the shared backend bills).
+//! §Time: charged per actual message and per node — node i pays its own
+//! `alpha_i` per send plus its own `theta_i` per wire scalar from the
+//! [`NodeCosts`] table, scaled to the emulated `cost_dim` (the same
+//! emulation the shared backend bills); the aggregate `sim_seconds` is the
+//! busiest node's charge (the pre-virtual-time scalar bill on a
+//! homogeneous table, bit for bit).
 
 use anyhow::{bail, ensure, Result};
 
-use super::{export_residuals, import_residuals, BackendKind, CommBackend, CommStats, Compression};
+use super::{
+    export_residuals, import_residuals, BackendKind, CommBackend, CommCharge, CommStats,
+    Compression,
+};
 use crate::collective::{bus_for, ring_chunk_bounds, Endpoint};
 use crate::compress::{Codec, ErrorFeedback};
 use crate::coordinator::mixer::{mix_row_src, weight_rows_f32};
-use crate::costmodel::CostModel;
+use crate::costmodel::{BarrierScope, NodeCosts};
 use crate::exec::WorkerPool;
 use crate::params::ParamMatrix;
 use crate::topology::Topology;
@@ -58,7 +64,9 @@ pub struct BusBackend {
     /// Whether the all-to-all chunk-exchange edges were built.
     with_global: bool,
     compressors: Vec<Option<ErrorFeedback<Box<dyn Codec>>>>,
-    cost: CostModel,
+    /// Per-node link costs the endpoint counters are billed against.
+    alpha: Vec<f64>,
+    theta: Vec<f64>,
     cost_dim: usize,
     pub gossip_clock: usize,
     total: CommStats,
@@ -75,12 +83,13 @@ impl BusBackend {
     pub fn new(
         topo: &Topology,
         d: usize,
-        cost: CostModel,
+        costs: &NodeCosts,
         cost_dim: usize,
         compression: Compression,
         with_global: bool,
     ) -> BusBackend {
         let n = topo.n;
+        debug_assert_eq!(costs.n(), n, "cost table must cover every node");
         let rounds = topo.rounds();
         // Same quantization site as the shared mixer (bit-equality is
         // structural, not two parallel copies).
@@ -112,7 +121,8 @@ impl BusBackend {
             bounds: ring_chunk_bounds(n, d),
             with_global,
             compressors: compression.build(n, d),
-            cost,
+            alpha: costs.alpha.clone(),
+            theta: costs.theta.clone(),
             cost_dim,
             gossip_clock: 0,
             total: CommStats::default(),
@@ -125,31 +135,42 @@ impl BusBackend {
         self.endpoints.iter().map(|e| (e.scalars_sent, e.msgs_sent)).collect()
     }
 
-    /// Stats incurred since `before`: totals across nodes, time charged per
-    /// actual message on the busiest node's critical path — the max over
-    /// nodes of that node's own alpha-beta cost (message count and wire
-    /// scalars taken together, so asymmetric topologies aren't billed a
-    /// mix-and-match of two different nodes' worst terms).
-    fn stats_since(&self, before: &[(u64, u64)]) -> CommStats {
+    /// Charge incurred since `before`: traffic totals across nodes plus
+    /// each node's own alpha-beta bill for its measured messages (message
+    /// count and wire scalars taken together per node, so asymmetric
+    /// topologies aren't billed a mix-and-match of two different nodes'
+    /// worst terms); the aggregate `sim_seconds` is the busiest node's
+    /// charge.
+    fn charge_since(&self, before: &[(u64, u64)], barrier: BarrierScope) -> CommCharge {
         let scale = self.cost_dim as f64 / self.d.max(1) as f64;
         let mut scalars = 0u64;
         let mut msgs = 0u64;
         let mut critical = 0.0f64;
-        for (ep, &(s0, m0)) in self.endpoints.iter().zip(before) {
+        let mut node_seconds = Vec::with_capacity(self.n);
+        for (i, (ep, &(s0, m0))) in self.endpoints.iter().zip(before).enumerate() {
             let ds = ep.scalars_sent - s0;
             let dm = ep.msgs_sent - m0;
             scalars += ds;
             msgs += dm;
-            let node_cost =
-                dm as f64 * self.cost.alpha + ds as f64 * scale * self.cost.theta;
+            let node_cost = dm as f64 * self.alpha[i] + ds as f64 * scale * self.theta[i];
             critical = critical.max(node_cost);
+            node_seconds.push(node_cost);
         }
-        CommStats { scalars_sent: scalars, msgs, sim_seconds: critical }
+        CommCharge {
+            stats: CommStats {
+                scalars_sent: scalars,
+                msgs,
+                sim_seconds: critical,
+                barrier_wait: 0.0,
+            },
+            node_seconds,
+            barrier,
+        }
     }
 }
 
 impl BusBackend {
-    fn gossip_inner(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommStats> {
+    fn gossip_inner(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommCharge> {
         debug_assert!(params.n() == self.n && params.d() == self.d);
         let n = self.n;
         let d = self.d;
@@ -258,16 +279,16 @@ impl BusBackend {
         }
         params.swap_data(&mut self.scratch);
         self.gossip_clock += 1;
-        let stats = self.stats_since(&before);
-        self.total.merge(stats);
-        Ok(stats)
+        let charge = self.charge_since(&before, BarrierScope::Neighborhood { round });
+        self.total.merge(charge.stats);
+        Ok(charge)
     }
 
     fn global_average_inner(
         &mut self,
         params: &mut ParamMatrix,
         pool: &WorkerPool,
-    ) -> Result<CommStats> {
+    ) -> Result<CommCharge> {
         debug_assert!(params.n() == self.n && params.d() == self.d);
         debug_assert!(self.with_global, "checked by the trait wrapper");
         let n = self.n;
@@ -412,9 +433,9 @@ impl BusBackend {
             )?;
         }
         params.swap_data(&mut self.scratch);
-        let stats = self.stats_since(&before);
-        self.total.merge(stats);
-        Ok(stats)
+        let charge = self.charge_since(&before, BarrierScope::Global);
+        self.total.merge(charge.stats);
+        Ok(charge)
     }
 }
 
@@ -423,7 +444,7 @@ impl CommBackend for BusBackend {
         BackendKind::Bus
     }
 
-    fn gossip(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommStats> {
+    fn gossip(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommCharge> {
         ensure!(!self.failed, "bus backend is poisoned by an earlier failed collective");
         let result = self.gossip_inner(params, pool);
         self.failed |= result.is_err();
@@ -434,7 +455,7 @@ impl CommBackend for BusBackend {
         &mut self,
         params: &mut ParamMatrix,
         pool: &WorkerPool,
-    ) -> Result<CommStats> {
+    ) -> Result<CommCharge> {
         ensure!(!self.failed, "bus backend is poisoned by an earlier failed collective");
         // A missing edge set is a clean configuration error, not a
         // half-delivered collective — don't poison for it.

@@ -37,6 +37,7 @@ use anyhow::{bail, Result};
 use crate::algorithms::CommAction;
 use crate::compress::{Codec, ErrorFeedback, Int8, TopK};
 use crate::coordinator::mixer::PendingMix;
+use crate::costmodel::BarrierScope;
 use crate::exec::WorkerPool;
 use crate::params::ParamMatrix;
 use crate::topology::Topology;
@@ -44,12 +45,22 @@ use crate::topology::Topology;
 /// Traffic + simulated time incurred by one communication action (or
 /// accumulated over a run). `scalars_sent` counts f32-equivalents on the
 /// wire (compressed messages bill `ceil(wire_bytes / 4)`); `sim_seconds`
-/// is the alpha-beta clock charge for the action.
+/// is the alpha-beta clock charge for the action (the busiest node's —
+/// per-node charges travel in [`CommCharge::node_seconds`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CommStats {
     pub scalars_sent: u64,
     pub msgs: u64,
     pub sim_seconds: f64,
+    /// Seconds nodes spent stalled at synchronization barriers behind
+    /// slower peers, summed over nodes (the straggler breakdown). Backends
+    /// report 0 per action — barriers are applied by the trainer's
+    /// [`crate::costmodel::VirtualClocks`], which fills this in on the
+    /// cumulative totals. 0 whenever per-node charges stay uniform
+    /// (homogeneous costs on a regular topology with even chunks); a
+    /// homogeneous STAR still accrues wait — its leaves really do stall
+    /// behind the busier hub — as does the bus plane at d % n != 0.
+    pub barrier_wait: f64,
 }
 
 impl CommStats {
@@ -58,12 +69,30 @@ impl CommStats {
         self.scalars_sent += other.scalars_sent;
         self.msgs += other.msgs;
         self.sim_seconds += other.sim_seconds;
+        self.barrier_wait += other.barrier_wait;
     }
 
     /// Wire bytes (4 bytes per f32-equivalent).
     pub fn bytes_sent(&self) -> u64 {
         self.scalars_sent * 4
     }
+}
+
+/// Everything one communication action costs: aggregate traffic
+/// ([`CommStats`]), the per-node simulated seconds the action charges, and
+/// the [`BarrierScope`] it imposes on the per-node virtual clocks (a gossip
+/// round waits on the in-neighborhood of its topology round; a global
+/// average is a full barrier). The trainer feeds this straight into
+/// [`crate::costmodel::VirtualClocks::advance`], fused with the per-node
+/// compute charge.
+#[derive(Clone, Debug)]
+pub struct CommCharge {
+    pub stats: CommStats,
+    /// Per-node comm seconds of this action (len n; node i's own cost
+    /// before any barrier wait).
+    pub node_seconds: Vec<f64>,
+    /// The synchronization the action imposes.
+    pub barrier: BarrierScope,
 }
 
 /// Which communication plane a trainer runs on.
@@ -165,24 +194,30 @@ pub(crate) enum PendingPayload {
 }
 
 /// An in-flight asynchronous gossip round on a [`CommBackend`] (overlap
-/// mode). Carries the stats the round will incur so the caller can advance
-/// its clock at issue time; hand it back to [`CommBackend::finish`] of the
-/// SAME backend to complete the round.
+/// mode). Carries the full [`CommCharge`] the round will incur so the
+/// caller can advance its clocks at issue time; hand it back to
+/// [`CommBackend::finish`] of the SAME backend to complete the round.
 pub struct PendingComm {
     pub(crate) payload: PendingPayload,
-    pub(crate) stats: CommStats,
+    pub(crate) charge: CommCharge,
 }
 
 impl PendingComm {
-    /// The traffic/time this round incurs (known at issue time).
+    /// The traffic/time/barrier this round incurs (known at issue time).
+    pub fn charge(&self) -> &CommCharge {
+        &self.charge
+    }
+
+    /// The aggregate traffic/time this round incurs.
     pub fn stats(&self) -> CommStats {
-        self.stats
+        self.charge.stats
     }
 }
 
 /// One pluggable communication plane: the two actions Algorithm 1 needs,
-/// each reporting what it cost. Implementations must be deterministic —
-/// identical inputs produce identical parameter bits at any pool size.
+/// each reporting what it cost — per node and in aggregate
+/// ([`CommCharge`]). Implementations must be deterministic — identical
+/// inputs produce identical parameter bits at any pool size.
 pub trait CommBackend: Send {
     fn kind(&self) -> BackendKind;
 
@@ -192,12 +227,12 @@ pub trait CommBackend: Send {
     /// FAILED and not reused (a message-passing plane may hold half-
     /// delivered payloads; [`BusBackend`] poisons itself and refuses
     /// further collectives, mirroring the worker pool's panic semantics).
-    fn gossip(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommStats>;
+    fn gossip(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommCharge>;
 
     /// Exact global average: every worker ends up holding the ensemble
     /// mean (the paper's All-Reduce step).
     fn global_average(&mut self, params: &mut ParamMatrix, pool: &WorkerPool)
-        -> Result<CommStats>;
+        -> Result<CommCharge>;
 
     /// Begin an asynchronous gossip round, if this backend supports
     /// overlap; `Ok(None)` means unsupported and callers fall back to the
@@ -219,7 +254,7 @@ pub trait CommBackend: Send {
     }
 
     /// Complete a round started by [`CommBackend::gossip_async`].
-    fn finish(&mut self, _params: &mut ParamMatrix, _pending: PendingComm) -> Result<CommStats> {
+    fn finish(&mut self, _params: &mut ParamMatrix, _pending: PendingComm) -> Result<CommCharge> {
         bail!("this backend has no asynchronous gossip")
     }
 
@@ -378,11 +413,12 @@ mod tests {
 
     #[test]
     fn stats_merge_and_bytes() {
-        let mut a = CommStats { scalars_sent: 10, msgs: 2, sim_seconds: 0.5 };
-        a.merge(CommStats { scalars_sent: 5, msgs: 1, sim_seconds: 0.25 });
+        let mut a = CommStats { scalars_sent: 10, msgs: 2, sim_seconds: 0.5, barrier_wait: 0.1 };
+        a.merge(CommStats { scalars_sent: 5, msgs: 1, sim_seconds: 0.25, barrier_wait: 0.2 });
         assert_eq!(a.scalars_sent, 15);
         assert_eq!(a.msgs, 3);
         assert!((a.sim_seconds - 0.75).abs() < 1e-12);
+        assert!((a.barrier_wait - 0.3).abs() < 1e-12);
         assert_eq!(a.bytes_sent(), 60);
     }
 

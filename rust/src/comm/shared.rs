@@ -5,22 +5,25 @@
 //! Parameter arithmetic is exactly the pre-CommPlane trainer's: the fused
 //! `mix_row` kernel for plain gossip, [`Mixer::gossip_async`] for overlap
 //! mode, the fixed-order column mean for the global average. What this
-//! wrapper adds is the accounting: every action reports the [`CommStats`] a
-//! message-passing run of the same schedule would measure (out-neighbor
+//! wrapper adds is the accounting: every action reports the [`CommCharge`]
+//! a message-passing run of the same schedule would measure (out-neighbor
 //! transmit counts for gossip, the chunked reduce-scatter/all-gather
 //! traffic for the global average) and bills the paper's alpha-beta model
-//! time — `|N_i| theta d + alpha` per gossip round, `2 theta d + n alpha`
-//! per all-reduce (§3.4), at the emulated `cost_dim`.
+//! time **per node** from the [`NodeCosts`] table — `|N_i| theta_i d +
+//! alpha_i` per gossip round at the node's own neighborhood size,
+//! `2 theta_i d + n alpha_i` per all-reduce (§3.4), at the emulated
+//! `cost_dim`. On a homogeneous table the busiest node's charge is the
+//! pre-virtual-time scalar bill, bit for bit.
 
 use anyhow::Result;
 
 use super::{
     export_residuals, global_average_traffic, gossip_traffic, import_residuals, BackendKind,
-    CommBackend, CommStats, Compression, PendingComm, PendingPayload,
+    CommBackend, CommCharge, CommStats, Compression, PendingComm, PendingPayload,
 };
 use crate::compress::{Codec, ErrorFeedback};
 use crate::coordinator::mixer::Mixer;
-use crate::costmodel::CostModel;
+use crate::costmodel::{BarrierScope, NodeCosts};
 use crate::exec::WorkerPool;
 use crate::params::ParamMatrix;
 use crate::topology::Topology;
@@ -33,10 +36,14 @@ pub struct SharedBackend {
     round_traffic: Vec<(u64, u64)>,
     /// Per-round per-node out-degree (compressed-gossip accounting).
     outdeg: Vec<Vec<u64>>,
-    /// Model-billed times at the emulated `cost_dim`.
-    gossip_sim: f64,
-    gossip_alpha: f64,
-    allreduce_sim: f64,
+    /// Model-billed per-node gossip seconds per round, at the emulated
+    /// `cost_dim` (node i billed at its own in-neighborhood size).
+    gossip_node_sim: Vec<Vec<f64>>,
+    /// Per-node point-to-point latency (compressed-gossip scaling keeps
+    /// the latency term payload-independent).
+    alpha: Vec<f64>,
+    /// Model-billed per-node all-reduce seconds at `cost_dim`.
+    allreduce_node_sim: Vec<f64>,
     /// Bus-equivalent `(scalars, msgs)` of one global average.
     allreduce_traffic: (u64, u64),
     /// Per-node transmit codecs — the single source of truth for whether
@@ -45,29 +52,44 @@ pub struct SharedBackend {
     total: CommStats,
 }
 
+/// Max of a non-empty f64 slice (per-action critical path).
+fn max_of(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
 impl SharedBackend {
     pub fn new(
         topo: &Topology,
         d: usize,
-        cost: CostModel,
+        costs: &NodeCosts,
         cost_dim: usize,
         compression: Compression,
     ) -> SharedBackend {
         let n = topo.n;
+        debug_assert_eq!(costs.n(), n, "cost table must cover every node");
         let rounds = topo.rounds();
         let round_traffic = (0..rounds).map(|r| gossip_traffic(topo, r, d)).collect();
         let outdeg = (0..rounds)
             .map(|r| (0..n).map(|j| topo.out_neighbors(j, r).len() as u64).collect())
             .collect();
+        let gossip_node_sim = (0..rounds)
+            .map(|r| {
+                (0..n)
+                    .map(|i| costs.gossip_node(i, topo.in_neighbors(i, r).len(), cost_dim))
+                    .collect()
+            })
+            .collect();
+        let allreduce_node_sim =
+            (0..n).map(|i| costs.all_reduce_node(i, n, cost_dim)).collect();
         let compressors = compression.build(n, d);
         SharedBackend {
             mixer: Mixer::new(topo, d),
             rounds,
             round_traffic,
             outdeg,
-            gossip_sim: cost.gossip(topo, cost_dim),
-            gossip_alpha: cost.alpha,
-            allreduce_sim: cost.all_reduce(n, cost_dim),
+            gossip_node_sim,
+            alpha: costs.alpha.clone(),
+            allreduce_node_sim,
             allreduce_traffic: global_average_traffic(n, d),
             compressors,
             total: CommStats::default(),
@@ -91,9 +113,9 @@ impl CommBackend for SharedBackend {
         BackendKind::Shared
     }
 
-    fn gossip(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommStats> {
+    fn gossip(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommCharge> {
         let round = self.mixer.gossip_clock % self.rounds;
-        let stats = if self.compressed() {
+        let charge = if self.compressed() {
             // Compressed transmit path: per-node error-feedback codecs feed
             // the mixer's transmit hook; wire size is billed per message
             // (one compression per node, one message per out-neighbor —
@@ -110,36 +132,71 @@ impl CommBackend for SharedBackend {
                 msgs += outdeg[j];
                 c.dense
             })?;
-            // Bill the theta term at the compressed fraction of the ideal
-            // identity traffic; the latency term is payload-independent.
+            // Bill each node's theta term at the compressed fraction of the
+            // ideal identity traffic; the latency term is
+            // payload-independent.
             let (ideal_scalars, _) = self.round_traffic[round];
-            let sim = if ideal_scalars == 0 {
-                self.gossip_sim
-            } else {
-                self.gossip_alpha
-                    + (self.gossip_sim - self.gossip_alpha) * scalars as f64
-                        / ideal_scalars as f64
-            };
-            CommStats { scalars_sent: scalars, msgs, sim_seconds: sim }
+            let node_seconds: Vec<f64> = self.gossip_node_sim[round]
+                .iter()
+                .zip(&self.alpha)
+                .map(|(&raw, &alpha)| {
+                    if ideal_scalars == 0 {
+                        raw
+                    } else {
+                        alpha + (raw - alpha) * scalars as f64 / ideal_scalars as f64
+                    }
+                })
+                .collect();
+            let sim = max_of(&node_seconds);
+            CommCharge {
+                stats: CommStats {
+                    scalars_sent: scalars,
+                    msgs,
+                    sim_seconds: sim,
+                    barrier_wait: 0.0,
+                },
+                node_seconds,
+                barrier: BarrierScope::Neighborhood { round },
+            }
         } else {
             self.mixer.gossip(params, pool)?;
             let (scalars, msgs) = self.round_traffic[round];
-            CommStats { scalars_sent: scalars, msgs, sim_seconds: self.gossip_sim }
+            let node_seconds = self.gossip_node_sim[round].clone();
+            CommCharge {
+                stats: CommStats {
+                    scalars_sent: scalars,
+                    msgs,
+                    sim_seconds: max_of(&node_seconds),
+                    barrier_wait: 0.0,
+                },
+                node_seconds,
+                barrier: BarrierScope::Neighborhood { round },
+            }
         };
-        self.total.merge(stats);
-        Ok(stats)
+        self.total.merge(charge.stats);
+        Ok(charge)
     }
 
     fn global_average(
         &mut self,
         params: &mut ParamMatrix,
         pool: &WorkerPool,
-    ) -> Result<CommStats> {
+    ) -> Result<CommCharge> {
         self.mixer.global_average(params, pool)?;
         let (scalars, msgs) = self.allreduce_traffic;
-        let stats = CommStats { scalars_sent: scalars, msgs, sim_seconds: self.allreduce_sim };
-        self.total.merge(stats);
-        Ok(stats)
+        let node_seconds = self.allreduce_node_sim.clone();
+        let charge = CommCharge {
+            stats: CommStats {
+                scalars_sent: scalars,
+                msgs,
+                sim_seconds: max_of(&node_seconds),
+                barrier_wait: 0.0,
+            },
+            node_seconds,
+            barrier: BarrierScope::Global,
+        };
+        self.total.merge(charge.stats);
+        Ok(charge)
     }
 
     unsafe fn gossip_async(
@@ -155,19 +212,29 @@ impl CommBackend for SharedBackend {
         }
         let round = self.mixer.gossip_clock % self.rounds;
         let (scalars, msgs) = self.round_traffic[round];
+        let node_seconds = self.gossip_node_sim[round].clone();
         let mix = self.mixer.gossip_async(params, pool)?;
         Ok(Some(PendingComm {
             payload: PendingPayload::SharedMix(mix),
-            stats: CommStats { scalars_sent: scalars, msgs, sim_seconds: self.gossip_sim },
+            charge: CommCharge {
+                stats: CommStats {
+                    scalars_sent: scalars,
+                    msgs,
+                    sim_seconds: max_of(&node_seconds),
+                    barrier_wait: 0.0,
+                },
+                node_seconds,
+                barrier: BarrierScope::Neighborhood { round },
+            },
         }))
     }
 
-    fn finish(&mut self, params: &mut ParamMatrix, pending: PendingComm) -> Result<CommStats> {
-        let stats = pending.stats;
+    fn finish(&mut self, params: &mut ParamMatrix, pending: PendingComm) -> Result<CommCharge> {
+        let charge = pending.charge;
         let PendingPayload::SharedMix(mix) = pending.payload;
         self.mixer.finish_gossip(params, mix)?;
-        self.total.merge(stats);
-        Ok(stats)
+        self.total.merge(charge.stats);
+        Ok(charge)
     }
 
     fn gossip_clock(&self) -> usize {

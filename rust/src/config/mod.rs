@@ -11,6 +11,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::algorithms::AlgorithmKind;
 use crate::comm::{BackendKind, Compression};
+use crate::costmodel::{CostModel, NodeCosts};
 use crate::topology::Topology;
 
 /// A parsed TOML-subset document: dotted-path -> value.
@@ -123,6 +124,23 @@ impl Toml {
             Some(v) => v.as_bool().ok_or_else(|| anyhow!("'{key}' must be a bool")),
         }
     }
+
+    /// A numeric key that may be a scalar (`k = 0.1`, one value) or a flat
+    /// array (`k = [0.1, 0.2]`, one per node). Absent => empty.
+    pub fn get_f64_list(&self, key: &str) -> Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(Vec::new()),
+            Some(Value::Arr(items)) => items
+                .iter()
+                .map(|v| {
+                    v.as_f64().ok_or_else(|| anyhow!("'{key}' entries must be numeric"))
+                })
+                .collect(),
+            Some(v) => {
+                Ok(vec![v.as_f64().ok_or_else(|| anyhow!("'{key}' must be numeric"))?])
+            }
+        }
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -208,6 +226,19 @@ pub struct ExperimentConfig {
     /// row-parallel mix and the eval pass shard across (1 = sequential;
     /// results are bit-identical at any value).
     pub threads: usize,
+    /// Work-stealing dynamic chunking in the worker pool (heterogeneous
+    /// workers); bit-identical to static sharding, off by default.
+    pub stealing: bool,
+    /// Per-node cost-model overrides (`cost.alpha` / `cost.theta` /
+    /// `cost.compute`): empty = the calibrated default on every node, one
+    /// value = that value on every node, n values = node i's value.
+    pub cost_alpha: Vec<f64>,
+    pub cost_theta: Vec<f64>,
+    pub cost_compute: Vec<f64>,
+    /// Straggler specs parsed from `cost.straggler` / `--straggler`
+    /// ("idx:factor[,idx:factor...]"): node idx's compute and alpha scale
+    /// by factor (see [`NodeCosts::with_straggler`]).
+    pub stragglers: Vec<(usize, f64)>,
     /// Double-buffered async gossip: overlap the round-t mix with round
     /// t+1's sampling phase (bit-identical to BSP at every global-averaging
     /// boundary). Off by default.
@@ -247,6 +278,11 @@ impl Default for ExperimentConfig {
             batch: 32,
             log_every: 50,
             threads: 1,
+            stealing: false,
+            cost_alpha: Vec::new(),
+            cost_theta: Vec::new(),
+            cost_compute: Vec::new(),
+            stragglers: Vec::new(),
             overlap: false,
             backend: "shared".into(),
             compression: "none".into(),
@@ -281,6 +317,11 @@ impl ExperimentConfig {
             batch: doc.get_usize("data.batch", d.batch)?,
             log_every: doc.get_usize("train.log_every", d.log_every)?,
             threads: doc.get_usize("train.threads", d.threads)?,
+            stealing: doc.get_bool("train.stealing", d.stealing)?,
+            cost_alpha: doc.get_f64_list("cost.alpha")?,
+            cost_theta: doc.get_f64_list("cost.theta")?,
+            cost_compute: doc.get_f64_list("cost.compute")?,
+            stragglers: parse_stragglers(&doc.get_str("cost.straggler", "")?)?,
             overlap: doc.get_bool("train.overlap", d.overlap)?,
             backend: doc.get_str("comm.backend", &d.backend)?,
             compression: doc.get_str("comm.compression", &d.compression)?,
@@ -304,10 +345,66 @@ impl ExperimentConfig {
         anyhow::ensure!(self.lr > 0.0, "lr must be positive");
         anyhow::ensure!((0.0..1.0).contains(&self.momentum), "momentum in [0,1)");
         anyhow::ensure!(self.threads >= 1, "threads must be >= 1");
+        // Cost overrides: a non-finite or non-positive alpha/theta/compute
+        // would silently produce NaN/negative sim clocks downstream —
+        // reject here (same treatment period/H_init/threads = 0 get).
+        // Deliberately stricter than NodeCosts::validate, which admits
+        // compute == 0 for programmatic pure-communication tables: a
+        // config-supplied zero is far more likely a typo'd unit than an
+        // analytic-table intent, so the user-facing path refuses it.
+        for (key, list) in [
+            ("cost.alpha", &self.cost_alpha),
+            ("cost.theta", &self.cost_theta),
+            ("cost.compute", &self.cost_compute),
+        ] {
+            if !(list.is_empty() || list.len() == 1 || list.len() == self.nodes) {
+                bail!(
+                    "'{key}' wants 1 or {} entries (one per node), got {}",
+                    self.nodes,
+                    list.len()
+                );
+            }
+            for (i, x) in list.iter().enumerate() {
+                if !(x.is_finite() && *x > 0.0) {
+                    bail!("'{key}[{i}]' must be finite and positive, got {x}");
+                }
+            }
+        }
+        for &(idx, factor) in &self.stragglers {
+            if idx >= self.nodes {
+                bail!("straggler index {idx} out of range for {} nodes", self.nodes);
+            }
+            if !(factor.is_finite() && factor > 0.0) {
+                bail!("straggler factor must be finite and positive, got {factor}");
+            }
+        }
         Topology::from_name(&self.topology, self.nodes)?;
         self.backend_kind()?;
         self.compression_kind()?;
         Ok(())
+    }
+
+    /// Resolve the per-node cost table from the overrides + straggler
+    /// specs over `base`. `None` when nothing is overridden — the
+    /// homogeneous path whose clocks reproduce the scalar `sim_seconds`
+    /// bit-exactly.
+    pub fn node_costs(&self, base: CostModel) -> Result<Option<NodeCosts>> {
+        if self.cost_alpha.is_empty()
+            && self.cost_theta.is_empty()
+            && self.cost_compute.is_empty()
+            && self.stragglers.is_empty()
+        {
+            return Ok(None);
+        }
+        let mut costs = NodeCosts::homogeneous(base, self.nodes);
+        spread_override(&self.cost_alpha, &mut costs.alpha, "cost.alpha")?;
+        spread_override(&self.cost_theta, &mut costs.theta, "cost.theta")?;
+        spread_override(&self.cost_compute, &mut costs.compute, "cost.compute")?;
+        for &(idx, factor) in &self.stragglers {
+            costs = costs.with_straggler(idx, factor)?;
+        }
+        costs.validate()?;
+        Ok(Some(costs))
     }
 
     pub fn topology(&self) -> Topology {
@@ -323,6 +420,48 @@ impl ExperimentConfig {
     pub fn compression_kind(&self) -> Result<Compression> {
         Compression::from_parts(&self.compression, self.topk_frac, self.int8_block)
     }
+}
+
+/// Apply a scalar-or-per-node override list onto a resolved table.
+fn spread_override(list: &[f64], out: &mut [f64], key: &str) -> Result<()> {
+    match list.len() {
+        0 => Ok(()),
+        1 => {
+            out.fill(list[0]);
+            Ok(())
+        }
+        l if l == out.len() => {
+            out.copy_from_slice(list);
+            Ok(())
+        }
+        l => bail!("'{key}' wants 1 or {} entries (one per node), got {l}", out.len()),
+    }
+}
+
+/// Parse straggler specs: "idx:factor" entries separated by commas, e.g.
+/// `--straggler 3:4` or `cost.straggler = "1:2.5,6:8"`. Empty => none.
+pub fn parse_stragglers(spec: &str) -> Result<Vec<(usize, f64)>> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        return Ok(Vec::new());
+    }
+    spec.split(',')
+        .map(|part| {
+            let part = part.trim();
+            let (idx, factor) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow!("straggler spec wants idx:factor, got '{part}'"))?;
+            let idx: usize = idx
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("straggler index must be an integer, got '{idx}'"))?;
+            let factor: f64 = factor
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("straggler factor must be numeric, got '{factor}'"))?;
+            Ok((idx, factor))
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -452,6 +591,84 @@ mod tests {
         assert!(ExperimentConfig::from_toml(&doc).is_err());
         let doc = Toml::parse("[comm]\ncompression = \"int8\"\nint8_block = 0\n").unwrap();
         assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn cost_overrides_parse_and_resolve() {
+        let doc = Toml::parse(
+            "[cluster]\nnodes = 3\n[cost]\nalpha = 2e-3\ntheta = [1e-9, 2e-9, 3e-9]\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.cost_alpha, vec![2e-3]);
+        assert_eq!(cfg.cost_theta.len(), 3);
+        let base = CostModel::generic();
+        let costs = cfg.node_costs(base).unwrap().expect("overrides present");
+        assert_eq!(costs.alpha, vec![2e-3; 3], "scalar spreads to every node");
+        assert_eq!(costs.theta, vec![1e-9, 2e-9, 3e-9]);
+        assert_eq!(costs.compute, vec![base.compute; 3], "untouched component keeps the base");
+        // No overrides at all => None (the bit-exact homogeneous path).
+        let plain = ExperimentConfig::default();
+        assert!(plain.node_costs(base).unwrap().is_none());
+    }
+
+    #[test]
+    fn cost_overrides_reject_nonfinite_nonpositive_and_ragged() {
+        // The NaN/negative-sim-clock guard: same bail! treatment
+        // period/H_init/threads = 0 get.
+        for bad in ["0.0", "-1e-3", "nan", "inf"] {
+            let doc = Toml::parse(&format!("[cost]\nalpha = {bad}\n")).unwrap();
+            assert!(ExperimentConfig::from_toml(&doc).is_err(), "alpha = {bad} must be rejected");
+            let doc = Toml::parse(&format!("[cost]\ntheta = [{bad}]\n")).unwrap();
+            assert!(ExperimentConfig::from_toml(&doc).is_err(), "theta = [{bad}]");
+            let doc = Toml::parse(&format!("[cost]\ncompute = {bad}\n")).unwrap();
+            assert!(ExperimentConfig::from_toml(&doc).is_err(), "compute = {bad}");
+        }
+        // Length must be 1 or n.
+        let doc =
+            Toml::parse("[cluster]\nnodes = 4\n[cost]\ncompute = [0.1, 0.2]\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn straggler_specs_parse_and_validate() {
+        assert_eq!(parse_stragglers("").unwrap(), vec![]);
+        assert_eq!(parse_stragglers("3:4").unwrap(), vec![(3, 4.0)]);
+        assert_eq!(
+            parse_stragglers("1:2.5, 6:8").unwrap(),
+            vec![(1, 2.5), (6, 8.0)]
+        );
+        assert!(parse_stragglers("3").is_err());
+        assert!(parse_stragglers("x:2").is_err());
+        assert!(parse_stragglers("1:fast").is_err());
+
+        let doc = Toml::parse(
+            "[cluster]\nnodes = 8\n[cost]\nstraggler = \"3:4\"\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.stragglers, vec![(3, 4.0)]);
+        let base = CostModel::calibrated_resnet50();
+        let costs = cfg.node_costs(base).unwrap().unwrap();
+        assert_eq!(costs.compute[3], 4.0 * base.compute);
+        assert_eq!(costs.alpha[3], 4.0 * base.alpha);
+        assert_eq!(costs.theta[3], base.theta);
+        assert_eq!(costs.compute[0], base.compute);
+        // Out-of-range index and non-positive factor are config errors.
+        let doc = Toml::parse("[cluster]\nnodes = 4\n[cost]\nstraggler = \"4:2\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+        let doc = Toml::parse("[cost]\nstraggler = \"0:0\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn stealing_parse_from_toml() {
+        let doc = Toml::parse("[train]\nstealing = true\nthreads = 4\n").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert!(cfg.stealing);
+        assert!(!ExperimentConfig::default().stealing, "static sharding is the default");
+        let doc = Toml::parse("[train]\nstealing = 2\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err(), "stealing must be a bool");
     }
 
     #[test]

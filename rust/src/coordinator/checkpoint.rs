@@ -7,32 +7,42 @@
 //! resume mid-period, not at round 0), Gossip-AGA's adaptive-period state
 //! (h / counter / F_init), SlowMo's outer buffers (x_prev_sync, slow
 //! momentum u), each worker's 256-bit RNG state (so batch streams
-//! continue mid-stream), and — since v3 — the CommPlane's cumulative
-//! traffic counters plus any compressed-gossip error-feedback residuals.
-//! A v2+ checkpoint restored into a *fresh* process replays
-//! bit-identically to an unbroken run (v3 for compressed runs).
+//! continue mid-stream), since v3 the CommPlane's cumulative traffic
+//! counters plus any compressed-gossip error-feedback residuals, and —
+//! since v4 — the per-node virtual clocks (each node's simulated seconds
+//! and barrier-wait account, so a heterogeneous/straggler run resumes on
+//! its exact time axis). A v2+ checkpoint restored into a *fresh* process
+//! replays bit-identically to an unbroken run (v3 for compressed runs,
+//! v4 for heterogeneous time axes).
 //!
-//! Format v3 (little-endian):
+//! Format v4 (little-endian):
 //!   magic "GPGA" | u32 version | u64 step | f64 sim_seconds |
 //!   u32 n | u32 d | n * d f32 params | u8 has_velocity |
 //!   [n * d f32 velocities] | u64 gossip_clock | u8 has_schedule |
 //!   [u64 h | u64 counter | f64 f_init | u8 f_init_ready] |
 //!   u8 has_slowmo | [d f32 prev | d f32 u] |
 //!   u8 has_rng | [n * 4 u64 worker RNG states] |
-//!   u8 has_comm | [u64 scalars_sent | u64 msgs | f64 comm_sim_seconds] |
+//!   u8 has_comm | [u64 scalars_sent | u64 msgs | f64 comm_sim_seconds |
+//!                  f64 barrier_wait (v4+)] |
 //!   u8 has_ef | [u8 codec (1 = topk, 2 = int8) | f64 topk_frac |
-//!                u64 int8_block | n * d f32 error-feedback residuals]
+//!                u64 int8_block | n * d f32 error-feedback residuals] |
+//!   u8 has_clocks | [n f64 node clocks | n f64 node barrier waits] (v4+)
 //!
 //! The v3 tail carries the CommPlane's cumulative traffic counters (so a
 //! resumed run's comm_scalars/comm_msgs columns continue rather than
 //! restarting at zero) and the per-node error-feedback residuals of
-//! compressed-gossip runs (so compressed resumes are exact too).
+//! compressed-gossip runs (so compressed resumes are exact too). The v4
+//! tail snapshots the [`crate::costmodel::VirtualClocks`] — the `sim_seconds`
+//! header field stays the critical path (the barrier max), so pre-v4
+//! readers of the same quantity and pre-v4 FILES both keep their meaning.
 //!
-//! v1 files (which end after the velocity block) and v2 files (which end
-//! after the RNG block) still load; the extra state defaults to "unset"
-//! so old checkpoints keep their old meaning (for v1, callers must replay
-//! the data streams themselves, as before; for pre-v3, traffic counters
-//! and residuals restart at zero).
+//! v1 files (which end after the velocity block), v2 files (which end
+//! after the RNG block) and v3 files (which end after the ef block) still
+//! load; the extra state defaults to "unset" so old checkpoints keep
+//! their old meaning (for v1, callers must replay the data streams
+//! themselves, as before; for pre-v3, traffic counters and residuals
+//! restart at zero; for pre-v4, every node resumes at the scalar
+//! `sim_seconds` with zeroed wait accounts).
 //!
 //! No serde offline — the writer/reader below is the substrate.
 
@@ -46,7 +56,7 @@ use crate::comm::{CommStats, Compression};
 use crate::params::ParamMatrix;
 
 const MAGIC: &[u8; 4] = b"GPGA";
-const VERSION: u32 = 3;
+const VERSION: u32 = 4;
 
 /// SlowMo outer-loop state (Wang et al. 2019): the parameters at the last
 /// global sync and the slow-momentum buffer.
@@ -54,6 +64,14 @@ const VERSION: u32 = 3;
 pub struct SlowMoState {
     pub prev: Vec<f32>,
     pub u: Vec<f32>,
+}
+
+/// Per-node virtual-time state (v4): node i's simulated clock and its
+/// cumulative barrier-wait account, both in seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClockState {
+    pub seconds: Vec<f64>,
+    pub waited: Vec<f64>,
 }
 
 /// A snapshot of trainer state.
@@ -83,6 +101,9 @@ pub struct Checkpoint {
     /// The codec that produced `ef_residuals` — restoring into a run with
     /// a different codec/parameters must be rejected, not silently mixed.
     pub ef_compression: Option<Compression>,
+    /// Per-node virtual clocks + barrier-wait accounts (None for pre-v4
+    /// files — every node resumes at `sim_seconds`, waits zeroed).
+    pub clocks: Option<ClockState>,
 }
 
 impl Checkpoint {
@@ -129,6 +150,14 @@ impl Checkpoint {
             self.ef_residuals.is_some() == has_codec,
             "ef_residuals and ef_compression must identify the same codec state"
         );
+        if let Some(cs) = &self.clocks {
+            anyhow::ensure!(
+                cs.seconds.len() == n && cs.waited.len() == n,
+                "clock state has {} clocks / {} waits for {n} nodes",
+                cs.seconds.len(),
+                cs.waited.len()
+            );
+        }
         let mut f = std::io::BufWriter::new(
             std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
         );
@@ -167,6 +196,7 @@ impl Checkpoint {
             f.write_all(&c.scalars_sent.to_le_bytes())?;
             f.write_all(&c.msgs.to_le_bytes())?;
             f.write_all(&c.sim_seconds.to_le_bytes())?;
+            f.write_all(&c.barrier_wait.to_le_bytes())?;
         }
         f.write_all(&[self.ef_residuals.is_some() as u8])?;
         if let Some(r) = &self.ef_residuals {
@@ -179,6 +209,12 @@ impl Checkpoint {
             f.write_all(&frac.to_le_bytes())?;
             f.write_all(&block.to_le_bytes())?;
             write_f32s(&mut f, r.as_slice())?;
+        }
+        f.write_all(&[self.clocks.is_some() as u8])?;
+        if let Some(cs) = &self.clocks {
+            for x in cs.seconds.iter().chain(&cs.waited) {
+                f.write_all(&x.to_le_bytes())?;
+            }
         }
         Ok(())
     }
@@ -248,6 +284,9 @@ impl Checkpoint {
                     scalars_sent: read_u64(&mut f)?,
                     msgs: read_u64(&mut f)?,
                     sim_seconds: read_f64(&mut f)?,
+                    // The barrier-wait breakdown joined the comm block in
+                    // v4; v3 files carry the pre-straggler accounting.
+                    barrier_wait: if version >= 4 { read_f64(&mut f)? } else { 0.0 },
                 })
             } else {
                 None
@@ -272,6 +311,19 @@ impl Checkpoint {
         } else {
             (None, None, None)
         };
+        let clocks = if version >= 4 && read_u8(&mut f)? == 1 {
+            let mut seconds = Vec::with_capacity(n);
+            for _ in 0..n {
+                seconds.push(read_f64(&mut f)?);
+            }
+            let mut waited = Vec::with_capacity(n);
+            for _ in 0..n {
+                waited.push(read_f64(&mut f)?);
+            }
+            Some(ClockState { seconds, waited })
+        } else {
+            None
+        };
         Ok(Checkpoint {
             step,
             sim_seconds,
@@ -284,6 +336,7 @@ impl Checkpoint {
             comm,
             ef_residuals,
             ef_compression,
+            clocks,
         })
     }
 }
@@ -370,6 +423,7 @@ mod tests {
             comm: None,
             ef_residuals: None,
             ef_compression: None,
+            clocks: None,
         };
         let path = tmp("vel");
         ck.save(&path).unwrap();
@@ -392,6 +446,7 @@ mod tests {
             comm: None,
             ef_residuals: None,
             ef_compression: None,
+            clocks: None,
         };
         let path = tmp("novel");
         ck.save(&path).unwrap();
@@ -418,9 +473,18 @@ mod tests {
                 u: rng.normal_vec(d, 0.5),
             }),
             rng_states: (0..4u64).map(|i| Rng::new(i).state()).collect(),
-            comm: Some(CommStats { scalars_sent: 123_456, msgs: 789, sim_seconds: 4.2 }),
+            comm: Some(CommStats {
+                scalars_sent: 123_456,
+                msgs: 789,
+                sim_seconds: 4.2,
+                barrier_wait: 0.7,
+            }),
             ef_residuals: Some(random_matrix(4, d, 6, 0.01)),
             ef_compression: Some(Compression::TopK { frac: 0.25 }),
+            clocks: Some(ClockState {
+                seconds: vec![12.5, 11.0, 12.5, 9.25],
+                waited: vec![0.0, 1.5, 0.0, 3.25],
+            }),
         };
         let path = tmp("stateful");
         ck.save(&path).unwrap();
@@ -454,7 +518,108 @@ mod tests {
         assert!(back.rng_states.is_empty());
         assert!(back.comm.is_none() && back.ef_residuals.is_none());
         assert!(back.ef_compression.is_none());
+        assert!(back.clocks.is_none(), "v1 files predate per-node clocks");
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn loads_v2_files_which_end_after_the_rng_block() {
+        let path = tmp("v2");
+        let params = vec![1.0f32, 0.0, 0.0, 1.0]; // n=2, d=2
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"GPGA");
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&17u64.to_le_bytes());
+        bytes.extend_from_slice(&3.5f64.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        for x in &params {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        bytes.push(0); // no velocities
+        bytes.extend_from_slice(&3u64.to_le_bytes()); // gossip clock
+        bytes.push(0); // no schedule
+        bytes.push(0); // no slowmo
+        bytes.push(1); // rng states, 2 workers x 4 words
+        for w in 0..8u64 {
+            bytes.extend_from_slice(&(w + 1).to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 17);
+        assert_eq!(back.gossip_clock, 3);
+        assert_eq!(back.rng_states.len(), 2);
+        assert_eq!(back.rng_states[1], [5, 6, 7, 8]);
+        assert!(back.comm.is_none(), "v2 files predate comm totals");
+        assert!(back.clocks.is_none(), "v2 files predate per-node clocks");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn loads_v3_files_with_three_field_comm_and_no_clocks() {
+        // Hand-write the v3 layout: comm block has no barrier_wait and the
+        // file ends after the ef flag — the pre-virtual-time format.
+        let path = tmp("v3");
+        let params = vec![0.5f32, 1.5, -2.0, 3.0]; // n=2, d=2
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"GPGA");
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        bytes.extend_from_slice(&40u64.to_le_bytes());
+        bytes.extend_from_slice(&7.25f64.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        for x in &params {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        bytes.push(0); // no velocities
+        bytes.extend_from_slice(&5u64.to_le_bytes()); // gossip clock
+        bytes.push(0); // no schedule
+        bytes.push(0); // no slowmo
+        bytes.push(0); // no rng
+        bytes.push(1); // comm present — THREE fields in v3
+        bytes.extend_from_slice(&1000u64.to_le_bytes());
+        bytes.extend_from_slice(&20u64.to_le_bytes());
+        bytes.extend_from_slice(&1.5f64.to_le_bytes());
+        bytes.push(0); // no ef residuals; v3 files end here
+        std::fs::write(&path, &bytes).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 40);
+        assert_eq!(back.gossip_clock, 5);
+        let comm = back.comm.unwrap();
+        assert_eq!((comm.scalars_sent, comm.msgs), (1000, 20));
+        assert_eq!(comm.sim_seconds, 1.5);
+        assert_eq!(comm.barrier_wait, 0.0, "v3 comm blocks predate barrier waits");
+        assert!(back.clocks.is_none(), "v3 files predate per-node clocks");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn clock_state_roundtrips_and_shape_mismatch_rejected() {
+        let mut ck = Checkpoint {
+            step: 3,
+            sim_seconds: 10.0,
+            params: ParamMatrix::zeros(3, 2),
+            velocities: None,
+            gossip_clock: 1,
+            schedule: None,
+            slowmo: None,
+            rng_states: Vec::new(),
+            comm: None,
+            ef_residuals: None,
+            ef_compression: None,
+            clocks: Some(ClockState {
+                seconds: vec![10.0, 8.0, 6.5],
+                waited: vec![0.0, 2.0, 3.5],
+            }),
+        };
+        let path = tmp("clocks");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(path).ok();
+        // 2 clocks for 3 nodes: refuse to write a partial time axis.
+        ck.clocks = Some(ClockState { seconds: vec![1.0, 2.0], waited: vec![0.0, 0.0, 0.0] });
+        assert!(ck.save(&tmp("clkmis")).is_err());
     }
 
     #[test]
@@ -471,6 +636,7 @@ mod tests {
             comm: None,
             ef_residuals: Some(ParamMatrix::zeros(2, 4)),
             ef_compression: Some(Compression::Int8 { block: 64 }),
+            clocks: None,
         };
         assert!(ck.save(&tmp("efmis")).is_err());
         // Residuals without a codec identity are rejected too.
@@ -486,6 +652,7 @@ mod tests {
             comm: None,
             ef_residuals: Some(ParamMatrix::zeros(2, 3)),
             ef_compression: None,
+            clocks: None,
         };
         assert!(ck.save(&tmp("efnocodec")).is_err());
     }
@@ -523,6 +690,7 @@ mod tests {
             comm: None,
             ef_residuals: None,
             ef_compression: None,
+            clocks: None,
         };
         assert!(ck.save(&tmp("velmis")).is_err());
     }
@@ -541,6 +709,7 @@ mod tests {
             comm: None,
             ef_residuals: None,
             ef_compression: None,
+            clocks: None,
         };
         assert!(ck.save(&tmp("rngmis")).is_err());
     }

@@ -8,11 +8,19 @@
 //!   3. the [`Schedule`] decides the communication action — gossip mix,
 //!      exact global average, or nothing — executed on the pluggable
 //!      [`CommBackend`] ([`TrainerOptions::backend`]: the shared-memory
-//!      mixer or the message-passing bus), which reports the [`CommStats`]
-//!      it incurred;
-//!   4. the [`SimClock`] advances by the backend's alpha-beta charge so a
-//!      single-process run reports paper-style wall-clock columns, and the
-//!      cumulative traffic flows into every logged [`Record`].
+//!      mixer or the message-passing bus), which reports the
+//!      [`crate::comm::CommCharge`] it incurred (aggregate traffic plus
+//!      per-node alpha-beta seconds);
+//!   4. the per-node [`VirtualClocks`] advance by the charge under the
+//!      action's barrier scope — gossip synchronizes each node with its
+//!      in-neighborhood only, a global average (and eval / checkpoint) is a
+//!      full barrier — so `sim_seconds` is the run's true critical path.
+//!      With homogeneous costs ([`TrainerOptions::node_costs`] unset) every
+//!      barrier is a no-op and the clocks reproduce the pre-virtual-time
+//!      scalar clock bit-exactly; per-node overrides and `--straggler`
+//!      open the heterogeneous regimes (the cumulative traffic still flows
+//!      into every logged [`Record`], now alongside the straggler-slack and
+//!      barrier-wait columns).
 //!
 //! Storage: all worker parameters live in one contiguous
 //! [`ParamMatrix`] (worker i = row i). Phases 1-2, the gossip mix, the
@@ -55,7 +63,7 @@ use crate::comm::{
     BackendKind, BusBackend, CommBackend, CommStats, Compression, PendingComm, SharedBackend,
 };
 use crate::config::ExperimentConfig;
-use crate::costmodel::{CostModel, SimClock};
+use crate::costmodel::{BarrierScope, CostModel, NodeCosts, VirtualClocks};
 use crate::data::{ClusterData, LogRegData, TokenCorpus};
 use crate::exec::WorkerPool;
 use crate::metrics::{consensus_distance_pooled, History, Record};
@@ -163,6 +171,13 @@ pub struct TrainerOptions {
     /// (e.g. the MLP suite bills communication at ResNet-50's d = 25.5e6).
     pub cost: CostModel,
     pub cost_dim: usize,
+    /// Per-node cost overrides (heterogeneous clusters / stragglers).
+    /// `None` = every node carries `cost` — the homogeneous case whose
+    /// critical path reproduces the pre-virtual-time `sim_seconds`
+    /// bit-exact. A `Some` table REPLACES `cost` for billing wholesale:
+    /// if you change `cost` after [`TrainerOptions::from_config`] resolved
+    /// a table, rebuild the table against the new base too.
+    pub node_costs: Option<NodeCosts>,
     /// Record a metrics row every `log_every` steps (consensus distance is
     /// O(n d), so dense logging of big models costs time).
     pub log_every: usize,
@@ -170,6 +185,10 @@ pub struct TrainerOptions {
     /// eval pass shard across. 1 = sequential (the default); results are
     /// bit-identical at any value.
     pub threads: usize,
+    /// Work-stealing dynamic chunking: the pool over-splits every parallel
+    /// region so idle threads pull extra chunks (heterogeneous-cost
+    /// workers). Bit-identical to static sharding; off by default.
+    pub stealing: bool,
     /// Double-buffered async gossip: overlap the round-t mix with round
     /// t+1's sampling phase. Bit-identical to BSP at every drained
     /// boundary (and trivially so at every k·H global average); off by
@@ -186,6 +205,7 @@ pub struct TrainerOptions {
 
 impl TrainerOptions {
     pub fn from_config(cfg: &ExperimentConfig, cost_dim: usize) -> TrainerOptions {
+        let base_cost = CostModel::calibrated_resnet50();
         TrainerOptions {
             algorithm: cfg.algorithm,
             topology: cfg.topology(),
@@ -201,10 +221,15 @@ impl TrainerOptions {
             nesterov: cfg.nesterov,
             seed: cfg.seed,
             slowmo: SlowMoParams::default(),
-            cost: CostModel::calibrated_resnet50(),
+            // One calibration feeds BOTH the base model and the resolved
+            // per-node table, so straggler factors always scale the same
+            // alpha/compute the homogeneous path bills.
+            cost: base_cost,
             cost_dim,
+            node_costs: cfg.node_costs(base_cost).expect("validated"),
             log_every: cfg.log_every,
             threads: cfg.threads,
+            stealing: cfg.stealing,
             overlap: cfg.overlap,
             backend: cfg.backend_kind().expect("validated"),
             compression: cfg.compression_kind().expect("validated"),
@@ -240,7 +265,14 @@ pub struct Trainer {
     /// The persistent execution engine every parallel phase shards across.
     pool: WorkerPool,
     schedule: Box<dyn Schedule>,
-    clock: SimClock,
+    /// One simulated clock per node (critical-path time plane); advanced
+    /// per action with the resolved per-node `node_costs`.
+    clocks: VirtualClocks,
+    /// The resolved per-node cost table (homogeneous from `opts.cost`
+    /// unless `opts.node_costs` overrides it).
+    node_costs: NodeCosts,
+    /// Zero comm charge for `CommAction::None` steps (no per-step alloc).
+    no_comm: Vec<f64>,
     /// SlowMo outer state (parameters at last sync + slow momentum buffer).
     slowmo_prev: Vec<f32>,
     slowmo_u: Vec<f32>,
@@ -270,11 +302,23 @@ impl Trainer {
             .collect();
         let params = ParamMatrix::broadcast(n, &init_params);
         let schedule = schedule_for(opts.algorithm, opts.period, opts.aga_init_period, opts.aga_warmup)?;
+        let node_costs = match &opts.node_costs {
+            Some(c) => {
+                anyhow::ensure!(
+                    c.n() == n,
+                    "cost table covers {} nodes, topology has {n}",
+                    c.n()
+                );
+                c.validate()?;
+                c.clone()
+            }
+            None => NodeCosts::homogeneous(opts.cost, n),
+        };
         let backend: Box<dyn CommBackend> = match opts.backend {
             BackendKind::Shared => Box::new(SharedBackend::new(
                 &opts.topology,
                 d,
-                opts.cost,
+                &node_costs,
                 opts.cost_dim,
                 opts.compression,
             )),
@@ -283,13 +327,18 @@ impl Trainer {
             BackendKind::Bus => Box::new(BusBackend::new(
                 &opts.topology,
                 d,
-                opts.cost,
+                &node_costs,
                 opts.cost_dim,
                 opts.compression,
                 schedule.uses_global_average(),
             )),
         };
-        let pool = WorkerPool::new(opts.threads);
+        let pool = if opts.stealing {
+            WorkerPool::new_stealing(opts.threads)
+        } else {
+            WorkerPool::new(opts.threads)
+        };
+        let clocks = VirtualClocks::new(&opts.topology);
         let slowmo_prev = if opts.algorithm == AlgorithmKind::SlowMo { init_params } else { Vec::new() };
         let slowmo_u = if opts.algorithm == AlgorithmKind::SlowMo { vec![0.0; d] } else { Vec::new() };
         Ok(Trainer {
@@ -301,7 +350,9 @@ impl Trainer {
             backend,
             pool,
             schedule,
-            clock: SimClock::default(),
+            clocks,
+            node_costs,
+            no_comm: vec![0.0; n],
             slowmo_prev,
             slowmo_u,
             step: 0,
@@ -341,8 +392,38 @@ impl Trainer {
         &self.params
     }
 
+    /// Simulated wall-clock of the run: the critical path through the
+    /// per-node virtual clocks (== every node's clock in a homogeneous run
+    /// — bit-identical to the pre-virtual-time scalar clock).
     pub fn sim_seconds(&self) -> f64 {
-        self.clock.seconds
+        self.clocks.max_seconds()
+    }
+
+    /// The fastest node's virtual clock.
+    pub fn sim_seconds_min(&self) -> f64 {
+        self.clocks.min_seconds()
+    }
+
+    /// Straggler slack: critical path minus the fastest node's clock
+    /// (0 in a homogeneous run).
+    pub fn straggler_slack(&self) -> f64 {
+        self.clocks.slack()
+    }
+
+    /// Total seconds nodes have spent stalled at synchronization barriers
+    /// behind slower peers, summed over nodes.
+    pub fn barrier_wait_seconds(&self) -> f64 {
+        self.clocks.total_wait()
+    }
+
+    /// Per-node virtual clock readings (worker i = entry i).
+    pub fn node_sim_seconds(&self) -> &[f64] {
+        self.clocks.seconds()
+    }
+
+    /// The resolved per-node cost table this run bills against.
+    pub fn node_costs(&self) -> &NodeCosts {
+        &self.node_costs
     }
 
     pub fn current_period(&self) -> usize {
@@ -368,10 +449,13 @@ impl Trainer {
 
     /// Cumulative measured communication (wire scalars, messages,
     /// alpha-beta seconds) over all completed actions — the same
-    /// accounting on either backend. Overlap note: an in-flight async
-    /// round is counted once drained.
+    /// accounting on either backend — plus the clocks' cumulative
+    /// barrier-wait breakdown. Overlap note: an in-flight async round is
+    /// counted once drained.
     pub fn comm_stats(&self) -> CommStats {
-        self.backend.total()
+        let mut total = self.backend.total();
+        total.barrier_wait = self.clocks.total_wait();
+        total
     }
 
     /// Complete the in-flight overlap mix, if any. After this the visible
@@ -406,10 +490,18 @@ impl Trainer {
         // 3: communication action (the pool caps its own shard counts —
         // gossip at n rows, the global-average mean at d columns; one
         // policy, `WorkerPool::shards`). Every action reports the
-        // CommStats it incurred; the backend accumulates the run total.
+        // CommCharge it incurred; the backend accumulates the run total.
+        //
+        // 4 (fused with 3 below): the per-node clocks advance by one
+        // `compute_i + comm_i` charge under the action's barrier scope.
+        // The fused addition and the exact f64 barrier max make the
+        // homogeneous case bit-identical to the old scalar
+        // `advance(compute + sim_seconds)` sequence.
         let action = self.schedule.action(k, mean_loss);
-        let stats = match action {
-            CommAction::None => CommStats::default(),
+        match action {
+            CommAction::None => {
+                self.clocks.advance(&self.node_costs.compute, &self.no_comm, BarrierScope::None);
+            }
             CommAction::Gossip => {
                 let mut issued = None;
                 if self.opts.overlap {
@@ -422,30 +514,41 @@ impl Trainer {
                 }
                 match issued {
                     Some(pending) => {
-                        // Clock charges at issue time — the round WILL
+                        // Clocks charge at issue time — the round WILL
                         // complete (or the run fails), same as BSP billing.
-                        let s = pending.stats();
+                        let charge = pending.charge();
+                        self.clocks.advance(
+                            &self.node_costs.compute,
+                            &charge.node_seconds,
+                            charge.barrier,
+                        );
                         self.pending = Some(pending);
-                        s
                     }
                     // Backend without async support (bus, or compressed
                     // transmit): the schedule falls back to the
                     // synchronous round, bit-identical either way.
-                    None => self.backend.gossip(&mut self.params, &self.pool)?,
+                    None => {
+                        let charge = self.backend.gossip(&mut self.params, &self.pool)?;
+                        self.clocks.advance(
+                            &self.node_costs.compute,
+                            &charge.node_seconds,
+                            charge.barrier,
+                        );
+                    }
                 }
             }
             CommAction::GlobalAverage => {
-                let s = self.backend.global_average(&mut self.params, &self.pool)?;
+                let charge = self.backend.global_average(&mut self.params, &self.pool)?;
                 if self.opts.algorithm == AlgorithmKind::SlowMo {
                     self.slowmo_outer_update(lr);
                 }
-                s
+                self.clocks.advance(
+                    &self.node_costs.compute,
+                    &charge.node_seconds,
+                    charge.barrier,
+                );
             }
-        };
-        // 4: simulated clock — compute plus whatever the backend billed
-        // for the action (the shared backend bills the paper's alpha-beta
-        // formulas, so this is the exact pre-CommPlane clock).
-        self.clock.advance(self.opts.cost.compute + stats.sim_seconds);
+        }
         self.step += 1;
         Ok(action)
     }
@@ -535,9 +638,12 @@ impl Trainer {
     /// Sharded across the pool, one slot per node; the node totals reduce
     /// in ascending order, so every pool size produces the same bits.
     /// Drains the in-flight mix first (the mean must see the post-mix
-    /// iterate, like the BSP schedule would).
+    /// iterate, like the BSP schedule would). Eval is a synchronization
+    /// point: gathering x-bar needs every row, so the virtual clocks
+    /// advance to the barrier max (a no-op in homogeneous runs).
     pub fn global_loss(&mut self) -> Result<f64> {
         self.drain()?;
+        self.clocks.sync();
         self.params.mean_into(&mut self.mean_buf);
         let n = self.workers.len();
         let d = self.mean_buf.len();
@@ -580,13 +686,17 @@ impl Trainer {
 
     /// Snapshot the full training state (see [`checkpoint`]): parameters,
     /// velocities, counters, the gossip clock, adaptive-schedule state,
-    /// SlowMo outer buffers, the backend's cumulative traffic counters and
-    /// any compressor residuals. DRAINS the in-flight overlap mix first — the
-    /// snapshot must be a BSP step boundary, never a half-mixed state.
-    /// Errors if only a strict subset of workers has velocity state (a
-    /// partial snapshot could not resume exactly).
+    /// SlowMo outer buffers, the backend's cumulative traffic counters,
+    /// any compressor residuals, and — since v4 — the per-node virtual
+    /// clocks (so resumed heterogeneous runs keep their time axis). DRAINS
+    /// the in-flight overlap mix first — the snapshot must be a BSP step
+    /// boundary, never a half-mixed state — and, like eval, acts as a
+    /// synchronization point for the virtual clocks (a no-op in
+    /// homogeneous runs). Errors if only a strict subset of workers has
+    /// velocity state (a partial snapshot could not resume exactly).
     pub fn checkpoint(&mut self) -> Result<checkpoint::Checkpoint> {
         self.drain()?;
+        self.clocks.sync();
         let n = self.workers.len();
         let d = self.params.d();
         let with_vel = self.workers.iter().filter(|w| w.opt.velocity_buf().is_some()).count();
@@ -616,16 +726,20 @@ impl Trainer {
         let ef_compression = ef_residuals.as_ref().map(|_| self.opts.compression);
         Ok(checkpoint::Checkpoint {
             step: self.step as u64,
-            sim_seconds: self.clock.seconds,
+            sim_seconds: self.clocks.max_seconds(),
             params: self.params.clone(),
             velocities,
             gossip_clock: self.backend.gossip_clock() as u64,
             schedule: self.schedule.export_state(),
             slowmo,
             rng_states: self.workers.iter().map(|w| w.rng.state()).collect(),
-            comm: Some(self.backend.total()),
+            comm: Some(self.comm_stats()),
             ef_residuals,
             ef_compression,
+            clocks: Some(checkpoint::ClockState {
+                seconds: self.clocks.seconds().to_vec(),
+                waited: self.clocks.waited().to_vec(),
+            }),
         })
     }
 
@@ -671,7 +785,11 @@ impl Trainer {
         self.backend.set_gossip_clock(ck.gossip_clock as usize);
         // Traffic counters continue from the snapshot (pre-v3 files carry
         // none — counters restart at zero, documented in `checkpoint`).
-        self.backend.restore_total(ck.comm.unwrap_or_default());
+        // The barrier-wait breakdown lives in the clock state, so the
+        // backend total carries it zeroed.
+        let mut comm = ck.comm.unwrap_or_default();
+        comm.barrier_wait = 0.0;
+        self.backend.restore_total(comm);
         // Compressed runs: re-inject the exact error-feedback residuals the
         // interrupted run was carrying (None zeroes them). The codec that
         // produced them must match this run's — residuals are meaningless
@@ -736,7 +854,13 @@ impl Trainer {
             }
         }
         self.step = ck.step as usize;
-        self.clock.seconds = ck.sim_seconds;
+        // Per-node time axis: a v4 checkpoint restores every node's clock
+        // and wait account exactly; older files carry one scalar clock, so
+        // every node resumes at it (lockstep) with zeroed waits.
+        match &ck.clocks {
+            Some(cs) => self.clocks.restore(&cs.seconds, &cs.waited)?,
+            None => self.clocks.restore_uniform(ck.sim_seconds),
+        }
         Ok(())
     }
 
@@ -755,17 +879,25 @@ impl Trainer {
             let last = s + 1 == steps;
             if s % self.opts.log_every.max(1) == 0 || last {
                 self.drain()?;
+                // Capture the clock spread BEFORE the eval barrier syncs
+                // everyone up — the logged slack is the cluster's spread as
+                // it ran, not post-gather.
+                let sim_min = self.clocks.min_seconds();
+                let slack = self.clocks.slack();
                 let loss =
                     if cheap_eval { self.global_loss()? } else { self.mean_loss() };
-                let comm = self.backend.total();
+                let comm = self.comm_stats();
                 hist.push(Record {
                     step: self.step - 1,
                     loss,
                     consensus: self.consensus(),
                     lr: self.opts.lr.at(self.step - 1),
-                    sim_seconds: self.clock.seconds,
+                    sim_seconds: self.clocks.max_seconds(),
                     comm_scalars: comm.scalars_sent,
                     comm_msgs: comm.msgs,
+                    sim_min_seconds: sim_min,
+                    straggler_slack: slack,
+                    barrier_wait: comm.barrier_wait,
                 });
             }
         }

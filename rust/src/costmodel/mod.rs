@@ -1,4 +1,5 @@
-//! The paper's alpha-beta communication time model (§3.4, Appendix D/H).
+//! The paper's alpha-beta communication time model (§3.4, Appendix D/H),
+//! and the per-node virtual-time plane built on top of it.
 //!
 //! `alpha` = point-to-point latency, `theta` = per-scalar transfer time.
 //! For a d-dimensional model:
@@ -11,6 +12,37 @@
 //! Constants are calibrated from the paper's own measurements (Appendix H,
 //! Table 17): ResNet-50 (d = 25.5 M): all-reduce 278 ms, gossip 150 ms on a
 //! one-peer graph (|N_i| = 2 incl. self), n = 32 nodes.
+//!
+//! §Virtual time. [`CostModel`] is a *scalar* model: one alpha/theta/compute
+//! triple shared by every node, which can only describe a homogeneous
+//! cluster advancing in lockstep. [`NodeCosts`] generalizes it to a
+//! per-node table (heterogeneous clusters, stragglers, per-link asymmetry)
+//! and [`VirtualClocks`] carries one simulated clock per node, advanced per
+//! action under the action's [`BarrierScope`]:
+//!
+//! * local compute: node i advances by its own `compute[i]`;
+//! * a gossip round synchronizes each node with its **in-neighborhood**
+//!   only, so a straggler's slowness propagates one hop per round instead
+//!   of stalling the whole cluster;
+//! * a global average (and eval / checkpoint) is a **full barrier**: every
+//!   node waits for the slowest.
+//!
+//! The billing convention is "a node cannot begin iteration k until every
+//! peer it will hear from has finished iteration k-1"; each step then costs
+//! the node one fused `compute + comm` charge. With a homogeneous cost
+//! table the critical path (`max_seconds`, the reported `sim_seconds`)
+//! reproduces the pre-refactor scalar [`SimClock`] **bit-exactly** — the
+//! scalar clock always billed each action's busiest node, and that node's
+//! barrier start is its own clock (same additions, same order; asserted by
+//! `rust/tests/virtual_time.rs`) — so every existing time table is
+//! unchanged while the straggler scenario space opens up. Whether the
+//! *other* clocks stay in lockstep depends on per-node traffic too: on
+//! regular topologies with even bus chunks they do (slack and waits stay
+//! 0); a homogeneous star still spreads, because its leaves genuinely wait
+//! on the busier hub — structural asymmetry the scalar clock could never
+//! show.
+
+use anyhow::{bail, Result};
 
 use crate::topology::Topology;
 
@@ -122,6 +154,302 @@ impl SimClock {
     }
 }
 
+/// Per-node alpha-beta model: node i's point-to-point latency, per-scalar
+/// transfer time and per-iteration compute time. The scalar [`CostModel`]
+/// is the homogeneous special case ([`NodeCosts::homogeneous`]); per-node
+/// overrides come from the `[cost]` config section (`cost.alpha`,
+/// `cost.theta`, `cost.compute` — scalar or length-n array) and the
+/// `--straggler idx:factor` convenience flag.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeCosts {
+    /// Per-node point-to-point latency (seconds).
+    pub alpha: Vec<f64>,
+    /// Per-node transfer time per f32 scalar (seconds).
+    pub theta: Vec<f64>,
+    /// Per-node per-iteration compute time (seconds).
+    pub compute: Vec<f64>,
+}
+
+impl NodeCosts {
+    /// Every node carries the scalar model's costs — the lockstep case the
+    /// pre-virtual-time clock described.
+    pub fn homogeneous(base: CostModel, n: usize) -> NodeCosts {
+        NodeCosts {
+            alpha: vec![base.alpha; n],
+            theta: vec![base.theta; n],
+            compute: vec![base.compute; n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.alpha.len()
+    }
+
+    /// True when every node carries identical costs (clocks stay lockstep
+    /// and the barriers are no-ops).
+    pub fn is_homogeneous(&self) -> bool {
+        let same = |v: &[f64]| v.windows(2).all(|w| w[0] == w[1]);
+        same(&self.alpha) && same(&self.theta) && same(&self.compute)
+    }
+
+    /// Mark node `idx` as a straggler: its compute AND its per-message
+    /// latency `alpha` scale by `factor` (an overloaded node computes
+    /// slowly and is slow to service transfers; wire bandwidth `theta` is a
+    /// link/NIC property and stays — override `cost.theta` directly for
+    /// bandwidth asymmetry). This is the §3.4 story under heterogeneity:
+    /// All-Reduce pays the straggler's latency n times per round, one-peer
+    /// gossip pays it once.
+    pub fn with_straggler(mut self, idx: usize, factor: f64) -> Result<NodeCosts> {
+        let n = self.n();
+        if idx >= n {
+            bail!("straggler index {idx} out of range for {n} nodes");
+        }
+        if !(factor.is_finite() && factor > 0.0) {
+            bail!("straggler factor must be finite and positive, got {factor}");
+        }
+        self.compute[idx] *= factor;
+        self.alpha[idx] *= factor;
+        Ok(self)
+    }
+
+    /// Reject tables a simulated clock cannot bill: every entry must be
+    /// finite, `alpha`/`theta` positive, `compute` non-negative (analytic
+    /// tables legitimately bill pure communication).
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n();
+        if n == 0 || self.theta.len() != n || self.compute.len() != n {
+            bail!(
+                "cost table shape mismatch: {} alpha / {} theta / {} compute entries",
+                self.alpha.len(),
+                self.theta.len(),
+                self.compute.len()
+            );
+        }
+        for (name, v, min_excl) in [
+            ("alpha", &self.alpha, true),
+            ("theta", &self.theta, true),
+            ("compute", &self.compute, false),
+        ] {
+            for (i, x) in v.iter().enumerate() {
+                if !x.is_finite() || (min_excl && *x <= 0.0) || *x < 0.0 {
+                    let want = if min_excl { "positive" } else { "non-negative" };
+                    bail!("cost.{name}[{i}] must be finite and {want}, got {x}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Node i's cost of one gossip round at in-degree `deg_incl_self`:
+    /// `|N_i| theta_i d + alpha_i` (§3.4, billed at the node's own
+    /// neighborhood size). Bit-identical to [`CostModel::gossip`] for the
+    /// max-degree node of a homogeneous table.
+    pub fn gossip_node(&self, i: usize, deg_incl_self: usize, d: usize) -> f64 {
+        deg_incl_self as f64 * self.theta[i] * d as f64 + self.alpha[i]
+    }
+
+    /// Node i's cost of one exact global average over `n` nodes:
+    /// `2 theta_i d + n alpha_i` (§3.4). Bit-identical to
+    /// [`CostModel::all_reduce`] on a homogeneous table.
+    pub fn all_reduce_node(&self, i: usize, n: usize, d: usize) -> f64 {
+        2.0 * self.theta[i] * d as f64 + n as f64 * self.alpha[i]
+    }
+
+    /// Critical-path time of one gossip round: a single [`VirtualClocks`]
+    /// advance from zero under the round's neighborhood barrier, maxed over
+    /// the topology's round cycle. Equals [`CostModel::gossip`] bit-exactly
+    /// on a homogeneous table.
+    pub fn gossip_critical(&self, topo: &Topology, d: usize) -> f64 {
+        let n = self.n();
+        debug_assert_eq!(n, topo.n);
+        let zeros = vec![0.0; n];
+        let mut worst = 0.0f64;
+        for r in 0..topo.rounds() {
+            let comm: Vec<f64> = (0..n)
+                .map(|i| self.gossip_node(i, topo.in_neighbors(i, r).len(), d))
+                .collect();
+            let mut clocks = VirtualClocks::new(topo);
+            clocks.advance(&zeros, &comm, BarrierScope::Neighborhood { round: r });
+            worst = worst.max(clocks.max_seconds());
+        }
+        worst
+    }
+
+    /// Critical-path time of one global average: a single full-barrier
+    /// [`VirtualClocks`] advance from zero. Equals [`CostModel::all_reduce`]
+    /// bit-exactly on a homogeneous table.
+    pub fn all_reduce_critical(&self, topo: &Topology, d: usize) -> f64 {
+        let n = self.n();
+        debug_assert_eq!(n, topo.n);
+        let zeros = vec![0.0; n];
+        let comm: Vec<f64> = (0..n).map(|i| self.all_reduce_node(i, n, d)).collect();
+        let mut clocks = VirtualClocks::new(topo);
+        clocks.advance(&zeros, &comm, BarrierScope::Global);
+        clocks.max_seconds()
+    }
+}
+
+/// Which nodes a clock advance synchronizes before it runs — the
+/// [`VirtualClocks`] counterpart of a communication action's wait set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BarrierScope {
+    /// No synchronization (local compute only).
+    None,
+    /// Each node waits for its in-neighborhood (incl. itself) at `round` —
+    /// one gossip round's wait set; slowness propagates one hop per round.
+    Neighborhood { round: usize },
+    /// Full barrier: every node waits for the slowest (global average,
+    /// eval, checkpoint).
+    Global,
+}
+
+/// One simulated clock per node, advanced by the coordinator as it
+/// executes; `max_seconds` is the run's critical path (what the paper's
+/// wall-clock columns measure on a heterogeneous cluster), `slack` the
+/// fastest-to-slowest spread, and `waited` the per-node time lost stalled
+/// at barriers behind slower peers.
+///
+/// Determinism/compatibility contract: each advance charges node i a single
+/// fused `start_i + (compute_i + comm_i)` addition, where `start_i` is the
+/// barrier max over the scope (an exact f64 max, no rounding). When every
+/// node's charge is identical (homogeneous costs, uniform traffic) every
+/// `start_i` equals the node's own clock and the accumulation is literally
+/// the scalar [`SimClock`]'s `seconds += compute + comm` sequence; more
+/// generally the action's busiest node has its own clock as its barrier
+/// start, so `max_seconds` tracks the scalar bill bit-exactly on either
+/// backend even when degrees or chunk sizes differ across nodes.
+#[derive(Clone, Debug)]
+pub struct VirtualClocks {
+    seconds: Vec<f64>,
+    waited: Vec<f64>,
+    /// In-neighbors incl. self per round — the wait set of one gossip round
+    /// (same tables the mixer's weight rows index).
+    neigh: Vec<Vec<Vec<usize>>>,
+    /// Scratch for barrier starts (no per-step allocation).
+    starts: Vec<f64>,
+}
+
+impl VirtualClocks {
+    pub fn new(topo: &Topology) -> VirtualClocks {
+        let n = topo.n;
+        let neigh = (0..topo.rounds())
+            .map(|r| (0..n).map(|i| topo.in_neighbors(i, r)).collect())
+            .collect();
+        VirtualClocks {
+            seconds: vec![0.0; n],
+            waited: vec![0.0; n],
+            neigh,
+            starts: vec![0.0; n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.seconds.len()
+    }
+
+    /// Per-node clock readings (seconds of virtual time consumed).
+    pub fn seconds(&self) -> &[f64] {
+        &self.seconds
+    }
+
+    /// Per-node cumulative barrier-wait seconds (time stalled behind
+    /// slower peers).
+    pub fn waited(&self) -> &[f64] {
+        &self.waited
+    }
+
+    /// The critical path: the slowest node's clock (== every node's clock
+    /// in a homogeneous run — the pre-refactor `sim_seconds`).
+    pub fn max_seconds(&self) -> f64 {
+        self.seconds.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// The fastest node's clock.
+    pub fn min_seconds(&self) -> f64 {
+        self.seconds.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Straggler slack: critical path minus the fastest node (0 in a
+    /// homogeneous run).
+    pub fn slack(&self) -> f64 {
+        self.max_seconds() - self.min_seconds()
+    }
+
+    /// Total barrier-wait seconds summed over nodes.
+    pub fn total_wait(&self) -> f64 {
+        self.waited.iter().sum()
+    }
+
+    /// Advance every node by one action: `clock_i <- start_i +
+    /// (compute_i + comm_i)` with `start_i` the barrier max over `scope`
+    /// (see the struct docs for the exactness contract). `start_i -
+    /// clock_i` accrues into the node's barrier-wait account.
+    pub fn advance(&mut self, compute: &[f64], comm: &[f64], scope: BarrierScope) {
+        let n = self.seconds.len();
+        debug_assert!(compute.len() == n && comm.len() == n);
+        match scope {
+            BarrierScope::None => {
+                for i in 0..n {
+                    self.seconds[i] += compute[i] + comm[i];
+                }
+            }
+            BarrierScope::Global => {
+                let start = self.max_seconds();
+                for i in 0..n {
+                    self.waited[i] += start - self.seconds[i];
+                    self.seconds[i] = start + (compute[i] + comm[i]);
+                }
+            }
+            BarrierScope::Neighborhood { round } => {
+                let tbl = &self.neigh[round % self.neigh.len()];
+                for i in 0..n {
+                    self.starts[i] = tbl[i]
+                        .iter()
+                        .map(|&j| self.seconds[j])
+                        .fold(f64::NEG_INFINITY, f64::max);
+                }
+                for i in 0..n {
+                    self.waited[i] += self.starts[i] - self.seconds[i];
+                    self.seconds[i] = self.starts[i] + (compute[i] + comm[i]);
+                }
+            }
+        }
+    }
+
+    /// Full synchronization point with no cost of its own (eval,
+    /// checkpoint): everyone advances to the barrier max, the difference
+    /// accruing as barrier wait. A no-op while the clocks agree.
+    pub fn sync(&mut self) {
+        let start = self.max_seconds();
+        for i in 0..self.seconds.len() {
+            self.waited[i] += start - self.seconds[i];
+            self.seconds[i] = start;
+        }
+    }
+
+    /// Overwrite the full state (checkpoint v4 restore).
+    pub fn restore(&mut self, seconds: &[f64], waited: &[f64]) -> Result<()> {
+        let n = self.seconds.len();
+        if seconds.len() != n || waited.len() != n {
+            bail!(
+                "checkpoint carries {} clocks / {} waits for {n} nodes",
+                seconds.len(),
+                waited.len()
+            );
+        }
+        self.seconds.copy_from_slice(seconds);
+        self.waited.copy_from_slice(waited);
+        Ok(())
+    }
+
+    /// Restore from a pre-v4 checkpoint: one scalar clock, so every node
+    /// resumes at it with zeroed wait accounts (the old time axis).
+    pub fn restore_uniform(&mut self, seconds: f64) {
+        self.seconds.fill(seconds);
+        self.waited.fill(0.0);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,5 +515,152 @@ mod tests {
         c.advance(1800.0);
         c.advance(1800.0);
         assert!((c.hours() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn homogeneous_node_costs_match_scalar_model_bitwise() {
+        let base = CostModel::calibrated_resnet50();
+        for topo in [Topology::ring(8), Topology::one_peer_expo(8), Topology::star(8)] {
+            let costs = NodeCosts::homogeneous(base, topo.n);
+            assert!(costs.is_homogeneous());
+            let d = 1_000_000;
+            assert_eq!(costs.gossip_critical(&topo, d), base.gossip(&topo, d), "{:?}", topo.kind);
+            assert_eq!(
+                costs.all_reduce_critical(&topo, d),
+                base.all_reduce(topo.n, d),
+                "{:?}",
+                topo.kind
+            );
+        }
+    }
+
+    #[test]
+    fn straggler_scales_compute_and_alpha_only() {
+        let base = CostModel::generic();
+        let costs = NodeCosts::homogeneous(base, 4).with_straggler(2, 4.0).unwrap();
+        assert!(!costs.is_homogeneous());
+        assert_eq!(costs.alpha[2], 4.0 * base.alpha);
+        assert_eq!(costs.compute[2], 4.0 * base.compute);
+        assert_eq!(costs.theta[2], base.theta, "theta is a link property, untouched");
+        assert_eq!(costs.alpha[0], base.alpha);
+        assert!(NodeCosts::homogeneous(base, 4).with_straggler(4, 2.0).is_err());
+        assert!(NodeCosts::homogeneous(base, 4).with_straggler(0, 0.0).is_err());
+        assert!(NodeCosts::homogeneous(base, 4).with_straggler(0, f64::NAN).is_err());
+    }
+
+    #[test]
+    fn node_costs_validate_rejects_bad_entries() {
+        let base = CostModel::calibrated_resnet50();
+        NodeCosts::homogeneous(base, 3).validate().unwrap();
+        // Zero compute is legal (pure-comm analytic tables)...
+        NodeCosts::homogeneous(CostModel::generic(), 3).validate().unwrap();
+        // ...but non-finite or non-positive link terms are not.
+        let mut c = NodeCosts::homogeneous(base, 3);
+        c.alpha[1] = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = NodeCosts::homogeneous(base, 3);
+        c.theta[2] = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = NodeCosts::homogeneous(base, 3);
+        c.compute[0] = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = NodeCosts::homogeneous(base, 3);
+        c.theta.pop();
+        assert!(c.validate().is_err(), "ragged table must be rejected");
+    }
+
+    #[test]
+    fn virtual_clocks_match_scalar_clock_bitwise_when_homogeneous() {
+        // The tentpole regression anchor: identical costs => every barrier
+        // is a no-op and each node's accumulation is the scalar clock's.
+        let base = CostModel::calibrated_resnet50();
+        let topo = Topology::one_peer_expo(8);
+        let costs = NodeCosts::homogeneous(base, 8);
+        let mut clocks = VirtualClocks::new(&topo);
+        let mut scalar = SimClock::default();
+        let d = 25_500_000;
+        for step in 0..12 {
+            let round = step % topo.rounds();
+            let comm: Vec<f64> = (0..8)
+                .map(|i| costs.gossip_node(i, topo.in_neighbors(i, round).len(), d))
+                .collect();
+            clocks.advance(&costs.compute, &comm, BarrierScope::Neighborhood { round });
+            scalar.advance(base.compute + base.gossip(&topo, d));
+        }
+        let ar: Vec<f64> = (0..8).map(|i| costs.all_reduce_node(i, 8, d)).collect();
+        clocks.advance(&costs.compute, &ar, BarrierScope::Global);
+        scalar.advance(base.compute + base.all_reduce(8, d));
+        for &s in clocks.seconds() {
+            assert_eq!(s, scalar.seconds, "lockstep clock drifted from the scalar clock");
+        }
+        assert_eq!(clocks.max_seconds(), scalar.seconds);
+        assert_eq!(clocks.slack(), 0.0);
+        assert_eq!(clocks.total_wait(), 0.0);
+    }
+
+    #[test]
+    fn straggler_slowness_propagates_one_hop_per_gossip_round() {
+        // Ring of 6, node 0 computes 4x slower, free communication: after
+        // ONE gossip round only 0's neighbors have waited; after a global
+        // barrier everyone is at the straggler's clock.
+        let base = CostModel { alpha: 1e-12, theta: 1e-18, compute: 1.0 };
+        let topo = Topology::ring(6);
+        let costs = NodeCosts::homogeneous(base, 6).with_straggler(0, 4.0).unwrap();
+        let mut clocks = VirtualClocks::new(&topo);
+        let comm = vec![0.0; 6];
+        clocks.advance(&costs.compute, &comm, BarrierScope::Neighborhood { round: 0 });
+        // Step 1: no one has a lagging neighbor yet (all clocks were 0).
+        assert!(clocks.waited().iter().all(|&w| w == 0.0));
+        clocks.advance(&costs.compute, &comm, BarrierScope::Neighborhood { round: 0 });
+        // Step 2: nodes 1 and 5 waited 3s for node 0; nodes 2..4 did not.
+        assert_eq!(clocks.waited()[1], 3.0);
+        assert_eq!(clocks.waited()[5], 3.0);
+        assert_eq!(clocks.waited()[2], 0.0);
+        assert_eq!(clocks.waited()[3], 0.0);
+        assert!(clocks.slack() > 0.0);
+        let before = clocks.max_seconds();
+        clocks.advance(&costs.compute, &comm, BarrierScope::Global);
+        assert_eq!(clocks.slack(), 3.0, "post-barrier spread is one step's compute gap");
+        assert!(clocks.max_seconds() > before);
+        assert!(clocks.total_wait() > 6.0);
+    }
+
+    #[test]
+    fn latency_straggler_hurts_all_reduce_more_than_gossip() {
+        // The §3.4 inequality under heterogeneity: All-Reduce pays the
+        // straggler's alpha n times, one-peer gossip pays it once.
+        let base = CostModel::calibrated_resnet50();
+        let topo = Topology::one_peer_expo(16);
+        let d = 25_500_000;
+        let hom = NodeCosts::homogeneous(base, 16);
+        let slow = hom.clone().with_straggler(3, 4.0).unwrap();
+        let g_ratio = slow.gossip_critical(&topo, d) / hom.gossip_critical(&topo, d);
+        let ar_ratio = slow.all_reduce_critical(&topo, d) / hom.all_reduce_critical(&topo, d);
+        assert!(
+            g_ratio < ar_ratio,
+            "gossip degraded {g_ratio:.3}x, all-reduce {ar_ratio:.3}x"
+        );
+    }
+
+    #[test]
+    fn clocks_sync_and_restore_roundtrip() {
+        let topo = Topology::ring(3);
+        let mut clocks = VirtualClocks::new(&topo);
+        clocks.advance(&[1.0, 2.0, 3.0], &[0.5, 0.5, 0.5], BarrierScope::None);
+        assert_eq!(clocks.max_seconds(), 3.5);
+        assert_eq!(clocks.min_seconds(), 1.5);
+        clocks.sync();
+        assert_eq!(clocks.slack(), 0.0);
+        assert_eq!(clocks.total_wait(), (3.5 - 1.5) + (3.5 - 2.5));
+        let secs: Vec<f64> = clocks.seconds().to_vec();
+        let waits: Vec<f64> = clocks.waited().to_vec();
+        let mut fresh = VirtualClocks::new(&topo);
+        fresh.restore(&secs, &waits).unwrap();
+        assert_eq!(fresh.seconds(), &secs[..]);
+        assert_eq!(fresh.waited(), &waits[..]);
+        assert!(fresh.restore(&secs[..2], &waits).is_err());
+        fresh.restore_uniform(9.0);
+        assert_eq!(fresh.seconds(), &[9.0, 9.0, 9.0][..]);
+        assert_eq!(fresh.total_wait(), 0.0);
     }
 }

@@ -24,9 +24,26 @@
 //! (asserted by `rust/tests/properties.rs`).
 //!
 //! §Sharding policy. [`WorkerPool::shards`] is the ONE policy for how many
-//! ways a parallel region splits: `min(pool size, work items)`, never 0.
-//! PR 1 had two policies (phases capped at n workers, the mix left
-//! uncapped) — every call site now asks the pool.
+//! ways a parallel region splits, never 0. In static mode (the default)
+//! it is `min(pool size, work items)`: one chunk per thread, perfectly
+//! balanced when every item costs the same. PR 1 had two policies (phases
+//! capped at n workers, the mix left uncapped) — every call site now asks
+//! the pool.
+//!
+//! §Work stealing ([`WorkerPool::new_stealing`]). With heterogeneous
+//! per-item costs (simulated stragglers, uneven rows) one-chunk-per-thread
+//! pins the batch's wall time to the unluckiest thread. Stealing mode
+//! splits the same region `min(size * STEAL_GRAIN, items)` ways instead:
+//! the chunks land on the shared queue and whichever thread finishes early
+//! pulls the next one — dynamic balancing through the exact queue the pool
+//! already has, no second scheduler. Determinism is untouched, because the
+//! chunk boundaries never change any item's arithmetic: every item owns a
+//! disjoint output slice, every in-chunk loop runs items in ascending
+//! index order, and every cross-item reduction happens OUTSIDE the pool in
+//! fixed ascending order (per-node slots, per-column accumulators). So a
+//! stealing pool is bit-identical to static sharding — and to sequential —
+//! at any pool size and any steal interleaving (asserted by
+//! `rust/tests/properties.rs` and `rust/tests/virtual_time.rs`).
 //!
 //! §Failure. A job that returns `Err` fails its batch cleanly (first error
 //! in index order wins). A job that PANICS poisons the pool: the panic is
@@ -83,12 +100,33 @@ pub struct WorkerPool {
     shared: Arc<Shared>,
     handles: Vec<std::thread::JoinHandle<()>>,
     size: usize,
+    /// Chunks per thread the sharding policy hands out: 1 = static
+    /// sharding, [`STEAL_GRAIN`] = work-stealing dynamic chunking.
+    grain: usize,
 }
+
+/// Chunks per thread in stealing mode: fine enough that a 4x-slow item
+/// chain rebalances within a batch, coarse enough that queue dispatch
+/// stays amortized over real row work.
+pub const STEAL_GRAIN: usize = 4;
 
 impl WorkerPool {
     /// Spawn a pool of `threads` workers (clamped to >= 1; size 1 spawns
-    /// nothing and runs jobs inline).
+    /// nothing and runs jobs inline). Static sharding: `shards` hands out
+    /// one chunk per thread.
     pub fn new(threads: usize) -> WorkerPool {
+        WorkerPool::with_grain(threads, 1)
+    }
+
+    /// Spawn a work-stealing pool: same threads, but `shards` splits every
+    /// region [`STEAL_GRAIN`] ways per thread so idle threads pull extra
+    /// chunks from the shared queue (see module docs §Work stealing).
+    /// Bit-identical results to [`WorkerPool::new`] by construction.
+    pub fn new_stealing(threads: usize) -> WorkerPool {
+        WorkerPool::with_grain(threads, STEAL_GRAIN)
+    }
+
+    fn with_grain(threads: usize, grain: usize) -> WorkerPool {
         let size = threads.max(1);
         let shared = Arc::new(Shared {
             queue: Mutex::new(Queue { tasks: VecDeque::new(), shutdown: false }),
@@ -108,7 +146,7 @@ impl WorkerPool {
         } else {
             Vec::new()
         };
-        WorkerPool { shared, handles, size }
+        WorkerPool { shared, handles, size, grain: grain.max(1) }
     }
 
     /// Worker-thread count (>= 1).
@@ -116,12 +154,19 @@ impl WorkerPool {
         self.size
     }
 
+    /// Whether the sharding policy over-splits for dynamic balancing.
+    pub fn stealing(&self) -> bool {
+        self.grain > 1
+    }
+
     /// THE sharding policy: how many ways to split `items` units of work.
-    /// `min(size, items)` and never 0 — phases cap at n workers, a column
-    /// mean caps at d columns, and every call site agrees (the PR-1 split
-    /// between capped phases and an uncapped mix is gone).
+    /// `min(size * grain, items)` and never 0 — phases cap at n workers, a
+    /// column mean caps at d columns, and every call site agrees (the PR-1
+    /// split between capped phases and an uncapped mix is gone). Static
+    /// pools have grain 1; stealing pools over-split so the queue
+    /// rebalances uneven chunks onto idle threads.
     pub fn shards(&self, items: usize) -> usize {
-        self.size.min(items).max(1)
+        (self.size * self.grain).min(items).max(1)
     }
 
     /// True once any job has panicked; the pool refuses further work.
@@ -370,12 +415,70 @@ mod tests {
     #[test]
     fn shards_is_the_unified_policy() {
         let pool = WorkerPool::new(8);
+        assert!(!pool.stealing());
         assert_eq!(pool.size(), 8);
         assert_eq!(pool.shards(3), 3, "caps at the work-item count");
         assert_eq!(pool.shards(100), 8, "caps at the pool size");
         assert_eq!(pool.shards(0), 1, "never zero");
         assert_eq!(WorkerPool::new(0).size(), 1, "size clamps to >= 1");
         assert_eq!(WorkerPool::new(1).shards(16), 1);
+    }
+
+    #[test]
+    fn stealing_pool_oversplits_behind_the_same_policy() {
+        let pool = WorkerPool::new_stealing(2);
+        assert!(pool.stealing());
+        assert_eq!(pool.size(), 2, "same thread count, different chunking");
+        assert_eq!(pool.shards(100), 2 * STEAL_GRAIN, "grain chunks per thread");
+        assert_eq!(pool.shards(3), 3, "still caps at the work-item count");
+        assert_eq!(pool.shards(0), 1, "never zero");
+        // A sequential stealing pool still runs inline (no threads), just
+        // in more chunks.
+        let seq = WorkerPool::new_stealing(1);
+        assert_eq!(seq.size(), 1);
+        assert_eq!(seq.shards(16), STEAL_GRAIN);
+    }
+
+    #[test]
+    fn stealing_chunks_produce_identical_output_to_static() {
+        // The determinism contract: the same disjoint-output job pattern
+        // the trainer uses, run under static and stealing chunking with an
+        // artificially slow item, fills the buffer identically.
+        let items = 23usize;
+        let run_with = |pool: &WorkerPool| -> Vec<usize> {
+            let mut data = vec![0usize; items];
+            let t = pool.shards(items);
+            let per = (items + t - 1) / t;
+            let jobs: Vec<_> = data
+                .chunks_mut(per)
+                .enumerate()
+                .map(|(ci, chunk)| {
+                    move || {
+                        for (j, v) in chunk.iter_mut().enumerate() {
+                            let i = ci * per + j;
+                            if i == 5 {
+                                // Straggler item: stealing should let other
+                                // threads drain the rest meanwhile.
+                                std::thread::sleep(Duration::from_millis(20));
+                            }
+                            *v = i * i + 1;
+                        }
+                        Ok(())
+                    }
+                })
+                .collect();
+            pool.run(jobs).unwrap();
+            data
+        };
+        let expect: Vec<usize> = (0..items).map(|i| i * i + 1).collect();
+        for pool in [
+            WorkerPool::new(1),
+            WorkerPool::new(4),
+            WorkerPool::new_stealing(1),
+            WorkerPool::new_stealing(4),
+        ] {
+            assert_eq!(run_with(&pool), expect, "size {} grain {}", pool.size(), pool.grain);
+        }
     }
 
     #[test]

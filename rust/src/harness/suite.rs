@@ -140,8 +140,10 @@ impl RunSpec {
             slowmo: Default::default(),
             cost: self.cost,
             cost_dim: self.cost_dim,
+            node_costs: None,
             log_every: self.log_every,
             threads: self.threads,
+            stealing: false,
             overlap: self.overlap,
             backend: self.backend,
             compression: Compression::None,

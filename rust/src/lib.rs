@@ -25,7 +25,9 @@
 //!   tables), neighbor exchange, ring all-reduce (reduce-scatter +
 //!   all-gather), byte/latency accounting.
 //! * [`costmodel`] — the paper's alpha-beta communication time model (§3.4,
-//!   App. D/H).
+//!   App. D/H), its per-node generalization ([`costmodel::NodeCosts`]:
+//!   heterogeneous clusters, stragglers, link asymmetry) and the per-node
+//!   [`costmodel::VirtualClocks`] critical-path time plane.
 //! * [`harness`] — timing/stats/table printing for the bench suite.
 //! * [`proptest`] — a minimal randomized-property test kit.
 //!
@@ -46,8 +48,10 @@
 //!   with `comm.backend` / `--backend {shared,bus}`.
 //! * [`exec`] — the persistent execution engine: one parked
 //!   [`exec::WorkerPool`] per trainer that phases 1-2, the gossip mix and
-//!   the eval pass shard across, plus the async job tickets behind
-//!   double-buffered overlap mode (see the module's determinism contract).
+//!   the eval pass shard across (static or work-stealing chunking behind
+//!   one `shards` policy — `train.stealing`), plus the async job tickets
+//!   behind double-buffered overlap mode (see the module's determinism
+//!   contract).
 //! * [`coordinator`] — the per-step training pipeline over n workers,
 //!   sharded across the `train.threads`-sized pool (bit-identical to the
 //!   sequential run at any thread count); `--overlap` runs the gossip mix

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   train [--config exp.toml] [--set key=value ...] [--threads N]
-//!         [--overlap] [--backend shared|bus]          run one experiment
+//!         [--overlap] [--stealing] [--backend shared|bus]
+//!         [--straggler idx:factor]                    run one experiment
 //!   topo  [--n N]                                     topology/beta report
 //!   check                                             verify artifacts load
 //!
@@ -13,7 +14,6 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 use gossip_pga::config::{ExperimentConfig, Toml};
 use gossip_pga::coordinator::{self, TrainerOptions};
-use gossip_pga::costmodel::CostModel;
 use gossip_pga::harness::Table;
 use gossip_pga::runtime::Runtime;
 use gossip_pga::topology::{spectral, Topology};
@@ -45,7 +45,8 @@ fn print_help() {
          \n\
          USAGE:\n\
            gossip-pga train [--config exp.toml] [--set key=value ...] [--threads N]\n\
-                            [--overlap] [--backend shared|bus]\n\
+                            [--overlap] [--stealing] [--backend shared|bus]\n\
+                            [--straggler idx:factor]\n\
            gossip-pga topo [--n N]\n\
            gossip-pga check\n\
          \n\
@@ -56,14 +57,18 @@ fn print_help() {
            train.steps, train.lr, train.momentum, train.seed, data.non_iid\n\
            train.threads (worker-pool size; --threads N is shorthand)\n\
            train.overlap (double-buffered async gossip; --overlap is shorthand)\n\
+           train.stealing (work-stealing pool chunking; --stealing is shorthand)\n\
            comm.backend (shared|bus; --backend is shorthand)\n\
-           comm.compression (none|topk|int8), comm.topk_frac, comm.int8_block"
+           comm.compression (none|topk|int8), comm.topk_frac, comm.int8_block\n\
+           cost.alpha / cost.theta / cost.compute (scalar or per-node array)\n\
+           cost.straggler (\"idx:factor,...\"; --straggler idx:factor is shorthand,\n\
+             scales that node's compute + latency — see costmodel::NodeCosts)"
     );
 }
 
 /// Flags that may appear bare (`--overlap`) or with an explicit boolean
 /// (`--overlap false`).
-const BOOL_FLAGS: &[&str] = &["overlap"];
+const BOOL_FLAGS: &[&str] = &["overlap", "stealing"];
 
 /// Parse `--flag value` pairs (boolean flags may omit the value).
 fn parse_flags(args: &[String]) -> Result<Vec<(String, String)>> {
@@ -105,9 +110,26 @@ fn cmd_train(args: &[String]) -> Result<()> {
             doc = Toml::load(std::path::Path::new(val))?;
         }
     }
+    // --straggler is repeatable; collect every spec before writing the one
+    // cost.straggler key (a later flag must extend, not overwrite).
+    let straggler_specs: Vec<&str> = flags
+        .iter()
+        .filter(|(k, _)| k == "straggler")
+        .map(|(_, v)| v.as_str())
+        .collect();
+    if !straggler_specs.is_empty() {
+        let joined = straggler_specs.join(",");
+        gossip_pga::config::parse_stragglers(&joined)
+            .with_context(|| format!("--straggler wants idx:factor, got '{joined}'"))?;
+        doc.values.insert(
+            "cost.straggler".into(),
+            gossip_pga::config::Value::Str(joined),
+        );
+    }
     for (name, val) in &flags {
         match name.as_str() {
             "config" => {}
+            "straggler" => {}
             "set" => {
                 let (k, v) = val
                     .split_once('=')
@@ -126,6 +148,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
                     .with_context(|| format!("--overlap wants a bool, got '{val}'"))?;
                 doc.values.extend(parsed.values);
             }
+            "stealing" => {
+                let parsed = Toml::parse(&format!("train.stealing = {val}"))
+                    .with_context(|| format!("--stealing wants a bool, got '{val}'"))?;
+                doc.values.extend(parsed.values);
+            }
             "backend" => {
                 let parsed = Toml::parse(&format!("comm.backend = \"{val}\""))
                     .with_context(|| format!("--backend wants shared|bus, got '{val}'"))?;
@@ -137,7 +164,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let cfg = ExperimentConfig::from_toml(&doc).context("building experiment config")?;
     let topo = cfg.topology();
     println!(
-        "# {} | {} nodes on {} (beta = {:.4}) | H = {} | {} steps | {} thread(s){} | {} backend{}",
+        "# {} | {} nodes on {} (beta = {:.4}) | H = {} | {} steps | {} thread(s){}{} | {} backend{}",
         cfg.algorithm.display(),
         cfg.nodes,
         cfg.topology,
@@ -145,6 +172,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         cfg.period,
         cfg.steps,
         cfg.threads,
+        if cfg.stealing { " (stealing)" } else { "" },
         if cfg.overlap { " | overlap" } else { "" },
         cfg.backend,
         if cfg.compression == "none" {
@@ -153,6 +181,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
             format!(" | {} compression", cfg.compression)
         }
     );
+    for &(idx, factor) in &cfg.stragglers {
+        println!("# straggler: node {idx} x{factor} (compute + latency)");
+    }
 
     let rt = Arc::new(Runtime::load_default().context("loading artifacts (run `make artifacts`)")?);
     let (workload, init) = match cfg.model.as_str() {
@@ -162,8 +193,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
         other => bail!("unknown model '{other}'"),
     };
     let cost_dim = workload.flat_dim();
-    let mut opts = TrainerOptions::from_config(&cfg, cost_dim);
-    opts.cost = CostModel::calibrated_resnet50();
+    // from_config resolves BOTH the base cost model and any [cost]/
+    // --straggler per-node table from the same calibration; overriding
+    // opts.cost after this point would silently leave node_costs on the
+    // old base, so don't.
+    let opts = TrainerOptions::from_config(&cfg, cost_dim);
     let mut trainer = coordinator::Trainer::new(workload, init, opts)?;
 
     let t0 = std::time::Instant::now();
@@ -192,6 +226,21 @@ fn cmd_train(args: &[String]) -> Result<()> {
         comm.bytes_sent() as f64 / 1e6,
         comm.sim_seconds
     );
+    // Heterogeneous cost tables always get the breakdown; so do runs where
+    // structural asymmetry (star hubs, uneven bus chunks) opened real
+    // slack or waits despite identical node costs.
+    if !trainer.node_costs().is_homogeneous()
+        || trainer.straggler_slack() > 0.0
+        || trainer.barrier_wait_seconds() > 0.0
+    {
+        println!(
+            "# virtual time: critical path {:.1}s | fastest node {:.1}s | slack {:.1}s | barrier wait {:.1}s",
+            trainer.sim_seconds(),
+            trainer.sim_seconds_min(),
+            trainer.straggler_slack(),
+            trainer.barrier_wait_seconds()
+        );
+    }
     if let Some(acc) = coordinator::mlp_eval_accuracy(&trainer)? {
         println!("# eval accuracy: {:.2}%", acc * 100.0);
     }

@@ -21,13 +21,25 @@ pub struct Record {
     /// Consensus distance (1/n) sum_i ||x_i - x_bar||^2.
     pub consensus: f64,
     pub lr: f64,
-    /// Simulated wall-clock (cost-model) seconds since start.
+    /// Simulated wall-clock (cost-model) seconds since start: the critical
+    /// path through the per-node virtual clocks (the slowest node).
     pub sim_seconds: f64,
     /// Cumulative wire scalars (f32-equivalents) the run's communication
     /// backend has moved up to this step (see [`crate::comm::CommStats`]).
     pub comm_scalars: u64,
     /// Cumulative message count over the same accounting.
     pub comm_msgs: u64,
+    /// The fastest node's virtual clock (== `sim_seconds` when per-node
+    /// charges are uniform: homogeneous costs on a regular topology).
+    pub sim_min_seconds: f64,
+    /// Straggler slack: `sim_seconds - sim_min_seconds`, captured before
+    /// the eval barrier syncs the cluster. 0 when charges are uniform;
+    /// nonzero under cost stragglers AND under structural asymmetry (a
+    /// star's leaves trail its hub even with identical node costs).
+    pub straggler_slack: f64,
+    /// Cumulative seconds nodes have spent stalled at synchronization
+    /// barriers behind slower peers, summed over nodes.
+    pub barrier_wait: f64,
 }
 
 /// A training history for one run.
@@ -65,12 +77,25 @@ impl History {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut out =
-            String::from("step,loss,consensus,lr,sim_seconds,comm_scalars,comm_msgs\n");
+        // New columns append after the PR-3 layout so downstream readers
+        // keyed on the old prefix keep working.
+        let mut out = String::from(
+            "step,loss,consensus,lr,sim_seconds,comm_scalars,comm_msgs,\
+             sim_min_seconds,straggler_slack,barrier_wait\n",
+        );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{}\n",
-                r.step, r.loss, r.consensus, r.lr, r.sim_seconds, r.comm_scalars, r.comm_msgs
+                "{},{},{},{},{},{},{},{},{},{}\n",
+                r.step,
+                r.loss,
+                r.consensus,
+                r.lr,
+                r.sim_seconds,
+                r.comm_scalars,
+                r.comm_msgs,
+                r.sim_min_seconds,
+                r.straggler_slack,
+                r.barrier_wait
             ));
         }
         out
@@ -96,6 +121,22 @@ impl History {
             (
                 "comm_msgs",
                 jsonio::u64_arr(&self.records.iter().map(|r| r.comm_msgs).collect::<Vec<_>>()),
+            ),
+            (
+                "sim_min_seconds",
+                jsonio::num_arr(
+                    &self.records.iter().map(|r| r.sim_min_seconds).collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "straggler_slack",
+                jsonio::num_arr(
+                    &self.records.iter().map(|r| r.straggler_slack).collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "barrier_wait",
+                jsonio::num_arr(&self.records.iter().map(|r| r.barrier_wait).collect::<Vec<_>>()),
             ),
         ])
     }
@@ -384,6 +425,9 @@ mod tests {
                 sim_seconds: i as f64,
                 comm_scalars: 100 * i as u64,
                 comm_msgs: 2 * i as u64,
+                sim_min_seconds: i as f64 * 0.5,
+                straggler_slack: i as f64 * 0.5,
+                barrier_wait: i as f64 * 0.25,
             });
         }
         assert_eq!(h.first_step_below(0.35).unwrap().step, 2);
@@ -391,11 +435,20 @@ mod tests {
         let csv = h.to_csv();
         assert_eq!(csv.lines().count(), 6);
         assert!(csv.starts_with("step,loss"));
-        assert!(csv.lines().next().unwrap().ends_with("comm_scalars,comm_msgs"));
-        assert!(csv.lines().nth(3).unwrap().ends_with(",200,4"));
+        // The PR-3 column prefix is stable; the virtual-time columns append.
+        assert!(csv
+            .lines()
+            .next()
+            .unwrap()
+            .starts_with("step,loss,consensus,lr,sim_seconds,comm_scalars,comm_msgs"));
+        assert!(csv.lines().next().unwrap().ends_with("sim_min_seconds,straggler_slack,barrier_wait"));
+        assert!(csv.lines().nth(3).unwrap().contains(",200,4,"));
+        assert!(csv.lines().nth(3).unwrap().ends_with(",1,1,0.5"));
         let j = h.to_json().dump();
         assert!(j.contains("\"label\":\"test\""));
         assert!(j.contains("\"comm_scalars\":[0,100,200,300,400]"));
         assert!(j.contains("\"comm_msgs\":[0,2,4,6,8]"));
+        assert!(j.contains("\"straggler_slack\":[0,0.5,1,1.5,2]"));
+        assert!(j.contains("\"barrier_wait\":[0,0.25,0.5,0.75,1]"));
     }
 }

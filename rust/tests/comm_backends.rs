@@ -25,7 +25,7 @@ use gossip_pga::comm::{
     schedule_traffic, BackendKind, BusBackend, CommBackend, CommStats, Compression, SharedBackend,
 };
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
-use gossip_pga::costmodel::CostModel;
+use gossip_pga::costmodel::{CostModel, NodeCosts};
 use gossip_pga::exec::WorkerPool;
 use gossip_pga::metrics::consensus_distance;
 use gossip_pga::optim::LrSchedule;
@@ -50,13 +50,13 @@ fn backend_for(
     compression: Compression,
     algo: AlgorithmKind,
 ) -> Box<dyn CommBackend> {
-    let cost = CostModel::calibrated_resnet50();
+    let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), topo.n);
     match kind {
-        BackendKind::Shared => Box::new(SharedBackend::new(topo, d, cost, d, compression)),
+        BackendKind::Shared => Box::new(SharedBackend::new(topo, d, &costs, d, compression)),
         BackendKind::Bus => Box::new(BusBackend::new(
             topo,
             d,
-            cost,
+            &costs,
             d,
             compression,
             algo != AlgorithmKind::Gossip,
@@ -274,7 +274,7 @@ fn pure_gossip_bus_needs_no_allreduce_edges_and_global_average_errors() {
     let mut backend = BusBackend::new(
         &topo,
         8,
-        CostModel::calibrated_resnet50(),
+        &NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 6),
         8,
         Compression::None,
         false,
@@ -293,16 +293,94 @@ fn bus_time_charge_is_per_message() {
     let topo = Topology::ring(6);
     let d = 100;
     let cost = CostModel::generic();
-    let mut backend = BusBackend::new(&topo, d, cost, d, Compression::None, true);
+    let costs = NodeCosts::homogeneous(cost, 6);
+    let mut backend = BusBackend::new(&topo, d, &costs, d, Compression::None, true);
     let pool = WorkerPool::new(1);
     let mut params = ParamMatrix::random(&mut Rng::new(5), 6, d, 1.0);
-    let stats = backend.gossip(&mut params, &pool).unwrap();
+    let charge = backend.gossip(&mut params, &pool).unwrap();
     let expect = 2.0 * cost.alpha + 2.0 * d as f64 * cost.theta;
     assert!(
-        (stats.sim_seconds - expect).abs() < 1e-12,
+        (charge.stats.sim_seconds - expect).abs() < 1e-12,
         "{} vs {expect}",
-        stats.sim_seconds
+        charge.stats.sim_seconds
     );
+    // Per-node billing: every ring node sends the same 2 messages, so each
+    // node's charge equals the aggregate; barriers are the clocks' job.
+    assert_eq!(charge.node_seconds.len(), 6);
+    for &s in &charge.node_seconds {
+        assert!((s - expect).abs() < 1e-12);
+    }
+    assert_eq!(charge.stats.barrier_wait, 0.0);
+}
+
+#[test]
+fn bus_bills_a_link_straggler_per_node() {
+    // Node 2's alpha/compute scaled 4x: its gossip messages cost 4x the
+    // latency, every other node's charge is unchanged, and the aggregate
+    // sim_seconds is the straggler's (critical path of the action).
+    let topo = Topology::ring(6);
+    let d = 100;
+    let base = CostModel::generic();
+    let costs = NodeCosts::homogeneous(base, 6).with_straggler(2, 4.0).unwrap();
+    let mut backend = BusBackend::new(&topo, d, &costs, d, Compression::None, true);
+    let pool = WorkerPool::new(2);
+    let mut params = ParamMatrix::random(&mut Rng::new(5), 6, d, 1.0);
+    let charge = backend.gossip(&mut params, &pool).unwrap();
+    let plain = 2.0 * base.alpha + 2.0 * d as f64 * base.theta;
+    let slow = 2.0 * (4.0 * base.alpha) + 2.0 * d as f64 * base.theta;
+    for (i, &s) in charge.node_seconds.iter().enumerate() {
+        let expect = if i == 2 { slow } else { plain };
+        assert!((s - expect).abs() < 1e-12, "node {i}: {s} vs {expect}");
+    }
+    assert!((charge.stats.sim_seconds - slow).abs() < 1e-12);
+}
+
+#[test]
+fn out_neighbors_invert_the_dense_weight_matrix_on_every_kind_and_round() {
+    // The sparse-sender-table contract the bus builds its edges from:
+    // node i must transmit to j at round r exactly when the dense W of
+    // that round gives j a non-zero weight on i (i.e. j listens to i) —
+    // including the DIRECTED one-peer graph, where the transmit target is
+    // the inverse hop, not the in-neighbor. Checked against the dense
+    // matrix on every kind and every round of the cycle.
+    use gossip_pga::topology::TopologyKind;
+    for n in [1usize, 2, 4, 5, 8, 9] {
+        let kinds = [
+            TopologyKind::Ring,
+            TopologyKind::Grid,
+            TopologyKind::Hypercube,
+            TopologyKind::Star,
+            TopologyKind::Full,
+            TopologyKind::StaticExponential,
+            TopologyKind::OnePeerExponential,
+        ];
+        for kind in kinds {
+            if kind == TopologyKind::Hypercube && !n.is_power_of_two() {
+                continue;
+            }
+            let topo = Topology::new(kind, n);
+            for r in 0..topo.rounds() {
+                let w = topo.weight_matrix(r);
+                for i in 0..n {
+                    let out = topo.out_neighbors(i, r);
+                    // Sorted, deduplicated, never self.
+                    assert!(out.windows(2).all(|p| p[0] < p[1]), "{kind:?} n={n} r={r}");
+                    assert!(!out.contains(&i), "{kind:?} n={n} r={r}: self in out set");
+                    for j in 0..n {
+                        let listens = j != i && w[(j, i)] != 0.0;
+                        let sends = out.contains(&j);
+                        assert_eq!(
+                            listens, sends,
+                            "{kind:?} n={n} round {r}: W[({j},{i})]={} but {} sends {:?}",
+                            w[(j, i)],
+                            i,
+                            out
+                        );
+                    }
+                }
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -333,6 +411,8 @@ fn trainer_with_backend(
         slowmo: Default::default(),
         cost: CostModel::calibrated_resnet50(),
         cost_dim: 25_500_000,
+        node_costs: None,
+        stealing: false,
         log_every: 5,
         threads,
         overlap: false,
@@ -408,6 +488,8 @@ fn checkpoint_resumes_comm_totals_and_compressor_residuals_exactly() {
                 slowmo: Default::default(),
                 cost: CostModel::calibrated_resnet50(),
                 cost_dim: 25_500_000,
+                node_costs: None,
+                stealing: false,
                 log_every: 5,
                 threads: 2,
                 overlap: false,
@@ -475,6 +557,8 @@ fn restoring_compressed_checkpoint_into_uncompressed_run_is_rejected() {
         slowmo: Default::default(),
         cost: CostModel::calibrated_resnet50(),
         cost_dim: 25_500_000,
+        node_costs: None,
+        stealing: false,
         log_every: 5,
         threads: 1,
         overlap: false,
@@ -524,6 +608,8 @@ fn overlap_on_bus_falls_back_to_sync_and_matches_bsp() {
         slowmo: Default::default(),
         cost: CostModel::calibrated_resnet50(),
         cost_dim: 25_500_000,
+        node_costs: None,
+        stealing: false,
         log_every: 5,
         threads: 2,
         overlap: true,

@@ -46,6 +46,8 @@ fn trainer(threads: usize) -> Trainer {
         slowmo: Default::default(),
         cost: CostModel::calibrated_resnet50(),
         cost_dim: 25_500_000,
+        node_costs: None,
+        stealing: false,
         log_every: 10,
         threads,
         overlap: false,
@@ -101,6 +103,8 @@ fn poisoned_pool_refuses_async_overlap_work_too() {
             slowmo: Default::default(),
             cost: CostModel::calibrated_resnet50(),
             cost_dim: 25_500_000,
+            node_costs: None,
+            stealing: false,
             log_every: 10,
             threads: 2,
             overlap: true,

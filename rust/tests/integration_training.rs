@@ -31,6 +31,8 @@ fn opts(algo: AlgorithmKind, topo: Topology, h: usize, seed: u64) -> TrainerOpti
         slowmo: SlowMoParams::default(),
         cost: CostModel::calibrated_resnet50(),
         cost_dim: 25_500_000,
+        node_costs: None,
+        stealing: false,
         log_every: 10,
         threads: 1,
         overlap: false,

@@ -24,7 +24,7 @@ use gossip_pga::collective::{bus, gossip_exchange, ring_all_reduce, run_nodes};
 use gossip_pga::comm::{BackendKind, Compression};
 use gossip_pga::coordinator::mixer::Mixer;
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
-use gossip_pga::costmodel::CostModel;
+use gossip_pga::costmodel::{CostModel, NodeCosts};
 use gossip_pga::exec::WorkerPool;
 use gossip_pga::linalg::beta_of;
 use gossip_pga::metrics::consensus_distance;
@@ -130,6 +130,45 @@ fn prop_pooled_mix_bit_identical_to_sequential() {
         m1.global_average(&mut seq, &p1).unwrap();
         m2.global_average(&mut thr, &pt).unwrap();
         ensure(seq == thr, format!("{:?} n={n} d={d} t={threads}: average diverged", topo.kind))
+    });
+}
+
+#[test]
+fn prop_stealing_pool_bit_identical_to_static_and_sequential() {
+    // The work-stealing invariant: the over-split dynamic chunking changes
+    // WHICH thread runs which rows, never the rows' arithmetic or the
+    // reduction order — gossip and the global average agree bit-for-bit
+    // with both the static pool and the sequential loop.
+    check("stealing == static == sequential for mixing", |rng| {
+        let n = 2 + rng.below(16) as usize;
+        let d = 1 + rng.below(96) as usize;
+        let threads = 1 + rng.below(8) as usize;
+        let topo = random_topology(rng, n);
+        let mut seq = random_matrix(rng, n, d, 1.0);
+        let mut sta = seq.clone();
+        let mut stl = seq.clone();
+        let mut m1 = Mixer::new(&topo, d);
+        let mut m2 = Mixer::new(&topo, d);
+        let mut m3 = Mixer::new(&topo, d);
+        let p1 = WorkerPool::new(1);
+        let p2 = WorkerPool::new(threads);
+        let p3 = WorkerPool::new_stealing(threads);
+        ensure(
+            p3.shards(1000) >= p2.shards(1000),
+            "stealing must over-split, not under-split",
+        )?;
+        for _ in 0..topo.rounds().min(3) {
+            m1.gossip(&mut seq, &p1).unwrap();
+            m2.gossip(&mut sta, &p2).unwrap();
+            m3.gossip(&mut stl, &p3).unwrap();
+            ensure(seq == sta, format!("{:?} n={n} d={d} t={threads}: static diverged", topo.kind))?;
+            ensure(seq == stl, format!("{:?} n={n} d={d} t={threads}: stealing diverged", topo.kind))?;
+        }
+        m1.global_average(&mut seq, &p1).unwrap();
+        m2.global_average(&mut sta, &p2).unwrap();
+        m3.global_average(&mut stl, &p3).unwrap();
+        ensure(seq == sta, "static average diverged")?;
+        ensure(seq == stl, "stealing average diverged")
     });
 }
 
@@ -345,6 +384,8 @@ fn trainer_opts(
         slowmo: Default::default(),
         cost: CostModel::calibrated_resnet50(),
         cost_dim: 25_500_000,
+        node_costs: None,
+        stealing: false,
         log_every: 5,
         threads,
         overlap: false,
@@ -443,6 +484,80 @@ fn pooled_trainer_bit_identical_for_thread_counts_1_2_3_8() {
             );
         }
         assert_eq!(reference.sim_seconds(), t.sim_seconds(), "threads={threads}");
+    }
+}
+
+/// [`logreg_trainer`] with the work-stealing pool and an optional seeded
+/// straggler (node 1 with 3x compute+latency — clock billing only, so the
+/// parameter trajectory must not move by a bit).
+fn logreg_trainer_stealing(
+    rt: &Arc<Runtime>,
+    algo: AlgorithmKind,
+    topo: Topology,
+    threads: usize,
+    straggler: bool,
+) -> Trainer {
+    let (workload, init) = logreg_workload(rt.clone(), topo.n, 256, true, 9).unwrap();
+    let mut opts = trainer_opts(algo, topo, 0.9, threads);
+    opts.stealing = true;
+    if straggler {
+        opts.node_costs = Some(
+            NodeCosts::homogeneous(opts.cost, opts.topology.n)
+                .with_straggler(1, 3.0)
+                .unwrap(),
+        );
+    }
+    Trainer::new(workload, init, opts).unwrap()
+}
+
+#[test]
+fn stealing_pool_bit_identical_across_all_algorithms_and_thread_counts() {
+    // The work-stealing schedule-equivalence suite: for every algorithm,
+    // the stealing pool at threads {1, 2, 3, 8} — with a seeded straggler
+    // riding along — reproduces the static sequential reference
+    // bit-for-bit (parameters AND mean losses). The straggler only bends
+    // the virtual clocks: the straggled run's params equal the
+    // homogeneous run's, while its critical path is strictly longer.
+    let rt = runtime();
+    let steps = 10;
+    for algo in ALL_KINDS {
+        let mut reference = logreg_trainer(&rt, algo, Topology::ring(4), 0.9, 1);
+        for _ in 0..steps {
+            reference.step_once().unwrap();
+        }
+        for threads in [1usize, 2, 3, 8] {
+            let mut t =
+                logreg_trainer_stealing(&rt, algo, Topology::ring(4), threads, true);
+            assert!(t.pool().stealing());
+            for _ in 0..steps {
+                t.step_once().unwrap();
+            }
+            for i in 0..t.n() {
+                assert_eq!(
+                    reference.worker_params(i),
+                    t.worker_params(i),
+                    "{algo:?} threads={threads}: worker {i} diverged under stealing+straggler"
+                );
+            }
+            assert!(
+                t.sim_seconds() > reference.sim_seconds(),
+                "{algo:?} threads={threads}: straggled critical path must exceed homogeneous"
+            );
+            assert!(
+                t.straggler_slack() > 0.0,
+                "{algo:?} threads={threads}: a straggler must open clock slack"
+            );
+        }
+        // And without the straggler, the stealing pool's clocks match the
+        // sequential reference exactly (homogeneous bit-exactness).
+        let mut plain = logreg_trainer_stealing(&rt, algo, Topology::ring(4), 3, false);
+        for _ in 0..steps {
+            plain.step_once().unwrap();
+        }
+        assert_eq!(plain.sim_seconds(), reference.sim_seconds(), "{algo:?}: clocks diverged");
+        for i in 0..plain.n() {
+            assert_eq!(reference.worker_params(i), plain.worker_params(i), "{algo:?}");
+        }
     }
 }
 

@@ -1,0 +1,347 @@
+//! The per-node virtual-time plane, end to end:
+//!
+//! * **Homogeneous regression anchor** — with one cost triple on every
+//!   node, the critical path reproduces the pre-refactor scalar `SimClock`
+//!   accumulation bit-exactly on BOTH CommPlane backends (every existing
+//!   `sim_seconds` table is unchanged by construction); with uniform
+//!   per-node traffic, so does every individual clock;
+//! * **straggler scenarios** — a `--straggler`-style table bends only the
+//!   clocks (trajectories stay bit-identical), gossip's critical path
+//!   degrades less than All-Reduce's, and the slack / barrier-wait
+//!   breakdown is visible in `CommStats` and the History columns;
+//! * **checkpoint v4** — a heterogeneous run checkpointed mid-run resumes
+//!   with bit-exact per-node clocks in a fresh trainer; pre-v4 snapshots
+//!   (clocks absent) resume on the uniform scalar axis.
+//!
+//! The schedule-replay tests drive the backends + clocks directly and need
+//! no AOT artifacts; the trainer-level tests at the bottom need
+//! `make artifacts` like the other integration suites.
+
+use std::sync::Arc;
+
+use gossip_pga::algorithms::{schedule_for, AlgorithmKind, CommAction, SlowMoParams};
+use gossip_pga::comm::{BackendKind, BusBackend, CommBackend, Compression, SharedBackend};
+use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
+use gossip_pga::costmodel::{BarrierScope, CostModel, NodeCosts, SimClock, VirtualClocks};
+use gossip_pga::exec::WorkerPool;
+use gossip_pga::optim::LrSchedule;
+use gossip_pga::params::ParamMatrix;
+use gossip_pga::rng::Rng;
+use gossip_pga::runtime::Runtime;
+use gossip_pga::topology::Topology;
+
+/// One schedule-replay scenario: drive a backend + a fresh
+/// [`VirtualClocks`] with every charge exactly the way the trainer does.
+struct ReplaySpec<'a> {
+    algo: AlgorithmKind,
+    kind: BackendKind,
+    topo: &'a Topology,
+    costs: &'a NodeCosts,
+    d: usize,
+    cost_dim: usize,
+    steps: usize,
+    h: usize,
+}
+
+impl ReplaySpec<'_> {
+    /// Returns (clocks, scalar clock fed node-0's compute + the aggregate
+    /// stats — the pre-refactor accumulation, meaningful when node 0
+    /// carries the homogeneous costs).
+    fn run(&self) -> (VirtualClocks, SimClock) {
+        let (topo, costs, d) = (self.topo, self.costs, self.d);
+        let n = topo.n;
+        let mut backend: Box<dyn CommBackend> = match self.kind {
+            BackendKind::Shared => {
+                Box::new(SharedBackend::new(topo, d, costs, self.cost_dim, Compression::None))
+            }
+            BackendKind::Bus => {
+                Box::new(BusBackend::new(topo, d, costs, self.cost_dim, Compression::None, true))
+            }
+        };
+        let pool = WorkerPool::new(2);
+        let mut params = ParamMatrix::random(&mut Rng::new(11), n, d, 1.0);
+        let mut schedule = schedule_for(self.algo, self.h, 2, 4).unwrap();
+        let mut clocks = VirtualClocks::new(topo);
+        let mut scalar = SimClock::default();
+        let no_comm = vec![0.0; n];
+        for k in 0..self.steps {
+            match schedule.action(k, 1.0) {
+                CommAction::Gossip => {
+                    let charge = backend.gossip(&mut params, &pool).unwrap();
+                    clocks.advance(&costs.compute, &charge.node_seconds, charge.barrier);
+                    scalar.advance(costs.compute[0] + charge.stats.sim_seconds);
+                }
+                CommAction::GlobalAverage => {
+                    let charge = backend.global_average(&mut params, &pool).unwrap();
+                    clocks.advance(&costs.compute, &charge.node_seconds, charge.barrier);
+                    scalar.advance(costs.compute[0] + charge.stats.sim_seconds);
+                }
+                CommAction::None => {
+                    clocks.advance(&costs.compute, &no_comm, BarrierScope::None);
+                    scalar.advance(costs.compute[0] + 0.0);
+                }
+            }
+        }
+        (clocks, scalar)
+    }
+}
+
+/// [`ReplaySpec`] for the Gossip-PGA schedule at `cost_dim == d` (the
+/// homogeneous anchors).
+fn replay(
+    kind: BackendKind,
+    topo: &Topology,
+    costs: &NodeCosts,
+    d: usize,
+    steps: usize,
+    h: usize,
+) -> (VirtualClocks, SimClock) {
+    ReplaySpec { algo: AlgorithmKind::GossipPga, kind, topo, costs, d, cost_dim: d, steps, h }
+        .run()
+}
+
+#[test]
+fn homogeneous_clocks_reproduce_the_scalar_sim_clock_on_both_backends() {
+    // The acceptance anchor: `scalar` in `replay` accumulates exactly what
+    // the pre-virtual-time trainer's SimClock did (compute + the action's
+    // aggregate sim_seconds, one fused addition per step). With d chosen
+    // divisible by n the bus's chunk exchange is perfectly even, so BOTH
+    // planes stay lockstep and every per-node clock equals the scalar
+    // clock to the bit, static and time-varying graphs alike.
+    let base = CostModel::calibrated_resnet50();
+    for topo in [Topology::ring(5), Topology::one_peer_expo(8), Topology::grid(9)] {
+        let costs = NodeCosts::homogeneous(base, topo.n);
+        for kind in [BackendKind::Shared, BackendKind::Bus] {
+            let (clocks, scalar) = replay(kind, &topo, &costs, 720, 14, 3);
+            for (i, &s) in clocks.seconds().iter().enumerate() {
+                assert_eq!(
+                    s, scalar.seconds,
+                    "{kind:?}/{:?}: node {i} clock drifted from the scalar clock",
+                    topo.kind
+                );
+            }
+            assert_eq!(clocks.max_seconds(), scalar.seconds, "{kind:?}/{:?}", topo.kind);
+            assert_eq!(clocks.slack(), 0.0, "{kind:?}/{:?}", topo.kind);
+            assert_eq!(clocks.total_wait(), 0.0, "{kind:?}/{:?}", topo.kind);
+        }
+    }
+}
+
+#[test]
+fn homogeneous_critical_path_matches_scalar_even_with_uneven_bus_chunks() {
+    // d % n != 0: the bus's chunked global average ships slightly more
+    // from the big-chunk ranks, so per-node clocks legitimately spread —
+    // real traffic asymmetry the scalar clock could never express. The
+    // CRITICAL PATH (what `sim_seconds` reports) still equals the scalar
+    // accumulation bit-exactly: the scalar clock always billed each
+    // action's busiest node.
+    let base = CostModel::calibrated_resnet50();
+    for topo in [Topology::ring(5), Topology::one_peer_expo(8)] {
+        let costs = NodeCosts::homogeneous(base, topo.n);
+        for kind in [BackendKind::Shared, BackendKind::Bus] {
+            let (clocks, scalar) = replay(kind, &topo, &costs, 13, 14, 3);
+            assert_eq!(clocks.max_seconds(), scalar.seconds, "{kind:?}/{:?}", topo.kind);
+        }
+        // The shared plane bills the analytic formulas, so it stays
+        // lockstep even at uneven d.
+        let (clocks, _) = replay(BackendKind::Shared, &topo, &costs, 13, 14, 3);
+        assert_eq!(clocks.slack(), 0.0, "{:?}", topo.kind);
+    }
+}
+
+#[test]
+fn straggler_critical_path_degrades_gossip_less_than_all_reduce() {
+    // The tab17-style gate in miniature: replay the same schedule shapes
+    // under a 4x straggler (compute + latency) and compare each
+    // algorithm's critical-path degradation ratio. All-Reduce pays the
+    // straggler's latency n times per round; gossip pays it once.
+    let base = CostModel::calibrated_resnet50();
+    let topo = Topology::one_peer_expo(8);
+    let n = topo.n;
+    let hom = NodeCosts::homogeneous(base, n);
+    let slow = hom.clone().with_straggler(3, 4.0).unwrap();
+    let d = 64;
+    let steps = 16;
+    let ratio = |algo: AlgorithmKind| -> f64 {
+        let run = |costs: &NodeCosts| -> f64 {
+            // Bill communication at ResNet-50 scale (the Table 17 regime
+            // the gate's margins are sized for).
+            let spec = ReplaySpec {
+                algo,
+                kind: BackendKind::Shared,
+                topo: &topo,
+                costs,
+                d,
+                cost_dim: 25_500_000,
+                steps,
+                h: 4,
+            };
+            spec.run().0.max_seconds()
+        };
+        run(&slow) / run(&hom)
+    };
+    let r_gossip = ratio(AlgorithmKind::Gossip);
+    let r_pga = ratio(AlgorithmKind::GossipPga);
+    let r_parallel = ratio(AlgorithmKind::Parallel);
+    assert!(
+        r_gossip < r_parallel,
+        "gossip degraded {r_gossip:.3}x vs all-reduce {r_parallel:.3}x"
+    );
+    assert!(
+        r_pga < r_parallel,
+        "gossip-pga degraded {r_pga:.3}x vs all-reduce {r_parallel:.3}x"
+    );
+    // And everyone degrades: the straggler is on every critical path.
+    assert!(r_gossip > 1.0 && r_pga > 1.0 && r_parallel > 1.0);
+}
+
+// ---------------------------------------------------------------------------
+// Trainer-level (needs the AOT artifacts, like the integration tests).
+// ---------------------------------------------------------------------------
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::load_default().expect("run `make artifacts` first"))
+}
+
+fn opts(n: usize, threads: usize, costs: Option<NodeCosts>) -> TrainerOptions {
+    TrainerOptions {
+        algorithm: AlgorithmKind::GossipPga,
+        topology: Topology::one_peer_expo(n),
+        period: 4,
+        aga_init_period: 2,
+        aga_warmup: 4,
+        lr: LrSchedule::Const { lr: 0.2 },
+        momentum: 0.9,
+        nesterov: true,
+        seed: 31,
+        slowmo: SlowMoParams::default(),
+        cost: CostModel::calibrated_resnet50(),
+        cost_dim: 25_500_000,
+        node_costs: costs,
+        log_every: 5,
+        threads,
+        stealing: false,
+        overlap: false,
+        backend: BackendKind::Shared,
+        compression: Compression::None,
+    }
+}
+
+fn trainer(rt: &Arc<Runtime>, n: usize, threads: usize, costs: Option<NodeCosts>) -> Trainer {
+    let (workload, init) = logreg_workload(rt.clone(), n, 256, true, 31).unwrap();
+    Trainer::new(workload, init, opts(n, threads, costs)).unwrap()
+}
+
+fn straggler_costs(n: usize) -> NodeCosts {
+    NodeCosts::homogeneous(CostModel::calibrated_resnet50(), n)
+        .with_straggler(2, 4.0)
+        .unwrap()
+}
+
+#[test]
+fn straggler_bends_clocks_but_not_the_trajectory() {
+    let rt = runtime();
+    let n = 4;
+    let mut hom = trainer(&rt, n, 2, None);
+    let mut slow = trainer(&rt, n, 2, Some(straggler_costs(n)));
+    for _ in 0..13 {
+        hom.step_once().unwrap();
+        slow.step_once().unwrap();
+    }
+    for i in 0..n {
+        assert_eq!(
+            hom.worker_params(i),
+            slow.worker_params(i),
+            "cost tables must never touch the parameter bits (worker {i})"
+        );
+    }
+    // Homogeneous: lockstep clocks, no slack, no waits.
+    assert_eq!(hom.straggler_slack(), 0.0);
+    assert_eq!(hom.barrier_wait_seconds(), 0.0);
+    assert_eq!(hom.sim_seconds(), hom.sim_seconds_min());
+    // Straggled: longer critical path, open slack, real barrier waits —
+    // and the node-2 clock IS the critical path.
+    assert!(slow.sim_seconds() > hom.sim_seconds());
+    assert!(slow.straggler_slack() > 0.0);
+    assert!(slow.barrier_wait_seconds() > 0.0);
+    assert_eq!(slow.node_sim_seconds()[2], slow.sim_seconds());
+    assert_eq!(slow.comm_stats().barrier_wait, slow.barrier_wait_seconds());
+    // Traffic accounting is cost-table-independent.
+    let (a, b) = (hom.comm_stats(), slow.comm_stats());
+    assert_eq!((a.scalars_sent, a.msgs), (b.scalars_sent, b.msgs));
+}
+
+#[test]
+fn history_columns_expose_slack_and_barrier_wait() {
+    let rt = runtime();
+    let n = 4;
+    let mut slow = trainer(&rt, n, 1, Some(straggler_costs(n)));
+    let hist = slow.run(9, "straggled").unwrap();
+    let last = hist.records.last().unwrap();
+    assert!(last.sim_seconds >= last.sim_min_seconds);
+    assert!(last.barrier_wait > 0.0, "straggled run must log barrier waits");
+    let csv = hist.to_csv();
+    assert!(csv.lines().next().unwrap().ends_with("sim_min_seconds,straggler_slack,barrier_wait"));
+    let json = hist.to_json().dump();
+    assert!(json.contains("\"straggler_slack\""));
+    assert!(json.contains("\"barrier_wait\""));
+}
+
+#[test]
+fn checkpoint_mid_run_resume_keeps_per_node_clocks_bit_exact() {
+    // Heterogeneous run, checkpoint at step 9 (mid one-peer period), keep
+    // running vs restore into a FRESH trainer on a different thread count:
+    // parameters AND every per-node clock/wait must agree to the bit.
+    let rt = runtime();
+    let n = 4;
+    let costs = straggler_costs(n);
+    let mut a = trainer(&rt, n, 1, Some(costs.clone()));
+    for _ in 0..9 {
+        a.step_once().unwrap();
+    }
+    let ck = a.checkpoint().unwrap();
+    let cs = ck.clocks.as_ref().expect("v4 checkpoints carry per-node clocks");
+    assert_eq!(cs.seconds.len(), n);
+    assert_eq!(cs.seconds, a.node_sim_seconds(), "snapshot must be the live clocks");
+    for _ in 0..9 {
+        a.step_once().unwrap();
+    }
+
+    let mut b = trainer(&rt, n, 3, Some(costs));
+    b.restore(&ck).unwrap();
+    assert_eq!(b.node_sim_seconds(), &cs.seconds[..]);
+    assert_eq!(b.barrier_wait_seconds(), ck.comm.unwrap().barrier_wait);
+    for _ in 0..9 {
+        b.step_once().unwrap();
+    }
+    for i in 0..n {
+        assert_eq!(a.worker_params(i), b.worker_params(i), "worker {i}");
+        assert_eq!(
+            a.node_sim_seconds()[i],
+            b.node_sim_seconds()[i],
+            "node {i} clock diverged across the resume"
+        );
+    }
+    assert_eq!(a.sim_seconds(), b.sim_seconds());
+    assert_eq!(a.straggler_slack(), b.straggler_slack());
+    assert_eq!(a.barrier_wait_seconds(), b.barrier_wait_seconds());
+}
+
+#[test]
+fn pre_v4_checkpoints_resume_on_the_uniform_scalar_axis() {
+    // A snapshot without the clocks block (v1/v2/v3 files) must restore
+    // every node to the scalar sim_seconds with zeroed wait accounts.
+    let rt = runtime();
+    let n = 4;
+    let mut a = trainer(&rt, n, 1, Some(straggler_costs(n)));
+    for _ in 0..7 {
+        a.step_once().unwrap();
+    }
+    let mut ck = a.checkpoint().unwrap();
+    ck.clocks = None; // simulate a pre-v4 file
+    let mut b = trainer(&rt, n, 1, Some(straggler_costs(n)));
+    b.restore(&ck).unwrap();
+    assert_eq!(b.sim_seconds(), ck.sim_seconds);
+    assert_eq!(b.sim_seconds_min(), ck.sim_seconds, "uniform resume");
+    assert_eq!(b.barrier_wait_seconds(), 0.0, "pre-v4 waits restart at zero");
+}

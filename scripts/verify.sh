@@ -6,11 +6,17 @@
 #   3. tier-1: release build + full test suite (ROADMAP.md)
 #   4. schedule-equivalence property suite at PROPTEST_CASES=16, swept over
 #      GOSSIP_PGA_TEST_THREADS=1 and =4 (pooled == scoped == sequential;
-#      overlap == BSP at every k*H boundary; bus backend == shared backend)
-#   5. comm-accounting smoke: the rewritten tab17 bench replays a schedule
+#      work-stealing == static sharding; overlap == BSP at every k*H
+#      boundary; bus backend == shared backend)
+#   5. virtual-time straggler smoke at PROPTEST_CASES=16: per-node clocks
+#      reproduce the scalar SimClock bit-exactly when homogeneous (both
+#      backends), stragglers bend clocks but never parameter bits, and
+#      checkpoint v4 resumes keep the per-node time axis
+#   6. comm-accounting smoke: the rewritten tab17 bench replays a schedule
 #      on both CommPlane backends and asserts measured == predicted ==
-#      analytic traffic (it needs no AOT artifacts), so backend accounting
-#      cannot silently rot.
+#      analytic traffic AND the straggler gate (gossip's critical path
+#      degrades less than all-reduce's under a seeded 4x straggler); it
+#      needs no AOT artifacts, so backend accounting cannot silently rot.
 #
 # Usage: scripts/verify.sh [--fast]
 #   --fast   sets GOSSIP_PGA_FAST=1 so bench-derived tests run at reduced
@@ -47,7 +53,10 @@ PROPTEST_CASES=16 GOSSIP_PGA_TEST_THREADS=1 cargo test -q --test properties
 echo "==> schedule-equivalence properties (PROPTEST_CASES=16, threads=4)"
 PROPTEST_CASES=16 GOSSIP_PGA_TEST_THREADS=4 cargo test -q --test properties
 
-echo "==> CommPlane accounting smoke (tab17, fast mode)"
+echo "==> virtual-time plane: homogeneous bit-exactness + straggler properties"
+PROPTEST_CASES=16 cargo test -q --test virtual_time
+
+echo "==> CommPlane accounting smoke incl. straggler gate (tab17, fast mode)"
 GOSSIP_PGA_FAST=1 cargo bench --bench tab17_comm_overhead
 
 echo "==> verify OK"
