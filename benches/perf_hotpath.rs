@@ -12,6 +12,9 @@
 //!     headline; also asserts both runs end bit-identical
 //!   * overlap (double-buffered async gossip) vs BSP at the same thread
 //!     count — the async-gossip headline; asserts bit-identical finals
+//!   * regime dispatch: BSP vs event-driven async at max_staleness 0 and 2
+//!     — strict async asserts bit-identical params + clocks vs BSP;
+//!     relaxed async asserts a no-worse simulated critical path
 //!
 //!     cargo bench --bench perf_hotpath
 
@@ -23,6 +26,7 @@ use gossip_pga::comm::{BackendKind, BusBackend, CommBackend, Compression, Shared
 use gossip_pga::coordinator::mixer::{axpy, Mixer};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::{CostModel, NodeCosts};
+use gossip_pga::eventsim::Regime;
 use gossip_pga::exec::WorkerPool;
 use gossip_pga::harness::{fmt_duration, measure, Table};
 use gossip_pga::optim::LrSchedule;
@@ -35,7 +39,7 @@ fn random_matrix(rng: &mut Rng, n: usize, d: usize) -> ParamMatrix {
     ParamMatrix::random(rng, n, d, 1.0)
 }
 
-fn trainer_opts(n: usize, threads: usize, overlap: bool) -> TrainerOptions {
+fn trainer_opts(n: usize, threads: usize, regime: Regime) -> TrainerOptions {
     TrainerOptions {
         algorithm: AlgorithmKind::GossipPga,
         topology: Topology::ring(n),
@@ -53,7 +57,8 @@ fn trainer_opts(n: usize, threads: usize, overlap: bool) -> TrainerOptions {
         stealing: false,
         log_every: 1000,
         threads,
-        overlap,
+        regime,
+        max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::None,
     }
@@ -282,7 +287,7 @@ fn main() -> anyhow::Result<()> {
     // --- full coordinator step --------------------------------------------
     let n = 32;
     let (workload, init) = logreg_workload(rt.clone(), n, 256, true, 3)?;
-    let mut trainer = Trainer::new(workload, init, trainer_opts(n, 1, false))?;
+    let mut trainer = Trainer::new(workload, init, trainer_opts(n, 1, Regime::Bsp))?;
     let s = measure(5, 50, || {
         trainer.step_once().unwrap();
     });
@@ -301,8 +306,8 @@ fn main() -> anyhow::Result<()> {
     let threads = threads_avail.min(n).max(2);
     let (workload_seq, init_seq) = logreg_workload(rt.clone(), n, 256, true, 3)?;
     let (workload_thr, init_thr) = logreg_workload(rt.clone(), n, 256, true, 3)?;
-    let mut seq = Trainer::new(workload_seq, init_seq, trainer_opts(n, 1, false))?;
-    let mut thr = Trainer::new(workload_thr, init_thr, trainer_opts(n, threads, false))?;
+    let mut seq = Trainer::new(workload_seq, init_seq, trainer_opts(n, 1, Regime::Bsp))?;
+    let mut thr = Trainer::new(workload_thr, init_thr, trainer_opts(n, threads, Regime::Bsp))?;
     let s_seq = measure(5, 50, || {
         seq.step_once().unwrap();
     });
@@ -345,8 +350,8 @@ fn main() -> anyhow::Result<()> {
     // (the schedule-equivalence contract).
     let (workload_bsp, init_bsp) = logreg_workload(rt.clone(), n, 256, true, 3)?;
     let (workload_ovl, init_ovl) = logreg_workload(rt.clone(), n, 256, true, 3)?;
-    let mut bsp = Trainer::new(workload_bsp, init_bsp, trainer_opts(n, threads, false))?;
-    let mut ovl = Trainer::new(workload_ovl, init_ovl, trainer_opts(n, threads, true))?;
+    let mut bsp = Trainer::new(workload_bsp, init_bsp, trainer_opts(n, threads, Regime::Bsp))?;
+    let mut ovl = Trainer::new(workload_ovl, init_ovl, trainer_opts(n, threads, Regime::Overlap))?;
     let s_bsp = measure(5, 60, || {
         bsp.step_once().unwrap();
     });
@@ -383,6 +388,86 @@ fn main() -> anyhow::Result<()> {
         "(params bit-identical after drain)".into(),
     ]);
 
+    // --- regime dispatch: BSP vs overlap vs event-driven async --------------
+    // Three step loops over the same workload and seed. Strict async
+    // (max_staleness = 0) must reproduce the BSP trainer bit-exactly —
+    // parameters AND virtual clocks (the eventsim anchor) — while relaxed
+    // async (max_staleness = 2) is the AD-PSGD regime proper: bounded-
+    // stale mixing, per-link billing, smaller simulated critical path.
+    {
+        let (w_bsp, i_bsp) = logreg_workload(rt.clone(), n, 256, true, 3)?;
+        let (w_strict, i_strict) = logreg_workload(rt.clone(), n, 256, true, 3)?;
+        let (w_relaxed, i_relaxed) = logreg_workload(rt.clone(), n, 256, true, 3)?;
+        let mut bsp = Trainer::new(w_bsp, i_bsp, trainer_opts(n, threads, Regime::Bsp))?;
+        let mut strict =
+            Trainer::new(w_strict, i_strict, trainer_opts(n, threads, Regime::Async))?;
+        let mut relaxed_opts = trainer_opts(n, threads, Regime::Async);
+        relaxed_opts.max_staleness = 2;
+        let mut relaxed = Trainer::new(w_relaxed, i_relaxed, relaxed_opts)?;
+        let s_bsp = measure(5, 50, || {
+            bsp.step_once().unwrap();
+        });
+        let s_strict = measure(5, 50, || {
+            strict.step_once().unwrap();
+        });
+        let s_relaxed = measure(5, 50, || {
+            relaxed.step_once().unwrap();
+        });
+        for i in 0..n {
+            assert_eq!(
+                bsp.worker_params(i),
+                strict.worker_params(i),
+                "strict async diverged from BSP at worker {i}"
+            );
+        }
+        assert_eq!(
+            bsp.sim_seconds(),
+            strict.sim_seconds(),
+            "strict async must reproduce the barrier-billed clock bit-exactly"
+        );
+        assert!(
+            relaxed.sim_seconds() <= bsp.sim_seconds(),
+            "relaxed async sim time {} exceeded BSP's {}",
+            relaxed.sim_seconds(),
+            bsp.sim_seconds()
+        );
+        t.rowv(vec![
+            "coordinator step, regime=bsp".into(),
+            format!("n = {n}, PGA H=6, threads={threads}"),
+            fmt_duration(s_bsp.mean),
+            fmt_duration(s_bsp.p95),
+            format!("{:.0} worker-execs/s", n as f64 / s_bsp.mean),
+        ]);
+        t.rowv(vec![
+            "coordinator step, regime=async s=0".into(),
+            format!("n = {n}, lockstep waves"),
+            fmt_duration(s_strict.mean),
+            fmt_duration(s_strict.p95),
+            format!("{:.0} worker-execs/s", n as f64 / s_strict.mean),
+        ]);
+        t.rowv(vec![
+            "coordinator step, regime=async s=2".into(),
+            format!("n = {n}, event-driven"),
+            fmt_duration(s_relaxed.mean),
+            fmt_duration(s_relaxed.p95),
+            format!("{:.0} worker-execs/s", n as f64 / s_relaxed.mean),
+        ]);
+        t.rowv(vec![
+            "  -> async s=0 vs bsp".into(),
+            "dispatch overhead of the event plane".into(),
+            format!("{:.2}x", s_strict.mean / s_bsp.mean),
+            "-".into(),
+            "(params + clocks bit-identical)".into(),
+        ]);
+        t.rowv(vec![
+            "  -> async s=2 sim-time".into(),
+            "per-link billing".into(),
+            format!("{:.2}x of bsp", relaxed.sim_seconds() / bsp.sim_seconds()),
+            "-".into(),
+            "(hides comm behind compute)".into(),
+        ]);
+    }
+
     // --- work-stealing vs static sharding under a 4x straggler ---------------
     // A simulated straggler (node 2: 4x compute + latency in the cost
     // table) only bends the virtual clocks, so stealing's job here is the
@@ -395,7 +480,7 @@ fn main() -> anyhow::Result<()> {
             NodeCosts::homogeneous(CostModel::calibrated_resnet50(), n).with_straggler(2, 4.0)?;
         let mk = |stealing: bool| -> anyhow::Result<Trainer> {
             let (workload, init) = logreg_workload(rt.clone(), n, 256, true, 3)?;
-            let mut opts = trainer_opts(n, threads, false);
+            let mut opts = trainer_opts(n, threads, Regime::Bsp);
             opts.stealing = stealing;
             opts.node_costs = Some(straggler.clone());
             Trainer::new(workload, init, opts)

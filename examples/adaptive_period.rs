@@ -10,6 +10,7 @@ use gossip_pga::algorithms::{AlgorithmKind, CommAction, SlowMoParams};
 use gossip_pga::comm::{BackendKind, Compression};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::CostModel;
+use gossip_pga::eventsim::Regime;
 use gossip_pga::harness::Table;
 use gossip_pga::optim::LrSchedule;
 use gossip_pga::runtime::Runtime;
@@ -33,7 +34,8 @@ fn opts(algo: AlgorithmKind, n: usize, seed: u64) -> TrainerOptions {
         stealing: false,
         log_every: 50,
         threads: 1,
-        overlap: false,
+        regime: Regime::Bsp,
+        max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::None,
     }

@@ -14,6 +14,7 @@ use gossip_pga::algorithms::{AlgorithmKind, SlowMoParams};
 use gossip_pga::comm::{BackendKind, Compression};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::CostModel;
+use gossip_pga::eventsim::Regime;
 use gossip_pga::harness::Table;
 use gossip_pga::metrics::{smooth, transient_stage_scaled};
 use gossip_pga::optim::LrSchedule;
@@ -52,7 +53,8 @@ fn main() -> anyhow::Result<()> {
             log_every: 25,
             threads: 1,
             stealing: false,
-            overlap: false,
+            regime: Regime::Bsp,
+            max_staleness: 0,
             backend: BackendKind::Shared,
             compression: Compression::None,
         };

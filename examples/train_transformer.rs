@@ -19,6 +19,7 @@ use gossip_pga::algorithms::{AlgorithmKind, SlowMoParams};
 use gossip_pga::comm::{BackendKind, Compression};
 use gossip_pga::coordinator::{lm_eval_loss, lm_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::CostModel;
+use gossip_pga::eventsim::Regime;
 use gossip_pga::optim::LrSchedule;
 use gossip_pga::runtime::Runtime;
 use gossip_pga::topology::Topology;
@@ -81,7 +82,8 @@ fn main() -> anyhow::Result<()> {
         stealing: false,
         log_every: 1,
         threads,
-        overlap,
+        regime: if overlap { Regime::Overlap } else { Regime::Bsp },
+        max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::None,
     };
@@ -108,6 +110,9 @@ fn main() -> anyhow::Result<()> {
             sim_min_seconds: trainer.sim_seconds_min(),
             straggler_slack: trainer.straggler_slack(),
             barrier_wait: comm.barrier_wait,
+            stale_max: 0,
+            stale_mean: 0.0,
+            link_util: 0.0,
         });
         if k % 10 == 0 || k + 1 == steps {
             println!(

@@ -162,6 +162,7 @@ impl BusBackend {
                 msgs,
                 sim_seconds: critical,
                 barrier_wait: 0.0,
+                fallback_rounds: 0,
             },
             node_seconds,
             barrier,
@@ -439,6 +440,27 @@ impl BusBackend {
     }
 }
 
+impl BusBackend {
+    /// One real message over the plane: serialized onto src's channel,
+    /// received on dst's side — the endpoint counters measure it like any
+    /// phase-A gossip send. The event engine holds the payload until its
+    /// virtual delivery time (checkpointable), so the channel never
+    /// carries state across calls.
+    fn push_row_inner(
+        &mut self,
+        params: &ParamMatrix,
+        src: usize,
+        dst: usize,
+    ) -> Result<(Vec<f32>, CommStats)> {
+        let d = self.d;
+        let x = params.row(src).to_vec();
+        self.endpoints[src].send_billed(dst, x, d as u64)?;
+        let payload = self.endpoints[dst].recv_from(src)?;
+        ensure!(payload.len() == d, "pushed row carries {} of {d} scalars", payload.len());
+        Ok((payload, CommStats { scalars_sent: d as u64, msgs: 1, ..Default::default() }))
+    }
+}
+
 impl CommBackend for BusBackend {
     fn kind(&self) -> BackendKind {
         BackendKind::Bus
@@ -465,6 +487,40 @@ impl CommBackend for BusBackend {
         let result = self.global_average_inner(params, pool);
         self.failed |= result.is_err();
         result
+    }
+
+    fn push_row(
+        &mut self,
+        params: &ParamMatrix,
+        src: usize,
+        dst: usize,
+    ) -> Result<(Vec<f32>, CommStats)> {
+        ensure!(!self.failed, "bus backend is poisoned by an earlier failed collective");
+        // A failed push leaves the counters half-advanced, so it poisons
+        // the backend exactly like a failed collective.
+        let result = self.push_row_inner(params, src, dst);
+        self.failed |= result.is_err();
+        result
+    }
+
+    fn add_total(&mut self, stats: CommStats) {
+        self.total.merge(stats);
+    }
+
+    fn gossip_node_seconds(&self, round: usize) -> Vec<f64> {
+        // The same arithmetic charge_since() applies to this round's
+        // measured counters — sender-billed, per message and per wire
+        // scalar at the emulated cost_dim — so strict-mode event billing
+        // is bit-identical to the synchronous round's charge.
+        let scale = self.cost_dim as f64 / self.d.max(1) as f64;
+        let outn = &self.outn[round % self.rounds];
+        (0..self.n)
+            .map(|j| {
+                let dm = outn[j].len() as u64;
+                let ds = dm * self.d as u64;
+                dm as f64 * self.alpha[j] + ds as f64 * scale * self.theta[j]
+            })
+            .collect()
     }
 
     fn gossip_clock(&self) -> usize {

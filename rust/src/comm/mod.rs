@@ -61,6 +61,15 @@ pub struct CommStats {
     /// homogeneous STAR still accrues wait — its leaves really do stall
     /// behind the busier hub — as does the bus plane at d % n != 0.
     pub barrier_wait: f64,
+    /// Gossip rounds that were REQUESTED asynchronous (overlap mode) but
+    /// executed as the synchronous round because the backend has no
+    /// `gossip_async` (the bus plane; compressed transmit on the shared
+    /// plane). Backends report 0 per action — the trainer, which owns the
+    /// fallback decision, fills this in on the cumulative totals. A
+    /// nonzero count on an overlap run means the configuration lost its
+    /// compute/comm overlap — see the README's regime matrix row and the
+    /// ROADMAP's async/bus-overlap item.
+    pub fallback_rounds: u64,
 }
 
 impl CommStats {
@@ -70,6 +79,7 @@ impl CommStats {
         self.msgs += other.msgs;
         self.sim_seconds += other.sim_seconds;
         self.barrier_wait += other.barrier_wait;
+        self.fallback_rounds += other.fallback_rounds;
     }
 
     /// Wire bytes (4 bytes per f32-equivalent).
@@ -258,6 +268,44 @@ pub trait CommBackend: Send {
         bail!("this backend has no asynchronous gossip")
     }
 
+    /// Whether [`CommBackend::gossip_async`] can ever return a round on
+    /// this backend as configured. Overlap mode consults this at trainer
+    /// construction so the silent synchronous fallback is surfaced as a
+    /// startup warning + the [`CommStats::fallback_rounds`] counter
+    /// instead of a quiet downgrade.
+    fn supports_overlap(&self) -> bool {
+        false
+    }
+
+    /// Ship node `src`'s current row to `dst` and hand the delivered
+    /// payload back to the caller — the event-driven regime
+    /// ([`crate::eventsim`]) owns delivery *timing*, the backend owns the
+    /// bytes (a real send/recv on the bus plane, a predicted-traffic copy
+    /// on the shared plane). Returns the payload plus the one message's
+    /// traffic; NOT merged into [`CommBackend::total`] — the engine bills
+    /// through [`CommBackend::add_total`] so its per-event time model
+    /// rides along.
+    fn push_row(
+        &mut self,
+        _params: &ParamMatrix,
+        _src: usize,
+        _dst: usize,
+    ) -> Result<(Vec<f32>, CommStats)> {
+        bail!("this backend has no per-edge push path")
+    }
+
+    /// Merge externally billed stats into the cumulative total (the event
+    /// engine's per-push traffic and per-wave/per-link time charges).
+    fn add_total(&mut self, stats: CommStats);
+
+    /// Per-node alpha-beta seconds this backend bills for one
+    /// identity-payload gossip round at `round` — the exact numbers
+    /// [`CommBackend::gossip`]'s [`CommCharge`] would carry, exposed so
+    /// the event engine's strict mode (max_staleness = 0) can reproduce
+    /// the barrier-billed clocks bit-exactly without running the
+    /// matrix-level round.
+    fn gossip_node_seconds(&self, round: usize) -> Vec<f64>;
+
     /// Gossip rounds executed so far (drives time-varying topologies;
     /// checkpointed by the trainer).
     fn gossip_clock(&self) -> usize;
@@ -413,12 +461,25 @@ mod tests {
 
     #[test]
     fn stats_merge_and_bytes() {
-        let mut a = CommStats { scalars_sent: 10, msgs: 2, sim_seconds: 0.5, barrier_wait: 0.1 };
-        a.merge(CommStats { scalars_sent: 5, msgs: 1, sim_seconds: 0.25, barrier_wait: 0.2 });
+        let mut a = CommStats {
+            scalars_sent: 10,
+            msgs: 2,
+            sim_seconds: 0.5,
+            barrier_wait: 0.1,
+            fallback_rounds: 1,
+        };
+        a.merge(CommStats {
+            scalars_sent: 5,
+            msgs: 1,
+            sim_seconds: 0.25,
+            barrier_wait: 0.2,
+            fallback_rounds: 2,
+        });
         assert_eq!(a.scalars_sent, 15);
         assert_eq!(a.msgs, 3);
         assert!((a.sim_seconds - 0.75).abs() < 1e-12);
         assert!((a.barrier_wait - 0.3).abs() < 1e-12);
+        assert_eq!(a.fallback_rounds, 3);
         assert_eq!(a.bytes_sent(), 60);
     }
 

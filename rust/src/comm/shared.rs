@@ -154,6 +154,7 @@ impl CommBackend for SharedBackend {
                     msgs,
                     sim_seconds: sim,
                     barrier_wait: 0.0,
+                    fallback_rounds: 0,
                 },
                 node_seconds,
                 barrier: BarrierScope::Neighborhood { round },
@@ -168,6 +169,7 @@ impl CommBackend for SharedBackend {
                     msgs,
                     sim_seconds: max_of(&node_seconds),
                     barrier_wait: 0.0,
+                    fallback_rounds: 0,
                 },
                 node_seconds,
                 barrier: BarrierScope::Neighborhood { round },
@@ -191,6 +193,7 @@ impl CommBackend for SharedBackend {
                 msgs,
                 sim_seconds: max_of(&node_seconds),
                 barrier_wait: 0.0,
+                fallback_rounds: 0,
             },
             node_seconds,
             barrier: BarrierScope::Global,
@@ -222,6 +225,7 @@ impl CommBackend for SharedBackend {
                     msgs,
                     sim_seconds: max_of(&node_seconds),
                     barrier_wait: 0.0,
+                    fallback_rounds: 0,
                 },
                 node_seconds,
                 barrier: BarrierScope::Neighborhood { round },
@@ -235,6 +239,37 @@ impl CommBackend for SharedBackend {
         self.mixer.finish_gossip(params, mix)?;
         self.total.merge(charge.stats);
         Ok(charge)
+    }
+
+    fn supports_overlap(&self) -> bool {
+        // The compressed transmit pass is ordered (error-feedback state),
+        // so only the raw path can double-buffer.
+        !self.compressed()
+    }
+
+    fn push_row(
+        &mut self,
+        params: &ParamMatrix,
+        src: usize,
+        _dst: usize,
+    ) -> Result<(Vec<f32>, CommStats)> {
+        // In-proc plane: the "transfer" is a copy; traffic is the same one
+        // message a bus run would measure. The event engine owns delivery
+        // timing (and the async regime is uncompressed by construction —
+        // the trainer rejects compression there).
+        let d = self.mixer.d();
+        Ok((
+            params.row(src).to_vec(),
+            CommStats { scalars_sent: d as u64, msgs: 1, ..Default::default() },
+        ))
+    }
+
+    fn add_total(&mut self, stats: CommStats) {
+        self.total.merge(stats);
+    }
+
+    fn gossip_node_seconds(&self, round: usize) -> Vec<f64> {
+        self.gossip_node_sim[round % self.rounds].clone()
     }
 
     fn gossip_clock(&self) -> usize {

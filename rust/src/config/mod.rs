@@ -12,6 +12,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::algorithms::AlgorithmKind;
 use crate::comm::{BackendKind, Compression};
 use crate::costmodel::{CostModel, NodeCosts};
+use crate::eventsim::Regime;
 use crate::topology::Topology;
 
 /// A parsed TOML-subset document: dotted-path -> value.
@@ -241,8 +242,16 @@ pub struct ExperimentConfig {
     pub stragglers: Vec<(usize, f64)>,
     /// Double-buffered async gossip: overlap the round-t mix with round
     /// t+1's sampling phase (bit-identical to BSP at every global-averaging
-    /// boundary). Off by default.
+    /// boundary). Off by default; shorthand for `train.regime = "overlap"`.
     pub overlap: bool,
+    /// Execution regime: "bsp" (default), "overlap", or "async" — the
+    /// event-driven AD-PSGD plane (`eventsim`). Defaults to "overlap" when
+    /// only `train.overlap = true` is set (back-compat).
+    pub regime: String,
+    /// Async regime: how many versions behind BSP-fresh a mix input may
+    /// be. 0 = strict (bit-identical to BSP); >= 1 overlaps compute with
+    /// in-flight transfers.
+    pub max_staleness: usize,
     /// Communication backend: "shared" (in-proc mixer, default) or "bus"
     /// (message-passing endpoints with measured traffic).
     pub backend: String,
@@ -284,6 +293,8 @@ impl Default for ExperimentConfig {
             cost_compute: Vec::new(),
             stragglers: Vec::new(),
             overlap: false,
+            regime: "bsp".into(),
+            max_staleness: 0,
             backend: "shared".into(),
             compression: "none".into(),
             topk_frac: 0.1,
@@ -323,6 +334,22 @@ impl ExperimentConfig {
             cost_compute: doc.get_f64_list("cost.compute")?,
             stragglers: parse_stragglers(&doc.get_str("cost.straggler", "")?)?,
             overlap: doc.get_bool("train.overlap", d.overlap)?,
+            regime: match doc.get("train.regime") {
+                Some(v) => v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("'train.regime' must be a string"))?
+                    .to_string(),
+                // Back-compat: a bare `train.overlap = true` selects the
+                // overlap regime.
+                None => {
+                    if doc.get_bool("train.overlap", d.overlap)? {
+                        "overlap".into()
+                    } else {
+                        d.regime.clone()
+                    }
+                }
+            },
+            max_staleness: doc.get_usize("train.max_staleness", d.max_staleness)?,
             backend: doc.get_str("comm.backend", &d.backend)?,
             compression: doc.get_str("comm.compression", &d.compression)?,
             topk_frac: doc.get_f64("comm.topk_frac", d.topk_frac)?,
@@ -381,7 +408,22 @@ impl ExperimentConfig {
         Topology::from_name(&self.topology, self.nodes)?;
         self.backend_kind()?;
         self.compression_kind()?;
+        let regime = self.regime_kind()?;
+        if self.overlap && regime != Regime::Overlap {
+            bail!(
+                "train.overlap = true conflicts with train.regime = \"{}\"",
+                self.regime
+            );
+        }
+        if self.max_staleness > 0 && regime != Regime::Async {
+            bail!("train.max_staleness only applies to train.regime = \"async\"");
+        }
         Ok(())
+    }
+
+    /// Parsed execution regime ([`Regime`]).
+    pub fn regime_kind(&self) -> Result<Regime> {
+        Regime::from_name(&self.regime)
     }
 
     /// Resolve the per-node cost table from the overrides + straggler
@@ -445,6 +487,7 @@ pub fn parse_stragglers(spec: &str) -> Result<Vec<(usize, f64)>> {
     if spec.is_empty() {
         return Ok(Vec::new());
     }
+    let mut seen = std::collections::BTreeSet::new();
     spec.split(',')
         .map(|part| {
             let part = part.trim();
@@ -459,6 +502,11 @@ pub fn parse_stragglers(spec: &str) -> Result<Vec<(usize, f64)>> {
                 .trim()
                 .parse()
                 .map_err(|_| anyhow!("straggler factor must be numeric, got '{factor}'"))?;
+            // Silently compounding two specs for one node (factor a then
+            // factor b => a*b) is never what the user meant — reject.
+            if !seen.insert(idx) {
+                bail!("duplicate straggler index {idx} (each node may appear once)");
+            }
             Ok((idx, factor))
         })
         .collect()
@@ -658,6 +706,49 @@ mod tests {
         let doc = Toml::parse("[cluster]\nnodes = 4\n[cost]\nstraggler = \"4:2\"\n").unwrap();
         assert!(ExperimentConfig::from_toml(&doc).is_err());
         let doc = Toml::parse("[cost]\nstraggler = \"0:0\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn regime_and_staleness_parse_from_toml() {
+        // Explicit regimes.
+        for (name, want) in
+            [("bsp", Regime::Bsp), ("overlap", Regime::Overlap), ("async", Regime::Async)]
+        {
+            let doc = Toml::parse(&format!("[train]\nregime = \"{name}\"\n")).unwrap();
+            let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+            assert_eq!(cfg.regime_kind().unwrap(), want);
+        }
+        assert_eq!(ExperimentConfig::default().regime_kind().unwrap(), Regime::Bsp);
+        // Back-compat: bare train.overlap selects the overlap regime.
+        let doc = Toml::parse("[train]\noverlap = true\n").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.regime_kind().unwrap(), Regime::Overlap);
+        // Conflicting knobs are rejected, as is a staleness bound outside
+        // the async regime.
+        let doc = Toml::parse("[train]\noverlap = true\nregime = \"bsp\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+        let doc = Toml::parse("[train]\nmax_staleness = 2\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+        let doc = Toml::parse("[train]\nregime = \"async\"\nmax_staleness = 2\n").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.max_staleness, 2);
+        assert_eq!(cfg.regime_kind().unwrap(), Regime::Async);
+        // Strict async (max_staleness = 0) is the BSP-bit-exact anchor.
+        let doc = Toml::parse("[train]\nregime = \"async\"\n").unwrap();
+        assert_eq!(ExperimentConfig::from_toml(&doc).unwrap().max_staleness, 0);
+        let doc = Toml::parse("[train]\nregime = \"warp\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn duplicate_straggler_indices_are_rejected() {
+        // `--straggler 0:4,3:2` is the multi-straggler form; `0:4,0:2`
+        // used to silently compound to 8x on node 0.
+        assert_eq!(parse_stragglers("0:4,3:2").unwrap(), vec![(0, 4.0), (3, 2.0)]);
+        assert!(parse_stragglers("0:4,0:2").is_err());
+        assert!(parse_stragglers("1:2, 1:2").is_err());
+        let doc = Toml::parse("[cost]\nstraggler = \"2:4,2:8\"\n").unwrap();
         assert!(ExperimentConfig::from_toml(&doc).is_err());
     }
 

@@ -15,7 +15,7 @@
 //! replays bit-identically to an unbroken run (v3 for compressed runs,
 //! v4 for heterogeneous time axes).
 //!
-//! Format v4 (little-endian):
+//! Format v5 (little-endian):
 //!   magic "GPGA" | u32 version | u64 step | f64 sim_seconds |
 //!   u32 n | u32 d | n * d f32 params | u8 has_velocity |
 //!   [n * d f32 velocities] | u64 gossip_clock | u8 has_schedule |
@@ -23,10 +23,16 @@
 //!   u8 has_slowmo | [d f32 prev | d f32 u] |
 //!   u8 has_rng | [n * 4 u64 worker RNG states] |
 //!   u8 has_comm | [u64 scalars_sent | u64 msgs | f64 comm_sim_seconds |
-//!                  f64 barrier_wait (v4+)] |
+//!                  f64 barrier_wait (v4+) | u64 fallback_rounds (v5+)] |
 //!   u8 has_ef | [u8 codec (1 = topk, 2 = int8) | f64 topk_frac |
 //!                u64 int8_block | n * d f32 error-feedback residuals] |
-//!   u8 has_clocks | [n f64 node clocks | n f64 node barrier waits] (v4+)
+//!   u8 has_clocks | [n f64 node clocks | n f64 node barrier waits] (v4+) |
+//!   u8 has_eventsim | [u64 max_staleness | u32 hist_len | hist u64s |
+//!                      u32 n_links | per link: u32 src | u32 dst |
+//!                      f64 busy_until | f64 busy_seconds |
+//!                      u64 cache_version | d f32 cache |
+//!                      u32 inflight_count | per msg: f64 deliver_at |
+//!                      u64 version | d f32 payload] (v5+)
 //!
 //! The v3 tail carries the CommPlane's cumulative traffic counters (so a
 //! resumed run's comm_scalars/comm_msgs columns continue rather than
@@ -36,9 +42,17 @@
 //! header field stays the critical path (the barrier max), so pre-v4
 //! readers of the same quantity and pre-v4 FILES both keep their meaning.
 //!
+//! The v5 tail snapshots the event-driven async regime's per-edge
+//! in-flight/stale state ([`crate::eventsim::EventSimState`]): every link's
+//! newest delivered payload (+ version), its in-flight FIFO with absolute
+//! virtual delivery times, the link occupancy accounts, and the staleness
+//! histogram — so a mid-flight async run resumes bit-exactly, payloads and
+//! all. The comm block gains the overlap fallback tally.
+//!
 //! v1 files (which end after the velocity block), v2 files (which end
-//! after the RNG block) and v3 files (which end after the ef block) still
-//! load; the extra state defaults to "unset" so old checkpoints keep
+//! after the RNG block), v3 files (which end after the ef block) and v4
+//! files (which end after the clock block) still load; the extra state
+//! defaults to "unset" so old checkpoints keep
 //! their old meaning (for v1, callers must replay the data streams
 //! themselves, as before; for pre-v3, traffic counters and residuals
 //! restart at zero; for pre-v4, every node resumes at the scalar
@@ -53,10 +67,11 @@ use anyhow::{bail, Context, Result};
 
 use crate::algorithms::AgaState;
 use crate::comm::{CommStats, Compression};
+use crate::eventsim::{EventSimState, LinkSnapshot};
 use crate::params::ParamMatrix;
 
 const MAGIC: &[u8; 4] = b"GPGA";
-const VERSION: u32 = 4;
+const VERSION: u32 = 5;
 
 /// SlowMo outer-loop state (Wang et al. 2019): the parameters at the last
 /// global sync and the slow-momentum buffer.
@@ -104,6 +119,10 @@ pub struct Checkpoint {
     /// Per-node virtual clocks + barrier-wait accounts (None for pre-v4
     /// files — every node resumes at `sim_seconds`, waits zeroed).
     pub clocks: Option<ClockState>,
+    /// The async regime's per-edge in-flight/stale state (None for pre-v5
+    /// files and non-async runs — an async resume then re-seeds its link
+    /// caches from the restored rows).
+    pub eventsim: Option<EventSimState>,
 }
 
 impl Checkpoint {
@@ -158,6 +177,22 @@ impl Checkpoint {
                 cs.waited.len()
             );
         }
+        if let Some(es) = &self.eventsim {
+            for l in &es.links {
+                anyhow::ensure!(
+                    (l.src as usize) < n && (l.dst as usize) < n,
+                    "eventsim link ({}, {}) out of range for {n} nodes",
+                    l.src,
+                    l.dst
+                );
+                anyhow::ensure!(
+                    l.cache.len() == d && l.inflight.iter().all(|(_, _, p)| p.len() == d),
+                    "eventsim payloads on link ({}, {}) are not d = {d}",
+                    l.src,
+                    l.dst
+                );
+            }
+        }
         let mut f = std::io::BufWriter::new(
             std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
         );
@@ -197,6 +232,7 @@ impl Checkpoint {
             f.write_all(&c.msgs.to_le_bytes())?;
             f.write_all(&c.sim_seconds.to_le_bytes())?;
             f.write_all(&c.barrier_wait.to_le_bytes())?;
+            f.write_all(&c.fallback_rounds.to_le_bytes())?;
         }
         f.write_all(&[self.ef_residuals.is_some() as u8])?;
         if let Some(r) = &self.ef_residuals {
@@ -214,6 +250,29 @@ impl Checkpoint {
         if let Some(cs) = &self.clocks {
             for x in cs.seconds.iter().chain(&cs.waited) {
                 f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        f.write_all(&[self.eventsim.is_some() as u8])?;
+        if let Some(es) = &self.eventsim {
+            f.write_all(&es.max_staleness.to_le_bytes())?;
+            f.write_all(&(es.hist.len() as u32).to_le_bytes())?;
+            for c in &es.hist {
+                f.write_all(&c.to_le_bytes())?;
+            }
+            f.write_all(&(es.links.len() as u32).to_le_bytes())?;
+            for l in &es.links {
+                f.write_all(&l.src.to_le_bytes())?;
+                f.write_all(&l.dst.to_le_bytes())?;
+                f.write_all(&l.busy_until.to_le_bytes())?;
+                f.write_all(&l.busy_seconds.to_le_bytes())?;
+                f.write_all(&l.cache_version.to_le_bytes())?;
+                write_f32s(&mut f, &l.cache)?;
+                f.write_all(&(l.inflight.len() as u32).to_le_bytes())?;
+                for (t, v, payload) in &l.inflight {
+                    f.write_all(&t.to_le_bytes())?;
+                    f.write_all(&v.to_le_bytes())?;
+                    write_f32s(&mut f, payload)?;
+                }
             }
         }
         Ok(())
@@ -285,8 +344,10 @@ impl Checkpoint {
                     msgs: read_u64(&mut f)?,
                     sim_seconds: read_f64(&mut f)?,
                     // The barrier-wait breakdown joined the comm block in
-                    // v4; v3 files carry the pre-straggler accounting.
+                    // v4, the overlap fallback tally in v5; older files
+                    // carry the earlier accounting.
                     barrier_wait: if version >= 4 { read_f64(&mut f)? } else { 0.0 },
+                    fallback_rounds: if version >= 5 { read_u64(&mut f)? } else { 0 },
                 })
             } else {
                 None
@@ -324,6 +385,49 @@ impl Checkpoint {
         } else {
             None
         };
+        let eventsim = if version >= 5 && read_u8(&mut f)? == 1 {
+            let max_staleness = read_u64(&mut f)?;
+            let hist_len = read_u32(&mut f)? as usize;
+            anyhow::ensure!(hist_len < 1 << 20, "implausible staleness histogram length {hist_len}");
+            let mut hist = Vec::with_capacity(hist_len);
+            for _ in 0..hist_len {
+                hist.push(read_u64(&mut f)?);
+            }
+            let n_links = read_u32(&mut f)? as usize;
+            anyhow::ensure!(n_links <= n * n, "implausible link count {n_links} for {n} nodes");
+            let mut links = Vec::with_capacity(n_links);
+            for _ in 0..n_links {
+                let src = read_u32(&mut f)?;
+                let dst = read_u32(&mut f)?;
+                let busy_until = read_f64(&mut f)?;
+                let busy_seconds = read_f64(&mut f)?;
+                let cache_version = read_u64(&mut f)?;
+                let cache = read_f32s(&mut f, d)?;
+                let inflight_count = read_u32(&mut f)? as usize;
+                anyhow::ensure!(
+                    inflight_count < 1 << 20,
+                    "implausible in-flight count {inflight_count} on link ({src}, {dst})"
+                );
+                let mut inflight = Vec::with_capacity(inflight_count);
+                for _ in 0..inflight_count {
+                    let t = read_f64(&mut f)?;
+                    let v = read_u64(&mut f)?;
+                    inflight.push((t, v, read_f32s(&mut f, d)?));
+                }
+                links.push(LinkSnapshot {
+                    src,
+                    dst,
+                    busy_until,
+                    busy_seconds,
+                    cache_version,
+                    cache,
+                    inflight,
+                });
+            }
+            Some(EventSimState { max_staleness, hist, links })
+        } else {
+            None
+        };
         Ok(Checkpoint {
             step,
             sim_seconds,
@@ -337,6 +441,7 @@ impl Checkpoint {
             ef_residuals,
             ef_compression,
             clocks,
+            eventsim,
         })
     }
 }
@@ -424,6 +529,7 @@ mod tests {
             ef_residuals: None,
             ef_compression: None,
             clocks: None,
+            eventsim: None,
         };
         let path = tmp("vel");
         ck.save(&path).unwrap();
@@ -447,6 +553,7 @@ mod tests {
             ef_residuals: None,
             ef_compression: None,
             clocks: None,
+            eventsim: None,
         };
         let path = tmp("novel");
         ck.save(&path).unwrap();
@@ -478,6 +585,7 @@ mod tests {
                 msgs: 789,
                 sim_seconds: 4.2,
                 barrier_wait: 0.7,
+                fallback_rounds: 3,
             }),
             ef_residuals: Some(random_matrix(4, d, 6, 0.01)),
             ef_compression: Some(Compression::TopK { frac: 0.25 }),
@@ -485,6 +593,7 @@ mod tests {
                 seconds: vec![12.5, 11.0, 12.5, 9.25],
                 waited: vec![0.0, 1.5, 0.0, 3.25],
             }),
+            eventsim: None,
         };
         let path = tmp("stateful");
         ck.save(&path).unwrap();
@@ -611,6 +720,7 @@ mod tests {
                 seconds: vec![10.0, 8.0, 6.5],
                 waited: vec![0.0, 2.0, 3.5],
             }),
+            eventsim: None,
         };
         let path = tmp("clocks");
         ck.save(&path).unwrap();
@@ -620,6 +730,102 @@ mod tests {
         // 2 clocks for 3 nodes: refuse to write a partial time axis.
         ck.clocks = Some(ClockState { seconds: vec![1.0, 2.0], waited: vec![0.0, 0.0, 0.0] });
         assert!(ck.save(&tmp("clkmis")).is_err());
+    }
+
+    #[test]
+    fn eventsim_state_roundtrips_and_validates() {
+        // The v5 block: per-edge cache + mid-flight payloads + link
+        // occupancy + staleness histogram survive the file bit-exactly.
+        let d = 3;
+        let mk_link = |src: u32, dst: u32| LinkSnapshot {
+            src,
+            dst,
+            busy_until: 7.5,
+            busy_seconds: 2.25,
+            cache_version: 9,
+            cache: vec![0.5; d],
+            inflight: vec![(8.0, 10, vec![1.5; d]), (9.5, 11, vec![-2.0; d])],
+        };
+        let mut ck = Checkpoint {
+            step: 12,
+            sim_seconds: 8.0,
+            params: ParamMatrix::zeros(2, d),
+            velocities: None,
+            gossip_clock: 12,
+            schedule: None,
+            slowmo: None,
+            rng_states: Vec::new(),
+            comm: Some(CommStats {
+                scalars_sent: 72,
+                msgs: 24,
+                sim_seconds: 1.0,
+                barrier_wait: 0.5,
+                fallback_rounds: 0,
+            }),
+            ef_residuals: None,
+            ef_compression: None,
+            clocks: Some(ClockState { seconds: vec![8.0, 6.0], waited: vec![0.0, 1.0] }),
+            eventsim: Some(EventSimState {
+                max_staleness: 2,
+                hist: vec![40, 7, 1],
+                links: vec![mk_link(0, 1), mk_link(1, 0)],
+            }),
+        };
+        let path = tmp("eventsim");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(path).ok();
+        // A payload of the wrong width is refused at save time.
+        if let Some(es) = ck.eventsim.as_mut() {
+            es.links[0].inflight[0].2 = vec![0.0; d + 1];
+        }
+        assert!(ck.save(&tmp("evmis")).is_err());
+    }
+
+    #[test]
+    fn loads_v4_files_which_end_after_the_clock_block() {
+        // Hand-write the v4 layout: four-field comm block, clock block,
+        // no eventsim tail — the pre-event-plane format.
+        let path = tmp("v4");
+        let params = vec![1.0f32, -1.0, 2.0, -2.0]; // n=2, d=2
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"GPGA");
+        bytes.extend_from_slice(&4u32.to_le_bytes());
+        bytes.extend_from_slice(&21u64.to_le_bytes());
+        bytes.extend_from_slice(&5.5f64.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        for x in &params {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        bytes.push(0); // no velocities
+        bytes.extend_from_slice(&20u64.to_le_bytes()); // gossip clock
+        bytes.push(0); // no schedule
+        bytes.push(0); // no slowmo
+        bytes.push(0); // no rng
+        bytes.push(1); // comm present — FOUR fields in v4
+        bytes.extend_from_slice(&500u64.to_le_bytes());
+        bytes.extend_from_slice(&10u64.to_le_bytes());
+        bytes.extend_from_slice(&0.75f64.to_le_bytes());
+        bytes.extend_from_slice(&0.25f64.to_le_bytes());
+        bytes.push(0); // no ef residuals
+        bytes.push(1); // clocks present
+        for x in [5.5f64, 4.5, 0.0, 1.0] {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        // v4 files end here.
+        std::fs::write(&path, &bytes).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 21);
+        let comm = back.comm.unwrap();
+        assert_eq!(comm.barrier_wait, 0.25);
+        assert_eq!(comm.fallback_rounds, 0, "v4 comm blocks predate the fallback tally");
+        let clocks = back.clocks.unwrap();
+        assert_eq!(clocks.seconds, vec![5.5, 4.5]);
+        assert_eq!(clocks.waited, vec![0.0, 1.0]);
+        assert!(back.eventsim.is_none(), "v4 files predate the event plane");
+        std::fs::remove_file(path).ok();
     }
 
     #[test]
@@ -637,6 +843,7 @@ mod tests {
             ef_residuals: Some(ParamMatrix::zeros(2, 4)),
             ef_compression: Some(Compression::Int8 { block: 64 }),
             clocks: None,
+            eventsim: None,
         };
         assert!(ck.save(&tmp("efmis")).is_err());
         // Residuals without a codec identity are rejected too.
@@ -653,6 +860,7 @@ mod tests {
             ef_residuals: Some(ParamMatrix::zeros(2, 3)),
             ef_compression: None,
             clocks: None,
+            eventsim: None,
         };
         assert!(ck.save(&tmp("efnocodec")).is_err());
     }
@@ -691,6 +899,7 @@ mod tests {
             ef_residuals: None,
             ef_compression: None,
             clocks: None,
+            eventsim: None,
         };
         assert!(ck.save(&tmp("velmis")).is_err());
     }
@@ -710,6 +919,7 @@ mod tests {
             ef_residuals: None,
             ef_compression: None,
             clocks: None,
+            eventsim: None,
         };
         assert!(ck.save(&tmp("rngmis")).is_err());
     }

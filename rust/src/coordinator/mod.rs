@@ -33,7 +33,17 @@
 //! serialization tax of simulating n workers on one thread, without the
 //! per-step thread spawn/join the PR-1 scoped version paid.
 //!
-//! §Overlap ([`TrainerOptions::overlap`] / `--overlap`): the double-buffer
+//! §Regimes ([`TrainerOptions::regime`] / `train.regime` / `--regime`):
+//! BSP (the synchronous default), overlap (below), and async — the
+//! event-driven AD-PSGD plane in [`crate::eventsim`], where each node runs
+//! its own iteration counter and mixes bounded-stale neighbor copies
+//! (`--max-staleness`), billed per link by a discrete-event queue. The
+//! async step loop advances a one-step iteration horizon per
+//! [`Trainer::step_once`], so logging/eval/checkpoint always observe
+//! drained step boundaries; at `max_staleness = 0` with homogeneous costs
+//! it reproduces BSP parameters AND the barrier-billed clocks bit-exactly.
+//!
+//! §Overlap ([`Regime::Overlap`] / `--overlap`): the double-buffer
 //! mode. A gossip round issued at step t runs asynchronously on the pool
 //! ([`mixer::Mixer::gossip_async`]) while the main thread begins step t+1's
 //! parameter-independent sampling phase; the mix is drained before step
@@ -65,6 +75,7 @@ use crate::comm::{
 use crate::config::ExperimentConfig;
 use crate::costmodel::{BarrierScope, CostModel, NodeCosts, VirtualClocks};
 use crate::data::{ClusterData, LogRegData, TokenCorpus};
+use crate::eventsim::{AsyncGossip, Regime};
 use crate::exec::WorkerPool;
 use crate::metrics::{consensus_distance_pooled, History, Record};
 use crate::model;
@@ -189,11 +200,22 @@ pub struct TrainerOptions {
     /// region so idle threads pull extra chunks (heterogeneous-cost
     /// workers). Bit-identical to static sharding; off by default.
     pub stealing: bool,
-    /// Double-buffered async gossip: overlap the round-t mix with round
-    /// t+1's sampling phase. Bit-identical to BSP at every drained
-    /// boundary (and trivially so at every k·H global average); off by
-    /// default.
-    pub overlap: bool,
+    /// Execution regime (`train.regime` / `--regime`):
+    /// * [`Regime::Bsp`] — synchronous rounds (the default);
+    /// * [`Regime::Overlap`] — double-buffered async gossip: the round-t
+    ///   mix overlaps round t+1's sampling phase, bit-identical to BSP at
+    ///   every drained boundary (and trivially so at every k·H global
+    ///   average);
+    /// * [`Regime::Async`] — event-driven AD-PSGD mixing on the
+    ///   [`crate::eventsim`] per-link time plane: per-node iteration
+    ///   counters, bounded-stale mixing, per-link billing. Reproduces BSP
+    ///   bit-exactly only at `max_staleness = 0` with the lockstep billing
+    ///   (the regression anchor).
+    pub regime: Regime,
+    /// Async regime only: how many versions behind BSP-fresh a mix input
+    /// may be. 0 = strict (lockstep, bit-identical to BSP); >= 1 lets
+    /// compute overlap in-flight transfers (drops the BSP equivalence).
+    pub max_staleness: usize,
     /// Which communication plane to run on: the shared-memory mixer
     /// (default) or the message-passing bus. Uncompressed trajectories are
     /// bit-identical across backends; only the accounting model differs
@@ -230,7 +252,8 @@ impl TrainerOptions {
             log_every: cfg.log_every,
             threads: cfg.threads,
             stealing: cfg.stealing,
-            overlap: cfg.overlap,
+            regime: cfg.regime_kind().expect("validated"),
+            max_staleness: cfg.max_staleness,
             backend: cfg.backend_kind().expect("validated"),
             compression: cfg.compression_kind().expect("validated"),
         }
@@ -265,6 +288,14 @@ pub struct Trainer {
     /// The persistent execution engine every parallel phase shards across.
     pool: WorkerPool,
     schedule: Box<dyn Schedule>,
+    /// The event-driven async-gossip engine (`Some` iff
+    /// [`TrainerOptions::regime`] is [`Regime::Async`]); owns the per-link
+    /// payload plane and the staleness accounting.
+    eventsim: Option<AsyncGossip>,
+    /// Gossip rounds requested asynchronous (overlap regime) but executed
+    /// synchronously because the backend has no async path — surfaced in
+    /// [`CommStats::fallback_rounds`] instead of silently downgrading.
+    fallback_rounds: u64,
     /// One simulated clock per node (critical-path time plane); advanced
     /// per action with the resolved per-node `node_costs`.
     clocks: VirtualClocks,
@@ -338,6 +369,38 @@ impl Trainer {
         } else {
             WorkerPool::new(opts.threads)
         };
+        // Overlap without backend support is a silent downgrade to the
+        // synchronous round — surface it once at startup (and count every
+        // fallback in CommStats::fallback_rounds). The ROADMAP's open
+        // item: the bus plane would need per-round message tagging to keep
+        // drains exact.
+        if opts.regime == Regime::Overlap && !backend.supports_overlap() {
+            eprintln!(
+                "warning: the {} backend has no asynchronous gossip{} — overlap rounds will \
+                 run synchronously (counted in comm fallback_rounds)",
+                opts.backend.name(),
+                if opts.compression != Compression::None { " under compression" } else { "" }
+            );
+        }
+        let eventsim = if opts.regime == Regime::Async {
+            anyhow::ensure!(
+                opts.compression == Compression::None,
+                "the async regime transmits raw iterates — per-receiver error-feedback \
+                 state is undefined under bounded-stale mixing (disable comm.compression)"
+            );
+            Some(AsyncGossip::new(
+                &opts.topology,
+                &node_costs,
+                d,
+                opts.cost_dim,
+                opts.max_staleness,
+                opts.algorithm,
+                opts.period,
+                &params,
+            )?)
+        } else {
+            None
+        };
         let clocks = VirtualClocks::new(&opts.topology);
         let slowmo_prev = if opts.algorithm == AlgorithmKind::SlowMo { init_params } else { Vec::new() };
         let slowmo_u = if opts.algorithm == AlgorithmKind::SlowMo { vec![0.0; d] } else { Vec::new() };
@@ -350,6 +413,8 @@ impl Trainer {
             backend,
             pool,
             schedule,
+            eventsim,
+            fallback_rounds: 0,
             clocks,
             node_costs,
             no_comm: vec![0.0; n],
@@ -455,7 +520,35 @@ impl Trainer {
     pub fn comm_stats(&self) -> CommStats {
         let mut total = self.backend.total();
         total.barrier_wait = self.clocks.total_wait();
+        total.fallback_rounds = self.fallback_rounds;
         total
+    }
+
+    /// Which execution regime this trainer runs (bsp | overlap | async).
+    pub fn regime(&self) -> Regime {
+        self.opts.regime
+    }
+
+    /// The async regime's staleness histogram — entry s counts mix inputs
+    /// that were s versions behind BSP-fresh. `None` outside the async
+    /// regime.
+    pub fn staleness_histogram(&self) -> Option<&[u64]> {
+        self.eventsim.as_ref().map(|e| e.histogram())
+    }
+
+    /// `(max, mean)` staleness over all async mix inputs so far
+    /// ((0, 0.0) outside the async regime, and always in strict mode).
+    pub fn staleness(&self) -> (u64, f64) {
+        self.eventsim.as_ref().map(|e| e.staleness()).unwrap_or((0, 0.0))
+    }
+
+    /// Mean per-link utilization of the event plane at the current
+    /// critical path (0 outside the async regime).
+    pub fn link_utilization(&self) -> f64 {
+        self.eventsim
+            .as_ref()
+            .map(|e| e.link_utilization(self.clocks.max_seconds()))
+            .unwrap_or(0.0)
     }
 
     /// Complete the in-flight overlap mix, if any. After this the visible
@@ -476,9 +569,13 @@ impl Trainer {
     /// round's gossip on the pool and return while it runs. Global
     /// averages stay synchronous — they are the schedule's barriers.
     pub fn step_once(&mut self) -> Result<CommAction> {
+        if self.opts.regime == Regime::Async {
+            return self.step_async();
+        }
+        let overlap = self.opts.regime == Regime::Overlap;
         let k = self.step;
         let lr = self.opts.lr.at(k);
-        if self.opts.overlap {
+        if overlap {
             self.sample_phase()?;
             self.drain()?;
             self.grad_phase(lr, true)?;
@@ -504,7 +601,7 @@ impl Trainer {
             }
             CommAction::Gossip => {
                 let mut issued = None;
-                if self.opts.overlap {
+                if overlap {
                     // SAFETY: until drain() completes this round, the
                     // trainer never takes &mut to params (accessors are
                     // read-only, every mutating path drains first), never
@@ -526,8 +623,14 @@ impl Trainer {
                     }
                     // Backend without async support (bus, or compressed
                     // transmit): the schedule falls back to the
-                    // synchronous round, bit-identical either way.
+                    // synchronous round, bit-identical either way — but in
+                    // overlap mode the lost overlap is COUNTED, not silent
+                    // (warned once at startup, tallied in
+                    // CommStats::fallback_rounds).
                     None => {
+                        if overlap {
+                            self.fallback_rounds += 1;
+                        }
                         let charge = self.backend.gossip(&mut self.params, &self.pool)?;
                         self.clocks.advance(
                             &self.node_costs.compute,
@@ -551,6 +654,50 @@ impl Trainer {
         }
         self.step += 1;
         Ok(action)
+    }
+
+    /// One global step of the event-driven regime: raise the cluster's
+    /// iteration horizon by one and process events until every node has
+    /// completed it. Between horizon raises nodes run at their own virtual
+    /// pace (bounded-stale mixing; the horizon is a simulation artifact
+    /// and bills nothing), and `run_until` always returns at a drained
+    /// step boundary, so logging / eval / checkpointing see the same
+    /// invariants as BSP. With `max_staleness = 0` and homogeneous costs
+    /// this reproduces the BSP trajectory and the barrier-billed clocks
+    /// bit-exactly (the [`crate::eventsim`] anchor).
+    fn step_async(&mut self) -> Result<CommAction> {
+        let k = self.step;
+        let target = k + 1;
+        let engine = self.eventsim.as_mut().expect("async regime constructs its engine");
+        let workload = &self.workload;
+        let workers = &mut self.workers;
+        let pool = &self.pool;
+        let lr = &self.opts.lr;
+        let mut step_fn = |params: &mut ParamMatrix, batch: &[(usize, usize)]| {
+            async_step_batch(workload, workers, params, pool, lr, batch)
+        };
+        let slowmo_on = self.opts.algorithm == AlgorithmKind::SlowMo;
+        let sp = self.opts.slowmo;
+        let slowmo_prev = &mut self.slowmo_prev;
+        let slowmo_u = &mut self.slowmo_u;
+        let mut sync_fn = |kk: usize, params: &mut ParamMatrix| -> Result<()> {
+            if slowmo_on {
+                slowmo_outer(params, slowmo_prev, slowmo_u, lr.at(kk), sp);
+            }
+            Ok(())
+        };
+        engine.run_until(
+            target,
+            &mut self.params,
+            self.backend.as_mut(),
+            &self.pool,
+            &mut self.clocks,
+            &self.node_costs,
+            &mut step_fn,
+            &mut sync_fn,
+        )?;
+        self.step = target;
+        Ok(engine.action_at(k))
     }
 
     /// Phase 0 (overlap mode): every worker draws its batch into its own
@@ -612,17 +759,7 @@ impl Trainer {
     /// SlowMo (Wang et al. 2019) outer update at a sync point. All workers
     /// hold the same averaged x at this point.
     fn slowmo_outer_update(&mut self, lr: f64) {
-        let gamma = lr.max(1e-12) as f32;
-        let beta = self.opts.slowmo.beta as f32;
-        let alpha = self.opts.slowmo.alpha as f32;
-        {
-            let avg = self.params.row(0);
-            for ((u, prev), a) in self.slowmo_u.iter_mut().zip(&mut self.slowmo_prev).zip(avg) {
-                *u = beta * *u + (*prev - *a) / gamma;
-                *prev -= alpha * gamma * *u;
-            }
-        }
-        self.params.fill_rows(&self.slowmo_prev);
+        slowmo_outer(&mut self.params, &mut self.slowmo_prev, &mut self.slowmo_u, lr, self.opts.slowmo);
     }
 
     fn consensus(&self) -> f64 {
@@ -740,6 +877,7 @@ impl Trainer {
                 seconds: self.clocks.seconds().to_vec(),
                 waited: self.clocks.waited().to_vec(),
             }),
+            eventsim: self.eventsim.as_ref().map(|e| e.export_state()),
         })
     }
 
@@ -785,10 +923,13 @@ impl Trainer {
         self.backend.set_gossip_clock(ck.gossip_clock as usize);
         // Traffic counters continue from the snapshot (pre-v3 files carry
         // none — counters restart at zero, documented in `checkpoint`).
-        // The barrier-wait breakdown lives in the clock state, so the
-        // backend total carries it zeroed.
+        // The barrier-wait breakdown lives in the clock state and the
+        // fallback tally in the trainer, so the backend total carries
+        // both zeroed.
         let mut comm = ck.comm.unwrap_or_default();
+        self.fallback_rounds = comm.fallback_rounds;
         comm.barrier_wait = 0.0;
+        comm.fallback_rounds = 0;
         self.backend.restore_total(comm);
         // Compressed runs: re-inject the exact error-feedback residuals the
         // interrupted run was carrying (None zeroes them). The codec that
@@ -861,6 +1002,27 @@ impl Trainer {
             Some(cs) => self.clocks.restore(&cs.seconds, &cs.waited)?,
             None => self.clocks.restore_uniform(ck.sim_seconds),
         }
+        // Event plane: a v5 snapshot restores the per-edge in-flight /
+        // stale state exactly (mid-flight payloads resume their virtual
+        // deliveries); a pre-v5 or BSP-written snapshot re-seeds every
+        // link cache from the restored rows at the boundary version.
+        // Symmetric strictness with the engine's max_staleness check: an
+        // async-written snapshot cannot resume losslessly under another
+        // regime (its mid-flight payloads and staleness accounts would be
+        // silently dropped), so that mismatch is an error, not a downgrade.
+        match (self.eventsim.as_mut(), &ck.eventsim) {
+            (Some(engine), Some(st)) => {
+                engine.import_state(st, ck.step as usize, ck.gossip_clock as usize)?;
+            }
+            (Some(engine), None) => {
+                engine.reset(&self.params, ck.step as usize, ck.gossip_clock as usize);
+            }
+            (None, Some(_)) => anyhow::bail!(
+                "checkpoint was written by the async regime (it carries per-link in-flight \
+                 state) — resume with --regime async and the same max_staleness"
+            ),
+            (None, None) => {}
+        }
         Ok(())
     }
 
@@ -887,6 +1049,7 @@ impl Trainer {
                 let loss =
                     if cheap_eval { self.global_loss()? } else { self.mean_loss() };
                 let comm = self.comm_stats();
+                let (stale_max, stale_mean) = self.staleness();
                 hist.push(Record {
                     step: self.step - 1,
                     loss,
@@ -898,12 +1061,101 @@ impl Trainer {
                     sim_min_seconds: sim_min,
                     straggler_slack: slack,
                     barrier_wait: comm.barrier_wait,
+                    stale_max,
+                    stale_mean,
+                    link_util: self.link_utilization(),
                 });
             }
         }
         self.drain()?;
         Ok(hist)
     }
+}
+
+/// SlowMo (Wang et al. 2019) outer update over an already-averaged
+/// parameter matrix. Free function so BOTH regimes — the BSP/overlap step
+/// loop and the event engine's barrier hook — apply the identical
+/// arithmetic:
+///   u <- beta u + (x_prev_sync - x_avg) / gamma
+///   x <- x_prev_sync - alpha gamma u
+fn slowmo_outer(
+    params: &mut ParamMatrix,
+    prev: &mut [f32],
+    u: &mut [f32],
+    lr: f64,
+    sp: SlowMoParams,
+) {
+    let gamma = lr.max(1e-12) as f32;
+    let beta = sp.beta as f32;
+    let alpha = sp.alpha as f32;
+    {
+        let avg = params.row(0);
+        for ((u, prev), a) in u.iter_mut().zip(prev.iter_mut()).zip(avg) {
+            *u = beta * *u + (*prev - *a) / gamma;
+            *prev -= alpha * gamma * *u;
+        }
+    }
+    params.fill_rows(prev);
+}
+
+/// Phases 1-2 for a batch of `(node, iteration)` pairs handed over by the
+/// event engine, sharded across the pool. The engine guarantees the nodes
+/// are pairwise distinct, so the raw worker/row views are disjoint — the
+/// same soundness pattern as [`mixer::Mixer::gossip_async`]'s jobs. Each
+/// node bills its own iteration's learning rate, so per-node schedules
+/// stay exact even when iterations interleave.
+fn async_step_batch(
+    workload: &Workload,
+    workers: &mut [Worker],
+    params: &mut ParamMatrix,
+    pool: &WorkerPool,
+    lr: &LrSchedule,
+    batch: &[(usize, usize)],
+) -> Result<()> {
+    debug_assert!(
+        {
+            let mut nodes: Vec<usize> = batch.iter().map(|&(n, _)| n).collect();
+            nodes.sort_unstable();
+            nodes.windows(2).all(|w| w[0] != w[1])
+        },
+        "event engine handed a batch with duplicate nodes"
+    );
+    if batch.is_empty() {
+        return Ok(());
+    }
+    let d = params.d();
+    if pool.shards(batch.len()) <= 1 {
+        for &(node, iter) in batch {
+            step_worker(workload, node, &mut workers[node], params.row_mut(node), lr.at(iter), false)?;
+        }
+        return Ok(());
+    }
+    let per = pool.chunk_len(batch.len());
+    let wbase = workers.as_mut_ptr() as usize;
+    let pbase = params.as_mut_slice().as_mut_ptr() as usize;
+    pool.run(
+        batch
+            .chunks(per)
+            .map(|chunk| {
+                move || {
+                    for &(node, iter) in chunk {
+                        // SAFETY: nodes are pairwise distinct across the
+                        // whole batch (asserted above), so each Worker and
+                        // parameter row is reached by exactly one job;
+                        // workload/lr are shared reads; both allocations
+                        // outlive the batch because pool.run joins before
+                        // returning.
+                        let w = unsafe { &mut *(wbase as *mut Worker).add(node) };
+                        let row = unsafe {
+                            std::slice::from_raw_parts_mut((pbase as *mut f32).add(node * d), d)
+                        };
+                        step_worker(workload, node, w, row, lr.at(iter), false)?;
+                    }
+                    Ok(())
+                }
+            })
+            .collect(),
+    )
 }
 
 /// Phase 1-2 for one worker: sample its batch (unless presampled by the

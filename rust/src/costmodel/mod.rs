@@ -416,6 +416,26 @@ impl VirtualClocks {
         }
     }
 
+    /// Event-queue advancement (the [`crate::eventsim`] plane): charge a
+    /// single node `dt` seconds on its own clock, no barrier. The per-link
+    /// discrete-event engine bills compute and send-initiation charges
+    /// through this, reserving [`VirtualClocks::advance`]'s barrier scopes
+    /// for the collectives that really synchronize.
+    pub fn advance_one(&mut self, i: usize, dt: f64) {
+        self.seconds[i] += dt;
+    }
+
+    /// Event-queue stall: node `i` blocks until virtual time `t` (a
+    /// violated staleness bound waiting on a delivery); the blocked span
+    /// accrues to its barrier-wait account. No-op when the node's clock is
+    /// already past `t`.
+    pub fn stall_until(&mut self, i: usize, t: f64) {
+        if t > self.seconds[i] {
+            self.waited[i] += t - self.seconds[i];
+            self.seconds[i] = t;
+        }
+    }
+
     /// Full synchronization point with no cost of its own (eval,
     /// checkpoint): everyone advances to the barrier max, the difference
     /// accruing as barrier wait. A no-op while the clocks agree.
@@ -640,6 +660,23 @@ mod tests {
             g_ratio < ar_ratio,
             "gossip degraded {g_ratio:.3}x, all-reduce {ar_ratio:.3}x"
         );
+    }
+
+    #[test]
+    fn advance_one_and_stall_until_bill_single_nodes() {
+        let topo = Topology::ring(3);
+        let mut clocks = VirtualClocks::new(&topo);
+        clocks.advance_one(1, 2.5);
+        assert_eq!(clocks.seconds(), &[0.0, 2.5, 0.0][..]);
+        assert_eq!(clocks.total_wait(), 0.0);
+        // Stall forward: the gap is billed as wait.
+        clocks.stall_until(0, 4.0);
+        assert_eq!(clocks.seconds()[0], 4.0);
+        assert_eq!(clocks.waited()[0], 4.0);
+        // Stall to the past is a no-op.
+        clocks.stall_until(1, 1.0);
+        assert_eq!(clocks.seconds()[1], 2.5);
+        assert_eq!(clocks.waited()[1], 0.0);
     }
 
     #[test]

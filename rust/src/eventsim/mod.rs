@@ -1,0 +1,1111 @@
+//! Event-driven asynchronous gossip: AD-PSGD mixing on a per-link
+//! discrete-event time plane.
+//!
+//! The barrier-billed time plane (PR 4) charges "a node starts iteration k
+//! after its in-neighbors finish k-1" — a sound critical-path bound, but
+//! one that exposes every transfer: a node can never overlap its compute
+//! with a peer's in-flight message. This module is the finer regime the
+//! ROADMAP names twice ("Fully asynchronous gossip (AD-PSGD)",
+//! "Event-driven gossip billing"): a binary-heap event queue over typed
+//! events — a node finishing its local update ([`Ev`] `READY`), a payload
+//! completing its traversal of one directed link (`DELIVER`), a node
+//! attempting its mix (`MIX`) — billed from [`NodeCosts`] per LINK, with an
+//! [`AsyncGossip`] training regime on top (`train.regime async` /
+//! `--regime async`) in which each node runs its own iteration counter,
+//! pushes its post-update iterate to its out-neighbors as transfers
+//! complete, and mixes whatever bounded-stale neighbor copies have arrived
+//! (`--max-staleness`).
+//!
+//! §Semantics. Node j's *version-v payload* is its post-update, pre-mix
+//! iterate of iteration v-1 (versions are 1-based so the broadcast initial
+//! parameters are version 0). At iteration k node i mixes, for each
+//! in-neighbor j of its current gossip round, the newest payload that has
+//! *arrived* (delivery time <= i's clock), subject to the bound
+//! `version >= (k+1) - max_staleness`; if the bound is violated the node
+//! stalls until the enabling delivery (the stall accrues to its
+//! barrier-wait account). The recorded staleness of a mix input is
+//! `(k+1) - version` (0 = the BSP-fresh copy). Global averages (every k·H
+//! for PGA/Local/SlowMo, every step for Parallel) remain full barriers:
+//! every node halts at iteration k, one exact all-reduce runs, clocks
+//! advance under [`BarrierScope::Global`] — the drain semantics the k·H
+//! analysis needs. Eval, logging and checkpointing likewise drain: the
+//! trainer's [`AsyncGossip::run_until`] leaves every node at the same
+//! iteration count, so snapshots are always step boundaries (in-flight
+//! payloads are snapshot/restored — checkpoint v5 — not dropped).
+//!
+//! §Billing, two modes.
+//!
+//! * **`max_staleness = 0` (strict).** Every mix must use the BSP-fresh
+//!   copy, so every transfer is on the critical path and nothing can
+//!   overlap — the regime degenerates to lockstep waves over the exact BSP
+//!   schedule. The engine then bills each wave exactly the way the BSP
+//!   trainer bills the same action — the backend's own per-node charge
+//!   under the action's [`BarrierScope`], fused with the per-node compute
+//!   — so the event-driven run reproduces the barrier-billed
+//!   `sim_seconds` AND the BSP parameter trajectory **bit-exactly** on
+//!   both CommPlane backends (the regression anchor; asserted by
+//!   `rust/tests/eventsim.rs`). Every existing time table is therefore a
+//!   regression gate for this subsystem.
+//! * **`max_staleness >= 1` (event billing).** Transfers ride the links in
+//!   the background: a push bills the sender `alpha_src` per message on
+//!   its own clock (send initiation), then occupies the directed link for
+//!   `theta_src * cost_dim` seconds — messages on one link serialize
+//!   through its `busy_until` horizon, which is what the per-link
+//!   utilization metric measures — and is delivered when the traversal
+//!   completes. Compute is billed per node as it happens. Only a violated
+//!   staleness bound puts a transfer back on a node's critical path, which
+//!   is how async gossip hides stragglers and link latency that the
+//!   neighborhood barrier must expose (GossipGraD, Daily et al. 2018;
+//!   SGP, Assran et al. 2019) — `benches/tab17_comm_overhead.rs` gates
+//!   async's critical path <= the neighborhood-barrier bill under seeded
+//!   stragglers.
+//!
+//! §Determinism. Virtual times are exact f64 arithmetic on the cost
+//! tables; the heap orders events by `(time, kind, src, dst, seq)` with
+//! `f64::total_cmp`, so the event order is a pure function of the
+//! configuration — identical at any worker-pool size (the pool only
+//! shards the *real* gradient work, whose per-node arithmetic is
+//! order-independent). `rust/tests/eventsim.rs` asserts trace equality
+//! across pool sizes.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::algorithms::{AlgorithmKind, CommAction, FixedSchedule, Schedule};
+use crate::comm::{CommBackend, CommStats};
+use crate::coordinator::mixer::{mix_row_src, weight_rows_f32};
+use crate::costmodel::{BarrierScope, NodeCosts, VirtualClocks};
+use crate::exec::WorkerPool;
+use crate::params::ParamMatrix;
+use crate::topology::Topology;
+
+/// Which execution regime drives the trainer's step loop
+/// (`train.regime` / `--regime`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Regime {
+    /// Bulk-synchronous: phases 1-2, then the communication action,
+    /// synchronously (the default).
+    #[default]
+    Bsp,
+    /// Double-buffered async gossip (PR 2): the round-t mix overlaps round
+    /// t+1's sampling phase; bit-identical to BSP at every drained
+    /// boundary.
+    Overlap,
+    /// Event-driven asynchronous gossip (this module): per-node iteration
+    /// counters, bounded-stale mixing, per-link billing. Drops the BSP
+    /// equivalence unless `max_staleness = 0`.
+    Async,
+}
+
+impl Regime {
+    pub fn from_name(name: &str) -> Result<Regime> {
+        Ok(match name {
+            "bsp" | "sync" => Regime::Bsp,
+            "overlap" => Regime::Overlap,
+            "async" | "adpsgd" => Regime::Async,
+            other => bail!("unknown regime '{other}' (bsp | overlap | async)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Regime::Bsp => "bsp",
+            Regime::Overlap => "overlap",
+            Regime::Async => "async",
+        }
+    }
+}
+
+/// Event kinds, in processing-priority order at equal times: a delivery at
+/// time t is visible to a mix attempted at t.
+const EV_DELIVER: u8 = 0;
+const EV_MIX: u8 = 1;
+const EV_READY: u8 = 2;
+
+/// One queued event. Total order: `(time, kind, a, b, seq)` — `a`/`b` are
+/// `(src, dst)` for deliveries and `(node, 0)` otherwise; `seq` is a
+/// global monotone stamp that only breaks exact ties.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Ev {
+    time: f64,
+    kind: u8,
+    a: u32,
+    b: u32,
+    seq: u64,
+}
+
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Ev) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Ev) -> std::cmp::Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.kind.cmp(&other.kind))
+            .then(self.a.cmp(&other.a))
+            .then(self.b.cmp(&other.b))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// One processed event, recorded when tracing is enabled (the
+/// determinism-gate representation: time as raw bits so equality is
+/// bitwise).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEv {
+    pub kind: u8,
+    pub a: u32,
+    pub b: u32,
+    pub iter: u32,
+    pub time_bits: u64,
+}
+
+/// An in-flight message on one directed link.
+#[derive(Clone, Debug, PartialEq)]
+struct Msg {
+    deliver_at: f64,
+    version: u64,
+    payload: Vec<f32>,
+}
+
+/// Per-directed-link state: the serialization horizon, the completed-
+/// traversal occupancy the utilization column reads (accrued at delivery,
+/// so in-flight time never counts), the newest *delivered* payload, and
+/// the in-flight FIFO (delivery times are monotone per link).
+#[derive(Clone, Debug)]
+struct Link {
+    src: usize,
+    dst: usize,
+    busy_until: f64,
+    busy_seconds: f64,
+    cache_version: u64,
+    cache: Vec<f32>,
+    inflight: VecDeque<Msg>,
+}
+
+/// Checkpointable snapshot of one link (v5 wire form).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkSnapshot {
+    pub src: u32,
+    pub dst: u32,
+    pub busy_until: f64,
+    pub busy_seconds: f64,
+    pub cache_version: u64,
+    pub cache: Vec<f32>,
+    /// `(deliver_at, version, payload)` in FIFO order.
+    pub inflight: Vec<(f64, u64, Vec<f32>)>,
+}
+
+/// Checkpointable engine state (the per-edge in-flight/stale block of
+/// checkpoint v5). Exported at drained boundaries only, so no per-node
+/// iteration counters are needed — every node sits at the trainer's step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EventSimState {
+    pub max_staleness: u64,
+    /// Staleness histogram: `hist[s]` mixes used a copy s versions old.
+    pub hist: Vec<u64>,
+    /// Links in ascending `(src, dst)` order — the engine's edge order.
+    pub links: Vec<LinkSnapshot>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum NodeState {
+    /// Waiting for the horizon to rise (between `run_until` calls).
+    Parked,
+    /// A READY or MIX event for this node is in the heap.
+    Scheduled,
+    /// Mix blocked on the staleness bound; resumed by a delivery.
+    Waiting,
+    /// Halted at a global-average barrier.
+    Barrier,
+}
+
+/// The event-driven asynchronous gossip engine (see module docs). Owns
+/// virtual-time state and the per-edge payload plane; real gradient work
+/// and the global average are delegated to the caller through `step_fn` /
+/// the [`CommBackend`].
+pub struct AsyncGossip {
+    n: usize,
+    d: usize,
+    max_staleness: usize,
+    /// The fixed communication schedule (the async regime rejects
+    /// adaptive schedules — Gossip-AGA consults the cluster-mean loss
+    /// every step, which is undefined without a global step).
+    sched: FixedSchedule,
+    rounds: usize,
+    rows: Vec<Vec<Vec<(usize, f32)>>>,
+    alpha: Vec<f64>,
+    /// Per-sender link occupancy of one payload: `theta_src * cost_dim`.
+    tx_seconds: Vec<f64>,
+    /// Directed edges, ascending `(src, dst)`; `links` is index-aligned.
+    edges: Vec<(usize, usize)>,
+    /// Per-round transmit plan: `out_edges[r][src] = [(dst, link index)]`
+    /// (precomputed so the hot push path does no search or allocation).
+    out_edges: Vec<Vec<Vec<(usize, usize)>>>,
+    /// Per-round receive plan: `in_links[r][i] = [(j, link index)]` over
+    /// node i's round-r in-neighbors (self excluded) — the mix hot path's
+    /// neighbor -> cache resolution, search-free.
+    in_links: Vec<Vec<Vec<(usize, usize)>>>,
+    links: Vec<Link>,
+    done: Vec<usize>,
+    round_ctr: Vec<usize>,
+    state: Vec<NodeState>,
+    heap: BinaryHeap<Reverse<Ev>>,
+    seq: u64,
+    /// Nodes whose READY is scheduled but whose gradient has not run yet;
+    /// flushed as one pool batch at the next READY pop.
+    pending_exec: Vec<(usize, usize)>,
+    barrier_waiting: usize,
+    hist: Vec<u64>,
+    zeros: Vec<f64>,
+    scratch: Vec<f32>,
+    trace: Option<Vec<TraceEv>>,
+    strict: bool,
+}
+
+fn edge_index(edges: &[(usize, usize)], src: usize, dst: usize) -> usize {
+    edges.binary_search(&(src, dst)).expect("gossip edge exists by construction")
+}
+
+fn max_of(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+impl AsyncGossip {
+    /// Build the engine for `topo` under `costs`. `init` seeds every link
+    /// cache with the broadcast initial parameters (version 0), exactly
+    /// what a fresh BSP run would transmit first. `kind`/`h` select the
+    /// fixed communication schedule.
+    pub fn new(
+        topo: &Topology,
+        costs: &NodeCosts,
+        d: usize,
+        cost_dim: usize,
+        max_staleness: usize,
+        kind: AlgorithmKind,
+        h: usize,
+        init: &ParamMatrix,
+    ) -> Result<AsyncGossip> {
+        let n = topo.n;
+        ensure!(costs.n() == n, "cost table covers {} nodes, topology has {n}", costs.n());
+        ensure!(init.n() == n && init.d() == d, "init params must be {n} x {d}");
+        if kind == AlgorithmKind::GossipAga {
+            bail!(
+                "the async regime supports fixed schedules only — Gossip-AGA adapts its \
+                 period from the cluster-mean loss at every step, which is undefined \
+                 without a global step (use --regime bsp or overlap)"
+            );
+        }
+        let fs = FixedSchedule::for_kind(kind, h)?;
+        let rounds = topo.rounds();
+        let rows = weight_rows_f32(topo);
+        let inn: Vec<Vec<Vec<usize>>> = (0..rounds)
+            .map(|r| {
+                (0..n)
+                    .map(|i| {
+                        topo.in_neighbors(i, r).into_iter().filter(|&j| j != i).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let outn: Vec<Vec<Vec<usize>>> =
+            (0..rounds).map(|r| (0..n).map(|j| topo.out_neighbors(j, r)).collect()).collect();
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for per_round in &outn {
+            for (src, dsts) in per_round.iter().enumerate() {
+                for &dst in dsts {
+                    edges.push((src, dst));
+                }
+            }
+        }
+        edges.sort_unstable();
+        edges.dedup();
+        let out_edges: Vec<Vec<Vec<(usize, usize)>>> = outn
+            .iter()
+            .map(|per_node| {
+                per_node
+                    .iter()
+                    .enumerate()
+                    .map(|(src, dsts)| {
+                        dsts.iter().map(|&dst| (dst, edge_index(&edges, src, dst))).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let in_links: Vec<Vec<Vec<(usize, usize)>>> = inn
+            .iter()
+            .map(|per_node| {
+                per_node
+                    .iter()
+                    .enumerate()
+                    .map(|(i, js)| {
+                        js.iter().map(|&j| (j, edge_index(&edges, j, i))).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let links = edges
+            .iter()
+            .map(|&(src, dst)| Link {
+                src,
+                dst,
+                busy_until: 0.0,
+                busy_seconds: 0.0,
+                cache_version: 0,
+                cache: init.row(src).to_vec(),
+                inflight: VecDeque::new(),
+            })
+            .collect();
+        let tx_seconds = (0..n).map(|i| costs.theta[i] * cost_dim as f64).collect();
+        Ok(AsyncGossip {
+            n,
+            d,
+            max_staleness,
+            sched: fs,
+            rounds,
+            rows,
+            alpha: costs.alpha.clone(),
+            tx_seconds,
+            edges,
+            out_edges,
+            in_links,
+            links,
+            done: vec![0; n],
+            round_ctr: vec![0; n],
+            state: vec![NodeState::Parked; n],
+            heap: BinaryHeap::new(),
+            seq: 0,
+            pending_exec: Vec::new(),
+            barrier_waiting: 0,
+            hist: Vec::new(),
+            zeros: vec![0.0; n],
+            scratch: vec![0.0; d],
+            trace: None,
+            strict: max_staleness == 0,
+        })
+    }
+
+    /// The fixed schedule's action at iteration k — delegated to THE
+    /// [`FixedSchedule::action`] implementation (stateless for fixed
+    /// schedules; the clone sidesteps its `&mut` receiver), so the async
+    /// regime's action sequence can never drift from the BSP trainer's.
+    pub fn action_at(&self, k: usize) -> CommAction {
+        self.sched.clone().action(k, 0.0)
+    }
+
+    /// Iterations every node has completed (equal across nodes at every
+    /// drained boundary — i.e. whenever `run_until` has returned).
+    pub fn iterations_done(&self) -> usize {
+        self.done[0]
+    }
+
+    /// The staleness histogram: entry s counts mix inputs that were s
+    /// versions behind BSP-fresh.
+    pub fn histogram(&self) -> &[u64] {
+        &self.hist
+    }
+
+    /// `(max, mean)` staleness over all mix inputs so far (0, 0.0 before
+    /// any mix — and always, in strict mode).
+    pub fn staleness(&self) -> (u64, f64) {
+        let total: u64 = self.hist.iter().sum();
+        if total == 0 {
+            return (0, 0.0);
+        }
+        let max = self.hist.iter().rposition(|&c| c > 0).unwrap_or(0) as u64;
+        let weighted: f64 = self.hist.iter().enumerate().map(|(s, &c)| s as f64 * c as f64).sum();
+        (max, weighted / total as f64)
+    }
+
+    /// Mean per-link utilization at virtual time `now`: COMPLETED transfer
+    /// occupancy divided by elapsed time, averaged over directed links
+    /// (occupancy accrues when a traversal finishes, never while in
+    /// flight, so each link's share stays within [0, 1]). 0 when no time
+    /// has passed or the graph has no edges.
+    pub fn link_utilization(&self, now: f64) -> f64 {
+        if now <= 0.0 || self.links.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = self.links.iter().map(|l| l.busy_seconds / now).sum();
+        total / self.links.len() as f64
+    }
+
+    /// Record every processed event (the determinism gate's probe).
+    pub fn enable_trace(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    pub fn trace(&self) -> Option<&[TraceEv]> {
+        self.trace.as_deref()
+    }
+
+    fn record(&mut self, kind: u8, a: usize, b: usize, iter: usize, time: f64) {
+        if let Some(t) = self.trace.as_mut() {
+            t.push(TraceEv {
+                kind,
+                a: a as u32,
+                b: b as u32,
+                iter: iter as u32,
+                time_bits: time.to_bits(),
+            });
+        }
+    }
+
+    /// Snapshot the per-edge in-flight/stale state (checkpoint v5). Call
+    /// only at drained boundaries (the trainer's checkpoint path).
+    pub fn export_state(&self) -> EventSimState {
+        EventSimState {
+            max_staleness: self.max_staleness as u64,
+            hist: self.hist.clone(),
+            links: self
+                .links
+                .iter()
+                .map(|l| LinkSnapshot {
+                    src: l.src as u32,
+                    dst: l.dst as u32,
+                    busy_until: l.busy_until,
+                    busy_seconds: l.busy_seconds,
+                    cache_version: l.cache_version,
+                    cache: l.cache.clone(),
+                    inflight: l
+                        .inflight
+                        .iter()
+                        .map(|m| (m.deliver_at, m.version, m.payload.clone()))
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Restore a [`EventSimState`] at step boundary `step` with
+    /// `gossip_rounds` rounds already executed; rebuilds the delivery
+    /// events for every in-flight payload in deterministic order.
+    pub fn import_state(
+        &mut self,
+        state: &EventSimState,
+        step: usize,
+        gossip_rounds: usize,
+    ) -> Result<()> {
+        ensure!(
+            state.max_staleness == self.max_staleness as u64,
+            "checkpoint was written at max_staleness {}, this run uses {}",
+            state.max_staleness,
+            self.max_staleness
+        );
+        ensure!(
+            state.links.len() == self.links.len(),
+            "checkpoint carries {} links, engine has {}",
+            state.links.len(),
+            self.links.len()
+        );
+        self.reset_counters(step, gossip_rounds);
+        self.hist = state.hist.clone();
+        for (l, s) in self.links.iter_mut().zip(&state.links) {
+            ensure!(
+                (l.src, l.dst) == (s.src as usize, s.dst as usize),
+                "checkpoint link ({}, {}) does not match engine edge ({}, {})",
+                s.src,
+                s.dst,
+                l.src,
+                l.dst
+            );
+            ensure!(
+                s.cache.len() == self.d && s.inflight.iter().all(|(_, _, p)| p.len() == self.d),
+                "checkpoint payloads on link ({}, {}) are not d = {}",
+                s.src,
+                s.dst,
+                self.d
+            );
+            l.busy_until = s.busy_until;
+            l.busy_seconds = s.busy_seconds;
+            l.cache_version = s.cache_version;
+            l.cache = s.cache.clone();
+            l.inflight = s
+                .inflight
+                .iter()
+                .map(|(t, v, p)| Msg { deliver_at: *t, version: *v, payload: p.clone() })
+                .collect();
+        }
+        // Delivery events rebuild in ascending edge order; per-link FIFO
+        // order is preserved by the seq stamps, and cross-link order at
+        // equal times is decided by (src, dst) — exactly the original
+        // run's total order.
+        let evs: Vec<(f64, usize, usize)> = self
+            .links
+            .iter()
+            .flat_map(|l| l.inflight.iter().map(|m| (m.deliver_at, l.src, l.dst)))
+            .collect();
+        for (t, src, dst) in evs {
+            self.push_ev(t, EV_DELIVER, src, dst);
+        }
+        Ok(())
+    }
+
+    /// Re-seed from live parameters at step boundary `step` (resuming a
+    /// pre-v5 / BSP-written checkpoint into the async regime): caches hold
+    /// each node's current row at the boundary version, nothing in flight,
+    /// link accounts zeroed.
+    pub fn reset(&mut self, params: &ParamMatrix, step: usize, gossip_rounds: usize) {
+        self.reset_counters(step, gossip_rounds);
+        self.hist.clear();
+        for l in self.links.iter_mut() {
+            l.busy_until = 0.0;
+            l.busy_seconds = 0.0;
+            l.cache_version = step as u64;
+            l.cache.copy_from_slice(params.row(l.src));
+            l.inflight.clear();
+        }
+    }
+
+    fn reset_counters(&mut self, step: usize, gossip_rounds: usize) {
+        self.done.fill(step);
+        self.round_ctr.fill(gossip_rounds);
+        self.state.fill(NodeState::Parked);
+        self.heap.clear();
+        self.seq = 0;
+        self.pending_exec.clear();
+        self.barrier_waiting = 0;
+    }
+
+    fn push_ev(&mut self, time: f64, kind: u8, a: usize, b: usize) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Ev { time, kind, a: a as u32, b: b as u32, seq }));
+    }
+
+    /// Advance the cluster until every node has completed `target`
+    /// iterations; no node starts an iteration >= `target` (so the engine
+    /// always returns at a drained step boundary). `step_fn` executes the
+    /// local update (phases 1-2) for a batch of `(node, iteration)` pairs
+    /// whose nodes are pairwise distinct; `sync_fn` runs after each global
+    /// average (the SlowMo outer-update hook).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_until(
+        &mut self,
+        target: usize,
+        params: &mut ParamMatrix,
+        backend: &mut dyn CommBackend,
+        pool: &WorkerPool,
+        clocks: &mut VirtualClocks,
+        costs: &NodeCosts,
+        step_fn: &mut dyn FnMut(&mut ParamMatrix, &[(usize, usize)]) -> Result<()>,
+        sync_fn: &mut dyn FnMut(usize, &mut ParamMatrix) -> Result<()>,
+    ) -> Result<()> {
+        debug_assert!(params.n() == self.n && params.d() == self.d);
+        if self.strict {
+            self.run_waves(target, params, backend, pool, clocks, costs, step_fn, sync_fn)?;
+        } else {
+            self.run_events(target, params, backend, pool, clocks, costs, step_fn, sync_fn)?;
+        }
+        // The backend's gossip-round clock is the checkpointed source of
+        // truth; at a drained boundary every node agrees on it.
+        backend.set_gossip_clock(self.round_ctr[0]);
+        Ok(())
+    }
+
+    /// Strict mode (`max_staleness = 0`): lockstep waves that replicate
+    /// the BSP trainer's operation and billing sequence exactly (see the
+    /// module docs for why zero staleness degenerates to this).
+    #[allow(clippy::too_many_arguments)]
+    fn run_waves(
+        &mut self,
+        target: usize,
+        params: &mut ParamMatrix,
+        backend: &mut dyn CommBackend,
+        pool: &WorkerPool,
+        clocks: &mut VirtualClocks,
+        costs: &NodeCosts,
+        step_fn: &mut dyn FnMut(&mut ParamMatrix, &[(usize, usize)]) -> Result<()>,
+        sync_fn: &mut dyn FnMut(usize, &mut ParamMatrix) -> Result<()>,
+    ) -> Result<()> {
+        while self.done[0] < target {
+            let k = self.done[0];
+            let batch: Vec<(usize, usize)> = (0..self.n).map(|i| (i, k)).collect();
+            step_fn(params, &batch)?;
+            let action = self.action_at(k);
+            match action {
+                CommAction::Gossip => {
+                    let round = self.round_ctr[0] % self.rounds;
+                    // Transmit: every payload actually traverses the
+                    // backend (measured on the bus, predicted on shared);
+                    // zero staleness means it is consumed this wave.
+                    for src in 0..self.n {
+                        let m = self.out_edges[round][src].len();
+                        for t in 0..m {
+                            let (dst, e) = self.out_edges[round][src][t];
+                            let (payload, stats) = backend.push_row(params, src, dst)?;
+                            backend.add_total(stats);
+                            self.links[e].busy_seconds += self.tx_seconds[src];
+                            self.links[e].inflight.push_back(Msg {
+                                deliver_at: 0.0,
+                                version: (k + 1) as u64,
+                                payload,
+                            });
+                        }
+                    }
+                    // Deliver this wave's payloads (exactly version k+1
+                    // per active in-edge), then run THE mix path — do_mix
+                    // is the one copy of the kernel invocation, so the
+                    // strict anchor and the relaxed regime cannot drift
+                    // apart. Staleness is provably 0 here (fresh caches),
+                    // and do_mix advances each node's round counter.
+                    {
+                        let Self { links, in_links, .. } = self;
+                        for nbrs in &in_links[round] {
+                            for &(_, e) in nbrs {
+                                let l = &mut links[e];
+                                let msg = l
+                                    .inflight
+                                    .pop_front()
+                                    .expect("strict wave pushed this round's payload");
+                                debug_assert_eq!(msg.version, (k + 1) as u64);
+                                l.cache_version = msg.version;
+                                l.cache = msg.payload;
+                            }
+                        }
+                    }
+                    for i in 0..self.n {
+                        self.do_mix(i, k, round, params);
+                    }
+                    let node_seconds = backend.gossip_node_seconds(round);
+                    backend.add_total(CommStats {
+                        sim_seconds: max_of(&node_seconds),
+                        ..Default::default()
+                    });
+                    clocks.advance(
+                        &costs.compute,
+                        &node_seconds,
+                        BarrierScope::Neighborhood { round },
+                    );
+                }
+                CommAction::GlobalAverage => {
+                    let charge = backend.global_average(params, pool)?;
+                    sync_fn(k, params)?;
+                    clocks.advance(&costs.compute, &charge.node_seconds, charge.barrier);
+                }
+                CommAction::None => {
+                    clocks.advance(&costs.compute, &self.zeros, BarrierScope::None);
+                }
+            }
+            for dn in self.done.iter_mut() {
+                *dn += 1;
+            }
+            self.record(EV_READY, 0, self.n, k, clocks.max_seconds());
+        }
+        Ok(())
+    }
+
+    /// Event billing (`max_staleness >= 1`): the discrete-event loop.
+    #[allow(clippy::too_many_arguments)]
+    fn run_events(
+        &mut self,
+        target: usize,
+        params: &mut ParamMatrix,
+        backend: &mut dyn CommBackend,
+        pool: &WorkerPool,
+        clocks: &mut VirtualClocks,
+        costs: &NodeCosts,
+        step_fn: &mut dyn FnMut(&mut ParamMatrix, &[(usize, usize)]) -> Result<()>,
+        sync_fn: &mut dyn FnMut(usize, &mut ParamMatrix) -> Result<()>,
+    ) -> Result<()> {
+        // Raise the horizon: parked nodes resume at their own clocks (the
+        // horizon is a simulation artifact, never billed).
+        for i in 0..self.n {
+            if self.state[i] == NodeState::Parked && self.done[i] < target {
+                self.schedule_ready(i, clocks.seconds()[i]);
+            }
+        }
+        while !(0..self.n).all(|i| self.done[i] >= target) {
+            let Some(Reverse(ev)) = self.heap.pop() else {
+                bail!("event queue drained with nodes short of iteration {target}");
+            };
+            match ev.kind {
+                EV_DELIVER => {
+                    let (src, dst) = (ev.a as usize, ev.b as usize);
+                    self.record(EV_DELIVER, src, dst, self.done[dst], ev.time);
+                    self.on_deliver(src, dst, ev.time, target, params, clocks);
+                }
+                EV_MIX => {
+                    let i = ev.a as usize;
+                    self.record(EV_MIX, i, 0, self.done[i], ev.time);
+                    self.on_mix(i, target, params, clocks);
+                }
+                EV_READY => {
+                    let i = ev.a as usize;
+                    self.record(EV_READY, i, 0, self.done[i], ev.time);
+                    self.on_ready(i, target, params, backend, pool, clocks, costs, step_fn, sync_fn)?;
+                }
+                other => bail!("corrupt event kind {other}"),
+            }
+        }
+        Ok(())
+    }
+
+    fn schedule_ready(&mut self, i: usize, t: f64) {
+        self.state[i] = NodeState::Scheduled;
+        self.pending_exec.push((i, self.done[i]));
+        self.push_ev(t, EV_READY, i, 0);
+    }
+
+    /// Iteration k of node i is fully done at the node's current clock.
+    fn complete(&mut self, i: usize, target: usize, clocks: &VirtualClocks) {
+        self.done[i] += 1;
+        if self.done[i] < target {
+            self.schedule_ready(i, clocks.seconds()[i]);
+        } else {
+            self.state[i] = NodeState::Parked;
+        }
+    }
+
+    /// Are node i's mix inputs for iteration k fresh enough? (Pure check —
+    /// no mutation, usable from both the MIX and DELIVER handlers.)
+    fn deps_met(&self, i: usize, k: usize, round: usize) -> bool {
+        let need = ((k + 1) as u64).saturating_sub(self.max_staleness as u64);
+        self.in_links[round][i].iter().all(|&(_, e)| self.links[e].cache_version >= need)
+    }
+
+    /// Execute node i's iteration-k mix from its caches; records the
+    /// staleness of every input and advances the node's round counter.
+    fn do_mix(&mut self, i: usize, k: usize, round: usize, params: &mut ParamMatrix) {
+        let Self { links, rows, in_links, scratch, hist, .. } = self;
+        let nbrs = &in_links[round][i];
+        for &(_, e) in nbrs {
+            let v = links[e].cache_version;
+            let stale = ((k + 1) as u64).saturating_sub(v) as usize;
+            if hist.len() <= stale {
+                hist.resize(stale + 1, 0);
+            }
+            hist[stale] += 1;
+        }
+        mix_row_src(
+            &rows[round][i],
+            |j| {
+                if j == i {
+                    params.row(i)
+                } else {
+                    // Tiny linear scan over the precomputed (j, link)
+                    // pairs — allocation- and search-free.
+                    let &(_, e) = nbrs
+                        .iter()
+                        .find(|&&(jj, _)| jj == j)
+                        .expect("weight row neighbors match the receive plan");
+                    &links[e].cache
+                }
+            },
+            scratch,
+        );
+        params.row_mut(i).copy_from_slice(scratch);
+        self.round_ctr[i] += 1;
+    }
+
+    /// READY: flush pending gradients, bill compute, issue this
+    /// iteration's pushes, then schedule the mix attempt (or park at the
+    /// global-average barrier).
+    #[allow(clippy::too_many_arguments)]
+    fn on_ready(
+        &mut self,
+        i: usize,
+        target: usize,
+        params: &mut ParamMatrix,
+        backend: &mut dyn CommBackend,
+        pool: &WorkerPool,
+        clocks: &mut VirtualClocks,
+        costs: &NodeCosts,
+        step_fn: &mut dyn FnMut(&mut ParamMatrix, &[(usize, usize)]) -> Result<()>,
+        sync_fn: &mut dyn FnMut(usize, &mut ParamMatrix) -> Result<()>,
+    ) -> Result<()> {
+        let k = self.done[i];
+        if !self.pending_exec.is_empty() {
+            // All scheduled-but-unexecuted gradients are independent (one
+            // row, one RNG each — nodes pairwise distinct), so they run as
+            // one pool batch regardless of their event times. Node i's own
+            // entry is either in this batch or was flushed by an earlier
+            // READY; either way its row is post-update by the time its
+            // payloads ship below.
+            let batch = std::mem::take(&mut self.pending_exec);
+            step_fn(params, &batch)?;
+        }
+        clocks.advance_one(i, costs.compute[i]);
+        match self.action_at(k) {
+            CommAction::None => {
+                self.complete(i, target, clocks);
+            }
+            CommAction::Gossip => {
+                let round = self.round_ctr[i] % self.rounds;
+                let m = self.out_edges[round][i].len();
+                for t in 0..m {
+                    let (dst, e) = self.out_edges[round][i][t];
+                    // Send initiation on the node's clock, traversal on
+                    // the link's serialization horizon.
+                    clocks.advance_one(i, self.alpha[i]);
+                    let issue = clocks.seconds()[i];
+                    let (payload, mut stats) = backend.push_row(params, i, dst)?;
+                    // sim_seconds keeps its "seconds of node time spent on
+                    // communication" meaning: only the send initiation is
+                    // on a node's clock; the payload traversal is link
+                    // occupancy (the link-utilization column), not node
+                    // time. Summed over messages this stays far BELOW the
+                    // BSP bill of the same schedule — that gap is exactly
+                    // the comm the async regime hides.
+                    stats.sim_seconds = self.alpha[i];
+                    backend.add_total(stats);
+                    let l = &mut self.links[e];
+                    let start = if l.busy_until > issue { l.busy_until } else { issue };
+                    let deliver_at = start + self.tx_seconds[i];
+                    l.busy_until = deliver_at;
+                    l.inflight.push_back(Msg { deliver_at, version: (k + 1) as u64, payload });
+                    self.push_ev(deliver_at, EV_DELIVER, i, dst);
+                }
+                self.push_ev(clocks.seconds()[i], EV_MIX, i, 0);
+            }
+            CommAction::GlobalAverage => {
+                self.state[i] = NodeState::Barrier;
+                self.barrier_waiting += 1;
+                if self.barrier_waiting == self.n {
+                    self.resolve_barrier(k, target, params, backend, pool, clocks, sync_fn)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// MIX: attempt the bounded-stale mix at the node's own clock.
+    fn on_mix(&mut self, i: usize, target: usize, params: &mut ParamMatrix, clocks: &mut VirtualClocks) {
+        let k = self.done[i];
+        let round = self.round_ctr[i] % self.rounds;
+        if self.deps_met(i, k, round) {
+            self.do_mix(i, k, round, params);
+            self.complete(i, target, clocks);
+        } else {
+            self.state[i] = NodeState::Waiting;
+        }
+    }
+
+    /// DELIVER: complete one link traversal; a node stalled on the
+    /// staleness bound resumes at the enabling delivery time (the stall is
+    /// billed to its barrier-wait account).
+    fn on_deliver(
+        &mut self,
+        src: usize,
+        dst: usize,
+        t: f64,
+        target: usize,
+        params: &mut ParamMatrix,
+        clocks: &mut VirtualClocks,
+    ) {
+        let e = edge_index(&self.edges, src, dst);
+        let l = &mut self.links[e];
+        let msg = l.inflight.pop_front().expect("a delivery event has a queued message");
+        debug_assert_eq!(msg.deliver_at.to_bits(), t.to_bits());
+        // Occupancy accrues at traversal COMPLETION: in-flight time never
+        // counts toward utilization, so busy_seconds <= elapsed time and
+        // the utilization column stays within [0, 1].
+        l.busy_seconds += self.tx_seconds[src];
+        if msg.version > l.cache_version {
+            l.cache_version = msg.version;
+            l.cache = msg.payload;
+        }
+        if self.state[dst] == NodeState::Waiting {
+            let k = self.done[dst];
+            let round = self.round_ctr[dst] % self.rounds;
+            if self.deps_met(dst, k, round) {
+                clocks.stall_until(dst, t);
+                self.do_mix(dst, k, round, params);
+                self.complete(dst, target, clocks);
+            }
+        }
+    }
+
+    /// All nodes halted at the iteration-k global average: run the exact
+    /// all-reduce, fire the sync hook, advance the clocks under the full
+    /// barrier, release everyone.
+    #[allow(clippy::too_many_arguments)]
+    fn resolve_barrier(
+        &mut self,
+        k: usize,
+        target: usize,
+        params: &mut ParamMatrix,
+        backend: &mut dyn CommBackend,
+        pool: &WorkerPool,
+        clocks: &mut VirtualClocks,
+        sync_fn: &mut dyn FnMut(usize, &mut ParamMatrix) -> Result<()>,
+    ) -> Result<()> {
+        debug_assert!(self.done.iter().all(|&dn| dn == k));
+        let charge = backend.global_average(params, pool)?;
+        sync_fn(k, params)?;
+        clocks.advance(&self.zeros, &charge.node_seconds, charge.barrier);
+        self.barrier_waiting = 0;
+        for i in 0..self.n {
+            self.done[i] += 1;
+            if self.done[i] < target {
+                self.schedule_ready(i, clocks.seconds()[i]);
+            } else {
+                self.state[i] = NodeState::Parked;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommBackend, Compression, SharedBackend};
+    use crate::costmodel::CostModel;
+    use crate::rng::Rng;
+
+    /// Deterministic synthetic local update: pure in (node, iter), so any
+    /// execution order produces the same bits.
+    fn fake_step(params: &mut ParamMatrix, batch: &[(usize, usize)]) -> Result<()> {
+        for &(node, iter) in batch {
+            let mut r = Rng::new(0xFEED ^ ((node as u64) << 32) ^ iter as u64);
+            for x in params.row_mut(node) {
+                *x = 0.9 * *x + 0.1 * r.normal() as f32;
+            }
+        }
+        Ok(())
+    }
+
+    fn engine_run(
+        topo: &Topology,
+        costs: &NodeCosts,
+        d: usize,
+        s: usize,
+        kind: AlgorithmKind,
+        h: usize,
+        steps: usize,
+    ) -> (ParamMatrix, VirtualClocks, AsyncGossip) {
+        let mut params = ParamMatrix::random(&mut Rng::new(5), topo.n, d, 1.0);
+        let mut engine =
+            AsyncGossip::new(topo, costs, d, 1000, s, kind, h, &params).unwrap();
+        let mut backend = SharedBackend::new(topo, d, costs, 1000, Compression::None);
+        let pool = WorkerPool::new(1);
+        let mut clocks = VirtualClocks::new(topo);
+        let mut step = |p: &mut ParamMatrix, b: &[(usize, usize)]| fake_step(p, b);
+        let mut sync = |_k: usize, _p: &mut ParamMatrix| -> Result<()> { Ok(()) };
+        for t in 1..=steps {
+            engine
+                .run_until(t, &mut params, &mut backend, &pool, &mut clocks, costs, &mut step, &mut sync)
+                .unwrap();
+        }
+        (params, clocks, engine)
+    }
+
+    #[test]
+    fn strict_mode_matches_bsp_replay_bitwise() {
+        let d = 17;
+        for topo in [Topology::ring(6), Topology::one_peer_expo(8)] {
+            let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), topo.n);
+            let (ev_params, ev_clocks, _) =
+                engine_run(&topo, &costs, d, 0, AlgorithmKind::GossipPga, 4, 11);
+            // BSP reference: same updates, backend-level gossip, same billing.
+            let mut params = ParamMatrix::random(&mut Rng::new(5), topo.n, d, 1.0);
+            let mut backend = SharedBackend::new(&topo, d, &costs, 1000, Compression::None);
+            let pool = WorkerPool::new(1);
+            let mut clocks = VirtualClocks::new(&topo);
+            for k in 0..11 {
+                let batch: Vec<(usize, usize)> = (0..topo.n).map(|i| (i, k)).collect();
+                fake_step(&mut params, &batch).unwrap();
+                if (k + 1) % 4 == 0 {
+                    let c = backend.global_average(&mut params, &pool).unwrap();
+                    clocks.advance(&costs.compute, &c.node_seconds, c.barrier);
+                } else {
+                    let c = backend.gossip(&mut params, &pool).unwrap();
+                    clocks.advance(&costs.compute, &c.node_seconds, c.barrier);
+                }
+            }
+            assert_eq!(ev_params, params, "{:?}", topo.kind);
+            assert_eq!(ev_clocks.seconds(), clocks.seconds(), "{:?}", topo.kind);
+        }
+    }
+
+    #[test]
+    fn relaxed_mode_respects_staleness_bound_and_runs_dry() {
+        let topo = Topology::ring(6);
+        let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 6)
+            .with_straggler(0, 4.0)
+            .unwrap();
+        for s in [1usize, 3] {
+            let (_, clocks, engine) =
+                engine_run(&topo, &costs, 9, s, AlgorithmKind::Gossip, usize::MAX, 20);
+            let (max, mean) = engine.staleness();
+            assert!(max as usize <= s, "staleness {max} exceeded the bound {s}");
+            assert!(mean >= 0.0);
+            assert!(clocks.max_seconds() > 0.0);
+            assert!(engine.link_utilization(clocks.max_seconds()) > 0.0);
+        }
+    }
+
+    #[test]
+    fn async_critical_path_beats_barrier_billing_under_straggler() {
+        // The per-link overlap story at unit scale: with a 4x straggler on
+        // a ring, the event plane's critical path undercuts the
+        // neighborhood-barrier bill (which exposes every transfer).
+        let topo = Topology::ring(6);
+        let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 6)
+            .with_straggler(0, 4.0)
+            .unwrap();
+        let steps = 16;
+        let (_, ev_clocks, _) =
+            engine_run(&topo, &costs, 9, 2, AlgorithmKind::Gossip, usize::MAX, steps);
+        let mut clocks = VirtualClocks::new(&topo);
+        let mut backend = SharedBackend::new(&topo, 9, &costs, 1000, Compression::None);
+        let pool = WorkerPool::new(1);
+        let mut params = ParamMatrix::random(&mut Rng::new(5), 6, 9, 1.0);
+        for _ in 0..steps {
+            let c = backend.gossip(&mut params, &pool).unwrap();
+            clocks.advance(&costs.compute, &c.node_seconds, c.barrier);
+        }
+        assert!(
+            ev_clocks.max_seconds() < clocks.max_seconds(),
+            "async {} !< barrier {}",
+            ev_clocks.max_seconds(),
+            clocks.max_seconds()
+        );
+    }
+
+    #[test]
+    fn export_import_roundtrips_and_validates() {
+        let topo = Topology::ring(5);
+        let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 5)
+            .with_straggler(1, 3.0)
+            .unwrap();
+        let (params, _, engine) =
+            engine_run(&topo, &costs, 7, 2, AlgorithmKind::Gossip, usize::MAX, 9);
+        let st = engine.export_state();
+        let mut fresh =
+            AsyncGossip::new(&topo, &costs, 7, 1000, 2, AlgorithmKind::Gossip, usize::MAX, &params)
+                .unwrap();
+        fresh.import_state(&st, 9, 9).unwrap();
+        assert_eq!(fresh.export_state(), st);
+        // Mismatched staleness bound is rejected.
+        let mut wrong =
+            AsyncGossip::new(&topo, &costs, 7, 1000, 1, AlgorithmKind::Gossip, usize::MAX, &params)
+                .unwrap();
+        assert!(wrong.import_state(&st, 9, 9).is_err());
+    }
+
+    #[test]
+    fn regime_names_roundtrip() {
+        for r in [Regime::Bsp, Regime::Overlap, Regime::Async] {
+            assert_eq!(Regime::from_name(r.name()).unwrap(), r);
+        }
+        assert!(Regime::from_name("warp").is_err());
+        assert_eq!(Regime::default(), Regime::Bsp);
+    }
+
+    #[test]
+    fn aga_is_rejected() {
+        let topo = Topology::ring(4);
+        let costs = NodeCosts::homogeneous(CostModel::generic(), 4);
+        let init = ParamMatrix::zeros(4, 3);
+        assert!(
+            AsyncGossip::new(&topo, &costs, 3, 100, 1, AlgorithmKind::GossipAga, 8, &init).is_err()
+        );
+    }
+}

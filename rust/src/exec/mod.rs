@@ -169,6 +169,15 @@ impl WorkerPool {
         (self.size * self.grain).min(items).max(1)
     }
 
+    /// Companion to [`WorkerPool::shards`]: the ceiling chunk length that
+    /// splits `items` into at most `shards(items)` contiguous chunks —
+    /// the `chunks(_mut)` argument every sharded phase passes (the event
+    /// regime's ready-batch dispatch included).
+    pub fn chunk_len(&self, items: usize) -> usize {
+        let t = self.shards(items);
+        ((items + t - 1) / t).max(1)
+    }
+
     /// True once any job has panicked; the pool refuses further work.
     pub fn poisoned(&self) -> bool {
         self.shared.poisoned.load(Ordering::Acquire)
@@ -422,6 +431,12 @@ mod tests {
         assert_eq!(pool.shards(0), 1, "never zero");
         assert_eq!(WorkerPool::new(0).size(), 1, "size clamps to >= 1");
         assert_eq!(WorkerPool::new(1).shards(16), 1);
+        // chunk_len is the matching ceiling split: chunks(per) yields at
+        // most shards(items) chunks and covers every item.
+        assert_eq!(pool.chunk_len(100), 13);
+        assert_eq!(pool.chunk_len(3), 1);
+        assert_eq!(pool.chunk_len(0), 1, "safe on empty work");
+        assert_eq!(WorkerPool::new(1).chunk_len(16), 16);
     }
 
     #[test]

@@ -13,6 +13,7 @@ use crate::coordinator::{
     TrainerOptions,
 };
 use crate::costmodel::CostModel;
+use crate::eventsim::Regime;
 use crate::metrics::History;
 use crate::optim::LrSchedule;
 use crate::runtime::Runtime;
@@ -47,7 +48,8 @@ pub struct RunSpec {
     pub aga_warmup: usize,
     /// Worker-pool size (1 = sequential; see `TrainerOptions::threads`).
     pub threads: usize,
-    /// Double-buffered async gossip (see `TrainerOptions::overlap`).
+    /// Double-buffered async gossip (maps to `Regime::Overlap`; see
+    /// `TrainerOptions::regime`).
     pub overlap: bool,
     /// Communication plane (see `TrainerOptions::backend`).
     pub backend: BackendKind,
@@ -144,7 +146,8 @@ impl RunSpec {
             log_every: self.log_every,
             threads: self.threads,
             stealing: false,
-            overlap: self.overlap,
+            regime: if self.overlap { Regime::Overlap } else { Regime::Bsp },
+            max_staleness: 0,
             backend: self.backend,
             compression: Compression::None,
         }

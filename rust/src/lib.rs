@@ -46,6 +46,12 @@
 //!   (shared-memory mixer or message-passing bus) behind every training
 //!   run, with end-to-end [`comm::CommStats`] traffic accounting; select
 //!   with `comm.backend` / `--backend {shared,bus}`.
+//! * [`eventsim`] — the event-driven asynchronous gossip regime: a
+//!   discrete-event queue over per-link transfer events
+//!   ([`eventsim::AsyncGossip`]) with bounded-stale AD-PSGD mixing;
+//!   select with `train.regime` / `--regime {bsp,overlap,async}` and
+//!   `--max-staleness` (0 reproduces BSP + the barrier-billed clocks
+//!   bit-exactly).
 //! * [`exec`] — the persistent execution engine: one parked
 //!   [`exec::WorkerPool`] per trainer that phases 1-2, the gossip mix and
 //!   the eval pass shard across (static or work-stealing chunking behind
@@ -67,6 +73,7 @@ pub mod config;
 pub mod coordinator;
 pub mod costmodel;
 pub mod data;
+pub mod eventsim;
 pub mod exec;
 pub mod harness;
 pub mod jsonio;

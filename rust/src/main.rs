@@ -2,8 +2,9 @@
 //!
 //! Subcommands:
 //!   train [--config exp.toml] [--set key=value ...] [--threads N]
+//!         [--regime bsp|overlap|async] [--max-staleness S]
 //!         [--overlap] [--stealing] [--backend shared|bus]
-//!         [--straggler idx:factor]                    run one experiment
+//!         [--straggler idx:factor[,idx:factor...]]    run one experiment
 //!   topo  [--n N]                                     topology/beta report
 //!   check                                             verify artifacts load
 //!
@@ -45,8 +46,9 @@ fn print_help() {
          \n\
          USAGE:\n\
            gossip-pga train [--config exp.toml] [--set key=value ...] [--threads N]\n\
+                            [--regime bsp|overlap|async] [--max-staleness S]\n\
                             [--overlap] [--stealing] [--backend shared|bus]\n\
-                            [--straggler idx:factor]\n\
+                            [--straggler idx:factor[,idx:factor...]]\n\
            gossip-pga topo [--n N]\n\
            gossip-pga check\n\
          \n\
@@ -56,13 +58,21 @@ fn print_help() {
            model.name (logreg|mlp|transformer), model.tag (tiny|e2e)\n\
            train.steps, train.lr, train.momentum, train.seed, data.non_iid\n\
            train.threads (worker-pool size; --threads N is shorthand)\n\
-           train.overlap (double-buffered async gossip; --overlap is shorthand)\n\
+           train.regime (bsp|overlap|async; --regime is shorthand. async = the\n\
+             event-driven AD-PSGD plane: per-node iteration counters, per-link\n\
+             billing, bounded-stale mixing)\n\
+           train.max_staleness (async regime: how many versions behind BSP-fresh\n\
+             a mix input may be; 0 = strict, reproduces BSP bit-exactly)\n\
+           train.overlap (double-buffered async gossip; --overlap is shorthand\n\
+             for --regime overlap)\n\
            train.stealing (work-stealing pool chunking; --stealing is shorthand)\n\
            comm.backend (shared|bus; --backend is shorthand)\n\
            comm.compression (none|topk|int8), comm.topk_frac, comm.int8_block\n\
            cost.alpha / cost.theta / cost.compute (scalar or per-node array)\n\
-           cost.straggler (\"idx:factor,...\"; --straggler idx:factor is shorthand,\n\
-             scales that node's compute + latency — see costmodel::NodeCosts)"
+           cost.straggler (\"idx:factor,...\"; --straggler is shorthand and accepts\n\
+             a comma-separated list (--straggler 0:4,3:2) or repeats; duplicate\n\
+             indices are rejected. Scales that node's compute + latency — see\n\
+             costmodel::NodeCosts)"
     );
 }
 
@@ -158,6 +168,16 @@ fn cmd_train(args: &[String]) -> Result<()> {
                     .with_context(|| format!("--backend wants shared|bus, got '{val}'"))?;
                 doc.values.extend(parsed.values);
             }
+            "regime" => {
+                let parsed = Toml::parse(&format!("train.regime = \"{val}\""))
+                    .with_context(|| format!("--regime wants bsp|overlap|async, got '{val}'"))?;
+                doc.values.extend(parsed.values);
+            }
+            "max-staleness" => {
+                let parsed = Toml::parse(&format!("train.max_staleness = {val}"))
+                    .with_context(|| format!("--max-staleness wants an integer, got '{val}'"))?;
+                doc.values.extend(parsed.values);
+            }
             other => bail!("unknown flag --{other}"),
         }
     }
@@ -173,7 +193,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
         cfg.steps,
         cfg.threads,
         if cfg.stealing { " (stealing)" } else { "" },
-        if cfg.overlap { " | overlap" } else { "" },
+        match cfg.regime_kind().expect("validated") {
+            gossip_pga::eventsim::Regime::Bsp => String::new(),
+            gossip_pga::eventsim::Regime::Overlap => " | overlap".into(),
+            gossip_pga::eventsim::Regime::Async =>
+                format!(" | async (max staleness {})", cfg.max_staleness),
+        },
         cfg.backend,
         if cfg.compression == "none" {
             String::new()
@@ -240,6 +265,22 @@ fn cmd_train(args: &[String]) -> Result<()> {
             trainer.straggler_slack(),
             trainer.barrier_wait_seconds()
         );
+    }
+    if comm.fallback_rounds > 0 {
+        println!(
+            "# overlap fallback: {} gossip round(s) ran synchronously (backend has no async path)",
+            comm.fallback_rounds
+        );
+    }
+    if let Some(hist) = trainer.staleness_histogram() {
+        let (stale_max, stale_mean) = trainer.staleness();
+        let shown: Vec<String> =
+            hist.iter().enumerate().map(|(s, c)| format!("{s}:{c}")).collect();
+        println!(
+            "# staleness: max {stale_max} | mean {stale_mean:.3} | histogram {{{}}}",
+            shown.join(", ")
+        );
+        println!("# links: mean utilization {:.1}%", trainer.link_utilization() * 100.0);
     }
     if let Some(acc) = coordinator::mlp_eval_accuracy(&trainer)? {
         println!("# eval accuracy: {:.2}%", acc * 100.0);

@@ -40,6 +40,16 @@ pub struct Record {
     /// Cumulative seconds nodes have spent stalled at synchronization
     /// barriers behind slower peers, summed over nodes.
     pub barrier_wait: f64,
+    /// Async regime: worst staleness (versions behind BSP-fresh) any mix
+    /// input has used so far. 0 outside the async regime and in strict
+    /// (max_staleness = 0) runs.
+    pub stale_max: u64,
+    /// Async regime: mean staleness over all mix inputs so far.
+    pub stale_mean: f64,
+    /// Async regime: mean per-link utilization of the event plane
+    /// (transfer occupancy / elapsed critical path, averaged over
+    /// directed links). 0 outside the async regime.
+    pub link_util: f64,
 }
 
 /// A training history for one run.
@@ -81,11 +91,12 @@ impl History {
         // keyed on the old prefix keep working.
         let mut out = String::from(
             "step,loss,consensus,lr,sim_seconds,comm_scalars,comm_msgs,\
-             sim_min_seconds,straggler_slack,barrier_wait\n",
+             sim_min_seconds,straggler_slack,barrier_wait,\
+             stale_max,stale_mean,link_util\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.step,
                 r.loss,
                 r.consensus,
@@ -95,7 +106,10 @@ impl History {
                 r.comm_msgs,
                 r.sim_min_seconds,
                 r.straggler_slack,
-                r.barrier_wait
+                r.barrier_wait,
+                r.stale_max,
+                r.stale_mean,
+                r.link_util
             ));
         }
         out
@@ -137,6 +151,18 @@ impl History {
             (
                 "barrier_wait",
                 jsonio::num_arr(&self.records.iter().map(|r| r.barrier_wait).collect::<Vec<_>>()),
+            ),
+            (
+                "stale_max",
+                jsonio::u64_arr(&self.records.iter().map(|r| r.stale_max).collect::<Vec<_>>()),
+            ),
+            (
+                "stale_mean",
+                jsonio::num_arr(&self.records.iter().map(|r| r.stale_mean).collect::<Vec<_>>()),
+            ),
+            (
+                "link_util",
+                jsonio::num_arr(&self.records.iter().map(|r| r.link_util).collect::<Vec<_>>()),
             ),
         ])
     }
@@ -428,6 +454,9 @@ mod tests {
                 sim_min_seconds: i as f64 * 0.5,
                 straggler_slack: i as f64 * 0.5,
                 barrier_wait: i as f64 * 0.25,
+                stale_max: i as u64,
+                stale_mean: i as f64 * 0.5,
+                link_util: i as f64 * 0.125,
             });
         }
         assert_eq!(h.first_step_below(0.35).unwrap().step, 2);
@@ -441,14 +470,20 @@ mod tests {
             .next()
             .unwrap()
             .starts_with("step,loss,consensus,lr,sim_seconds,comm_scalars,comm_msgs"));
-        assert!(csv.lines().next().unwrap().ends_with("sim_min_seconds,straggler_slack,barrier_wait"));
+        assert!(csv
+            .lines()
+            .next()
+            .unwrap()
+            .ends_with("straggler_slack,barrier_wait,stale_max,stale_mean,link_util"));
         assert!(csv.lines().nth(3).unwrap().contains(",200,4,"));
-        assert!(csv.lines().nth(3).unwrap().ends_with(",1,1,0.5"));
+        assert!(csv.lines().nth(3).unwrap().ends_with(",1,1,0.5,2,1,0.25"));
         let j = h.to_json().dump();
         assert!(j.contains("\"label\":\"test\""));
         assert!(j.contains("\"comm_scalars\":[0,100,200,300,400]"));
         assert!(j.contains("\"comm_msgs\":[0,2,4,6,8]"));
         assert!(j.contains("\"straggler_slack\":[0,0.5,1,1.5,2]"));
         assert!(j.contains("\"barrier_wait\":[0,0.25,0.5,0.75,1]"));
+        assert!(j.contains("\"stale_max\":[0,1,2,3,4]"));
+        assert!(j.contains("\"link_util\":[0,0.125,0.25,0.375,0.5]"));
     }
 }

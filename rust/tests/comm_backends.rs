@@ -26,6 +26,7 @@ use gossip_pga::comm::{
 };
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::{CostModel, NodeCosts};
+use gossip_pga::eventsim::Regime;
 use gossip_pga::exec::WorkerPool;
 use gossip_pga::metrics::consensus_distance;
 use gossip_pga::optim::LrSchedule;
@@ -415,7 +416,8 @@ fn trainer_with_backend(
         stealing: false,
         log_every: 5,
         threads,
-        overlap: false,
+        regime: Regime::Bsp,
+        max_staleness: 0,
         backend,
         compression: Compression::None,
     };
@@ -492,7 +494,8 @@ fn checkpoint_resumes_comm_totals_and_compressor_residuals_exactly() {
                 stealing: false,
                 log_every: 5,
                 threads: 2,
-                overlap: false,
+                regime: Regime::Bsp,
+                max_staleness: 0,
                 backend,
                 compression: Compression::TopK { frac: 0.5 },
             };
@@ -561,7 +564,8 @@ fn restoring_compressed_checkpoint_into_uncompressed_run_is_rejected() {
         stealing: false,
         log_every: 5,
         threads: 1,
-        overlap: false,
+        regime: Regime::Bsp,
+        max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::Int8 { block: 64 },
     };
@@ -612,7 +616,8 @@ fn overlap_on_bus_falls_back_to_sync_and_matches_bsp() {
         stealing: false,
         log_every: 5,
         threads: 2,
-        overlap: true,
+        regime: Regime::Overlap,
+        max_staleness: 0,
         backend: BackendKind::Bus,
         compression: Compression::None,
     };
@@ -626,4 +631,9 @@ fn overlap_on_bus_falls_back_to_sync_and_matches_bsp() {
         assert_eq!(bsp.worker_params(i), ovl.worker_params(i), "worker {i}");
     }
     assert_eq!(bsp.sim_seconds(), ovl.sim_seconds());
+    // The downgrade is SURFACED, not silent: every gossip round of the 9
+    // steps (H = 4 => 2 global averages) is tallied as a fallback on the
+    // overlap run, and a plain BSP run on the same backend reports none.
+    assert_eq!(ovl.comm_stats().fallback_rounds, 7, "fallback tally");
+    assert_eq!(bsp.comm_stats().fallback_rounds, 0);
 }

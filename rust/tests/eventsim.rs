@@ -1,0 +1,381 @@
+//! The event-driven async gossip regime, end to end (no AOT artifacts —
+//! every suite drives the engine + backends directly, like the
+//! virtual-time replay tests):
+//!
+//! * **(a) strict-mode anchor** — homogeneous costs + `max_staleness = 0`:
+//!   the event schedule reproduces the barrier-billed clocks AND the BSP
+//!   parameter trajectory bit-exactly on BOTH CommPlane backends, with
+//!   identical traffic totals;
+//! * **(b) staleness bound** — seeded multi-straggler async runs keep
+//!   every mix input within `max_staleness` (and actually exercise the
+//!   stale bins);
+//! * **(c) checkpoint v5** — a mid-flight async run (payloads still on
+//!   the links) snapshots through the v5 file format and resumes
+//!   bit-exactly in a fresh engine (v1–v4 load-compat is pinned by the
+//!   hand-written files in `coordinator::checkpoint`'s unit tests);
+//! * **(d) determinism** — same seed => identical event order (trace),
+//!   parameters and clocks across worker-pool sizes.
+
+use gossip_pga::algorithms::AlgorithmKind;
+use gossip_pga::comm::{BusBackend, CommBackend, CommStats, Compression, SharedBackend};
+use gossip_pga::coordinator::checkpoint::{Checkpoint, ClockState};
+use gossip_pga::costmodel::{CostModel, NodeCosts, VirtualClocks};
+use gossip_pga::eventsim::AsyncGossip;
+use gossip_pga::exec::WorkerPool;
+use gossip_pga::params::ParamMatrix;
+use gossip_pga::rng::Rng;
+use gossip_pga::topology::Topology;
+
+const COST_DIM: usize = 25_500_000;
+
+/// Deterministic synthetic local update — pure in `(node, iter)`, so any
+/// execution order and any pool size produce the same bits.
+fn fake_step(params: &mut ParamMatrix, batch: &[(usize, usize)]) -> anyhow::Result<()> {
+    for &(node, iter) in batch {
+        let mut r = Rng::new(0xE5E5 ^ ((node as u64) << 32) ^ iter as u64);
+        for x in params.row_mut(node) {
+            *x = 0.95 * *x + 0.05 * r.normal() as f32;
+        }
+    }
+    Ok(())
+}
+
+fn mk_backend(
+    kind: &str,
+    topo: &Topology,
+    d: usize,
+    costs: &NodeCosts,
+    with_global: bool,
+) -> Box<dyn CommBackend> {
+    match kind {
+        "shared" => Box::new(SharedBackend::new(topo, d, costs, COST_DIM, Compression::None)),
+        _ => Box::new(BusBackend::new(topo, d, costs, COST_DIM, Compression::None, with_global)),
+    }
+}
+
+struct EngineRun {
+    params: ParamMatrix,
+    clocks: VirtualClocks,
+    engine: AsyncGossip,
+    total: CommStats,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_engine(
+    backend_kind: &str,
+    topo: &Topology,
+    costs: &NodeCosts,
+    d: usize,
+    staleness: usize,
+    algo: AlgorithmKind,
+    h: usize,
+    steps: usize,
+    pool_size: usize,
+    trace: bool,
+) -> EngineRun {
+    let mut params = ParamMatrix::random(&mut Rng::new(31), topo.n, d, 1.0);
+    let mut engine =
+        AsyncGossip::new(topo, costs, d, COST_DIM, staleness, algo, h, &params).unwrap();
+    if trace {
+        engine.enable_trace();
+    }
+    let with_global = h != usize::MAX;
+    let mut backend = mk_backend(backend_kind, topo, d, costs, with_global);
+    let pool = WorkerPool::new(pool_size);
+    let mut clocks = VirtualClocks::new(topo);
+    let mut step = |p: &mut ParamMatrix, b: &[(usize, usize)]| fake_step(p, b);
+    let mut sync = |_k: usize, _p: &mut ParamMatrix| -> anyhow::Result<()> { Ok(()) };
+    for t in 1..=steps {
+        engine
+            .run_until(t, &mut params, backend.as_mut(), &pool, &mut clocks, costs, &mut step, &mut sync)
+            .unwrap();
+    }
+    let total = backend.total();
+    EngineRun { params, clocks, engine, total }
+}
+
+/// The BSP reference: identical synthetic updates, backend-level
+/// collectives, trainer-style billing.
+fn run_bsp_reference(
+    backend_kind: &str,
+    topo: &Topology,
+    costs: &NodeCosts,
+    d: usize,
+    h: usize,
+    steps: usize,
+) -> (ParamMatrix, VirtualClocks, CommStats) {
+    let mut params = ParamMatrix::random(&mut Rng::new(31), topo.n, d, 1.0);
+    let with_global = h != usize::MAX;
+    let mut backend = mk_backend(backend_kind, topo, d, costs, with_global);
+    let pool = WorkerPool::new(2);
+    let mut clocks = VirtualClocks::new(topo);
+    for k in 0..steps {
+        let batch: Vec<(usize, usize)> = (0..topo.n).map(|i| (i, k)).collect();
+        fake_step(&mut params, &batch).unwrap();
+        let charge = if h != usize::MAX && (k + 1) % h == 0 {
+            backend.global_average(&mut params, &pool).unwrap()
+        } else {
+            backend.gossip(&mut params, &pool).unwrap()
+        };
+        clocks.advance(&costs.compute, &charge.node_seconds, charge.barrier);
+    }
+    (params, clocks, backend.total())
+}
+
+#[test]
+fn strict_event_schedule_equals_barrier_billing_on_both_backends() {
+    // (a) The regression anchor: homogeneous + staleness-0 event-driven
+    // runs ARE the BSP runs — parameters, every per-node clock, and the
+    // traffic totals, bit for bit, on both planes.
+    let d = 23;
+    let steps = 13;
+    for topo in [Topology::ring(6), Topology::one_peer_expo(8), Topology::grid(9)] {
+        let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), topo.n);
+        for (algo, h) in
+            [(AlgorithmKind::GossipPga, 4), (AlgorithmKind::Gossip, usize::MAX)]
+        {
+            for backend_kind in ["shared", "bus"] {
+                let ev = run_engine(
+                    backend_kind, &topo, &costs, d, 0, algo, h, steps, 2, false,
+                );
+                let (bsp_params, bsp_clocks, bsp_total) =
+                    run_bsp_reference(backend_kind, &topo, &costs, d, h, steps);
+                assert_eq!(
+                    ev.params, bsp_params,
+                    "{backend_kind}/{algo:?} on {:?}: trajectory diverged",
+                    topo.kind
+                );
+                assert_eq!(
+                    ev.clocks.seconds(),
+                    bsp_clocks.seconds(),
+                    "{backend_kind}/{algo:?} on {:?}: clocks diverged",
+                    topo.kind
+                );
+                assert_eq!(
+                    ev.clocks.waited(),
+                    bsp_clocks.waited(),
+                    "{backend_kind}/{algo:?} on {:?}: wait accounts diverged",
+                    topo.kind
+                );
+                assert_eq!(
+                    ev.total, bsp_total,
+                    "{backend_kind}/{algo:?} on {:?}: traffic totals diverged",
+                    topo.kind
+                );
+                let (stale_max, stale_mean) = ev.engine.staleness();
+                assert_eq!((stale_max, stale_mean), (0, 0.0), "strict mode is never stale");
+            }
+        }
+    }
+}
+
+#[test]
+fn strict_event_schedule_handles_local_sgd_compute_only_steps() {
+    // Local SGD: None actions between global averages — the event plane
+    // must bill pure compute exactly like BarrierScope::None.
+    let topo = Topology::ring(5);
+    let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 5);
+    let d = 11;
+    let ev = run_engine("shared", &topo, &costs, d, 0, AlgorithmKind::Local, 3, 9, 1, false);
+    let mut params = ParamMatrix::random(&mut Rng::new(31), 5, d, 1.0);
+    let mut backend = mk_backend("shared", &topo, d, &costs, true);
+    let pool = WorkerPool::new(1);
+    let mut clocks = VirtualClocks::new(&topo);
+    let zeros = vec![0.0; 5];
+    for k in 0..9 {
+        let batch: Vec<(usize, usize)> = (0..5).map(|i| (i, k)).collect();
+        fake_step(&mut params, &batch).unwrap();
+        if (k + 1) % 3 == 0 {
+            let c = backend.global_average(&mut params, &pool).unwrap();
+            clocks.advance(&costs.compute, &c.node_seconds, c.barrier);
+        } else {
+            clocks.advance(&costs.compute, &zeros, gossip_pga::costmodel::BarrierScope::None);
+        }
+    }
+    assert_eq!(ev.params, params);
+    assert_eq!(ev.clocks.seconds(), clocks.seconds());
+}
+
+#[test]
+fn async_mixes_stay_within_the_staleness_bound_under_stragglers() {
+    // (b) Multi-straggler (the `--straggler 0:4,3:2` scenario): the bound
+    // holds for every mix input, and the stale bins are actually hit.
+    let topo = Topology::ring(8);
+    let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 8)
+        .with_straggler(0, 4.0)
+        .unwrap()
+        .with_straggler(3, 2.0)
+        .unwrap();
+    for backend_kind in ["shared", "bus"] {
+        for s in [1usize, 2] {
+            let ev = run_engine(
+                backend_kind,
+                &topo,
+                &costs,
+                15,
+                s,
+                AlgorithmKind::Gossip,
+                usize::MAX,
+                24,
+                2,
+                false,
+            );
+            let hist = ev.engine.histogram();
+            let (stale_max, _) = ev.engine.staleness();
+            assert!(
+                stale_max as usize <= s,
+                "{backend_kind} s={s}: staleness {stale_max} exceeded the bound"
+            );
+            assert!(
+                hist.iter().skip(1).any(|&c| c > 0),
+                "{backend_kind} s={s}: straggler run never used a stale copy: {hist:?}"
+            );
+            // The event plane's critical path undercuts the neighborhood
+            // barrier's (which exposes every transfer).
+            let (_, barrier_clocks, _) =
+                run_bsp_reference(backend_kind, &topo, &costs, 15, usize::MAX, 24);
+            assert!(
+                ev.clocks.max_seconds() < barrier_clocks.max_seconds(),
+                "{backend_kind} s={s}: async {} !< barrier {}",
+                ev.clocks.max_seconds(),
+                barrier_clocks.max_seconds()
+            );
+        }
+    }
+}
+
+#[test]
+fn checkpoint_v5_resumes_mid_flight_bit_exactly() {
+    // (c) Snapshot an async run with payloads still riding the links,
+    // round-trip it through the v5 FILE format, import into a fresh
+    // engine, and continue both runs: bits must agree throughout.
+    let topo = Topology::ring(6);
+    let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 6)
+        .with_straggler(1, 3.0)
+        .unwrap();
+    let d = 9;
+    let (k1, k2) = (7usize, 15usize);
+    let algo = AlgorithmKind::GossipPga;
+    let h = 5usize;
+
+    // Unbroken run to k2, snapshotting (with the same sync semantics a
+    // checkpoint imposes) at k1.
+    let mut params = ParamMatrix::random(&mut Rng::new(31), 6, d, 1.0);
+    let mut engine = AsyncGossip::new(&topo, &costs, d, COST_DIM, 2, algo, h, &params).unwrap();
+    let mut backend = mk_backend("shared", &topo, d, &costs, true);
+    let pool = WorkerPool::new(2);
+    let mut clocks = VirtualClocks::new(&topo);
+    let mut step = |p: &mut ParamMatrix, b: &[(usize, usize)]| fake_step(p, b);
+    let mut sync = |_k: usize, _p: &mut ParamMatrix| -> anyhow::Result<()> { Ok(()) };
+    for t in 1..=k1 {
+        engine
+            .run_until(t, &mut params, backend.as_mut(), &pool, &mut clocks, &costs, &mut step, &mut sync)
+            .unwrap();
+    }
+    clocks.sync(); // the checkpoint barrier
+    let ck = Checkpoint {
+        step: k1 as u64,
+        sim_seconds: clocks.max_seconds(),
+        params: params.clone(),
+        velocities: None,
+        gossip_clock: backend.gossip_clock() as u64,
+        schedule: None,
+        slowmo: None,
+        rng_states: Vec::new(),
+        comm: Some(backend.total()),
+        ef_residuals: None,
+        ef_compression: None,
+        clocks: Some(ClockState {
+            seconds: clocks.seconds().to_vec(),
+            waited: clocks.waited().to_vec(),
+        }),
+        eventsim: Some(engine.export_state()),
+    };
+    let path = std::env::temp_dir().join(format!("gpga_eventsim_{}.bin", std::process::id()));
+    ck.save(&path).unwrap();
+    let loaded = Checkpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(ck, loaded, "v5 file round-trip must be lossless");
+    assert!(
+        loaded
+            .eventsim
+            .as_ref()
+            .unwrap()
+            .links
+            .iter()
+            .any(|l| !l.inflight.is_empty()),
+        "the snapshot should catch payloads mid-flight (straggler run)"
+    );
+
+    // Resume into a fresh engine/backend/clocks from the loaded file.
+    let mut r_params = loaded.params.clone();
+    let mut r_engine =
+        AsyncGossip::new(&topo, &costs, d, COST_DIM, 2, algo, h, &r_params).unwrap();
+    r_engine
+        .import_state(loaded.eventsim.as_ref().unwrap(), k1, loaded.gossip_clock as usize)
+        .unwrap();
+    let mut r_backend = mk_backend("shared", &topo, d, &costs, true);
+    r_backend.set_gossip_clock(loaded.gossip_clock as usize);
+    r_backend.restore_total(loaded.comm.unwrap());
+    let mut r_clocks = VirtualClocks::new(&topo);
+    let cs = loaded.clocks.as_ref().unwrap();
+    r_clocks.restore(&cs.seconds, &cs.waited).unwrap();
+
+    for t in (k1 + 1)..=k2 {
+        engine
+            .run_until(
+                t, &mut params, backend.as_mut(), &pool, &mut clocks, &costs, &mut step, &mut sync,
+            )
+            .unwrap();
+        r_engine
+            .run_until(
+                t, &mut r_params, r_backend.as_mut(), &pool, &mut r_clocks, &costs, &mut step,
+                &mut sync,
+            )
+            .unwrap();
+    }
+    assert_eq!(params, r_params, "resumed trajectory diverged");
+    assert_eq!(clocks.seconds(), r_clocks.seconds(), "resumed clocks diverged");
+    assert_eq!(engine.histogram(), r_engine.histogram(), "resumed staleness diverged");
+    assert_eq!(backend.total(), r_backend.total(), "resumed traffic diverged");
+}
+
+#[test]
+fn event_order_is_identical_across_pool_sizes() {
+    // (d) The determinism gate: the heap's (time, kind, src, dst, seq)
+    // order is a pure function of the configuration — the pool only
+    // shards real work whose arithmetic is order-independent.
+    let topo = Topology::one_peer_expo(8);
+    let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 8)
+        .with_straggler(2, 4.0)
+        .unwrap();
+    let reference = run_engine(
+        "shared", &topo, &costs, 13, 2, AlgorithmKind::GossipPga, 4, 17, 1, true,
+    );
+    for pool_size in [2usize, 3] {
+        let got = run_engine(
+            "shared", &topo, &costs, 13, 2, AlgorithmKind::GossipPga, 4, 17, pool_size, true,
+        );
+        assert_eq!(
+            reference.engine.trace(),
+            got.engine.trace(),
+            "event order changed at pool size {pool_size}"
+        );
+        assert_eq!(reference.params, got.params, "params changed at pool size {pool_size}");
+        assert_eq!(
+            reference.clocks.seconds(),
+            got.clocks.seconds(),
+            "clocks changed at pool size {pool_size}"
+        );
+    }
+}
+
+#[test]
+fn strict_mode_trace_is_also_pool_invariant() {
+    let topo = Topology::ring(6);
+    let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 6);
+    let a = run_engine("shared", &topo, &costs, 9, 0, AlgorithmKind::GossipPga, 3, 9, 1, true);
+    let b = run_engine("shared", &topo, &costs, 9, 0, AlgorithmKind::GossipPga, 3, 9, 4, true);
+    assert_eq!(a.engine.trace(), b.engine.trace());
+    assert_eq!(a.params, b.params);
+}

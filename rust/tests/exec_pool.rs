@@ -12,6 +12,7 @@ use gossip_pga::algorithms::AlgorithmKind;
 use gossip_pga::comm::{BackendKind, Compression};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::CostModel;
+use gossip_pga::eventsim::Regime;
 use gossip_pga::exec::WorkerPool;
 use gossip_pga::optim::LrSchedule;
 use gossip_pga::runtime::Runtime;
@@ -50,7 +51,8 @@ fn trainer(threads: usize) -> Trainer {
         stealing: false,
         log_every: 10,
         threads,
-        overlap: false,
+        regime: Regime::Bsp,
+        max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::None,
     };
@@ -107,7 +109,8 @@ fn poisoned_pool_refuses_async_overlap_work_too() {
             stealing: false,
             log_every: 10,
             threads: 2,
-            overlap: true,
+            regime: Regime::Overlap,
+            max_staleness: 0,
             backend: BackendKind::Shared,
             compression: Compression::None,
         };

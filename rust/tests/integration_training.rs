@@ -8,6 +8,7 @@ use gossip_pga::algorithms::{AlgorithmKind, SlowMoParams};
 use gossip_pga::comm::{BackendKind, Compression};
 use gossip_pga::coordinator::{logreg_workload, mlp_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::CostModel;
+use gossip_pga::eventsim::Regime;
 use gossip_pga::metrics::consensus_distance;
 use gossip_pga::optim::LrSchedule;
 use gossip_pga::runtime::Runtime;
@@ -35,7 +36,8 @@ fn opts(algo: AlgorithmKind, topo: Topology, h: usize, seed: u64) -> TrainerOpti
         stealing: false,
         log_every: 10,
         threads: 1,
-        overlap: false,
+        regime: Regime::Bsp,
+        max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::None,
     }
@@ -275,7 +277,7 @@ fn overlap_trainer(n: usize, h: usize, seed: u64, threads: usize, overlap: bool)
     o.momentum = 0.9;
     o.nesterov = true;
     o.threads = threads;
-    o.overlap = overlap;
+    o.regime = if overlap { Regime::Overlap } else { Regime::Bsp };
     Trainer::new(workload, init, o).unwrap()
 }
 
@@ -334,7 +336,7 @@ fn overlap_trainer_decreases_loss_and_syncs_exactly() {
     let (workload, init) = logreg_workload(rt, 6, 512, false, 5).unwrap();
     let mut o = opts(AlgorithmKind::GossipPga, Topology::ring(6), 4, 5);
     o.threads = 3;
-    o.overlap = true;
+    o.regime = Regime::Overlap;
     let mut t = Trainer::new(workload, init, o).unwrap();
     let mut first = None;
     for k in 0..150 {

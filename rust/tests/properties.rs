@@ -25,6 +25,7 @@ use gossip_pga::comm::{BackendKind, Compression};
 use gossip_pga::coordinator::mixer::Mixer;
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::{CostModel, NodeCosts};
+use gossip_pga::eventsim::Regime;
 use gossip_pga::exec::WorkerPool;
 use gossip_pga::linalg::beta_of;
 use gossip_pga::metrics::consensus_distance;
@@ -388,7 +389,8 @@ fn trainer_opts(
         stealing: false,
         log_every: 5,
         threads,
-        overlap: false,
+        regime: Regime::Bsp,
+        max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::None,
     }
@@ -418,7 +420,7 @@ fn logreg_trainer_cfg(
 ) -> Trainer {
     let (workload, init) = logreg_workload(rt.clone(), topo.n, 256, true, 9).unwrap();
     let mut opts = trainer_opts(algo, topo, momentum, threads);
-    opts.overlap = overlap;
+    opts.regime = if overlap { Regime::Overlap } else { Regime::Bsp };
     opts.period = period;
     Trainer::new(workload, init, opts).unwrap()
 }

@@ -23,6 +23,7 @@ use gossip_pga::algorithms::{schedule_for, AlgorithmKind, CommAction, SlowMoPara
 use gossip_pga::comm::{BackendKind, BusBackend, CommBackend, Compression, SharedBackend};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::{BarrierScope, CostModel, NodeCosts, SimClock, VirtualClocks};
+use gossip_pga::eventsim::Regime;
 use gossip_pga::exec::WorkerPool;
 use gossip_pga::optim::LrSchedule;
 use gossip_pga::params::ParamMatrix;
@@ -221,7 +222,8 @@ fn opts(n: usize, threads: usize, costs: Option<NodeCosts>) -> TrainerOptions {
         log_every: 5,
         threads,
         stealing: false,
-        overlap: false,
+        regime: Regime::Bsp,
+        max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::None,
     }
@@ -281,7 +283,13 @@ fn history_columns_expose_slack_and_barrier_wait() {
     assert!(last.sim_seconds >= last.sim_min_seconds);
     assert!(last.barrier_wait > 0.0, "straggled run must log barrier waits");
     let csv = hist.to_csv();
-    assert!(csv.lines().next().unwrap().ends_with("sim_min_seconds,straggler_slack,barrier_wait"));
+    // The PR-4 column block is stable; the PR-5 async columns append.
+    assert!(csv
+        .lines()
+        .next()
+        .unwrap()
+        .contains("sim_min_seconds,straggler_slack,barrier_wait"));
+    assert!(csv.lines().next().unwrap().ends_with("stale_max,stale_mean,link_util"));
     let json = hist.to_json().dump();
     assert!(json.contains("\"straggler_slack\""));
     assert!(json.contains("\"barrier_wait\""));

@@ -12,10 +12,18 @@
 #      reproduce the scalar SimClock bit-exactly when homogeneous (both
 #      backends), stragglers bend clocks but never parameter bits, and
 #      checkpoint v4 resumes keep the per-node time axis
-#   6. comm-accounting smoke: the rewritten tab17 bench replays a schedule
+#   6. eventsim smoke at PROPTEST_CASES=16: the event-driven async regime —
+#      strict mode (max_staleness = 0) equals barrier-billed clocks AND the
+#      BSP trajectory bit-exactly on both backends, bounded-stale mixing
+#      respects --max-staleness under multi-stragglers, checkpoint v5
+#      resumes mid-flight payloads bit-exactly, and the event order is
+#      pool-size-invariant (no AOT artifacts needed)
+#   7. comm-accounting smoke: the rewritten tab17 bench replays a schedule
 #      on both CommPlane backends and asserts measured == predicted ==
-#      analytic traffic AND the straggler gate (gossip's critical path
-#      degrades less than all-reduce's under a seeded 4x straggler); it
+#      analytic traffic, the straggler gate (gossip's critical path
+#      degrades less than all-reduce's under a seeded 4x straggler), AND
+#      the event-plane gate (async critical path below the neighborhood-
+#      barrier bill under multi-stragglers; strict mode bit-equal); it
 #      needs no AOT artifacts, so backend accounting cannot silently rot.
 #
 # Usage: scripts/verify.sh [--fast]
@@ -56,7 +64,10 @@ PROPTEST_CASES=16 GOSSIP_PGA_TEST_THREADS=4 cargo test -q --test properties
 echo "==> virtual-time plane: homogeneous bit-exactness + straggler properties"
 PROPTEST_CASES=16 cargo test -q --test virtual_time
 
-echo "==> CommPlane accounting smoke incl. straggler gate (tab17, fast mode)"
+echo "==> event plane: strict-mode anchor + staleness bound + v5 resume + determinism"
+PROPTEST_CASES=16 cargo test -q --test eventsim
+
+echo "==> CommPlane accounting smoke incl. straggler + event-plane gates (tab17, fast mode)"
 GOSSIP_PGA_FAST=1 cargo bench --bench tab17_comm_overhead
 
 echo "==> verify OK"
