@@ -15,6 +15,8 @@
 //!   * regime dispatch: BSP vs event-driven async at max_staleness 0 and 2
 //!     — strict async asserts bit-identical params + clocks vs BSP;
 //!     relaxed async asserts a no-worse simulated critical path
+//!   * virtual population sweep scaling: per-row wall time + peak RSS
+//!     across a virtual-n sweep (10^3 → 10^5), emitted to BENCH_6.json
 //!
 //!     cargo bench --bench perf_hotpath
 
@@ -67,6 +69,75 @@ fn trainer_opts(n: usize, threads: usize, regime: Regime) -> TrainerOptions {
 fn main() -> anyhow::Result<()> {
     println!("# §Perf hot-path microbenchmarks\n");
     let mut t = Table::new(&["component", "config", "mean", "p95", "throughput"]);
+
+    // --- BENCH_6: virtual population sweep scaling --------------------------
+    // The population plane's memory-scaling claim, measured: per-row wall
+    // time and peak RSS across a virtual-n sweep (surrogate plane, seeded
+    // churn, a few iterations each). Runs FIRST so VmHWM — a process-wide
+    // high-water mark — is not polluted by the deep-learning-d sections
+    // below. `GOSSIP_PGA_FAST=1` drops the 10^5 flagship row. Rows land in
+    // BENCH_6.json for the trajectory log.
+    {
+        use gossip_pga::jsonio::{self, Json};
+        use gossip_pga::population::{run_sweep, ChurnScript, SweepSpec};
+
+        /// Linux VmHWM (peak resident set) in bytes; None off-Linux.
+        fn peak_rss_bytes() -> Option<u64> {
+            let status = std::fs::read_to_string("/proc/self/status").ok()?;
+            let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+            let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+            Some(kb * 1024)
+        }
+
+        let fast = std::env::var("GOSSIP_PGA_FAST").is_ok();
+        let sizes: &[usize] =
+            if fast { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000] };
+        let mut rows = Vec::new();
+        for &vn in sizes {
+            let mut spec = SweepSpec::massive_n(vn, 4, 11);
+            spec.log_points = 2;
+            spec.churn = ChurnScript::seeded(5, &spec.topo, 2, 2.0)?.events;
+            let mut report = None;
+            let s = measure(0, 1, || {
+                report = Some(run_sweep(&spec).unwrap());
+            });
+            let report = report.unwrap();
+            let rss = peak_rss_bytes();
+            let last = report.curve.last().copied();
+            t.rowv(vec![
+                "population sweep (surrogate)".into(),
+                format!("virtual n = {vn}, 4 iters, churn"),
+                fmt_duration(s.mean),
+                fmt_duration(s.p95),
+                format!(
+                    "{} links, {} peak slots, RSS {}",
+                    report.num_links,
+                    report.peak_live_slots,
+                    rss.map_or("n/a".into(), |b| format!(
+                        "{:.2} GiB",
+                        b as f64 / (1u64 << 30) as f64
+                    )),
+                ),
+            ]);
+            rows.push(jsonio::obj(vec![
+                ("n", Json::Num(vn as f64)),
+                ("wall_seconds", Json::Num(s.mean)),
+                ("sim_seconds", Json::Num(last.map_or(0.0, |c| c.time))),
+                ("msgs", Json::Num(last.map_or(0, |c| c.msgs) as f64)),
+                ("num_links", Json::Num(report.num_links as f64)),
+                ("peak_live_slots", Json::Num(report.peak_live_slots as f64)),
+                ("peak_dense_scalars", Json::Num(report.peak_dense_scalars as f64)),
+                ("peak_rss_bytes", rss.map_or(Json::Null, |b| Json::Num(b as f64))),
+            ]));
+        }
+        let doc = jsonio::obj(vec![
+            ("bench", Json::Str("virtual_population_sweep".into())),
+            ("fast", Json::Bool(fast)),
+            ("rows", Json::Arr(rows)),
+        ]);
+        std::fs::write("BENCH_6.json", doc.dump() + "\n")?;
+        println!("wrote BENCH_6.json");
+    }
 
     // --- axpy ------------------------------------------------------------
     let d = 12_235_776; // e2e transformer flat dim

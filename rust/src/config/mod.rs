@@ -464,6 +464,151 @@ impl ExperimentConfig {
     }
 }
 
+/// Configuration of a population sweep (`gossip-pga sweep`): the
+/// virtual-plane counterpart of [`ExperimentConfig`]. Assembled from CLI
+/// flags by the launcher; [`SweepConfig::validate`] is the front door that
+/// rejects bad knobs (out-of-range stragglers, conflicting payload modes,
+/// malformed region specs) before any engine state is built.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Population size (`--virtual-n`) — nodes simulated, none materialized.
+    pub virtual_n: usize,
+    pub topology: String,
+    pub algorithm: AlgorithmKind,
+    /// Global averaging period H.
+    pub period: usize,
+    /// Iterations every live node must complete.
+    pub steps: usize,
+    pub max_staleness: usize,
+    /// `--surrogate`: statistical `(mean, var)` payloads — no dense scalar
+    /// is ever allocated. Mutually exclusive with `dim > 0`.
+    pub surrogate: bool,
+    /// Dense drift dimension (`--dim`); 0 with `surrogate` unset also
+    /// selects the surrogate (the zero-dimensional drift IS the surrogate).
+    pub dim: usize,
+    pub seed: u64,
+    /// Billing dimension of the alpha-beta cost model (`--cost-dim`).
+    pub cost_dim: usize,
+    /// Explicit churn script (`--churn "crash@t:n,..."`); empty = none.
+    pub churn: String,
+    /// Seeded churn: number of crash/flaky disturbance pairs
+    /// (`--churn-pairs`, 0 = none) drawn from `--churn-seed` over
+    /// `--churn-horizon` virtual seconds.
+    pub churn_pairs: usize,
+    pub churn_seed: u64,
+    pub churn_horizon: f64,
+    /// Region latency tiers (`--regions k:mult`): k contiguous regions,
+    /// cross-region links slowed by mult. Empty = flat.
+    pub regions: String,
+    /// `--straggler idx:factor` specs (validated against `virtual_n`).
+    pub stragglers: Vec<(usize, f64)>,
+    /// Curve resolution (`--log-points`).
+    pub log_points: usize,
+    /// Report output path (`--report`); empty = print to stdout only.
+    pub report: String,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            virtual_n: 1024,
+            topology: "one-peer-expo".into(),
+            algorithm: AlgorithmKind::GossipPga,
+            period: 8,
+            steps: 64,
+            max_staleness: 2,
+            surrogate: false,
+            dim: 0,
+            seed: 42,
+            cost_dim: 25_500_000,
+            churn: String::new(),
+            churn_pairs: 0,
+            churn_seed: 42,
+            churn_horizon: 0.0,
+            regions: String::new(),
+            stragglers: Vec::new(),
+            log_points: 20,
+            report: String::new(),
+        }
+    }
+}
+
+impl SweepConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.virtual_n >= 1, "--virtual-n must be >= 1");
+        anyhow::ensure!(self.period >= 1, "period H must be >= 1 (got 0)");
+        anyhow::ensure!(self.steps >= 1, "--steps must be >= 1");
+        anyhow::ensure!(self.log_points >= 1, "--log-points must be >= 1");
+        anyhow::ensure!(self.cost_dim >= 1, "--cost-dim must be >= 1");
+        Topology::from_name(&self.topology, self.virtual_n)?;
+        if self.surrogate && self.dim > 0 {
+            bail!(
+                "--surrogate conflicts with --dim {} (surrogate payloads carry no dense state)",
+                self.dim
+            );
+        }
+        // The sweep-path straggler range check: the train path has bailed
+        // on out-of-range indices since PR 4 (ExperimentConfig::validate /
+        // NodeCosts::with_straggler); the sweep's population size comes
+        // from a different flag, so it needs its own front-door message.
+        for &(idx, factor) in &self.stragglers {
+            if idx >= self.virtual_n {
+                bail!(
+                    "--straggler index {idx} out of range for the virtual population \
+                     (--virtual-n {}; valid indices are 0..{})",
+                    self.virtual_n,
+                    self.virtual_n
+                );
+            }
+            if !(factor.is_finite() && factor > 0.0) {
+                bail!("straggler factor must be finite and positive, got {factor}");
+            }
+        }
+        if self.churn_pairs > 0 {
+            anyhow::ensure!(
+                self.churn_horizon.is_finite() && self.churn_horizon > 0.0,
+                "--churn-pairs needs a positive --churn-horizon (virtual seconds)"
+            );
+            anyhow::ensure!(
+                self.virtual_n >= 2,
+                "seeded churn needs at least 2 virtual nodes"
+            );
+        }
+        self.region_spec()?;
+        Ok(())
+    }
+
+    /// Parse `--regions k:mult` into `(k, cross_region_multiplier)`.
+    /// Empty => `None` (a flat, single-region population).
+    pub fn region_spec(&self) -> Result<Option<(usize, f64)>> {
+        let spec = self.regions.trim();
+        if spec.is_empty() {
+            return Ok(None);
+        }
+        let (k, mult) = spec
+            .split_once(':')
+            .ok_or_else(|| anyhow!("--regions wants k:mult (e.g. 4:10), got '{spec}'"))?;
+        let k: usize = k
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("--regions region count must be an integer, got '{k}'"))?;
+        let mult: f64 = mult
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("--regions multiplier must be numeric, got '{mult}'"))?;
+        anyhow::ensure!(
+            k >= 1 && k <= self.virtual_n,
+            "--regions count {k} must be in 1..={}",
+            self.virtual_n
+        );
+        anyhow::ensure!(
+            mult.is_finite() && mult > 0.0,
+            "--regions multiplier must be finite and positive, got {mult}"
+        );
+        Ok(Some((k, mult)))
+    }
+}
+
 /// Apply a scalar-or-per-node override list onto a resolved table.
 fn spread_override(list: &[f64], out: &mut [f64], key: &str) -> Result<()> {
     match list.len() {
@@ -750,6 +895,47 @@ mod tests {
         assert!(parse_stragglers("1:2, 1:2").is_err());
         let doc = Toml::parse("[cost]\nstraggler = \"2:4,2:8\"\n").unwrap();
         assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn sweep_config_defaults_valid_and_straggler_range_enforced() {
+        SweepConfig::default().validate().unwrap();
+        // The sweep-path range check (--straggler vs --virtual-n): the
+        // train path has had its own since PR 4; this is the new one.
+        let mut cfg = SweepConfig { virtual_n: 100, ..SweepConfig::default() };
+        cfg.stragglers = vec![(99, 4.0)];
+        cfg.validate().unwrap();
+        cfg.stragglers = vec![(100, 4.0)];
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("--straggler index 100 out of range"), "{err}");
+        assert!(err.contains("--virtual-n 100"), "{err}");
+        cfg.stragglers = vec![(3, -1.0)];
+        assert!(cfg.validate().is_err(), "non-positive factor");
+    }
+
+    #[test]
+    fn sweep_config_rejects_conflicts_and_parses_regions() {
+        let mut cfg = SweepConfig::default();
+        cfg.surrogate = true;
+        cfg.dim = 16;
+        assert!(cfg.validate().unwrap_err().to_string().contains("--surrogate conflicts"));
+        let mut cfg = SweepConfig::default();
+        cfg.churn_pairs = 4;
+        assert!(cfg.validate().is_err(), "seeded churn needs a horizon");
+        cfg.churn_horizon = 10.0;
+        cfg.validate().unwrap();
+        let mut cfg = SweepConfig::default();
+        cfg.regions = "4:10".into();
+        assert_eq!(cfg.region_spec().unwrap(), Some((4, 10.0)));
+        cfg.validate().unwrap();
+        cfg.regions = "4".into();
+        assert!(cfg.validate().is_err());
+        cfg.regions = "0:10".into();
+        assert!(cfg.validate().is_err());
+        cfg.regions = "4:nan".into();
+        assert!(cfg.validate().is_err());
+        cfg.regions = String::new();
+        assert_eq!(cfg.region_spec().unwrap(), None);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! replays bit-identically to an unbroken run (v3 for compressed runs,
 //! v4 for heterogeneous time axes).
 //!
-//! Format v5 (little-endian):
+//! Format v6 (little-endian):
 //!   magic "GPGA" | u32 version | u64 step | f64 sim_seconds |
 //!   u32 n | u32 d | n * d f32 params | u8 has_velocity |
 //!   [n * d f32 velocities] | u64 gossip_clock | u8 has_schedule |
@@ -28,11 +28,15 @@
 //!                u64 int8_block | n * d f32 error-feedback residuals] |
 //!   u8 has_clocks | [n f64 node clocks | n f64 node barrier waits] (v4+) |
 //!   u8 has_eventsim | [u64 max_staleness | u32 hist_len | hist u64s |
+//!                      u32 n_slots | per slot: u64 version | u8 tag |
+//!                      (tag 0: d f32 dense | tag 1: f64 mean | f64 var) |
 //!                      u32 n_links | per link: u32 src | u32 dst |
 //!                      f64 busy_until | f64 busy_seconds |
-//!                      u64 cache_version | d f32 cache |
+//!                      u64 cache_version | u32 cache_slot |
 //!                      u32 inflight_count | per msg: f64 deliver_at |
-//!                      u64 version | d f32 payload] (v5+)
+//!                      u64 version | u32 slot] (v6; v5 carried payload
+//!                      copies inline on every link instead of a slot
+//!                      table)
 //!
 //! The v3 tail carries the CommPlane's cumulative traffic counters (so a
 //! resumed run's comm_scalars/comm_msgs columns continue rather than
@@ -42,12 +46,17 @@
 //! header field stays the critical path (the barrier max), so pre-v4
 //! readers of the same quantity and pre-v4 FILES both keep their meaning.
 //!
-//! The v5 tail snapshots the event-driven async regime's per-edge
+//! The v5/v6 tail snapshots the event-driven async regime's per-edge
 //! in-flight/stale state ([`crate::eventsim::EventSimState`]): every link's
 //! newest delivered payload (+ version), its in-flight FIFO with absolute
 //! virtual delivery times, the link occupancy accounts, and the staleness
 //! histogram — so a mid-flight async run resumes bit-exactly, payloads and
-//! all. The comm block gains the overlap fallback tally.
+//! all. v6 stores payloads once, in a deduplicated slot table the links
+//! reference by index (the population plane's [`crate::params::pool`]
+//! made payload storage shared, so writing one copy per link occurrence
+//! would undo the dedup on disk — and a slot can now also be a
+//! statistical surrogate, not only a dense vector). The comm block gained
+//! the overlap fallback tally in v5.
 //!
 //! v1 files (which end after the velocity block), v2 files (which end
 //! after the RNG block), v3 files (which end after the ef block) and v4
@@ -56,7 +65,11 @@
 //! their old meaning (for v1, callers must replay the data streams
 //! themselves, as before; for pre-v3, traffic counters and residuals
 //! restart at zero; for pre-v4, every node resumes at the scalar
-//! `sim_seconds` with zeroed wait accounts).
+//! `sim_seconds` with zeroed wait accounts). v5 files load too: each
+//! inline payload copy becomes its own slot, in traversal order (links
+//! ascending, cache first, then the in-flight FIFO), so the restored
+//! engine state is value-identical — it just doesn't share storage until
+//! the next interning opportunity.
 //!
 //! No serde offline — the writer/reader below is the substrate.
 
@@ -67,11 +80,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::algorithms::AgaState;
 use crate::comm::{CommStats, Compression};
-use crate::eventsim::{EventSimState, LinkSnapshot};
+use crate::eventsim::{EventSimState, LinkSnapshot, SlotSnapshot};
+use crate::params::pool::Payload;
 use crate::params::ParamMatrix;
 
 const MAGIC: &[u8; 4] = b"GPGA";
-const VERSION: u32 = 5;
+const VERSION: u32 = 6;
 
 /// SlowMo outer-loop state (Wang et al. 2019): the parameters at the last
 /// global sync and the slow-momentum buffer.
@@ -178,6 +192,16 @@ impl Checkpoint {
             );
         }
         if let Some(es) = &self.eventsim {
+            let n_slots = es.slots.len() as u32;
+            for (idx, s) in es.slots.iter().enumerate() {
+                if let Payload::Dense(v) = &s.payload {
+                    anyhow::ensure!(
+                        v.len() == d,
+                        "eventsim slot {idx} payload is {} scalars, not d = {d}",
+                        v.len()
+                    );
+                }
+            }
             for l in &es.links {
                 anyhow::ensure!(
                     (l.src as usize) < n && (l.dst as usize) < n,
@@ -186,8 +210,9 @@ impl Checkpoint {
                     l.dst
                 );
                 anyhow::ensure!(
-                    l.cache.len() == d && l.inflight.iter().all(|(_, _, p)| p.len() == d),
-                    "eventsim payloads on link ({}, {}) are not d = {d}",
+                    l.cache_slot < n_slots
+                        && l.inflight.iter().all(|&(_, _, slot)| slot < n_slots),
+                    "eventsim link ({}, {}) references a slot outside the {n_slots} slot table",
                     l.src,
                     l.dst
                 );
@@ -259,6 +284,21 @@ impl Checkpoint {
             for c in &es.hist {
                 f.write_all(&c.to_le_bytes())?;
             }
+            f.write_all(&(es.slots.len() as u32).to_le_bytes())?;
+            for s in &es.slots {
+                f.write_all(&s.version.to_le_bytes())?;
+                match &s.payload {
+                    Payload::Dense(v) => {
+                        f.write_all(&[0u8])?;
+                        write_f32s(&mut f, v)?;
+                    }
+                    Payload::Stat { mean, var } => {
+                        f.write_all(&[1u8])?;
+                        f.write_all(&mean.to_le_bytes())?;
+                        f.write_all(&var.to_le_bytes())?;
+                    }
+                }
+            }
             f.write_all(&(es.links.len() as u32).to_le_bytes())?;
             for l in &es.links {
                 f.write_all(&l.src.to_le_bytes())?;
@@ -266,12 +306,12 @@ impl Checkpoint {
                 f.write_all(&l.busy_until.to_le_bytes())?;
                 f.write_all(&l.busy_seconds.to_le_bytes())?;
                 f.write_all(&l.cache_version.to_le_bytes())?;
-                write_f32s(&mut f, &l.cache)?;
+                f.write_all(&l.cache_slot.to_le_bytes())?;
                 f.write_all(&(l.inflight.len() as u32).to_le_bytes())?;
-                for (t, v, payload) in &l.inflight {
+                for (t, v, slot) in &l.inflight {
                     f.write_all(&t.to_le_bytes())?;
                     f.write_all(&v.to_le_bytes())?;
-                    write_f32s(&mut f, payload)?;
+                    f.write_all(&slot.to_le_bytes())?;
                 }
             }
         }
@@ -393,6 +433,21 @@ impl Checkpoint {
             for _ in 0..hist_len {
                 hist.push(read_u64(&mut f)?);
             }
+            let mut slots: Vec<SlotSnapshot> = Vec::new();
+            if version >= 6 {
+                let n_slots = read_u32(&mut f)? as usize;
+                anyhow::ensure!(n_slots < 1 << 24, "implausible slot count {n_slots}");
+                slots.reserve(n_slots);
+                for idx in 0..n_slots {
+                    let slot_version = read_u64(&mut f)?;
+                    let payload = match read_u8(&mut f)? {
+                        0 => Payload::Dense(read_f32s(&mut f, d)?),
+                        1 => Payload::Stat { mean: read_f64(&mut f)?, var: read_f64(&mut f)? },
+                        other => bail!("unknown checkpoint payload tag {other} in slot {idx}"),
+                    };
+                    slots.push(SlotSnapshot { version: slot_version, payload });
+                }
+            }
             let n_links = read_u32(&mut f)? as usize;
             anyhow::ensure!(n_links <= n * n, "implausible link count {n_links} for {n} nodes");
             let mut links = Vec::with_capacity(n_links);
@@ -402,7 +457,23 @@ impl Checkpoint {
                 let busy_until = read_f64(&mut f)?;
                 let busy_seconds = read_f64(&mut f)?;
                 let cache_version = read_u64(&mut f)?;
-                let cache = read_f32s(&mut f, d)?;
+                let cache_slot = if version >= 6 {
+                    let slot = read_u32(&mut f)?;
+                    anyhow::ensure!(
+                        (slot as usize) < slots.len(),
+                        "link ({src}, {dst}) cache references slot {slot} outside the table"
+                    );
+                    slot
+                } else {
+                    // v5 stored the payload inline; give the copy its own
+                    // slot (traversal order: links ascending, cache first).
+                    let slot = slots.len() as u32;
+                    slots.push(SlotSnapshot {
+                        version: cache_version,
+                        payload: Payload::Dense(read_f32s(&mut f, d)?),
+                    });
+                    slot
+                };
                 let inflight_count = read_u32(&mut f)? as usize;
                 anyhow::ensure!(
                     inflight_count < 1 << 20,
@@ -412,7 +483,23 @@ impl Checkpoint {
                 for _ in 0..inflight_count {
                     let t = read_f64(&mut f)?;
                     let v = read_u64(&mut f)?;
-                    inflight.push((t, v, read_f32s(&mut f, d)?));
+                    let slot = if version >= 6 {
+                        let slot = read_u32(&mut f)?;
+                        anyhow::ensure!(
+                            (slot as usize) < slots.len(),
+                            "link ({src}, {dst}) in-flight payload references slot {slot} \
+                             outside the table"
+                        );
+                        slot
+                    } else {
+                        let slot = slots.len() as u32;
+                        slots.push(SlotSnapshot {
+                            version: v,
+                            payload: Payload::Dense(read_f32s(&mut f, d)?),
+                        });
+                        slot
+                    };
+                    inflight.push((t, v, slot));
                 }
                 links.push(LinkSnapshot {
                     src,
@@ -420,11 +507,11 @@ impl Checkpoint {
                     busy_until,
                     busy_seconds,
                     cache_version,
-                    cache,
+                    cache_slot,
                     inflight,
                 });
             }
-            Some(EventSimState { max_staleness, hist, links })
+            Some(EventSimState { max_staleness, hist, slots, links })
         } else {
             None
         };
@@ -734,17 +821,24 @@ mod tests {
 
     #[test]
     fn eventsim_state_roundtrips_and_validates() {
-        // The v5 block: per-edge cache + mid-flight payloads + link
-        // occupancy + staleness histogram survive the file bit-exactly.
+        // The v6 block: the deduplicated slot table + per-edge cache /
+        // mid-flight slot references + link occupancy + staleness
+        // histogram survive the file bit-exactly. One slot is a
+        // statistical surrogate — the population plane checkpoints too.
         let d = 3;
+        let slots = vec![
+            SlotSnapshot { version: 9, payload: Payload::Dense(vec![0.5; d]) },
+            SlotSnapshot { version: 10, payload: Payload::Dense(vec![1.5; d]) },
+            SlotSnapshot { version: 11, payload: Payload::Stat { mean: -2.0, var: 0.25 } },
+        ];
         let mk_link = |src: u32, dst: u32| LinkSnapshot {
             src,
             dst,
             busy_until: 7.5,
             busy_seconds: 2.25,
             cache_version: 9,
-            cache: vec![0.5; d],
-            inflight: vec![(8.0, 10, vec![1.5; d]), (9.5, 11, vec![-2.0; d])],
+            cache_slot: 0,
+            inflight: vec![(8.0, 10, 1), (9.5, 11, 2)],
         };
         let mut ck = Checkpoint {
             step: 12,
@@ -768,6 +862,7 @@ mod tests {
             eventsim: Some(EventSimState {
                 max_staleness: 2,
                 hist: vec![40, 7, 1],
+                slots,
                 links: vec![mk_link(0, 1), mk_link(1, 0)],
             }),
         };
@@ -776,11 +871,82 @@ mod tests {
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(ck, back);
         std::fs::remove_file(path).ok();
-        // A payload of the wrong width is refused at save time.
+        // A dense slot of the wrong width is refused at save time...
+        let pristine = ck.clone();
         if let Some(es) = ck.eventsim.as_mut() {
-            es.links[0].inflight[0].2 = vec![0.0; d + 1];
+            es.slots[0].payload = Payload::Dense(vec![0.0; d + 1]);
         }
         assert!(ck.save(&tmp("evmis")).is_err());
+        // ...and so is a link pointing outside the slot table.
+        let mut ck = pristine;
+        if let Some(es) = ck.eventsim.as_mut() {
+            es.links[0].inflight[0].2 = 99;
+        }
+        assert!(ck.save(&tmp("evslot")).is_err());
+    }
+
+    #[test]
+    fn loads_v5_files_by_slotting_each_inline_payload_copy() {
+        // Hand-write the v5 eventsim tail (payload copies inline on the
+        // link): the loader must convert every occurrence to its own slot
+        // in traversal order — cache first, then the in-flight FIFO.
+        let path = tmp("v5");
+        let params = vec![0.0f32, 1.0, 2.0, 3.0]; // n=2, d=2
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"GPGA");
+        bytes.extend_from_slice(&5u32.to_le_bytes());
+        bytes.extend_from_slice(&33u64.to_le_bytes());
+        bytes.extend_from_slice(&4.0f64.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        for x in &params {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        bytes.push(0); // no velocities
+        bytes.extend_from_slice(&12u64.to_le_bytes()); // gossip clock
+        bytes.push(0); // no schedule
+        bytes.push(0); // no slowmo
+        bytes.push(0); // no rng
+        bytes.push(0); // no comm
+        bytes.push(0); // no ef residuals
+        bytes.push(0); // no clocks
+        bytes.push(1); // eventsim present — the v5 inline layout
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // max_staleness
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // hist_len
+        bytes.extend_from_slice(&4u64.to_le_bytes());
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // one link
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // src
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // dst
+        bytes.extend_from_slice(&1.5f64.to_le_bytes()); // busy_until
+        bytes.extend_from_slice(&0.5f64.to_le_bytes()); // busy_seconds
+        bytes.extend_from_slice(&3u64.to_le_bytes()); // cache_version
+        for x in [0.25f32, -0.25] {
+            bytes.extend_from_slice(&x.to_le_bytes()); // inline cache
+        }
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // one in-flight msg
+        bytes.extend_from_slice(&2.0f64.to_le_bytes()); // deliver_at
+        bytes.extend_from_slice(&4u64.to_le_bytes()); // version
+        for x in [1.0f32, 2.0] {
+            bytes.extend_from_slice(&x.to_le_bytes()); // inline payload
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let es = back.eventsim.unwrap();
+        assert_eq!(es.max_staleness, 2);
+        assert_eq!(es.hist, vec![4, 1]);
+        assert_eq!(
+            es.slots,
+            vec![
+                SlotSnapshot { version: 3, payload: Payload::Dense(vec![0.25, -0.25]) },
+                SlotSnapshot { version: 4, payload: Payload::Dense(vec![1.0, 2.0]) },
+            ]
+        );
+        assert_eq!(es.links.len(), 1);
+        assert_eq!((es.links[0].src, es.links[0].dst), (0, 1));
+        assert_eq!(es.links[0].cache_slot, 0);
+        assert_eq!(es.links[0].inflight, vec![(2.0, 4, 1)]);
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

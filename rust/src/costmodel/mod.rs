@@ -289,6 +289,76 @@ impl NodeCosts {
     }
 }
 
+/// Per-region latency tiers for the virtual population plane: nodes are
+/// assigned to k contiguous regions, and a directed transfer from node a
+/// to node b multiplies its traversal time by `mult[region(a)][region(b)]`
+/// — the "replicas in different datacenters" scenario (intra-region links
+/// fast, inter-region links slow) that SGP/GossipGraD run on real
+/// clusters. O(n + k^2) memory, O(1) lookup: safe at n = 10^5.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegionMap {
+    /// Node -> region id (length n).
+    region: Vec<u32>,
+    /// Row-major k x k traversal multiplier table.
+    mult: Vec<f64>,
+    k: usize,
+}
+
+impl RegionMap {
+    /// n nodes in k contiguous, near-equal blocks; links inside a region
+    /// multiply traversal by `intra`, links across regions by `inter`.
+    pub fn tiers(n: usize, k: usize, intra: f64, inter: f64) -> Result<RegionMap> {
+        if k == 0 || k > n {
+            bail!("region count {k} must be in 1..={n}");
+        }
+        for (name, f) in [("intra", intra), ("inter", inter)] {
+            if !(f.is_finite() && f > 0.0) {
+                bail!("{name}-region factor must be finite and positive, got {f}");
+            }
+        }
+        let per = n.div_ceil(k);
+        let region = (0..n).map(|i| (i / per) as u32).collect();
+        let mut mult = vec![inter; k * k];
+        for r in 0..k {
+            mult[r * k + r] = intra;
+        }
+        Ok(RegionMap { region, mult, k })
+    }
+
+    /// Explicit assignment + multiplier table (row-major k x k).
+    pub fn from_parts(region: Vec<u32>, mult: Vec<f64>, k: usize) -> Result<RegionMap> {
+        if k == 0 || mult.len() != k * k {
+            bail!("region multiplier table must be {k} x {k}, got {} entries", mult.len());
+        }
+        if let Some(bad) = region.iter().find(|&&r| r as usize >= k) {
+            bail!("node assigned to region {bad}, table has {k} regions");
+        }
+        if let Some(bad) = mult.iter().find(|f| !(f.is_finite() && **f > 0.0)) {
+            bail!("region multiplier must be finite and positive, got {bad}");
+        }
+        Ok(RegionMap { region, mult, k })
+    }
+
+    /// Nodes covered by the map.
+    pub fn n(&self) -> usize {
+        self.region.len()
+    }
+
+    pub fn regions(&self) -> usize {
+        self.k
+    }
+
+    /// Node a's region id.
+    pub fn region_of(&self, a: usize) -> usize {
+        self.region[a] as usize
+    }
+
+    /// Traversal multiplier for a directed a -> b transfer.
+    pub fn factor(&self, a: usize, b: usize) -> f64 {
+        self.mult[self.region[a] as usize * self.k + self.region[b] as usize]
+    }
+}
+
 /// Which nodes a clock advance synchronizes before it runs — the
 /// [`VirtualClocks`] counterpart of a communication action's wait set.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -339,6 +409,23 @@ impl VirtualClocks {
             seconds: vec![0.0; n],
             waited: vec![0.0; n],
             neigh,
+            starts: vec![0.0; n],
+        }
+    }
+
+    /// A clock plane with NO neighborhood tables — for billing paths that
+    /// only use [`VirtualClocks::advance_one`] / [`VirtualClocks::stall_until`]
+    /// (plus `Global`/`None` scopes). The per-round in-neighbor tables that
+    /// [`VirtualClocks::new`] precomputes cost O(n * rounds * degree)
+    /// memory, which at n = 10^5 on one-peer-expo is the largest allocation
+    /// in a sweep; the population plane bills per event and never takes a
+    /// `Neighborhood` barrier, so it skips them. Calling `advance` with
+    /// `BarrierScope::Neighborhood` on a flat plane panics (empty table).
+    pub fn flat(n: usize) -> VirtualClocks {
+        VirtualClocks {
+            seconds: vec![0.0; n],
+            waited: vec![0.0; n],
+            neigh: Vec::new(),
             starts: vec![0.0; n],
         }
     }
@@ -699,5 +786,55 @@ mod tests {
         fresh.restore_uniform(9.0);
         assert_eq!(fresh.seconds(), &[9.0, 9.0, 9.0][..]);
         assert_eq!(fresh.total_wait(), 0.0);
+    }
+
+    #[test]
+    fn flat_clocks_bill_per_event_without_neighbor_tables() {
+        let mut clocks = VirtualClocks::flat(4);
+        assert_eq!(clocks.n(), 4);
+        clocks.advance_one(2, 1.5);
+        clocks.advance_one(2, 0.5);
+        clocks.stall_until(0, 3.0);
+        assert_eq!(clocks.seconds()[2], 2.0);
+        assert_eq!(clocks.seconds()[0], 3.0);
+        assert_eq!(clocks.waited()[0], 3.0);
+        assert_eq!(clocks.total_wait(), 3.0);
+        // Global barriers still work on a flat plane (no tables needed).
+        clocks.advance(&[0.0; 4], &[1.0; 4], BarrierScope::Global);
+        assert_eq!(clocks.slack(), 0.0);
+        assert_eq!(clocks.max_seconds(), 4.0);
+    }
+
+    #[test]
+    fn region_tiers_partition_nodes_and_scale_cross_links() {
+        let map = RegionMap::tiers(10, 3, 1.0, 8.0).unwrap();
+        assert_eq!(map.n(), 10);
+        assert_eq!(map.regions(), 3);
+        // ceil(10/3) = 4 nodes per block: [0..4), [4..8), [8..10).
+        assert_eq!(map.region_of(0), 0);
+        assert_eq!(map.region_of(3), 0);
+        assert_eq!(map.region_of(4), 1);
+        assert_eq!(map.region_of(9), 2);
+        assert_eq!(map.factor(0, 3), 1.0, "intra-region");
+        assert_eq!(map.factor(0, 4), 8.0, "cross-region");
+        assert_eq!(map.factor(9, 1), 8.0);
+        assert_eq!(map.factor(8, 9), 1.0);
+    }
+
+    #[test]
+    fn region_map_validates_inputs() {
+        assert!(RegionMap::tiers(4, 0, 1.0, 2.0).is_err(), "k = 0");
+        assert!(RegionMap::tiers(4, 5, 1.0, 2.0).is_err(), "k > n");
+        assert!(RegionMap::tiers(4, 2, 0.0, 2.0).is_err(), "zero factor");
+        assert!(RegionMap::tiers(4, 2, 1.0, f64::NAN).is_err(), "NaN factor");
+        assert!(RegionMap::from_parts(vec![0, 1], vec![1.0; 3], 2).is_err(), "table not k x k");
+        assert!(RegionMap::from_parts(vec![0, 2], vec![1.0; 4], 2).is_err(), "region id >= k");
+        assert!(
+            RegionMap::from_parts(vec![0, 1], vec![1.0, -1.0, 1.0, 1.0], 2).is_err(),
+            "negative multiplier"
+        );
+        let ok = RegionMap::from_parts(vec![1, 0], vec![1.0, 3.0, 5.0, 1.0], 2).unwrap();
+        assert_eq!(ok.factor(0, 1), 5.0, "row-major [region(a)][region(b)]");
+        assert_eq!(ok.factor(1, 0), 3.0);
     }
 }

@@ -9,12 +9,12 @@
 //! "Event-driven gossip billing"): a binary-heap event queue over typed
 //! events — a node finishing its local update ([`Ev`] `READY`), a payload
 //! completing its traversal of one directed link (`DELIVER`), a node
-//! attempting its mix (`MIX`) — billed from [`NodeCosts`] per LINK, with an
-//! [`AsyncGossip`] training regime on top (`train.regime async` /
-//! `--regime async`) in which each node runs its own iteration counter,
-//! pushes its post-update iterate to its out-neighbors as transfers
-//! complete, and mixes whatever bounded-stale neighbor copies have arrived
-//! (`--max-staleness`).
+//! attempting its mix (`MIX`), a scripted population change (`CHURN`) —
+//! billed from [`NodeCosts`] per LINK, with an [`AsyncGossip`] training
+//! regime on top (`train.regime async` / `--regime async`) in which each
+//! node runs its own iteration counter, pushes its post-update iterate to
+//! its out-neighbors as transfers complete, and mixes whatever
+//! bounded-stale neighbor copies have arrived (`--max-staleness`).
 //!
 //! §Semantics. Node j's *version-v payload* is its post-update, pre-mix
 //! iterate of iteration v-1 (versions are 1-based so the broadcast initial
@@ -31,7 +31,40 @@
 //! analysis needs. Eval, logging and checkpointing likewise drain: the
 //! trainer's [`AsyncGossip::run_until`] leaves every node at the same
 //! iteration count, so snapshots are always step boundaries (in-flight
-//! payloads are snapshot/restored — checkpoint v5 — not dropped).
+//! payloads are snapshot/restored — checkpoint v5/v6 — not dropped).
+//!
+//! §Population plane (PR 6). Node identity is split from payload storage:
+//!
+//! * **Materialized workers** (today's behavior, [`AsyncGossip::new`]) own
+//!   a [`ParamMatrix`] row and run real gradient steps through the
+//!   [`CommBackend`]. Their link caches and in-flight messages now hold
+//!   [`PayloadHandle`]s into a ref-counted [`PayloadPool`] interned by
+//!   `(src, version)` — one payload per pushed iterate instead of one copy
+//!   per directed edge — without changing a single parameter, clock, or
+//!   traffic bit (interned payloads are byte-identical by construction;
+//!   the async regime rejects compression, so one version of one node is
+//!   one byte pattern).
+//! * **Virtual nodes** ([`AsyncGossip::new_virtual`]) carry the full
+//!   event-plane state — clocks, staleness, link occupancy, traffic
+//!   accounting — but no model: their "training" is a deterministic AR(1)
+//!   drift (dense at a small `--dim`, or the `(mean, var)` statistical
+//!   surrogate when `--surrogate` / `dim = 0` is set), so the engine
+//!   reaches n = 10^5 in O(n + edges) memory with **zero** dense scalars
+//!   allocated in surrogate mode (asserted via the pool's audit
+//!   counters). Virtual runs support scripted churn ([`ChurnEvent`]:
+//!   crash, rejoin, flaky-link, restore — the SGP/GossipGraD scenarios)
+//!   and per-region latency tiers ([`RegionMap`]); traffic is
+//!   self-accounted into a [`CommStats`] total since no backend exists at
+//!   that scale.
+//!
+//! Churn semantics: a crashed node freezes (its iteration counter stops;
+//! a crash mid-iteration loses the in-progress work, which is redone on
+//! rejoin — earlier in-flight payloads still deliver and are deduped by
+//! version). Crashed senders stop gating their receivers' staleness bound,
+//! and global-average barriers synchronize the *alive* population only; a
+//! node that rejoins behind an already-resolved barrier skips it
+//! (`missed_barriers` counts these). A rejoining node's offline span lands
+//! in its wait column (`stall_until`), so slack accounting still closes.
 //!
 //! §Billing, two modes.
 //!
@@ -49,36 +82,41 @@
 //! * **`max_staleness >= 1` (event billing).** Transfers ride the links in
 //!   the background: a push bills the sender `alpha_src` per message on
 //!   its own clock (send initiation), then occupies the directed link for
-//!   `theta_src * cost_dim` seconds — messages on one link serialize
-//!   through its `busy_until` horizon, which is what the per-link
-//!   utilization metric measures — and is delivered when the traversal
-//!   completes. Compute is billed per node as it happens. Only a violated
-//!   staleness bound puts a transfer back on a node's critical path, which
-//!   is how async gossip hides stragglers and link latency that the
-//!   neighborhood barrier must expose (GossipGraD, Daily et al. 2018;
-//!   SGP, Assran et al. 2019) — `benches/tab17_comm_overhead.rs` gates
-//!   async's critical path <= the neighborhood-barrier bill under seeded
-//!   stragglers.
+//!   `theta_src * cost_dim` seconds — scaled by the link's flaky
+//!   multiplier and the sender→receiver region factor on the virtual
+//!   plane — messages on one link serialize through its `busy_until`
+//!   horizon, which is what the per-link utilization metric measures —
+//!   and is delivered when the traversal completes. Compute is billed per
+//!   node as it happens. Only a violated staleness bound puts a transfer
+//!   back on a node's critical path, which is how async gossip hides
+//!   stragglers and link latency that the neighborhood barrier must
+//!   expose (GossipGraD, Daily et al. 2018; SGP, Assran et al. 2019) —
+//!   `benches/tab17_comm_overhead.rs` gates async's critical path <= the
+//!   neighborhood-barrier bill under seeded stragglers.
 //!
 //! §Determinism. Virtual times are exact f64 arithmetic on the cost
 //! tables; the heap orders events by `(time, kind, src, dst, seq)` with
 //! `f64::total_cmp`, so the event order is a pure function of the
 //! configuration — identical at any worker-pool size (the pool only
 //! shards the *real* gradient work, whose per-node arithmetic is
-//! order-independent). `rust/tests/eventsim.rs` asserts trace equality
-//! across pool sizes.
+//! order-independent), and identical across replays of the same churn
+//! script (the churn gate in `rust/tests/population.rs`). Churn events at
+//! a node-event's exact instant process after it (CHURN is the
+//! highest-numbered kind).
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use anyhow::{bail, ensure, Result};
 
 use crate::algorithms::{AlgorithmKind, CommAction, FixedSchedule, Schedule};
 use crate::comm::{CommBackend, CommStats};
 use crate::coordinator::mixer::{mix_row_src, weight_rows_f32};
-use crate::costmodel::{BarrierScope, NodeCosts, VirtualClocks};
+use crate::costmodel::{BarrierScope, NodeCosts, RegionMap, VirtualClocks};
 use crate::exec::WorkerPool;
+use crate::params::pool::{Payload, PayloadHandle, PayloadPool};
 use crate::params::ParamMatrix;
+use crate::rng::Rng;
 use crate::topology::Topology;
 
 /// Which execution regime drives the trainer's step loop
@@ -119,14 +157,17 @@ impl Regime {
 }
 
 /// Event kinds, in processing-priority order at equal times: a delivery at
-/// time t is visible to a mix attempted at t.
+/// time t is visible to a mix attempted at t; churn at t applies after the
+/// node events of that instant.
 const EV_DELIVER: u8 = 0;
 const EV_MIX: u8 = 1;
 const EV_READY: u8 = 2;
+const EV_CHURN: u8 = 3;
 
 /// One queued event. Total order: `(time, kind, a, b, seq)` — `a`/`b` are
-/// `(src, dst)` for deliveries and `(node, 0)` otherwise; `seq` is a
-/// global monotone stamp that only breaks exact ties.
+/// `(src, dst)` for deliveries, `(node, generation)` for virtual-plane
+/// READY/MIX, `(script index, 0)` for churn, and `(node, 0)` otherwise;
+/// `seq` is a global monotone stamp that only breaks exact ties.
 #[derive(Clone, Copy, Debug, PartialEq)]
 struct Ev {
     time: f64,
@@ -165,30 +206,92 @@ pub struct TraceEv {
     pub time_bits: u64,
 }
 
-/// An in-flight message on one directed link.
-#[derive(Clone, Debug, PartialEq)]
+/// One scripted population change on the virtual plane. Times are virtual
+/// seconds; node/link identities are validated at construction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChurnEvent {
+    /// Node leaves the population: its clock freezes, its in-progress
+    /// iteration is lost (redone on rejoin), its receivers stop waiting
+    /// for it.
+    Crash { at: f64, node: usize },
+    /// Node returns: its offline span accrues to its wait account, and it
+    /// resumes at its frozen iteration counter (skipping any barrier the
+    /// live population resolved while it was away).
+    Rejoin { at: f64, node: usize },
+    /// The directed link slows by `factor` (> 1) or speeds up (< 1): every
+    /// subsequent traversal takes `factor * theta_src * cost_dim` seconds.
+    FlakyLink { at: f64, src: usize, dst: usize, factor: f64 },
+    /// The directed link returns to its nominal speed.
+    LinkRestore { at: f64, src: usize, dst: usize },
+}
+
+impl ChurnEvent {
+    pub fn at(&self) -> f64 {
+        match *self {
+            ChurnEvent::Crash { at, .. }
+            | ChurnEvent::Rejoin { at, .. }
+            | ChurnEvent::FlakyLink { at, .. }
+            | ChurnEvent::LinkRestore { at, .. } => at,
+        }
+    }
+}
+
+/// Configuration of a virtual population (see
+/// [`AsyncGossip::new_virtual`]).
+#[derive(Clone, Debug, Default)]
+pub struct VirtualConfig {
+    /// Dense drift dimension; 0 selects the `(mean, var)` statistical
+    /// surrogate (no dense scalar is ever allocated).
+    pub dim: usize,
+    /// Seeds the initial population state and the per-(node, iteration)
+    /// drift — the whole sweep is a pure function of (config, seed).
+    pub seed: u64,
+    /// Scripted churn; validated (and rejected with a clear message)
+    /// before any event runs.
+    pub churn: Vec<ChurnEvent>,
+    /// Optional per-region latency tiers multiplying link traversal times.
+    pub regions: Option<RegionMap>,
+}
+
+/// An in-flight message on one directed link. `tx` is the traversal time
+/// billed to the link's occupancy at delivery (already scaled by the
+/// flaky/region multipliers in force when the push was issued).
+#[derive(Debug)]
 struct Msg {
     deliver_at: f64,
     version: u64,
-    payload: Vec<f32>,
+    payload: PayloadHandle,
+    tx: f64,
 }
 
 /// Per-directed-link state: the serialization horizon, the completed-
 /// traversal occupancy the utilization column reads (accrued at delivery,
-/// so in-flight time never counts), the newest *delivered* payload, and
-/// the in-flight FIFO (delivery times are monotone per link).
-#[derive(Clone, Debug)]
+/// so in-flight time never counts), the newest *delivered* payload (a pool
+/// handle, not a copy), and the in-flight FIFO (delivery times are
+/// monotone per link).
+#[derive(Debug)]
 struct Link {
     src: usize,
     dst: usize,
     busy_until: f64,
     busy_seconds: f64,
     cache_version: u64,
-    cache: Vec<f32>,
+    cache: PayloadHandle,
+    /// Flaky-link traversal multiplier (1.0 nominal), set by churn.
+    tx_mult: f64,
     inflight: VecDeque<Msg>,
 }
 
-/// Checkpointable snapshot of one link (v5 wire form).
+/// One checkpointed payload slot (v6 wire form): the slot table is the
+/// deduplicated storage plane, referenced by index from every link.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlotSnapshot {
+    pub version: u64,
+    pub payload: Payload,
+}
+
+/// Checkpointable snapshot of one link (v6 wire form): payloads are slot
+/// indices into [`EventSimState::slots`].
 #[derive(Clone, Debug, PartialEq)]
 pub struct LinkSnapshot {
     pub src: u32,
@@ -196,39 +299,122 @@ pub struct LinkSnapshot {
     pub busy_until: f64,
     pub busy_seconds: f64,
     pub cache_version: u64,
-    pub cache: Vec<f32>,
-    /// `(deliver_at, version, payload)` in FIFO order.
-    pub inflight: Vec<(f64, u64, Vec<f32>)>,
+    pub cache_slot: u32,
+    /// `(deliver_at, version, slot)` in FIFO order.
+    pub inflight: Vec<(f64, u64, u32)>,
 }
 
 /// Checkpointable engine state (the per-edge in-flight/stale block of
-/// checkpoint v5). Exported at drained boundaries only, so no per-node
-/// iteration counters are needed — every node sits at the trainer's step.
+/// checkpoint v6; v5 files are converted on load). Exported at drained
+/// boundaries only, so no per-node iteration counters are needed — every
+/// node sits at the trainer's step. Slot order is canonical first-seen
+/// (links ascending, cache then inflight FIFO), so export is a pure
+/// function of engine state.
 #[derive(Clone, Debug, PartialEq)]
 pub struct EventSimState {
     pub max_staleness: u64,
     /// Staleness histogram: `hist[s]` mixes used a copy s versions old.
     pub hist: Vec<u64>,
+    /// Deduplicated payload storage referenced by the links.
+    pub slots: Vec<SlotSnapshot>,
     /// Links in ascending `(src, dst)` order — the engine's edge order.
     pub links: Vec<LinkSnapshot>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 enum NodeState {
-    /// Waiting for the horizon to rise (between `run_until` calls).
+    /// Waiting for the horizon to rise (between `run_until` calls), or
+    /// crashed.
     Parked,
     /// A READY or MIX event for this node is in the heap.
     Scheduled,
-    /// Mix blocked on the staleness bound; resumed by a delivery.
+    /// Mix blocked on the staleness bound; resumed by a delivery (or by
+    /// the blocking sender crashing).
     Waiting,
     /// Halted at a global-average barrier.
     Barrier,
 }
 
+/// The virtual population's drift/accounting state (absent on the
+/// materialized plane).
+struct VirtPlane {
+    surrogate: bool,
+    /// Dense drift state (n x dim) when `!surrogate`; 0 x 0 otherwise.
+    state: ParamMatrix,
+    /// Surrogate per-node mean/variance when `surrogate`.
+    smean: Vec<f64>,
+    svar: Vec<f64>,
+    seed: u64,
+    /// Self-accounted traffic (no backend exists at population scale).
+    stats: CommStats,
+    crashes: u64,
+    rejoins: u64,
+    link_events: u64,
+    missed_barriers: u64,
+}
+
+/// Per-round static graph plan shared by both constructors.
+struct GraphPlan {
+    rounds: usize,
+    rows: Vec<Vec<Vec<(usize, f32)>>>,
+    edges: Vec<(usize, usize)>,
+    out_edges: Vec<Vec<Vec<(usize, usize)>>>,
+    in_links: Vec<Vec<Vec<(usize, usize)>>>,
+}
+
+fn plan_graph(topo: &Topology) -> GraphPlan {
+    let n = topo.n;
+    let rounds = topo.rounds();
+    let rows = weight_rows_f32(topo);
+    let inn: Vec<Vec<Vec<usize>>> = (0..rounds)
+        .map(|r| {
+            (0..n)
+                .map(|i| topo.in_neighbors(i, r).into_iter().filter(|&j| j != i).collect())
+                .collect()
+        })
+        .collect();
+    let outn: Vec<Vec<Vec<usize>>> =
+        (0..rounds).map(|r| (0..n).map(|j| topo.out_neighbors(j, r)).collect()).collect();
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    for per_round in &outn {
+        for (src, dsts) in per_round.iter().enumerate() {
+            for &dst in dsts {
+                edges.push((src, dst));
+            }
+        }
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    let out_edges: Vec<Vec<Vec<(usize, usize)>>> = outn
+        .iter()
+        .map(|per_node| {
+            per_node
+                .iter()
+                .enumerate()
+                .map(|(src, dsts)| {
+                    dsts.iter().map(|&dst| (dst, edge_index(&edges, src, dst))).collect()
+                })
+                .collect()
+        })
+        .collect();
+    let in_links: Vec<Vec<Vec<(usize, usize)>>> = inn
+        .iter()
+        .map(|per_node| {
+            per_node
+                .iter()
+                .enumerate()
+                .map(|(i, js)| js.iter().map(|&j| (j, edge_index(&edges, j, i))).collect())
+                .collect()
+        })
+        .collect();
+    GraphPlan { rounds, rows, edges, out_edges, in_links }
+}
+
 /// The event-driven asynchronous gossip engine (see module docs). Owns
-/// virtual-time state and the per-edge payload plane; real gradient work
+/// virtual-time state and the pooled payload plane; real gradient work
 /// and the global average are delegated to the caller through `step_fn` /
-/// the [`CommBackend`].
+/// the [`CommBackend`] (materialized plane), or replaced by the drift
+/// model (virtual plane).
 pub struct AsyncGossip {
     n: usize,
     d: usize,
@@ -240,7 +426,11 @@ pub struct AsyncGossip {
     rounds: usize,
     rows: Vec<Vec<Vec<(usize, f32)>>>,
     alpha: Vec<f64>,
-    /// Per-sender link occupancy of one payload: `theta_src * cost_dim`.
+    theta: Vec<f64>,
+    compute: Vec<f64>,
+    cost_dim: usize,
+    /// Per-sender nominal link occupancy of one payload:
+    /// `theta_src * cost_dim` (before flaky/region multipliers).
     tx_seconds: Vec<f64>,
     /// Directed edges, ascending `(src, dst)`; `links` is index-aligned.
     edges: Vec<(usize, usize)>,
@@ -252,13 +442,33 @@ pub struct AsyncGossip {
     /// neighbor -> cache resolution, search-free.
     in_links: Vec<Vec<Vec<(usize, usize)>>>,
     links: Vec<Link>,
+    /// Ref-counted payload storage behind every link cache and message.
+    store: PayloadPool,
+    /// Intern payloads by `(src, version)` (one slot per pushed iterate).
+    /// Always on in production; the off switch exists so tests can prove
+    /// pool shape never changes a bit.
+    intern: bool,
     done: Vec<usize>,
     round_ctr: Vec<usize>,
     state: Vec<NodeState>,
+    /// Population membership; all-true (and constant) on the materialized
+    /// plane.
+    alive: Vec<bool>,
+    alive_count: usize,
+    /// Per-node event generation: bumped on every crash/rejoin so stale
+    /// READY/MIX events left in the heap by a churned node are skipped.
+    gen: Vec<u32>,
+    virt: Option<VirtPlane>,
+    regions: Option<RegionMap>,
+    churn: Vec<ChurnEvent>,
+    /// Iterations whose global-average barrier has resolved (rejoiners
+    /// behind this skip the barrier and count a miss).
+    barrier_epoch: u64,
     heap: BinaryHeap<Reverse<Ev>>,
     seq: u64,
     /// Nodes whose READY is scheduled but whose gradient has not run yet;
-    /// flushed as one pool batch at the next READY pop.
+    /// flushed as one pool batch at the next READY pop (materialized
+    /// plane only).
     pending_exec: Vec<(usize, usize)>,
     barrier_waiting: usize,
     hist: Vec<u64>,
@@ -277,10 +487,11 @@ fn max_of(xs: &[f64]) -> f64 {
 }
 
 impl AsyncGossip {
-    /// Build the engine for `topo` under `costs`. `init` seeds every link
-    /// cache with the broadcast initial parameters (version 0), exactly
-    /// what a fresh BSP run would transmit first. `kind`/`h` select the
-    /// fixed communication schedule.
+    /// Build the materialized engine for `topo` under `costs`. `init`
+    /// seeds every link cache with the broadcast initial parameters
+    /// (version 0), exactly what a fresh BSP run would transmit first.
+    /// `kind`/`h` select the fixed communication schedule.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         topo: &Topology,
         costs: &NodeCosts,
@@ -291,9 +502,124 @@ impl AsyncGossip {
         h: usize,
         init: &ParamMatrix,
     ) -> Result<AsyncGossip> {
+        Self::new_with_storage(topo, costs, d, cost_dim, max_staleness, kind, h, init, true)
+    }
+
+    /// [`AsyncGossip::new`] with the payload-intern switch exposed
+    /// (`intern = false` gives every link its own slot — the PR 5 storage
+    /// shape — so tests can assert pooling changes no bit).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_with_storage(
+        topo: &Topology,
+        costs: &NodeCosts,
+        d: usize,
+        cost_dim: usize,
+        max_staleness: usize,
+        kind: AlgorithmKind,
+        h: usize,
+        init: &ParamMatrix,
+        intern: bool,
+    ) -> Result<AsyncGossip> {
+        let n = topo.n;
+        ensure!(init.n() == n && init.d() == d, "init params must be {n} x {d}");
+        let mut seed_cache = |store: &mut PayloadPool, src: usize| {
+            if intern {
+                store.intern_dense(src as u32, 0, || init.row(src).to_vec())
+            } else {
+                store.insert_dense(0, init.row(src).to_vec())
+            }
+        };
+        Self::assemble(
+            topo,
+            costs,
+            d,
+            cost_dim,
+            max_staleness,
+            kind,
+            h,
+            intern,
+            None,
+            None,
+            Vec::new(),
+            &mut seed_cache,
+        )
+    }
+
+    /// Build a virtual population: n nodes with full event/clock/traffic
+    /// state but pooled drift payloads instead of model rows — the
+    /// configuration that reaches n = 10^5 (see module docs §Population
+    /// plane). Drive it with [`AsyncGossip::run_virtual_until`].
+    pub fn new_virtual(
+        topo: &Topology,
+        costs: &NodeCosts,
+        cost_dim: usize,
+        max_staleness: usize,
+        kind: AlgorithmKind,
+        h: usize,
+        cfg: VirtualConfig,
+    ) -> Result<AsyncGossip> {
+        let n = topo.n;
+        let surrogate = cfg.dim == 0;
+        let (smean, svar, state) = if surrogate {
+            let mut r = Rng::new(cfg.seed);
+            let smean: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+            (smean, vec![0.0; n], ParamMatrix::zeros(0, 0))
+        } else {
+            let state = ParamMatrix::random(&mut Rng::new(cfg.seed), n, cfg.dim, 1.0);
+            (Vec::new(), Vec::new(), state)
+        };
+        let virt = VirtPlane {
+            surrogate,
+            state: state.clone(),
+            smean: smean.clone(),
+            svar,
+            seed: cfg.seed,
+            stats: CommStats::default(),
+            crashes: 0,
+            rejoins: 0,
+            link_events: 0,
+            missed_barriers: 0,
+        };
+        let mut seed_cache = |store: &mut PayloadPool, src: usize| {
+            if surrogate {
+                store.intern_stat(src as u32, 0, smean[src], 0.0)
+            } else {
+                store.intern_dense(src as u32, 0, || state.row(src).to_vec())
+            }
+        };
+        Self::assemble(
+            topo,
+            costs,
+            cfg.dim,
+            cost_dim,
+            max_staleness,
+            kind,
+            h,
+            true,
+            Some(virt),
+            cfg.regions,
+            cfg.churn,
+            &mut seed_cache,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        topo: &Topology,
+        costs: &NodeCosts,
+        d: usize,
+        cost_dim: usize,
+        max_staleness: usize,
+        kind: AlgorithmKind,
+        h: usize,
+        intern: bool,
+        virt: Option<VirtPlane>,
+        regions: Option<RegionMap>,
+        churn: Vec<ChurnEvent>,
+        seed_cache: &mut dyn FnMut(&mut PayloadPool, usize) -> PayloadHandle,
+    ) -> Result<AsyncGossip> {
         let n = topo.n;
         ensure!(costs.n() == n, "cost table covers {} nodes, topology has {n}", costs.n());
-        ensure!(init.n() == n && init.d() == d, "init params must be {n} x {d}");
         if kind == AlgorithmKind::GossipAga {
             bail!(
                 "the async regime supports fixed schedules only — Gossip-AGA adapts its \
@@ -301,55 +627,47 @@ impl AsyncGossip {
                  without a global step (use --regime bsp or overlap)"
             );
         }
+        if let Some(r) = &regions {
+            ensure!(r.n() == n, "region map covers {} nodes, topology has {n}", r.n());
+        }
         let fs = FixedSchedule::for_kind(kind, h)?;
-        let rounds = topo.rounds();
-        let rows = weight_rows_f32(topo);
-        let inn: Vec<Vec<Vec<usize>>> = (0..rounds)
-            .map(|r| {
-                (0..n)
-                    .map(|i| {
-                        topo.in_neighbors(i, r).into_iter().filter(|&j| j != i).collect()
-                    })
-                    .collect()
-            })
-            .collect();
-        let outn: Vec<Vec<Vec<usize>>> =
-            (0..rounds).map(|r| (0..n).map(|j| topo.out_neighbors(j, r)).collect()).collect();
-        let mut edges: Vec<(usize, usize)> = Vec::new();
-        for per_round in &outn {
-            for (src, dsts) in per_round.iter().enumerate() {
-                for &dst in dsts {
-                    edges.push((src, dst));
+        let plan = plan_graph(topo);
+        for (idx, ev) in churn.iter().enumerate() {
+            let at = ev.at();
+            ensure!(at.is_finite() && at >= 0.0, "churn event {idx}: time {at} must be >= 0");
+            match *ev {
+                ChurnEvent::Crash { node, .. } | ChurnEvent::Rejoin { node, .. } => {
+                    ensure!(node < n, "churn event {idx}: node {node} out of range for {n} nodes");
+                }
+                ChurnEvent::FlakyLink { src, dst, factor, .. } => {
+                    ensure!(
+                        src < n && dst < n,
+                        "churn event {idx}: link ({src}, {dst}) out of range for {n} nodes"
+                    );
+                    ensure!(
+                        plan.edges.binary_search(&(src, dst)).is_ok(),
+                        "churn event {idx}: ({src}, {dst}) is not a gossip edge of this topology"
+                    );
+                    ensure!(
+                        factor.is_finite() && factor > 0.0,
+                        "churn event {idx}: flaky factor {factor} must be finite and positive"
+                    );
+                }
+                ChurnEvent::LinkRestore { src, dst, .. } => {
+                    ensure!(
+                        src < n && dst < n,
+                        "churn event {idx}: link ({src}, {dst}) out of range for {n} nodes"
+                    );
+                    ensure!(
+                        plan.edges.binary_search(&(src, dst)).is_ok(),
+                        "churn event {idx}: ({src}, {dst}) is not a gossip edge of this topology"
+                    );
                 }
             }
         }
-        edges.sort_unstable();
-        edges.dedup();
-        let out_edges: Vec<Vec<Vec<(usize, usize)>>> = outn
-            .iter()
-            .map(|per_node| {
-                per_node
-                    .iter()
-                    .enumerate()
-                    .map(|(src, dsts)| {
-                        dsts.iter().map(|&dst| (dst, edge_index(&edges, src, dst))).collect()
-                    })
-                    .collect()
-            })
-            .collect();
-        let in_links: Vec<Vec<Vec<(usize, usize)>>> = inn
-            .iter()
-            .map(|per_node| {
-                per_node
-                    .iter()
-                    .enumerate()
-                    .map(|(i, js)| {
-                        js.iter().map(|&j| (j, edge_index(&edges, j, i))).collect()
-                    })
-                    .collect()
-            })
-            .collect();
-        let links = edges
+        let mut store = PayloadPool::new(d);
+        let links: Vec<Link> = plan
+            .edges
             .iter()
             .map(|&(src, dst)| Link {
                 src,
@@ -357,27 +675,40 @@ impl AsyncGossip {
                 busy_until: 0.0,
                 busy_seconds: 0.0,
                 cache_version: 0,
-                cache: init.row(src).to_vec(),
+                cache: seed_cache(&mut store, src),
+                tx_mult: 1.0,
                 inflight: VecDeque::new(),
             })
             .collect();
         let tx_seconds = (0..n).map(|i| costs.theta[i] * cost_dim as f64).collect();
-        Ok(AsyncGossip {
+        let mut eng = AsyncGossip {
             n,
             d,
             max_staleness,
             sched: fs,
-            rounds,
-            rows,
+            rounds: plan.rounds,
+            rows: plan.rows,
             alpha: costs.alpha.clone(),
+            theta: costs.theta.clone(),
+            compute: costs.compute.clone(),
+            cost_dim,
             tx_seconds,
-            edges,
-            out_edges,
-            in_links,
+            edges: plan.edges,
+            out_edges: plan.out_edges,
+            in_links: plan.in_links,
             links,
+            store,
+            intern,
             done: vec![0; n],
             round_ctr: vec![0; n],
             state: vec![NodeState::Parked; n],
+            alive: vec![true; n],
+            alive_count: n,
+            gen: vec![0; n],
+            virt,
+            regions,
+            churn,
+            barrier_epoch: 0,
             heap: BinaryHeap::new(),
             seq: 0,
             pending_exec: Vec::new(),
@@ -387,7 +718,12 @@ impl AsyncGossip {
             scratch: vec![0.0; d],
             trace: None,
             strict: max_staleness == 0,
-        })
+        };
+        for idx in 0..eng.churn.len() {
+            let t = eng.churn[idx].at();
+            eng.push_ev(t, EV_CHURN, idx, 0);
+        }
+        Ok(eng)
     }
 
     /// The fixed schedule's action at iteration k — delegated to THE
@@ -402,6 +738,12 @@ impl AsyncGossip {
     /// drained boundary — i.e. whenever `run_until` has returned).
     pub fn iterations_done(&self) -> usize {
         self.done[0]
+    }
+
+    /// Iterations completed by the slowest *live* node (the virtual
+    /// plane's progress measure under churn).
+    pub fn min_alive_done(&self) -> usize {
+        (0..self.n).filter(|&i| self.alive[i]).map(|i| self.done[i]).min().unwrap_or(0)
     }
 
     /// The staleness histogram: entry s counts mix inputs that were s
@@ -435,6 +777,59 @@ impl AsyncGossip {
         total / self.links.len() as f64
     }
 
+    /// Directed links in the engine (the denominator of the pool-size
+    /// audit: live slots must stay far below this at scale).
+    pub fn num_links(&self) -> usize {
+        self.links.len()
+    }
+
+    /// The payload pool (audit counters: peak live slots / dense scalars).
+    pub fn store(&self) -> &PayloadPool {
+        &self.store
+    }
+
+    /// Per-node liveness (all-true on the materialized plane).
+    pub fn alive(&self) -> &[bool] {
+        &self.alive
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive_count
+    }
+
+    /// True when this engine was built by [`AsyncGossip::new_virtual`].
+    pub fn is_virtual(&self) -> bool {
+        self.virt.is_some()
+    }
+
+    /// Self-accounted traffic totals of a virtual run (zero for
+    /// materialized engines — those bill through the [`CommBackend`]).
+    pub fn virt_stats(&self) -> CommStats {
+        self.virt.as_ref().map_or_else(CommStats::default, |v| v.stats)
+    }
+
+    /// `(crashes, rejoins, link events, missed barriers)` applied so far.
+    pub fn churn_counts(&self) -> (u64, u64, u64, u64) {
+        self.virt
+            .as_ref()
+            .map_or((0, 0, 0, 0), |v| (v.crashes, v.rejoins, v.link_events, v.missed_barriers))
+    }
+
+    /// Surrogate per-node means (None unless a surrogate virtual run).
+    pub fn virt_means(&self) -> Option<&[f64]> {
+        self.virt.as_ref().filter(|v| v.surrogate).map(|v| v.smean.as_slice())
+    }
+
+    /// Surrogate per-node variances (None unless a surrogate virtual run).
+    pub fn virt_vars(&self) -> Option<&[f64]> {
+        self.virt.as_ref().filter(|v| v.surrogate).map(|v| v.svar.as_slice())
+    }
+
+    /// Dense drift state (None unless a dense virtual run).
+    pub fn virt_dense(&self) -> Option<&ParamMatrix> {
+        self.virt.as_ref().filter(|v| !v.surrogate).map(|v| &v.state)
+    }
+
     /// Record every processed event (the determinism gate's probe).
     pub fn enable_trace(&mut self) {
         self.trace = Some(Vec::new());
@@ -456,41 +851,57 @@ impl AsyncGossip {
         }
     }
 
-    /// Snapshot the per-edge in-flight/stale state (checkpoint v5). Call
-    /// only at drained boundaries (the trainer's checkpoint path).
+    /// Snapshot the per-edge in-flight/stale state (checkpoint v6). Call
+    /// only at drained boundaries (the trainer's checkpoint path;
+    /// materialized engines only).
     pub fn export_state(&self) -> EventSimState {
+        assert!(self.virt.is_none(), "virtual populations do not checkpoint");
+        let mut slot_of: HashMap<u32, u32> = HashMap::new();
+        let mut slots: Vec<SlotSnapshot> = Vec::new();
+        let mut links_out = Vec::with_capacity(self.links.len());
+        for l in &self.links {
+            let mut map = |h: PayloadHandle| -> u32 {
+                *slot_of.entry(h.index()).or_insert_with(|| {
+                    let idx = slots.len() as u32;
+                    slots.push(SlotSnapshot {
+                        version: self.store.version(h),
+                        payload: self.store.payload(h).clone(),
+                    });
+                    idx
+                })
+            };
+            let cache_slot = map(l.cache);
+            let inflight =
+                l.inflight.iter().map(|m| (m.deliver_at, m.version, map(m.payload))).collect();
+            links_out.push(LinkSnapshot {
+                src: l.src as u32,
+                dst: l.dst as u32,
+                busy_until: l.busy_until,
+                busy_seconds: l.busy_seconds,
+                cache_version: l.cache_version,
+                cache_slot,
+                inflight,
+            });
+        }
         EventSimState {
             max_staleness: self.max_staleness as u64,
             hist: self.hist.clone(),
-            links: self
-                .links
-                .iter()
-                .map(|l| LinkSnapshot {
-                    src: l.src as u32,
-                    dst: l.dst as u32,
-                    busy_until: l.busy_until,
-                    busy_seconds: l.busy_seconds,
-                    cache_version: l.cache_version,
-                    cache: l.cache.clone(),
-                    inflight: l
-                        .inflight
-                        .iter()
-                        .map(|m| (m.deliver_at, m.version, m.payload.clone()))
-                        .collect(),
-                })
-                .collect(),
+            slots,
+            links: links_out,
         }
     }
 
     /// Restore a [`EventSimState`] at step boundary `step` with
     /// `gossip_rounds` rounds already executed; rebuilds the delivery
-    /// events for every in-flight payload in deterministic order.
+    /// events for every in-flight payload in deterministic order. All
+    /// validation happens before any engine state is touched.
     pub fn import_state(
         &mut self,
         state: &EventSimState,
         step: usize,
         gossip_rounds: usize,
     ) -> Result<()> {
+        ensure!(self.virt.is_none(), "virtual populations do not restore checkpoints");
         ensure!(
             state.max_staleness == self.max_staleness as u64,
             "checkpoint was written at max_staleness {}, this run uses {}",
@@ -503,9 +914,18 @@ impl AsyncGossip {
             state.links.len(),
             self.links.len()
         );
-        self.reset_counters(step, gossip_rounds);
-        self.hist = state.hist.clone();
-        for (l, s) in self.links.iter_mut().zip(&state.links) {
+        let n_slots = state.slots.len() as u32;
+        for (idx, s) in state.slots.iter().enumerate() {
+            if let Payload::Dense(v) = &s.payload {
+                ensure!(
+                    v.len() == self.d,
+                    "checkpoint slot {idx} payload is {} scalars, engine d = {}",
+                    v.len(),
+                    self.d
+                );
+            }
+        }
+        for (l, s) in self.links.iter().zip(&state.links) {
             ensure!(
                 (l.src, l.dst) == (s.src as usize, s.dst as usize),
                 "checkpoint link ({}, {}) does not match engine edge ({}, {})",
@@ -515,21 +935,52 @@ impl AsyncGossip {
                 l.dst
             );
             ensure!(
-                s.cache.len() == self.d && s.inflight.iter().all(|(_, _, p)| p.len() == self.d),
-                "checkpoint payloads on link ({}, {}) are not d = {}",
+                s.cache_slot < n_slots && s.inflight.iter().all(|&(_, _, sl)| sl < n_slots),
+                "checkpoint link ({}, {}) references a slot outside the {} slot table",
                 s.src,
                 s.dst,
-                self.d
+                n_slots
             );
-            l.busy_until = s.busy_until;
-            l.busy_seconds = s.busy_seconds;
-            l.cache_version = s.cache_version;
-            l.cache = s.cache.clone();
-            l.inflight = s
-                .inflight
-                .iter()
-                .map(|(t, v, p)| Msg { deliver_at: *t, version: *v, payload: p.clone() })
-                .collect();
+        }
+        self.reset_counters(step, gossip_rounds);
+        self.hist = state.hist.clone();
+        for e in 0..self.links.len() {
+            while let Some(m) = self.links[e].inflight.pop_front() {
+                self.store.release(m.payload);
+            }
+            let old = self.links[e].cache;
+            // The link keeps the stale handle until it is rewired below;
+            // nothing reads caches between here and the rewiring loop.
+            self.store.release(old);
+        }
+        let handles: Vec<PayloadHandle> = state
+            .slots
+            .iter()
+            .map(|s| match &s.payload {
+                Payload::Dense(v) => self.store.insert_dense(s.version, v.clone()),
+                Payload::Stat { mean, var } => self.store.insert_stat(s.version, *mean, *var),
+            })
+            .collect();
+        for (e, s) in state.links.iter().enumerate() {
+            let ch = handles[s.cache_slot as usize];
+            self.store.retain(ch);
+            let src = s.src as usize;
+            {
+                let l = &mut self.links[e];
+                l.busy_until = s.busy_until;
+                l.busy_seconds = s.busy_seconds;
+                l.cache_version = s.cache_version;
+                l.cache = ch;
+            }
+            for &(t, v, slot) in &s.inflight {
+                let h = handles[slot as usize];
+                self.store.retain(h);
+                let tx = self.tx_seconds[src];
+                self.links[e].inflight.push_back(Msg { deliver_at: t, version: v, payload: h, tx });
+            }
+        }
+        for h in handles {
+            self.store.release(h);
         }
         // Delivery events rebuild in ascending edge order; per-link FIFO
         // order is preserved by the seq stamps, and cross-link order at
@@ -551,14 +1002,25 @@ impl AsyncGossip {
     /// each node's current row at the boundary version, nothing in flight,
     /// link accounts zeroed.
     pub fn reset(&mut self, params: &ParamMatrix, step: usize, gossip_rounds: usize) {
+        assert!(self.virt.is_none(), "reset is a materialized-plane operation");
         self.reset_counters(step, gossip_rounds);
         self.hist.clear();
-        for l in self.links.iter_mut() {
+        for e in 0..self.links.len() {
+            while let Some(m) = self.links[e].inflight.pop_front() {
+                self.store.release(m.payload);
+            }
+            let src = self.links[e].src;
+            let h = if self.intern {
+                self.store.intern_dense(src as u32, step as u64, || params.row(src).to_vec())
+            } else {
+                self.store.insert_dense(step as u64, params.row(src).to_vec())
+            };
+            let old = std::mem::replace(&mut self.links[e].cache, h);
+            self.store.release(old);
+            let l = &mut self.links[e];
             l.busy_until = 0.0;
             l.busy_seconds = 0.0;
             l.cache_version = step as u64;
-            l.cache.copy_from_slice(params.row(l.src));
-            l.inflight.clear();
         }
     }
 
@@ -596,6 +1058,7 @@ impl AsyncGossip {
         step_fn: &mut dyn FnMut(&mut ParamMatrix, &[(usize, usize)]) -> Result<()>,
         sync_fn: &mut dyn FnMut(usize, &mut ParamMatrix) -> Result<()>,
     ) -> Result<()> {
+        ensure!(self.virt.is_none(), "virtual populations run through run_virtual_until");
         debug_assert!(params.n() == self.n && params.d() == self.d);
         if self.strict {
             self.run_waves(target, params, backend, pool, clocks, costs, step_fn, sync_fn)?;
@@ -640,11 +1103,17 @@ impl AsyncGossip {
                             let (dst, e) = self.out_edges[round][src][t];
                             let (payload, stats) = backend.push_row(params, src, dst)?;
                             backend.add_total(stats);
+                            let h = if self.intern {
+                                self.store.intern_dense(src as u32, (k + 1) as u64, move || payload)
+                            } else {
+                                self.store.insert_dense((k + 1) as u64, payload)
+                            };
                             self.links[e].busy_seconds += self.tx_seconds[src];
                             self.links[e].inflight.push_back(Msg {
                                 deliver_at: 0.0,
                                 version: (k + 1) as u64,
-                                payload,
+                                payload: h,
+                                tx: 0.0,
                             });
                         }
                     }
@@ -655,7 +1124,7 @@ impl AsyncGossip {
                     // apart. Staleness is provably 0 here (fresh caches),
                     // and do_mix advances each node's round counter.
                     {
-                        let Self { links, in_links, .. } = self;
+                        let Self { links, in_links, store, .. } = self;
                         for nbrs in &in_links[round] {
                             for &(_, e) in nbrs {
                                 let l = &mut links[e];
@@ -665,7 +1134,8 @@ impl AsyncGossip {
                                     .expect("strict wave pushed this round's payload");
                                 debug_assert_eq!(msg.version, (k + 1) as u64);
                                 l.cache_version = msg.version;
-                                l.cache = msg.payload;
+                                let old = std::mem::replace(&mut l.cache, msg.payload);
+                                store.release(old);
                             }
                         }
                     }
@@ -746,10 +1216,66 @@ impl AsyncGossip {
         Ok(())
     }
 
+    /// Advance a virtual population until every LIVE node has completed
+    /// `target` iterations (crashed nodes are exempt; they resume their
+    /// frozen counters on rejoin). Pair with a clock plane made by
+    /// [`VirtualClocks::flat`] — the virtual plane bills through
+    /// `advance_one`/`stall_until` only, so the per-round neighbor tables
+    /// are never needed.
+    pub fn run_virtual_until(&mut self, target: usize, clocks: &mut VirtualClocks) -> Result<()> {
+        ensure!(self.virt.is_some(), "run_virtual_until requires an engine built by new_virtual");
+        ensure!(clocks.n() == self.n, "clock plane covers {} nodes, engine has {}", clocks.n(), self.n);
+        for i in 0..self.n {
+            if self.alive[i] && self.state[i] == NodeState::Parked && self.done[i] < target {
+                self.schedule_ready(i, clocks.seconds()[i]);
+            }
+        }
+        while !(0..self.n).all(|i| !self.alive[i] || self.done[i] >= target) {
+            let Some(Reverse(ev)) = self.heap.pop() else {
+                bail!("event queue drained with live nodes short of iteration {target}");
+            };
+            match ev.kind {
+                EV_DELIVER => {
+                    let (src, dst) = (ev.a as usize, ev.b as usize);
+                    self.record(EV_DELIVER, src, dst, self.done[dst], ev.time);
+                    self.on_deliver_virtual(src, dst, ev.time, target, clocks);
+                }
+                EV_MIX => {
+                    let i = ev.a as usize;
+                    if ev.b != self.gen[i] {
+                        continue; // stale event from before a crash/rejoin
+                    }
+                    self.record(EV_MIX, i, 0, self.done[i], ev.time);
+                    self.on_mix_virtual(i, target, clocks);
+                }
+                EV_READY => {
+                    let i = ev.a as usize;
+                    if ev.b != self.gen[i] {
+                        continue; // stale event from before a crash/rejoin
+                    }
+                    self.record(EV_READY, i, 0, self.done[i], ev.time);
+                    self.on_ready_virtual(i, target, clocks);
+                }
+                EV_CHURN => {
+                    let idx = ev.a as usize;
+                    self.record(EV_CHURN, idx, 0, 0, ev.time);
+                    self.on_churn(idx, ev.time, target, clocks)?;
+                }
+                other => bail!("corrupt event kind {other}"),
+            }
+        }
+        Ok(())
+    }
+
     fn schedule_ready(&mut self, i: usize, t: f64) {
         self.state[i] = NodeState::Scheduled;
-        self.pending_exec.push((i, self.done[i]));
-        self.push_ev(t, EV_READY, i, 0);
+        if self.virt.is_none() {
+            self.pending_exec.push((i, self.done[i]));
+            self.push_ev(t, EV_READY, i, 0);
+        } else {
+            let g = self.gen[i] as usize;
+            self.push_ev(t, EV_READY, i, g);
+        }
     }
 
     /// Iteration k of node i is fully done at the node's current clock.
@@ -763,16 +1289,20 @@ impl AsyncGossip {
     }
 
     /// Are node i's mix inputs for iteration k fresh enough? (Pure check —
-    /// no mutation, usable from both the MIX and DELIVER handlers.)
+    /// no mutation, usable from both the MIX and DELIVER handlers.) A
+    /// crashed sender never gates its receivers: it cannot produce a
+    /// fresher version, so waiting on it would deadlock the population.
     fn deps_met(&self, i: usize, k: usize, round: usize) -> bool {
         let need = ((k + 1) as u64).saturating_sub(self.max_staleness as u64);
-        self.in_links[round][i].iter().all(|&(_, e)| self.links[e].cache_version >= need)
+        self.in_links[round][i]
+            .iter()
+            .all(|&(j, e)| !self.alive[j] || self.links[e].cache_version >= need)
     }
 
     /// Execute node i's iteration-k mix from its caches; records the
     /// staleness of every input and advances the node's round counter.
     fn do_mix(&mut self, i: usize, k: usize, round: usize, params: &mut ParamMatrix) {
-        let Self { links, rows, in_links, scratch, hist, .. } = self;
+        let Self { links, rows, in_links, scratch, hist, store, .. } = self;
         let nbrs = &in_links[round][i];
         for &(_, e) in nbrs {
             let v = links[e].cache_version;
@@ -794,13 +1324,77 @@ impl AsyncGossip {
                         .iter()
                         .find(|&&(jj, _)| jj == j)
                         .expect("weight row neighbors match the receive plan");
-                    &links[e].cache
+                    store.dense(links[e].cache)
                 }
             },
             scratch,
         );
         params.row_mut(i).copy_from_slice(scratch);
         self.round_ctr[i] += 1;
+    }
+
+    /// The virtual-plane mix: same weight rows and staleness accounting,
+    /// applied to the drift state. A dead in-neighbor's weight folds into
+    /// the self weight (its cache is its last word — mixing a corpse's
+    /// stale iterate forever would bias the consensus curve).
+    fn do_mix_virtual(&mut self, i: usize, k: usize, round: usize) {
+        let Self { links, rows, in_links, scratch, hist, store, alive, virt, round_ctr, .. } = self;
+        let virt = virt.as_mut().expect("virtual plane");
+        let nbrs = &in_links[round][i];
+        for &(j, e) in nbrs {
+            if !alive[j] {
+                continue;
+            }
+            let v = links[e].cache_version;
+            let stale = ((k + 1) as u64).saturating_sub(v) as usize;
+            if hist.len() <= stale {
+                hist.resize(stale + 1, 0);
+            }
+            hist[stale] += 1;
+        }
+        if virt.surrogate {
+            let mut mean = 0.0f64;
+            let mut var = 0.0f64;
+            let mut wself = 0.0f64;
+            for &(j, w) in &rows[round][i] {
+                if j == i || !alive[j] {
+                    wself += w as f64;
+                    continue;
+                }
+                let &(_, e) = nbrs
+                    .iter()
+                    .find(|&&(jj, _)| jj == j)
+                    .expect("weight row neighbors match the receive plan");
+                let (mj, vj) = store.stat(links[e].cache);
+                mean += w as f64 * mj;
+                var += (w as f64) * (w as f64) * vj;
+            }
+            mean += wself * virt.smean[i];
+            var += wself * wself * virt.svar[i];
+            virt.smean[i] = mean;
+            virt.svar[i] = var;
+        } else {
+            scratch.fill(0.0);
+            let mut wself = 0.0f32;
+            for &(j, w) in &rows[round][i] {
+                if j == i || !alive[j] {
+                    wself += w;
+                    continue;
+                }
+                let &(_, e) = nbrs
+                    .iter()
+                    .find(|&&(jj, _)| jj == j)
+                    .expect("weight row neighbors match the receive plan");
+                for (o, v) in scratch.iter_mut().zip(store.dense(links[e].cache)) {
+                    *o += w * *v;
+                }
+            }
+            for (o, v) in scratch.iter_mut().zip(virt.state.row(i)) {
+                *o += wself * *v;
+            }
+            virt.state.copy_row_from(i, scratch);
+        }
+        round_ctr[i] += 1;
     }
 
     /// READY: flush pending gradients, bill compute, issue this
@@ -854,11 +1448,17 @@ impl AsyncGossip {
                     // the comm the async regime hides.
                     stats.sim_seconds = self.alpha[i];
                     backend.add_total(stats);
+                    let h = if self.intern {
+                        self.store.intern_dense(i as u32, (k + 1) as u64, move || payload)
+                    } else {
+                        self.store.insert_dense((k + 1) as u64, payload)
+                    };
+                    let tx = self.tx_seconds[i];
                     let l = &mut self.links[e];
                     let start = if l.busy_until > issue { l.busy_until } else { issue };
-                    let deliver_at = start + self.tx_seconds[i];
+                    let deliver_at = start + tx;
                     l.busy_until = deliver_at;
-                    l.inflight.push_back(Msg { deliver_at, version: (k + 1) as u64, payload });
+                    l.inflight.push_back(Msg { deliver_at, version: (k + 1) as u64, payload: h, tx });
                     self.push_ev(deliver_at, EV_DELIVER, i, dst);
                 }
                 self.push_ev(clocks.seconds()[i], EV_MIX, i, 0);
@@ -874,12 +1474,103 @@ impl AsyncGossip {
         Ok(())
     }
 
+    /// Virtual READY: run the drift update in place of the gradient, bill
+    /// compute, push pooled payloads (self-accounted traffic), schedule
+    /// the mix — or park at the live-population barrier.
+    fn on_ready_virtual(&mut self, i: usize, target: usize, clocks: &mut VirtualClocks) {
+        let k = self.done[i];
+        // Drift is a pure function of (seed, node, iteration) — a crashed
+        // node that redoes iteration k on rejoin recomputes the same
+        // state, keeping replays bit-exact.
+        {
+            let virt = self.virt.as_mut().expect("virtual plane");
+            let mut r = Rng::new(virt.seed ^ ((i as u64) << 32) ^ k as u64);
+            if virt.surrogate {
+                virt.smean[i] = 0.9 * virt.smean[i] + 0.1 * r.normal();
+                virt.svar[i] = 0.81 * virt.svar[i] + 0.01;
+            } else {
+                for x in virt.state.row_mut(i) {
+                    *x = 0.9 * *x + 0.1 * r.normal() as f32;
+                }
+            }
+        }
+        clocks.advance_one(i, self.compute[i]);
+        match self.action_at(k) {
+            CommAction::None => {
+                self.complete(i, target, clocks);
+            }
+            CommAction::Gossip => {
+                let round = self.round_ctr[i] % self.rounds;
+                let v = (k + 1) as u64;
+                let alpha = self.alpha[i];
+                let cost_dim = self.cost_dim as u64;
+                let m = self.out_edges[round][i].len();
+                for t in 0..m {
+                    let (dst, e) = self.out_edges[round][i][t];
+                    clocks.advance_one(i, alpha);
+                    let issue = clocks.seconds()[i];
+                    let h = {
+                        let Self { store, virt, .. } = self;
+                        let virt = virt.as_ref().expect("virtual plane");
+                        if virt.surrogate {
+                            store.intern_stat(i as u32, v, virt.smean[i], virt.svar[i])
+                        } else {
+                            store.intern_dense(i as u32, v, || virt.state.row(i).to_vec())
+                        }
+                    };
+                    {
+                        let virt = self.virt.as_mut().expect("virtual plane");
+                        virt.stats.scalars_sent += cost_dim;
+                        virt.stats.msgs += 1;
+                        virt.stats.sim_seconds += alpha;
+                    }
+                    let region = self.regions.as_ref().map_or(1.0, |r| r.factor(i, dst));
+                    let tx = self.tx_seconds[i] * self.links[e].tx_mult * region;
+                    let l = &mut self.links[e];
+                    let start = if l.busy_until > issue { l.busy_until } else { issue };
+                    let deliver_at = start + tx;
+                    l.busy_until = deliver_at;
+                    l.inflight.push_back(Msg { deliver_at, version: v, payload: h, tx });
+                    self.push_ev(deliver_at, EV_DELIVER, i, dst);
+                }
+                let g = self.gen[i] as usize;
+                self.push_ev(clocks.seconds()[i], EV_MIX, i, g);
+            }
+            CommAction::GlobalAverage => {
+                if (k as u64) < self.barrier_epoch {
+                    // The live population already averaged past this
+                    // iteration while the node was crashed; it skips the
+                    // resolved barrier and keeps catching up.
+                    self.virt.as_mut().expect("virtual plane").missed_barriers += 1;
+                    self.complete(i, target, clocks);
+                } else {
+                    self.state[i] = NodeState::Barrier;
+                    self.barrier_waiting += 1;
+                    if self.barrier_waiting == self.alive_count {
+                        self.resolve_barrier_virtual(k, target, clocks);
+                    }
+                }
+            }
+        }
+    }
+
     /// MIX: attempt the bounded-stale mix at the node's own clock.
     fn on_mix(&mut self, i: usize, target: usize, params: &mut ParamMatrix, clocks: &mut VirtualClocks) {
         let k = self.done[i];
         let round = self.round_ctr[i] % self.rounds;
         if self.deps_met(i, k, round) {
             self.do_mix(i, k, round, params);
+            self.complete(i, target, clocks);
+        } else {
+            self.state[i] = NodeState::Waiting;
+        }
+    }
+
+    fn on_mix_virtual(&mut self, i: usize, target: usize, clocks: &mut VirtualClocks) {
+        let k = self.done[i];
+        let round = self.round_ctr[i] % self.rounds;
+        if self.deps_met(i, k, round) {
+            self.do_mix_virtual(i, k, round);
             self.complete(i, target, clocks);
         } else {
             self.state[i] = NodeState::Waiting;
@@ -905,10 +1596,13 @@ impl AsyncGossip {
         // Occupancy accrues at traversal COMPLETION: in-flight time never
         // counts toward utilization, so busy_seconds <= elapsed time and
         // the utilization column stays within [0, 1].
-        l.busy_seconds += self.tx_seconds[src];
+        l.busy_seconds += msg.tx;
         if msg.version > l.cache_version {
             l.cache_version = msg.version;
-            l.cache = msg.payload;
+            let old = std::mem::replace(&mut l.cache, msg.payload);
+            self.store.release(old);
+        } else {
+            self.store.release(msg.payload);
         }
         if self.state[dst] == NodeState::Waiting {
             let k = self.done[dst];
@@ -919,6 +1613,109 @@ impl AsyncGossip {
                 self.complete(dst, target, clocks);
             }
         }
+    }
+
+    fn on_deliver_virtual(
+        &mut self,
+        src: usize,
+        dst: usize,
+        t: f64,
+        target: usize,
+        clocks: &mut VirtualClocks,
+    ) {
+        let e = edge_index(&self.edges, src, dst);
+        let l = &mut self.links[e];
+        let msg = l.inflight.pop_front().expect("a delivery event has a queued message");
+        debug_assert_eq!(msg.deliver_at.to_bits(), t.to_bits());
+        l.busy_seconds += msg.tx;
+        // Deliveries complete even to (or from) crashed nodes — the
+        // payload was already on the wire; versions dedupe duplicates
+        // from a crash-redone iteration.
+        if msg.version > l.cache_version {
+            l.cache_version = msg.version;
+            let old = std::mem::replace(&mut l.cache, msg.payload);
+            self.store.release(old);
+        } else {
+            self.store.release(msg.payload);
+        }
+        self.try_resume(dst, t, target, clocks);
+    }
+
+    /// Resume a virtual node stalled on the staleness bound if its deps
+    /// are now met (by a delivery, or by the blocking sender crashing).
+    fn try_resume(&mut self, dst: usize, t: f64, target: usize, clocks: &mut VirtualClocks) {
+        if !self.alive[dst] || self.state[dst] != NodeState::Waiting {
+            return;
+        }
+        let k = self.done[dst];
+        let round = self.round_ctr[dst] % self.rounds;
+        if self.deps_met(dst, k, round) {
+            clocks.stall_until(dst, t);
+            self.do_mix_virtual(dst, k, round);
+            self.complete(dst, target, clocks);
+        }
+    }
+
+    /// Apply one scripted churn event (virtual plane only).
+    fn on_churn(&mut self, idx: usize, t: f64, target: usize, clocks: &mut VirtualClocks) -> Result<()> {
+        match self.churn[idx] {
+            ChurnEvent::Crash { node, .. } => {
+                if !self.alive[node] {
+                    return Ok(()); // idempotent: already down
+                }
+                self.alive[node] = false;
+                self.alive_count -= 1;
+                self.gen[node] = self.gen[node].wrapping_add(1);
+                if self.state[node] == NodeState::Barrier {
+                    self.barrier_waiting -= 1;
+                }
+                self.state[node] = NodeState::Parked;
+                self.virt.as_mut().expect("virtual plane").crashes += 1;
+                ensure!(self.alive_count > 0, "churn script crashed every node by t = {t}");
+                // The crash may satisfy a pending live-population barrier.
+                if self.barrier_waiting > 0 && self.barrier_waiting == self.alive_count {
+                    let k = (0..self.n)
+                        .find(|&i| self.alive[i] && self.state[i] == NodeState::Barrier)
+                        .map(|i| self.done[i])
+                        .expect("a positive barrier count implies a live barrier node");
+                    self.resolve_barrier_virtual(k, target, clocks);
+                }
+                // A crashed sender stops gating its receivers (deps_met
+                // exempts it); wake any receiver it was blocking.
+                for r in 0..self.rounds {
+                    for x in 0..self.out_edges[r][node].len() {
+                        let (dst, _) = self.out_edges[r][node][x];
+                        self.try_resume(dst, t, target, clocks);
+                    }
+                }
+            }
+            ChurnEvent::Rejoin { node, .. } => {
+                if self.alive[node] {
+                    return Ok(()); // idempotent: already up
+                }
+                self.alive[node] = true;
+                self.alive_count += 1;
+                self.gen[node] = self.gen[node].wrapping_add(1);
+                self.virt.as_mut().expect("virtual plane").rejoins += 1;
+                // The offline span lands in the wait column so the
+                // node-hours ledger still closes.
+                clocks.stall_until(node, t);
+                if self.done[node] < target {
+                    self.schedule_ready(node, clocks.seconds()[node]);
+                }
+            }
+            ChurnEvent::FlakyLink { src, dst, factor, .. } => {
+                let e = edge_index(&self.edges, src, dst);
+                self.links[e].tx_mult = factor;
+                self.virt.as_mut().expect("virtual plane").link_events += 1;
+            }
+            ChurnEvent::LinkRestore { src, dst, .. } => {
+                let e = edge_index(&self.edges, src, dst);
+                self.links[e].tx_mult = 1.0;
+                self.virt.as_mut().expect("virtual plane").link_events += 1;
+            }
+        }
+        Ok(())
     }
 
     /// All nodes halted at the iteration-k global average: run the exact
@@ -949,6 +1746,97 @@ impl AsyncGossip {
             }
         }
         Ok(())
+    }
+
+    /// The live population halted at the iteration-k global average: exact
+    /// average over ALIVE nodes (ascending index — deterministic), billed
+    /// as the all-reduce analog over m live members, with self-accounted
+    /// traffic (ring all-reduce totals: `2 d (m-1)` scalars per node in
+    /// `2 m (m-1)` chunked messages).
+    fn resolve_barrier_virtual(&mut self, k: usize, target: usize, clocks: &mut VirtualClocks) {
+        self.barrier_epoch = k as u64 + 1;
+        let m = self.alive_count;
+        debug_assert!(m > 0);
+        debug_assert!(
+            (0..self.n).filter(|&i| self.alive[i]).all(|i| self.done[i] == k),
+            "live nodes drain at the same iteration before a barrier resolves"
+        );
+        {
+            let virt = self.virt.as_mut().expect("virtual plane");
+            if virt.surrogate {
+                let mut sm = 0.0f64;
+                let mut sv = 0.0f64;
+                for i in 0..self.n {
+                    if self.alive[i] {
+                        sm += virt.smean[i];
+                        sv += virt.svar[i];
+                    }
+                }
+                let mean = sm / m as f64;
+                let var = sv / (m as f64 * m as f64);
+                for i in 0..self.n {
+                    if self.alive[i] {
+                        virt.smean[i] = mean;
+                        virt.svar[i] = var;
+                    }
+                }
+            } else {
+                let d = virt.state.d();
+                let mut avg = vec![0.0f32; d];
+                for i in 0..self.n {
+                    if self.alive[i] {
+                        for (a, v) in avg.iter_mut().zip(virt.state.row(i)) {
+                            *a += v;
+                        }
+                    }
+                }
+                let inv = 1.0 / m as f32;
+                for a in avg.iter_mut() {
+                    *a *= inv;
+                }
+                for i in 0..self.n {
+                    if self.alive[i] {
+                        virt.state.copy_row_from(i, &avg);
+                    }
+                }
+            }
+            virt.stats.scalars_sent += 2 * self.cost_dim as u64 * (m as u64 - 1);
+            virt.stats.msgs += 2 * (m as u64) * (m as u64 - 1);
+        }
+        // Billing: everyone stalls to the slowest live member (the wait
+        // lands in the barrier-wait column), then pays the per-node
+        // all-reduce charge over m members.
+        let start = (0..self.n)
+            .filter(|&i| self.alive[i])
+            .map(|i| clocks.seconds()[i])
+            .fold(f64::NEG_INFINITY, f64::max);
+        let mut crit = 0.0f64;
+        for i in 0..self.n {
+            if self.alive[i] {
+                let c = 2.0 * self.theta[i] * self.cost_dim as f64 + m as f64 * self.alpha[i];
+                crit = crit.max(c);
+                clocks.stall_until(i, start);
+                clocks.advance_one(i, c);
+            }
+        }
+        self.virt.as_mut().expect("virtual plane").stats.sim_seconds += crit;
+        let end = (0..self.n)
+            .filter(|&i| self.alive[i])
+            .map(|i| clocks.seconds()[i])
+            .fold(f64::NEG_INFINITY, f64::max);
+        self.record(EV_READY, 0, self.n, k, end);
+        self.barrier_waiting = 0;
+        for i in 0..self.n {
+            if !self.alive[i] {
+                continue;
+            }
+            self.done[i] += 1;
+            if self.done[i] < target {
+                self.schedule_ready(i, clocks.seconds()[i]);
+            } else {
+                self.state[i] = NodeState::Parked;
+            }
+        }
     }
 }
 
@@ -1106,6 +1994,181 @@ mod tests {
         let init = ParamMatrix::zeros(4, 3);
         assert!(
             AsyncGossip::new(&topo, &costs, 3, 100, 1, AlgorithmKind::GossipAga, 8, &init).is_err()
+        );
+    }
+
+    #[test]
+    fn pooling_is_transparent_to_the_engine_bits() {
+        // intern on (one slot per pushed iterate) vs off (PR 5 shape: one
+        // slot per link) — identical params, clocks, and staleness.
+        let topo = Topology::one_peer_expo(8);
+        let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 8)
+            .with_straggler(2, 3.0)
+            .unwrap();
+        let mut outs = Vec::new();
+        for intern in [true, false] {
+            let mut params = ParamMatrix::random(&mut Rng::new(5), 8, 11, 1.0);
+            let mut engine = AsyncGossip::new_with_storage(
+                &topo, &costs, 11, 1000, 2, AlgorithmKind::GossipPga, 4, &params, intern,
+            )
+            .unwrap();
+            engine.enable_trace();
+            let mut backend = SharedBackend::new(&topo, 11, &costs, 1000, Compression::None);
+            let pool = WorkerPool::new(1);
+            let mut clocks = VirtualClocks::new(&topo);
+            let mut step = |p: &mut ParamMatrix, b: &[(usize, usize)]| fake_step(p, b);
+            let mut sync = |_k: usize, _p: &mut ParamMatrix| -> Result<()> { Ok(()) };
+            engine
+                .run_until(13, &mut params, &mut backend, &pool, &mut clocks, &costs, &mut step, &mut sync)
+                .unwrap();
+            let trace = engine.trace().unwrap().to_vec();
+            outs.push((params, clocks.seconds().to_vec(), trace, engine.staleness()));
+        }
+        assert_eq!(outs[0], outs[1], "payload pooling changed engine bits");
+    }
+
+    #[test]
+    fn virtual_surrogate_plane_runs_and_accounts() {
+        let topo = Topology::one_peer_expo(8);
+        let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 8);
+        let cfg = VirtualConfig { dim: 0, seed: 42, churn: Vec::new(), regions: None };
+        let mut eng =
+            AsyncGossip::new_virtual(&topo, &costs, 25_500_000, 2, AlgorithmKind::GossipPga, 4, cfg)
+                .unwrap();
+        let mut clocks = VirtualClocks::flat(8);
+        eng.run_virtual_until(9, &mut clocks).unwrap();
+        assert!(eng.is_virtual());
+        assert_eq!(eng.min_alive_done(), 9);
+        assert_eq!(eng.alive_count(), 8);
+        let st = eng.virt_stats();
+        assert!(st.scalars_sent > 0 && st.msgs > 0 && st.sim_seconds > 0.0);
+        // The audit the 10^5 suite runs at scale, exercised here in-module:
+        // surrogate mode allocates NO dense scalar, ever.
+        assert_eq!(eng.store().peak_dense_scalars(), 0);
+        assert!(eng.store().peak_live_slots() <= eng.num_links());
+        assert!(clocks.max_seconds() > 0.0);
+        let means = eng.virt_means().unwrap();
+        assert!(means.iter().all(|m| m.is_finite()));
+        // Gossip + two PGA barriers (k=3, k=7) pull the population toward
+        // consensus: the spread must shrink from its initial N(0,1) draw.
+        let spread = |xs: &[f64]| {
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64
+        };
+        let mut r0 = Rng::new(42);
+        let init: Vec<f64> = (0..8).map(|_| r0.normal()).collect();
+        assert!(spread(means) < spread(&init), "gossip + PGA must tighten consensus");
+        assert!(eng.virt_vars().unwrap().iter().all(|v| *v >= 0.0));
+    }
+
+    #[test]
+    fn virtual_dense_plane_runs_and_pools() {
+        let topo = Topology::ring(6);
+        let costs = NodeCosts::homogeneous(CostModel::calibrated_bert(), 6);
+        let cfg = VirtualConfig { dim: 4, seed: 7, churn: Vec::new(), regions: None };
+        let mut eng =
+            AsyncGossip::new_virtual(&topo, &costs, 1000, 1, AlgorithmKind::Gossip, usize::MAX, cfg)
+                .unwrap();
+        let mut clocks = VirtualClocks::flat(6);
+        eng.run_virtual_until(5, &mut clocks).unwrap();
+        let state = eng.virt_dense().unwrap();
+        assert_eq!((state.n(), state.d()), (6, 4));
+        assert!(state.as_slice().iter().all(|v| v.is_finite()));
+        // Dense virtual payloads pool by (src, version): peak live dense
+        // scalars stay well below the per-edge copy cost (12 links x 4).
+        assert!(eng.store().peak_dense_scalars() < eng.num_links() * 4);
+    }
+
+    #[test]
+    fn churn_crash_rejoin_flaky_replays_bit_exactly() {
+        fn run() -> (Vec<TraceEv>, Vec<f64>, CommStats, (u64, u64, u64, u64), Vec<f64>) {
+            let topo = Topology::ring(6);
+            let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 6);
+            let churn = vec![
+                ChurnEvent::FlakyLink { at: 0.05, src: 1, dst: 2, factor: 6.0 },
+                ChurnEvent::Crash { at: 0.4, node: 3 },
+                ChurnEvent::Rejoin { at: 1.1, node: 3 },
+                ChurnEvent::LinkRestore { at: 1.3, src: 1, dst: 2 },
+            ];
+            let cfg = VirtualConfig { dim: 0, seed: 99, churn, regions: None };
+            let mut eng = AsyncGossip::new_virtual(
+                &topo, &costs, 1_000_000, 2, AlgorithmKind::GossipPga, 4, cfg,
+            )
+            .unwrap();
+            eng.enable_trace();
+            let mut clocks = VirtualClocks::flat(6);
+            // Chunked drive — replays must chunk identically to compare.
+            for t in [3usize, 8, 12] {
+                eng.run_virtual_until(t, &mut clocks).unwrap();
+            }
+            (
+                eng.trace().unwrap().to_vec(),
+                clocks.seconds().to_vec(),
+                eng.virt_stats(),
+                eng.churn_counts(),
+                eng.virt_means().unwrap().to_vec(),
+            )
+        }
+        let a = run();
+        let b = run();
+        assert_eq!(a.0, b.0, "event order must replay bit-exactly");
+        assert_eq!(
+            a.1.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+            b.1.iter().map(|s| s.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(a.2, b.2);
+        assert_eq!(a.3, b.3);
+        assert_eq!((a.3 .0, a.3 .1, a.3 .2), (1u64, 1u64, 2u64));
+        assert_eq!(
+            a.4.iter().map(|m| m.to_bits()).collect::<Vec<_>>(),
+            b.4.iter().map(|m| m.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn churn_scripts_are_validated_up_front() {
+        let topo = Topology::ring(4);
+        let costs = NodeCosts::homogeneous(CostModel::generic(), 4);
+        let bad = [
+            vec![ChurnEvent::Crash { at: 1.0, node: 9 }],
+            vec![ChurnEvent::Rejoin { at: -1.0, node: 1 }],
+            vec![ChurnEvent::FlakyLink { at: 0.5, src: 0, dst: 2, factor: 2.0 }], // not an edge
+            vec![ChurnEvent::FlakyLink { at: 0.5, src: 0, dst: 1, factor: 0.0 }],
+            vec![ChurnEvent::LinkRestore { at: 0.5, src: 7, dst: 1 }],
+        ];
+        for churn in bad {
+            let cfg = VirtualConfig { dim: 0, seed: 1, churn, regions: None };
+            assert!(
+                AsyncGossip::new_virtual(
+                    &topo, &costs, 100, 1, AlgorithmKind::Gossip, usize::MAX, cfg
+                )
+                .is_err()
+            );
+        }
+    }
+
+    #[test]
+    fn region_tiers_slow_cross_region_links() {
+        // Two tiers, 10x inter-region latency: the same schedule takes
+        // strictly longer than the single-region run.
+        let topo = Topology::ring(6);
+        let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 6);
+        let mut finish = Vec::new();
+        for regions in [None, Some(RegionMap::tiers(6, 2, 1.0, 10.0).unwrap())] {
+            let cfg = VirtualConfig { dim: 0, seed: 5, churn: Vec::new(), regions };
+            let mut eng = AsyncGossip::new_virtual(
+                &topo, &costs, 25_500_000, 1, AlgorithmKind::Gossip, usize::MAX, cfg,
+            )
+            .unwrap();
+            let mut clocks = VirtualClocks::flat(6);
+            eng.run_virtual_until(8, &mut clocks).unwrap();
+            finish.push(clocks.max_seconds());
+        }
+        assert!(
+            finish[1] > finish[0],
+            "10x inter-region links must stretch the critical path ({} !> {})",
+            finish[1],
+            finish[0]
         );
     }
 }

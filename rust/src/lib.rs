@@ -64,6 +64,10 @@
 //!   concurrently with the next step's sampling phase.
 //! * [`metrics`] — loss curves, consensus distance, transient-stage
 //!   detection, reporters.
+//! * [`population`] — the virtual population plane: scenario scripting
+//!   (crash / rejoin / flaky links / region tiers) and the n = 10^5 sweep
+//!   driver over pooled payload storage ([`params::pool`]); select with
+//!   the `sweep` subcommand (`--virtual-n`, `--surrogate`, `--churn`).
 
 pub mod algorithms;
 pub mod collective;
@@ -82,6 +86,7 @@ pub mod metrics;
 pub mod model;
 pub mod optim;
 pub mod params;
+pub mod population;
 pub mod proptest;
 pub mod rng;
 pub mod runtime;

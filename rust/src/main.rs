@@ -30,6 +30,7 @@ fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
         Some("topo") => cmd_topo(&args[1..]),
         Some("check") => cmd_check(),
         Some("help") | None => {
@@ -49,8 +50,23 @@ fn print_help() {
                             [--regime bsp|overlap|async] [--max-staleness S]\n\
                             [--overlap] [--stealing] [--backend shared|bus]\n\
                             [--straggler idx:factor[,idx:factor...]]\n\
+           gossip-pga sweep [--virtual-n N] [--surrogate] [--dim D] [--steps K]\n\
+                            [--topology T] [--algo A] [--period H] [--max-staleness S]\n\
+                            [--churn SCRIPT] [--churn-pairs P --churn-horizon SECS]\n\
+                            [--churn-seed SEED] [--regions k:mult] [--seed SEED]\n\
+                            [--cost-dim D] [--straggler idx:factor] [--log-points P]\n\
+                            [--report out.json]\n\
            gossip-pga topo [--n N]\n\
            gossip-pga check\n\
+         \n\
+         sweep: the virtual population plane — n simulated nodes (clocks,\n\
+           staleness, link occupancy, exact traffic billing) over pooled payload\n\
+           storage; reaches n = 100000. --surrogate runs (mean, var) payloads\n\
+           with zero dense allocation; --dim D runs a dense drift model. Churn\n\
+           scripts: crash@t:n, rejoin@t:n, flaky@t:src>dst:factor,\n\
+           restore@t:src>dst (comma-separated), or seeded pairs via\n\
+           --churn-pairs/--churn-horizon. --regions k:mult slows cross-region\n\
+           links by mult.\n\
          \n\
          Config keys (TOML paths, also usable with --set):\n\
            cluster.nodes, cluster.topology (ring|grid|star|full|expo|one-peer-expo)\n\
@@ -78,7 +94,7 @@ fn print_help() {
 
 /// Flags that may appear bare (`--overlap`) or with an explicit boolean
 /// (`--overlap false`).
-const BOOL_FLAGS: &[&str] = &["overlap", "stealing"];
+const BOOL_FLAGS: &[&str] = &["overlap", "stealing", "surrogate"];
 
 /// Parse `--flag value` pairs (boolean flags may omit the value).
 fn parse_flags(args: &[String]) -> Result<Vec<(String, String)>> {
@@ -184,11 +200,11 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let cfg = ExperimentConfig::from_toml(&doc).context("building experiment config")?;
     let topo = cfg.topology();
     println!(
-        "# {} | {} nodes on {} (beta = {:.4}) | H = {} | {} steps | {} thread(s){}{} | {} backend{}",
+        "# {} | {} nodes on {} (beta = {}) | H = {} | {} steps | {} thread(s){}{} | {} backend{}",
         cfg.algorithm.display(),
         cfg.nodes,
         cfg.topology,
-        topo.beta(),
+        topo.beta_report(),
         cfg.period,
         cfg.steps,
         cfg.threads,
@@ -291,6 +307,125 @@ fn cmd_train(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    use gossip_pga::algorithms::AlgorithmKind;
+    use gossip_pga::config::SweepConfig;
+    use gossip_pga::costmodel::{CostModel, RegionMap};
+    use gossip_pga::population::{run_sweep, ChurnScript, SweepSpec};
+
+    let flags = parse_flags(args)?;
+    let mut cfg = SweepConfig::default();
+    let mut straggler_specs: Vec<&str> = Vec::new();
+    for (name, val) in &flags {
+        match name.as_str() {
+            "virtual-n" => cfg.virtual_n = val.parse().context("--virtual-n wants an integer")?,
+            "topology" => cfg.topology = val.clone(),
+            "algo" => cfg.algorithm = AlgorithmKind::from_name(val)?,
+            "period" => cfg.period = val.parse().context("--period wants an integer")?,
+            "steps" => cfg.steps = val.parse().context("--steps wants an integer")?,
+            "max-staleness" => {
+                cfg.max_staleness = val.parse().context("--max-staleness wants an integer")?
+            }
+            "surrogate" => cfg.surrogate = val == "true",
+            "dim" => cfg.dim = val.parse().context("--dim wants an integer")?,
+            "seed" => cfg.seed = val.parse().context("--seed wants an integer")?,
+            "cost-dim" => cfg.cost_dim = val.parse().context("--cost-dim wants an integer")?,
+            "churn" => cfg.churn = val.clone(),
+            "churn-pairs" => {
+                cfg.churn_pairs = val.parse().context("--churn-pairs wants an integer")?
+            }
+            "churn-seed" => cfg.churn_seed = val.parse().context("--churn-seed wants an integer")?,
+            "churn-horizon" => {
+                cfg.churn_horizon = val.parse().context("--churn-horizon wants seconds")?
+            }
+            "regions" => cfg.regions = val.clone(),
+            "straggler" => straggler_specs.push(val),
+            "log-points" => cfg.log_points = val.parse().context("--log-points wants an integer")?,
+            "report" => cfg.report = val.clone(),
+            other => bail!("unknown flag --{other}"),
+        }
+    }
+    if !straggler_specs.is_empty() {
+        cfg.stragglers = gossip_pga::config::parse_stragglers(&straggler_specs.join(","))?;
+    }
+    cfg.validate().context("building sweep config")?;
+
+    let topo = Topology::from_name(&cfg.topology, cfg.virtual_n)?;
+    let mut churn = ChurnScript::parse(&cfg.churn).context("parsing --churn")?.events;
+    if cfg.churn_pairs > 0 {
+        let seeded =
+            ChurnScript::seeded(cfg.churn_seed, &topo, cfg.churn_pairs, cfg.churn_horizon)?;
+        churn.extend(seeded.events);
+    }
+    let regions = match cfg.region_spec()? {
+        Some((k, mult)) => Some(RegionMap::tiers(cfg.virtual_n, k, 1.0, mult)?),
+        None => None,
+    };
+    let spec = SweepSpec {
+        topo,
+        algo: cfg.algorithm,
+        h: cfg.period,
+        steps: cfg.steps,
+        max_staleness: cfg.max_staleness,
+        dim: if cfg.surrogate { 0 } else { cfg.dim },
+        seed: cfg.seed,
+        cost: CostModel::calibrated_resnet50(),
+        cost_dim: cfg.cost_dim,
+        stragglers: cfg.stragglers.clone(),
+        churn,
+        regions,
+        log_points: cfg.log_points,
+    };
+    println!(
+        "# sweep: {} virtual nodes on {} (beta = {}) | {} | H = {} | {} steps | {} payloads | {} churn event(s)",
+        cfg.virtual_n,
+        cfg.topology,
+        spec.topo.beta_report(),
+        cfg.algorithm.display(),
+        cfg.period,
+        cfg.steps,
+        if spec.dim == 0 { "surrogate".to_string() } else { format!("dense d={}", spec.dim) },
+        spec.churn.len(),
+    );
+    let t0 = std::time::Instant::now();
+    let report = run_sweep(&spec)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(&["step", "time(s)", "consensus", "scalars", "msgs", "alive", "stale", "util"]);
+    for p in &report.curve {
+        t.rowv(vec![
+            p.step.to_string(),
+            format!("{:.1}", p.time),
+            format!("{:.3e}", p.consensus),
+            p.scalars.to_string(),
+            p.msgs.to_string(),
+            p.alive.to_string(),
+            format!("{}/{:.2}", p.stale_max, p.stale_mean),
+            format!("{:.2}", p.link_util),
+        ]);
+    }
+    t.print();
+    let (crashes, rejoins, link_events, missed) = report.churn_counts;
+    println!(
+        "# churn: {crashes} crash(es) | {rejoins} rejoin(s) | {link_events} link event(s) | {missed} missed barrier(s)"
+    );
+    println!(
+        "# memory audit: {} directed links | peak {} pooled slots | peak {} dense scalars",
+        report.num_links, report.peak_live_slots, report.peak_dense_scalars
+    );
+    match report.transient_step {
+        Some(s) => println!("# transient: consensus contracted 100x by step {s}"),
+        None => println!("# transient: consensus has not contracted 100x within the sweep"),
+    }
+    println!("# wall: {wall:.1}s");
+    if !cfg.report.is_empty() {
+        let path = std::path::Path::new(&cfg.report);
+        report.write_json(path)?;
+        println!("# report written to {}", path.display());
+    }
+    Ok(())
+}
+
 fn cmd_topo(args: &[String]) -> Result<()> {
     let flags = parse_flags(args)?;
     let n: usize = flags
@@ -302,15 +437,26 @@ fn cmd_topo(args: &[String]) -> Result<()> {
     let mut t = Table::new(&["topology", "beta", "1-beta", "C_beta(H=16)", "D_beta(H=16)", "regime"]);
     for name in ["ring", "grid", "star", "expo", "one-peer-expo", "full"] {
         let topo = Topology::from_name(name, n)?;
-        let beta = topo.beta();
-        t.rowv(vec![
-            name.to_string(),
-            format!("{beta:.5}"),
-            format!("{:.2e}", 1.0 - beta),
-            format!("{:.3}", spectral::c_beta(beta, 16)),
-            format!("{:.3}", spectral::d_beta(beta, 16)),
-            format!("{:?}", spectral::regime(beta, 16)),
-        ]);
+        // Size-gated: above BETA_DENSE_LIMIT the dense spectral path would
+        // allocate an n x n matrix just for this report.
+        match topo.beta_report().exact() {
+            Some(beta) => t.rowv(vec![
+                name.to_string(),
+                format!("{beta:.5}"),
+                format!("{:.2e}", 1.0 - beta),
+                format!("{:.3}", spectral::c_beta(beta, 16)),
+                format!("{:.3}", spectral::d_beta(beta, 16)),
+                format!("{:?}", spectral::regime(beta, 16)),
+            ]),
+            None => t.rowv(vec![
+                name.to_string(),
+                "skipped".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                format!("n > {}", gossip_pga::topology::BETA_DENSE_LIMIT),
+            ]),
+        }
     }
     println!("n = {n}");
     t.print();

@@ -287,6 +287,20 @@ fn consensus_distance_iter<'a>(
     total / n as f64
 }
 
+/// Consensus distance over a population of scalar iterates: `(1/n) sum_i
+/// (x_i - x_bar)^2` — the d = 1 specialization the surrogate population
+/// plane logs (each virtual node carries a scalar mean instead of a model
+/// row). Accumulates in f64, ascending, so curves are deterministic at any
+/// chunking of the sweep loop. Ignores nothing: callers filter to the live
+/// population before calling.
+pub fn scalar_consensus(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mean = values.iter().sum::<f64>() / values.len() as f64;
+    values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / values.len() as f64
+}
+
 /// Empirical transient stage: smallest t such that for every logged step
 /// >= t the candidate's loss is within `tol` (relative) of the reference
 /// (Parallel SGD) loss at the same step. Both histories must be logged on
@@ -406,6 +420,17 @@ mod tests {
             let got = consensus_distance_pooled(&m, &WorkerPool::new(threads));
             assert!(got == reference, "threads {threads}: {got} != {reference}");
         }
+    }
+
+    #[test]
+    fn scalar_consensus_matches_dense_d1() {
+        let vals = [1.0, -1.0, 3.0, 0.5];
+        let rows: Vec<Vec<f32>> = vals.iter().map(|&v| vec![v as f32]).collect();
+        let dense = consensus_distance_rows(&rows);
+        let scalar = scalar_consensus(&vals);
+        assert!((dense - scalar).abs() < 1e-6, "{dense} vs {scalar}");
+        assert_eq!(scalar_consensus(&[]), 0.0);
+        assert_eq!(scalar_consensus(&[7.0, 7.0, 7.0]), 0.0);
     }
 
     #[test]

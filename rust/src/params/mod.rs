@@ -17,6 +17,8 @@
 //! ascending, columns ascending) so results are bit-identical regardless of
 //! how callers shard the work across threads.
 
+pub mod pool;
+
 /// Dense n x d row-major f32 matrix of per-worker parameter vectors.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ParamMatrix {

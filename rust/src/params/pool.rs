@@ -1,0 +1,322 @@
+//! Ref-counted payload pool — the storage plane behind the event engine's
+//! population split (materialized workers vs virtual nodes).
+//!
+//! PR 5 gave every directed link its own `Vec<f32>` cache and every
+//! in-flight message its own payload copy: O(edges * d) memory, which caps
+//! the event plane at a few hundred nodes. The pool fixes the identity
+//! problem behind that cost: a node that pushes one iterate to `deg`
+//! out-neighbors produces ONE payload, not `deg` copies. Slots are
+//! ref-counted and interned by `(src, version)` — every link cache and
+//! every mid-flight message holds a [`PayloadHandle`] into the pool, so
+//! live storage is O(distinct live versions * d), bounded by
+//! n * (staleness window) regardless of edge count.
+//!
+//! Two payload kinds share the slot table:
+//!
+//! * [`Payload::Dense`] — a real d-vector (materialized workers, and
+//!   virtual nodes running the small-d drift model);
+//! * [`Payload::Stat`] — the statistical surrogate `(mean, var)` used by
+//!   `--surrogate` population sweeps, where no dense scalar is ever
+//!   allocated (asserted by the audit counters below).
+//!
+//! Audit counters ([`PayloadPool::peak_live_slots`],
+//! [`PayloadPool::peak_dense_scalars`]) exist so the large-n test suite can
+//! assert the memory claim instead of trusting it: a 10^5-node surrogate
+//! sweep must finish with `peak_dense_scalars() == 0`, and any sweep must
+//! keep `peak_live_slots` far below the directed-edge count.
+//!
+//! Determinism: the intern map is only ever used for keyed lookup (never
+//! iterated), so pooling cannot perturb event order or parameter bits —
+//! interned payloads are byte-identical by construction (the async regime
+//! rejects compression, so one version of one node is one byte pattern).
+
+use std::collections::HashMap;
+
+/// Index of one pooled payload slot. Copy-cheap; holders must balance
+/// every clone of a handle with a [`PayloadPool::release`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PayloadHandle(u32);
+
+impl PayloadHandle {
+    pub fn index(self) -> u32 {
+        self.0
+    }
+
+    /// Rebuild a handle from a checkpointed slot index (the import path
+    /// re-validates it against the pool it loads into).
+    pub fn from_index(i: u32) -> PayloadHandle {
+        PayloadHandle(i)
+    }
+}
+
+/// One pooled payload: a dense iterate or its statistical surrogate.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    Dense(Vec<f32>),
+    Stat { mean: f64, var: f64 },
+}
+
+struct Slot {
+    refs: u32,
+    version: u64,
+    /// Intern key `(src, version)` if this slot was interned; cleared on
+    /// free so the key can be reused by a later incarnation.
+    key: Option<(u32, u64)>,
+    payload: Payload,
+}
+
+const FREE: Payload = Payload::Stat { mean: 0.0, var: 0.0 };
+
+/// The slot table. `d` is the dense payload width this pool enforces
+/// (surrogate slots carry no dense data and ignore it).
+pub struct PayloadPool {
+    d: usize,
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    interned: HashMap<(u32, u64), u32>,
+    live: usize,
+    peak_live: usize,
+    dense_scalars: usize,
+    peak_dense: usize,
+}
+
+impl PayloadPool {
+    pub fn new(d: usize) -> PayloadPool {
+        PayloadPool {
+            d,
+            slots: Vec::new(),
+            free: Vec::new(),
+            interned: HashMap::new(),
+            live: 0,
+            peak_live: 0,
+            dense_scalars: 0,
+            peak_dense: 0,
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    fn alloc(&mut self, version: u64, key: Option<(u32, u64)>, payload: Payload) -> PayloadHandle {
+        if let Payload::Dense(v) = &payload {
+            assert_eq!(v.len(), self.d, "pooled payload width");
+            self.dense_scalars += v.len();
+            self.peak_dense = self.peak_dense.max(self.dense_scalars);
+        }
+        self.live += 1;
+        self.peak_live = self.peak_live.max(self.live);
+        let idx = match self.free.pop() {
+            Some(i) => {
+                let s = &mut self.slots[i as usize];
+                s.refs = 1;
+                s.version = version;
+                s.key = key;
+                s.payload = payload;
+                i
+            }
+            None => {
+                let i = u32::try_from(self.slots.len()).expect("pool slot index overflow");
+                self.slots.push(Slot { refs: 1, version, key, payload });
+                i
+            }
+        };
+        if let Some(k) = key {
+            self.interned.insert(k, idx);
+        }
+        PayloadHandle(idx)
+    }
+
+    /// Insert an owned dense payload (one fresh slot, refcount 1).
+    pub fn insert_dense(&mut self, version: u64, data: Vec<f32>) -> PayloadHandle {
+        self.alloc(version, None, Payload::Dense(data))
+    }
+
+    /// Insert a surrogate payload (one fresh slot, refcount 1).
+    pub fn insert_stat(&mut self, version: u64, mean: f64, var: f64) -> PayloadHandle {
+        self.alloc(version, None, Payload::Stat { mean, var })
+    }
+
+    /// Dense payload interned by `(src, version)`: if that version of that
+    /// node is already pooled the existing slot is retained and returned
+    /// (and `make` never runs); otherwise `make` produces the payload for a
+    /// fresh interned slot. Either way the caller owns one new reference.
+    pub fn intern_dense(
+        &mut self,
+        src: u32,
+        version: u64,
+        make: impl FnOnce() -> Vec<f32>,
+    ) -> PayloadHandle {
+        if let Some(&idx) = self.interned.get(&(src, version)) {
+            let h = PayloadHandle(idx);
+            self.retain(h);
+            return h;
+        }
+        self.alloc(version, Some((src, version)), Payload::Dense(make()))
+    }
+
+    /// Surrogate payload interned by `(src, version)` (see
+    /// [`PayloadPool::intern_dense`]).
+    pub fn intern_stat(&mut self, src: u32, version: u64, mean: f64, var: f64) -> PayloadHandle {
+        if let Some(&idx) = self.interned.get(&(src, version)) {
+            let h = PayloadHandle(idx);
+            self.retain(h);
+            return h;
+        }
+        self.alloc(version, Some((src, version)), Payload::Stat { mean, var })
+    }
+
+    pub fn retain(&mut self, h: PayloadHandle) {
+        let s = &mut self.slots[h.0 as usize];
+        assert!(s.refs > 0, "retain of a freed slot");
+        s.refs += 1;
+    }
+
+    /// Drop one reference; a slot whose refcount hits zero is recycled
+    /// (its dense storage freed, its intern key cleared).
+    pub fn release(&mut self, h: PayloadHandle) {
+        let s = &mut self.slots[h.0 as usize];
+        assert!(s.refs > 0, "release of a freed slot");
+        s.refs -= 1;
+        if s.refs == 0 {
+            if let Payload::Dense(v) = &s.payload {
+                self.dense_scalars -= v.len();
+            }
+            if let Some(k) = s.key.take() {
+                self.interned.remove(&k);
+            }
+            s.payload = FREE;
+            self.live -= 1;
+            self.free.push(h.0);
+        }
+    }
+
+    pub fn payload(&self, h: PayloadHandle) -> &Payload {
+        let s = &self.slots[h.0 as usize];
+        debug_assert!(s.refs > 0, "read of a freed slot");
+        &s.payload
+    }
+
+    /// The dense payload behind `h`; panics if the slot is a surrogate
+    /// (mixing code paths are mode-pure by construction).
+    pub fn dense(&self, h: PayloadHandle) -> &[f32] {
+        match self.payload(h) {
+            Payload::Dense(v) => v,
+            Payload::Stat { .. } => panic!("dense read of a surrogate slot"),
+        }
+    }
+
+    /// The `(mean, var)` surrogate behind `h`; panics on a dense slot.
+    pub fn stat(&self, h: PayloadHandle) -> (f64, f64) {
+        match self.payload(h) {
+            Payload::Stat { mean, var } => (*mean, *var),
+            Payload::Dense(_) => panic!("surrogate read of a dense slot"),
+        }
+    }
+
+    pub fn version(&self, h: PayloadHandle) -> u64 {
+        self.slots[h.0 as usize].version
+    }
+
+    #[cfg(test)]
+    fn refs(&self, h: PayloadHandle) -> u32 {
+        self.slots[h.0 as usize].refs
+    }
+
+    /// Currently live (ref'd) slots.
+    pub fn live_slots(&self) -> usize {
+        self.live
+    }
+
+    /// High-water mark of live slots — the audit number the large-n suite
+    /// compares against the directed-edge count.
+    pub fn peak_live_slots(&self) -> usize {
+        self.peak_live
+    }
+
+    /// f32 scalars currently held by live dense slots.
+    pub fn live_dense_scalars(&self) -> usize {
+        self.dense_scalars
+    }
+
+    /// High-water mark of dense scalars — 0 across a whole surrogate sweep.
+    pub fn peak_dense_scalars(&self) -> usize {
+        self.peak_dense
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_shares_one_slot_per_version() {
+        let mut p = PayloadPool::new(3);
+        let a = p.intern_dense(7, 1, || vec![1.0, 2.0, 3.0]);
+        let b = p.intern_dense(7, 1, || panic!("must reuse the interned slot"));
+        assert_eq!(a, b);
+        assert_eq!(p.refs(a), 2);
+        assert_eq!(p.live_slots(), 1);
+        assert_eq!(p.live_dense_scalars(), 3);
+        let c = p.intern_dense(7, 2, || vec![4.0, 5.0, 6.0]);
+        assert_ne!(a, c);
+        assert_eq!(p.live_slots(), 2);
+    }
+
+    #[test]
+    fn release_recycles_and_clears_intern_key() {
+        let mut p = PayloadPool::new(2);
+        let a = p.intern_dense(0, 5, || vec![1.0, 1.0]);
+        p.release(a);
+        assert_eq!(p.live_slots(), 0);
+        assert_eq!(p.live_dense_scalars(), 0);
+        // Same key must now produce a FRESH payload, reusing the slot index.
+        let b = p.intern_dense(0, 5, || vec![2.0, 2.0]);
+        assert_eq!(b.index(), a.index(), "freed slot is recycled");
+        assert_eq!(p.dense(b), &[2.0, 2.0]);
+        assert_eq!(p.peak_live_slots(), 1);
+        assert_eq!(p.peak_dense_scalars(), 2);
+    }
+
+    #[test]
+    fn surrogate_slots_cost_no_dense_scalars() {
+        let mut p = PayloadPool::new(1_000_000);
+        let a = p.intern_stat(3, 1, 0.5, 0.25);
+        let b = p.intern_stat(3, 1, 0.5, 0.25);
+        assert_eq!(a, b);
+        assert_eq!(p.stat(a), (0.5, 0.25));
+        assert_eq!(p.version(a), 1);
+        assert_eq!(p.peak_dense_scalars(), 0);
+        assert_eq!(p.live_slots(), 1);
+    }
+
+    #[test]
+    fn insert_is_never_shared() {
+        let mut p = PayloadPool::new(1);
+        let a = p.insert_dense(1, vec![1.0]);
+        let b = p.insert_dense(1, vec![1.0]);
+        assert_ne!(a, b);
+        p.retain(a);
+        p.release(a);
+        assert_eq!(p.refs(a), 1);
+        p.release(a);
+        p.release(b);
+        assert_eq!(p.live_slots(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "pooled payload width")]
+    fn wrong_width_is_rejected() {
+        let mut p = PayloadPool::new(4);
+        p.insert_dense(0, vec![0.0; 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "release of a freed slot")]
+    fn double_release_is_caught() {
+        let mut p = PayloadPool::new(1);
+        let a = p.insert_dense(0, vec![0.0]);
+        p.release(a);
+        p.release(a);
+    }
+}

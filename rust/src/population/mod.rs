@@ -1,0 +1,502 @@
+//! Population-scale sweep driver: scenario scripting, the n = 10^5 sweep
+//! loop, and its machine-readable report.
+//!
+//! The engine underneath ([`crate::eventsim::AsyncGossip::new_virtual`])
+//! distinguishes **materialized workers** — own a `ParamMatrix` row, run
+//! real gradient steps — from **virtual nodes**, which carry full clock /
+//! staleness / link-occupancy / traffic state but reference pooled payload
+//! storage ([`crate::params::pool::PayloadPool`]). This module is the layer
+//! the CLI talks to:
+//!
+//! * [`ChurnScript`] — parse `crash@t:node,rejoin@t:node,
+//!   flaky@t:src>dst:factor,restore@t:src>dst` scenario strings, or
+//!   generate a seeded random script (crash/rejoin and flaky/restore pairs
+//!   over a time horizon) so a 10^5-node churn sweep is reproducible from
+//!   one `u64`;
+//! * [`SweepSpec`] / [`run_sweep`] — drive the virtual engine in logged
+//!   chunks over a flat clock plane ([`VirtualClocks::flat`] — no
+//!   per-round neighbor tables, the one O(n·rounds·degree) allocation the
+//!   population plane cannot afford), recording consensus / traffic /
+//!   liveness curves;
+//! * [`SweepReport`] — the curves plus the allocation audit
+//!   (`peak_live_slots`, `peak_dense_scalars` vs the directed-edge count)
+//!   and churn totals, dumped as JSON for the EXPERIMENTS.md §Massive-n
+//!   tables.
+//!
+//! Determinism: a sweep is a pure function of its [`SweepSpec`] — the
+//! engine's event order is chunk-invariant, the seeded script derives from
+//! `Rng::new(seed)`, and every curve accumulator fixes its order — so the
+//! churn property gate replays reports bit-exactly.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::algorithms::AlgorithmKind;
+use crate::costmodel::{CostModel, NodeCosts, RegionMap, VirtualClocks};
+use crate::eventsim::{AsyncGossip, ChurnEvent, VirtualConfig};
+use crate::jsonio::{self, Json};
+use crate::metrics::{consensus_distance_rows, scalar_consensus};
+use crate::rng::Rng;
+use crate::topology::{BetaReport, Topology};
+
+/// A churn scenario: an (unordered) list of scripted population events.
+/// Thin wrapper so parsing/generation live beside the sweep driver; the
+/// engine validates node/link identities at construction.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChurnScript {
+    pub events: Vec<ChurnEvent>,
+}
+
+impl ChurnScript {
+    /// Parse the CLI scenario syntax: comma-separated events, each one of
+    ///
+    /// * `crash@<t>:<node>`
+    /// * `rejoin@<t>:<node>`
+    /// * `flaky@<t>:<src>><dst>:<factor>`
+    /// * `restore@<t>:<src>><dst>`
+    ///
+    /// with `<t>` in virtual seconds. Empty input parses to an empty
+    /// script. Identity/range validation happens in the engine (which
+    /// knows n and the edge set); this parser only enforces shape.
+    pub fn parse(text: &str) -> Result<ChurnScript> {
+        let mut events = Vec::new();
+        for term in text.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (kind, rest) = term
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("churn term '{term}': expected '<kind>@<t>:...'"))?;
+            let mut parts = rest.split(':');
+            let at: f64 = parts
+                .next()
+                .and_then(|t| t.parse().ok())
+                .ok_or_else(|| anyhow::anyhow!("churn term '{term}': bad time"))?;
+            let args: Vec<&str> = parts.collect();
+            let node_arg = |s: &str| -> Result<usize> {
+                s.parse().map_err(|_| anyhow::anyhow!("churn term '{term}': bad node '{s}'"))
+            };
+            let edge_arg = |s: &str| -> Result<(usize, usize)> {
+                let (a, b) = s
+                    .split_once('>')
+                    .ok_or_else(|| anyhow::anyhow!("churn term '{term}': expected '<src>><dst>'"))?;
+                Ok((node_arg(a)?, node_arg(b)?))
+            };
+            let ev = match (kind, args.as_slice()) {
+                ("crash", [node]) => ChurnEvent::Crash { at, node: node_arg(node)? },
+                ("rejoin", [node]) => ChurnEvent::Rejoin { at, node: node_arg(node)? },
+                ("flaky", [edge, factor]) => {
+                    let (src, dst) = edge_arg(edge)?;
+                    let factor: f64 = factor
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("churn term '{term}': bad factor"))?;
+                    ChurnEvent::FlakyLink { at, src, dst, factor }
+                }
+                ("restore", [edge]) => {
+                    let (src, dst) = edge_arg(edge)?;
+                    ChurnEvent::LinkRestore { at, src, dst }
+                }
+                _ => bail!(
+                    "churn term '{term}': unknown shape (crash@t:n | rejoin@t:n | \
+                     flaky@t:s>d:f | restore@t:s>d)"
+                ),
+            };
+            events.push(ev);
+        }
+        Ok(ChurnScript { events })
+    }
+
+    /// Seeded random scenario: `pairs` disturbances over `[0, horizon)`
+    /// virtual seconds, alternating crash/rejoin pairs (distinct nodes, so
+    /// the live population can never empty) and flaky/restore pairs on
+    /// real gossip edges. A pure function of `(seed, topo, pairs,
+    /// horizon)` — the reproducibility contract of the 10^5-node sweep.
+    pub fn seeded(seed: u64, topo: &Topology, pairs: usize, horizon: f64) -> Result<ChurnScript> {
+        let n = topo.n;
+        ensure!(n >= 2, "seeded churn needs at least 2 nodes");
+        ensure!(horizon.is_finite() && horizon > 0.0, "churn horizon must be positive");
+        let crash_budget = (n - 1).min(pairs.div_ceil(2));
+        let mut rng = Rng::new(seed);
+        let mut crash_nodes = rng.choose_distinct(n, crash_budget);
+        let mut events = Vec::with_capacity(pairs * 2);
+        for k in 0..pairs {
+            let t0 = rng.range(0.02, 0.55) * horizon;
+            let dt = rng.range(0.05, 0.35) * horizon;
+            // Alternate kinds while crash nodes remain, then flaky-only.
+            if k % 2 == 0 && !crash_nodes.is_empty() {
+                let node = crash_nodes.pop().expect("non-empty");
+                events.push(ChurnEvent::Crash { at: t0, node });
+                events.push(ChurnEvent::Rejoin { at: t0 + dt, node });
+            } else {
+                let round = rng.below(topo.rounds() as u64) as usize;
+                let src = rng.below(n as u64) as usize;
+                let Some(&dst) = topo.out_neighbors(src, round).first() else {
+                    continue; // degenerate node with no out-edge this round
+                };
+                let factor = rng.range(2.0, 10.0);
+                events.push(ChurnEvent::FlakyLink { at: t0, src, dst, factor });
+                events.push(ChurnEvent::LinkRestore { at: t0 + dt, src, dst });
+            }
+        }
+        Ok(ChurnScript { events })
+    }
+}
+
+/// Full specification of one population sweep — everything
+/// [`run_sweep`] needs, so a sweep is replayable from this struct alone.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub topo: Topology,
+    pub algo: AlgorithmKind,
+    /// Global-averaging period H (Gossip-PGA / Local SGD).
+    pub h: usize,
+    /// Iterations every (live) node must complete.
+    pub steps: usize,
+    pub max_staleness: usize,
+    /// Dense drift dimension; 0 selects the `(mean, var)` surrogate.
+    pub dim: usize,
+    pub seed: u64,
+    /// Scalar cost model replicated across the population.
+    pub cost: CostModel,
+    /// Billing dimension (the d the alpha-beta model charges for).
+    pub cost_dim: usize,
+    /// `(index, factor)` stragglers (the CLI flag is repeatable).
+    pub stragglers: Vec<(usize, f64)>,
+    pub churn: Vec<ChurnEvent>,
+    pub regions: Option<RegionMap>,
+    /// Curve resolution: the sweep logs ~this many points.
+    pub log_points: usize,
+}
+
+impl SweepSpec {
+    /// A surrogate one-peer-expo sweep with paper-calibrated costs — the
+    /// massive-n default; callers override fields as needed.
+    pub fn massive_n(n: usize, steps: usize, seed: u64) -> SweepSpec {
+        SweepSpec {
+            topo: Topology::one_peer_expo(n),
+            algo: AlgorithmKind::GossipPga,
+            h: 8,
+            steps,
+            max_staleness: 2,
+            dim: 0,
+            seed,
+            cost: CostModel::calibrated_resnet50(),
+            cost_dim: 25_500_000,
+            stragglers: Vec::new(),
+            churn: Vec::new(),
+            regions: None,
+            log_points: 20,
+        }
+    }
+}
+
+/// One logged point of a sweep's transient/traffic curves.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CurvePoint {
+    /// Iterations completed by the slowest live node at this point.
+    pub step: usize,
+    /// Critical-path virtual seconds.
+    pub time: f64,
+    /// Consensus distance over the live population (scalar variance of
+    /// the surrogate means, or the d-dim consensus of the drift rows).
+    pub consensus: f64,
+    /// Cumulative wire scalars / messages billed so far.
+    pub scalars: u64,
+    pub msgs: u64,
+    pub alive: usize,
+    pub stale_max: u64,
+    pub stale_mean: f64,
+    pub link_util: f64,
+    /// Cumulative barrier/offline wait seconds summed over nodes.
+    pub wait: f64,
+}
+
+/// The output of [`run_sweep`]: curves, churn totals, and the allocation
+/// audit that backs the bounded-memory claim.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepReport {
+    pub n: usize,
+    pub steps: usize,
+    pub surrogate: bool,
+    pub beta: BetaReport,
+    pub curve: Vec<CurvePoint>,
+    /// First logged step where consensus has contracted below
+    /// [`TRANSIENT_FRACTION`] of its initial value — the sweep-plane
+    /// transient proxy (no loss curve exists without gradients).
+    pub transient_step: Option<usize>,
+    /// `(crashes, rejoins, link events, missed barriers)`.
+    pub churn_counts: (u64, u64, u64, u64),
+    /// Allocation audit: pool high-water marks vs the directed-edge count.
+    pub num_links: usize,
+    pub peak_live_slots: usize,
+    pub peak_dense_scalars: usize,
+}
+
+/// Consensus contraction defining the sweep-plane transient proxy.
+pub const TRANSIENT_FRACTION: f64 = 0.01;
+
+impl SweepReport {
+    pub fn to_json(&self) -> Json {
+        let f = |get: fn(&CurvePoint) -> f64| {
+            jsonio::num_arr(&self.curve.iter().map(get).collect::<Vec<_>>())
+        };
+        let u = |get: fn(&CurvePoint) -> u64| {
+            jsonio::u64_arr(&self.curve.iter().map(get).collect::<Vec<_>>())
+        };
+        jsonio::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("surrogate", Json::Bool(self.surrogate)),
+            ("beta", match self.beta {
+                BetaReport::Exact(b) => Json::Num(b),
+                BetaReport::Skipped { .. } => Json::Str(self.beta.to_string()),
+            }),
+            ("step", u(|p| p.step as u64)),
+            ("time", f(|p| p.time)),
+            ("consensus", f(|p| p.consensus)),
+            ("scalars", u(|p| p.scalars)),
+            ("msgs", u(|p| p.msgs)),
+            ("alive", u(|p| p.alive as u64)),
+            ("stale_max", u(|p| p.stale_max)),
+            ("stale_mean", f(|p| p.stale_mean)),
+            ("link_util", f(|p| p.link_util)),
+            ("wait", f(|p| p.wait)),
+            (
+                "transient_step",
+                self.transient_step.map_or(Json::Null, |s| Json::Num(s as f64)),
+            ),
+            ("crashes", Json::Num(self.churn_counts.0 as f64)),
+            ("rejoins", Json::Num(self.churn_counts.1 as f64)),
+            ("link_events", Json::Num(self.churn_counts.2 as f64)),
+            ("missed_barriers", Json::Num(self.churn_counts.3 as f64)),
+            ("num_links", Json::Num(self.num_links as f64)),
+            ("peak_live_slots", Json::Num(self.peak_live_slots as f64)),
+            ("peak_dense_scalars", Json::Num(self.peak_dense_scalars as f64)),
+        ])
+    }
+
+    pub fn write_json(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+}
+
+/// Drive one population sweep to completion. Chunked: the engine runs to
+/// each curve target in turn, and the curve samples its state between
+/// chunks (the engine's event order is chunk-invariant, so the chunking
+/// only decides WHERE the curve samples, never what happens).
+pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
+    let n = spec.topo.n;
+    ensure!(spec.steps >= 1, "sweep needs at least one step");
+    ensure!(spec.log_points >= 1, "sweep needs at least one curve point");
+    // The sweep-path range check (--straggler idx:factor): the train path
+    // has validated idx < n since PR 4 (NodeCosts::with_straggler), but a
+    // clear front-door message beats a cost-table error deep in setup.
+    let mut costs = NodeCosts::homogeneous(spec.cost, n);
+    for &(idx, factor) in &spec.stragglers {
+        ensure!(
+            idx < n,
+            "--straggler index {idx} out of range for the virtual population \
+             (--virtual-n {n}; valid indices are 0..{n})"
+        );
+        costs = costs.with_straggler(idx, factor)?;
+    }
+    let cfg = VirtualConfig {
+        dim: spec.dim,
+        seed: spec.seed,
+        churn: spec.churn.clone(),
+        regions: spec.regions.clone(),
+    };
+    let mut engine = AsyncGossip::new_virtual(
+        &spec.topo,
+        &costs,
+        spec.cost_dim,
+        spec.max_staleness,
+        spec.algo,
+        spec.h,
+        cfg,
+    )?;
+    let mut clocks = VirtualClocks::flat(n);
+    let mut curve = Vec::with_capacity(spec.log_points);
+    let mut targets: Vec<usize> =
+        (1..=spec.log_points).map(|p| spec.steps * p / spec.log_points).collect();
+    targets.retain(|&t| t >= 1);
+    targets.dedup();
+    for &target in &targets {
+        engine.run_virtual_until(target, &mut clocks)?;
+        curve.push(sample(&engine, &clocks, target));
+    }
+    let initial = curve.first().map_or(0.0, |p| p.consensus);
+    let transient_step = curve
+        .iter()
+        .find(|p| p.consensus <= TRANSIENT_FRACTION * initial)
+        .map(|p| p.step);
+    Ok(SweepReport {
+        n,
+        steps: spec.steps,
+        surrogate: spec.dim == 0,
+        beta: spec.topo.beta_report(),
+        curve,
+        transient_step,
+        churn_counts: engine.churn_counts(),
+        num_links: engine.num_links(),
+        peak_live_slots: engine.store().peak_live_slots(),
+        peak_dense_scalars: engine.store().peak_dense_scalars(),
+    })
+}
+
+fn sample(engine: &AsyncGossip, clocks: &VirtualClocks, target: usize) -> CurvePoint {
+    let alive = engine.alive();
+    let consensus = if let Some(means) = engine.virt_means() {
+        let live: Vec<f64> = means
+            .iter()
+            .zip(alive)
+            .filter(|(_, &a)| a)
+            .map(|(&m, _)| m)
+            .collect();
+        scalar_consensus(&live)
+    } else if let Some(state) = engine.virt_dense() {
+        let live: Vec<Vec<f32>> = (0..state.n())
+            .filter(|&i| alive[i])
+            .map(|i| state.row(i).to_vec())
+            .collect();
+        consensus_distance_rows(&live)
+    } else {
+        0.0
+    };
+    let now = clocks.max_seconds();
+    let (stale_max, stale_mean) = engine.staleness();
+    let stats = engine.virt_stats();
+    CurvePoint {
+        step: engine.min_alive_done().min(target),
+        time: now,
+        consensus,
+        scalars: stats.scalars_sent,
+        msgs: stats.msgs,
+        alive: engine.alive_count(),
+        stale_max,
+        stale_mean,
+        link_util: engine.link_utilization(now),
+        wait: clocks.total_wait() + stats.barrier_wait,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn churn_script_parses_every_shape() {
+        let s = ChurnScript::parse(
+            "crash@1.5:3, rejoin@2.5:3, flaky@1.0:7>3:4.0, restore@3.25:7>3",
+        )
+        .unwrap();
+        assert_eq!(
+            s.events,
+            vec![
+                ChurnEvent::Crash { at: 1.5, node: 3 },
+                ChurnEvent::Rejoin { at: 2.5, node: 3 },
+                ChurnEvent::FlakyLink { at: 1.0, src: 7, dst: 3, factor: 4.0 },
+                ChurnEvent::LinkRestore { at: 3.25, src: 7, dst: 3 },
+            ]
+        );
+        assert_eq!(ChurnScript::parse("").unwrap().events, vec![]);
+    }
+
+    #[test]
+    fn churn_script_rejects_malformed_terms() {
+        for bad in [
+            "crash:3",          // no @
+            "crash@x:3",        // bad time
+            "crash@1.0:3:9",    // extra arg
+            "flaky@1.0:7:4.0",  // missing '>'
+            "flaky@1.0:7>3",    // missing factor
+            "explode@1.0:3",    // unknown kind
+            "rejoin@1.0:minus", // bad node
+        ] {
+            assert!(ChurnScript::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn seeded_script_is_deterministic_and_paired() {
+        let topo = Topology::one_peer_expo(64);
+        let a = ChurnScript::seeded(7, &topo, 6, 100.0).unwrap();
+        let b = ChurnScript::seeded(7, &topo, 6, 100.0).unwrap();
+        assert_eq!(a, b, "same seed, same script");
+        assert_ne!(a, ChurnScript::seeded(8, &topo, 6, 100.0).unwrap());
+        assert_eq!(a.events.len(), 12, "every disturbance is a paired on/off");
+        let crashes = a
+            .events
+            .iter()
+            .filter(|e| matches!(e, ChurnEvent::Crash { .. }))
+            .count();
+        let rejoins = a
+            .events
+            .iter()
+            .filter(|e| matches!(e, ChurnEvent::Rejoin { .. }))
+            .count();
+        assert_eq!(crashes, rejoins);
+        assert!(crashes < 64, "cannot empty the population");
+        for e in &a.events {
+            assert!(e.at() >= 0.0 && e.at() <= 100.0, "{e:?} outside horizon");
+        }
+    }
+
+    #[test]
+    fn sweep_runs_and_reports_curves() {
+        let mut spec = SweepSpec::massive_n(32, 24, 11);
+        spec.log_points = 6;
+        spec.churn = ChurnScript::seeded(3, &spec.topo, 2, 5.0).unwrap().events;
+        let report = run_sweep(&spec).unwrap();
+        assert_eq!(report.n, 32);
+        assert!(report.surrogate);
+        assert_eq!(report.curve.len(), 6);
+        assert_eq!(report.curve.last().unwrap().step, 24);
+        assert!(report.peak_dense_scalars == 0, "surrogate sweep allocated dense payloads");
+        assert!(report.curve.windows(2).all(|w| w[0].time <= w[1].time));
+        assert!(report.curve.windows(2).all(|w| w[0].scalars <= w[1].scalars));
+        // Gossip + periodic averaging contracts scalar disagreement.
+        let first = report.curve.first().unwrap().consensus;
+        let last = report.curve.last().unwrap().consensus;
+        assert!(last < first, "consensus did not contract: {first} -> {last}");
+        let json = report.to_json().dump();
+        assert!(json.contains("\"peak_dense_scalars\":0"), "{json}");
+        assert!(json.contains("\"consensus\":["));
+    }
+
+    #[test]
+    fn sweep_report_is_replayable_bit_exactly() {
+        let mut spec = SweepSpec::massive_n(16, 12, 5);
+        spec.log_points = 4;
+        spec.churn = ChurnScript::seeded(9, &spec.topo, 2, 3.0).unwrap().events;
+        let a = run_sweep(&spec).unwrap();
+        let b = run_sweep(&spec).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.to_json().dump(), b.to_json().dump());
+    }
+
+    #[test]
+    fn sweep_straggler_range_is_validated_with_a_clear_message() {
+        let mut spec = SweepSpec::massive_n(8, 4, 1);
+        spec.stragglers = vec![(8, 3.0)];
+        let err = run_sweep(&spec).unwrap_err().to_string();
+        assert!(err.contains("--straggler index 8 out of range"), "{err}");
+        assert!(err.contains("--virtual-n 8"), "{err}");
+        // In range: runs fine and slows the straggler's clock.
+        spec.stragglers = vec![(2, 5.0)];
+        assert!(run_sweep(&spec).is_ok());
+    }
+
+    #[test]
+    fn dense_sweep_reports_row_consensus() {
+        let mut spec = SweepSpec::massive_n(12, 10, 2);
+        spec.dim = 3;
+        spec.log_points = 5;
+        let report = run_sweep(&spec).unwrap();
+        assert!(!report.surrogate);
+        assert!(report.peak_dense_scalars > 0);
+        let first = report.curve.first().unwrap().consensus;
+        let last = report.curve.last().unwrap().consensus;
+        assert!(last < first, "dense consensus did not contract: {first} -> {last}");
+    }
+}

@@ -243,6 +243,11 @@ impl Topology {
     /// The paper's connectivity measure. For time-varying graphs this is
     /// the per-period effective value `||prod_r (W_r - avg)||^(1/R)` —
     /// the geometric-mean contraction per gossip step.
+    ///
+    /// The computation materializes the dense n x n weight matrix — O(n^2)
+    /// memory and up to O(n^3) time. Callers on the population plane (n up
+    /// to 10^5) must use [`Topology::beta_report`], which refuses the dense
+    /// path above [`BETA_DENSE_LIMIT`] instead of allocating at startup.
     pub fn beta(&self) -> f64 {
         if self.n == 1 {
             return 0.0;
@@ -295,6 +300,54 @@ impl Topology {
             .map(|(i, r)| self.in_neighbors(i, r).len())
             .max()
             .unwrap_or(1)
+    }
+
+    /// Size-gated beta: [`BetaReport::Exact`] up to [`BETA_DENSE_LIMIT`]
+    /// nodes, [`BetaReport::Skipped`] above it. Every startup banner and
+    /// report path goes through this instead of [`Topology::beta`], so a
+    /// 10^5-node sweep never allocates the n x n matrix just to print a
+    /// connectivity number.
+    pub fn beta_report(&self) -> BetaReport {
+        if self.n <= BETA_DENSE_LIMIT {
+            BetaReport::Exact(self.beta())
+        } else {
+            BetaReport::Skipped { n: self.n }
+        }
+    }
+}
+
+/// Largest n for which the dense spectral beta path is allowed to run.
+/// 4096 x 4096 f64 is 128 MiB and a few seconds of power iteration —
+/// tolerable at startup; the next power of two is not.
+pub const BETA_DENSE_LIMIT: usize = 4096;
+
+/// Outcome of a size-gated beta computation (see [`Topology::beta_report`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BetaReport {
+    /// Dense path ran: the exact spectral value.
+    Exact(f64),
+    /// n exceeded [`BETA_DENSE_LIMIT`]; no n x n matrix was allocated.
+    Skipped { n: usize },
+}
+
+impl BetaReport {
+    /// The exact value, if the dense path ran.
+    pub fn exact(&self) -> Option<f64> {
+        match self {
+            BetaReport::Exact(b) => Some(*b),
+            BetaReport::Skipped { .. } => None,
+        }
+    }
+}
+
+impl std::fmt::Display for BetaReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BetaReport::Exact(b) => write!(f, "{b:.6}"),
+            BetaReport::Skipped { n } => {
+                write!(f, "skipped (n = {n} > dense limit {BETA_DENSE_LIMIT})")
+            }
+        }
     }
 }
 
@@ -487,6 +540,18 @@ mod tests {
         // Round 1: hop = 2; node 5 listens to 7, so node 7 transmits to 5.
         assert_eq!(t.in_neighbors(5, 1), vec![5, 7]);
         assert_eq!(t.out_neighbors(7, 1), vec![5]);
+    }
+
+    #[test]
+    fn beta_report_gates_the_dense_path_by_size() {
+        let small = Topology::ring(64).beta_report();
+        assert_eq!(small.exact(), Some(Topology::ring(64).beta()));
+        // Above the limit: must return Skipped WITHOUT touching the dense
+        // path (this test would OOM/stall long before failing otherwise).
+        let big = Topology::one_peer_expo(100_000).beta_report();
+        assert_eq!(big, BetaReport::Skipped { n: 100_000 });
+        assert_eq!(big.exact(), None);
+        assert!(big.to_string().contains("skipped"), "{big}");
     }
 
     #[test]

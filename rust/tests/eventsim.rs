@@ -9,10 +9,11 @@
 //! * **(b) staleness bound** — seeded multi-straggler async runs keep
 //!   every mix input within `max_staleness` (and actually exercise the
 //!   stale bins);
-//! * **(c) checkpoint v5** — a mid-flight async run (payloads still on
-//!   the links) snapshots through the v5 file format and resumes
-//!   bit-exactly in a fresh engine (v1–v4 load-compat is pinned by the
-//!   hand-written files in `coordinator::checkpoint`'s unit tests);
+//! * **(c) checkpoint v6** — a mid-flight async run (payloads still on
+//!   the links) snapshots through the v6 file format — a deduplicated
+//!   slot table the links reference by index — and resumes bit-exactly
+//!   in a fresh engine (v1–v5 load-compat is pinned by the hand-written
+//!   files in `coordinator::checkpoint`'s unit tests);
 //! * **(d) determinism** — same seed => identical event order (trace),
 //!   parameters and clocks across worker-pool sizes.
 
@@ -245,10 +246,11 @@ fn async_mixes_stay_within_the_staleness_bound_under_stragglers() {
 }
 
 #[test]
-fn checkpoint_v5_resumes_mid_flight_bit_exactly() {
+fn checkpoint_v6_resumes_mid_flight_bit_exactly() {
     // (c) Snapshot an async run with payloads still riding the links,
-    // round-trip it through the v5 FILE format, import into a fresh
-    // engine, and continue both runs: bits must agree throughout.
+    // round-trip it through the v6 FILE format (slot table + per-link
+    // slot references), import into a fresh engine, and continue both
+    // runs: bits must agree throughout.
     let topo = Topology::ring(6);
     let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 6)
         .with_straggler(1, 3.0)
@@ -295,16 +297,19 @@ fn checkpoint_v5_resumes_mid_flight_bit_exactly() {
     ck.save(&path).unwrap();
     let loaded = Checkpoint::load(&path).unwrap();
     std::fs::remove_file(&path).ok();
-    assert_eq!(ck, loaded, "v5 file round-trip must be lossless");
+    assert_eq!(ck, loaded, "v6 file round-trip must be lossless");
+    let es = loaded.eventsim.as_ref().unwrap();
     assert!(
-        loaded
-            .eventsim
-            .as_ref()
-            .unwrap()
-            .links
-            .iter()
-            .any(|l| !l.inflight.is_empty()),
+        es.links.iter().any(|l| !l.inflight.is_empty()),
         "the snapshot should catch payloads mid-flight (straggler run)"
+    );
+    // The slot table actually dedups: the pool interns per (src, version),
+    // so occurrences (cache + every in-flight copy) outnumber slots.
+    let occurrences: usize = es.links.iter().map(|l| 1 + l.inflight.len()).sum();
+    assert!(
+        es.slots.len() < occurrences,
+        "slot table ({}) should be smaller than payload occurrences ({occurrences})",
+        es.slots.len()
     );
 
     // Resume into a fresh engine/backend/clocks from the loaded file.

@@ -1,0 +1,231 @@
+//! The virtual population plane, end to end (no AOT artifacts — the
+//! suites drive the engine and the sweep driver directly):
+//!
+//! * **(a) full-materialization anchor** — with every node materialized
+//!   and no churn, the pooled-storage engine reproduces the per-link
+//!   storage engine (the PR 5 shape) bit-exactly — params, per-node
+//!   clocks, event trace, traffic totals — on BOTH CommPlane backends;
+//! * **(b) plane equivalence** — a dense virtual population schedules the
+//!   exact same event sequence as the materialized engine under the same
+//!   costs (payload content never feeds back into timing), so the
+//!   population plane's clocks/traffic are the engine's, not a model of
+//!   them;
+//! * **(c) churn property** — randomized seeded crash/rejoin/flaky
+//!   scripts replay bit-exactly (PROPTEST_CASES-controlled);
+//! * **(d) sweep replay** — a full `run_sweep` with churn + regions +
+//!   stragglers is a pure function of its `SweepSpec`;
+//! * **(e) massive-n smoke + audit** — the flagship one-peer-expo sweep
+//!   (n = 10^5; `GOSSIP_PGA_FAST=1` trims to 10^4) completes with the
+//!   allocation audit clean: no dense n x n spectral work, no per-edge
+//!   dense payload copies.
+
+use gossip_pga::algorithms::AlgorithmKind;
+use gossip_pga::comm::{BusBackend, CommBackend, CommStats, Compression, SharedBackend};
+use gossip_pga::costmodel::{CostModel, NodeCosts, RegionMap, VirtualClocks};
+use gossip_pga::eventsim::{AsyncGossip, TraceEv, VirtualConfig};
+use gossip_pga::exec::WorkerPool;
+use gossip_pga::params::ParamMatrix;
+use gossip_pga::population::{run_sweep, ChurnScript, SweepSpec};
+use gossip_pga::proptest;
+use gossip_pga::rng::Rng;
+use gossip_pga::topology::{BetaReport, Topology};
+
+const COST_DIM: usize = 25_500_000;
+
+/// Deterministic synthetic local update — pure in `(node, iter)`.
+fn fake_step(params: &mut ParamMatrix, batch: &[(usize, usize)]) -> anyhow::Result<()> {
+    for &(node, iter) in batch {
+        let mut r = Rng::new(0xBEEF ^ ((node as u64) << 32) ^ iter as u64);
+        for x in params.row_mut(node) {
+            *x = 0.9 * *x + 0.1 * r.normal() as f32;
+        }
+    }
+    Ok(())
+}
+
+fn mk_backend(kind: &str, topo: &Topology, d: usize, costs: &NodeCosts) -> Box<dyn CommBackend> {
+    match kind {
+        "shared" => Box::new(SharedBackend::new(topo, d, costs, COST_DIM, Compression::None)),
+        _ => Box::new(BusBackend::new(topo, d, costs, COST_DIM, Compression::None, true)),
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn run_materialized(
+    backend_kind: &str,
+    intern: bool,
+    topo: &Topology,
+    costs: &NodeCosts,
+    d: usize,
+    steps: usize,
+) -> (ParamMatrix, Vec<f64>, Vec<TraceEv>, CommStats) {
+    let mut params = ParamMatrix::random(&mut Rng::new(17), topo.n, d, 1.0);
+    let mut engine = AsyncGossip::new_with_storage(
+        topo, costs, d, COST_DIM, 2, AlgorithmKind::GossipPga, 4, &params, intern,
+    )
+    .unwrap();
+    engine.enable_trace();
+    let mut backend = mk_backend(backend_kind, topo, d, costs);
+    let pool = WorkerPool::new(2);
+    let mut clocks = VirtualClocks::new(topo);
+    let mut step = |p: &mut ParamMatrix, b: &[(usize, usize)]| fake_step(p, b);
+    let mut sync = |_k: usize, _p: &mut ParamMatrix| -> anyhow::Result<()> { Ok(()) };
+    engine
+        .run_until(steps, &mut params, backend.as_mut(), &pool, &mut clocks, costs, &mut step, &mut sync)
+        .unwrap();
+    let trace = engine.trace().unwrap().to_vec();
+    (params, clocks.seconds().to_vec(), trace, backend.total())
+}
+
+#[test]
+fn fully_materialized_runs_match_the_per_link_storage_shape_on_both_backends() {
+    // (a) The PR 5 anchor: interned (pooled) payload storage vs the old
+    // one-slot-per-link shape — same bits everywhere that matters.
+    let topo = Topology::one_peer_expo(8);
+    let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 8)
+        .with_straggler(1, 3.0)
+        .unwrap();
+    for backend_kind in ["shared", "bus"] {
+        let pooled = run_materialized(backend_kind, true, &topo, &costs, 13, 11);
+        let per_link = run_materialized(backend_kind, false, &topo, &costs, 13, 11);
+        assert_eq!(pooled.0, per_link.0, "{backend_kind}: params diverged");
+        assert_eq!(
+            pooled.1.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+            per_link.1.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+            "{backend_kind}: clocks diverged"
+        );
+        assert_eq!(pooled.2, per_link.2, "{backend_kind}: event order diverged");
+        assert_eq!(pooled.3, per_link.3, "{backend_kind}: traffic diverged");
+    }
+}
+
+#[test]
+fn virtual_plane_schedules_the_same_events_as_the_materialized_engine() {
+    // (b) Payload content never feeds back into event timing, so a dense
+    // virtual population under the same costs replays the materialized
+    // engine's schedule event for event. cost_dim = d makes the two
+    // traffic accountings directly comparable (the materialized backend
+    // bills real payload scalars; the virtual plane bills cost_dim).
+    let topo = Topology::one_peer_expo(8);
+    let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 8)
+        .with_straggler(2, 3.0)
+        .unwrap();
+    let d = 6;
+    let steps = 11;
+
+    let mut params = ParamMatrix::random(&mut Rng::new(17), 8, d, 1.0);
+    let mut mat = AsyncGossip::new(&topo, &costs, d, d, 2, AlgorithmKind::Gossip, usize::MAX, &params)
+        .unwrap();
+    mat.enable_trace();
+    let mut backend = SharedBackend::new(&topo, d, &costs, d, Compression::None);
+    let pool = WorkerPool::new(1);
+    let mut mat_clocks = VirtualClocks::new(&topo);
+    let mut step = |p: &mut ParamMatrix, b: &[(usize, usize)]| fake_step(p, b);
+    let mut sync = |_k: usize, _p: &mut ParamMatrix| -> anyhow::Result<()> { Ok(()) };
+    mat.run_until(steps, &mut params, &mut backend, &pool, &mut mat_clocks, &costs, &mut step, &mut sync)
+        .unwrap();
+
+    let cfg = VirtualConfig { dim: d, seed: 23, churn: Vec::new(), regions: None };
+    let mut virt =
+        AsyncGossip::new_virtual(&topo, &costs, d, 2, AlgorithmKind::Gossip, usize::MAX, cfg)
+            .unwrap();
+    virt.enable_trace();
+    let mut virt_clocks = VirtualClocks::flat(8);
+    virt.run_virtual_until(steps, &mut virt_clocks).unwrap();
+
+    assert_eq!(mat.trace().unwrap(), virt.trace().unwrap(), "event schedules diverged");
+    assert_eq!(
+        mat_clocks.seconds().iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+        virt_clocks.seconds().iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+        "per-node clocks diverged"
+    );
+    assert_eq!(mat.histogram(), virt.histogram(), "staleness accounting diverged");
+    let (mt, vt) = (backend.total(), virt.virt_stats());
+    assert_eq!((mt.scalars_sent, mt.msgs), (vt.scalars_sent, vt.msgs));
+    assert_eq!(mt.sim_seconds.to_bits(), vt.sim_seconds.to_bits());
+}
+
+#[test]
+fn seeded_churn_scripts_replay_bit_exactly() {
+    // (c) Property: any seeded crash/rejoin/flaky script, surrogate or
+    // dense, replays to identical traces, clocks, traffic, and state when
+    // driven with the same chunking.
+    proptest::check("seeded churn replays bit-exactly", |rng| {
+        let n = 4 + rng.below(9) as usize;
+        let topo = if rng.below(2) == 0 { Topology::ring(n) } else { Topology::one_peer_expo(n) };
+        let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), n);
+        let script = ChurnScript::seeded(rng.next_u64(), &topo, 1 + rng.below(4) as usize, 3.0)
+            .map_err(|e| e.to_string())?;
+        let dim = if rng.below(2) == 0 { 0 } else { 3 };
+        let seed = rng.next_u64();
+        let steps = 6 + rng.below(7) as usize;
+        let mut run = || {
+            let cfg = VirtualConfig { dim, seed, churn: script.events.clone(), regions: None };
+            let mut eng = AsyncGossip::new_virtual(
+                &topo, &costs, 1_000_000, 2, AlgorithmKind::GossipPga, 4, cfg,
+            )
+            .unwrap();
+            eng.enable_trace();
+            let mut clocks = VirtualClocks::flat(n);
+            for t in [steps / 2, steps] {
+                eng.run_virtual_until(t, &mut clocks).unwrap();
+            }
+            let means = eng.virt_means().map(|m| m.to_vec());
+            let state = eng.virt_dense().map(|p| p.as_slice().to_vec());
+            (
+                eng.trace().unwrap().to_vec(),
+                clocks.seconds().iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                eng.virt_stats(),
+                eng.churn_counts(),
+                means.map(|m| m.iter().map(|x| x.to_bits()).collect::<Vec<_>>()),
+                state.map(|s| s.iter().map(|x| x.to_bits()).collect::<Vec<_>>()),
+            )
+        };
+        let a = run();
+        let b = run();
+        proptest::ensure(a == b, format!("replay diverged on {:?} n={n} dim={dim}", topo.kind))
+    });
+}
+
+#[test]
+fn sweep_reports_are_a_pure_function_of_the_spec() {
+    // (d) The full driver — churn, regions, stragglers, curve sampling,
+    // transient detection — replays to an identical report.
+    let mut spec = SweepSpec::massive_n(24, 16, 9);
+    spec.log_points = 4;
+    spec.stragglers = vec![(3, 2.5)];
+    spec.regions = Some(RegionMap::tiers(24, 3, 1.0, 5.0).unwrap());
+    spec.churn = ChurnScript::seeded(5, &spec.topo, 2, 4.0).unwrap().events;
+    let a = run_sweep(&spec).unwrap();
+    let b = run_sweep(&spec).unwrap();
+    assert_eq!(a, b, "sweep must be replayable from its spec");
+    assert_eq!(a.curve.len(), 4);
+    assert!(a.surrogate);
+}
+
+#[test]
+fn massive_population_sweep_is_bounded_and_audited() {
+    // (e) The flagship scale: a one-peer-expo population with seeded
+    // churn completes, and the allocation audit holds — the dense
+    // spectral path is skipped (no n x n), and surrogate mode never
+    // materializes a dense payload (no per-edge d-vectors).
+    let n: usize = if std::env::var("GOSSIP_PGA_FAST").is_ok() { 10_000 } else { 100_000 };
+    let mut spec = SweepSpec::massive_n(n, 2, 7);
+    spec.log_points = 1;
+    spec.churn = ChurnScript::seeded(3, &spec.topo, 2, 1.0).unwrap().events;
+    let report = run_sweep(&spec).unwrap();
+    assert_eq!(report.n, n);
+    assert!(report.surrogate);
+    assert!(matches!(report.beta, BetaReport::Skipped { .. }), "beta must skip the dense path");
+    assert_eq!(report.peak_dense_scalars, 0, "surrogate mode allocated dense payloads");
+    assert!(
+        report.peak_live_slots <= report.num_links,
+        "pool grew past the per-link bound: {} slots for {} links",
+        report.peak_live_slots,
+        report.num_links
+    );
+    let last = report.curve.last().unwrap();
+    assert_eq!(last.step, 2);
+    assert!(last.time > 0.0 && last.scalars > 0 && last.msgs > 0);
+    assert!(last.consensus.is_finite());
+}

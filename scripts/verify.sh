@@ -18,7 +18,14 @@
 #      respects --max-staleness under multi-stragglers, checkpoint v5
 #      resumes mid-flight payloads bit-exactly, and the event order is
 #      pool-size-invariant (no AOT artifacts needed)
-#   7. comm-accounting smoke: the rewritten tab17 bench replays a schedule
+#   7. population smoke at PROPTEST_CASES=16 + GOSSIP_PGA_FAST: the virtual
+#      population plane — full materialization reproduces the per-link
+#      storage engine bit-exactly on both backends, the dense virtual plane
+#      replays the materialized event schedule, seeded churn scripts replay
+#      bit-exactly, sweeps are pure functions of their spec, and the
+#      large-n smoke (GOSSIP_PGA_FAST trims the flagship 10^5 to 10^4)
+#      passes the allocation audit (beta skipped, zero dense payloads)
+#   8. comm-accounting smoke: the rewritten tab17 bench replays a schedule
 #      on both CommPlane backends and asserts measured == predicted ==
 #      analytic traffic, the straggler gate (gossip's critical path
 #      degrades less than all-reduce's under a seeded 4x straggler), AND
@@ -64,8 +71,11 @@ PROPTEST_CASES=16 GOSSIP_PGA_TEST_THREADS=4 cargo test -q --test properties
 echo "==> virtual-time plane: homogeneous bit-exactness + straggler properties"
 PROPTEST_CASES=16 cargo test -q --test virtual_time
 
-echo "==> event plane: strict-mode anchor + staleness bound + v5 resume + determinism"
+echo "==> event plane: strict-mode anchor + staleness bound + v6 resume + determinism"
 PROPTEST_CASES=16 cargo test -q --test eventsim
+
+echo "==> population plane: materialization anchor + churn replay + large-n smoke (n = 10^4)"
+PROPTEST_CASES=16 GOSSIP_PGA_FAST=1 cargo test -q --test population
 
 echo "==> CommPlane accounting smoke incl. straggler + event-plane gates (tab17, fast mode)"
 GOSSIP_PGA_FAST=1 cargo bench --bench tab17_comm_overhead
