@@ -16,7 +16,13 @@
 //!     — strict async asserts bit-identical params + clocks vs BSP;
 //!     relaxed async asserts a no-worse simulated critical path
 //!   * virtual population sweep scaling: per-row wall time + peak RSS
-//!     across a virtual-n sweep (10^3 → 10^5), emitted to BENCH_6.json
+//!     across a virtual-n sweep (10^3 → 10^5)
+//!   * transport plane: tcp (real loopback sockets) vs bus (in-proc
+//!     channels) vs shared (fused mix) gossip + global average at the
+//!     same pool size — all three bit-identical
+//!
+//! The sweep and transport rows land in BENCH_7.json, anchored at
+//! CARGO_MANIFEST_DIR (not the CWD — `cargo bench` runs from wherever).
 //!
 //!     cargo bench --bench perf_hotpath
 
@@ -24,7 +30,8 @@ use std::sync::Arc;
 
 use gossip_pga::algorithms::AlgorithmKind;
 use gossip_pga::collective::{bus, ring_all_reduce, run_nodes};
-use gossip_pga::comm::{BackendKind, BusBackend, CommBackend, Compression, SharedBackend};
+use gossip_pga::comm::{BackendKind, BusBackend, CommBackend, Compression, SharedBackend, TcpBackend};
+use gossip_pga::jsonio::{self, Json};
 use gossip_pga::coordinator::mixer::{axpy, Mixer};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::{CostModel, NodeCosts};
@@ -63,6 +70,8 @@ fn trainer_opts(n: usize, threads: usize, regime: Regime) -> TrainerOptions {
         max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::None,
+        round_timeout: 0.0,
+        listen: "127.0.0.1:0".to_string(),
     }
 }
 
@@ -70,15 +79,16 @@ fn main() -> anyhow::Result<()> {
     println!("# §Perf hot-path microbenchmarks\n");
     let mut t = Table::new(&["component", "config", "mean", "p95", "throughput"]);
 
-    // --- BENCH_6: virtual population sweep scaling --------------------------
+    let fast = std::env::var("GOSSIP_PGA_FAST").is_ok();
+    let mut transport_rows: Vec<Json> = Vec::new();
+
+    // --- BENCH_7 part 1: virtual population sweep scaling -------------------
     // The population plane's memory-scaling claim, measured: per-row wall
     // time and peak RSS across a virtual-n sweep (surrogate plane, seeded
     // churn, a few iterations each). Runs FIRST so VmHWM — a process-wide
     // high-water mark — is not polluted by the deep-learning-d sections
-    // below. `GOSSIP_PGA_FAST=1` drops the 10^5 flagship row. Rows land in
-    // BENCH_6.json for the trajectory log.
-    {
-        use gossip_pga::jsonio::{self, Json};
+    // below. `GOSSIP_PGA_FAST=1` drops the 10^5 flagship row.
+    let population_rows = {
         use gossip_pga::population::{run_sweep, ChurnScript, SweepSpec};
 
         /// Linux VmHWM (peak resident set) in bytes; None off-Linux.
@@ -89,7 +99,6 @@ fn main() -> anyhow::Result<()> {
             Some(kb * 1024)
         }
 
-        let fast = std::env::var("GOSSIP_PGA_FAST").is_ok();
         let sizes: &[usize] =
             if fast { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000] };
         let mut rows = Vec::new();
@@ -130,14 +139,8 @@ fn main() -> anyhow::Result<()> {
                 ("peak_rss_bytes", rss.map_or(Json::Null, |b| Json::Num(b as f64))),
             ]));
         }
-        let doc = jsonio::obj(vec![
-            ("bench", Json::Str("virtual_population_sweep".into())),
-            ("fast", Json::Bool(fast)),
-            ("rows", Json::Arr(rows)),
-        ]);
-        std::fs::write("BENCH_6.json", doc.dump() + "\n")?;
-        println!("wrote BENCH_6.json");
-    }
+        rows
+    };
 
     // --- axpy ------------------------------------------------------------
     let d = 12_235_776; // e2e transformer flat dim
@@ -251,10 +254,11 @@ fn main() -> anyhow::Result<()> {
         format!("{:.1} GB/s agg", (8 * 2 * dd * 4) as f64 / s.mean / 1e9),
     ]);
 
-    // --- CommPlane: bus backend vs shared backend gossip --------------------
+    // --- BENCH_7 part 2: tcp vs bus vs shared transport ---------------------
     // The price of real message passing relative to the in-proc fused mix,
-    // at the same pool size; the final matrices must agree bit-for-bit
-    // (the unified-plane equivalence contract).
+    // at the same pool size: shared (fused), bus (mpsc channels), tcp (real
+    // loopback sockets, framed streams). The final matrices must agree
+    // bit-for-bit across all three (the unified-plane equivalence contract).
     {
         let n = 16;
         let dd = 1_000_000usize;
@@ -262,10 +266,14 @@ fn main() -> anyhow::Result<()> {
         let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), n);
         let mut p_shared = random_matrix(&mut rng, n, dd);
         let mut p_bus = p_shared.clone();
+        let mut p_tcp = p_shared.clone();
         let mut shared =
             SharedBackend::new(&topo, dd, &costs, 25_500_000, Compression::None);
         let mut busb =
             BusBackend::new(&topo, dd, &costs, 25_500_000, Compression::None, true);
+        let mut tcpb = TcpBackend::new_loopback(
+            &topo, dd, &costs, 25_500_000, Compression::None, true, "127.0.0.1:0",
+        )?;
         let comm_pool = WorkerPool::new(threads_avail.clamp(2, 8));
         let s_shared = measure(2, 10, || {
             shared.gossip(&mut p_shared, &comm_pool).unwrap();
@@ -273,12 +281,21 @@ fn main() -> anyhow::Result<()> {
         let s_bus = measure(2, 10, || {
             busb.gossip(&mut p_bus, &comm_pool).unwrap();
         });
+        let s_tcp = measure(2, 10, || {
+            tcpb.gossip(&mut p_tcp, &comm_pool).unwrap();
+        });
         assert_eq!(
             shared.gossip_clock(),
             busb.gossip_clock(),
             "backends ran different round counts"
         );
+        assert_eq!(
+            shared.gossip_clock(),
+            tcpb.gossip_clock(),
+            "tcp ran a different round count"
+        );
         assert_eq!(p_shared, p_bus, "bus gossip diverged from shared gossip");
+        assert_eq!(p_shared, p_tcp, "tcp gossip diverged from shared gossip");
         t.rowv(vec![
             "gossip, shared backend".into(),
             format!("ring n = {n}, d = 1M"),
@@ -294,9 +311,23 @@ fn main() -> anyhow::Result<()> {
             format!("{:.1} GB/s", (n * 3 * dd * 4) as f64 / s_bus.mean / 1e9),
         ]);
         t.rowv(vec![
+            "gossip, tcp backend".into(),
+            format!("ring n = {n}, d = 1M, loopback sockets"),
+            fmt_duration(s_tcp.mean),
+            fmt_duration(s_tcp.p95),
+            format!("{:.1} GB/s", (n * 3 * dd * 4) as f64 / s_tcp.mean / 1e9),
+        ]);
+        t.rowv(vec![
             "  -> bus vs shared".into(),
             "real send/recv + copies".into(),
             format!("{:.2}x slower", s_bus.mean / s_shared.mean),
+            "-".into(),
+            "(params bit-identical)".into(),
+        ]);
+        t.rowv(vec![
+            "  -> tcp vs bus".into(),
+            "kernel socket + framing".into(),
+            format!("{:.2}x slower", s_tcp.mean / s_bus.mean),
             "-".into(),
             "(params bit-identical)".into(),
         ]);
@@ -306,7 +337,11 @@ fn main() -> anyhow::Result<()> {
         let s_bus_avg = measure(1, 5, || {
             busb.global_average(&mut p_bus, &comm_pool).unwrap();
         });
+        let s_tcp_avg = measure(1, 5, || {
+            tcpb.global_average(&mut p_tcp, &comm_pool).unwrap();
+        });
         assert_eq!(p_shared, p_bus, "bus global average diverged from shared");
+        assert_eq!(p_shared, p_tcp, "tcp global average diverged from shared");
         t.rowv(vec![
             "global average, shared backend".into(),
             format!("n = {n}, d = 1M"),
@@ -321,6 +356,45 @@ fn main() -> anyhow::Result<()> {
             fmt_duration(s_bus_avg.p95),
             format!("{:.1} GB/s", (n * 2 * dd * 4) as f64 / s_bus_avg.mean / 1e9),
         ]);
+        t.rowv(vec![
+            "global average, tcp backend".into(),
+            format!("n = {n}, d = 1M, chunked over sockets"),
+            fmt_duration(s_tcp_avg.mean),
+            fmt_duration(s_tcp_avg.p95),
+            format!("{:.1} GB/s", (n * 2 * dd * 4) as f64 / s_tcp_avg.mean / 1e9),
+        ]);
+        let mut push = |op: &str, backend: &str, s: &gossip_pga::harness::Stats| {
+            transport_rows.push(jsonio::obj(vec![
+                ("op", Json::Str(op.into())),
+                ("backend", Json::Str(backend.into())),
+                ("n", Json::Num(n as f64)),
+                ("d", Json::Num(dd as f64)),
+                ("wall_seconds", Json::Num(s.mean)),
+                ("p95_seconds", Json::Num(s.p95)),
+                ("bit_identical", Json::Bool(true)),
+            ]));
+        };
+        push("gossip", "shared", &s_shared);
+        push("gossip", "bus", &s_bus);
+        push("gossip", "tcp", &s_tcp);
+        push("global_average", "shared", &s_shared_avg);
+        push("global_average", "bus", &s_bus_avg);
+        push("global_average", "tcp", &s_tcp_avg);
+    }
+
+    // BENCH_7: anchored at the manifest dir so the artifact lands in the
+    // repo root no matter where `cargo bench` is launched from (the BENCH_6
+    // CWD-relative write is why no trajectory was ever committed).
+    {
+        let doc = jsonio::obj(vec![
+            ("bench", Json::Str("transport_and_population".into())),
+            ("fast", Json::Bool(fast)),
+            ("transport_rows", Json::Arr(std::mem::take(&mut transport_rows))),
+            ("population_rows", Json::Arr(population_rows)),
+        ]);
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_7.json");
+        std::fs::write(&path, doc.dump() + "\n")?;
+        println!("wrote {}", path.display());
     }
 
     // --- PJRT grad exec ----------------------------------------------------

@@ -38,6 +38,8 @@ fn opts(algo: AlgorithmKind, n: usize, seed: u64) -> TrainerOptions {
         max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::None,
+        round_timeout: 0.0,
+        listen: "127.0.0.1:0".to_string(),
     }
 }
 

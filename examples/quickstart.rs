@@ -57,6 +57,8 @@ fn main() -> anyhow::Result<()> {
             max_staleness: 0,
             backend: BackendKind::Shared,
             compression: Compression::None,
+            round_timeout: 0.0,
+            listen: "127.0.0.1:0".to_string(),
         };
         let mut trainer = Trainer::new(workload, init, opts)?;
         let hist = trainer.run(steps, algo.display())?;

@@ -86,6 +86,8 @@ fn main() -> anyhow::Result<()> {
         max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::None,
+        round_timeout: 0.0,
+        listen: "127.0.0.1:0".to_string(),
     };
     let mut trainer = Trainer::new(workload, init, opts)?;
 
@@ -113,6 +115,8 @@ fn main() -> anyhow::Result<()> {
             stale_max: 0,
             stale_mean: 0.0,
             link_util: 0.0,
+            peer_drops: trainer.peer_drops(),
+            row_renorms: trainer.row_renorms(),
         });
         if k % 10 == 0 || k + 1 == steps {
             println!(

@@ -24,13 +24,139 @@
 //! in-neighbor's endpoint drops, which is what turns a crashed peer into a
 //! clean `Err` instead of a deadlock (see
 //! `node_failure_surfaces_as_error_not_hang`).
+//!
+//! §Deadlines: a peer that *wedges* — alive, channel open, transmitting
+//! nothing — used to park its receivers forever ([`Endpoint::recv_from`]
+//! had only the Disconnected exit). Every endpoint now carries an optional
+//! receive deadline ([`Endpoint::set_recv_deadline`]): a stalled peer
+//! surfaces as a typed [`RecvTimeout`] naming the silent node, which the
+//! round state machine ([`crate::coordinator::rounds`]) converts into a
+//! membership drop instead of a hang. Messages are epoch-tagged so a round
+//! retried after a drop discards the aborted round's half-delivered frames.
+//!
+//! §Transports: the [`Wire`] trait is the transport contract the generic
+//! message-passing backend ([`crate::comm::BusCore`]) is written against;
+//! [`Endpoint`] (mpsc channels) and [`tcp::TcpEndpoint`] (length-prefixed
+//! frames over real loopback sockets) both implement it, which is what
+//! makes the TCP backend's uncompressed trajectories bit-identical to the
+//! bus's: same phase code, same kernel, different bytes underneath.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+pub mod tcp;
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-/// A tagged message: (source, payload).
-type Msg = (usize, Vec<f32>);
+/// A tagged message: (source, round epoch, payload). The epoch is stamped
+/// by the sender and filtered by the receiver so a round retried after a
+/// peer drop never mixes the aborted attempt's half-delivered frames.
+pub type Msg = (usize, u32, Vec<f32>);
+
+/// The typed error a deadline-armed receive returns when a peer stays
+/// silent: the waiting node, the silent node, and how long it waited.
+/// The worker pool flattens job errors to rendered strings, so
+/// [`stalled_peer`] recovers the peer index from the message text too.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecvTimeout {
+    pub waiter: usize,
+    pub from: usize,
+    pub waited: Duration,
+}
+
+impl std::fmt::Display for RecvTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "node {}: no message from stalled peer {} within {:?}",
+            self.waiter, self.from, self.waited
+        )
+    }
+}
+
+impl std::error::Error for RecvTimeout {}
+
+/// Recover the silent peer's index from a rendered [`RecvTimeout`] message
+/// (possibly wrapped in a pool-job / anyhow context chain). `None` for any
+/// other error text — callers must treat those as real failures.
+pub fn stalled_peer(text: &str) -> Option<usize> {
+    let marker = "no message from stalled peer ";
+    let at = text.find(marker)? + marker.len();
+    let digits: &str =
+        &text[at..at + text[at..].chars().take_while(|c| c.is_ascii_digit()).count()];
+    digits.parse().ok()
+}
+
+/// The transport contract shared by the mpsc [`Endpoint`] and the framed
+/// [`tcp::TcpEndpoint`]: rank-addressed billed sends, source-selective
+/// receives with parking, an optional stalled-peer deadline, and epoch
+/// tagging for clean round retries. [`crate::comm::BusCore`] is generic
+/// over this, so every transport runs the exact same collective phases.
+pub trait Wire: Send {
+    fn rank(&self) -> usize;
+    /// Out-routes currently held (regression tests count these to pin the
+    /// lazy-edge contract).
+    fn degree(&self) -> usize;
+    /// Cumulative traffic: (wire scalars billed, messages sent).
+    fn traffic(&self) -> (u64, u64);
+    fn send_billed(&mut self, to: usize, payload: Vec<f32>, wire_scalars: u64) -> Result<()>;
+    fn send(&mut self, to: usize, payload: Vec<f32>) -> Result<()> {
+        let wire = payload.len() as u64;
+        self.send_billed(to, payload, wire)
+    }
+    fn recv_from(&mut self, from: usize) -> Result<Vec<f32>>;
+    /// Arm (`Some`) or disarm (`None`) the per-receive stalled-peer
+    /// deadline. Disarmed receives block until a message or a hangup —
+    /// the pre-deadline behavior, bit for bit.
+    fn set_recv_deadline(&mut self, deadline: Option<Duration>);
+    /// Enter round `epoch`: parked frames are cleared and in-flight frames
+    /// from older epochs are discarded on receipt.
+    fn reset_epoch(&mut self, epoch: u32);
+}
+
+/// Deadline-aware tagged receive shared by both transports: park
+/// out-of-order arrivals, discard stale-epoch frames, and surface a
+/// stalled peer as a typed [`RecvTimeout`] instead of blocking forever.
+pub(crate) fn recv_tagged(
+    rank: usize,
+    receiver: &Receiver<Msg>,
+    parked: &mut Vec<Msg>,
+    epoch: u32,
+    deadline: Option<Duration>,
+    from: usize,
+) -> Result<Vec<f32>> {
+    if let Some(pos) = parked.iter().position(|(src, e, _)| *src == from && *e == epoch) {
+        return Ok(parked.remove(pos).2);
+    }
+    let limit = deadline.map(|dl| (Instant::now() + dl, dl));
+    loop {
+        let (src, e, payload) = match limit {
+            None => receiver.recv().map_err(|_| anyhow!("bus closed waiting for {from}"))?,
+            Some((at, dl)) => {
+                match receiver.recv_timeout(at.saturating_duration_since(Instant::now())) {
+                    Ok(m) => m,
+                    Err(RecvTimeoutError::Timeout) => {
+                        return Err(anyhow::Error::new(RecvTimeout {
+                            waiter: rank,
+                            from,
+                            waited: dl,
+                        }));
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Err(anyhow!("bus closed waiting for {from}"));
+                    }
+                }
+            }
+        };
+        if e != epoch {
+            continue; // a dropped round's leftover frame
+        }
+        if src == from {
+            return Ok(payload);
+        }
+        parked.push((src, e, payload));
+    }
+}
 
 /// Per-node communication endpoint on the in-proc bus.
 pub struct Endpoint {
@@ -43,6 +169,11 @@ pub struct Endpoint {
     receiver: Receiver<Msg>,
     /// Out-of-order arrivals parked until requested.
     parked: Vec<Msg>,
+    /// Round epoch stamped on every send and required of every receive.
+    epoch: u32,
+    /// Optional stalled-peer deadline; `None` (the default) blocks forever
+    /// exactly like the pre-deadline endpoint.
+    recv_deadline: Option<Duration>,
     /// Traffic accounting: wire scalars (f32-equivalents billed per send)
     /// and message count.
     pub scalars_sent: u64,
@@ -61,6 +192,17 @@ pub fn bus(n: usize) -> Vec<Endpoint> {
 /// ignored, duplicates deduplicated). Sparse topologies pay O(edges) setup
 /// instead of the old fully-connected O(n^2) sender table.
 pub fn bus_for(n: usize, out_edges: &[Vec<usize>]) -> Vec<Endpoint> {
+    bus_with_handles(n, out_edges).0
+}
+
+/// [`bus_for`], but also returning the raw inbox senders in rank order so
+/// a caller can wire **additional** edges later via
+/// [`Endpoint::add_sender`] — the lazy-edge hook the bus backend uses to
+/// defer its all-to-all chunk-exchange table until the first
+/// `global_average` actually needs it. Dropping the handles restores the
+/// exact hangup semantics of [`bus_for`] (a node's receiver closes when
+/// all in-neighbors drop).
+pub fn bus_with_handles(n: usize, out_edges: &[Vec<usize>]) -> (Vec<Endpoint>, Vec<Sender<Msg>>) {
     assert_eq!(out_edges.len(), n, "one edge list per node");
     let mut txs = Vec::with_capacity(n);
     let mut rxs = Vec::with_capacity(n);
@@ -69,7 +211,8 @@ pub fn bus_for(n: usize, out_edges: &[Vec<usize>]) -> Vec<Endpoint> {
         txs.push(tx);
         rxs.push(rx);
     }
-    rxs.into_iter()
+    let endpoints = rxs
+        .into_iter()
         .enumerate()
         .map(|(rank, receiver)| {
             let mut targets: Vec<usize> =
@@ -88,11 +231,14 @@ pub fn bus_for(n: usize, out_edges: &[Vec<usize>]) -> Vec<Endpoint> {
                     .collect(),
                 receiver,
                 parked: Vec::new(),
+                epoch: 0,
+                recv_deadline: None,
                 scalars_sent: 0,
                 msgs_sent: 0,
             }
         })
-        .collect()
+        .collect();
+    (endpoints, txs)
 }
 
 impl Endpoint {
@@ -115,30 +261,73 @@ impl Endpoint {
         // traffic (tests assert both failure paths leave counters alone).
         self.senders[idx]
             .1
-            .send((self.rank, payload))
+            .send((self.rank, self.epoch, payload))
             .map_err(|_| anyhow!("node {to} hung up"))?;
         self.scalars_sent += wire_scalars;
         self.msgs_sent += 1;
         Ok(())
     }
 
-    /// Receive the next message from node `from` (parking others).
+    /// Receive the next message from node `from` (parking others). With a
+    /// deadline armed, a silent `from` yields a typed [`RecvTimeout`]
+    /// instead of parking this thread forever.
     pub fn recv_from(&mut self, from: usize) -> Result<Vec<f32>> {
-        if let Some(pos) = self.parked.iter().position(|(src, _)| *src == from) {
-            return Ok(self.parked.remove(pos).1);
+        recv_tagged(self.rank, &self.receiver, &mut self.parked, self.epoch, self.recv_deadline, from)
+    }
+
+    /// Arm (`Some`) or disarm (`None`) the stalled-peer receive deadline.
+    pub fn set_recv_deadline(&mut self, deadline: Option<Duration>) {
+        self.recv_deadline = deadline;
+    }
+
+    /// Enter round `epoch`; parked frames and already-queued older-epoch
+    /// frames are discarded (in-flight stragglers are filtered on receipt).
+    pub fn reset_epoch(&mut self, epoch: u32) {
+        self.epoch = epoch;
+        self.parked.clear();
+        while self.receiver.try_recv().is_ok() {}
+    }
+
+    /// Add an out-route to `to` after construction (idempotent) — the
+    /// lazy-edge hook behind [`bus_with_handles`].
+    pub fn add_sender(&mut self, to: usize, tx: Sender<Msg>) {
+        assert!(to < self.n && to != self.rank, "edge {}->{to} invalid for n={}", self.rank, self.n);
+        if let Err(pos) = self.senders.binary_search_by_key(&to, |(j, _)| *j) {
+            self.senders.insert(pos, (to, tx));
         }
-        loop {
-            let (src, payload) =
-                self.receiver.recv().map_err(|_| anyhow!("bus closed waiting for {from}"))?;
-            if src == from {
-                return Ok(payload);
-            }
-            self.parked.push((src, payload));
-        }
+    }
+
+    /// Number of out-routes currently held.
+    pub fn degree(&self) -> usize {
+        self.senders.len()
     }
 
     pub fn bytes_sent(&self) -> u64 {
         self.scalars_sent * 4
+    }
+}
+
+impl Wire for Endpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+    fn degree(&self) -> usize {
+        Endpoint::degree(self)
+    }
+    fn traffic(&self) -> (u64, u64) {
+        (self.scalars_sent, self.msgs_sent)
+    }
+    fn send_billed(&mut self, to: usize, payload: Vec<f32>, wire_scalars: u64) -> Result<()> {
+        Endpoint::send_billed(self, to, payload, wire_scalars)
+    }
+    fn recv_from(&mut self, from: usize) -> Result<Vec<f32>> {
+        Endpoint::recv_from(self, from)
+    }
+    fn set_recv_deadline(&mut self, deadline: Option<Duration>) {
+        Endpoint::set_recv_deadline(self, deadline)
+    }
+    fn reset_epoch(&mut self, epoch: u32) {
+        Endpoint::reset_epoch(self, epoch)
     }
 }
 
@@ -623,6 +812,116 @@ mod tests {
         drop(b);
         assert!(a.send(1, vec![1.0]).is_err());
         assert_eq!((a.msgs_sent, a.scalars_sent), (0, 0), "undelivered sends are not traffic");
+    }
+
+    #[test]
+    fn recv_deadline_surfaces_stalled_peer_not_hang() {
+        // ISSUE 7 satellite: node 0 is alive (channel open) but wedged —
+        // pre-deadline, node 1's recv_from(0) parked forever. Watchdogged:
+        // the receive must come back as a typed RecvTimeout naming node 0.
+        let mut eps = bus(2);
+        let mut b = eps.pop().unwrap();
+        let _a = eps.pop().unwrap(); // wedged: never sends, never drops
+        b.set_recv_deadline(Some(Duration::from_millis(50)));
+        let (done_tx, done_rx) = channel();
+        std::thread::spawn(move || {
+            let r = b.recv_from(0);
+            done_tx.send(r).ok();
+        });
+        let r = done_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("watchdog: deadline-armed recv_from hung on a wedged peer");
+        let err = r.unwrap_err();
+        let timeout = err.downcast_ref::<RecvTimeout>().expect("typed RecvTimeout");
+        assert_eq!((timeout.waiter, timeout.from), (1, 0));
+        assert_eq!(stalled_peer(&format!("{err:#}")), Some(0));
+    }
+
+    #[test]
+    fn disarmed_deadline_keeps_blocking_semantics() {
+        // Default endpoints still use the blocking receive: a crashed
+        // (dropped) peer is a clean "bus closed" error, not a RecvTimeout.
+        let mut eps = bus(2);
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        drop(a);
+        let err = b.recv_from(0).unwrap_err();
+        assert!(err.downcast_ref::<RecvTimeout>().is_none());
+        assert!(format!("{err}").contains("bus closed"), "{err}");
+    }
+
+    #[test]
+    fn stalled_peer_parses_rendered_and_wrapped_errors() {
+        let e = RecvTimeout { waiter: 3, from: 17, waited: Duration::from_millis(250) };
+        assert_eq!(stalled_peer(&e.to_string()), Some(17));
+        // The worker pool flattens job errors into "pool job i failed: ..."
+        // strings; attribution must survive that wrapping.
+        let wrapped = format!("pool job 3 failed: gossip recv phase: {e}");
+        assert_eq!(stalled_peer(&wrapped), Some(17));
+        assert_eq!(stalled_peer("bus closed waiting for 2"), None);
+        assert_eq!(stalled_peer("node 1 hung up"), None);
+    }
+
+    #[test]
+    fn stale_epoch_frames_are_discarded() {
+        // A round retried after a drop must not mix the aborted attempt's
+        // half-delivered frames: bump the receiver's epoch, then deliver a
+        // stale frame followed by a current one.
+        let mut eps = bus(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        b.reset_epoch(1);
+        a.send(1, vec![1.0]).unwrap(); // epoch 0: the aborted round's frame
+        a.reset_epoch(1);
+        a.send(1, vec![2.0]).unwrap(); // epoch 1: the retry's frame
+        assert_eq!(b.recv_from(0).unwrap(), vec![2.0], "stale frame skipped");
+        // Nothing else queued: with a deadline armed the next recv times out
+        // instead of replaying the stale payload.
+        b.set_recv_deadline(Some(Duration::from_millis(20)));
+        assert!(b.recv_from(0).unwrap_err().downcast_ref::<RecvTimeout>().is_some());
+    }
+
+    #[test]
+    fn reset_epoch_clears_parked_frames() {
+        let mut eps = bus(3);
+        let mut c = eps.pop().unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(2, vec![1.0]).unwrap();
+        b.send(2, vec![2.0]).unwrap();
+        // Park node 0's frame by asking for node 1's first.
+        assert_eq!(c.recv_from(1).unwrap(), vec![2.0]);
+        c.reset_epoch(1);
+        a.reset_epoch(1);
+        a.send(2, vec![3.0]).unwrap();
+        assert_eq!(c.recv_from(0).unwrap(), vec![3.0], "parked epoch-0 frame dropped");
+    }
+
+    #[test]
+    fn add_sender_wires_lazy_edges() {
+        // A pure-gossip ring bus holds 2 senders per node; wiring the
+        // chunk-exchange edges later brings it to n-1 — the lazy
+        // construction contract the bus backend relies on.
+        let n = 6;
+        let edges: Vec<Vec<usize>> =
+            (0..n).map(|i: usize| vec![(i + 1) % n, (i + n - 1) % n]).collect();
+        let (mut eps, txs) = bus_with_handles(n, &edges);
+        assert!(eps.iter().all(|ep| ep.degree() == 2));
+        assert!(eps[0].send(3, vec![1.0]).is_err(), "no chord edge yet");
+        for ep in eps.iter_mut() {
+            for (j, tx) in txs.iter().enumerate() {
+                if j != ep.rank {
+                    ep.add_sender(j, tx.clone());
+                    ep.add_sender(j, tx.clone()); // idempotent
+                }
+            }
+        }
+        assert!(eps.iter().all(|ep| ep.degree() == n - 1));
+        let mut d = eps.remove(3);
+        let mut a = eps.remove(0);
+        a.send(3, vec![7.0]).unwrap();
+        drop(txs); // handles gone: hangup semantics back to normal
+        assert_eq!(d.recv_from(0).unwrap(), vec![7.0]);
     }
 
     #[test]

@@ -1,0 +1,426 @@
+//! Real-socket transport: length-prefixed frames over loopback TCP.
+//!
+//! The mpsc bus simulates message passing; this module does it over actual
+//! `std::net::TcpStream`s so CommStats traffic is measured off a real wire.
+//! The shapes mirror [`super::Endpoint`] deliberately:
+//!
+//! * **per-edge streams** — [`tcp_loopback`] dials one stream per directed
+//!   edge in the out-edge lists it is given (the same lists `bus_for`
+//!   takes), and [`TcpFabric::connect`] wires additional edges lazily, the
+//!   hook the bus backend uses to defer its all-to-all chunk-exchange
+//!   table until the first `global_average`;
+//! * **frames** — every message is `u32 epoch | u32 count | count × f32`,
+//!   little-endian, preceded on each stream by a one-shot `u32 src`
+//!   handshake. A reader thread per inbound stream decodes frames into the
+//!   node's inbox channel, so the receive path is the *same*
+//!   [`super::recv_tagged`] the mpsc endpoint uses — parking,
+//!   epoch-filtering, and stalled-peer deadlines included;
+//! * **ports** — bind `host:0` and every node gets an OS-assigned port
+//!   (the verify.sh contract: no hardcoded ports, no flakes); a non-zero
+//!   port P pins node r to P + r for debugging.
+//!
+//! Crash detection differs from the mpsc bus on purpose: a TCP peer that
+//! dies does not atomically close its receivers' channels (other streams
+//! keep the inbox open), so liveness comes from the receive deadline — on a
+//! real network "slow" and "dead" are indistinguishable, which is exactly
+//! why the round state machine exists.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::{recv_tagged, Msg, Wire};
+
+/// Refuse frames claiming more than this many scalars (1 GiB of f32s) —
+/// a corrupt length prefix must not become a giant allocation.
+const MAX_FRAME_SCALARS: usize = 1 << 28;
+
+/// Decode loop for one inbound stream: read frames, push tagged messages
+/// into the node's inbox. Exits on EOF/error (peer gone) or when the inbox
+/// closes (endpoint dropped).
+fn reader_loop(mut stream: TcpStream, src: usize, tx: Sender<Msg>) {
+    let mut head = [0u8; 8];
+    loop {
+        if stream.read_exact(&mut head).is_err() {
+            return;
+        }
+        let epoch = u32::from_le_bytes(head[0..4].try_into().unwrap());
+        let count = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+        if count > MAX_FRAME_SCALARS {
+            return; // corrupt frame: drop the stream, not the process
+        }
+        let mut bytes = vec![0u8; count * 4];
+        if stream.read_exact(&mut bytes).is_err() {
+            return;
+        }
+        let payload: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        if tx.send((src, epoch, payload)).is_err() {
+            return;
+        }
+    }
+}
+
+/// The accept side of the loopback fabric: per-node listeners feeding
+/// per-stream reader threads. Kept alive only as long as new edges may
+/// still be dialed ([`TcpFabric::connect`]); dropping it shuts the
+/// acceptors down while established streams keep flowing.
+pub struct TcpFabric {
+    addrs: Vec<SocketAddr>,
+    shutdown: Arc<AtomicBool>,
+    acceptors: Vec<JoinHandle<()>>,
+}
+
+impl TcpFabric {
+    /// Listening addresses in rank order (OS-assigned ports visible here).
+    pub fn addrs(&self) -> &[SocketAddr] {
+        &self.addrs
+    }
+
+    /// Dial a new directed edge `ep.rank -> to` (idempotent: an existing
+    /// route is kept). This is the lazy chunk-exchange hook.
+    pub fn connect(&self, ep: &mut TcpEndpoint, to: usize) -> Result<()> {
+        ensure!(to < self.addrs.len() && to != ep.rank, "edge {}->{to} invalid", ep.rank);
+        if ep.has_route(to) {
+            return Ok(());
+        }
+        let mut stream = TcpStream::connect(self.addrs[to])
+            .with_context(|| format!("dial node {to} at {}", self.addrs[to]))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .write_all(&(ep.rank as u32).to_le_bytes())
+            .with_context(|| format!("handshake to node {to}"))?;
+        ep.add_route(to, stream);
+        Ok(())
+    }
+}
+
+impl Drop for TcpFabric {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Wake each acceptor with a throwaway dial so it observes the flag.
+        for addr in &self.addrs {
+            TcpStream::connect(addr).ok();
+        }
+        for h in self.acceptors.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+/// Per-node endpoint over real sockets: same API surface as the mpsc
+/// [`super::Endpoint`], same parking/epoch/deadline receive path, framed
+/// streams underneath.
+pub struct TcpEndpoint {
+    pub rank: usize,
+    pub n: usize,
+    /// Outgoing streams, sorted by target rank (per-edge, like senders).
+    writers: Vec<(usize, TcpStream)>,
+    receiver: Receiver<Msg>,
+    parked: Vec<Msg>,
+    epoch: u32,
+    recv_deadline: Option<Duration>,
+    pub scalars_sent: u64,
+    pub msgs_sent: u64,
+}
+
+impl TcpEndpoint {
+    /// Does this endpoint already hold a stream to `to`?
+    pub fn has_route(&self, to: usize) -> bool {
+        self.writers.binary_search_by_key(&to, |(j, _)| *j).is_ok()
+    }
+
+    fn add_route(&mut self, to: usize, stream: TcpStream) {
+        if let Err(pos) = self.writers.binary_search_by_key(&to, |(j, _)| *j) {
+            self.writers.insert(pos, (to, stream));
+        }
+    }
+
+    /// Number of out-routes currently held.
+    pub fn degree(&self) -> usize {
+        self.writers.len()
+    }
+
+    pub fn send(&mut self, to: usize, payload: Vec<f32>) -> Result<()> {
+        let wire = payload.len() as u64;
+        self.send_billed(to, payload, wire)
+    }
+
+    /// Frame and ship `payload`, billing `wire_scalars` — identical
+    /// accounting semantics to the mpsc endpoint: only a fully written
+    /// frame counts as traffic.
+    pub fn send_billed(&mut self, to: usize, payload: Vec<f32>, wire_scalars: u64) -> Result<()> {
+        let idx = self
+            .writers
+            .binary_search_by_key(&to, |(j, _)| *j)
+            .map_err(|_| anyhow!("node {} has no channel to node {to}", self.rank))?;
+        let mut frame = Vec::with_capacity(8 + payload.len() * 4);
+        frame.extend_from_slice(&self.epoch.to_le_bytes());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        for v in &payload {
+            frame.extend_from_slice(&v.to_le_bytes());
+        }
+        self.writers[idx].1.write_all(&frame).map_err(|_| anyhow!("node {to} hung up"))?;
+        self.scalars_sent += wire_scalars;
+        self.msgs_sent += 1;
+        Ok(())
+    }
+
+    /// Receive the next current-epoch frame from node `from` (parking
+    /// others); a deadline turns a silent peer into a typed
+    /// [`super::RecvTimeout`].
+    pub fn recv_from(&mut self, from: usize) -> Result<Vec<f32>> {
+        recv_tagged(self.rank, &self.receiver, &mut self.parked, self.epoch, self.recv_deadline, from)
+    }
+
+    pub fn set_recv_deadline(&mut self, deadline: Option<Duration>) {
+        self.recv_deadline = deadline;
+    }
+
+    pub fn reset_epoch(&mut self, epoch: u32) {
+        self.epoch = epoch;
+        self.parked.clear();
+        while self.receiver.try_recv().is_ok() {}
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        self.scalars_sent * 4
+    }
+}
+
+impl Wire for TcpEndpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+    fn degree(&self) -> usize {
+        TcpEndpoint::degree(self)
+    }
+    fn traffic(&self) -> (u64, u64) {
+        (self.scalars_sent, self.msgs_sent)
+    }
+    fn send_billed(&mut self, to: usize, payload: Vec<f32>, wire_scalars: u64) -> Result<()> {
+        TcpEndpoint::send_billed(self, to, payload, wire_scalars)
+    }
+    fn recv_from(&mut self, from: usize) -> Result<Vec<f32>> {
+        TcpEndpoint::recv_from(self, from)
+    }
+    fn set_recv_deadline(&mut self, deadline: Option<Duration>) {
+        TcpEndpoint::set_recv_deadline(self, deadline)
+    }
+    fn reset_epoch(&mut self, epoch: u32) {
+        TcpEndpoint::reset_epoch(self, epoch)
+    }
+}
+
+/// Build `n` loopback TCP endpoints wired with exactly the directed edges
+/// in `out_edges` (the [`super::bus_for`] contract over real sockets).
+///
+/// `bind` is `host:port`; port 0 lets the OS assign every node's port
+/// (the default and the CI contract), a non-zero port P pins node r to
+/// P + r. Returns the endpoints plus the [`TcpFabric`] that accepts future
+/// lazy edges — drop the fabric to freeze the edge set.
+pub fn tcp_loopback(
+    n: usize,
+    out_edges: &[Vec<usize>],
+    bind: &str,
+) -> Result<(Vec<TcpEndpoint>, TcpFabric)> {
+    ensure!(out_edges.len() == n, "one edge list per node");
+    let base: SocketAddr =
+        bind.parse().with_context(|| format!("listen address `{bind}` (want host:port)"))?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let mut addrs = Vec::with_capacity(n);
+    let mut listeners = Vec::with_capacity(n);
+    for rank in 0..n {
+        let mut addr = base;
+        if base.port() != 0 {
+            addr.set_port(
+                base.port()
+                    .checked_add(rank as u16)
+                    .ok_or_else(|| anyhow!("port range overflow at node {rank}"))?,
+            );
+        }
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind node {rank} at {addr}"))?;
+        addrs.push(listener.local_addr()?);
+        listeners.push(listener);
+    }
+
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel::<Msg>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+
+    let acceptors = listeners
+        .into_iter()
+        .zip(txs)
+        .map(|(listener, tx)| {
+            let shutdown = shutdown.clone();
+            std::thread::spawn(move || loop {
+                match listener.accept() {
+                    Ok((mut stream, _)) => {
+                        if shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        stream.set_nodelay(true).ok();
+                        // Bound the handshake read so a junk dial cannot
+                        // wedge the acceptor.
+                        stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+                        let mut hs = [0u8; 4];
+                        if stream.read_exact(&mut hs).is_err() {
+                            continue;
+                        }
+                        let src = u32::from_le_bytes(hs) as usize;
+                        stream.set_read_timeout(None).ok();
+                        let tx = tx.clone();
+                        std::thread::spawn(move || reader_loop(stream, src, tx));
+                    }
+                    Err(_) => {
+                        if shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+
+    let fabric = TcpFabric { addrs, shutdown, acceptors };
+    let mut endpoints: Vec<TcpEndpoint> = (0..n)
+        .map(|rank| TcpEndpoint {
+            rank,
+            n,
+            writers: Vec::new(),
+            receiver: rxs.remove(0),
+            parked: Vec::new(),
+            epoch: 0,
+            recv_deadline: None,
+            scalars_sent: 0,
+            msgs_sent: 0,
+        })
+        .collect();
+    for (rank, targets) in out_edges.iter().enumerate() {
+        let mut targets: Vec<usize> = targets.iter().copied().filter(|&j| j != rank).collect();
+        targets.sort_unstable();
+        targets.dedup();
+        for j in targets {
+            ensure!(j < n, "edge {rank}->{j} out of range for n={n}");
+            fabric.connect(&mut endpoints[rank], j)?;
+        }
+    }
+    Ok((endpoints, fabric))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{stalled_peer, RecvTimeout};
+    use super::*;
+
+    fn full_edges(n: usize) -> Vec<Vec<usize>> {
+        (0..n).map(|i| (0..n).filter(|&j| j != i).collect()).collect()
+    }
+
+    #[test]
+    fn frames_roundtrip_over_real_sockets() {
+        let (mut eps, _fabric) = tcp_loopback(2, &full_edges(2), "127.0.0.1:0").unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, vec![1.0, -2.5, 3.25]).unwrap();
+        assert_eq!(b.recv_from(0).unwrap(), vec![1.0, -2.5, 3.25]);
+        assert_eq!((a.scalars_sent, a.msgs_sent, a.bytes_sent()), (3, 1, 12));
+        // Billed wire size is decoupled from the dense payload, as on mpsc.
+        b.send_billed(0, vec![0.0; 8], 2).unwrap();
+        assert_eq!(a.recv_from(1).unwrap().len(), 8);
+        assert_eq!(b.scalars_sent, 2);
+    }
+
+    #[test]
+    fn os_assigns_distinct_ports() {
+        let (eps, fabric) = tcp_loopback(3, &full_edges(3), "127.0.0.1:0").unwrap();
+        let mut ports: Vec<u16> = fabric.addrs().iter().map(|a| a.port()).collect();
+        assert!(ports.iter().all(|&p| p != 0));
+        ports.sort_unstable();
+        ports.dedup();
+        assert_eq!(ports.len(), 3, "one distinct port per node");
+        drop(eps);
+    }
+
+    #[test]
+    fn out_of_order_arrivals_park_like_the_bus() {
+        let (mut eps, _fabric) = tcp_loopback(3, &full_edges(3), "127.0.0.1:0").unwrap();
+        let mut c = eps.pop().unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(2, vec![1.0]).unwrap();
+        b.send(2, vec![2.0]).unwrap();
+        assert_eq!(c.recv_from(1).unwrap(), vec![2.0]);
+        assert_eq!(c.recv_from(0).unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn missing_edge_is_a_clean_error() {
+        // Ring edges only: 0 -> 2 is not an edge; same message as the bus.
+        let edges: Vec<Vec<usize>> = (0..4).map(|i: usize| vec![(i + 1) % 4]).collect();
+        let (mut eps, _fabric) = tcp_loopback(4, &edges, "127.0.0.1:0").unwrap();
+        assert_eq!(eps[0].degree(), 1);
+        let err = eps[0].send(2, vec![1.0]).unwrap_err().to_string();
+        assert!(err.contains("no channel"), "{err}");
+        assert_eq!((eps[0].msgs_sent, eps[0].scalars_sent), (0, 0));
+    }
+
+    #[test]
+    fn lazy_connect_adds_routes_idempotently() {
+        let edges: Vec<Vec<usize>> = (0..4).map(|i: usize| vec![(i + 1) % 4]).collect();
+        let (mut eps, fabric) = tcp_loopback(4, &edges, "127.0.0.1:0").unwrap();
+        fabric.connect(&mut eps[0], 2).unwrap();
+        fabric.connect(&mut eps[0], 2).unwrap();
+        assert_eq!(eps[0].degree(), 2);
+        eps[0].send(2, vec![9.0]).unwrap();
+        let mut c = eps.remove(2);
+        assert_eq!(c.recv_from(0).unwrap(), vec![9.0]);
+    }
+
+    #[test]
+    fn stalled_tcp_peer_times_out_with_attribution() {
+        // Node 0 wedges (stream open, nothing sent): the deadline-armed
+        // receive must name node 0, watchdogged against hangs.
+        let (mut eps, _fabric) = tcp_loopback(2, &full_edges(2), "127.0.0.1:0").unwrap();
+        let mut b = eps.pop().unwrap();
+        let _a = eps.pop().unwrap();
+        b.set_recv_deadline(Some(Duration::from_millis(50)));
+        let (done_tx, done_rx) = channel();
+        std::thread::spawn(move || {
+            done_tx.send(b.recv_from(0)).ok();
+        });
+        let r = done_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("watchdog: deadline-armed tcp recv hung on a wedged peer");
+        let err = r.unwrap_err();
+        assert_eq!(err.downcast_ref::<RecvTimeout>().map(|t| t.from), Some(0));
+        assert_eq!(stalled_peer(&format!("{err:#}")), Some(0));
+    }
+
+    #[test]
+    fn stale_epoch_frames_filtered_on_the_wire() {
+        let (mut eps, _fabric) = tcp_loopback(2, &full_edges(2), "127.0.0.1:0").unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        b.reset_epoch(1);
+        a.send(1, vec![1.0]).unwrap(); // epoch 0: aborted round's frame
+        a.reset_epoch(1);
+        a.send(1, vec![2.0]).unwrap(); // epoch 1: the retry
+        // TCP preserves stream order, so the stale frame arrives first and
+        // must be filtered, not parked.
+        assert_eq!(b.recv_from(0).unwrap(), vec![2.0]);
+    }
+}

@@ -1,31 +1,50 @@
-//! [`BusBackend`]: the message-passing communication plane.
+//! [`BusCore`]: the message-passing communication plane, generic over its
+//! transport.
 //!
-//! One [`Endpoint`] per worker, built once with exactly the sender edges
-//! the run needs (the topology's out-neighbors across all rounds, plus the
-//! all-to-all chunk-exchange edges when the schedule global-averages).
-//! Every transmitted vector is actually serialized onto a channel and
-//! received on the other side — the same code path the `tab17` bench
-//! measures — so the traffic a training run reports IS measured traffic,
-//! read back from the endpoint counters.
+//! One [`Wire`] endpoint per worker, built once with exactly the sender
+//! edges the gossip schedule needs (the topology's out-neighbors across
+//! all rounds). [`BusBackend`] instantiates the core over mpsc
+//! [`Endpoint`]s; [`super::TcpBackend`] instantiates the *same* core over
+//! framed loopback sockets ([`crate::collective::tcp`]), which is what
+//! makes their uncompressed trajectories bit-identical: every transport
+//! runs these exact phases, kernels, and accumulation orders.
+//!
+//! §Lazy global edges: the all-to-all chunk-exchange table the global
+//! average needs is **not** built up front — `with_global` stores a
+//! one-shot connector that wires those edges on the first
+//! `global_average` call. A schedule that never global-averages (or a run
+//! killed before its first k·H boundary) pays O(gossip edges), not
+//! O(n^2); pure-gossip construction (`with_global = false`) still bails
+//! with a clean configuration error if a global average is requested.
 //!
 //! §Execution model: collectives run as *phases* sharded across the
 //! trainer's [`WorkerPool`] with a barrier between send- and receive-sides
-//! (channels are buffered, so a phase's receives can never block on a
+//! (sends are buffered/framed, so a phase's receives can never block on a
 //! same-phase send). This keeps one persistent engine for compute AND
 //! communication at any pool size — including 1 — with deterministic
-//! results: each node's arithmetic is self-contained and
-//! [`Endpoint::recv_from`] selects by source, so scheduling order cannot
-//! leak into the bits.
+//! results: each node's arithmetic is self-contained and `recv_from`
+//! selects by source, so scheduling order cannot leak into the bits.
 //!
 //! §Equivalence: the receive-side mix calls the same [`mix_row_src`]
 //! kernel with the same f32 weight rows in the same order as the shared
 //! mixer, and the global average accumulates rank-ascending per chunk —
 //! the shared mean's exact operation order. Uncompressed trajectories are
 //! therefore bit-identical to [`super::SharedBackend`]'s (asserted by
-//! `rust/tests/comm_backends.rs`). The chunked reduce-scatter/all-gather
-//! moves the bandwidth-optimal ring's aggregate traffic (2 d (n-1)
-//! scalars); the latency-bound ring schedule itself remains available as
-//! [`crate::collective::ring_all_reduce`] for the bench suite.
+//! `rust/tests/comm_backends.rs` and `rust/tests/transport.rs`). The
+//! chunked reduce-scatter/all-gather moves the bandwidth-optimal ring's
+//! aggregate traffic (2 d (n-1) scalars); the latency-bound ring schedule
+//! itself remains available as [`crate::collective::ring_all_reduce`] for
+//! the bench suite.
+//!
+//! §Membership: the round state machine ([`crate::coordinator::rounds`])
+//! drops a peer that misses its receive deadline by calling
+//! [`CommBackend::drop_node`]: the dead node's weight in every *other*
+//! row is folded back onto the owner's self-weight (rows stay stochastic
+//! — "renormalize the mixing row, never poison the trainer"), its
+//! transmit sets empty out, and the global average re-chunks over the
+//! alive ranks (still rank-ascending, so the healthy path's arithmetic is
+//! untouched). `rejoin_node` restores the pristine rows. Dead nodes'
+//! parameter rows ride along unchanged — frozen, not corrupted.
 //!
 //! §Time: charged per actual message and per node — node i pays its own
 //! `alpha_i` per send plus its own `theta_i` per wire scalar from the
@@ -34,13 +53,15 @@
 //! busiest node's charge (the pre-virtual-time scalar bill on a
 //! homogeneous table, bit for bit).
 
+use std::time::Duration;
+
 use anyhow::{bail, ensure, Result};
 
 use super::{
     export_residuals, import_residuals, BackendKind, CommBackend, CommCharge, CommStats,
     Compression,
 };
-use crate::collective::{bus_for, ring_chunk_bounds, Endpoint};
+use crate::collective::{bus_with_handles, ring_chunk_bounds, Endpoint, Wire};
 use crate::compress::{Codec, ErrorFeedback};
 use crate::coordinator::mixer::{mix_row_src, weight_rows_f32};
 use crate::costmodel::{BarrierScope, NodeCosts};
@@ -48,21 +69,70 @@ use crate::exec::WorkerPool;
 use crate::params::ParamMatrix;
 use crate::topology::Topology;
 
-/// The message-passing backend (see module docs).
-pub struct BusBackend {
+/// The message-passing backend over in-proc mpsc channels.
+pub type BusBackend = BusCore<Endpoint>;
+
+/// One-shot edge builder run on the first `global_average` (lazy
+/// all-to-all wiring; see module docs).
+type Connector<W> = Box<dyn FnOnce(&mut [W]) -> Result<()> + Send>;
+
+/// Membership overlay when at least one node is dropped: renormalized
+/// rows, filtered transmit sets, and the alive-rank chunking of the
+/// global average. `None` on the healthy path, which therefore runs the
+/// pristine tables — bit for bit the pre-membership backend.
+struct LiveView {
+    /// Per-round rows with dead peers' weights folded onto self; a dead
+    /// node's own row is `[(i, 1.0)]` (it keeps its frozen parameters).
+    rows: Vec<Vec<Vec<(usize, f32)>>>,
+    /// Per-round transmit targets filtered to alive nodes.
+    outn: Vec<Vec<Vec<usize>>>,
+    /// Alive ranks, ascending.
+    ranks: Vec<usize>,
+    /// `ring_chunk_bounds(ranks.len(), d)` — the degraded chunking.
+    bounds: Vec<usize>,
+}
+
+/// The union of the gossip transmit sets over all rounds — the edge set a
+/// message-passing backend needs for gossip alone (global-average edges
+/// are wired lazily; see module docs).
+pub fn gossip_union_edges(topo: &Topology) -> Vec<Vec<usize>> {
+    let rounds = topo.rounds();
+    (0..topo.n)
+        .map(|j| {
+            let mut e: Vec<usize> =
+                (0..rounds).flat_map(|r| topo.out_neighbors(j, r)).collect();
+            e.sort_unstable();
+            e.dedup();
+            e
+        })
+        .collect()
+}
+
+/// The message-passing backend core (see module docs), generic over the
+/// [`Wire`] transport.
+pub struct BusCore<W: Wire> {
+    kind: BackendKind,
     n: usize,
     d: usize,
     rounds: usize,
-    /// Weight rows per round (same f32 quantization as the shared mixer).
+    /// Pristine weight rows per round (same f32 quantization as the
+    /// shared mixer).
     rows: Vec<Vec<Vec<(usize, f32)>>>,
-    /// Out-neighbors per round (transmit targets, excl. self).
+    /// Pristine out-neighbors per round (transmit targets, excl. self).
     outn: Vec<Vec<Vec<usize>>>,
-    endpoints: Vec<Endpoint>,
+    /// Membership overlay; `None` while every node is alive.
+    live: Option<LiveView>,
+    endpoints: Vec<W>,
     scratch: ParamMatrix,
-    /// Global-average chunk boundaries (`ring_chunk_bounds`).
+    /// Healthy global-average chunk boundaries (`ring_chunk_bounds`).
     bounds: Vec<usize>,
-    /// Whether the all-to-all chunk-exchange edges were built.
-    with_global: bool,
+    /// `0..n`, the healthy alive-rank list (so one code path serves both).
+    all_ranks: Vec<usize>,
+    /// Whether this run may global-average at all.
+    global_allowed: bool,
+    /// Pending lazy all-to-all wiring; consumed by the first
+    /// `global_average`.
+    connector: Option<Connector<W>>,
     compressors: Vec<Option<ErrorFeedback<Box<dyn Codec>>>>,
     /// Per-node link costs the endpoint counters are billed against.
     alpha: Vec<f64>,
@@ -70,16 +140,23 @@ pub struct BusBackend {
     cost_dim: usize,
     pub gossip_clock: usize,
     total: CommStats,
-    /// Set when a collective fails mid-flight: the channels may hold
-    /// half-delivered payloads, so the backend refuses further work
-    /// instead of silently mixing stale rounds.
+    /// Set when a collective fails mid-flight: the wires may hold
+    /// half-delivered payloads, so the backend refuses further work until
+    /// [`CommBackend::reset_round`] bumps the epoch and drains them.
     failed: bool,
+    alive: Vec<bool>,
+    /// Fault injection: a muted node is alive but wedged — it transmits
+    /// nothing, which is what the deadline + drop machinery exists for.
+    muted: Vec<bool>,
+    /// Current round epoch; bumped by `reset_round` so retried rounds
+    /// discard the aborted attempt's frames.
+    epoch: u32,
 }
 
-impl BusBackend {
-    /// Build the bus for `topo`. `with_global` adds the all-to-all
-    /// chunk-exchange edges the global average needs — pass `false` for
-    /// pure-gossip schedules so large sparse graphs keep O(edges) setup.
+impl BusCore<Endpoint> {
+    /// Build the mpsc-channel bus for `topo`. `with_global` *permits* the
+    /// global average; its all-to-all chunk-exchange edges are wired
+    /// lazily on first use, so construction is O(gossip edges) either way.
     pub fn new(
         topo: &Topology,
         d: usize,
@@ -89,37 +166,74 @@ impl BusBackend {
         with_global: bool,
     ) -> BusBackend {
         let n = topo.n;
+        let edges = gossip_union_edges(topo);
+        let (endpoints, txs) = bus_with_handles(n, &edges);
+        let connector: Option<Connector<Endpoint>> = if with_global {
+            Some(Box::new(move |eps: &mut [Endpoint]| {
+                for ep in eps.iter_mut() {
+                    for (j, tx) in txs.iter().enumerate() {
+                        if j != ep.rank {
+                            ep.add_sender(j, tx.clone());
+                        }
+                    }
+                }
+                Ok(())
+            }))
+        } else {
+            None
+        };
+        BusCore::from_parts(
+            BackendKind::Bus,
+            topo,
+            d,
+            costs,
+            cost_dim,
+            compression,
+            endpoints,
+            connector,
+            with_global,
+        )
+    }
+}
+
+impl<W: Wire> BusCore<W> {
+    /// Assemble a core around already-wired endpoints (the transport
+    /// constructors build those: mpsc channels or loopback sockets).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_parts(
+        kind: BackendKind,
+        topo: &Topology,
+        d: usize,
+        costs: &NodeCosts,
+        cost_dim: usize,
+        compression: Compression,
+        endpoints: Vec<W>,
+        connector: Option<Connector<W>>,
+        global_allowed: bool,
+    ) -> BusCore<W> {
+        let n = topo.n;
         debug_assert_eq!(costs.n(), n, "cost table must cover every node");
+        debug_assert_eq!(endpoints.len(), n, "one endpoint per node");
         let rounds = topo.rounds();
         // Same quantization site as the shared mixer (bit-equality is
         // structural, not two parallel copies).
         let rows = weight_rows_f32(topo);
         let outn: Vec<Vec<Vec<usize>>> =
             (0..rounds).map(|r| (0..n).map(|j| topo.out_neighbors(j, r)).collect()).collect();
-        // Sender edges: union of the gossip transmit sets over all rounds,
-        // plus all-to-all when the schedule global-averages.
-        let edges: Vec<Vec<usize>> = (0..n)
-            .map(|j| {
-                let mut e: Vec<usize> = if with_global {
-                    (0..n).filter(|&i| i != j).collect()
-                } else {
-                    outn.iter().flat_map(|per_round| per_round[j].iter().copied()).collect()
-                };
-                e.sort_unstable();
-                e.dedup();
-                e
-            })
-            .collect();
-        BusBackend {
+        BusCore {
+            kind,
             n,
             d,
             rounds,
             rows,
             outn,
-            endpoints: bus_for(n, &edges),
+            live: None,
+            endpoints,
             scratch: ParamMatrix::zeros(n, d),
             bounds: ring_chunk_bounds(n, d),
-            with_global,
+            all_ranks: (0..n).collect(),
+            global_allowed,
+            connector,
             compressors: compression.build(n, d),
             alpha: costs.alpha.clone(),
             theta: costs.theta.clone(),
@@ -127,12 +241,97 @@ impl BusBackend {
             gossip_clock: 0,
             total: CommStats::default(),
             failed: false,
+            alive: vec![true; n],
+            muted: vec![false; n],
+            epoch: 0,
         }
+    }
+
+    /// Out-route count per endpoint — the lazy-edge regression hook: a
+    /// pure-gossip ring stays at degree 2 until (and unless) the first
+    /// global average wires the chunk-exchange table.
+    pub fn edge_degrees(&self) -> Vec<usize> {
+        self.endpoints.iter().map(|e| e.degree()).collect()
+    }
+
+    /// True while the all-to-all wiring is still deferred.
+    pub fn lazy_global_pending(&self) -> bool {
+        self.connector.is_some()
+    }
+
+    /// Wire the chunk-exchange edges if they are still pending.
+    fn ensure_global_edges(&mut self) -> Result<()> {
+        if let Some(connect) = self.connector.take() {
+            connect(&mut self.endpoints)?;
+        }
+        Ok(())
+    }
+
+    /// Recompute the membership overlay after a drop/rejoin. Healthy
+    /// membership clears the overlay entirely so the pristine tables (and
+    /// their exact bits) are back in force.
+    fn rebuild_live(&mut self) {
+        if self.alive.iter().all(|&a| a) {
+            self.live = None;
+            return;
+        }
+        let alive = &self.alive;
+        let rows = self
+            .rows
+            .iter()
+            .map(|per_round| {
+                per_round
+                    .iter()
+                    .enumerate()
+                    .map(|(i, row)| {
+                        if !alive[i] {
+                            return vec![(i, 1.0f32)];
+                        }
+                        let mut folded = 0.0f32;
+                        let mut out: Vec<(usize, f32)> = Vec::with_capacity(row.len());
+                        for &(j, w) in row {
+                            if j == i || alive[j] {
+                                out.push((j, w));
+                            } else {
+                                folded += w;
+                            }
+                        }
+                        if folded != 0.0 {
+                            if let Some(e) = out.iter_mut().find(|(j, _)| *j == i) {
+                                e.1 += folded;
+                            } else {
+                                out.push((i, folded));
+                            }
+                        }
+                        out
+                    })
+                    .collect()
+            })
+            .collect();
+        let outn = self
+            .outn
+            .iter()
+            .map(|per_round| {
+                per_round
+                    .iter()
+                    .enumerate()
+                    .map(|(j, targets)| {
+                        if !alive[j] {
+                            return Vec::new();
+                        }
+                        targets.iter().copied().filter(|&t| alive[t]).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let ranks: Vec<usize> = (0..self.n).filter(|&i| alive[i]).collect();
+        let bounds = ring_chunk_bounds(ranks.len().max(1), self.d);
+        self.live = Some(LiveView { rows, outn, ranks, bounds });
     }
 
     /// Snapshot the per-endpoint counters (delta accounting per action).
     fn traffic_snapshot(&self) -> Vec<(u64, u64)> {
-        self.endpoints.iter().map(|e| (e.scalars_sent, e.msgs_sent)).collect()
+        self.endpoints.iter().map(|e| e.traffic()).collect()
     }
 
     /// Charge incurred since `before`: traffic totals across nodes plus
@@ -148,8 +347,9 @@ impl BusBackend {
         let mut critical = 0.0f64;
         let mut node_seconds = Vec::with_capacity(self.n);
         for (i, (ep, &(s0, m0))) in self.endpoints.iter().zip(before).enumerate() {
-            let ds = ep.scalars_sent - s0;
-            let dm = ep.msgs_sent - m0;
+            let (s1, m1) = ep.traffic();
+            let ds = s1 - s0;
+            let dm = m1 - m0;
             scalars += ds;
             msgs += dm;
             let node_cost = dm as f64 * self.alpha[i] + ds as f64 * scale * self.theta[i];
@@ -168,9 +368,7 @@ impl BusBackend {
             barrier,
         }
     }
-}
 
-impl BusBackend {
     fn gossip_inner(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommCharge> {
         debug_assert!(params.n() == self.n && params.d() == self.d);
         let n = self.n;
@@ -179,10 +377,17 @@ impl BusBackend {
         let before = self.traffic_snapshot();
         let t = pool.shards(n);
         let per = (n + t - 1) / t;
+        let alive = &self.alive;
+        let muted = &self.muted;
         // Phase A — transmit: each node compresses once and ships the
-        // payload to every out-neighbor (send is buffered, never blocks).
+        // payload to every (alive) out-neighbor; sends are buffered/
+        // framed and never block on the receive side. Dead and muted
+        // nodes transmit nothing.
         {
-            let outn = &self.outn[round];
+            let outn = match &self.live {
+                Some(v) => &v.outn[round],
+                None => &self.outn[round],
+            };
             let src = params.as_slice();
             pool.run(
                 self.endpoints
@@ -195,6 +400,9 @@ impl BusBackend {
                                 eps.iter_mut().zip(comps.iter_mut()).enumerate()
                             {
                                 let j = ci * per + k;
+                                if !alive[j] || muted[j] {
+                                    continue;
+                                }
                                 let targets = &outn[j];
                                 if targets.is_empty() {
                                     continue;
@@ -227,9 +435,15 @@ impl BusBackend {
             )?;
         }
         // Phase B — receive + mix: the same kernel, rows and order as the
-        // shared mixer (bit-identical by construction).
+        // shared mixer (bit-identical by construction). A dead node's row
+        // is `[(i, 1.0)]`, so its frozen parameters self-copy through the
+        // same kernel; a muted node defensively self-copies (the round
+        // fails on its silent neighbors before this matters).
         {
-            let rows = &self.rows[round];
+            let rows = match &self.live {
+                Some(v) => &v.rows[round],
+                None => &self.rows[round],
+            };
             let src = params.as_slice();
             pool.run(
                 self.endpoints
@@ -242,6 +456,10 @@ impl BusBackend {
                                 eps.iter_mut().zip(block.chunks_mut(d)).enumerate()
                             {
                                 let i = ci * per + k;
+                                if muted[i] {
+                                    out.copy_from_slice(&src[i * d..(i + 1) * d]);
+                                    continue;
+                                }
                                 let row = &rows[i];
                                 let mut recvd: Vec<(usize, Vec<f32>)> =
                                     Vec::with_capacity(row.len());
@@ -291,16 +509,28 @@ impl BusBackend {
         pool: &WorkerPool,
     ) -> Result<CommCharge> {
         debug_assert!(params.n() == self.n && params.d() == self.d);
-        debug_assert!(self.with_global, "checked by the trait wrapper");
+        debug_assert!(self.global_allowed, "checked by the trait wrapper");
         let n = self.n;
         let d = self.d;
-        let inv = 1.0f32 / n as f32;
+        // The chunk schedule runs over the alive ranks ascending; with
+        // full membership that is `0..n` over the pristine bounds — the
+        // exact pre-membership arithmetic, bit for bit.
+        let (ranks, gbounds): (&[usize], &[usize]) = match &self.live {
+            Some(v) => (&v.ranks, &v.bounds),
+            None => (&self.all_ranks, &self.bounds),
+        };
+        let m = ranks.len();
+        ensure!(m > 0, "global average with every node dropped");
+        let inv = 1.0f32 / m as f32;
+        let first = ranks[0];
         let before = self.traffic_snapshot();
         let t = pool.shards(n);
         let per = (n + t - 1) / t;
-        let bounds = &self.bounds;
-        // Phase A — reduce-scatter sends: node i ships chunk j of its row
-        // directly to node j (empty chunks ship nothing).
+        let alive = &self.alive;
+        let muted = &self.muted;
+        // Phase A — reduce-scatter sends: alive node i ships chunk c of
+        // its row directly to the chunk's owner ranks[c] (empty chunks
+        // ship nothing).
         {
             let src = params.as_slice();
             pool.run(
@@ -311,10 +541,13 @@ impl BusBackend {
                         move || {
                             for (k, ep) in eps.iter_mut().enumerate() {
                                 let i = ci * per + k;
+                                if !alive[i] || muted[i] {
+                                    continue;
+                                }
                                 let xi = &src[i * d..(i + 1) * d];
-                                for j in 0..n {
-                                    if j != i && bounds[j + 1] > bounds[j] {
-                                        ep.send(j, xi[bounds[j]..bounds[j + 1]].to_vec())?;
+                                for (c, &to) in ranks.iter().enumerate() {
+                                    if to != i && gbounds[c + 1] > gbounds[c] {
+                                        ep.send(to, xi[gbounds[c]..gbounds[c + 1]].to_vec())?;
                                     }
                                 }
                             }
@@ -324,11 +557,12 @@ impl BusBackend {
                     .collect(),
             )?;
         }
-        // Phase B — reduce + gather sends: node i sums its chunk over all
-        // ranks ASCENDING (the shared mean's exact accumulation order:
-        // copy rank 0, add ranks 1..n, multiply by 1/n), stores it in its
-        // scratch row, and broadcasts the reduced chunk. Per-sender FIFO
-        // keeps these gather messages behind phase A's scatter messages.
+        // Phase B — reduce + gather sends: chunk owner i sums its chunk
+        // over the alive ranks ASCENDING (the shared mean's exact
+        // accumulation order: copy the first rank, add the rest, multiply
+        // by 1/m), stores it in its scratch row, and broadcasts the
+        // reduced chunk. Per-sender FIFO keeps these gather messages
+        // behind phase A's scatter messages.
         {
             let src = params.as_slice();
             pool.run(
@@ -342,23 +576,30 @@ impl BusBackend {
                                 eps.iter_mut().zip(block.chunks_mut(d)).enumerate()
                             {
                                 let i = ci * per + k;
-                                let (lo, hi) = (bounds[i], bounds[i + 1]);
+                                if !alive[i] || muted[i] {
+                                    continue;
+                                }
+                                let idx = match ranks.binary_search(&i) {
+                                    Ok(idx) => idx,
+                                    Err(_) => continue,
+                                };
+                                let (lo, hi) = (gbounds[idx], gbounds[idx + 1]);
                                 if hi == lo {
                                     continue;
                                 }
                                 let len = hi - lo;
-                                let mut acc: Vec<f32> = if i == 0 {
-                                    src[lo..hi].to_vec()
+                                let mut acc: Vec<f32> = if i == first {
+                                    src[i * d + lo..i * d + hi].to_vec()
                                 } else {
-                                    let v = ep.recv_from(0)?;
+                                    let v = ep.recv_from(first)?;
                                     ensure!(
                                         v.len() == len,
-                                        "chunk from 0 has {} of {len}",
+                                        "chunk from {first} has {} of {len}",
                                         v.len()
                                     );
                                     v
                                 };
-                                for j in 1..n {
+                                for &j in &ranks[1..] {
                                     if j == i {
                                         let own = &src[j * d + lo..j * d + hi];
                                         for (a, b) in acc.iter_mut().zip(own) {
@@ -380,13 +621,15 @@ impl BusBackend {
                                     *a *= inv;
                                 }
                                 srow[lo..hi].copy_from_slice(&acc);
-                                // Broadcast the reduced chunk; the last
-                                // send takes the buffer itself (acc is
-                                // dead after this loop).
-                                let last = if i == n - 1 { n.wrapping_sub(2) } else { n - 1 };
-                                for j in 0..n {
+                                // Broadcast the reduced chunk to the other
+                                // alive ranks; the last send takes the
+                                // buffer itself (acc is dead after this
+                                // loop).
+                                let last =
+                                    ranks.iter().rev().find(|&&j| j != i).copied();
+                                for &j in ranks {
                                     if j != i {
-                                        let msg = if j == last {
+                                        let msg = if Some(j) == last {
                                             std::mem::take(&mut acc)
                                         } else {
                                             acc.clone()
@@ -401,10 +644,13 @@ impl BusBackend {
                     .collect(),
             )?;
         }
-        // Phase C — assemble: every node fills the rest of its mean row
-        // from the other ranks' reduced chunks (its own is already
-        // in place). All rows end bit-identical.
+        // Phase C — assemble: every alive node fills the rest of its mean
+        // row from the other owners' reduced chunks (its own is already
+        // in place); dead (and defensively muted) nodes carry their
+        // frozen row into scratch so the swap is total. All alive rows
+        // end bit-identical.
         {
+            let src = params.as_slice();
             pool.run(
                 self.endpoints
                     .chunks_mut(per)
@@ -416,14 +662,18 @@ impl BusBackend {
                                 eps.iter_mut().zip(block.chunks_mut(d)).enumerate()
                             {
                                 let i = ci * per + k;
-                                for j in 0..n {
-                                    if j != i && bounds[j + 1] > bounds[j] {
+                                if !alive[i] || muted[i] {
+                                    srow.copy_from_slice(&src[i * d..(i + 1) * d]);
+                                    continue;
+                                }
+                                for (c, &j) in ranks.iter().enumerate() {
+                                    if j != i && gbounds[c + 1] > gbounds[c] {
                                         let v = ep.recv_from(j)?;
                                         ensure!(
-                                            v.len() == bounds[j + 1] - bounds[j],
+                                            v.len() == gbounds[c + 1] - gbounds[c],
                                             "reduced chunk from {j} has wrong length"
                                         );
-                                        srow[bounds[j]..bounds[j + 1]].copy_from_slice(&v);
+                                        srow[gbounds[c]..gbounds[c + 1]].copy_from_slice(&v);
                                     }
                                 }
                             }
@@ -438,20 +688,22 @@ impl BusBackend {
         self.total.merge(charge.stats);
         Ok(charge)
     }
-}
 
-impl BusBackend {
-    /// One real message over the plane: serialized onto src's channel,
+    /// One real message over the plane: serialized onto src's wire,
     /// received on dst's side — the endpoint counters measure it like any
     /// phase-A gossip send. The event engine holds the payload until its
-    /// virtual delivery time (checkpointable), so the channel never
-    /// carries state across calls.
+    /// virtual delivery time (checkpointable), so the wire never carries
+    /// state across calls.
     fn push_row_inner(
         &mut self,
         params: &ParamMatrix,
         src: usize,
         dst: usize,
     ) -> Result<(Vec<f32>, CommStats)> {
+        ensure!(
+            self.alive[src] && self.alive[dst],
+            "push_row {src}->{dst} with a dropped endpoint"
+        );
         let d = self.d;
         let x = params.row(src).to_vec();
         self.endpoints[src].send_billed(dst, x, d as u64)?;
@@ -461,9 +713,9 @@ impl BusBackend {
     }
 }
 
-impl CommBackend for BusBackend {
+impl<W: Wire> CommBackend for BusCore<W> {
     fn kind(&self) -> BackendKind {
-        BackendKind::Bus
+        self.kind
     }
 
     fn gossip(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommCharge> {
@@ -481,8 +733,14 @@ impl CommBackend for BusBackend {
         ensure!(!self.failed, "bus backend is poisoned by an earlier failed collective");
         // A missing edge set is a clean configuration error, not a
         // half-delivered collective — don't poison for it.
-        if !self.with_global {
+        if !self.global_allowed {
             bail!("bus backend was built without all-reduce edges (pure-gossip schedule)");
+        }
+        if let Err(e) = self.ensure_global_edges() {
+            // A half-wired edge table can't be retried (the connector is
+            // one-shot), so this does poison.
+            self.failed = true;
+            return Err(e);
         }
         let result = self.global_average_inner(params, pool);
         self.failed |= result.is_err();
@@ -545,5 +803,217 @@ impl CommBackend for BusBackend {
 
     fn import_compressor_state(&mut self, state: Option<&ParamMatrix>) -> Result<()> {
         import_residuals(&mut self.compressors, self.d, state)
+    }
+
+    fn set_recv_deadline(&mut self, deadline: Option<Duration>) {
+        for ep in self.endpoints.iter_mut() {
+            ep.set_recv_deadline(deadline);
+        }
+    }
+
+    fn supports_deadlines(&self) -> bool {
+        true
+    }
+
+    fn drop_node(&mut self, node: usize) -> Result<u64> {
+        ensure!(node < self.n, "drop_node {node} out of range for n={}", self.n);
+        ensure!(self.alive[node], "node {node} is already dropped");
+        self.alive[node] = false;
+        self.muted[node] = false;
+        // Count the renormalized rows: every (round, alive owner) row
+        // that held weight on the dead peer gets that weight folded back
+        // onto its self entry.
+        let mut folds = 0u64;
+        for per_round in &self.rows {
+            for (i, row) in per_round.iter().enumerate() {
+                if i != node && self.alive[i] && row.iter().any(|&(j, _)| j == node) {
+                    folds += 1;
+                }
+            }
+        }
+        self.rebuild_live();
+        Ok(folds)
+    }
+
+    fn rejoin_node(&mut self, node: usize) -> Result<()> {
+        ensure!(node < self.n, "rejoin_node {node} out of range for n={}", self.n);
+        ensure!(!self.alive[node], "node {node} is not dropped");
+        self.alive[node] = true;
+        self.muted[node] = false;
+        self.rebuild_live();
+        Ok(())
+    }
+
+    fn alive_mask(&self) -> Option<Vec<bool>> {
+        Some(self.alive.clone())
+    }
+
+    fn reset_round(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        for ep in self.endpoints.iter_mut() {
+            ep.reset_epoch(self.epoch);
+        }
+        self.failed = false;
+    }
+
+    fn set_muted(&mut self, node: usize, muted: bool) -> Result<()> {
+        ensure!(node < self.n, "set_muted {node} out of range for n={}", self.n);
+        self.muted[node] = muted;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::CostModel;
+
+    fn costs(n: usize) -> NodeCosts {
+        NodeCosts::homogeneous(CostModel { alpha: 1e-4, theta: 1e-8, compute: 0.0 }, n)
+    }
+
+    fn ramp(n: usize, d: usize) -> ParamMatrix {
+        let mut p = ParamMatrix::zeros(n, d);
+        for i in 0..n {
+            for (j, v) in p.row_mut(i).iter_mut().enumerate() {
+                *v = (i * d + j) as f32 * 0.25 + 1.0;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn pure_gossip_schedule_keeps_degree_sized_edges_with_global_allowed() {
+        // ISSUE 7 satellite: `with_global` used to eagerly wire n-1
+        // senders per node. Now a ring that never global-averages stays
+        // at degree 2, and the first global average wires the table.
+        let topo = Topology::ring(8);
+        let pool = WorkerPool::new(1);
+        let mut params = ramp(8, 12);
+        let mut bus = BusBackend::new(&topo, 12, &costs(8), 12, Compression::None, true);
+        assert!(bus.lazy_global_pending());
+        assert_eq!(bus.edge_degrees(), vec![2; 8], "gossip-union edges only");
+        bus.gossip(&mut params, &pool).unwrap();
+        assert_eq!(bus.edge_degrees(), vec![2; 8], "gossip never wires chords");
+        bus.global_average(&mut params, &pool).unwrap();
+        assert!(!bus.lazy_global_pending());
+        assert_eq!(bus.edge_degrees(), vec![7; 8], "first global average wires all-to-all");
+        // Without the permission flag nothing is wired and the config
+        // error stays clean (and non-poisoning).
+        let mut pure = BusBackend::new(&topo, 12, &costs(8), 12, Compression::None, false);
+        assert!(!pure.lazy_global_pending());
+        let err = pure.global_average(&mut params, &pool).unwrap_err().to_string();
+        assert!(err.contains("without all-reduce edges"), "{err}");
+        pure.gossip(&mut params, &pool).unwrap();
+    }
+
+    #[test]
+    fn lazy_wiring_matches_eager_average_exactly() {
+        // The deferred edge table must not change the global average's
+        // bits: compare against the row mean computed the shared way.
+        let (n, d) = (5, 17);
+        let topo = Topology::ring(n);
+        let pool = WorkerPool::new(1);
+        let mut params = ramp(n, d);
+        let mut expect = vec![0.0f32; d];
+        for j in 0..d {
+            let mut acc = params.row(0)[j];
+            for i in 1..n {
+                acc += params.row(i)[j];
+            }
+            expect[j] = acc * (1.0 / n as f32);
+        }
+        let mut bus = BusBackend::new(&topo, d, &costs(n), d, Compression::None, true);
+        bus.global_average(&mut params, &pool).unwrap();
+        for i in 0..n {
+            assert_eq!(params.row(i), &expect[..], "node {i}");
+        }
+    }
+
+    #[test]
+    fn drop_renormalizes_rows_and_rejoin_restores() {
+        let topo = Topology::ring(6);
+        let pool = WorkerPool::new(1);
+        let d = 8;
+        let mut bus = BusBackend::new(&topo, d, &costs(6), d, Compression::None, true);
+        // Ring node 4's neighbors are 3 and 5: dropping 4 renormalizes
+        // exactly those two rows (one round in a static ring).
+        let folds = bus.drop_node(4).unwrap();
+        assert_eq!(folds, 2);
+        assert_eq!(bus.alive_mask().unwrap(), vec![true, true, true, true, false, true]);
+        assert!(bus.drop_node(4).is_err(), "double drop refused");
+
+        // The renormalized gossip keeps alive rows stochastic and leaves
+        // the dead row frozen.
+        let mut params = ramp(6, d);
+        let frozen = params.row(4).to_vec();
+        let before_mean: f32 = (0..6).filter(|&i| i != 4).map(|i| params.row(i)[0]).sum::<f32>();
+        bus.gossip(&mut params, &pool).unwrap();
+        assert_eq!(params.row(4), &frozen[..], "dead row frozen through gossip");
+        let after_mean: f32 = (0..6).filter(|&i| i != 4).map(|i| params.row(i)[0]).sum::<f32>();
+        assert!(
+            (before_mean - after_mean).abs() < 1e-3,
+            "folded rows stay stochastic: {before_mean} vs {after_mean}"
+        );
+
+        // The degraded global average averages the 5 alive rows only.
+        bus.global_average(&mut params, &pool).unwrap();
+        assert_eq!(params.row(4), &frozen[..], "dead row frozen through global average");
+        let alive_rows: Vec<usize> = (0..6).filter(|&i| i != 4).collect();
+        for &i in &alive_rows[1..] {
+            assert_eq!(params.row(i), params.row(alive_rows[0]), "alive consensus");
+        }
+
+        bus.rejoin_node(4).unwrap();
+        assert!(bus.alive_mask().unwrap().iter().all(|&a| a));
+        assert!(bus.rejoin_node(4).is_err(), "rejoin of an alive node refused");
+        // Healthy membership is back on the pristine tables: a full
+        // global average now includes node 4 again.
+        bus.global_average(&mut params, &pool).unwrap();
+        assert_eq!(params.row(4), params.row(0), "rejoined node averaged back in");
+    }
+
+    #[test]
+    fn muted_peer_times_out_and_reset_round_recovers() {
+        // The acceptance scenario at the backend level: node 2 wedges,
+        // the deadline surfaces a typed stalled-peer error (not a hang),
+        // drop + reset_round lets the retried round complete.
+        let topo = Topology::ring(4);
+        let pool = WorkerPool::new(1);
+        let d = 6;
+        let mut bus = BusBackend::new(&topo, d, &costs(4), d, Compression::None, false);
+        let mut params = ramp(4, d);
+        bus.set_muted(2, true).unwrap();
+        bus.set_recv_deadline(Some(Duration::from_millis(40)));
+        let err = bus.gossip(&mut params, &pool).unwrap_err();
+        let text = format!("{err:#}");
+        assert_eq!(crate::collective::stalled_peer(&text), Some(2), "{text}");
+        // Poisoned until the round is reset...
+        assert!(bus.gossip(&mut params, &pool).unwrap_err().to_string().contains("poisoned"));
+        // ...then the drop + retry completes cleanly.
+        bus.drop_node(2).unwrap();
+        bus.reset_round();
+        bus.set_recv_deadline(None);
+        bus.gossip(&mut params, &pool).unwrap();
+    }
+
+    #[test]
+    fn healthy_membership_uses_pristine_tables() {
+        // Drop + rejoin must leave zero overlay: trajectories after a
+        // full recovery are the pristine backend's bits.
+        let topo = Topology::ring(5);
+        let pool = WorkerPool::new(1);
+        let d = 7;
+        let mut a = BusBackend::new(&topo, d, &costs(5), d, Compression::None, true);
+        let mut b = BusBackend::new(&topo, d, &costs(5), d, Compression::None, true);
+        b.drop_node(1).unwrap();
+        b.rejoin_node(1).unwrap();
+        let mut pa = ramp(5, d);
+        let mut pb = ramp(5, d);
+        a.gossip(&mut pa, &pool).unwrap();
+        b.gossip(&mut pb, &pool).unwrap();
+        a.global_average(&mut pa, &pool).unwrap();
+        b.global_average(&mut pb, &pool).unwrap();
+        assert_eq!(pa.as_slice(), pb.as_slice(), "recovered == never-degraded, bit for bit");
     }
 }

@@ -18,19 +18,37 @@
 //!   [`crate::collective::Endpoint`] per worker, every transmitted vector
 //!   actually sent/received over channels (compression included), traffic
 //!   *measured* at the endpoints and time charged per actual message.
+//! * [`TcpBackend`] — the same message-passing core ([`bus::BusCore`])
+//!   over real loopback sockets ([`crate::collective::tcp`]):
+//!   length-prefixed frames, per-edge streams, OS-assigned ports. The
+//!   first backend whose CommStats are measured off an actual wire.
 //!
-//! Both backends drive the same [`mix_row_src`] kernel with the same weight
+//! All backends drive the same [`mix_row_src`] kernel with the same weight
 //! rows in the same order, so — with identity/no compression — their
 //! parameter trajectories are **bit-identical**, and their `CommStats`
-//! agree exactly (asserted by `rust/tests/comm_backends.rs` and the
-//! rewritten `benches/tab17_comm_overhead.rs`). Select with
-//! `TrainerOptions::backend` / `comm.backend` / `--backend {shared,bus}`.
+//! agree exactly (asserted by `rust/tests/comm_backends.rs`,
+//! `rust/tests/transport.rs`, and the rewritten
+//! `benches/tab17_comm_overhead.rs`). Select with
+//! `TrainerOptions::backend` / `comm.backend` / `--backend
+//! {shared,bus,tcp}`.
+//!
+//! §Fault tolerance: the message-passing planes expose round-membership
+//! hooks — receive deadlines ([`CommBackend::set_recv_deadline`]), peer
+//! drop/rejoin with mixing-row renormalization
+//! ([`CommBackend::drop_node`] / [`CommBackend::rejoin_node`]), and epoch
+//! resets for clean retries ([`CommBackend::reset_round`]) — driven by
+//! the round state machine in [`crate::coordinator::rounds`]. The shared
+//! backend has no wire, so the defaults report "no round membership".
 
 pub mod bus;
 pub mod shared;
+pub mod tcp;
 
-pub use bus::BusBackend;
+pub use bus::{BusBackend, BusCore};
 pub use shared::SharedBackend;
+pub use tcp::TcpBackend;
+
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -113,6 +131,8 @@ pub enum BackendKind {
     Shared,
     /// Message-passing bus: one endpoint per worker, real send/recv.
     Bus,
+    /// The bus core over real loopback sockets (framed TCP streams).
+    Tcp,
 }
 
 impl BackendKind {
@@ -120,7 +140,8 @@ impl BackendKind {
         Ok(match name {
             "shared" | "mixer" => BackendKind::Shared,
             "bus" | "collective" => BackendKind::Bus,
-            other => bail!("unknown comm backend '{other}' (shared | bus)"),
+            "tcp" | "socket" => BackendKind::Tcp,
+            other => bail!("unknown comm backend '{other}' (shared | bus | tcp)"),
         })
     }
 
@@ -128,6 +149,7 @@ impl BackendKind {
         match self {
             BackendKind::Shared => "shared",
             BackendKind::Bus => "bus",
+            BackendKind::Tcp => "tcp",
         }
     }
 }
@@ -330,6 +352,53 @@ pub trait CommBackend: Send {
     /// `None` zeroes the residuals (fresh-start semantics for checkpoints
     /// that predate compressor state).
     fn import_compressor_state(&mut self, state: Option<&ParamMatrix>) -> Result<()>;
+
+    /// Arm (`Some`) or disarm (`None`) the stalled-peer receive deadline
+    /// on every endpoint: with a deadline armed, a peer that wedges
+    /// mid-collective surfaces as a typed
+    /// [`crate::collective::RecvTimeout`] naming the silent node instead
+    /// of hanging a pool thread forever. No-op on backends without a wire
+    /// (the shared mixer cannot stall on a peer).
+    fn set_recv_deadline(&mut self, _deadline: Option<Duration>) {}
+
+    /// Whether [`CommBackend::set_recv_deadline`] actually arms anything —
+    /// the round state machine requires a deadline-capable plane.
+    fn supports_deadlines(&self) -> bool {
+        false
+    }
+
+    /// Drop `node` from round membership: every other row's weight on it
+    /// is folded back onto that row's self-weight (rows stay stochastic),
+    /// its transmit sets empty out, and the global average re-chunks over
+    /// the alive ranks. Returns the number of rows renormalized (the
+    /// metrics counter). The dropped node's parameters are frozen, not
+    /// poisoned.
+    fn drop_node(&mut self, _node: usize) -> Result<u64> {
+        bail!("{} backend has no round membership", self.kind().name())
+    }
+
+    /// Re-admit a node dropped by [`CommBackend::drop_node`]: the pristine
+    /// mixing rows (its weight included) are back in force.
+    fn rejoin_node(&mut self, _node: usize) -> Result<()> {
+        bail!("{} backend has no round membership", self.kind().name())
+    }
+
+    /// Current alive mask, if this backend tracks round membership.
+    fn alive_mask(&self) -> Option<Vec<bool>> {
+        None
+    }
+
+    /// Abandon a half-delivered round: bump the message epoch (so the
+    /// retry discards the aborted attempt's frames) and clear the poison
+    /// flag. Only meaningful between a failed collective and its retry.
+    fn reset_round(&mut self) {}
+
+    /// Fault injection for tests and scenarios: a muted node stays alive
+    /// and connected but transmits nothing — the wedged-peer failure mode
+    /// the deadline + drop machinery exists for.
+    fn set_muted(&mut self, _node: usize, _muted: bool) -> Result<()> {
+        bail!("{} backend has no fault injection", self.kind().name())
+    }
 }
 
 /// Shared impl for [`CommBackend::export_compressor_state`]: stack the
@@ -485,7 +554,7 @@ mod tests {
 
     #[test]
     fn backend_kind_names_roundtrip() {
-        for k in [BackendKind::Shared, BackendKind::Bus] {
+        for k in [BackendKind::Shared, BackendKind::Bus, BackendKind::Tcp] {
             assert_eq!(BackendKind::from_name(k.name()).unwrap(), k);
         }
         assert!(BackendKind::from_name("carrier-pigeon").is_err());

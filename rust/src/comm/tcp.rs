@@ -1,0 +1,198 @@
+//! [`TcpBackend`]: the message-passing plane over real loopback sockets.
+//!
+//! This is [`BusCore`] — the exact phase code, [`mix_row_src`] kernel, and
+//! rank-ascending chunked global average of [`super::BusBackend`] —
+//! instantiated over [`crate::collective::tcp::TcpEndpoint`]s instead of
+//! mpsc channels. Every transmitted vector is framed
+//! (`u32 epoch | u32 len | f32s`, little-endian) and shipped through an
+//! actual `TcpStream`, so the CommStats a training run reports are
+//! measured off a real wire. Uncompressed trajectories are bit-identical
+//! to both other backends by construction (asserted by
+//! `rust/tests/transport.rs`): the socket changes the bytes' journey, not
+//! the arithmetic.
+//!
+//! §Topology of streams: one directed stream per gossip edge, wired at
+//! construction from the schedule's gossip union; the all-to-all
+//! chunk-exchange streams are dialed lazily on the first `global_average`
+//! (the same deferral as the bus, but here each deferred edge is a real
+//! `connect()`). The accept fabric lives inside the lazy connector and is
+//! torn down as soon as no further edges can be requested.
+//!
+//! §Deployment shape: `new_loopback` runs every rank in this process with
+//! OS-assigned ports (`host:0`), which is the shape verify.sh and the
+//! bit-equality suite exercise. A multi-process deployment (`--peers`)
+//! needs a join handshake on top of the same frames and is rejected at
+//! config parse with a clear message until that lands.
+
+use anyhow::{Context, Result};
+
+use super::bus::{gossip_union_edges, BusCore};
+use super::{BackendKind, Compression};
+use crate::collective::tcp::{tcp_loopback, TcpEndpoint};
+use crate::costmodel::NodeCosts;
+use crate::topology::Topology;
+
+/// The socket-transport backend (see module docs).
+pub type TcpBackend = BusCore<TcpEndpoint>;
+
+impl BusCore<TcpEndpoint> {
+    /// Build the loopback TCP plane for `topo`: one listener per rank at
+    /// `listen` (`host:port`; port 0 = OS-assigned, the default — a fixed
+    /// port P pins rank r to P + r), one stream per gossip edge.
+    /// `with_global` permits the global average; its all-to-all streams
+    /// are dialed lazily on first use.
+    pub fn new_loopback(
+        topo: &Topology,
+        d: usize,
+        costs: &NodeCosts,
+        cost_dim: usize,
+        compression: Compression,
+        with_global: bool,
+        listen: &str,
+    ) -> Result<TcpBackend> {
+        let n = topo.n;
+        let edges = gossip_union_edges(topo);
+        let (endpoints, fabric) =
+            tcp_loopback(n, &edges, listen).context("building the loopback tcp fabric")?;
+        let connector = if with_global {
+            // The fabric moves into the connector: acceptors keep running
+            // until the chunk-exchange streams are dialed (or the backend
+            // drops), then shut down.
+            Some(Box::new(move |eps: &mut [TcpEndpoint]| -> Result<()> {
+                for i in 0..eps.len() {
+                    for j in 0..eps.len() {
+                        if j != i {
+                            fabric.connect(&mut eps[i], j)?;
+                        }
+                    }
+                }
+                Ok(())
+            }) as Box<dyn FnOnce(&mut [TcpEndpoint]) -> Result<()> + Send>)
+        } else {
+            // Pure gossip: no future edges, tear the acceptors down now.
+            drop(fabric);
+            None
+        };
+        Ok(BusCore::from_parts(
+            BackendKind::Tcp,
+            topo,
+            d,
+            costs,
+            cost_dim,
+            compression,
+            endpoints,
+            connector,
+            with_global,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Duration;
+
+    use super::super::CommBackend;
+    use super::*;
+    use crate::costmodel::CostModel;
+    use crate::exec::WorkerPool;
+    use crate::params::ParamMatrix;
+
+    fn costs(n: usize) -> NodeCosts {
+        NodeCosts::homogeneous(CostModel { alpha: 1e-4, theta: 1e-8, compute: 0.0 }, n)
+    }
+
+    fn ramp(n: usize, d: usize) -> ParamMatrix {
+        let mut p = ParamMatrix::zeros(n, d);
+        for i in 0..n {
+            for (j, v) in p.row_mut(i).iter_mut().enumerate() {
+                *v = (i * d + j) as f32 * 0.5 - 3.0;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn kind_and_lazy_edges_over_sockets() {
+        let topo = Topology::ring(6);
+        let d = 10;
+        let mut tcp = TcpBackend::new_loopback(
+            &topo,
+            d,
+            &costs(6),
+            d,
+            Compression::None,
+            true,
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        assert_eq!(tcp.kind(), BackendKind::Tcp);
+        assert!(tcp.supports_deadlines());
+        assert_eq!(tcp.edge_degrees(), vec![2; 6], "gossip streams only at startup");
+        let pool = WorkerPool::new(1);
+        let mut params = ramp(6, d);
+        tcp.global_average(&mut params, &pool).unwrap();
+        assert_eq!(tcp.edge_degrees(), vec![5; 6], "first global average dials the rest");
+    }
+
+    #[test]
+    fn tcp_matches_bus_bit_for_bit_on_one_round() {
+        // The module-level claim in miniature (the full ≥3-topology sweep
+        // lives in rust/tests/transport.rs): same gossip + global average,
+        // identical bits and identical traffic accounting.
+        let topo = Topology::ring(5);
+        let d = 13;
+        let pool = WorkerPool::new(1);
+        let mut bus = super::super::BusBackend::new(&topo, d, &costs(5), d, Compression::None, true);
+        let mut tcp = TcpBackend::new_loopback(
+            &topo,
+            d,
+            &costs(5),
+            d,
+            Compression::None,
+            true,
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut pb = ramp(5, d);
+        let mut pt = ramp(5, d);
+        let cb = bus.gossip(&mut pb, &pool).unwrap();
+        let ct = tcp.gossip(&mut pt, &pool).unwrap();
+        assert_eq!(pb.as_slice(), pt.as_slice(), "gossip bits");
+        assert_eq!(cb.stats, ct.stats, "gossip traffic");
+        let cb = bus.global_average(&mut pb, &pool).unwrap();
+        let ct = tcp.global_average(&mut pt, &pool).unwrap();
+        assert_eq!(pb.as_slice(), pt.as_slice(), "global-average bits");
+        assert_eq!(cb.stats, ct.stats, "global-average traffic");
+    }
+
+    #[test]
+    fn wedged_socket_peer_drops_cleanly_mid_round() {
+        // Acceptance scenario on the real wire: mute node 1, arm the
+        // deadline, watch the round fail with attribution, drop + reset,
+        // and the retried round completes over the degraded membership.
+        let topo = Topology::ring(4);
+        let d = 8;
+        let pool = WorkerPool::new(1);
+        let mut tcp = TcpBackend::new_loopback(
+            &topo,
+            d,
+            &costs(4),
+            d,
+            Compression::None,
+            false,
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut params = ramp(4, d);
+        tcp.set_muted(1, true).unwrap();
+        tcp.set_recv_deadline(Some(Duration::from_millis(50)));
+        let err = tcp.gossip(&mut params, &pool).unwrap_err();
+        assert_eq!(crate::collective::stalled_peer(&format!("{err:#}")), Some(1));
+        tcp.drop_node(1).unwrap();
+        tcp.reset_round();
+        tcp.set_recv_deadline(None);
+        let frozen = params.row(1).to_vec();
+        tcp.gossip(&mut params, &pool).unwrap();
+        assert_eq!(params.row(1), &frozen[..], "dropped node frozen, run completes");
+    }
+}

@@ -252,9 +252,24 @@ pub struct ExperimentConfig {
     /// be. 0 = strict (bit-identical to BSP); >= 1 overlaps compute with
     /// in-flight transfers.
     pub max_staleness: usize,
-    /// Communication backend: "shared" (in-proc mixer, default) or "bus"
-    /// (message-passing endpoints with measured traffic).
+    /// Communication backend: "shared" (in-proc mixer, default), "bus"
+    /// (message-passing endpoints with measured traffic), or "tcp" (the
+    /// same bus core over real loopback sockets).
     pub backend: String,
+    /// TCP backend: the `host:port` every rank's listener binds
+    /// (`comm.listen` / `--listen`). Port 0 = OS-assigned (the default);
+    /// a fixed port P pins rank r to P + r.
+    pub listen: String,
+    /// TCP backend: remote peer addresses for a multi-process deployment
+    /// (`comm.peers` / `--peers`). Not yet supported — a non-empty list is
+    /// rejected at validation with a clear message; the loopback shape
+    /// (every rank in this process) is the one that ships.
+    pub peers: Vec<String>,
+    /// Per-receive deadline in seconds for the fault-tolerant round state
+    /// machine (`comm.round_timeout` / `--round-timeout`): a peer silent
+    /// past this budget is dropped by renormalizing its mixing row. 0 =
+    /// off (the default). Needs a deadline-capable backend (bus | tcp).
+    pub round_timeout: f64,
     /// Gossip compression: "none" (default), "topk" or "int8".
     pub compression: String,
     /// Fraction of coordinates top-k keeps (when compression = "topk").
@@ -296,6 +311,9 @@ impl Default for ExperimentConfig {
             regime: "bsp".into(),
             max_staleness: 0,
             backend: "shared".into(),
+            listen: "127.0.0.1:0".into(),
+            peers: Vec::new(),
+            round_timeout: 0.0,
             compression: "none".into(),
             topk_frac: 0.1,
             int8_block: 1024,
@@ -351,6 +369,25 @@ impl ExperimentConfig {
             },
             max_staleness: doc.get_usize("train.max_staleness", d.max_staleness)?,
             backend: doc.get_str("comm.backend", &d.backend)?,
+            listen: doc.get_str("comm.listen", &d.listen)?,
+            peers: match doc.get("comm.peers") {
+                None => Vec::new(),
+                Some(Value::Arr(items)) => items
+                    .iter()
+                    .map(|v| {
+                        v.as_str().map(str::to_string).ok_or_else(|| {
+                            anyhow!("'comm.peers' entries must be \"host:port\" strings")
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+                Some(v) => vec![v
+                    .as_str()
+                    .ok_or_else(|| {
+                        anyhow!("'comm.peers' must be a string or an array of strings")
+                    })?
+                    .to_string()],
+            },
+            round_timeout: doc.get_f64("comm.round_timeout", d.round_timeout)?,
             compression: doc.get_str("comm.compression", &d.compression)?,
             topk_frac: doc.get_f64("comm.topk_frac", d.topk_frac)?,
             int8_block: doc.get_usize("comm.int8_block", d.int8_block)?,
@@ -406,7 +443,31 @@ impl ExperimentConfig {
             }
         }
         Topology::from_name(&self.topology, self.nodes)?;
-        self.backend_kind()?;
+        let backend = self.backend_kind()?;
+        if !self.peers.is_empty() {
+            // The loopback shape (every rank in this process) is the one
+            // that ships; a multi-process mesh needs a join handshake on
+            // top of the same frames.
+            bail!(
+                "comm.peers: a multi-process tcp deployment is not yet supported — \
+                 the tcp backend runs every rank in this process over loopback \
+                 (drop comm.peers; use comm.listen to pick the bind address)"
+            );
+        }
+        if backend == BackendKind::Tcp && !self.listen.contains(':') {
+            bail!("comm.listen wants host:port (port 0 = OS-assigned), got '{}'", self.listen);
+        }
+        anyhow::ensure!(
+            self.round_timeout.is_finite() && self.round_timeout >= 0.0,
+            "comm.round_timeout must be a non-negative number of seconds, got {}",
+            self.round_timeout
+        );
+        if self.round_timeout > 0.0 && backend == BackendKind::Shared {
+            bail!(
+                "comm.round_timeout needs a deadline-capable backend (bus | tcp) — \
+                 the shared-memory mixer has no wire to time out on"
+            );
+        }
         self.compression_kind()?;
         let regime = self.regime_kind()?;
         if self.overlap && regime != Regime::Overlap {
@@ -936,6 +997,42 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.regions = String::new();
         assert_eq!(cfg.region_spec().unwrap(), None);
+    }
+
+    #[test]
+    fn tcp_transport_keys_parse_and_validate() {
+        let doc = Toml::parse(
+            "[comm]\nbackend = \"tcp\"\nlisten = \"127.0.0.1:0\"\nround_timeout = 2.5\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.backend_kind().unwrap(), BackendKind::Tcp);
+        assert_eq!(cfg.listen, "127.0.0.1:0");
+        assert!((cfg.round_timeout - 2.5).abs() < 1e-12);
+        // Defaults: loopback OS-assigned port, machine off, no peers.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.listen, "127.0.0.1:0");
+        assert_eq!(d.round_timeout, 0.0);
+        assert!(d.peers.is_empty());
+        // A multi-process mesh is rejected with a clear message, not a hang.
+        let doc = Toml::parse(
+            "[comm]\nbackend = \"tcp\"\npeers = [\"10.0.0.2:7000\", \"10.0.0.3:7000\"]\n",
+        )
+        .unwrap();
+        let err = ExperimentConfig::from_toml(&doc).unwrap_err().to_string();
+        assert!(err.contains("not yet supported"), "{err}");
+        // A bind address without a port is a config error.
+        let doc = Toml::parse("[comm]\nbackend = \"tcp\"\nlisten = \"localhost\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+        // The deadline needs a wire: shared + round_timeout is rejected...
+        let doc = Toml::parse("[comm]\nround_timeout = 1.0\n").unwrap();
+        let err = ExperimentConfig::from_toml(&doc).unwrap_err().to_string();
+        assert!(err.contains("deadline-capable"), "{err}");
+        // ...and a negative budget is nonsense on any backend.
+        let doc = Toml::parse("[comm]\nbackend = \"bus\"\nround_timeout = -1.0\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+        let doc = Toml::parse("[comm]\nbackend = \"bus\"\nround_timeout = 0.05\n").unwrap();
+        ExperimentConfig::from_toml(&doc).unwrap();
     }
 
     #[test]

@@ -36,7 +36,9 @@
 //!                      u32 inflight_count | per msg: f64 deliver_at |
 //!                      u64 version | u32 slot] (v6; v5 carried payload
 //!                      copies inline on every link instead of a slot
-//!                      table)
+//!                      table) |
+//!   u8 has_rounds | [u64 round | u64 drops | u64 renorms | u64 rejoins |
+//!                    u32 n_alive | n_alive * u8 alive flags] (v7)
 //!
 //! The v3 tail carries the CommPlane's cumulative traffic counters (so a
 //! resumed run's comm_scalars/comm_msgs columns continue rather than
@@ -58,6 +60,12 @@
 //! statistical surrogate, not only a dense vector). The comm block gained
 //! the overlap fallback tally in v5.
 //!
+//! The v7 tail snapshots the fault-tolerant round machine
+//! ([`super::rounds::RoundState`]): the committed-round counter, the
+//! drop/renorm/rejoin tallies, and the per-node membership flags — so a
+//! run that dropped a stalled peer resumes with the same renormalized
+//! mixing rows instead of silently re-admitting the dead node.
+//!
 //! v1 files (which end after the velocity block), v2 files (which end
 //! after the RNG block), v3 files (which end after the ef block) and v4
 //! files (which end after the clock block) still load; the extra state
@@ -78,6 +86,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use super::rounds::RoundState;
 use crate::algorithms::AgaState;
 use crate::comm::{CommStats, Compression};
 use crate::eventsim::{EventSimState, LinkSnapshot, SlotSnapshot};
@@ -85,7 +94,7 @@ use crate::params::pool::Payload;
 use crate::params::ParamMatrix;
 
 const MAGIC: &[u8; 4] = b"GPGA";
-const VERSION: u32 = 6;
+const VERSION: u32 = 7;
 
 /// SlowMo outer-loop state (Wang et al. 2019): the parameters at the last
 /// global sync and the slow-momentum buffer.
@@ -137,6 +146,10 @@ pub struct Checkpoint {
     /// files and non-async runs — an async resume then re-seeds its link
     /// caches from the restored rows).
     pub eventsim: Option<EventSimState>,
+    /// The fault-tolerant round machine's counters + membership (None for
+    /// pre-v7 files and runs without `--round-timeout` — restoring a
+    /// degraded membership without a machine is rejected by the trainer).
+    pub rounds: Option<RoundState>,
 }
 
 impl Checkpoint {
@@ -217,6 +230,13 @@ impl Checkpoint {
                     l.dst
                 );
             }
+        }
+        if let Some(rs) = &self.rounds {
+            anyhow::ensure!(
+                rs.alive.len() == n,
+                "round state carries {} membership flags for {n} nodes",
+                rs.alive.len()
+            );
         }
         let mut f = std::io::BufWriter::new(
             std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
@@ -313,6 +333,17 @@ impl Checkpoint {
                     f.write_all(&v.to_le_bytes())?;
                     f.write_all(&slot.to_le_bytes())?;
                 }
+            }
+        }
+        f.write_all(&[self.rounds.is_some() as u8])?;
+        if let Some(rs) = &self.rounds {
+            f.write_all(&rs.round.to_le_bytes())?;
+            f.write_all(&rs.drops.to_le_bytes())?;
+            f.write_all(&rs.renorms.to_le_bytes())?;
+            f.write_all(&rs.rejoins.to_le_bytes())?;
+            f.write_all(&(rs.alive.len() as u32).to_le_bytes())?;
+            for &a in &rs.alive {
+                f.write_all(&[a as u8])?;
             }
         }
         Ok(())
@@ -515,6 +546,28 @@ impl Checkpoint {
         } else {
             None
         };
+        let rounds = if version >= 7 && read_u8(&mut f)? == 1 {
+            let round = read_u64(&mut f)?;
+            let drops = read_u64(&mut f)?;
+            let renorms = read_u64(&mut f)?;
+            let rejoins = read_u64(&mut f)?;
+            let n_alive = read_u32(&mut f)? as usize;
+            anyhow::ensure!(
+                n_alive == n,
+                "round membership covers {n_alive} nodes, checkpoint has {n}"
+            );
+            let mut alive = Vec::with_capacity(n_alive);
+            for _ in 0..n_alive {
+                alive.push(match read_u8(&mut f)? {
+                    0 => false,
+                    1 => true,
+                    other => bail!("corrupt membership flag {other} in the round block"),
+                });
+            }
+            Some(RoundState { round, drops, renorms, rejoins, alive })
+        } else {
+            None
+        };
         Ok(Checkpoint {
             step,
             sim_seconds,
@@ -529,6 +582,7 @@ impl Checkpoint {
             ef_compression,
             clocks,
             eventsim,
+            rounds,
         })
     }
 }
@@ -617,6 +671,7 @@ mod tests {
             ef_compression: None,
             clocks: None,
             eventsim: None,
+            rounds: None,
         };
         let path = tmp("vel");
         ck.save(&path).unwrap();
@@ -641,6 +696,7 @@ mod tests {
             ef_compression: None,
             clocks: None,
             eventsim: None,
+            rounds: None,
         };
         let path = tmp("novel");
         ck.save(&path).unwrap();
@@ -681,6 +737,7 @@ mod tests {
                 waited: vec![0.0, 1.5, 0.0, 3.25],
             }),
             eventsim: None,
+            rounds: None,
         };
         let path = tmp("stateful");
         ck.save(&path).unwrap();
@@ -808,6 +865,7 @@ mod tests {
                 waited: vec![0.0, 2.0, 3.5],
             }),
             eventsim: None,
+            rounds: None,
         };
         let path = tmp("clocks");
         ck.save(&path).unwrap();
@@ -865,6 +923,7 @@ mod tests {
                 slots,
                 links: vec![mk_link(0, 1), mk_link(1, 0)],
             }),
+            rounds: None,
         };
         let path = tmp("eventsim");
         ck.save(&path).unwrap();
@@ -1010,6 +1069,7 @@ mod tests {
             ef_compression: Some(Compression::Int8 { block: 64 }),
             clocks: None,
             eventsim: None,
+            rounds: None,
         };
         assert!(ck.save(&tmp("efmis")).is_err());
         // Residuals without a codec identity are rejected too.
@@ -1027,8 +1087,83 @@ mod tests {
             ef_compression: None,
             clocks: None,
             eventsim: None,
+            rounds: None,
         };
         assert!(ck.save(&tmp("efnocodec")).is_err());
+    }
+
+    #[test]
+    fn round_state_roundtrips_and_validates() {
+        // The v7 block: counters + membership flags survive the file.
+        let mut ck = Checkpoint {
+            step: 50,
+            sim_seconds: 2.0,
+            params: ParamMatrix::zeros(3, 2),
+            velocities: None,
+            gossip_clock: 10,
+            schedule: None,
+            slowmo: None,
+            rng_states: Vec::new(),
+            comm: None,
+            ef_residuals: None,
+            ef_compression: None,
+            clocks: None,
+            eventsim: None,
+            rounds: Some(RoundState {
+                round: 9,
+                drops: 1,
+                renorms: 2,
+                rejoins: 0,
+                alive: vec![true, false, true],
+            }),
+        };
+        let path = tmp("rounds");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_file(path).ok();
+        // 2 membership flags for 3 nodes: refuse a partial roster.
+        ck.rounds = Some(RoundState {
+            round: 0,
+            drops: 0,
+            renorms: 0,
+            rejoins: 0,
+            alive: vec![true, false],
+        });
+        assert!(ck.save(&tmp("roundsmis")).is_err());
+    }
+
+    #[test]
+    fn loads_v6_files_with_no_round_block() {
+        // Hand-write the v6 layout: it ends after the eventsim flag, so
+        // the round machine must come back unset.
+        let path = tmp("v6");
+        let params = vec![4.0f32, 3.0, 2.0, 1.0]; // n=2, d=2
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"GPGA");
+        bytes.extend_from_slice(&6u32.to_le_bytes());
+        bytes.extend_from_slice(&11u64.to_le_bytes());
+        bytes.extend_from_slice(&1.25f64.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        for x in &params {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        bytes.push(0); // no velocities
+        bytes.extend_from_slice(&4u64.to_le_bytes()); // gossip clock
+        bytes.push(0); // no schedule
+        bytes.push(0); // no slowmo
+        bytes.push(0); // no rng
+        bytes.push(0); // no comm
+        bytes.push(0); // no ef residuals
+        bytes.push(0); // no clocks
+        bytes.push(0); // no eventsim; v6 files end here
+        std::fs::write(&path, &bytes).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 11);
+        assert_eq!(back.params.as_slice(), &params[..]);
+        assert!(back.rounds.is_none(), "v6 files predate the round machine");
+        std::fs::remove_file(path).ok();
     }
 
     #[test]
@@ -1066,6 +1201,7 @@ mod tests {
             ef_compression: None,
             clocks: None,
             eventsim: None,
+            rounds: None,
         };
         assert!(ck.save(&tmp("velmis")).is_err());
     }
@@ -1086,6 +1222,7 @@ mod tests {
             ef_compression: None,
             clocks: None,
             eventsim: None,
+            rounds: None,
         };
         assert!(ck.save(&tmp("rngmis")).is_err());
     }

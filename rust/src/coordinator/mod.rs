@@ -63,6 +63,7 @@
 
 pub mod checkpoint;
 pub mod mixer;
+pub mod rounds;
 
 use std::sync::Arc;
 
@@ -71,6 +72,7 @@ use anyhow::Result;
 use crate::algorithms::{schedule_for, AlgorithmKind, CommAction, Schedule, SlowMoParams};
 use crate::comm::{
     BackendKind, BusBackend, CommBackend, CommStats, Compression, PendingComm, SharedBackend,
+    TcpBackend,
 };
 use crate::config::ExperimentConfig;
 use crate::costmodel::{BarrierScope, CostModel, NodeCosts, VirtualClocks};
@@ -84,6 +86,8 @@ use crate::params::ParamMatrix;
 use crate::rng::Rng;
 use crate::runtime::{lit_f32, lit_i32, EvalFn, GradFn, Runtime};
 use crate::topology::Topology;
+
+use self::rounds::{require_deadline_support, RoundMachine, RoundState};
 
 /// The workload: dataset + AOT executables + batch plumbing.
 pub enum Workload {
@@ -217,12 +221,25 @@ pub struct TrainerOptions {
     /// compute overlap in-flight transfers (drops the BSP equivalence).
     pub max_staleness: usize,
     /// Which communication plane to run on: the shared-memory mixer
-    /// (default) or the message-passing bus. Uncompressed trajectories are
-    /// bit-identical across backends; only the accounting model differs
-    /// (predicted vs measured).
+    /// (default), the message-passing bus, or the loopback socket plane
+    /// (`tcp` — the same bus core over real framed `TcpStream`s).
+    /// Uncompressed trajectories are bit-identical across all three; only
+    /// the bytes' journey and the accounting model differ.
     pub backend: BackendKind,
     /// Gossip-message compression on the transmit path (either backend).
     pub compression: Compression,
+    /// Per-receive deadline in seconds for the fault-tolerant round state
+    /// machine ([`rounds::RoundMachine`]): a peer that stays silent past
+    /// this budget is dropped from the round — its mixing weight folds back
+    /// onto the senders' own rows — and the round retries over the degraded
+    /// membership. `0.0` (the default) disables the machine: a stalled
+    /// peer blocks forever, the pre-PR-7 semantics. Needs a
+    /// deadline-capable backend (bus | tcp) and the BSP regime.
+    pub round_timeout: f64,
+    /// TCP backend only: the `host:port` every rank's listener binds
+    /// (`--listen` / `comm.listen`). Port 0 (the default) asks the OS for
+    /// a free port per rank; a fixed port P pins rank r to P + r.
+    pub listen: String,
 }
 
 impl TrainerOptions {
@@ -256,6 +273,8 @@ impl TrainerOptions {
             max_staleness: cfg.max_staleness,
             backend: cfg.backend_kind().expect("validated"),
             compression: cfg.compression_kind().expect("validated"),
+            round_timeout: cfg.round_timeout,
+            listen: cfg.listen.clone(),
         }
     }
 }
@@ -296,6 +315,12 @@ pub struct Trainer {
     /// synchronously because the backend has no async path — surfaced in
     /// [`CommStats::fallback_rounds`] instead of silently downgrading.
     fallback_rounds: u64,
+    /// The fault-tolerant round state machine (`Some` iff
+    /// [`TrainerOptions::round_timeout`] > 0): every comm action runs
+    /// announce → gossip → collect → commit with a per-receive deadline;
+    /// stalled peers are dropped by mixing-row renormalization, never by
+    /// poisoning the trainer.
+    rounds: Option<RoundMachine>,
     /// One simulated clock per node (critical-path time plane); advanced
     /// per action with the resolved per-node `node_costs`.
     clocks: VirtualClocks,
@@ -363,6 +388,30 @@ impl Trainer {
                 opts.compression,
                 schedule.uses_global_average(),
             )),
+            // Same core, real sockets: loopback listeners at `opts.listen`,
+            // one stream per gossip edge, all-to-all streams dialed lazily
+            // on the first global average.
+            BackendKind::Tcp => Box::new(TcpBackend::new_loopback(
+                &opts.topology,
+                d,
+                &node_costs,
+                opts.cost_dim,
+                opts.compression,
+                schedule.uses_global_average(),
+                &opts.listen,
+            )?),
+        };
+        let rounds = if opts.round_timeout > 0.0 {
+            require_deadline_support(backend.as_ref())?;
+            anyhow::ensure!(
+                opts.regime == Regime::Bsp,
+                "--round-timeout drives the synchronous round protocol — the {:?} regime \
+                 reorders rounds around it (run --regime bsp, or drop the timeout)",
+                opts.regime
+            );
+            Some(RoundMachine::new(n, opts.round_timeout)?)
+        } else {
+            None
         };
         let pool = if opts.stealing {
             WorkerPool::new_stealing(opts.threads)
@@ -415,6 +464,7 @@ impl Trainer {
             schedule,
             eventsim,
             fallback_rounds: 0,
+            rounds,
             clocks,
             node_costs,
             no_comm: vec![0.0; n],
@@ -529,6 +579,40 @@ impl Trainer {
         self.opts.regime
     }
 
+    /// Peers dropped by round deadline so far (0 without `--round-timeout`).
+    pub fn peer_drops(&self) -> u64 {
+        self.rounds.as_ref().map(|m| m.drops).unwrap_or(0)
+    }
+
+    /// Mixing rows renormalized by those drops (0 without `--round-timeout`).
+    pub fn row_renorms(&self) -> u64 {
+        self.rounds.as_ref().map(|m| m.renorms).unwrap_or(0)
+    }
+
+    /// The round machine's checkpointable snapshot (`None` without
+    /// `--round-timeout`).
+    pub fn round_state(&self) -> Option<RoundState> {
+        self.rounds.as_ref().map(|m| m.state())
+    }
+
+    /// Re-admit a peer previously dropped by the round machine (its
+    /// pristine mixing weight folds back in). Errors without
+    /// `--round-timeout` or if the node is not dropped.
+    pub fn rejoin_node(&mut self, node: usize) -> Result<()> {
+        match self.rounds.as_mut() {
+            Some(m) => m.rejoin(node, self.backend.as_mut()),
+            None => anyhow::bail!("no round machine: rejoin needs --round-timeout > 0"),
+        }
+    }
+
+    /// Fault injection for tests and scenarios: mute `node` on the wire —
+    /// it stays connected but transmits nothing, the wedged-peer failure
+    /// mode the round deadline exists for. Errors on backends without
+    /// fault injection (shared has no wire to go silent on).
+    pub fn mute_node(&mut self, node: usize, muted: bool) -> Result<()> {
+        self.backend.set_muted(node, muted)
+    }
+
     /// The async regime's staleness histogram — entry s counts mix inputs
     /// that were s versions behind BSP-fresh. `None` outside the async
     /// regime.
@@ -595,6 +679,23 @@ impl Trainer {
         // homogeneous case bit-identical to the old scalar
         // `advance(compute + sim_seconds)` sequence.
         let action = self.schedule.action(k, mean_loss);
+        if let Some(machine) = self.rounds.as_mut() {
+            // Fault-tolerant path (BSP-only, validated at construction):
+            // the action runs announce → gossip → collect → commit under
+            // the per-receive deadline; a stalled peer is dropped by
+            // renormalizing its mixing row and the round retries. The
+            // returned charge bills what the COMMITTED round moved.
+            let charge =
+                machine.run(action, self.backend.as_mut(), &mut self.params, &self.pool)?;
+            if action == CommAction::GlobalAverage
+                && self.opts.algorithm == AlgorithmKind::SlowMo
+            {
+                self.slowmo_outer_update(lr);
+            }
+            self.clocks.advance(&self.node_costs.compute, &charge.node_seconds, charge.barrier);
+            self.step += 1;
+            return Ok(action);
+        }
         match action {
             CommAction::None => {
                 self.clocks.advance(&self.node_costs.compute, &self.no_comm, BarrierScope::None);
@@ -878,6 +979,7 @@ impl Trainer {
                 waited: self.clocks.waited().to_vec(),
             }),
             eventsim: self.eventsim.as_ref().map(|e| e.export_state()),
+            rounds: self.rounds.as_ref().map(|m| m.state()),
         })
     }
 
@@ -1023,6 +1125,35 @@ impl Trainer {
             ),
             (None, None) => {}
         }
+        // Round membership (v7): a machine-carrying snapshot re-applies
+        // every recorded drop to the backend so the resumed run mixes over
+        // the same degraded rows. A pre-v7 (or machine-less) snapshot
+        // resets this run's machine to full membership; a degraded
+        // snapshot restored WITHOUT a machine would silently un-drop its
+        // dead peers, so that mismatch is an error.
+        match (self.rounds.as_mut(), &ck.rounds) {
+            (Some(machine), Some(st)) => machine.restore(st, self.backend.as_mut())?,
+            (Some(machine), None) => {
+                let pristine = RoundState {
+                    round: 0,
+                    drops: 0,
+                    renorms: 0,
+                    rejoins: 0,
+                    alive: vec![true; n],
+                };
+                machine.restore(&pristine, self.backend.as_mut())?;
+            }
+            (None, Some(st)) => {
+                anyhow::ensure!(
+                    st.alive.iter().all(|&a| a),
+                    "checkpoint carries a degraded round membership ({} of {} peers alive) — \
+                     resume with --round-timeout > 0 so the drops stay in force",
+                    st.alive.iter().filter(|&&a| a).count(),
+                    st.alive.len()
+                );
+            }
+            (None, None) => {}
+        }
         Ok(())
     }
 
@@ -1064,6 +1195,8 @@ impl Trainer {
                     stale_max,
                     stale_mean,
                     link_util: self.link_utilization(),
+                    peer_drops: self.peer_drops(),
+                    row_renorms: self.row_renorms(),
                 });
             }
         }

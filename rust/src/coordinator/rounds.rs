@@ -1,0 +1,349 @@
+//! The fault-tolerant round state machine.
+//!
+//! A training round on a message-passing plane moves through four explicit
+//! phases:
+//!
+//! 1. **announce** — arm the per-receive deadline on every endpoint (the
+//!    round's membership and budget are declared before any byte moves);
+//! 2. **gossip** — run the collective (gossip or global average) with the
+//!    deadline in force;
+//! 3. **collect** — classify the outcome: success, a *stalled peer* (a
+//!    typed [`RecvTimeout`] naming the silent node, possibly flattened to
+//!    a string by the worker pool), or a real failure;
+//! 4. **commit** — on success, disarm the deadline and advance the round
+//!    counter; on a stalled peer, **drop** it — fold its weight back into
+//!    the mixing rows ([`CommBackend::drop_node`]), reset the message
+//!    epoch so the retry discards the aborted attempt's frames
+//!    ([`CommBackend::reset_round`]), and re-run the round over the
+//!    degraded membership.
+//!
+//! The invariant the ROADMAP asked for: a late or vanished peer is
+//! handled by the round protocol — timeout → renormalize the mixing row —
+//! **never** by poisoning the trainer. Real failures (closed bus, length
+//! mismatches, pool panics) still propagate; only attributable stalls are
+//! absorbed. Every drop is counted ([`RoundMachine::drops`],
+//! [`RoundMachine::renorms`]) and lands in the metrics CSV/JSON; the
+//! membership snapshot rides in checkpoint v7 ([`RoundState`]) so a
+//! restarted run resumes with the same degraded rows.
+
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::algorithms::CommAction;
+use crate::collective::stalled_peer;
+use crate::comm::{CommBackend, CommCharge, CommStats};
+use crate::costmodel::BarrierScope;
+use crate::exec::WorkerPool;
+use crate::params::ParamMatrix;
+
+/// Checkpointable snapshot of the round machine (the v7 block).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoundState {
+    /// Rounds committed so far.
+    pub round: u64,
+    /// Peers dropped by deadline (cumulative).
+    pub drops: u64,
+    /// Mixing rows renormalized by those drops (cumulative).
+    pub renorms: u64,
+    /// Peers re-admitted after a drop (cumulative).
+    pub rejoins: u64,
+    /// Current membership, one flag per node.
+    pub alive: Vec<bool>,
+}
+
+/// Drives each communication action through the announce → gossip →
+/// collect → commit phases with a per-receive deadline (see module docs).
+pub struct RoundMachine {
+    n: usize,
+    timeout: Duration,
+    /// Rounds committed so far.
+    pub round: u64,
+    /// Membership as this machine believes it (kept in lockstep with the
+    /// backend's mask via drop/rejoin).
+    pub alive: Vec<bool>,
+    pub drops: u64,
+    pub renorms: u64,
+    pub rejoins: u64,
+}
+
+impl RoundMachine {
+    /// A machine for `n` nodes with a per-receive deadline of
+    /// `timeout_secs` (must be finite and positive).
+    pub fn new(n: usize, timeout_secs: f64) -> Result<RoundMachine> {
+        ensure!(
+            timeout_secs.is_finite() && timeout_secs > 0.0,
+            "round timeout must be a positive number of seconds, got {timeout_secs}"
+        );
+        ensure!(n > 0, "round machine needs at least one node");
+        Ok(RoundMachine {
+            n,
+            timeout: Duration::from_secs_f64(timeout_secs),
+            round: 0,
+            alive: vec![true; n],
+            drops: 0,
+            renorms: 0,
+            rejoins: 0,
+        })
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// Run one action through the phased protocol. Stalled peers are
+    /// dropped and the action retried over the degraded membership (at
+    /// most n-1 times — every retry removes a node); any other error
+    /// propagates with the deadline disarmed.
+    pub fn run(
+        &mut self,
+        action: CommAction,
+        backend: &mut dyn CommBackend,
+        params: &mut ParamMatrix,
+        pool: &WorkerPool,
+    ) -> Result<CommCharge> {
+        if action == CommAction::None {
+            self.round += 1;
+            return Ok(CommCharge {
+                stats: CommStats::default(),
+                node_seconds: vec![0.0; self.n],
+                barrier: BarrierScope::None,
+            });
+        }
+        // Announce: the deadline is the round's membership budget.
+        backend.set_recv_deadline(Some(self.timeout));
+        let result = loop {
+            ensure!(
+                self.alive.iter().any(|&a| a),
+                "round {}: every peer has dropped out",
+                self.round
+            );
+            // Gossip: the collective itself, deadline in force.
+            let attempt = match action {
+                CommAction::Gossip => backend.gossip(params, pool),
+                CommAction::GlobalAverage => backend.global_average(params, pool),
+                CommAction::None => unreachable!("handled above"),
+            };
+            // Collect: classify the outcome.
+            match attempt {
+                Ok(charge) => break Ok(charge),
+                Err(e) => {
+                    let text = format!("{e:#}");
+                    match stalled_peer(&text) {
+                        Some(p) if p < self.n && self.alive[p] => {
+                            // Commit the drop: renormalize, reset, retry.
+                            self.alive[p] = false;
+                            self.drops += 1;
+                            self.renorms += backend.drop_node(p)?;
+                            backend.reset_round();
+                        }
+                        _ => break Err(e),
+                    }
+                }
+            }
+        };
+        // Commit: disarm; only a successful round advances the counter.
+        backend.set_recv_deadline(None);
+        if result.is_ok() {
+            self.round += 1;
+        }
+        result
+    }
+
+    /// Re-admit a dropped node (its pristine mixing weight folds back in).
+    pub fn rejoin(&mut self, node: usize, backend: &mut dyn CommBackend) -> Result<()> {
+        ensure!(node < self.n, "rejoin {node} out of range for n={}", self.n);
+        ensure!(!self.alive[node], "node {node} is not dropped");
+        backend.rejoin_node(node)?;
+        self.alive[node] = true;
+        self.rejoins += 1;
+        Ok(())
+    }
+
+    /// Snapshot for checkpoint v7.
+    pub fn state(&self) -> RoundState {
+        RoundState {
+            round: self.round,
+            drops: self.drops,
+            renorms: self.renorms,
+            rejoins: self.rejoins,
+            alive: self.alive.clone(),
+        }
+    }
+
+    /// Restore a snapshot, re-applying every recorded drop to `backend`
+    /// (the renorm counter keeps the checkpointed value — the folds were
+    /// already counted when they first happened).
+    pub fn restore(
+        &mut self,
+        state: &RoundState,
+        backend: &mut dyn CommBackend,
+    ) -> Result<()> {
+        ensure!(
+            state.alive.len() == self.n,
+            "round state covers {} nodes, run has {}",
+            state.alive.len(),
+            self.n
+        );
+        // Roll the backend's membership to match the snapshot.
+        let current = backend
+            .alive_mask()
+            .unwrap_or_else(|| vec![true; self.n]);
+        for (node, (&want, &have)) in state.alive.iter().zip(&current).enumerate() {
+            match (want, have) {
+                (false, true) => {
+                    backend.drop_node(node)?;
+                }
+                (true, false) => {
+                    backend.rejoin_node(node)?;
+                }
+                _ => {}
+            }
+        }
+        self.round = state.round;
+        self.drops = state.drops;
+        self.renorms = state.renorms;
+        self.rejoins = state.rejoins;
+        self.alive = state.alive.clone();
+        Ok(())
+    }
+}
+
+/// A machine cannot run on a plane that cannot time out.
+pub fn require_deadline_support(backend: &dyn CommBackend) -> Result<()> {
+    if !backend.supports_deadlines() {
+        bail!(
+            "--round-timeout needs a deadline-capable backend (bus | tcp), \
+             the {} backend has no wire to time out on",
+            backend.kind().name()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{BusBackend, Compression};
+    use crate::costmodel::{CostModel, NodeCosts};
+    use crate::topology::Topology;
+
+    fn backend(n: usize, d: usize, with_global: bool) -> BusBackend {
+        let costs =
+            NodeCosts::homogeneous(CostModel { alpha: 1e-4, theta: 1e-8, compute: 0.0 }, n);
+        BusBackend::new(&Topology::ring(n), d, &costs, d, Compression::None, with_global)
+    }
+
+    fn ramp(n: usize, d: usize) -> ParamMatrix {
+        let mut p = ParamMatrix::zeros(n, d);
+        for i in 0..n {
+            for (j, v) in p.row_mut(i).iter_mut().enumerate() {
+                *v = (i * d + j) as f32 * 0.125;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn healthy_rounds_commit_and_count() {
+        let (n, d) = (4, 6);
+        let mut b = backend(n, d, true);
+        let pool = WorkerPool::new(1);
+        let mut params = ramp(n, d);
+        let mut m = RoundMachine::new(n, 5.0).unwrap();
+        m.run(CommAction::Gossip, &mut b, &mut params, &pool).unwrap();
+        m.run(CommAction::GlobalAverage, &mut b, &mut params, &pool).unwrap();
+        m.run(CommAction::None, &mut b, &mut params, &pool).unwrap();
+        assert_eq!((m.round, m.drops, m.renorms), (3, 0, 0));
+        assert_eq!(m.alive_count(), n);
+    }
+
+    #[test]
+    fn stalled_peer_is_dropped_and_round_completes() {
+        // The acceptance scenario: node 2 wedges mid-round; the machine
+        // must finish the round over n-1 nodes, count the drop, and leave
+        // the trainer unpoisoned.
+        let (n, d) = (5, 8);
+        let mut b = backend(n, d, false);
+        let pool = WorkerPool::new(1);
+        let mut params = ramp(n, d);
+        b.set_muted(2, true).unwrap();
+        let mut m = RoundMachine::new(n, 0.05).unwrap();
+        let charge = m.run(CommAction::Gossip, &mut b, &mut params, &pool).unwrap();
+        assert_eq!((m.round, m.drops), (1, 1));
+        assert_eq!(m.renorms, 2, "ring neighbors 1 and 3 renormalized");
+        assert_eq!(m.alive, vec![true, true, false, true, true]);
+        assert!(charge.stats.msgs > 0, "the retried round really communicated");
+        // The next round runs healthy — no deadline armed, no poison.
+        m.run(CommAction::Gossip, &mut b, &mut params, &pool).unwrap();
+        assert_eq!(m.round, 2);
+    }
+
+    #[test]
+    fn rejoin_restores_membership_and_counts() {
+        let (n, d) = (4, 4);
+        let mut b = backend(n, d, false);
+        let pool = WorkerPool::new(1);
+        let mut params = ramp(n, d);
+        b.set_muted(3, true).unwrap();
+        let mut m = RoundMachine::new(n, 0.05).unwrap();
+        m.run(CommAction::Gossip, &mut b, &mut params, &pool).unwrap();
+        assert!(!m.alive[3]);
+        m.rejoin(3, &mut b).unwrap();
+        assert!(m.alive[3] && m.rejoins == 1);
+        assert!(m.rejoin(3, &mut b).is_err(), "double rejoin refused");
+        m.run(CommAction::Gossip, &mut b, &mut params, &pool).unwrap();
+        assert_eq!(m.alive_count(), n, "full membership after rejoin");
+    }
+
+    #[test]
+    fn real_failures_still_propagate() {
+        // A pure-gossip backend asked for a global average is a config
+        // error, not a stall: no drop, error surfaces, deadline disarmed.
+        let (n, d) = (3, 4);
+        let mut b = backend(n, d, false);
+        let pool = WorkerPool::new(1);
+        let mut params = ramp(n, d);
+        let mut m = RoundMachine::new(n, 0.05).unwrap();
+        let err = m.run(CommAction::GlobalAverage, &mut b, &mut params, &pool).unwrap_err();
+        assert!(format!("{err}").contains("without all-reduce edges"));
+        assert_eq!((m.drops, m.round), (0, 0));
+        // The config error did not poison anything: gossip still runs.
+        m.run(CommAction::Gossip, &mut b, &mut params, &pool).unwrap();
+    }
+
+    #[test]
+    fn state_snapshot_restores_membership_onto_a_fresh_backend() {
+        let (n, d) = (5, 6);
+        let mut b = backend(n, d, false);
+        let pool = WorkerPool::new(1);
+        let mut params = ramp(n, d);
+        b.set_muted(1, true).unwrap();
+        let mut m = RoundMachine::new(n, 0.05).unwrap();
+        m.run(CommAction::Gossip, &mut b, &mut params, &pool).unwrap();
+        let snap = m.state();
+        assert_eq!(snap.alive, vec![true, false, true, true, true]);
+
+        // A restarted process: fresh backend, fresh machine, same state.
+        let mut b2 = backend(n, d, false);
+        let mut m2 = RoundMachine::new(n, 0.05).unwrap();
+        m2.restore(&snap, &mut b2).unwrap();
+        assert_eq!(m2.state(), snap);
+        assert_eq!(b2.alive_mask().unwrap(), snap.alive);
+        // And it trains: the degraded round completes without a timeout.
+        m2.run(CommAction::Gossip, &mut b2, &mut params, &pool).unwrap();
+    }
+
+    #[test]
+    fn deadline_support_is_required() {
+        use crate::comm::SharedBackend;
+        let topo = Topology::ring(3);
+        let costs =
+            NodeCosts::homogeneous(CostModel { alpha: 1e-4, theta: 1e-8, compute: 0.0 }, 3);
+        let shared = SharedBackend::new(&topo, 4, &costs, 4, Compression::None);
+        let err = require_deadline_support(&shared).unwrap_err().to_string();
+        assert!(err.contains("shared"), "{err}");
+        let bus = backend(3, 4, false);
+        require_deadline_support(&bus).unwrap();
+    }
+}

@@ -150,6 +150,8 @@ impl RunSpec {
             max_staleness: 0,
             backend: self.backend,
             compression: Compression::None,
+            round_timeout: 0.0,
+            listen: "127.0.0.1:0".to_string(),
         }
     }
 

@@ -21,9 +21,11 @@
 //! * [`jsonio`] — JSON parser/writer (artifact manifest, metrics dumps).
 //! * [`config`] — TOML-subset experiment config system.
 //! * [`topology`] — graphs, doubly-stochastic gossip matrices, beta.
-//! * [`collective`] — in-proc message bus (sparse, topology-sized sender
-//!   tables), neighbor exchange, ring all-reduce (reduce-scatter +
-//!   all-gather), byte/latency accounting.
+//! * [`collective`] — the wire layer: in-proc message bus (sparse,
+//!   topology-sized sender tables) and framed loopback TCP endpoints
+//!   behind one [`collective::Wire`] surface, neighbor exchange, ring
+//!   all-reduce (reduce-scatter + all-gather), receive deadlines
+//!   (typed [`collective::RecvTimeout`]), byte/latency accounting.
 //! * [`costmodel`] — the paper's alpha-beta communication time model (§3.4,
 //!   App. D/H), its per-node generalization ([`costmodel::NodeCosts`]:
 //!   heterogeneous clusters, stragglers, link asymmetry) and the per-node
@@ -43,9 +45,10 @@
 //! * [`optim`] — SGD / momentum / Nesterov + LR schedules.
 //! * [`algorithms`] — the paper's communication schedules.
 //! * [`comm`] — the unified CommPlane: one pluggable [`comm::CommBackend`]
-//!   (shared-memory mixer or message-passing bus) behind every training
-//!   run, with end-to-end [`comm::CommStats`] traffic accounting; select
-//!   with `comm.backend` / `--backend {shared,bus}`.
+//!   (shared-memory mixer, message-passing bus, or the same bus core
+//!   over real loopback sockets) behind every training run, with
+//!   end-to-end [`comm::CommStats`] traffic accounting; select with
+//!   `comm.backend` / `--backend {shared,bus,tcp}`.
 //! * [`eventsim`] — the event-driven asynchronous gossip regime: a
 //!   discrete-event queue over per-link transfer events
 //!   ([`eventsim::AsyncGossip`]) with bounded-stale AD-PSGD mixing;
@@ -61,7 +64,10 @@
 //! * [`coordinator`] — the per-step training pipeline over n workers,
 //!   sharded across the `train.threads`-sized pool (bit-identical to the
 //!   sequential run at any thread count); `--overlap` runs the gossip mix
-//!   concurrently with the next step's sampling phase.
+//!   concurrently with the next step's sampling phase;
+//!   [`coordinator::rounds`] is the fault-tolerant round state machine
+//!   (`--round-timeout`: deadline → drop-by-renormalization → rejoin,
+//!   membership in checkpoint v7).
 //! * [`metrics`] — loss curves, consensus distance, transient-stage
 //!   detection, reporters.
 //! * [`population`] — the virtual population plane: scenario scripting

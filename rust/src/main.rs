@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   train [--config exp.toml] [--set key=value ...] [--threads N]
 //!         [--regime bsp|overlap|async] [--max-staleness S]
-//!         [--overlap] [--stealing] [--backend shared|bus]
+//!         [--overlap] [--stealing] [--backend shared|bus|tcp]
+//!         [--listen host:port] [--round-timeout SECS]
 //!         [--straggler idx:factor[,idx:factor...]]    run one experiment
 //!   topo  [--n N]                                     topology/beta report
 //!   check                                             verify artifacts load
@@ -48,7 +49,8 @@ fn print_help() {
          USAGE:\n\
            gossip-pga train [--config exp.toml] [--set key=value ...] [--threads N]\n\
                             [--regime bsp|overlap|async] [--max-staleness S]\n\
-                            [--overlap] [--stealing] [--backend shared|bus]\n\
+                            [--overlap] [--stealing] [--backend shared|bus|tcp]\n\
+                            [--listen host:port] [--round-timeout SECS]\n\
                             [--straggler idx:factor[,idx:factor...]]\n\
            gossip-pga sweep [--virtual-n N] [--surrogate] [--dim D] [--steps K]\n\
                             [--topology T] [--algo A] [--period H] [--max-staleness S]\n\
@@ -82,7 +84,15 @@ fn print_help() {
            train.overlap (double-buffered async gossip; --overlap is shorthand\n\
              for --regime overlap)\n\
            train.stealing (work-stealing pool chunking; --stealing is shorthand)\n\
-           comm.backend (shared|bus; --backend is shorthand)\n\
+           comm.backend (shared|bus|tcp; --backend is shorthand. tcp = the bus\n\
+             core over real loopback sockets — framed streams, measured traffic)\n\
+           comm.listen (tcp bind address, host:port; port 0 = OS-assigned;\n\
+             --listen is shorthand)\n\
+           comm.peers (multi-process mesh; not yet supported — rejected with a\n\
+             clear message)\n\
+           comm.round_timeout (per-receive deadline in seconds; a peer silent\n\
+             past it is dropped by renormalizing its mixing row. 0 = off;\n\
+             needs bus|tcp; --round-timeout is shorthand)\n\
            comm.compression (none|topk|int8), comm.topk_frac, comm.int8_block\n\
            cost.alpha / cost.theta / cost.compute (scalar or per-node array)\n\
            cost.straggler (\"idx:factor,...\"; --straggler is shorthand and accepts\n\
@@ -181,7 +191,24 @@ fn cmd_train(args: &[String]) -> Result<()> {
             }
             "backend" => {
                 let parsed = Toml::parse(&format!("comm.backend = \"{val}\""))
-                    .with_context(|| format!("--backend wants shared|bus, got '{val}'"))?;
+                    .with_context(|| format!("--backend wants shared|bus|tcp, got '{val}'"))?;
+                doc.values.extend(parsed.values);
+            }
+            "listen" => {
+                let parsed = Toml::parse(&format!("comm.listen = \"{val}\""))
+                    .with_context(|| format!("--listen wants host:port, got '{val}'"))?;
+                doc.values.extend(parsed.values);
+            }
+            "peers" => {
+                // Parsed so the config layer can reject it with the real
+                // message (multi-process tcp is not yet supported).
+                let parsed = Toml::parse(&format!("comm.peers = \"{val}\""))
+                    .with_context(|| format!("--peers wants host:port[,...], got '{val}'"))?;
+                doc.values.extend(parsed.values);
+            }
+            "round-timeout" => {
+                let parsed = Toml::parse(&format!("comm.round_timeout = {val}"))
+                    .with_context(|| format!("--round-timeout wants seconds, got '{val}'"))?;
                 doc.values.extend(parsed.values);
             }
             "regime" => {

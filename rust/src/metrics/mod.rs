@@ -50,6 +50,13 @@ pub struct Record {
     /// (transfer occupancy / elapsed critical path, averaged over
     /// directed links). 0 outside the async regime.
     pub link_util: f64,
+    /// Peers dropped by the round machine's per-receive deadline so far
+    /// (cumulative; 0 without `--round-timeout`).
+    pub peer_drops: u64,
+    /// Mixing rows renormalized by those drops (cumulative; each drop
+    /// folds the dead peer's weight back onto every live row that carried
+    /// it).
+    pub row_renorms: u64,
 }
 
 /// A training history for one run.
@@ -92,11 +99,11 @@ impl History {
         let mut out = String::from(
             "step,loss,consensus,lr,sim_seconds,comm_scalars,comm_msgs,\
              sim_min_seconds,straggler_slack,barrier_wait,\
-             stale_max,stale_mean,link_util\n",
+             stale_max,stale_mean,link_util,peer_drops,row_renorms\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.step,
                 r.loss,
                 r.consensus,
@@ -109,7 +116,9 @@ impl History {
                 r.barrier_wait,
                 r.stale_max,
                 r.stale_mean,
-                r.link_util
+                r.link_util,
+                r.peer_drops,
+                r.row_renorms
             ));
         }
         out
@@ -163,6 +172,14 @@ impl History {
             (
                 "link_util",
                 jsonio::num_arr(&self.records.iter().map(|r| r.link_util).collect::<Vec<_>>()),
+            ),
+            (
+                "peer_drops",
+                jsonio::u64_arr(&self.records.iter().map(|r| r.peer_drops).collect::<Vec<_>>()),
+            ),
+            (
+                "row_renorms",
+                jsonio::u64_arr(&self.records.iter().map(|r| r.row_renorms).collect::<Vec<_>>()),
             ),
         ])
     }
@@ -482,6 +499,8 @@ mod tests {
                 stale_max: i as u64,
                 stale_mean: i as f64 * 0.5,
                 link_util: i as f64 * 0.125,
+                peer_drops: i as u64 / 2,
+                row_renorms: i as u64,
             });
         }
         assert_eq!(h.first_step_below(0.35).unwrap().step, 2);
@@ -499,9 +518,9 @@ mod tests {
             .lines()
             .next()
             .unwrap()
-            .ends_with("straggler_slack,barrier_wait,stale_max,stale_mean,link_util"));
+            .ends_with("stale_max,stale_mean,link_util,peer_drops,row_renorms"));
         assert!(csv.lines().nth(3).unwrap().contains(",200,4,"));
-        assert!(csv.lines().nth(3).unwrap().ends_with(",1,1,0.5,2,1,0.25"));
+        assert!(csv.lines().nth(3).unwrap().ends_with(",1,1,0.5,2,1,0.25,1,2"));
         let j = h.to_json().dump();
         assert!(j.contains("\"label\":\"test\""));
         assert!(j.contains("\"comm_scalars\":[0,100,200,300,400]"));
@@ -510,5 +529,7 @@ mod tests {
         assert!(j.contains("\"barrier_wait\":[0,0.25,0.5,0.75,1]"));
         assert!(j.contains("\"stale_max\":[0,1,2,3,4]"));
         assert!(j.contains("\"link_util\":[0,0.125,0.25,0.375,0.5]"));
+        assert!(j.contains("\"peer_drops\":[0,0,1,1,2]"));
+        assert!(j.contains("\"row_renorms\":[0,1,2,3,4]"));
     }
 }

@@ -23,6 +23,7 @@ use std::sync::Arc;
 use gossip_pga::algorithms::{schedule_for, AlgorithmKind, CommAction};
 use gossip_pga::comm::{
     schedule_traffic, BackendKind, BusBackend, CommBackend, CommStats, Compression, SharedBackend,
+    TcpBackend,
 };
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::{CostModel, NodeCosts};
@@ -62,6 +63,18 @@ fn backend_for(
             compression,
             algo != AlgorithmKind::Gossip,
         )),
+        BackendKind::Tcp => Box::new(
+            TcpBackend::new_loopback(
+                topo,
+                d,
+                &costs,
+                d,
+                compression,
+                algo != AlgorithmKind::Gossip,
+                "127.0.0.1:0",
+            )
+            .unwrap(),
+        ),
     }
 }
 
@@ -420,6 +433,8 @@ fn trainer_with_backend(
         max_staleness: 0,
         backend,
         compression: Compression::None,
+        round_timeout: 0.0,
+        listen: "127.0.0.1:0".to_string(),
     };
     Trainer::new(workload, init, opts).unwrap()
 }
@@ -498,6 +513,8 @@ fn checkpoint_resumes_comm_totals_and_compressor_residuals_exactly() {
                 max_staleness: 0,
                 backend,
                 compression: Compression::TopK { frac: 0.5 },
+                round_timeout: 0.0,
+                listen: "127.0.0.1:0".to_string(),
             };
             Trainer::new(workload, init, opts).unwrap()
         };
@@ -568,6 +585,8 @@ fn restoring_compressed_checkpoint_into_uncompressed_run_is_rejected() {
         max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::Int8 { block: 64 },
+        round_timeout: 0.0,
+        listen: "127.0.0.1:0".to_string(),
     };
     let mut compressed = Trainer::new(workload, init, opts.clone()).unwrap();
     for _ in 0..3 {
@@ -620,6 +639,8 @@ fn overlap_on_bus_falls_back_to_sync_and_matches_bsp() {
         max_staleness: 0,
         backend: BackendKind::Bus,
         compression: Compression::None,
+        round_timeout: 0.0,
+        listen: "127.0.0.1:0".to_string(),
     };
     let mut ovl = Trainer::new(workload, init, opts_overlap).unwrap();
     for _ in 0..9 {

@@ -292,12 +292,13 @@ fn checkpoint_v6_resumes_mid_flight_bit_exactly() {
             waited: clocks.waited().to_vec(),
         }),
         eventsim: Some(engine.export_state()),
+        rounds: None,
     };
     let path = std::env::temp_dir().join(format!("gpga_eventsim_{}.bin", std::process::id()));
     ck.save(&path).unwrap();
     let loaded = Checkpoint::load(&path).unwrap();
     std::fs::remove_file(&path).ok();
-    assert_eq!(ck, loaded, "v6 file round-trip must be lossless");
+    assert_eq!(ck, loaded, "checkpoint round-trip must be lossless");
     let es = loaded.eventsim.as_ref().unwrap();
     assert!(
         es.links.iter().any(|l| !l.inflight.is_empty()),

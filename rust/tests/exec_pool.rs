@@ -55,6 +55,8 @@ fn trainer(threads: usize) -> Trainer {
         max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::None,
+        round_timeout: 0.0,
+        listen: "127.0.0.1:0".to_string(),
     };
     Trainer::new(workload, init, opts).unwrap()
 }
@@ -113,6 +115,8 @@ fn poisoned_pool_refuses_async_overlap_work_too() {
             max_staleness: 0,
             backend: BackendKind::Shared,
             compression: Compression::None,
+            round_timeout: 0.0,
+            listen: "127.0.0.1:0".to_string(),
         };
         let mut t = Trainer::new(workload, init, opts).unwrap();
         t.step_once().unwrap(); // leaves a mix in flight

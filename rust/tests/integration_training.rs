@@ -40,6 +40,8 @@ fn opts(algo: AlgorithmKind, topo: Topology, h: usize, seed: u64) -> TrainerOpti
         max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::None,
+        round_timeout: 0.0,
+        listen: "127.0.0.1:0".to_string(),
     }
 }
 

@@ -393,6 +393,8 @@ fn trainer_opts(
         max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::None,
+        round_timeout: 0.0,
+        listen: "127.0.0.1:0".to_string(),
     }
 }
 

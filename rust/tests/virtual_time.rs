@@ -20,7 +20,7 @@
 use std::sync::Arc;
 
 use gossip_pga::algorithms::{schedule_for, AlgorithmKind, CommAction, SlowMoParams};
-use gossip_pga::comm::{BackendKind, BusBackend, CommBackend, Compression, SharedBackend};
+use gossip_pga::comm::{BackendKind, BusBackend, CommBackend, Compression, SharedBackend, TcpBackend};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::{BarrierScope, CostModel, NodeCosts, SimClock, VirtualClocks};
 use gossip_pga::eventsim::Regime;
@@ -58,6 +58,18 @@ impl ReplaySpec<'_> {
             BackendKind::Bus => {
                 Box::new(BusBackend::new(topo, d, costs, self.cost_dim, Compression::None, true))
             }
+            BackendKind::Tcp => Box::new(
+                TcpBackend::new_loopback(
+                    topo,
+                    d,
+                    costs,
+                    self.cost_dim,
+                    Compression::None,
+                    true,
+                    "127.0.0.1:0",
+                )
+                .unwrap(),
+            ),
         };
         let pool = WorkerPool::new(2);
         let mut params = ParamMatrix::random(&mut Rng::new(11), n, d, 1.0);
@@ -226,6 +238,8 @@ fn opts(n: usize, threads: usize, costs: Option<NodeCosts>) -> TrainerOptions {
         max_staleness: 0,
         backend: BackendKind::Shared,
         compression: Compression::None,
+        round_timeout: 0.0,
+        listen: "127.0.0.1:0".to_string(),
     }
 }
 

@@ -32,6 +32,13 @@
 #      the event-plane gate (async critical path below the neighborhood-
 #      barrier bill under multi-stragglers; strict mode bit-equal); it
 #      needs no AOT artifacts, so backend accounting cannot silently rot.
+#   9. transport smoke at PROPTEST_CASES=16 + GOSSIP_PGA_FAST: the socket
+#      plane — shared == bus == tcp bit-equality over real loopback
+#      sockets (every test binds 127.0.0.1:0, OS-assigned ports, so no
+#      hardcoded-port flakes), the round state machine's drop/rejoin/
+#      checkpoint-v7 acceptance path, and the BENCH_7.json schema gate
+#      (the bit-equality replay needs no AOT artifacts; the trainer-level
+#      fault tests do)
 #
 # Usage: scripts/verify.sh [--fast]
 #   --fast   sets GOSSIP_PGA_FAST=1 so bench-derived tests run at reduced
@@ -79,5 +86,8 @@ PROPTEST_CASES=16 GOSSIP_PGA_FAST=1 cargo test -q --test population
 
 echo "==> CommPlane accounting smoke incl. straggler + event-plane gates (tab17, fast mode)"
 GOSSIP_PGA_FAST=1 cargo bench --bench tab17_comm_overhead
+
+echo "==> transport plane: tcp bit-equality + round drop/rejoin/checkpoint-v7 (loopback, port 0)"
+PROPTEST_CASES=16 GOSSIP_PGA_FAST=1 cargo test -q --test transport
 
 echo "==> verify OK"
