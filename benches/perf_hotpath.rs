@@ -20,8 +20,15 @@
 //!   * transport plane: tcp (real loopback sockets) vs bus (in-proc
 //!     channels) vs shared (fused mix) gossip + global average at the
 //!     same pool size — all three bit-identical
+//!   * mix kernel: blocked/vectorized `mix_row_src` vs the naive scalar
+//!     reference at deep-learning d — asserts bit-equal outputs in-bench
+//!   * core pinning: the same pooled gossip on a pinned vs unpinned
+//!     worker pool — asserts bit-equal finals
+//!   * gossip pipelining: depth {1, 2, 4} chained async rounds vs the
+//!     synchronous sequence — asserts bit-equal finals + clocks
 //!
-//! The sweep and transport rows land in BENCH_7.json, anchored at
+//! The sweep and transport rows land in BENCH_7.json; the kernel, pinning
+//! and pipelining rows land in BENCH_8.json. Both are anchored at
 //! CARGO_MANIFEST_DIR (not the CWD — `cargo bench` runs from wherever).
 //!
 //!     cargo bench --bench perf_hotpath
@@ -32,7 +39,7 @@ use gossip_pga::algorithms::AlgorithmKind;
 use gossip_pga::collective::{bus, ring_all_reduce, run_nodes};
 use gossip_pga::comm::{BackendKind, BusBackend, CommBackend, Compression, SharedBackend, TcpBackend};
 use gossip_pga::jsonio::{self, Json};
-use gossip_pga::coordinator::mixer::{axpy, Mixer};
+use gossip_pga::coordinator::mixer::{axpy, mix_row_src, mix_row_src_scalar, Mixer};
 use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
 use gossip_pga::costmodel::{CostModel, NodeCosts};
 use gossip_pga::eventsim::Regime;
@@ -64,6 +71,8 @@ fn trainer_opts(n: usize, threads: usize, regime: Regime) -> TrainerOptions {
         cost_dim: 25_500_000,
         node_costs: None,
         stealing: false,
+        pin: false,
+        pipeline_depth: 1,
         log_every: 1000,
         threads,
         regime,
@@ -393,6 +402,186 @@ fn main() -> anyhow::Result<()> {
             ("population_rows", Json::Arr(population_rows)),
         ]);
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_7.json");
+        std::fs::write(&path, doc.dump() + "\n")?;
+        println!("wrote {}", path.display());
+    }
+
+    // --- BENCH_8 part 1: blocked/vectorized kernel vs scalar reference ------
+    // The §Kernel tentpole row pair: the shipping `mix_row_src` (fused
+    // 1/2/3-neighbor lanes + MIX_BLOCK-blocked general arm) against the
+    // naive reference it must reproduce bit for bit. deg 2/3 hit the fused
+    // arms (one-peer / ring rows), deg 8 the blocked arm (grid-ish).
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    {
+        let dd = 1_000_000usize;
+        let nsrc = 9;
+        let src = rng.normal_vec(nsrc * dd, 1.0);
+        for deg in [2usize, 3, 8] {
+            let row: Vec<(usize, f32)> =
+                (0..deg).map(|j| (j, 1.0 / (deg as f32 + 1.0))).collect();
+            let srow = |j: usize| &src[j * dd..(j + 1) * dd];
+            let mut out_blocked = vec![0.0f32; dd];
+            let mut out_scalar = vec![0.0f32; dd];
+            let s_blocked = measure(3, 20, || mix_row_src(&row, srow, &mut out_blocked));
+            let s_scalar =
+                measure(3, 20, || mix_row_src_scalar(&row, srow, &mut out_scalar));
+            assert!(
+                out_blocked.iter().zip(&out_scalar).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "deg {deg}: blocked kernel diverged from the scalar reference"
+            );
+            t.rowv(vec![
+                format!("mix row, blocked kernel (deg {deg})"),
+                "d = 1M".into(),
+                fmt_duration(s_blocked.mean),
+                fmt_duration(s_blocked.p95),
+                format!("{:.1} GB/s", ((deg + 1) * dd * 4) as f64 / s_blocked.mean / 1e9),
+            ]);
+            t.rowv(vec![
+                format!("mix row, scalar reference (deg {deg})"),
+                "d = 1M".into(),
+                fmt_duration(s_scalar.mean),
+                fmt_duration(s_scalar.p95),
+                format!("{:.2}x vs blocked", s_scalar.mean / s_blocked.mean),
+            ]);
+            for (kernel, s) in [("blocked", &s_blocked), ("scalar", &s_scalar)] {
+                kernel_rows.push(jsonio::obj(vec![
+                    ("kernel", Json::Str(kernel.into())),
+                    ("d", Json::Num(dd as f64)),
+                    ("deg", Json::Num(deg as f64)),
+                    ("mean_seconds", Json::Num(s.mean)),
+                    ("p95_seconds", Json::Num(s.p95)),
+                    ("bit_equal", Json::Bool(true)),
+                ]));
+            }
+        }
+    }
+
+    // --- BENCH_8 part 2: pinned vs unpinned worker pool ---------------------
+    // The same pooled gossip mix on two pools that differ only in core
+    // affinity. Bits must be identical (pinning is pure placement); the
+    // wall-clock delta is what `--pin` buys on this box.
+    let mut pin_rows: Vec<Json> = Vec::new();
+    {
+        let n = 16;
+        let dd = 1_000_000usize;
+        let topo = Topology::ring(n);
+        let pin_t = threads_avail.clamp(2, 8);
+        let mut p_plain = random_matrix(&mut rng, n, dd);
+        let mut p_pinned = p_plain.clone();
+        let mut mixer_plain = Mixer::new(&topo, dd);
+        let mut mixer_pinned = Mixer::new(&topo, dd);
+        let plain_pool = WorkerPool::with_options(pin_t, false, false);
+        let pinned_pool = WorkerPool::with_options(pin_t, false, true);
+        let s_plain =
+            measure(2, 10, || mixer_plain.gossip(&mut p_plain, &plain_pool).unwrap());
+        let s_pinned =
+            measure(2, 10, || mixer_pinned.gossip(&mut p_pinned, &pinned_pool).unwrap());
+        assert_eq!(
+            mixer_plain.gossip_clock, mixer_pinned.gossip_clock,
+            "pin benches ran different round counts"
+        );
+        assert_eq!(p_plain, p_pinned, "pinning changed the gossip bits");
+        t.rowv(vec![
+            format!("gossip mix, unpinned pool (t={pin_t})"),
+            "ring n = 16, d = 1M".into(),
+            fmt_duration(s_plain.mean),
+            fmt_duration(s_plain.p95),
+            format!("{:.1} GB/s", (n * 3 * dd * 4) as f64 / s_plain.mean / 1e9),
+        ]);
+        t.rowv(vec![
+            format!("gossip mix, pinned pool (t={pin_t})"),
+            "ring n = 16, d = 1M".into(),
+            fmt_duration(s_pinned.mean),
+            fmt_duration(s_pinned.p95),
+            format!("{:.2}x vs unpinned", s_pinned.mean / s_plain.mean),
+        ]);
+        for (pinned, s) in [(false, &s_plain), (true, &s_pinned)] {
+            pin_rows.push(jsonio::obj(vec![
+                ("pinned", Json::Bool(pinned)),
+                ("threads", Json::Num(pin_t as f64)),
+                ("n", Json::Num(n as f64)),
+                ("d", Json::Num(dd as f64)),
+                ("mean_seconds", Json::Num(s.mean)),
+                ("p95_seconds", Json::Num(s.p95)),
+                ("bit_equal", Json::Bool(true)),
+            ]));
+        }
+    }
+
+    // --- BENCH_8 part 3: depth-k gossip pipelining --------------------------
+    // A burst of chained comm-only rounds per iteration: issue keeps the
+    // ring at most `depth` deep (finish the oldest round when full), then a
+    // full FIFO drain at the end of the burst — exactly the k·H-boundary
+    // discipline. Every depth runs the same total round count from the
+    // same start, so all finals must be bit-identical to the synchronous
+    // mixer's.
+    let mut pipeline_rows: Vec<Json> = Vec::new();
+    {
+        use std::collections::VecDeque;
+        let n = 16;
+        let dd = 1_000_000usize;
+        let burst = 8usize;
+        let (warmup, iters) = (1usize, 5);
+        let topo = Topology::one_peer_expo(n);
+        let pipe_pool = WorkerPool::new(threads_avail.clamp(2, 8));
+        let init = random_matrix(&mut rng, n, dd);
+        let mut p_sync = init.clone();
+        let mut sync_mixer = Mixer::new(&topo, dd);
+        for _ in 0..(warmup + iters) * burst {
+            sync_mixer.gossip(&mut p_sync, &pipe_pool)?;
+        }
+        for depth in [1usize, 2, 4] {
+            let mut p = init.clone();
+            let mut mixer = Mixer::with_depth(&topo, dd, depth);
+            let s = measure(warmup, iters, || {
+                let mut handles = VecDeque::new();
+                for _ in 0..burst {
+                    if !mixer.pipeline_ready() {
+                        let oldest = handles.pop_front().unwrap();
+                        mixer.finish_gossip(&mut p, oldest).unwrap();
+                    }
+                    handles.push_back(unsafe { mixer.gossip_async(&p, &pipe_pool).unwrap() });
+                }
+                while let Some(h) = handles.pop_front() {
+                    mixer.finish_gossip(&mut p, h).unwrap();
+                }
+            });
+            assert_eq!(
+                mixer.gossip_clock, sync_mixer.gossip_clock,
+                "depth {depth}: pipeline ran a different round count"
+            );
+            assert_eq!(p, p_sync, "depth {depth}: pipelined rounds diverged from sync");
+            t.rowv(vec![
+                format!("gossip pipeline, depth {depth}"),
+                format!("one-peer-expo n = {n}, d = 1M, {burst} rounds/burst"),
+                fmt_duration(s.mean),
+                fmt_duration(s.p95),
+                format!("{:.1} rounds/s", burst as f64 / s.mean),
+            ]);
+            pipeline_rows.push(jsonio::obj(vec![
+                ("depth", Json::Num(depth as f64)),
+                ("rounds", Json::Num(burst as f64)),
+                ("n", Json::Num(n as f64)),
+                ("d", Json::Num(dd as f64)),
+                ("mean_seconds", Json::Num(s.mean)),
+                ("p95_seconds", Json::Num(s.p95)),
+                ("bit_equal", Json::Bool(true)),
+            ]));
+        }
+    }
+
+    // BENCH_8: the kernel / pinning / pipelining rows, same anchoring as
+    // BENCH_7. Written before the PJRT sections so artifact-free boxes
+    // still emit it.
+    {
+        let doc = jsonio::obj(vec![
+            ("bench", Json::Str("hotpath_kernel_pin_pipeline".into())),
+            ("fast", Json::Bool(fast)),
+            ("kernel_rows", Json::Arr(std::mem::take(&mut kernel_rows))),
+            ("pin_rows", Json::Arr(std::mem::take(&mut pin_rows))),
+            ("pipeline_rows", Json::Arr(std::mem::take(&mut pipeline_rows))),
+        ]);
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_8.json");
         std::fs::write(&path, doc.dump() + "\n")?;
         println!("wrote {}", path.display());
     }

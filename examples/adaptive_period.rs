@@ -32,6 +32,8 @@ fn opts(algo: AlgorithmKind, n: usize, seed: u64) -> TrainerOptions {
         cost_dim: 25_500_000,
         node_costs: None,
         stealing: false,
+        pin: false,
+        pipeline_depth: 1,
         log_every: 50,
         threads: 1,
         regime: Regime::Bsp,

@@ -53,6 +53,8 @@ fn main() -> anyhow::Result<()> {
             log_every: 25,
             threads: 1,
             stealing: false,
+            pin: false,
+            pipeline_depth: 1,
             regime: Regime::Bsp,
             max_staleness: 0,
             backend: BackendKind::Shared,

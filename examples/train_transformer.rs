@@ -80,6 +80,8 @@ fn main() -> anyhow::Result<()> {
         cost_dim: 330_000_000,
         node_costs: None,
         stealing: false,
+        pin: false,
+        pipeline_depth: 1,
         log_every: 1,
         threads,
         regime: if overlap { Regime::Overlap } else { Regime::Bsp },

@@ -10,10 +10,12 @@
 //!   async `gossip_async`/`finish`, every call returning the [`CommStats`]
 //!   it incurred (wire scalars, messages, simulated alpha-beta seconds).
 //! * [`SharedBackend`] — the shared-memory hot path: the pool-sharded
-//!   [`crate::coordinator::mixer::Mixer`] (overlap mode included), with
-//!   traffic *predicted* from the topology (the counts a message-passing
-//!   run of the same schedule would measure) and time billed by the
-//!   paper's alpha-beta formulas.
+//!   [`crate::coordinator::mixer::Mixer`] (overlap mode included, and with
+//!   [`SharedBackend::with_depth`] a depth-k pipeline of chained async
+//!   rounds on a ring of scratch matrices — drained FIFO, bit-identical
+//!   to BSP at every drain point), with traffic *predicted* from the
+//!   topology (the counts a message-passing run of the same schedule
+//!   would measure) and time billed by the paper's alpha-beta formulas.
 //! * [`BusBackend`] — the message-passing plane: one
 //!   [`crate::collective::Endpoint`] per worker, every transmitted vector
 //!   actually sent/received over channels (compression included), traffic
@@ -268,15 +270,20 @@ pub trait CommBackend: Send {
 
     /// Begin an asynchronous gossip round, if this backend supports
     /// overlap; `Ok(None)` means unsupported and callers fall back to the
-    /// synchronous [`CommBackend::gossip`].
+    /// synchronous [`CommBackend::gossip`]. A backend built with a
+    /// pipeline depth > 1 ([`SharedBackend::with_depth`]) accepts up to
+    /// `depth` issued-but-unfinished rounds, chained so round t+1 mixes
+    /// round t's output; [`CommBackend::finish`] must then be called in
+    /// issue order (FIFO), and a fully drained pipeline is bit-identical
+    /// to the same rounds run synchronously.
     ///
     /// # Safety
     ///
     /// Same contract as [`crate::coordinator::mixer::Mixer::gossip_async`]:
-    /// until [`CommBackend::finish`] returns (or the [`PendingComm`] is
-    /// dropped, which blocks), `params` must not be mutated, moved-from or
-    /// dropped, this backend must outlive the round, and the `PendingComm`
-    /// must not be leaked.
+    /// until every issued round is finished by [`CommBackend::finish`] (or
+    /// its [`PendingComm`] is dropped, which blocks), `params` must not be
+    /// mutated, moved-from or dropped, this backend must outlive the
+    /// rounds, and no `PendingComm` may be leaked.
     unsafe fn gossip_async(
         &mut self,
         _params: &ParamMatrix,
@@ -285,7 +292,9 @@ pub trait CommBackend: Send {
         Ok(None)
     }
 
-    /// Complete a round started by [`CommBackend::gossip_async`].
+    /// Complete the OLDEST in-flight round started by
+    /// [`CommBackend::gossip_async`] (strictly FIFO when several are in
+    /// flight).
     fn finish(&mut self, _params: &mut ParamMatrix, _pending: PendingComm) -> Result<CommCharge> {
         bail!("this backend has no asynchronous gossip")
     }

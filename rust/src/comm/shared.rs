@@ -58,12 +58,29 @@ fn max_of(xs: &[f64]) -> f64 {
 }
 
 impl SharedBackend {
+    /// Depth-1 pipeline (the classic double buffer) — see
+    /// [`SharedBackend::with_depth`].
     pub fn new(
         topo: &Topology,
         d: usize,
         costs: &NodeCosts,
         cost_dim: usize,
         compression: Compression,
+    ) -> SharedBackend {
+        SharedBackend::with_depth(topo, d, costs, cost_dim, compression, 1)
+    }
+
+    /// A backend whose async gossip pipeline admits up to `depth` rounds
+    /// in flight at once (`--pipeline-depth`; the mixer keeps a depth-k
+    /// ring of scratch matrices and chains rounds through completion
+    /// latches). Depth 1 is today's single double buffer, bit for bit.
+    pub fn with_depth(
+        topo: &Topology,
+        d: usize,
+        costs: &NodeCosts,
+        cost_dim: usize,
+        compression: Compression,
+        depth: usize,
     ) -> SharedBackend {
         let n = topo.n;
         debug_assert_eq!(costs.n(), n, "cost table must cover every node");
@@ -83,7 +100,7 @@ impl SharedBackend {
             (0..n).map(|i| costs.all_reduce_node(i, n, cost_dim)).collect();
         let compressors = compression.build(n, d);
         SharedBackend {
-            mixer: Mixer::new(topo, d),
+            mixer: Mixer::with_depth(topo, d, depth),
             rounds,
             round_traffic,
             outdeg,
@@ -124,13 +141,13 @@ impl CommBackend for SharedBackend {
             let comps = &mut self.compressors;
             let mut scalars = 0u64;
             let mut msgs = 0u64;
-            self.mixer.gossip_with(params, pool, |j, x| {
+            self.mixer.gossip_with(params, pool, |j, x, out| {
                 let ef = comps[j].as_mut().expect("compressed backend has per-node codecs");
                 let c = ef.compress(x);
                 let wire = (c.wire_bytes as u64).div_ceil(4);
                 scalars += outdeg[j] * wire;
                 msgs += outdeg[j];
-                c.dense
+                out.extend_from_slice(&c.dense);
             })?;
             // Bill each node's theta term at the compressed fraction of the
             // ideal identity traffic; the latency term is
@@ -213,7 +230,10 @@ impl CommBackend for SharedBackend {
             // mix pass still shards across the pool).
             return Ok(None);
         }
-        let round = self.mixer.gossip_clock % self.rounds;
+        // Bill the round the ISSUE schedule runs, not the drained clock:
+        // with rounds already in flight this issue mixes a later row of
+        // the time-varying topology.
+        let round = self.mixer.issued_clock() % self.rounds;
         let (scalars, msgs) = self.round_traffic[round];
         let node_seconds = self.gossip_node_sim[round].clone();
         let mix = self.mixer.gossip_async(params, pool)?;

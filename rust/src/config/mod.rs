@@ -230,6 +230,16 @@ pub struct ExperimentConfig {
     /// Work-stealing dynamic chunking in the worker pool (heterogeneous
     /// workers); bit-identical to static sharding, off by default.
     pub stealing: bool,
+    /// Pin pool worker threads to cores (`train.pin` / `--pin`): worker i
+    /// to core `i % available cores`, keeping each thread's row shard
+    /// cache-local across rounds. Best-effort where affinity calls fail
+    /// (warns once, runs unpinned); bit-identical either way.
+    pub pin: bool,
+    /// Max gossip rounds in flight on the shared backend's async pipeline
+    /// (`train.pipeline_depth` / `--pipeline-depth`); 1 = the classic
+    /// double buffer (default). Drained FIFO at every k·H / eval /
+    /// checkpoint boundary, bit-identical to BSP at every drained point.
+    pub pipeline_depth: usize,
     /// Per-node cost-model overrides (`cost.alpha` / `cost.theta` /
     /// `cost.compute`): empty = the calibrated default on every node, one
     /// value = that value on every node, n values = node i's value.
@@ -303,6 +313,8 @@ impl Default for ExperimentConfig {
             log_every: 50,
             threads: 1,
             stealing: false,
+            pin: false,
+            pipeline_depth: 1,
             cost_alpha: Vec::new(),
             cost_theta: Vec::new(),
             cost_compute: Vec::new(),
@@ -347,6 +359,8 @@ impl ExperimentConfig {
             log_every: doc.get_usize("train.log_every", d.log_every)?,
             threads: doc.get_usize("train.threads", d.threads)?,
             stealing: doc.get_bool("train.stealing", d.stealing)?,
+            pin: doc.get_bool("train.pin", d.pin)?,
+            pipeline_depth: doc.get_usize("train.pipeline_depth", d.pipeline_depth)?,
             cost_alpha: doc.get_f64_list("cost.alpha")?,
             cost_theta: doc.get_f64_list("cost.theta")?,
             cost_compute: doc.get_f64_list("cost.compute")?,
@@ -409,6 +423,21 @@ impl ExperimentConfig {
         anyhow::ensure!(self.lr > 0.0, "lr must be positive");
         anyhow::ensure!((0.0..1.0).contains(&self.momentum), "momentum in [0,1)");
         anyhow::ensure!(self.threads >= 1, "threads must be >= 1");
+        anyhow::ensure!(
+            self.pipeline_depth >= 1,
+            "train.pipeline_depth must be >= 1 (1 = the classic double buffer)"
+        );
+        if self.pin {
+            let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+            if self.threads > cores {
+                bail!(
+                    "train.pin wants train.threads <= available cores ({cores}) — pinning \
+                     {} threads would stack several on one core and defeat the point \
+                     (drop --pin, or lower --threads)",
+                    self.threads
+                );
+            }
+        }
         // Cost overrides: a non-finite or non-positive alpha/theta/compute
         // would silently produce NaN/negative sim clocks downstream —
         // reject here (same treatment period/H_init/threads = 0 get).
@@ -478,6 +507,12 @@ impl ExperimentConfig {
         }
         if self.max_staleness > 0 && regime != Regime::Async {
             bail!("train.max_staleness only applies to train.regime = \"async\"");
+        }
+        if self.pipeline_depth > 1 && regime == Regime::Async {
+            bail!(
+                "train.pipeline_depth > 1 only applies to the bsp/overlap regimes — \
+                 the async event plane schedules its own in-flight rounds"
+            );
         }
         Ok(())
     }
@@ -1057,5 +1092,54 @@ mod tests {
         assert!(ExperimentConfig::from_toml(&doc).unwrap().overlap);
         let doc = Toml::parse("[train]\noverlap = 3\n").unwrap();
         assert!(ExperimentConfig::from_toml(&doc).is_err(), "overlap must be a bool");
+    }
+
+    #[test]
+    fn pin_parse_and_core_bound() {
+        let doc = Toml::parse("[train]\npin = true\n").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert!(cfg.pin);
+        assert!(!ExperimentConfig::default().pin, "unpinned is the default");
+        let doc = Toml::parse("[train]\npin = 1\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err(), "pin must be a bool");
+        // Pinning more threads than cores would stack them — rejected with
+        // a clear message, not a panic.
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        let doc =
+            Toml::parse(&format!("[train]\npin = true\nthreads = {}\n", cores + 1)).unwrap();
+        let err = ExperimentConfig::from_toml(&doc).unwrap_err().to_string();
+        assert!(err.contains("available cores"), "{err}");
+        // Without pin the same thread count is fine (oversubscription is
+        // allowed when the OS can still migrate threads).
+        let doc = Toml::parse(&format!("[train]\nthreads = {}\n", cores + 1)).unwrap();
+        ExperimentConfig::from_toml(&doc).unwrap();
+    }
+
+    #[test]
+    fn pipeline_depth_parse_and_validate() {
+        let doc = Toml::parse("[train]\npipeline_depth = 4\nregime = \"overlap\"\n").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.pipeline_depth, 4);
+        assert_eq!(
+            ExperimentConfig::default().pipeline_depth,
+            1,
+            "the classic double buffer is the default"
+        );
+        // Depth 0 has no scratch slot to mix into — rejected.
+        let doc = Toml::parse("[train]\npipeline_depth = 0\n").unwrap();
+        let err = ExperimentConfig::from_toml(&doc).unwrap_err().to_string();
+        assert!(err.contains("pipeline_depth"), "{err}");
+        // The async event plane schedules its own in-flight rounds.
+        let doc =
+            Toml::parse("[train]\npipeline_depth = 2\nregime = \"async\"\n").unwrap();
+        let err = ExperimentConfig::from_toml(&doc).unwrap_err().to_string();
+        assert!(err.contains("async"), "{err}");
+        // Depth 1 composes with every regime (it IS today's behavior).
+        let doc = Toml::parse("[train]\npipeline_depth = 1\nregime = \"async\"\n").unwrap();
+        ExperimentConfig::from_toml(&doc).unwrap();
+        // Depth > 1 under plain BSP is allowed: the ring only engages when
+        // rounds are actually issued asynchronously.
+        let doc = Toml::parse("[train]\npipeline_depth = 2\n").unwrap();
+        ExperimentConfig::from_toml(&doc).unwrap();
     }
 }

@@ -2,10 +2,22 @@
 //!
 //! Applies one communication action to the contiguous [`ParamMatrix`] of
 //! worker parameters, in place and without per-step allocation: the mixer
-//! owns a same-shape scratch matrix, writes the next iterate into it, and
-//! swaps storage with the input (an O(1) pointer exchange). The weighted-sum
-//! inner loop is the rust counterpart of the Pallas `gossip_mix` kernel;
-//! equality between the two is asserted by `rust/tests/integration_runtime.rs`.
+//! owns a ring of same-shape scratch matrices, writes the next iterate into
+//! the current slot, and swaps storage with the input (an O(1) pointer
+//! exchange). The weighted-sum inner loop is the rust counterpart of the
+//! Pallas `gossip_mix` kernel; equality between the two is asserted by
+//! `rust/tests/integration_runtime.rs`.
+//!
+//! §Kernel. [`mix_row_src`] is THE mixing arithmetic — every backend calls
+//! it. It is explicitly vectorized: the 1/2/3-neighbor arms run 8-wide
+//! unrolled multiply-add lanes ([`scale`], [`fused2`], [`fused3`]), and the
+//! general arm walks the d-dimension in [`MIX_BLOCK`]-element cache blocks,
+//! accumulating every neighbor into one resident block before advancing
+//! (one write traversal of d, all source streams hot in L1). Each output
+//! element is an independent dot product across sources whose j-order the
+//! blocking never changes, so the kernel is bit-identical to the naive
+//! reference [`mix_row_src_scalar`] by construction — asserted for every
+//! row shape by `rust/tests/mix_kernel.rs`.
 //!
 //! §Threads: every output row i depends only on *input* rows, so the row
 //! loop shards freely across the persistent [`WorkerPool`] (disjoint
@@ -13,39 +25,74 @@
 //! identical in sequential and pooled runs — results are bit-equal by
 //! construction, asserted by `rust/tests/properties.rs`.
 //!
-//! §Async: [`Mixer::gossip_async`] is the double-buffer mode — it enqueues
-//! the same row jobs on the pool and returns a [`PendingMix`] immediately,
-//! so the round-t mix runs while the trainer starts round t+1.
-//! [`Mixer::finish_gossip`] waits, swaps the buffers and advances the
-//! gossip clock; until then `params` holds the PRE-mix iterate and the
-//! scratch is in flight (read-only `params`, writer-owned scratch — no
-//! aliasing). The bits that come out are identical to the synchronous call.
+//! §Async + pipelining: [`Mixer::gossip_async`] enqueues the row jobs and
+//! returns a [`PendingMix`] immediately, so the round-t mix runs while the
+//! caller keeps going. With `depth > 1` ([`Mixer::with_depth`]) up to
+//! `depth` rounds chain in flight at once: round t+1's jobs read round t's
+//! output slot, gated on a completion [`Latch`] so they never observe a
+//! partial write, and [`Mixer::finish_gossip`] drains strictly oldest-first.
+//! Until a round is finished `params` holds the PRE-pipeline iterate; the
+//! bits that come out of a fully drained pipeline are identical to the same
+//! number of synchronous [`Mixer::gossip`] calls (asserted by
+//! `rust/tests/pipeline.rs`).
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::exec::{Ticket, WorkerPool};
+use crate::exec::{Latch, Ticket, WorkerPool};
 use crate::params::ParamMatrix;
 use crate::topology::Topology;
+
+/// Cache block width (f32 elements) of the general mixing arm: 256 f32 =
+/// 1 KiB per source stream, so a many-neighbor row keeps every stream's
+/// block L1-resident while it accumulates instead of streaming the whole
+/// d-length row once per neighbor. Exposed so the kernel-equivalence suite
+/// can probe the block boundary (d = MIX_BLOCK ± 1).
+pub const MIX_BLOCK: usize = 256;
 
 /// Reusable mixing engine over `n` workers x `d` parameters.
 pub struct Mixer {
     n: usize,
     d: usize,
-    /// Scratch: the next-iterate matrix, storage-swapped with the input
-    /// after each mix.
-    scratch: ParamMatrix,
+    /// Scratch ring: `depth` next-iterate matrices. `ring[head]` is the
+    /// write target of the next round; chained async rounds walk the ring
+    /// so several rounds can be in flight at once.
+    ring: Vec<ParamMatrix>,
+    /// Next ring slot to write.
+    head: usize,
+    /// Ring length = max rounds in flight (1 = classic double buffer).
+    depth: usize,
     /// Mean buffer for [`Mixer::global_average`].
     mean: Vec<f32>,
     /// Cached weight rows per round: rows[round][i] = Vec<(j, w)>.
     rows: Vec<Vec<Vec<(usize, f32)>>>,
     rounds: usize,
-    /// True while a [`Mixer::gossip_async`] job batch owns the scratch.
-    in_flight: bool,
+    /// In-flight async rounds, oldest first ([`Mixer::finish_gossip`]
+    /// drains strictly FIFO).
+    in_flight: VecDeque<FlightEntry>,
+    /// Reusable transmit buffers for [`Mixer::gossip_with`]: one
+    /// capacity-retaining Vec per node, so the steady-state compressed hot
+    /// path allocates nothing after the first round.
+    tx_arena: Vec<Vec<f32>>,
+    /// Reusable listened-to mask for [`Mixer::gossip_with`].
+    tx_mask: Vec<bool>,
     /// Gossip rounds executed so far (advances the time-varying topology).
     /// Checkpointed: one-peer-expo must resume mid-period, not at round 0.
     pub gossip_clock: usize,
+}
+
+/// One issued-but-unfinished async round, tracked by the mixer itself.
+struct FlightEntry {
+    /// Ring slot the round writes.
+    slot: usize,
+    /// Released once every row job of the round has finished writing the
+    /// slot — the read gate for the successor round's jobs.
+    latch: Arc<Latch>,
+    /// Data address of the slot at issue time (pairing check + the
+    /// successor round's source address).
+    addr: usize,
 }
 
 /// The per-round f32-quantized weight rows (`rows[round][i] = [(j, w)]`)
@@ -65,19 +112,53 @@ pub fn weight_rows_f32(topo: &Topology) -> Vec<Vec<Vec<(usize, f32)>>> {
 
 impl Mixer {
     pub fn new(topo: &Topology, d: usize) -> Mixer {
+        Mixer::with_depth(topo, d, 1)
+    }
+
+    /// A mixer whose async pipeline admits up to `depth` rounds in flight
+    /// (depth 1 = the classic double buffer; panics on depth 0 — config
+    /// validation rejects it before any mixer is built).
+    pub fn with_depth(topo: &Topology, d: usize, depth: usize) -> Mixer {
+        assert!(depth >= 1, "pipeline depth must be >= 1");
         let n = topo.n;
         let rounds = topo.rounds();
         let rows = weight_rows_f32(topo);
         Mixer {
             n,
             d,
-            scratch: ParamMatrix::zeros(n, d),
+            ring: (0..depth).map(|_| ParamMatrix::zeros(n, d)).collect(),
+            head: 0,
+            depth,
             mean: vec![0.0; d],
             rows,
             rounds,
-            in_flight: false,
+            in_flight: VecDeque::new(),
+            tx_arena: Vec::new(),
+            tx_mask: Vec::new(),
             gossip_clock: 0,
         }
+    }
+
+    /// Ring length = max async rounds in flight.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Async rounds currently issued but not yet finished.
+    pub fn in_flight_rounds(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Whether [`Mixer::gossip_async`] can admit another round right now.
+    pub fn pipeline_ready(&self) -> bool {
+        self.in_flight.len() < self.depth
+    }
+
+    /// The round index the NEXT issued round will run: the committed clock
+    /// plus the rounds already in flight ahead of it (billing and topology
+    /// advance must see the issued schedule, not the drained one).
+    pub fn issued_clock(&self) -> usize {
+        self.gossip_clock + self.in_flight.len()
     }
 
     /// One gossip round: row(i) <- sum_j w_ij row(j), sharded across the
@@ -90,21 +171,22 @@ impl Mixer {
     /// passes: one write traversal of d instead of k, ~1.5x measured (see
     /// EXPERIMENTS.md §Perf).
     pub fn gossip(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<()> {
-        assert!(!self.in_flight, "gossip while an async mix is in flight");
+        assert!(self.in_flight.is_empty(), "gossip while an async mix is in flight");
         debug_assert!(params.n() == self.n && params.d() == self.d);
         let round = self.gossip_clock % self.rounds;
         let weight_rows = &self.rows[round];
         let d = self.d;
         let src = params.as_slice();
         let t = pool.shards(self.n);
+        let scratch = &mut self.ring[self.head];
         if t <= 1 {
-            for (i, out) in self.scratch.rows_mut().enumerate() {
+            for (i, out) in scratch.rows_mut().enumerate() {
                 mix_row(&weight_rows[i], src, d, out);
             }
         } else {
             let per = (self.n + t - 1) / t;
             pool.run(
-                self.scratch
+                scratch
                     .row_blocks_mut(per)
                     .enumerate()
                     .map(|(ci, chunk)| {
@@ -118,42 +200,53 @@ impl Mixer {
                     .collect(),
             )?;
         }
-        params.swap_data(&mut self.scratch);
+        params.swap_data(scratch);
         self.gossip_clock += 1;
         Ok(())
     }
 
     /// Begin one gossip round WITHOUT waiting for it: the row jobs are
     /// enqueued on `pool` and run in the background while the caller keeps
-    /// going (double-buffered overlap mode).
+    /// going. Up to [`Mixer::depth`] rounds may be in flight at once
+    /// (panics beyond that — callers gate on [`Mixer::pipeline_ready`]):
+    /// a chained round's jobs read the PREDECESSOR round's output slot,
+    /// gated on its completion latch, so the issued sequence computes
+    /// exactly the synchronous round sequence.
     ///
     /// On a size-1 pool the jobs run inline, so overlap mode degenerates to
-    /// the synchronous schedule with identical bits.
+    /// the synchronous schedule with identical bits (each round's latch is
+    /// already released when its successor is issued).
     ///
     /// # Safety
     ///
     /// The jobs capture raw addresses of `params`' and this mixer's heap
-    /// buffers, so until [`Mixer::finish_gossip`] returns (or the
-    /// [`PendingMix`] is dropped, which blocks until the jobs end) the
-    /// caller must ensure that:
+    /// buffers, so until every issued round is finished by
+    /// [`Mixer::finish_gossip`] (or its [`PendingMix`] is dropped, which
+    /// blocks until the jobs end) the caller must ensure that:
     ///
     /// * `params` is not mutated, moved-from, reallocated or dropped
-    ///   (shared reads are fine — the jobs only read it);
-    /// * this mixer is not dropped (its scratch is the jobs' write target;
-    ///   the `in_flight` guard already panics on re-entrant mixing);
-    /// * the `PendingMix` is not leaked (`std::mem::forget` would let the
-    ///   jobs outlive both buffers).
+    ///   (shared reads are fine — the jobs only read it). Note that
+    ///   finishing a round swaps heap buffers between `params` and the
+    ///   round's ring slot: an O(1) pointer exchange that moves ownership
+    ///   but never touches the data a chained successor is still reading;
+    /// * this mixer is not dropped (its ring slots are the jobs' targets);
+    /// * no `PendingMix` is leaked (`std::mem::forget` would let the jobs
+    ///   outlive the buffers).
     ///
     /// [`crate::coordinator::Trainer`] upholds this by draining before any
-    /// `&mut` access and by dropping its pending mix before the matrices.
+    /// `&mut` access and by dropping its pending queue before the matrices.
     pub unsafe fn gossip_async(
         &mut self,
         params: &ParamMatrix,
         pool: &WorkerPool,
     ) -> Result<PendingMix> {
-        assert!(!self.in_flight, "gossip_async while an async mix is already in flight");
+        assert!(
+            self.in_flight.len() < self.depth,
+            "gossip_async with the pipeline full (depth {})",
+            self.depth
+        );
         debug_assert!(params.n() == self.n && params.d() == self.d);
-        let round = self.gossip_clock % self.rounds;
+        let round = self.issued_clock() % self.rounds;
         // Clone this round's weight rows into shared ownership: tiny (a few
         // (j, w) pairs per node) next to the O(n d) row work, and it keeps
         // the jobs free of references into the mixer.
@@ -161,22 +254,42 @@ impl Mixer {
         let (n, d) = (self.n, self.d);
         let t = pool.shards(n);
         let per = (n + t - 1) / t;
+        // Source: the live params for the first round in flight, the
+        // predecessor's output slot for a chained round (its jobs wait on
+        // the predecessor's latch before reading).
+        let (src_addr, prev_latch) = match self.in_flight.back() {
+            Some(prev) => (prev.addr, Some(prev.latch.clone())),
+            None => (params.as_slice().as_ptr() as usize, None),
+        };
+        let slot = self.head;
+        let dst_addr = self.ring[slot].as_mut_slice().as_mut_ptr() as usize;
+        let done = Arc::new(Latch::new(t));
         // The jobs outlive this call, so they carry raw addresses instead
-        // of borrows. Soundness contract (upheld by Trainer + in_flight):
-        //   * src (the live params data) is only READ, by jobs and by any
-        //     concurrent main-thread accessor — no &mut exists until
-        //     finish_gossip, which first waits for the jobs;
-        //   * each job writes a disjoint row range of the scratch, which
-        //     nothing else touches while in_flight;
-        //   * both heap buffers outlive the batch: PendingMix's Ticket
-        //     blocks on drop, and Trainer drops its pending mix before the
-        //     matrices.
-        let src_addr = params.as_slice().as_ptr() as usize;
-        let dst_addr = self.scratch.as_mut_slice().as_mut_ptr() as usize;
+        // of borrows. Soundness contract (upheld by Trainer + the FIFO
+        // in-flight queue):
+        //   * src (live params or a predecessor slot) is only READ; the
+        //     predecessor's latch guarantees the slot is fully written
+        //     first, and a slot is recycled as a write target only after
+        //     `depth` further issues — by which point the round reading it
+        //     has been finished (the pipeline admits at most `depth`);
+        //   * each job writes a disjoint row range of its own slot, which
+        //     nothing else touches while the round is in flight;
+        //   * the latch is released through a drop guard, so a panicking
+        //     job still unblocks its successors (the pool reports the
+        //     panic; finish_gossip refuses to swap the partial slot);
+        //   * pool jobs are dequeued strictly FIFO across submissions, so
+        //     a worker blocked on a latch implies every job of the earlier
+        //     round is already running or done — no deadlock.
         let jobs: Vec<_> = (0..t)
             .map(|ci| {
                 let weights = weights.clone();
+                let prev = prev_latch.clone();
+                let done = done.clone();
                 move || -> Result<()> {
+                    let _arrive = done.arrive_on_drop();
+                    if let Some(gate) = &prev {
+                        gate.wait();
+                    }
                     let lo = ci * per;
                     let hi = ((ci + 1) * per).min(n);
                     let src =
@@ -192,41 +305,48 @@ impl Mixer {
             })
             .collect();
         let ticket = pool.submit(jobs)?;
-        self.in_flight = true;
+        self.in_flight.push_back(FlightEntry { slot, latch: done, addr: dst_addr });
+        self.head = (self.head + 1) % self.depth;
         Ok(PendingMix { ticket, scratch_addr: dst_addr })
     }
 
-    /// Complete an async gossip round: wait for the row jobs, swap the
-    /// mixed buffer in, advance the gossip clock. After this returns the
-    /// state is bit-identical to a synchronous [`Mixer::gossip`] call.
-    /// Panics if nothing is in flight on THIS mixer or the `PendingMix`
-    /// came from a different mixer (swapping a foreign ticket's scratch
-    /// while this mixer's own jobs still write it would be a data race).
+    /// Complete the OLDEST in-flight gossip round: wait for its row jobs,
+    /// swap the mixed slot in, advance the gossip clock. After a full drain
+    /// the state is bit-identical to the same number of synchronous
+    /// [`Mixer::gossip`] calls. Panics if nothing is in flight on THIS
+    /// mixer, or the `PendingMix` is foreign / out of order (rounds must be
+    /// finished strictly FIFO — swapping a later slot first would hand the
+    /// trainer an intermediate iterate).
     pub fn finish_gossip(&mut self, params: &mut ParamMatrix, pending: PendingMix) -> Result<()> {
-        assert!(self.in_flight, "finish_gossip without a mix in flight");
+        let entry = self.in_flight.pop_front().expect("finish_gossip without a mix in flight");
         assert!(
-            pending.scratch_addr == self.scratch.as_slice().as_ptr() as usize,
-            "finish_gossip got a PendingMix from a different mixer"
+            pending.scratch_addr == entry.addr,
+            "finish_gossip got a PendingMix from a different mixer or out of order"
         );
         let outcome = pending.ticket.wait();
-        // Clear the flag even on failure so the mixer is not wedged; on
-        // Err the scratch is partial and must NOT be swapped in.
-        self.in_flight = false;
+        // The entry is already popped, so the mixer is not wedged on Err —
+        // but the slot is partial and must NOT be swapped in, and any
+        // chained successor read garbage: the caller must treat the whole
+        // trainer as failed (Trainer propagates and its pending queue
+        // drops, which blocks out the remaining jobs).
         outcome?;
-        params.swap_data(&mut self.scratch);
+        params.swap_data(&mut self.ring[entry.slot]);
         self.gossip_clock += 1;
         Ok(())
     }
 
     /// One gossip round where each node's *transmitted* vector is
-    /// transformed by `transmit(j, x_j)` (e.g. compressed, see
-    /// [`crate::compress`]); the self term always uses the local copy.
+    /// transformed by `transmit(j, x_j, out)` writing into a mixer-owned
+    /// scratch buffer (e.g. compressed, see [`crate::compress`]); the self
+    /// term always uses the local copy.
     /// `row(i) <- w_ii x_i + sum_{j != i} w_ij transmit(j, x_j)`.
     ///
     /// The transmit pass is inherently sequential — `transmit` is `FnMut`
     /// (codecs carry error-feedback state), ordered by node index. The mix
     /// pass over the materialized messages shards across `pool` like the
-    /// plain gossip path (bit-identical at any pool size).
+    /// plain gossip path (bit-identical at any pool size). The transmit
+    /// buffers live in a per-mixer arena and retain their capacity, so the
+    /// steady-state compressed hot path performs zero allocations here.
     pub fn gossip_with<F>(
         &mut self,
         params: &mut ParamMatrix,
@@ -234,39 +354,48 @@ impl Mixer {
         mut transmit: F,
     ) -> Result<()>
     where
-        F: FnMut(usize, &[f32]) -> Vec<f32>,
+        F: FnMut(usize, &[f32], &mut Vec<f32>),
     {
-        assert!(!self.in_flight, "gossip_with while an async mix is in flight");
+        assert!(self.in_flight.is_empty(), "gossip_with while an async mix is in flight");
         debug_assert!(params.n() == self.n && params.d() == self.d);
         let round = self.gossip_clock % self.rounds;
         // Which nodes are actually listened to this round?
-        let mut needed = vec![false; self.n];
+        self.tx_mask.clear();
+        self.tx_mask.resize(self.n, false);
         for i in 0..self.n {
             for &(j, _) in &self.rows[round][i] {
                 if j != i {
-                    needed[j] = true;
+                    self.tx_mask[j] = true;
                 }
             }
         }
-        let tx: Vec<Option<Vec<f32>>> = (0..self.n)
-            .map(|j| needed[j].then(|| transmit(j, params.row(j))))
-            .collect();
+        if self.tx_arena.len() != self.n {
+            self.tx_arena.resize_with(self.n, Vec::new);
+        }
+        for j in 0..self.n {
+            // clear() keeps the allocation — round 2 onward reuses it.
+            self.tx_arena[j].clear();
+            if self.tx_mask[j] {
+                transmit(j, params.row(j), &mut self.tx_arena[j]);
+            }
+        }
         // Same fused kernel as the plain gossip path (and as the bus
         // backend's receive-side mix), so identity-compressed rounds are
         // bit-identical to uncompressed ones across every backend.
         let d = self.d;
         let rows = &self.rows[round];
         let src = params.as_slice();
-        let tx = &tx;
+        let tx: &[Vec<f32>] = &self.tx_arena;
         let t = pool.shards(self.n);
+        let scratch = &mut self.ring[self.head];
         if t <= 1 {
-            for (i, out) in self.scratch.rows_mut().enumerate() {
+            for (i, out) in scratch.rows_mut().enumerate() {
                 mix_row_with(&rows[i], i, src, d, tx, out);
             }
         } else {
             let per = (self.n + t - 1) / t;
             pool.run(
-                self.scratch
+                scratch
                     .row_blocks_mut(per)
                     .enumerate()
                     .map(|(ci, chunk)| {
@@ -281,7 +410,7 @@ impl Mixer {
                     .collect(),
             )?;
         }
-        params.swap_data(&mut self.scratch);
+        params.swap_data(scratch);
         self.gossip_clock += 1;
         Ok(())
     }
@@ -294,7 +423,7 @@ impl Mixer {
     /// broadcast — callers must treat the trainer as failed, exactly as
     /// [`crate::coordinator::Trainer::step_once`] does by propagating it.
     pub fn global_average(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<()> {
-        assert!(!self.in_flight, "global_average while an async mix is in flight");
+        assert!(self.in_flight.is_empty(), "global_average while an async mix is in flight");
         debug_assert!(params.n() == self.n && params.d() == self.d);
         let n = self.n;
         let d = self.d;
@@ -368,13 +497,15 @@ impl Mixer {
 }
 
 /// An in-flight [`Mixer::gossip_async`] round. Hand it back to
-/// [`Mixer::finish_gossip`] of the SAME mixer to complete the round;
-/// dropping it instead blocks until the row jobs finish and DISCARDS the
-/// result (the gossip clock does not advance — the round never happened).
+/// [`Mixer::finish_gossip`] of the SAME mixer, in issue order, to complete
+/// the round; dropping it instead blocks until the row jobs finish and
+/// DISCARDS the result (the gossip clock does not advance — the round
+/// never happened).
 pub struct PendingMix {
     ticket: Ticket,
-    /// Identity of the scratch buffer the jobs write — pairing check so a
-    /// foreign mixer cannot finish someone else's round.
+    /// Identity of the ring slot the jobs write — pairing check so a
+    /// foreign mixer cannot finish someone else's round, and FIFO check so
+    /// rounds cannot be finished out of order.
     scratch_addr: usize,
 }
 
@@ -387,15 +518,15 @@ fn mix_row(row: &[(usize, f32)], src: &[f32], d: usize, out: &mut [f32]) {
 }
 
 /// One transmit-transformed output row (the `gossip_with` kernel): self
-/// term from the live matrix, every other term from the materialized
-/// message table. Free function so the pooled jobs can call it without
-/// borrowing the mixer.
+/// term from the live matrix, every other term from the arena of
+/// materialized messages. Free function so the pooled jobs can call it
+/// without borrowing the mixer.
 fn mix_row_with(
     row: &[(usize, f32)],
     i: usize,
     src: &[f32],
     d: usize,
-    tx: &[Option<Vec<f32>>],
+    tx: &[Vec<f32>],
     out: &mut [f32],
 ) {
     mix_row_src(
@@ -404,7 +535,7 @@ fn mix_row_with(
             if j == i {
                 &src[i * d..(i + 1) * d]
             } else {
-                tx[j].as_deref().expect("transmitted above")
+                tx[j].as_slice()
             }
         },
         out,
@@ -412,12 +543,69 @@ fn mix_row_with(
 }
 
 /// The weighted-row kernel over an arbitrary source lookup: out = sum_j
-/// w_ij * src_of(j), with the 2/3-neighbor fast paths fused into a single
-/// pass. This is THE mixing arithmetic — the in-place mixer, the
-/// compressed transmit path and the message-passing
+/// w_ij * src_of(j). This is THE mixing arithmetic — the in-place mixer,
+/// the compressed transmit path and the message-passing
 /// [`crate::comm::BusBackend`] all call it, which is what makes backends
 /// bit-identical: same terms, same order, same rounding.
+///
+/// Vectorization (see module docs §Kernel): the 1/2/3-neighbor arms run
+/// 8-wide unrolled lanes in a single fused pass; the general arm is
+/// cache-blocked over [`MIX_BLOCK`]-element spans of d. Neither changes any
+/// output element's j-accumulation order, so this kernel is bit-identical
+/// to [`mix_row_src_scalar`] (asserted by `rust/tests/mix_kernel.rs`).
 pub fn mix_row_src<'s>(
+    row: &[(usize, f32)],
+    srow: impl Fn(usize) -> &'s [f32],
+    out: &mut [f32],
+) {
+    match row.len() {
+        0 => out.fill(0.0),
+        1 => {
+            let (j0, w0) = row[0];
+            if w0 == 1.0 {
+                out.copy_from_slice(srow(j0));
+            } else {
+                scale(w0, srow(j0), out);
+            }
+        }
+        2 => {
+            let (j0, w0) = row[0];
+            let (j1, w1) = row[1];
+            fused2(w0, srow(j0), w1, srow(j1), out);
+        }
+        3 => {
+            let (j0, w0) = row[0];
+            let (j1, w1) = row[1];
+            let (j2, w2) = row[2];
+            fused3(w0, srow(j0), w1, srow(j1), w2, srow(j2), out);
+        }
+        _ => {
+            // General case, cache-blocked: init the block with the first
+            // source, accumulate the rest into it while it stays resident,
+            // then advance. Per output element the j-order is exactly the
+            // unblocked init + axpy sweep — bit-identical by construction.
+            let (j0, w0) = row[0];
+            let len = out.len();
+            let mut pos = 0;
+            while pos < len {
+                let end = (pos + MIX_BLOCK).min(len);
+                let block = &mut out[pos..end];
+                scale(w0, &srow(j0)[pos..end], block);
+                for &(j, w) in &row[1..] {
+                    axpy(w, &srow(j)[pos..end], block);
+                }
+                pos = end;
+            }
+        }
+    }
+}
+
+/// The naive reference kernel: same terms, same per-element j-order as
+/// [`mix_row_src`], plain zip loops, no blocking, no unrolling (the w0 ==
+/// 1.0 copy fast path is semantic, so it stays). Kept as the ground truth
+/// for the kernel-equivalence suite and the blocked-vs-scalar bench rows —
+/// the two must agree bit-for-bit on every input.
+pub fn mix_row_src_scalar<'s>(
     row: &[(usize, f32)],
     srow: impl Fn(usize) -> &'s [f32],
     out: &mut [f32],
@@ -437,41 +625,105 @@ pub fn mix_row_src<'s>(
         2 => {
             let (j0, w0) = row[0];
             let (j1, w1) = row[1];
-            fused2(w0, srow(j0), w1, srow(j1), out);
+            for ((o, x), y) in out.iter_mut().zip(srow(j0)).zip(srow(j1)) {
+                *o = w0 * x + w1 * y;
+            }
         }
         3 => {
             let (j0, w0) = row[0];
             let (j1, w1) = row[1];
             let (j2, w2) = row[2];
-            fused3(w0, srow(j0), w1, srow(j1), w2, srow(j2), out);
+            for (((o, x), y), z) in out.iter_mut().zip(srow(j0)).zip(srow(j1)).zip(srow(j2)) {
+                *o = w0 * x + w1 * y + w2 * z;
+            }
         }
         _ => {
-            // General case: init with the first source, accumulate.
             let (j0, w0) = row[0];
-            for (o, s) in out.iter_mut().zip(srow(j0)) {
-                *o = w0 * s;
+            for (o, x) in out.iter_mut().zip(srow(j0)) {
+                *o = w0 * x;
             }
             for &(j, w) in &row[1..] {
-                axpy(w, srow(j), out);
+                for (o, x) in out.iter_mut().zip(srow(j)) {
+                    *o += w * x;
+                }
             }
         }
     }
 }
 
-/// out = w0*a + w1*b in a single pass.
+/// out = w * x, 8-wide unrolled (the single-neighbor non-unit arm and the
+/// init pass of the blocked general arm).
+#[inline]
+pub fn scale(w: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let lanes = x.len() / 8 * 8;
+    let (xh, xt) = x.split_at(lanes);
+    let (oh, ot) = out.split_at_mut(lanes);
+    for (xc, oc) in xh.chunks_exact(8).zip(oh.chunks_exact_mut(8)) {
+        oc[0] = w * xc[0];
+        oc[1] = w * xc[1];
+        oc[2] = w * xc[2];
+        oc[3] = w * xc[3];
+        oc[4] = w * xc[4];
+        oc[5] = w * xc[5];
+        oc[6] = w * xc[6];
+        oc[7] = w * xc[7];
+    }
+    for (o, v) in ot.iter_mut().zip(xt) {
+        *o = w * v;
+    }
+}
+
+/// out = w0*a + w1*b in a single pass, 8-wide unrolled.
 #[inline]
 pub fn fused2(w0: f32, a: &[f32], w1: f32, b: &[f32], out: &mut [f32]) {
     debug_assert!(a.len() == out.len() && b.len() == out.len());
-    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+    let lanes = out.len() / 8 * 8;
+    let (ah, at) = a.split_at(lanes);
+    let (bh, bt) = b.split_at(lanes);
+    let (oh, ot) = out.split_at_mut(lanes);
+    for ((oc, ac), bc) in
+        oh.chunks_exact_mut(8).zip(ah.chunks_exact(8)).zip(bh.chunks_exact(8))
+    {
+        oc[0] = w0 * ac[0] + w1 * bc[0];
+        oc[1] = w0 * ac[1] + w1 * bc[1];
+        oc[2] = w0 * ac[2] + w1 * bc[2];
+        oc[3] = w0 * ac[3] + w1 * bc[3];
+        oc[4] = w0 * ac[4] + w1 * bc[4];
+        oc[5] = w0 * ac[5] + w1 * bc[5];
+        oc[6] = w0 * ac[6] + w1 * bc[6];
+        oc[7] = w0 * ac[7] + w1 * bc[7];
+    }
+    for ((o, x), y) in ot.iter_mut().zip(at).zip(bt) {
         *o = w0 * x + w1 * y;
     }
 }
 
-/// out = w0*a + w1*b + w2*c in a single pass (ring row).
+/// out = w0*a + w1*b + w2*c in a single pass (ring row), 8-wide unrolled.
 #[inline]
 pub fn fused3(w0: f32, a: &[f32], w1: f32, b: &[f32], w2: f32, c: &[f32], out: &mut [f32]) {
     debug_assert!(a.len() == out.len() && b.len() == out.len() && c.len() == out.len());
-    for (((o, x), y), z) in out.iter_mut().zip(a).zip(b).zip(c) {
+    let lanes = out.len() / 8 * 8;
+    let (ah, at) = a.split_at(lanes);
+    let (bh, bt) = b.split_at(lanes);
+    let (ch, ct) = c.split_at(lanes);
+    let (oh, ot) = out.split_at_mut(lanes);
+    for (((oc, ac), bc), cc) in oh
+        .chunks_exact_mut(8)
+        .zip(ah.chunks_exact(8))
+        .zip(bh.chunks_exact(8))
+        .zip(ch.chunks_exact(8))
+    {
+        oc[0] = w0 * ac[0] + w1 * bc[0] + w2 * cc[0];
+        oc[1] = w0 * ac[1] + w1 * bc[1] + w2 * cc[1];
+        oc[2] = w0 * ac[2] + w1 * bc[2] + w2 * cc[2];
+        oc[3] = w0 * ac[3] + w1 * bc[3] + w2 * cc[3];
+        oc[4] = w0 * ac[4] + w1 * bc[4] + w2 * cc[4];
+        oc[5] = w0 * ac[5] + w1 * bc[5] + w2 * cc[5];
+        oc[6] = w0 * ac[6] + w1 * bc[6] + w2 * cc[6];
+        oc[7] = w0 * ac[7] + w1 * bc[7] + w2 * cc[7];
+    }
+    for (((o, x), y), z) in ot.iter_mut().zip(at).zip(bt).zip(ct) {
         *o = w0 * x + w1 * y + w2 * z;
     }
 }
@@ -525,6 +777,25 @@ mod tests {
             }
             axpy(0.3, &x, &mut out);
             assert_eq!(out, expect, "len {len}");
+        }
+    }
+
+    #[test]
+    fn blocked_kernel_matches_scalar_reference() {
+        // The full property sweep lives in rust/tests/mix_kernel.rs; this
+        // is the in-module smoke across the block boundary.
+        let mut rng = Rng::new(7);
+        for d in [1usize, 3, MIX_BLOCK - 1, MIX_BLOCK, MIX_BLOCK + 1, 4096] {
+            for deg in [0usize, 1, 2, 3, 5, 8] {
+                let srcs: Vec<Vec<f32>> = (0..deg.max(1)).map(|_| rng.normal_vec(d, 1.0)).collect();
+                let row: Vec<(usize, f32)> =
+                    (0..deg).map(|j| (j, 1.0 / (deg as f32 + 1.0))).collect();
+                let mut fast = vec![f32::NAN; d];
+                let mut slow = vec![f32::NAN; d];
+                mix_row_src(&row, |j| &srcs[j][..], &mut fast);
+                mix_row_src_scalar(&row, |j| &srcs[j][..], &mut slow);
+                assert_eq!(fast, slow, "d {d} deg {deg}");
+            }
         }
     }
 
@@ -622,6 +893,81 @@ mod tests {
     }
 
     #[test]
+    fn chained_pipeline_matches_sync_bitwise() {
+        // Depth-k chaining: issue up to k rounds before draining any. The
+        // fully drained pipeline must equal the same number of synchronous
+        // rounds bit-for-bit, at every depth and pool size.
+        for depth in [2usize, 4] {
+            for pool in [WorkerPool::new(1), WorkerPool::new(4)] {
+                for topo in
+                    [Topology::ring(10), Topology::one_peer_expo(8), Topology::grid(9)]
+                {
+                    let n = topo.n;
+                    let total = topo.rounds() + 3;
+                    let mut sync = random_params(n, 29, 21);
+                    let mut pipe = sync.clone();
+                    let mut m1 = Mixer::new(&topo, 29);
+                    let mut m2 = Mixer::with_depth(&topo, 29, depth);
+                    for _ in 0..total {
+                        m1.gossip(&mut sync, &pool).unwrap();
+                    }
+                    let mut pending = std::collections::VecDeque::new();
+                    let mut issued = 0;
+                    while m2.gossip_clock < total {
+                        if issued < total && m2.pipeline_ready() {
+                            // SAFETY: pipe and m2 outlive the pipeline; all
+                            // rounds are finished below before any &mut use.
+                            pending
+                                .push_back(unsafe { m2.gossip_async(&pipe, &pool) }.unwrap());
+                            issued += 1;
+                        } else {
+                            let p = pending.pop_front().unwrap();
+                            m2.finish_gossip(&mut pipe, p).unwrap();
+                        }
+                    }
+                    assert_eq!(sync, pipe, "depth {depth} {:?}", topo.kind);
+                    assert_eq!(m1.gossip_clock, m2.gossip_clock);
+                    assert_eq!(m2.in_flight_rounds(), 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn issued_clock_tracks_the_pipeline() {
+        let topo = Topology::one_peer_expo(8);
+        let params = random_params(8, 5, 3);
+        let mut m = Mixer::with_depth(&topo, 5, 3);
+        assert_eq!(m.issued_clock(), 0);
+        // SAFETY: params and m outlive the block; the drops below block
+        // until the jobs are done and the rounds are discarded.
+        let p1 = unsafe { m.gossip_async(&params, &seq()) }.unwrap();
+        assert_eq!(m.issued_clock(), 1, "issue advances the issued clock");
+        assert_eq!(m.gossip_clock, 0, "…but not the committed clock");
+        let p2 = unsafe { m.gossip_async(&params, &seq()) }.unwrap();
+        assert_eq!(m.issued_clock(), 2);
+        assert!(m.pipeline_ready(), "depth 3 still has a free slot");
+        drop(p1);
+        drop(p2);
+    }
+
+    #[test]
+    fn pipeline_full_asserts() {
+        let topo = Topology::ring(4);
+        let params = random_params(4, 6, 15);
+        let mut m = Mixer::new(&topo, 6); // depth 1
+        let pool = WorkerPool::new(2);
+        // SAFETY: params and m outlive the block; the drop blocks.
+        let _pending = unsafe { m.gossip_async(&params, &pool) }.unwrap();
+        assert!(!m.pipeline_ready());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // SAFETY: never issued — the full-pipeline assert fires first.
+            let _ = unsafe { m.gossip_async(&params, &pool) };
+        }));
+        assert!(r.is_err(), "a depth-1 mixer must refuse a second in-flight round");
+    }
+
+    #[test]
     fn async_gossip_runs_inline_on_sequential_pool() {
         let topo = Topology::ring(5);
         let mut a = random_params(5, 9, 13);
@@ -651,9 +997,9 @@ mod tests {
         assert_eq!(params, before, "params must be untouched");
         assert_eq!(m.gossip_clock, 0, "an unfinished round must not advance the clock");
         // The mixer stays wedged on purpose until told otherwise? No — the
-        // ticket is gone, but in_flight still guards the scratch. A fresh
-        // round must go through finish_gossip, so this is a programming
-        // error; assert the guard trips.
+        // ticket is gone, but the in-flight entry still guards the slot. A
+        // fresh round must go through finish_gossip, so this is a
+        // programming error; assert the guard trips.
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             m.gossip(&mut params.clone(), &pool)
         }));
@@ -710,7 +1056,7 @@ mod tests {
         let mut m1 = Mixer::new(&topo, 16);
         let mut m2 = Mixer::new(&topo, 16);
         m1.gossip(&mut a, &seq()).unwrap();
-        m2.gossip_with(&mut b, &seq(), |_j, x| x.to_vec()).unwrap();
+        m2.gossip_with(&mut b, &seq(), |_j, x, out| out.extend_from_slice(x)).unwrap();
         for (pa, pb) in a.rows().zip(b.rows()) {
             for (x, y) in pa.iter().zip(pb) {
                 assert!((x - y).abs() < 1e-6);
@@ -729,9 +1075,27 @@ mod tests {
         let mut m1 = Mixer::new(&topo, 33);
         let mut m2 = Mixer::new(&topo, 33);
         let pool = WorkerPool::new(4);
-        m1.gossip_with(&mut a, &seq(), |_j, x| x.to_vec()).unwrap();
-        m2.gossip_with(&mut b, &pool, |_j, x| x.to_vec()).unwrap();
+        m1.gossip_with(&mut a, &seq(), |_j, x, out| out.extend_from_slice(x)).unwrap();
+        m2.gossip_with(&mut b, &pool, |_j, x, out| out.extend_from_slice(x)).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gossip_with_arena_reuse_is_stable_across_rounds() {
+        // Round 2 onward reuses the arena buffers (clear() keeps capacity);
+        // multi-round compressed-style runs must match a fresh-mixer
+        // round-by-round replay bit-for-bit.
+        let topo = Topology::one_peer_expo(8);
+        let mut a = random_params(8, 48, 16);
+        let mut b = a.clone();
+        let mut reused = Mixer::new(&topo, 48);
+        for _ in 0..topo.rounds() + 2 {
+            let mut fresh = Mixer::new(&topo, 48);
+            fresh.gossip_clock = reused.gossip_clock;
+            reused.gossip_with(&mut a, &seq(), |_j, x, out| out.extend_from_slice(x)).unwrap();
+            fresh.gossip_with(&mut b, &seq(), |_j, x, out| out.extend_from_slice(x)).unwrap();
+            assert_eq!(a, b);
+        }
     }
 
     #[test]
@@ -745,7 +1109,10 @@ mod tests {
         let mut m2 = Mixer::new(&topo, 256);
         m1.gossip(&mut plain, &seq()).unwrap();
         let codec = Int8::default();
-        m2.gossip_with(&mut comp, &seq(), |_j, x| codec.compress(x).dense).unwrap();
+        m2.gossip_with(&mut comp, &seq(), |_j, x, out| {
+            out.extend_from_slice(&codec.compress(x).dense)
+        })
+        .unwrap();
         for (pa, pb) in plain.rows().zip(comp.rows()) {
             for (x, y) in pa.iter().zip(pb) {
                 assert!((x - y).abs() < 0.05, "{x} vs {y}");

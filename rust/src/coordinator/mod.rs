@@ -65,6 +65,7 @@ pub mod checkpoint;
 pub mod mixer;
 pub mod rounds;
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -204,6 +205,22 @@ pub struct TrainerOptions {
     /// region so idle threads pull extra chunks (heterogeneous-cost
     /// workers). Bit-identical to static sharding; off by default.
     pub stealing: bool,
+    /// Pin the pool's worker threads to cores (`train.pin` / `--pin`):
+    /// worker i to core `i % available_parallelism`, so each thread's
+    /// static row shard stays cache-local across rounds. Best-effort —
+    /// warns once and runs unpinned where affinity calls fail. Bits are
+    /// identical pinned or not.
+    pub pin: bool,
+    /// Max gossip rounds in flight on the shared backend's async pipeline
+    /// (`train.pipeline_depth` / `--pipeline-depth`; default 1 = the
+    /// classic double buffer). The mixer keeps a depth-k ring of scratch
+    /// matrices and chains rounds through completion latches, drained FIFO
+    /// and bit-identical to BSP at every drained boundary. The step loop
+    /// itself drains before each gradient phase (gradients need the mixed
+    /// iterate), so training keeps at most one round in flight per step;
+    /// depth > 1 pipelines back-to-back comm-only round sequences — the
+    /// mixer/backend benches and the pipeline test suite drive it directly.
+    pub pipeline_depth: usize,
     /// Execution regime (`train.regime` / `--regime`):
     /// * [`Regime::Bsp`] — synchronous rounds (the default);
     /// * [`Regime::Overlap`] — double-buffered async gossip: the round-t
@@ -269,6 +286,8 @@ impl TrainerOptions {
             log_every: cfg.log_every,
             threads: cfg.threads,
             stealing: cfg.stealing,
+            pin: cfg.pin,
+            pipeline_depth: cfg.pipeline_depth,
             regime: cfg.regime_kind().expect("validated"),
             max_staleness: cfg.max_staleness,
             backend: cfg.backend_kind().expect("validated"),
@@ -295,10 +314,11 @@ pub struct Trainer {
     pub workload: Workload,
     opts: TrainerOptions,
     workers: Vec<Worker>,
-    /// In-flight overlap mix, if any. Declared BEFORE `params`/`backend`:
-    /// on drop its Ticket blocks until the background jobs release their
-    /// raw views of those buffers.
-    pending: Option<PendingComm>,
+    /// In-flight overlap mixes, oldest first (the backend's pipeline is
+    /// drained strictly FIFO). Declared BEFORE `params`/`backend`: on drop
+    /// each Ticket blocks until the background jobs release their raw
+    /// views of those buffers.
+    pending: VecDeque<PendingComm>,
     /// n x d worker parameters (worker i = row i).
     params: ParamMatrix,
     /// The pluggable communication plane (shared-memory mixer or
@@ -371,12 +391,13 @@ impl Trainer {
             None => NodeCosts::homogeneous(opts.cost, n),
         };
         let backend: Box<dyn CommBackend> = match opts.backend {
-            BackendKind::Shared => Box::new(SharedBackend::new(
+            BackendKind::Shared => Box::new(SharedBackend::with_depth(
                 &opts.topology,
                 d,
                 &node_costs,
                 opts.cost_dim,
                 opts.compression,
+                opts.pipeline_depth.max(1),
             )),
             // The schedule itself says whether it can ever global-average
             // (pure-gossip schedules skip the all-to-all edge setup).
@@ -413,11 +434,7 @@ impl Trainer {
         } else {
             None
         };
-        let pool = if opts.stealing {
-            WorkerPool::new_stealing(opts.threads)
-        } else {
-            WorkerPool::new(opts.threads)
-        };
+        let pool = WorkerPool::with_options(opts.threads, opts.stealing, opts.pin);
         // Overlap without backend support is a silent downgrade to the
         // synchronous round — surface it once at startup (and count every
         // fallback in CommStats::fallback_rounds). The ROADMAP's open
@@ -457,7 +474,7 @@ impl Trainer {
             workload,
             opts,
             workers,
-            pending: None,
+            pending: VecDeque::new(),
             params,
             backend,
             pool,
@@ -562,6 +579,12 @@ impl Trainer {
         self.backend.kind()
     }
 
+    /// Async gossip rounds issued but not yet drained (0 in BSP mode and at
+    /// every drained boundary — eval, checkpoint, global average).
+    pub fn pending_rounds(&self) -> usize {
+        self.pending.len()
+    }
+
     /// Cumulative measured communication (wire scalars, messages,
     /// alpha-beta seconds) over all completed actions — the same
     /// accounting on either backend — plus the clocks' cumulative
@@ -635,11 +658,11 @@ impl Trainer {
             .unwrap_or(0.0)
     }
 
-    /// Complete the in-flight overlap mix, if any. After this the visible
-    /// state is bit-identical to the BSP schedule at the same step. No-op
-    /// when nothing is pending (always, in BSP mode).
+    /// Complete every in-flight overlap mix, oldest first. After this the
+    /// visible state is bit-identical to the BSP schedule at the same
+    /// step. No-op when nothing is pending (always, in BSP mode).
     pub fn drain(&mut self) -> Result<()> {
-        if let Some(pending) = self.pending.take() {
+        while let Some(pending) = self.pending.pop_front() {
             self.backend.finish(&mut self.params, pending)?;
         }
         Ok(())
@@ -664,7 +687,7 @@ impl Trainer {
             self.drain()?;
             self.grad_phase(lr, true)?;
         } else {
-            debug_assert!(self.pending.is_none());
+            debug_assert!(self.pending.is_empty());
             self.grad_phase(lr, false)?;
         }
         let mean_loss = self.mean_loss();
@@ -720,7 +743,7 @@ impl Trainer {
                             &charge.node_seconds,
                             charge.barrier,
                         );
-                        self.pending = Some(pending);
+                        self.pending.push_back(pending);
                     }
                     // Backend without async support (bus, or compressed
                     // transmit): the schedule falls back to the

@@ -57,7 +57,24 @@
 //! rides on (the round-t gossip mix runs here while the main thread starts
 //! round t+1). Dropping a `Ticket` BLOCKS until its jobs finish — in-flight
 //! jobs hold raw views of the parameter buffers, so the ticket is the
-//! lifetime anchor that makes early teardown sound.
+//! lifetime anchor that makes early teardown sound. Chained submissions
+//! (the depth-k gossip pipeline) gate on a [`Latch`] instead of a ticket:
+//! jobs of round t+1 wait for round t's latch before reading its output.
+//! This cannot deadlock because the queue is strictly FIFO — a worker can
+//! only be blocked on a round whose jobs were all dequeued earlier, so
+//! they are running or done on other workers, and by induction the oldest
+//! unfinished round waits on nothing.
+//!
+//! §Pinning ([`WorkerPool::with_options`], `--pin`). The workers are
+//! long-lived (that was the whole point of PR 2), so pinning them finally
+//! sticks: worker i is pinned to core `i % available_parallelism`, which
+//! keeps its ParamMatrix row shard on the same core's cache across rounds
+//! (the static sharding policy hands thread i the same row range every
+//! round). Affinity is best-effort: where the syscall is unavailable or
+//! refused (non-Linux, restrictive cgroups) the pool warns ONCE on stderr
+//! and runs unpinned — never an error, and never a behavior change
+//! (pinning moves threads, not arithmetic; bits are identical either way).
+//! A size-1 pool has no worker threads, so pinning is a no-op there.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -103,6 +120,8 @@ pub struct WorkerPool {
     /// Chunks per thread the sharding policy hands out: 1 = static
     /// sharding, [`STEAL_GRAIN`] = work-stealing dynamic chunking.
     grain: usize,
+    /// Whether core affinity was requested for the worker threads.
+    pin: bool,
 }
 
 /// Chunks per thread in stealing mode: fine enough that a 4x-slow item
@@ -115,7 +134,7 @@ impl WorkerPool {
     /// nothing and runs jobs inline). Static sharding: `shards` hands out
     /// one chunk per thread.
     pub fn new(threads: usize) -> WorkerPool {
-        WorkerPool::with_grain(threads, 1)
+        WorkerPool::with_grain(threads, 1, false)
     }
 
     /// Spawn a work-stealing pool: same threads, but `shards` splits every
@@ -123,30 +142,44 @@ impl WorkerPool {
     /// chunks from the shared queue (see module docs §Work stealing).
     /// Bit-identical results to [`WorkerPool::new`] by construction.
     pub fn new_stealing(threads: usize) -> WorkerPool {
-        WorkerPool::with_grain(threads, STEAL_GRAIN)
+        WorkerPool::with_grain(threads, STEAL_GRAIN, false)
     }
 
-    fn with_grain(threads: usize, grain: usize) -> WorkerPool {
+    /// The full-knob constructor the trainer uses: `stealing` picks the
+    /// sharding grain, `pin` requests core affinity for the worker threads
+    /// (see module docs §Pinning; best-effort, warns once and runs
+    /// unpinned where affinity is unavailable).
+    pub fn with_options(threads: usize, stealing: bool, pin: bool) -> WorkerPool {
+        WorkerPool::with_grain(threads, if stealing { STEAL_GRAIN } else { 1 }, pin)
+    }
+
+    fn with_grain(threads: usize, grain: usize, pin: bool) -> WorkerPool {
         let size = threads.max(1);
         let shared = Arc::new(Shared {
             queue: Mutex::new(Queue { tasks: VecDeque::new(), shutdown: false }),
             available: Condvar::new(),
             poisoned: AtomicBool::new(false),
         });
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
         let handles = if size >= 2 {
             (0..size)
                 .map(|i| {
                     let shared = shared.clone();
                     std::thread::Builder::new()
                         .name(format!("gpga-pool-{i}"))
-                        .spawn(move || worker_loop(&shared))
+                        .spawn(move || {
+                            if pin {
+                                pin_current_thread(i % cores);
+                            }
+                            worker_loop(&shared)
+                        })
                         .expect("spawning pool worker")
                 })
                 .collect()
         } else {
             Vec::new()
         };
-        WorkerPool { shared, handles, size, grain: grain.max(1) }
+        WorkerPool { shared, handles, size, grain: grain.max(1), pin }
     }
 
     /// Worker-thread count (>= 1).
@@ -157,6 +190,12 @@ impl WorkerPool {
     /// Whether the sharding policy over-splits for dynamic balancing.
     pub fn stealing(&self) -> bool {
         self.grain > 1
+    }
+
+    /// Whether core affinity was REQUESTED for the workers (best-effort:
+    /// the request may have fallen back to unpinned with a warning).
+    pub fn pinned(&self) -> bool {
+        self.pin
     }
 
     /// THE sharding policy: how many ways to split `items` units of work.
@@ -304,6 +343,91 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
         s
     } else {
         "non-string panic payload"
+    }
+}
+
+/// Pin the calling thread to `core` (best-effort, see module docs
+/// §Pinning). Uses `sched_setaffinity` straight from the system libc that
+/// std already links — no crate dependency; the raw syscall is per-thread,
+/// and pid 0 means "the calling thread".
+#[cfg(target_os = "linux")]
+fn pin_current_thread(core: usize) {
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    // 16 x u64 = 1024 CPUs, the size of glibc's default cpu_set_t.
+    let mut mask = [0u64; 16];
+    mask[(core / 64) % mask.len()] |= 1u64 << (core % 64);
+    let rc = unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+    if rc != 0 {
+        warn_pin_unavailable();
+    }
+}
+
+/// Non-Linux: affinity is not portable without a platform layer — warn
+/// once and run unpinned.
+#[cfg(not(target_os = "linux"))]
+fn pin_current_thread(_core: usize) {
+    warn_pin_unavailable();
+}
+
+fn warn_pin_unavailable() {
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if !WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!(
+            "warning: core pinning unavailable (affinity call failed or unsupported \
+             platform); pool threads run unpinned"
+        );
+    }
+}
+
+/// A countdown latch: `wait` blocks until `count` arrivals have happened.
+/// This is the read gate of the depth-k gossip pipeline — round t+1's jobs
+/// wait on round t's latch before reading its output slot. `arrive_on_drop`
+/// returns a guard that arrives even if the holder panics, so a failed job
+/// can never leave its successors blocked forever (they read a partial
+/// slot, the pool reports the panic, and `finish_gossip` refuses to commit
+/// the round).
+pub struct Latch {
+    count: Mutex<usize>,
+    zero: Condvar,
+}
+
+impl Latch {
+    pub fn new(count: usize) -> Latch {
+        Latch { count: Mutex::new(count), zero: Condvar::new() }
+    }
+
+    /// Record one arrival (saturating — spurious extra arrivals are benign).
+    pub fn arrive(&self) {
+        let mut c = self.count.lock().expect("latch lock");
+        *c = c.saturating_sub(1);
+        if *c == 0 {
+            self.zero.notify_all();
+        }
+    }
+
+    /// Block until the count reaches zero.
+    pub fn wait(&self) {
+        let mut c = self.count.lock().expect("latch lock");
+        while *c > 0 {
+            c = self.zero.wait(c).expect("latch wait");
+        }
+    }
+
+    /// An RAII arrival: the latch is arrived when the guard drops, panic
+    /// or not.
+    pub fn arrive_on_drop(&self) -> ArriveGuard<'_> {
+        ArriveGuard(self)
+    }
+}
+
+/// See [`Latch::arrive_on_drop`].
+pub struct ArriveGuard<'a>(&'a Latch);
+
+impl Drop for ArriveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.arrive();
     }
 }
 
@@ -589,6 +713,119 @@ mod tests {
             drop(pool); // workers drain the queue before exiting
             ticket.wait().unwrap();
             assert_eq!(done.load(Ordering::Relaxed), 16);
+        });
+    }
+
+    #[test]
+    fn pinned_pool_runs_jobs_identically() {
+        // Pinning moves threads, never arithmetic: a pinned pool must run
+        // the standard disjoint-chunk pattern to the same result (and not
+        // error even where the affinity call fails — it warns and runs).
+        for (stealing, pin) in [(false, true), (true, true), (false, false)] {
+            let pool = WorkerPool::with_options(4, stealing, pin);
+            assert_eq!(pool.pinned(), pin);
+            assert_eq!(pool.stealing(), stealing);
+            let mut data = vec![0usize; 13];
+            let jobs: Vec<_> = data
+                .chunks_mut(4)
+                .enumerate()
+                .map(|(ci, chunk)| {
+                    move || {
+                        for (j, v) in chunk.iter_mut().enumerate() {
+                            *v = ci * 4 + j + 1;
+                        }
+                        Ok(())
+                    }
+                })
+                .collect();
+            pool.run(jobs).unwrap();
+            let expect: Vec<usize> = (1..=13).collect();
+            assert_eq!(data, expect, "stealing {stealing} pin {pin}");
+        }
+        // Size-1 pinned pool: no worker threads, pinning is a no-op.
+        let seq = WorkerPool::with_options(1, false, true);
+        assert!(seq.pinned());
+        seq.run(vec![|| Ok(())]).unwrap();
+    }
+
+    #[test]
+    fn latch_gates_until_all_arrivals() {
+        with_timeout(30, || {
+            let latch = Arc::new(Latch::new(2));
+            let flag = Arc::new(AtomicBool::new(false));
+            let (l, f) = (latch.clone(), flag.clone());
+            let waiter = std::thread::spawn(move || {
+                l.wait();
+                f.store(true, Ordering::Release);
+            });
+            latch.arrive();
+            std::thread::sleep(Duration::from_millis(20));
+            assert!(!flag.load(Ordering::Acquire), "one arrival must not release");
+            latch.arrive();
+            waiter.join().unwrap();
+            assert!(flag.load(Ordering::Acquire));
+            latch.wait(); // at zero, wait returns immediately
+            latch.arrive(); // saturating: arriving past zero is benign
+            latch.wait();
+        });
+    }
+
+    #[test]
+    fn latch_arrive_on_drop_fires_on_panic() {
+        with_timeout(30, || {
+            let latch = Latch::new(1);
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _guard = latch.arrive_on_drop();
+                panic!("job died");
+            }));
+            assert!(r.is_err());
+            latch.wait(); // must not hang: the guard arrived during unwind
+        });
+    }
+
+    #[test]
+    fn chained_submissions_gated_by_latches_make_progress() {
+        // The pipeline shape: batch 2's jobs wait on batch 1's latch. FIFO
+        // dequeue means this can never deadlock, at any pool size.
+        with_timeout(30, || {
+            for size in [1usize, 2, 4] {
+                let pool = WorkerPool::new(size);
+                let order = Arc::new(Mutex::new(Vec::new()));
+                let l1 = Arc::new(Latch::new(2));
+                let first: Vec<_> = (0..2)
+                    .map(|i| {
+                        let l1 = l1.clone();
+                        let order = order.clone();
+                        move || {
+                            let _g = l1.arrive_on_drop();
+                            std::thread::sleep(Duration::from_millis(5));
+                            order.lock().unwrap().push(("a", i));
+                            Ok(())
+                        }
+                    })
+                    .collect();
+                let second: Vec<_> = (0..2)
+                    .map(|i| {
+                        let l1 = l1.clone();
+                        let order = order.clone();
+                        move || {
+                            l1.wait();
+                            order.lock().unwrap().push(("b", i));
+                            Ok(())
+                        }
+                    })
+                    .collect();
+                let t1 = pool.submit(first).unwrap();
+                let t2 = pool.submit(second).unwrap();
+                t2.wait().unwrap();
+                t1.wait().unwrap();
+                let order = order.lock().unwrap();
+                let first_b = order.iter().position(|(tag, _)| *tag == "b").unwrap();
+                assert!(
+                    order[..first_b].iter().filter(|(tag, _)| *tag == "a").count() == 2,
+                    "size {size}: every gated job ran after the full first batch: {order:?}"
+                );
+            }
         });
     }
 }

@@ -146,6 +146,8 @@ impl RunSpec {
             log_every: self.log_every,
             threads: self.threads,
             stealing: false,
+            pin: false,
+            pipeline_depth: 1,
             regime: if self.overlap { Regime::Overlap } else { Regime::Bsp },
             max_staleness: 0,
             backend: self.backend,

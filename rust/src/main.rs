@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   train [--config exp.toml] [--set key=value ...] [--threads N]
 //!         [--regime bsp|overlap|async] [--max-staleness S]
-//!         [--overlap] [--stealing] [--backend shared|bus|tcp]
+//!         [--overlap] [--stealing] [--pin] [--pipeline-depth K]
+//!         [--backend shared|bus|tcp]
 //!         [--listen host:port] [--round-timeout SECS]
 //!         [--straggler idx:factor[,idx:factor...]]    run one experiment
 //!   topo  [--n N]                                     topology/beta report
@@ -49,7 +50,8 @@ fn print_help() {
          USAGE:\n\
            gossip-pga train [--config exp.toml] [--set key=value ...] [--threads N]\n\
                             [--regime bsp|overlap|async] [--max-staleness S]\n\
-                            [--overlap] [--stealing] [--backend shared|bus|tcp]\n\
+                            [--overlap] [--stealing] [--pin] [--pipeline-depth K]\n\
+                            [--backend shared|bus|tcp]\n\
                             [--listen host:port] [--round-timeout SECS]\n\
                             [--straggler idx:factor[,idx:factor...]]\n\
            gossip-pga sweep [--virtual-n N] [--surrogate] [--dim D] [--steps K]\n\
@@ -84,6 +86,11 @@ fn print_help() {
            train.overlap (double-buffered async gossip; --overlap is shorthand\n\
              for --regime overlap)\n\
            train.stealing (work-stealing pool chunking; --stealing is shorthand)\n\
+           train.pin (pin pool threads to cores, best-effort; --pin is shorthand.\n\
+             Needs train.threads <= available cores; bits identical either way)\n\
+           train.pipeline_depth (max gossip rounds in flight on the shared\n\
+             backend's async pipeline; 1 = classic double buffer, drained at\n\
+             every k·H/eval/checkpoint boundary; --pipeline-depth is shorthand)\n\
            comm.backend (shared|bus|tcp; --backend is shorthand. tcp = the bus\n\
              core over real loopback sockets — framed streams, measured traffic)\n\
            comm.listen (tcp bind address, host:port; port 0 = OS-assigned;\n\
@@ -104,7 +111,7 @@ fn print_help() {
 
 /// Flags that may appear bare (`--overlap`) or with an explicit boolean
 /// (`--overlap false`).
-const BOOL_FLAGS: &[&str] = &["overlap", "stealing", "surrogate"];
+const BOOL_FLAGS: &[&str] = &["overlap", "stealing", "surrogate", "pin"];
 
 /// Parse `--flag value` pairs (boolean flags may omit the value).
 fn parse_flags(args: &[String]) -> Result<Vec<(String, String)>> {
@@ -189,6 +196,16 @@ fn cmd_train(args: &[String]) -> Result<()> {
                     .with_context(|| format!("--stealing wants a bool, got '{val}'"))?;
                 doc.values.extend(parsed.values);
             }
+            "pin" => {
+                let parsed = Toml::parse(&format!("train.pin = {val}"))
+                    .with_context(|| format!("--pin wants a bool, got '{val}'"))?;
+                doc.values.extend(parsed.values);
+            }
+            "pipeline-depth" => {
+                let parsed = Toml::parse(&format!("train.pipeline_depth = {val}"))
+                    .with_context(|| format!("--pipeline-depth wants an integer, got '{val}'"))?;
+                doc.values.extend(parsed.values);
+            }
             "backend" => {
                 let parsed = Toml::parse(&format!("comm.backend = \"{val}\""))
                     .with_context(|| format!("--backend wants shared|bus|tcp, got '{val}'"))?;
@@ -227,7 +244,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let cfg = ExperimentConfig::from_toml(&doc).context("building experiment config")?;
     let topo = cfg.topology();
     println!(
-        "# {} | {} nodes on {} (beta = {}) | H = {} | {} steps | {} thread(s){}{} | {} backend{}",
+        "# {} | {} nodes on {} (beta = {}) | H = {} | {} steps | {} thread(s){}{}{}{} | {} backend{}",
         cfg.algorithm.display(),
         cfg.nodes,
         cfg.topology,
@@ -236,6 +253,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
         cfg.steps,
         cfg.threads,
         if cfg.stealing { " (stealing)" } else { "" },
+        if cfg.pin { " (pinned)" } else { "" },
+        if cfg.pipeline_depth > 1 {
+            format!(" | pipeline depth {}", cfg.pipeline_depth)
+        } else {
+            String::new()
+        },
         match cfg.regime_kind().expect("validated") {
             gossip_pga::eventsim::Regime::Bsp => String::new(),
             gossip_pga::eventsim::Regime::Overlap => " | overlap".into(),

@@ -427,6 +427,8 @@ fn trainer_with_backend(
         cost_dim: 25_500_000,
         node_costs: None,
         stealing: false,
+        pin: false,
+        pipeline_depth: 1,
         log_every: 5,
         threads,
         regime: Regime::Bsp,
@@ -507,6 +509,8 @@ fn checkpoint_resumes_comm_totals_and_compressor_residuals_exactly() {
                 cost_dim: 25_500_000,
                 node_costs: None,
                 stealing: false,
+                pin: false,
+                pipeline_depth: 1,
                 log_every: 5,
                 threads: 2,
                 regime: Regime::Bsp,
@@ -579,6 +583,8 @@ fn restoring_compressed_checkpoint_into_uncompressed_run_is_rejected() {
         cost_dim: 25_500_000,
         node_costs: None,
         stealing: false,
+        pin: false,
+        pipeline_depth: 1,
         log_every: 5,
         threads: 1,
         regime: Regime::Bsp,
@@ -633,6 +639,8 @@ fn overlap_on_bus_falls_back_to_sync_and_matches_bsp() {
         cost_dim: 25_500_000,
         node_costs: None,
         stealing: false,
+        pin: false,
+        pipeline_depth: 1,
         log_every: 5,
         threads: 2,
         regime: Regime::Overlap,

@@ -49,6 +49,8 @@ fn trainer(threads: usize) -> Trainer {
         cost_dim: 25_500_000,
         node_costs: None,
         stealing: false,
+        pin: false,
+        pipeline_depth: 1,
         log_every: 10,
         threads,
         regime: Regime::Bsp,
@@ -109,6 +111,8 @@ fn poisoned_pool_refuses_async_overlap_work_too() {
             cost_dim: 25_500_000,
             node_costs: None,
             stealing: false,
+            pin: false,
+            pipeline_depth: 1,
             log_every: 10,
             threads: 2,
             regime: Regime::Overlap,

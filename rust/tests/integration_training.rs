@@ -34,6 +34,8 @@ fn opts(algo: AlgorithmKind, topo: Topology, h: usize, seed: u64) -> TrainerOpti
         cost_dim: 25_500_000,
         node_costs: None,
         stealing: false,
+        pin: false,
+        pipeline_depth: 1,
         log_every: 10,
         threads: 1,
         regime: Regime::Bsp,

@@ -1,0 +1,213 @@
+//! Kernel-equivalence property suite (`rust/src/coordinator/mixer.rs`
+//! §Kernel).
+//!
+//! The vectorized, cache-blocked [`mix_row_src`] is THE mixing arithmetic —
+//! every backend routes through it, so the repo's cross-backend bit-equality
+//! contracts all rest on one claim: blocking the d-dimension and unrolling
+//! the multiply-add lanes changes *nothing* about any output element's
+//! j-accumulation order. This suite pins that claim against the naive
+//! reference [`mix_row_src_scalar`] (plain zip loops, no blocking, no
+//! unrolling) with **bit** equality — not tolerance — across:
+//!
+//! * every row-shape arm: 0 neighbors (zero fill), 1 (incl. the w0 == 1.0
+//!   copy fast path), 2/3 (fused single-pass), and the general blocked arm
+//!   at degrees up to 8;
+//! * d spanning the block boundary: {1, 3, MIX_BLOCK-1, MIX_BLOCK,
+//!   MIX_BLOCK+1, 4096} plus random odd sizes, so partial tail blocks and
+//!   partial 8-lanes are both exercised;
+//! * the unrolled lane primitives (`scale` / `fused2` / `fused3` / `axpy`)
+//!   against their obvious one-element loops, at every length mod 8.
+//!
+//! Runs without AOT artifacts; `scripts/verify.sh` step 10 runs it at
+//! `PROPTEST_CASES=16`.
+
+use gossip_pga::coordinator::mixer::{
+    axpy, fused2, fused3, mix_row_src, mix_row_src_scalar, scale, weight_rows_f32, Mixer,
+    MIX_BLOCK,
+};
+use gossip_pga::exec::WorkerPool;
+use gossip_pga::params::ParamMatrix;
+use gossip_pga::proptest::{check, ensure, CaseResult};
+use gossip_pga::rng::Rng;
+use gossip_pga::topology::Topology;
+
+/// Bit equality (`to_bits`, so -0.0 vs 0.0 or NaN payload drift would fail
+/// loudly instead of slipping past an epsilon).
+fn bits_eq(label: &str, got: &[f32], want: &[f32]) -> CaseResult {
+    ensure(got.len() == want.len(), format!("{label}: length {} vs {}", got.len(), want.len()))?;
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        if g.to_bits() != w.to_bits() {
+            return Err(format!("{label}: element {i}: {g:?} ({:#x}) vs {w:?} ({:#x})",
+                g.to_bits(), w.to_bits()));
+        }
+    }
+    Ok(())
+}
+
+/// The d grid every property walks: both sides of the cache-block boundary,
+/// both sides of the 8-lane boundary, tiny and large.
+fn d_grid(rng: &mut Rng) -> Vec<usize> {
+    let mut ds = vec![1, 3, MIX_BLOCK - 1, MIX_BLOCK, MIX_BLOCK + 1, 4096];
+    // One random size per case so odd tails get coverage beyond the grid.
+    ds.push(1 + rng.below(700) as usize);
+    ds
+}
+
+/// A random weight row of the requested degree over `nsrc` sources
+/// (distinct indices; weights in (-1, 1), never the 1.0 fast-path value).
+fn random_row(rng: &mut Rng, deg: usize, nsrc: usize) -> Vec<(usize, f32)> {
+    rng.choose_distinct(nsrc, deg)
+        .into_iter()
+        .map(|j| (j, rng.range(-1.0, 1.0) as f32))
+        .collect()
+}
+
+/// Flat `nsrc` x `d` source pool with magnitudes spread over a few orders
+/// so reordered accumulation (the bug this suite exists to catch) actually
+/// changes bits when it happens.
+fn random_sources(rng: &mut Rng, nsrc: usize, d: usize) -> Vec<f32> {
+    (0..nsrc * d)
+        .map(|_| {
+            let mag = 10f64.powi(rng.below(5) as i32 - 2);
+            (rng.range(-1.0, 1.0) * mag) as f32
+        })
+        .collect()
+}
+
+#[test]
+fn blocked_kernel_is_bit_identical_to_scalar_reference() {
+    check("mix_row_src == mix_row_src_scalar (all arms)", |rng| {
+        let nsrc = 9;
+        for d in d_grid(rng) {
+            let src = random_sources(rng, nsrc, d);
+            let srow = |j: usize| &src[j * d..(j + 1) * d];
+            for deg in 0..=8usize {
+                let row = random_row(rng, deg, nsrc);
+                // Poison both outputs differently so a skipped write shows.
+                let mut got = vec![f32::NAN; d];
+                let mut want = vec![-7.0f32; d];
+                mix_row_src(&row, srow, &mut got);
+                mix_row_src_scalar(&row, srow, &mut want);
+                bits_eq(&format!("deg={deg} d={d}"), &got, &want)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn unit_weight_copy_fast_path_matches_scalar() {
+    check("w0 == 1.0 single-neighbor copy", |rng| {
+        let nsrc = 4;
+        for d in d_grid(rng) {
+            let src = random_sources(rng, nsrc, d);
+            let srow = |j: usize| &src[j * d..(j + 1) * d];
+            let j = rng.below(nsrc as u64) as usize;
+            let row = [(j, 1.0f32)];
+            let mut got = vec![f32::NAN; d];
+            let mut want = vec![f32::NAN; d];
+            mix_row_src(&row, srow, &mut got);
+            mix_row_src_scalar(&row, srow, &mut want);
+            bits_eq(&format!("copy d={d}"), &got, &want)?;
+            // The fast path is an exact copy of the source row.
+            bits_eq(&format!("copy-vs-src d={d}"), &got, srow(j))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lane_primitives_match_naive_loops_at_every_length_mod_8() {
+    check("scale/fused2/fused3/axpy == naive", |rng| {
+        // 0..=17 covers every residue mod 8 twice; the block sizes cover
+        // the lengths the blocked arm actually feeds these kernels.
+        let mut lens: Vec<usize> = (0..=17).collect();
+        lens.extend([MIX_BLOCK - 1, MIX_BLOCK, 1 + rng.below(500) as usize]);
+        for len in lens {
+            let a = random_sources(rng, 1, len);
+            let b = random_sources(rng, 1, len);
+            let c = random_sources(rng, 1, len);
+            let (w0, w1, w2) = (
+                rng.range(-1.0, 1.0) as f32,
+                rng.range(-1.0, 1.0) as f32,
+                rng.range(-1.0, 1.0) as f32,
+            );
+
+            let mut got = vec![f32::NAN; len];
+            scale(w0, &a, &mut got);
+            let want: Vec<f32> = a.iter().map(|x| w0 * x).collect();
+            bits_eq(&format!("scale len={len}"), &got, &want)?;
+
+            let mut got = vec![f32::NAN; len];
+            fused2(w0, &a, w1, &b, &mut got);
+            let want: Vec<f32> =
+                a.iter().zip(&b).map(|(x, y)| w0 * x + w1 * y).collect();
+            bits_eq(&format!("fused2 len={len}"), &got, &want)?;
+
+            let mut got = vec![f32::NAN; len];
+            fused3(w0, &a, w1, &b, w2, &c, &mut got);
+            let want: Vec<f32> = a
+                .iter()
+                .zip(&b)
+                .zip(&c)
+                .map(|((x, y), z)| w0 * x + w1 * y + w2 * z)
+                .collect();
+            bits_eq(&format!("fused3 len={len}"), &got, &want)?;
+
+            let mut got = b.clone();
+            axpy(w0, &a, &mut got);
+            let want: Vec<f32> =
+                b.iter().zip(&a).map(|(o, x)| o + w0 * x).collect();
+            bits_eq(&format!("axpy len={len}"), &got, &want)?;
+        }
+        Ok(())
+    });
+}
+
+/// Reference gossip round built on the scalar kernel only: what the mixer
+/// must reproduce bit for bit through its blocked kernel, ring scratch and
+/// pool sharding.
+fn scalar_reference_round(rows: &[Vec<(usize, f32)>], params: &ParamMatrix) -> ParamMatrix {
+    let (n, d) = (params.n(), params.d());
+    let src = params.as_slice();
+    let mut out = ParamMatrix::zeros(n, d);
+    for i in 0..n {
+        mix_row_src_scalar(&rows[i], |j| &src[j * d..(j + 1) * d], out.row_mut(i));
+    }
+    out
+}
+
+#[test]
+fn full_mixer_rounds_match_the_scalar_reference_end_to_end() {
+    // The integration layer of the suite: the real Mixer (blocked kernel +
+    // scratch ring + pool sharding + time-varying topology clock) against
+    // the naive per-row reference, over the three stock topologies and
+    // pool sizes {1, 3}, multiple rounds deep.
+    check("Mixer::gossip == scalar reference", |rng| {
+        let n = 2 + rng.below(7) as usize;
+        let d = 1 + rng.below(2 * MIX_BLOCK as u64 + 9) as usize;
+        for mk in [
+            Topology::ring as fn(usize) -> Topology,
+            Topology::grid,
+            Topology::one_peer_expo,
+        ] {
+            let topo = mk(n);
+            let rows = weight_rows_f32(&topo);
+            for threads in [1usize, 3] {
+                let pool = WorkerPool::new(threads);
+                let mut mixer = Mixer::new(&topo, d);
+                let mut params = ParamMatrix::random(&mut Rng::new(rng.next_u64()), n, d, 1.0);
+                for round in 0..topo.rounds().max(2) {
+                    let want = scalar_reference_round(&rows[round % topo.rounds()], &params);
+                    mixer.gossip(&mut params, &pool).map_err(|e| e.to_string())?;
+                    bits_eq(
+                        &format!("{:?} n={n} d={d} t={threads} round={round}", topo.kind),
+                        params.as_slice(),
+                        want.as_slice(),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,378 @@
+//! Multi-round gossip pipelining acceptance suite
+//! (`Mixer::with_depth` / `SharedBackend::with_depth` /
+//! `TrainerOptions::pipeline_depth`).
+//!
+//! The contract under test: a depth-k pipeline of chained async gossip
+//! rounds, drained strictly FIFO at every k·H global-average / eval /
+//! checkpoint boundary, is **bit-identical** to the same schedule run
+//! synchronously (BSP) — at every drained point, on every stock topology,
+//! at any pool size, and across a mid-pipeline checkpoint/restore. Depth 1
+//! must reproduce the pre-pipeline double buffer exactly, so the whole
+//! feature is invisible unless you opt in.
+//!
+//! The mixer/backend replay layers need no AOT artifacts; the
+//! trainer-level tests need `make artifacts` like the other integration
+//! suites. `scripts/verify.sh` step 10 runs this suite.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use gossip_pga::algorithms::AlgorithmKind;
+use gossip_pga::comm::{
+    BackendKind, CommBackend, Compression, PendingComm, SharedBackend,
+};
+use gossip_pga::coordinator::mixer::Mixer;
+use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
+use gossip_pga::costmodel::{CostModel, NodeCosts};
+use gossip_pga::eventsim::Regime;
+use gossip_pga::exec::WorkerPool;
+use gossip_pga::jsonio::Json;
+use gossip_pga::optim::LrSchedule;
+use gossip_pga::params::ParamMatrix;
+use gossip_pga::rng::Rng;
+use gossip_pga::runtime::Runtime;
+use gossip_pga::topology::Topology;
+
+/// The stock topology constructors every layer sweeps.
+fn topologies() -> [fn(usize) -> Topology; 3] {
+    [Topology::ring, Topology::grid, Topology::one_peer_expo]
+}
+
+/// Deterministic pseudo-gradient, applied identically on every replica so
+/// any divergence comes from the pipeline alone.
+fn perturb(params: &mut ParamMatrix, k: u64) {
+    let mut rng = Rng::new(0xBEEF ^ k.wrapping_mul(0x9E37_79B9));
+    let noise = rng.normal_vec(params.n() * params.d(), 0.05);
+    for (p, g) in params.as_mut_slice().iter_mut().zip(&noise) {
+        *p -= g;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mixer layer: chained gossip_async against the synchronous round sequence.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mixer_pipeline_matches_sync_rounds_at_every_drain() {
+    // bursts x (fill the pipeline to depth, drain it FIFO) == the same
+    // number of sync gossip calls, bit for bit, with a perturbation between
+    // bursts (legal exactly because the pipeline is drained there).
+    for mk in topologies() {
+        let topo = mk(6);
+        let d = 515; // exercises partial 8-lanes and a partial cache block
+        for depth in [1usize, 2, 4] {
+            for threads in [1usize, 4] {
+                let pool = WorkerPool::new(threads);
+                let mut sync_mixer = Mixer::new(&topo, d);
+                let mut piped = Mixer::with_depth(&topo, d, depth);
+                let mut want = ParamMatrix::random(&mut Rng::new(9), topo.n, d, 1.0);
+                let mut got = ParamMatrix::random(&mut Rng::new(9), topo.n, d, 1.0);
+                assert_eq!(got.as_slice(), want.as_slice());
+                for burst in 0..3u64 {
+                    let mut handles = VecDeque::new();
+                    for _ in 0..depth {
+                        assert!(piped.pipeline_ready(), "room before each issue");
+                        handles.push_back(unsafe { piped.gossip_async(&got, &pool).unwrap() });
+                    }
+                    assert_eq!(piped.in_flight_rounds(), depth, "pipeline filled");
+                    assert_eq!(piped.issued_clock(), piped.gossip_clock + depth);
+                    while let Some(p) = handles.pop_front() {
+                        piped.finish_gossip(&mut got, p).unwrap();
+                    }
+                    assert_eq!(piped.in_flight_rounds(), 0, "drained after each burst");
+                    for _ in 0..depth {
+                        sync_mixer.gossip(&mut want, &pool).unwrap();
+                    }
+                    assert_eq!(
+                        got.as_slice(),
+                        want.as_slice(),
+                        "{:?} depth={depth} t={threads} burst={burst}: pipeline diverged",
+                        topo.kind
+                    );
+                    assert_eq!(piped.gossip_clock, sync_mixer.gossip_clock);
+                    perturb(&mut got, burst);
+                    perturb(&mut want, burst);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn rolling_pipeline_never_fully_drained_mid_burst_still_matches() {
+    // The steady-state shape the backend replay uses: finish the oldest
+    // round only when the ring is full, so the pipeline stays occupied
+    // across the whole burst and every slot gets recycled several times.
+    let topo = Topology::one_peer_expo(8);
+    let d = 300;
+    let rounds = 11; // > depth * ring length, forces slot reuse
+    for depth in [2usize, 4] {
+        for threads in [1usize, 4] {
+            let pool = WorkerPool::new(threads);
+            let mut sync_mixer = Mixer::new(&topo, d);
+            let mut piped = Mixer::with_depth(&topo, d, depth);
+            let mut want = ParamMatrix::random(&mut Rng::new(11), topo.n, d, 1.0);
+            let mut got = ParamMatrix::random(&mut Rng::new(11), topo.n, d, 1.0);
+            let mut handles: VecDeque<_> = VecDeque::new();
+            for _ in 0..rounds {
+                if !piped.pipeline_ready() {
+                    let oldest = handles.pop_front().unwrap();
+                    piped.finish_gossip(&mut got, oldest).unwrap();
+                }
+                handles.push_back(unsafe { piped.gossip_async(&got, &pool).unwrap() });
+            }
+            while let Some(p) = handles.pop_front() {
+                piped.finish_gossip(&mut got, p).unwrap();
+            }
+            for _ in 0..rounds {
+                sync_mixer.gossip(&mut want, &pool).unwrap();
+            }
+            assert_eq!(
+                got.as_slice(),
+                want.as_slice(),
+                "depth={depth} t={threads}: rolling pipeline diverged"
+            );
+            assert_eq!(piped.gossip_clock, rounds);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend layer: SharedBackend::with_depth under the k·H schedule.
+// ---------------------------------------------------------------------------
+
+/// Replay 3 periods of the PGA schedule — H pipelined gossip rounds, a
+/// full drain, one global average, a perturbation — returning the final
+/// matrix and the total billed sim seconds. `depth == 0` runs the whole
+/// schedule synchronously (the BSP reference).
+fn backend_replay(
+    topo: &Topology,
+    d: usize,
+    h: usize,
+    depth: usize,
+    threads: usize,
+) -> (ParamMatrix, f64) {
+    let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), topo.n);
+    let mut backend = if depth == 0 {
+        SharedBackend::new(topo, d, &costs, d, Compression::None)
+    } else {
+        SharedBackend::with_depth(topo, d, &costs, d, Compression::None, depth)
+    };
+    let pool = WorkerPool::new(threads);
+    let mut params = ParamMatrix::random(&mut Rng::new(53), topo.n, d, 1.0);
+    let mut sim = 0.0;
+    let mut pending: VecDeque<PendingComm> = VecDeque::new();
+    for burst in 0..3u64 {
+        for _ in 0..h {
+            if depth == 0 {
+                sim += backend.gossip(&mut params, &pool).unwrap().stats.sim_seconds;
+            } else {
+                if pending.len() == depth {
+                    let oldest = pending.pop_front().unwrap();
+                    sim += backend.finish(&mut params, oldest).unwrap().stats.sim_seconds;
+                }
+                let p = unsafe { backend.gossip_async(&params, &pool).unwrap() }
+                    .expect("uncompressed shared backend supports async");
+                pending.push_back(p);
+            }
+        }
+        // The k·H boundary: drain everything, then the global barrier.
+        while let Some(oldest) = pending.pop_front() {
+            sim += backend.finish(&mut params, oldest).unwrap().stats.sim_seconds;
+        }
+        sim += backend.global_average(&mut params, &pool).unwrap().stats.sim_seconds;
+        perturb(&mut params, burst);
+    }
+    (params, sim)
+}
+
+#[test]
+fn backend_pipeline_matches_bsp_at_every_period_boundary() {
+    let (d, h) = (129, 5); // h > depth forces steady-state ring reuse
+    for mk in topologies() {
+        let topo = mk(6);
+        for threads in [1usize, 3] {
+            let (want, want_sim) = backend_replay(&topo, d, h, 0, threads);
+            for depth in [1usize, 2, 4] {
+                let (got, got_sim) = backend_replay(&topo, d, h, depth, threads);
+                assert_eq!(
+                    got.as_slice(),
+                    want.as_slice(),
+                    "{:?} depth={depth} t={threads}: pipelined schedule diverged from BSP",
+                    topo.kind
+                );
+                // Billing must follow the ISSUED round schedule too — on a
+                // time-varying topology a wrong round index shows up here
+                // even if the bits happen to agree.
+                assert_eq!(got_sim, want_sim, "{:?} depth={depth}: billing drifted", topo.kind);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trainer layer: pipeline_depth through TrainerOptions, checkpoint drain.
+// ---------------------------------------------------------------------------
+
+fn opts(n: usize, depth: usize, regime: Regime) -> TrainerOptions {
+    TrainerOptions {
+        algorithm: AlgorithmKind::GossipPga,
+        topology: Topology::one_peer_expo(n),
+        period: 4,
+        aga_init_period: 2,
+        aga_warmup: 4,
+        lr: LrSchedule::Const { lr: 0.2 },
+        momentum: 0.9,
+        nesterov: true,
+        seed: 29,
+        slowmo: Default::default(),
+        cost: CostModel::calibrated_resnet50(),
+        cost_dim: 25_500_000,
+        node_costs: None,
+        stealing: false,
+        pin: false,
+        pipeline_depth: depth,
+        log_every: 5,
+        threads: 2,
+        regime,
+        max_staleness: 0,
+        backend: BackendKind::Shared,
+        compression: Compression::None,
+        round_timeout: 0.0,
+        listen: "127.0.0.1:0".to_string(),
+    }
+}
+
+fn trainer(rt: &Arc<Runtime>, depth: usize, regime: Regime) -> Trainer {
+    let n = 4;
+    let (workload, init) = logreg_workload(rt.clone(), n, 256, true, 29).unwrap();
+    Trainer::new(workload, init, opts(n, depth, regime)).unwrap()
+}
+
+#[test]
+fn trainer_pipeline_depths_match_bsp_trajectory_bitwise() {
+    let rt = Arc::new(Runtime::load_default().expect("run `make artifacts` first"));
+    let steps = 14; // crosses several k·H boundaries
+    let mut bsp = trainer(&rt, 1, Regime::Bsp);
+    for _ in 0..steps {
+        bsp.step_once().unwrap();
+    }
+    let want_loss = bsp.global_loss().unwrap();
+    for depth in [1usize, 2, 4] {
+        let mut t = trainer(&rt, depth, Regime::Overlap);
+        for _ in 0..steps {
+            t.step_once().unwrap();
+        }
+        // global_loss drains first (eval is a drained boundary), so this is
+        // exactly the comparison the contract promises.
+        let got_loss = t.global_loss().unwrap();
+        assert_eq!(t.pending_rounds(), 0, "depth={depth}: eval left rounds in flight");
+        assert_eq!(
+            t.param_matrix().as_slice(),
+            bsp.param_matrix().as_slice(),
+            "depth={depth}: overlap trajectory diverged from BSP"
+        );
+        assert_eq!(got_loss, want_loss, "depth={depth}: loss diverged");
+        assert_eq!(t.sim_seconds(), bsp.sim_seconds(), "depth={depth}: clocks diverged");
+    }
+}
+
+#[test]
+fn mid_pipeline_checkpoint_drains_and_resumes_bit_exactly() {
+    // A checkpoint taken while a round is in flight must DRAIN the pipeline
+    // (completing the issued work — the snapshot is a BSP step boundary),
+    // not drop it; the restored run must continue on the exact bits and
+    // land where the uninterrupted run does.
+    let rt = Arc::new(Runtime::load_default().expect("run `make artifacts` first"));
+    for depth in [2usize, 4] {
+        let mut straight = trainer(&rt, depth, Regime::Overlap);
+        let mut interrupted = trainer(&rt, depth, Regime::Overlap);
+        // Step to a point where the overlap regime has a gossip in flight.
+        let mut saw_inflight = false;
+        for _ in 0..9 {
+            straight.step_once().unwrap();
+            interrupted.step_once().unwrap();
+            saw_inflight |= interrupted.pending_rounds() > 0;
+        }
+        assert!(saw_inflight, "schedule never overlapped — the test lost its subject");
+        let ck = interrupted.checkpoint().unwrap();
+        assert_eq!(interrupted.pending_rounds(), 0, "checkpoint must drain, not drop");
+        let mut resumed = trainer(&rt, depth, Regime::Overlap);
+        resumed.restore(&ck).unwrap();
+        for _ in 0..7 {
+            straight.step_once().unwrap();
+            interrupted.step_once().unwrap();
+            resumed.step_once().unwrap();
+        }
+        let _ = straight.global_loss().unwrap(); // drains all three
+        let _ = interrupted.global_loss().unwrap();
+        let _ = resumed.global_loss().unwrap();
+        assert_eq!(
+            interrupted.param_matrix().as_slice(),
+            straight.param_matrix().as_slice(),
+            "depth={depth}: checkpointing mid-run changed the trajectory"
+        );
+        assert_eq!(
+            resumed.param_matrix().as_slice(),
+            straight.param_matrix().as_slice(),
+            "depth={depth}: restore did not resume bit-exactly"
+        );
+        assert_eq!(resumed.gossip_clock(), straight.gossip_clock());
+    }
+}
+
+#[test]
+fn compressed_backend_keeps_its_sync_fallback_at_any_depth() {
+    // The compressed transmit pass is ordered (error-feedback state), so
+    // gossip_async declines regardless of the configured depth — the
+    // trainer falls back to the synchronous round and counts it.
+    let topo = Topology::ring(4);
+    let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), 4);
+    let mut backend =
+        SharedBackend::with_depth(&topo, 33, &costs, 33, Compression::TopK { frac: 0.5 }, 4);
+    let pool = WorkerPool::new(1);
+    let params = ParamMatrix::random(&mut Rng::new(3), 4, 33, 1.0);
+    assert!(!backend.supports_overlap());
+    let issued = unsafe { backend.gossip_async(&params, &pool).unwrap() };
+    assert!(issued.is_none(), "compressed transmit must decline async issue");
+}
+
+// ---------------------------------------------------------------------------
+// BENCH_8 schema gate (same pattern as transport.rs / BENCH_7).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bench_eight_schema_holds_when_the_artifact_exists() {
+    // The bench may not have run on this box; when BENCH_8.json IS there,
+    // hold it to the schema EXPERIMENTS.md §Hot path reads.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_8.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!("BENCH_8.json absent — run `cargo bench --bench perf_hotpath` to emit it");
+        return;
+    };
+    let doc = Json::parse(&text).expect("BENCH_8.json parses");
+    assert_eq!(
+        doc.get("bench").and_then(|j| match j {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }),
+        Some("hotpath_kernel_pin_pipeline")
+    );
+    for key in ["kernel_rows", "pin_rows", "pipeline_rows"] {
+        let Some(Json::Arr(rows)) = doc.get(key) else {
+            panic!("BENCH_8.json missing array '{key}'");
+        };
+        assert!(!rows.is_empty(), "'{key}' must not be empty");
+        for row in rows {
+            for field in match key {
+                "kernel_rows" => vec!["kernel", "d", "deg", "mean_seconds", "bit_equal"],
+                "pin_rows" => vec!["pinned", "threads", "d", "mean_seconds", "bit_equal"],
+                _ => vec!["depth", "rounds", "d", "mean_seconds", "bit_equal"],
+            } {
+                assert!(row.get(field).is_some(), "{key} row missing '{field}'");
+            }
+            // The in-bench bit-equality assertions must have actually held.
+            assert_eq!(row.get("bit_equal"), Some(&Json::Bool(true)), "{key}: bit_equal");
+        }
+    }
+}

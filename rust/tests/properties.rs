@@ -387,6 +387,8 @@ fn trainer_opts(
         cost_dim: 25_500_000,
         node_costs: None,
         stealing: false,
+        pin: false,
+        pipeline_depth: 1,
         log_every: 5,
         threads,
         regime: Regime::Bsp,

@@ -149,6 +149,8 @@ fn opts(algo: AlgorithmKind, n: usize, backend: BackendKind, round_timeout: f64)
         cost_dim: 25_500_000,
         node_costs: None,
         stealing: false,
+        pin: false,
+        pipeline_depth: 1,
         log_every: 5,
         threads: 2,
         regime: Regime::Bsp,

@@ -234,6 +234,8 @@ fn opts(n: usize, threads: usize, costs: Option<NodeCosts>) -> TrainerOptions {
         log_every: 5,
         threads,
         stealing: false,
+        pin: false,
+        pipeline_depth: 1,
         regime: Regime::Bsp,
         max_staleness: 0,
         backend: BackendKind::Shared,

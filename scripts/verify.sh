@@ -39,6 +39,13 @@
 #      checkpoint-v7 acceptance path, and the BENCH_7.json schema gate
 #      (the bit-equality replay needs no AOT artifacts; the trainer-level
 #      fault tests do)
+#  10. hot-path smoke at PROPTEST_CASES=16: the kernel-equivalence property
+#      suite (blocked/vectorized mix_row_src == the naive scalar reference,
+#      bit for bit, across every row-shape arm and the MIX_BLOCK boundary)
+#      and the pipelining suite (depth {1,2,4} chained async gossip ==
+#      BSP at every k*H / eval / checkpoint drain on mixer, backend and
+#      trainer layers, plus the BENCH_8.json schema gate; the kernel and
+#      mixer/backend layers need no AOT artifacts)
 #
 # Usage: scripts/verify.sh [--fast]
 #   --fast   sets GOSSIP_PGA_FAST=1 so bench-derived tests run at reduced
@@ -89,5 +96,11 @@ GOSSIP_PGA_FAST=1 cargo bench --bench tab17_comm_overhead
 
 echo "==> transport plane: tcp bit-equality + round drop/rejoin/checkpoint-v7 (loopback, port 0)"
 PROPTEST_CASES=16 GOSSIP_PGA_FAST=1 cargo test -q --test transport
+
+echo "==> hot path: blocked-kernel bit-equivalence properties"
+PROPTEST_CASES=16 cargo test -q --test mix_kernel
+
+echo "==> hot path: depth-k gossip pipelining == BSP at every drained boundary"
+PROPTEST_CASES=16 cargo test -q --test pipeline
 
 echo "==> verify OK"
