@@ -26,10 +26,14 @@
 //!     worker pool — asserts bit-equal finals
 //!   * gossip pipelining: depth {1, 2, 4} chained async rounds vs the
 //!     synchronous sequence — asserts bit-equal finals + clocks
+//!   * overlap on the wire: bus + tcp async gossip (epoch-tagged frames)
+//!     at depth {1, 2, 4} vs the same burst run BSP — asserts bit-equal
+//!     finals, equal clocks and zero dropped frames
 //!
 //! The sweep and transport rows land in BENCH_7.json; the kernel, pinning
-//! and pipelining rows land in BENCH_8.json. Both are anchored at
-//! CARGO_MANIFEST_DIR (not the CWD — `cargo bench` runs from wherever).
+//! and pipelining rows land in BENCH_8.json; the overlap-on-the-wire rows
+//! land in BENCH_9.json. All are anchored at CARGO_MANIFEST_DIR (not the
+//! CWD — `cargo bench` runs from wherever).
 //!
 //!     cargo bench --bench perf_hotpath
 
@@ -82,6 +86,96 @@ fn trainer_opts(n: usize, threads: usize, regime: Regime) -> TrainerOptions {
         round_timeout: 0.0,
         listen: "127.0.0.1:0".to_string(),
     }
+}
+
+/// BENCH_9 helper: the same comm-only burst, synchronous (BSP) then
+/// overlapped at depth {1, 2, 4}, on one message-passing wire. Issue keeps
+/// the ring at most `depth` deep (finish the oldest round when full), then
+/// a full FIFO drain ends the burst — the k·H-boundary discipline. Every
+/// run covers the same total round count from the same start, so all
+/// finals must be bit-identical to the synchronous reference (asserted
+/// in-bench; the rows record that the assert held).
+#[allow(clippy::too_many_arguments)]
+fn overlap_wire_burst<W: gossip_pga::collective::Wire>(
+    t: &mut Table,
+    rows: &mut Vec<Json>,
+    backend: &str,
+    mk: impl Fn(usize) -> anyhow::Result<gossip_pga::comm::BusCore<W>>,
+    init: &ParamMatrix,
+    pool: &WorkerPool,
+    burst: usize,
+    warmup: usize,
+    iters: usize,
+) -> anyhow::Result<()> {
+    use std::collections::VecDeque;
+    let (n, dd) = (init.n(), init.d());
+    let mut push_row = |mode: &str, depth: usize, s: &gossip_pga::harness::Stats| {
+        rows.push(jsonio::obj(vec![
+            ("backend", Json::Str(backend.into())),
+            ("mode", Json::Str(mode.into())),
+            ("depth", Json::Num(depth as f64)),
+            ("rounds", Json::Num(burst as f64)),
+            ("n", Json::Num(n as f64)),
+            ("d", Json::Num(dd as f64)),
+            ("mean_seconds", Json::Num(s.mean)),
+            ("p95_seconds", Json::Num(s.p95)),
+            ("bit_equal", Json::Bool(true)),
+        ]));
+    };
+    let mut sync_b = mk(1)?;
+    let mut p_sync = init.clone();
+    let s_sync = measure(warmup, iters, || {
+        for _ in 0..burst {
+            sync_b.gossip(&mut p_sync, pool).unwrap();
+        }
+    });
+    t.rowv(vec![
+        format!("overlap wire, {backend} bsp"),
+        format!("one-peer-expo n = {n}, d = {dd}, {burst} rounds/burst"),
+        fmt_duration(s_sync.mean),
+        fmt_duration(s_sync.p95),
+        format!("{:.1} rounds/s", burst as f64 / s_sync.mean),
+    ]);
+    push_row("bsp", 1, &s_sync);
+    for depth in [1usize, 2, 4] {
+        let mut b = mk(depth)?;
+        let mut p = init.clone();
+        let s = measure(warmup, iters, || {
+            let mut handles = VecDeque::new();
+            for _ in 0..burst {
+                if !b.pipeline_ready() {
+                    let oldest = handles.pop_front().unwrap();
+                    b.finish(&mut p, oldest).unwrap();
+                }
+                let pend = unsafe { b.gossip_async(&p, pool).unwrap() }
+                    .expect("uncompressed wire backends overlap");
+                handles.push_back(pend);
+            }
+            while let Some(h) = handles.pop_front() {
+                b.finish(&mut p, h).unwrap();
+            }
+        });
+        assert_eq!(
+            b.gossip_clock(),
+            sync_b.gossip_clock(),
+            "{backend} depth {depth}: overlapped run covered a different round count"
+        );
+        assert_eq!(p, p_sync, "{backend} depth {depth}: overlapped rounds diverged from BSP");
+        assert_eq!(
+            b.total().stale_frames_dropped,
+            0,
+            "{backend} depth {depth}: a clean overlapped run dropped frames"
+        );
+        t.rowv(vec![
+            format!("overlap wire, {backend} depth {depth}"),
+            format!("one-peer-expo n = {n}, d = {dd}, {burst} rounds/burst"),
+            fmt_duration(s.mean),
+            fmt_duration(s.p95),
+            format!("{:.2}x vs bsp", s_sync.mean / s.mean),
+        ]);
+        push_row("overlap", depth, &s);
+    }
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -582,6 +676,81 @@ fn main() -> anyhow::Result<()> {
             ("pipeline_rows", Json::Arr(std::mem::take(&mut pipeline_rows))),
         ]);
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_8.json");
+        std::fs::write(&path, doc.dump() + "\n")?;
+        println!("wrote {}", path.display());
+    }
+
+    // --- BENCH_9: overlap on the wire — bus + tcp async gossip vs BSP -------
+    // The ISSUE 9 headline rows: the message-passing backends running the
+    // same comm-only burst synchronously and overlapped at depth {1, 2, 4}.
+    // The overlapped runs must stay bit-identical to BSP at the drain and
+    // drop zero frames (epoch hygiene on a clean run); the wall-clock
+    // ratio is what `--overlap --pipeline-depth K` buys once round t's
+    // receive+mix hides behind round t+1's sends.
+    let mut overlap_rows: Vec<Json> = Vec::new();
+    {
+        let n = 16;
+        let dd = if fast { 250_000usize } else { 1_000_000 };
+        let burst = 8usize;
+        let (warmup, iters) = (1usize, 5);
+        let topo = Topology::one_peer_expo(n);
+        let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), n);
+        let wire_pool = WorkerPool::new(threads_avail.clamp(2, 8));
+        let init = random_matrix(&mut rng, n, dd);
+        overlap_wire_burst(
+            &mut t,
+            &mut overlap_rows,
+            "bus",
+            |depth| {
+                Ok(BusBackend::with_depth(
+                    &topo,
+                    dd,
+                    &costs,
+                    25_500_000,
+                    Compression::None,
+                    false,
+                    depth,
+                ))
+            },
+            &init,
+            &wire_pool,
+            burst,
+            warmup,
+            iters,
+        )?;
+        overlap_wire_burst(
+            &mut t,
+            &mut overlap_rows,
+            "tcp",
+            |depth| {
+                TcpBackend::new_loopback_with_depth(
+                    &topo,
+                    dd,
+                    &costs,
+                    25_500_000,
+                    Compression::None,
+                    false,
+                    "127.0.0.1:0",
+                    depth,
+                )
+            },
+            &init,
+            &wire_pool,
+            burst,
+            warmup,
+            iters,
+        )?;
+    }
+
+    // BENCH_9: the overlap-on-the-wire rows, same anchoring as BENCH_7/8,
+    // written before the PJRT sections so artifact-free boxes still emit it.
+    {
+        let doc = jsonio::obj(vec![
+            ("bench", Json::Str("overlap_wire".into())),
+            ("fast", Json::Bool(fast)),
+            ("overlap_rows", Json::Arr(std::mem::take(&mut overlap_rows))),
+        ]);
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_9.json");
         std::fs::write(&path, doc.dump() + "\n")?;
         println!("wrote {}", path.display());
     }

@@ -92,7 +92,9 @@ pub fn stalled_peer(text: &str) -> Option<usize> {
 /// receives with parking, an optional stalled-peer deadline, and epoch
 /// tagging for clean round retries. [`crate::comm::BusCore`] is generic
 /// over this, so every transport runs the exact same collective phases.
-pub trait Wire: Send {
+/// (`'static` because the overlapped gossip path shards endpoint chunks
+/// into pool jobs that outlive the issuing call's borrows.)
+pub trait Wire: Send + 'static {
     fn rank(&self) -> usize;
     /// Out-routes currently held (regression tests count these to pin the
     /// lazy-edge contract).
@@ -112,11 +114,23 @@ pub trait Wire: Send {
     /// Enter round `epoch`: parked frames are cleared and in-flight frames
     /// from older epochs are discarded on receipt.
     fn reset_epoch(&mut self, epoch: u32);
+    /// Re-tag without clearing: subsequent sends stamp `epoch` and receives
+    /// require it, but frames already queued or parked survive. This is the
+    /// overlapped-gossip stamp — a send job advances its endpoint to the
+    /// issued round's tag while legitimate frames for that very round may
+    /// already sit in the inbox (delivered by a peer's earlier-running send
+    /// job), so a clearing reset would destroy live data.
+    fn set_epoch(&mut self, epoch: u32);
+    /// Cumulative count of frames discarded on receipt because their epoch
+    /// tag did not match the receiver's current round — the droppings of
+    /// aborted or already-drained rounds. Feeds `CommStats::stale_frames_dropped`.
+    fn stale_drops(&self) -> u64;
 }
 
 /// Deadline-aware tagged receive shared by both transports: park
-/// out-of-order arrivals, discard stale-epoch frames, and surface a
-/// stalled peer as a typed [`RecvTimeout`] instead of blocking forever.
+/// out-of-order arrivals, discard stale-epoch frames (counting each one
+/// into `stale`), and surface a stalled peer as a typed [`RecvTimeout`]
+/// instead of blocking forever.
 pub(crate) fn recv_tagged(
     rank: usize,
     receiver: &Receiver<Msg>,
@@ -124,6 +138,7 @@ pub(crate) fn recv_tagged(
     epoch: u32,
     deadline: Option<Duration>,
     from: usize,
+    stale: &mut u64,
 ) -> Result<Vec<f32>> {
     if let Some(pos) = parked.iter().position(|(src, e, _)| *src == from && *e == epoch) {
         return Ok(parked.remove(pos).2);
@@ -149,7 +164,8 @@ pub(crate) fn recv_tagged(
             }
         };
         if e != epoch {
-            continue; // a dropped round's leftover frame
+            *stale += 1;
+            continue; // a dropped or already-drained round's leftover frame
         }
         if src == from {
             return Ok(payload);
@@ -178,6 +194,8 @@ pub struct Endpoint {
     /// and message count.
     pub scalars_sent: u64,
     pub msgs_sent: u64,
+    /// Frames discarded on receipt for carrying a stale epoch tag.
+    pub stale_drops: u64,
 }
 
 /// Build a fully-connected bus of `n` endpoints (all-to-all edges).
@@ -235,6 +253,7 @@ pub fn bus_with_handles(n: usize, out_edges: &[Vec<usize>]) -> (Vec<Endpoint>, V
                 recv_deadline: None,
                 scalars_sent: 0,
                 msgs_sent: 0,
+                stale_drops: 0,
             }
         })
         .collect();
@@ -272,7 +291,15 @@ impl Endpoint {
     /// deadline armed, a silent `from` yields a typed [`RecvTimeout`]
     /// instead of parking this thread forever.
     pub fn recv_from(&mut self, from: usize) -> Result<Vec<f32>> {
-        recv_tagged(self.rank, &self.receiver, &mut self.parked, self.epoch, self.recv_deadline, from)
+        recv_tagged(
+            self.rank,
+            &self.receiver,
+            &mut self.parked,
+            self.epoch,
+            self.recv_deadline,
+            from,
+            &mut self.stale_drops,
+        )
     }
 
     /// Arm (`Some`) or disarm (`None`) the stalled-peer receive deadline.
@@ -286,6 +313,12 @@ impl Endpoint {
         self.epoch = epoch;
         self.parked.clear();
         while self.receiver.try_recv().is_ok() {}
+    }
+
+    /// Re-tag without clearing (see [`Wire::set_epoch`]): queued and parked
+    /// frames survive; mismatched tags are filtered (and counted) on receipt.
+    pub fn set_epoch(&mut self, epoch: u32) {
+        self.epoch = epoch;
     }
 
     /// Add an out-route to `to` after construction (idempotent) — the
@@ -328,6 +361,12 @@ impl Wire for Endpoint {
     }
     fn reset_epoch(&mut self, epoch: u32) {
         Endpoint::reset_epoch(self, epoch)
+    }
+    fn set_epoch(&mut self, epoch: u32) {
+        Endpoint::set_epoch(self, epoch)
+    }
+    fn stale_drops(&self) -> u64 {
+        self.stale_drops
     }
 }
 
@@ -875,10 +914,35 @@ mod tests {
         a.reset_epoch(1);
         a.send(1, vec![2.0]).unwrap(); // epoch 1: the retry's frame
         assert_eq!(b.recv_from(0).unwrap(), vec![2.0], "stale frame skipped");
+        assert_eq!(b.stale_drops, 1, "the discard is counted");
         // Nothing else queued: with a deadline armed the next recv times out
         // instead of replaying the stale payload.
         b.set_recv_deadline(Some(Duration::from_millis(20)));
         assert!(b.recv_from(0).unwrap_err().downcast_ref::<RecvTimeout>().is_some());
+        assert_eq!(b.stale_drops, 1, "a timeout drops nothing");
+    }
+
+    #[test]
+    fn set_epoch_retags_without_clearing_queued_frames() {
+        // The overlapped-gossip stamp: a peer's send job may deliver a
+        // round-t frame before our own endpoint is re-tagged to t. A
+        // clearing reset would destroy it; set_epoch must not.
+        let mut eps = bus(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.set_epoch(5);
+        a.send(1, vec![42.0]).unwrap(); // round-5 frame, already in b's inbox
+        b.set_epoch(5); // late re-tag: frame must survive
+        assert_eq!(b.recv_from(0).unwrap(), vec![42.0]);
+        assert_eq!(b.stale_drops, 0);
+        // ...while a genuinely stale frame is still filtered and counted.
+        a.set_epoch(4);
+        a.send(1, vec![9.0]).unwrap();
+        a.set_epoch(6);
+        a.send(1, vec![10.0]).unwrap();
+        b.set_epoch(6);
+        assert_eq!(b.recv_from(0).unwrap(), vec![10.0]);
+        assert_eq!(b.stale_drops, 1);
     }
 
     #[test]

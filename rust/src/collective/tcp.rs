@@ -130,6 +130,8 @@ pub struct TcpEndpoint {
     recv_deadline: Option<Duration>,
     pub scalars_sent: u64,
     pub msgs_sent: u64,
+    /// Frames discarded on receipt for carrying a stale epoch tag.
+    pub stale_drops: u64,
 }
 
 impl TcpEndpoint {
@@ -178,7 +180,15 @@ impl TcpEndpoint {
     /// others); a deadline turns a silent peer into a typed
     /// [`super::RecvTimeout`].
     pub fn recv_from(&mut self, from: usize) -> Result<Vec<f32>> {
-        recv_tagged(self.rank, &self.receiver, &mut self.parked, self.epoch, self.recv_deadline, from)
+        recv_tagged(
+            self.rank,
+            &self.receiver,
+            &mut self.parked,
+            self.epoch,
+            self.recv_deadline,
+            from,
+            &mut self.stale_drops,
+        )
     }
 
     pub fn set_recv_deadline(&mut self, deadline: Option<Duration>) {
@@ -189,6 +199,12 @@ impl TcpEndpoint {
         self.epoch = epoch;
         self.parked.clear();
         while self.receiver.try_recv().is_ok() {}
+    }
+
+    /// Re-tag without clearing (see [`Wire::set_epoch`]): queued and parked
+    /// frames survive; mismatched tags are filtered (and counted) on receipt.
+    pub fn set_epoch(&mut self, epoch: u32) {
+        self.epoch = epoch;
     }
 
     pub fn bytes_sent(&self) -> u64 {
@@ -217,6 +233,12 @@ impl Wire for TcpEndpoint {
     }
     fn reset_epoch(&mut self, epoch: u32) {
         TcpEndpoint::reset_epoch(self, epoch)
+    }
+    fn set_epoch(&mut self, epoch: u32) {
+        TcpEndpoint::set_epoch(self, epoch)
+    }
+    fn stale_drops(&self) -> u64 {
+        self.stale_drops
     }
 }
 
@@ -307,6 +329,7 @@ pub fn tcp_loopback(
             recv_deadline: None,
             scalars_sent: 0,
             msgs_sent: 0,
+            stale_drops: 0,
         })
         .collect();
     for (rank, targets) in out_edges.iter().enumerate() {
@@ -422,5 +445,6 @@ mod tests {
         // TCP preserves stream order, so the stale frame arrives first and
         // must be filtered, not parked.
         assert_eq!(b.recv_from(0).unwrap(), vec![2.0]);
+        assert_eq!(b.stale_drops, 1, "the on-the-wire discard is counted");
     }
 }

@@ -36,6 +36,25 @@
 //! itself remains available as [`crate::collective::ring_all_reduce`] for
 //! the bench suite.
 //!
+//! §Overlap: `gossip_async` issues a round's sends immediately and defers
+//! the receive+mix to the matching [`CommBackend::finish`], so the wire's
+//! latency runs under the caller's compute (the GossipGraD/SGP overlap).
+//! The core keeps a depth-K ring of receive planes and a FIFO of in-flight
+//! rounds; each issue bumps the frame epoch, so a delayed frame from an
+//! aborted or already-drained round is discarded on receipt and counted
+//! ([`CommStats::stale_frames_dropped`]) instead of corrupting a live
+//! round. Chained issues gate their sends on the predecessor's completion
+//! latch and read its output slot, so K overlapped rounds drain to exactly
+//! the K-fold synchronous trajectory, bit for bit — same `mix_row_src`
+//! kernel, same order. Billing is analytic at issue time (the round the
+//! *issue* schedule runs, per the PR 8 convention) and is the same
+//! expression `charge_since` bills on measured counters: every issued send
+//! delivers in-process, so the analytic and measured charges agree.
+//! Compressed transmit keeps error-feedback residual state that must
+//! update in transmit order, so `gossip_async` declines (`Ok(None)`) and
+//! the trainer counts a fallback round. Membership changes and synchronous
+//! collectives are refused while rounds are in flight — drain first.
+//!
 //! §Membership: the round state machine ([`crate::coordinator::rounds`])
 //! drops a peer that misses its receive deadline by calling
 //! [`CommBackend::drop_node`]: the dead node's weight in every *other*
@@ -53,19 +72,21 @@
 //! busiest node's charge (the pre-virtual-time scalar bill on a
 //! homogeneous table, bit for bit).
 
+use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use super::{
     export_residuals, import_residuals, BackendKind, CommBackend, CommCharge, CommStats,
-    Compression,
+    Compression, PendingComm, PendingPayload,
 };
 use crate::collective::{bus_with_handles, ring_chunk_bounds, Endpoint, Wire};
 use crate::compress::{Codec, ErrorFeedback};
 use crate::coordinator::mixer::{mix_row_src, weight_rows_f32};
 use crate::costmodel::{BarrierScope, NodeCosts};
-use crate::exec::WorkerPool;
+use crate::exec::{Latch, Ticket, WorkerPool};
 use crate::params::ParamMatrix;
 use crate::topology::Topology;
 
@@ -90,6 +111,26 @@ struct LiveView {
     ranks: Vec<usize>,
     /// `ring_chunk_bounds(ranks.len(), d)` — the degraded chunking.
     bounds: Vec<usize>,
+}
+
+/// One issued-but-undrained overlapped gossip round (§Overlap).
+struct WireFlight {
+    /// Ring slot whose buffer the round's mix writes.
+    slot: usize,
+    /// Arrives when the round's receive+mix jobs have all finished; the
+    /// successor round's send jobs gate on it before reading the slot.
+    done: Arc<Latch>,
+    /// Data address of `ring[slot]` at issue time (pairing check against
+    /// the caller's [`PendingWireRound`]).
+    addr: usize,
+}
+
+/// The caller-held half of an overlapped bus/tcp gossip round: the pool
+/// ticket for its send and receive+mix jobs plus the output-slot address
+/// that pairs it with the backend's own in-flight FIFO entry.
+pub struct PendingWireRound {
+    ticket: Ticket,
+    slot_addr: usize,
 }
 
 /// The union of the gossip transmit sets over all rounds — the edge set a
@@ -123,7 +164,19 @@ pub struct BusCore<W: Wire> {
     /// Membership overlay; `None` while every node is alive.
     live: Option<LiveView>,
     endpoints: Vec<W>,
-    scratch: ParamMatrix,
+    /// Depth-K ring of receive planes: slot `head` is the next issue's
+    /// output buffer and doubles as the synchronous collectives' scratch
+    /// (sync ops never advance `head`). A finished round swaps its slot's
+    /// buffer into `params` (O(1) pointer swap).
+    ring: Vec<ParamMatrix>,
+    head: usize,
+    /// Pipeline depth K (`--pipeline-depth`); 1 is the plain double buffer.
+    depth: usize,
+    /// Issued-but-undrained overlapped rounds, oldest first (FIFO drain).
+    in_flight: VecDeque<WireFlight>,
+    /// Sum of per-endpoint `stale_drops()` already folded into `total`
+    /// (delta accounting; `restore_total` re-baselines it).
+    stale_seen: u64,
     /// Healthy global-average chunk boundaries (`ring_chunk_bounds`).
     bounds: Vec<usize>,
     /// `0..n`, the healthy alive-rank list (so one code path serves both).
@@ -165,6 +218,22 @@ impl BusCore<Endpoint> {
         compression: Compression,
         with_global: bool,
     ) -> BusBackend {
+        BusBackend::with_depth(topo, d, costs, cost_dim, compression, with_global, 1)
+    }
+
+    /// [`BusBackend::new`] with an async gossip pipeline admitting up to
+    /// `depth` overlapped rounds in flight (`--pipeline-depth`); depth 1 is
+    /// the classic double buffer, bit for bit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_depth(
+        topo: &Topology,
+        d: usize,
+        costs: &NodeCosts,
+        cost_dim: usize,
+        compression: Compression,
+        with_global: bool,
+        depth: usize,
+    ) -> BusBackend {
         let n = topo.n;
         let edges = gossip_union_edges(topo);
         let (endpoints, txs) = bus_with_handles(n, &edges);
@@ -192,6 +261,7 @@ impl BusCore<Endpoint> {
             endpoints,
             connector,
             with_global,
+            depth,
         )
     }
 }
@@ -210,7 +280,9 @@ impl<W: Wire> BusCore<W> {
         endpoints: Vec<W>,
         connector: Option<Connector<W>>,
         global_allowed: bool,
+        depth: usize,
     ) -> BusCore<W> {
+        let depth = depth.max(1);
         let n = topo.n;
         debug_assert_eq!(costs.n(), n, "cost table must cover every node");
         debug_assert_eq!(endpoints.len(), n, "one endpoint per node");
@@ -229,7 +301,11 @@ impl<W: Wire> BusCore<W> {
             outn,
             live: None,
             endpoints,
-            scratch: ParamMatrix::zeros(n, d),
+            ring: (0..depth).map(|_| ParamMatrix::zeros(n, d)).collect(),
+            head: 0,
+            depth,
+            in_flight: VecDeque::new(),
+            stale_seen: 0,
             bounds: ring_chunk_bounds(n, d),
             all_ranks: (0..n).collect(),
             global_allowed,
@@ -363,10 +439,41 @@ impl<W: Wire> BusCore<W> {
                 sim_seconds: critical,
                 barrier_wait: 0.0,
                 fallback_rounds: 0,
+                stale_frames_dropped: 0,
             },
             node_seconds,
             barrier,
         }
+    }
+
+    /// Fold newly observed endpoint stale-frame discards into `total`
+    /// (delta accounting against `stale_seen`).
+    fn harvest_stale(&mut self) {
+        let now: u64 = self.endpoints.iter().map(|e| e.stale_drops()).sum();
+        self.total.stale_frames_dropped += now - self.stale_seen;
+        self.stale_seen = now;
+    }
+
+    /// Whether the transmit path compresses (`build` makes the per-node
+    /// codecs all-or-nothing).
+    fn compressed(&self) -> bool {
+        self.compressors[0].is_some()
+    }
+
+    /// Whether the async pipeline can accept another issued round.
+    pub fn pipeline_ready(&self) -> bool {
+        self.in_flight.len() < self.depth
+    }
+
+    /// Overlapped rounds currently in flight.
+    pub fn in_flight_rounds(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Rounds issued so far (drained + in flight) — the clock the NEXT
+    /// issued round runs at, which is what overlapped billing follows.
+    pub fn issued_clock(&self) -> usize {
+        self.gossip_clock + self.in_flight.len()
     }
 
     fn gossip_inner(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommCharge> {
@@ -377,6 +484,7 @@ impl<W: Wire> BusCore<W> {
         let before = self.traffic_snapshot();
         let t = pool.shards(n);
         let per = (n + t - 1) / t;
+        let head = self.head;
         let alive = &self.alive;
         let muted = &self.muted;
         // Phase A — transmit: each node compresses once and ships the
@@ -448,7 +556,7 @@ impl<W: Wire> BusCore<W> {
             pool.run(
                 self.endpoints
                     .chunks_mut(per)
-                    .zip(self.scratch.row_blocks_mut(per))
+                    .zip(self.ring[head].row_blocks_mut(per))
                     .enumerate()
                     .map(|(ci, (eps, block))| {
                         move || {
@@ -496,10 +604,11 @@ impl<W: Wire> BusCore<W> {
                     .collect(),
             )?;
         }
-        params.swap_data(&mut self.scratch);
+        params.swap_data(&mut self.ring[head]);
         self.gossip_clock += 1;
         let charge = self.charge_since(&before, BarrierScope::Neighborhood { round });
         self.total.merge(charge.stats);
+        self.harvest_stale();
         Ok(charge)
     }
 
@@ -568,7 +677,7 @@ impl<W: Wire> BusCore<W> {
             pool.run(
                 self.endpoints
                     .chunks_mut(per)
-                    .zip(self.scratch.row_blocks_mut(per))
+                    .zip(self.ring[head].row_blocks_mut(per))
                     .enumerate()
                     .map(|(ci, (eps, block))| {
                         move || {
@@ -654,7 +763,7 @@ impl<W: Wire> BusCore<W> {
             pool.run(
                 self.endpoints
                     .chunks_mut(per)
-                    .zip(self.scratch.row_blocks_mut(per))
+                    .zip(self.ring[head].row_blocks_mut(per))
                     .enumerate()
                     .map(|(ci, (eps, block))| {
                         move || {
@@ -683,9 +792,10 @@ impl<W: Wire> BusCore<W> {
                     .collect(),
             )?;
         }
-        params.swap_data(&mut self.scratch);
+        params.swap_data(&mut self.ring[head]);
         let charge = self.charge_since(&before, BarrierScope::Global);
         self.total.merge(charge.stats);
+        self.harvest_stale();
         Ok(charge)
     }
 
@@ -711,6 +821,280 @@ impl<W: Wire> BusCore<W> {
         ensure!(payload.len() == d, "pushed row carries {} of {d} scalars", payload.len());
         Ok((payload, CommStats { scalars_sent: d as u64, msgs: 1, ..Default::default() }))
     }
+
+    /// Issue one overlapped gossip round (§Overlap): the caller must keep
+    /// `params` unchanged until the whole chain is drained. Sends go out as
+    /// soon as a worker picks up the send wave; the receive+mix wave is
+    /// gated behind it by a latch and lands in `ring[head]`.
+    unsafe fn gossip_async_inner(
+        &mut self,
+        params: &ParamMatrix,
+        pool: &WorkerPool,
+    ) -> Result<Option<PendingComm>> {
+        debug_assert!(params.n() == self.n && params.d() == self.d);
+        debug_assert!(self.pipeline_ready(), "checked by the trait wrapper");
+        let n = self.n;
+        let d = self.d;
+        let round = self.issued_clock() % self.rounds;
+        // Every issued round gets a fresh frame epoch: a delayed frame
+        // from an aborted or already-drained round can then never be
+        // misattributed to a live round — it is discarded on receipt and
+        // counted (`stale_frames_dropped`).
+        self.epoch = self.epoch.wrapping_add(1);
+        let epoch = self.epoch;
+        let slot = self.head;
+
+        // Chained issue: read the predecessor's output slot, gated on its
+        // completion latch; an unchained round reads `params` directly.
+        let (src_addr, prev) = match self.in_flight.back() {
+            Some(p) => (p.addr, Some(p.done.clone())),
+            None => (params.as_slice().as_ptr() as usize, None),
+        };
+        let dst_addr = self.ring[slot].as_mut_slice().as_mut_ptr() as usize;
+
+        let t = pool.shards(n);
+        let per = (n + t - 1) / t;
+        let chunks = (n + per - 1) / per;
+
+        // Tables for the ISSUED round, captured as raw addresses; the
+        // membership overlay cannot move underneath the jobs because
+        // drop/rejoin are refused while rounds are in flight.
+        let outn_addr = (match &self.live {
+            Some(v) => &v.outn[round],
+            None => &self.outn[round],
+        }) as *const Vec<Vec<usize>> as usize;
+        let rows_addr = (match &self.live {
+            Some(v) => &v.rows[round],
+            None => &self.rows[round],
+        }) as *const Vec<Vec<(usize, f32)>> as usize;
+        let alive_addr = self.alive.as_ptr() as usize;
+        let muted_addr = self.muted.as_ptr() as usize;
+        let ep_addr = self.endpoints.as_mut_ptr() as usize;
+
+        // Two latch-gated waves in ONE FIFO submission:
+        //   wave A (send jobs)  — stamp the round's epoch on every endpoint
+        //     in the chunk, then ship each live node's source row;
+        //   wave B (recv+mix)   — gate on `sends` (both waves touch the
+        //     same endpoints, and receives must observe the round's epoch
+        //     with every same-round send already issued), then receive
+        //     in-neighbors and run the one `mix_row_src` kernel.
+        // FIFO dequeue makes this deadlock-free at any pool size: every
+        // wave-A job is picked up before any wave-B job, so a worker
+        // parked on `sends` always leaves workers finishing wave A (and
+        // the size-1 pool runs the batch inline in submission order).
+        let sends = Arc::new(Latch::new(chunks));
+        let done = Arc::new(Latch::new(chunks));
+        let mut jobs: Vec<Box<dyn FnOnce() -> Result<()> + Send>> =
+            Vec::with_capacity(2 * chunks);
+        for ci in 0..chunks {
+            let sends = sends.clone();
+            let prev = prev.clone();
+            jobs.push(Box::new(move || {
+                let _arrive = sends.arrive_on_drop();
+                if let Some(gate) = &prev {
+                    gate.wait();
+                }
+                let lo = ci * per;
+                let hi = ((ci + 1) * per).min(n);
+                // SAFETY: endpoints[lo..hi] are touched by exactly this
+                // job until `sends` opens; `src` is either the issue-time
+                // `params` (caller-pinned until drain) or the predecessor
+                // round's output slot, fully mixed once `prev` arrived;
+                // the tables are immutable while rounds are in flight.
+                let eps = unsafe {
+                    std::slice::from_raw_parts_mut((ep_addr as *mut W).add(lo), hi - lo)
+                };
+                let outn = unsafe { &*(outn_addr as *const Vec<Vec<usize>>) };
+                let alive = unsafe { std::slice::from_raw_parts(alive_addr as *const bool, n) };
+                let muted = unsafe { std::slice::from_raw_parts(muted_addr as *const bool, n) };
+                let src = unsafe { std::slice::from_raw_parts(src_addr as *const f32, n * d) };
+                for (k, ep) in eps.iter_mut().enumerate() {
+                    let j = lo + k;
+                    // Every endpoint — dead and muted included — advances
+                    // to the round's tag, so its receive filter stays in
+                    // step with the pipeline.
+                    ep.set_epoch(epoch);
+                    if !alive[j] || muted[j] {
+                        continue;
+                    }
+                    let targets = &outn[j];
+                    if targets.is_empty() {
+                        continue;
+                    }
+                    let x = &src[j * d..(j + 1) * d];
+                    let mut payload = x.to_vec();
+                    let last = targets.len() - 1;
+                    for (ti, &to) in targets.iter().enumerate() {
+                        let msg = if ti == last {
+                            std::mem::take(&mut payload)
+                        } else {
+                            payload.clone()
+                        };
+                        ep.send_billed(to, msg, d as u64)?;
+                    }
+                }
+                Ok(())
+            }));
+        }
+        for ci in 0..chunks {
+            let sends = sends.clone();
+            let done = done.clone();
+            jobs.push(Box::new(move || {
+                let _arrive = done.arrive_on_drop();
+                sends.wait();
+                let lo = ci * per;
+                let hi = ((ci + 1) * per).min(n);
+                // SAFETY: same shard discipline as wave A; `dst` rows
+                // [lo, hi) belong to exactly this job, and the slot's
+                // buffer is not reused until this round's `done` gate has
+                // opened for its successor and the FIFO drain returns it.
+                let eps = unsafe {
+                    std::slice::from_raw_parts_mut((ep_addr as *mut W).add(lo), hi - lo)
+                };
+                let rows = unsafe { &*(rows_addr as *const Vec<Vec<(usize, f32)>>) };
+                let muted = unsafe { std::slice::from_raw_parts(muted_addr as *const bool, n) };
+                let src = unsafe { std::slice::from_raw_parts(src_addr as *const f32, n * d) };
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (dst_addr as *mut f32).add(lo * d),
+                        (hi - lo) * d,
+                    )
+                };
+                for (k, (ep, out)) in eps.iter_mut().zip(dst.chunks_mut(d)).enumerate() {
+                    let i = lo + k;
+                    if muted[i] {
+                        out.copy_from_slice(&src[i * d..(i + 1) * d]);
+                        continue;
+                    }
+                    let row = &rows[i];
+                    let mut recvd: Vec<(usize, Vec<f32>)> = Vec::with_capacity(row.len());
+                    for &(j, _) in row {
+                        if j != i {
+                            let v = ep.recv_from(j)?;
+                            ensure!(
+                                v.len() == d,
+                                "node {i}: message from {j} carries {} of {d} scalars",
+                                v.len()
+                            );
+                            recvd.push((j, v));
+                        }
+                    }
+                    mix_row_src(
+                        row,
+                        |j| {
+                            if j == i {
+                                &src[i * d..(i + 1) * d]
+                            } else {
+                                let (_, v) = recvd
+                                    .iter()
+                                    .find(|(jj, _)| *jj == j)
+                                    .expect("received above");
+                                &v[..]
+                            }
+                        },
+                        out,
+                    );
+                }
+                Ok(())
+            }));
+        }
+
+        // Bill analytically at issue time — the wave jobs advance the
+        // endpoint counters concurrently, so `charge_since` cannot read
+        // them here. Same expression on the same masks and tables, and
+        // every issued send delivers in-process, so this equals the
+        // measured charge of the identical synchronous round.
+        let scale = self.cost_dim as f64 / self.d.max(1) as f64;
+        let outn_eff = match &self.live {
+            Some(v) => &v.outn[round],
+            None => &self.outn[round],
+        };
+        let mut scalars = 0u64;
+        let mut msgs = 0u64;
+        let mut critical = 0.0f64;
+        let mut node_seconds = Vec::with_capacity(n);
+        for j in 0..n {
+            let dm = if self.alive[j] && !self.muted[j] { outn_eff[j].len() as u64 } else { 0 };
+            let ds = dm * d as u64;
+            scalars += ds;
+            msgs += dm;
+            let node_cost = dm as f64 * self.alpha[j] + ds as f64 * scale * self.theta[j];
+            critical = critical.max(node_cost);
+            node_seconds.push(node_cost);
+        }
+        let charge = CommCharge {
+            stats: CommStats {
+                scalars_sent: scalars,
+                msgs,
+                sim_seconds: critical,
+                barrier_wait: 0.0,
+                fallback_rounds: 0,
+                stale_frames_dropped: 0,
+            },
+            node_seconds,
+            barrier: BarrierScope::Neighborhood { round },
+        };
+
+        let ticket = pool.submit(jobs)?;
+        self.in_flight.push_back(WireFlight { slot, done, addr: dst_addr });
+        self.head = (self.head + 1) % self.depth;
+        Ok(Some(PendingComm {
+            payload: PendingPayload::WireRound(PendingWireRound { ticket, slot_addr: dst_addr }),
+            charge,
+        }))
+    }
+
+    /// Drain the oldest in-flight round: wait its ticket, commit its slot
+    /// into `params` (O(1) buffer swap — the data stays put, so successor
+    /// rounds chained on the slot keep reading valid memory), advance the
+    /// drained clock, and fold the issue-time charge into the totals.
+    fn finish_inner(&mut self, params: &mut ParamMatrix, pending: PendingComm) -> Result<CommCharge> {
+        let PendingComm { payload, charge } = pending;
+        let wire = match payload {
+            PendingPayload::WireRound(w) => w,
+            PendingPayload::SharedMix(_) => {
+                bail!("finish: pending round belongs to the shared backend")
+            }
+        };
+        let entry = self
+            .in_flight
+            .pop_front()
+            .ok_or_else(|| anyhow!("finish with no overlapped round in flight"))?;
+        ensure!(
+            wire.slot_addr == entry.addr,
+            "finish got a pending round out of FIFO order or from another backend"
+        );
+        wire.ticket.wait()?;
+        params.swap_data(&mut self.ring[entry.slot]);
+        self.gossip_clock += 1;
+        self.total.merge(charge.stats);
+        self.harvest_stale();
+        Ok(charge)
+    }
+
+    /// Test/scenario hook: deliver one frame from `from` to `to` tagged
+    /// with an arbitrary (stale) epoch — the delayed straggler of an
+    /// aborted or already-drained round. At rest every endpoint sits at
+    /// the backend's current epoch, so the sender is re-tagged afterwards.
+    pub fn inject_stale_frame(
+        &mut self,
+        from: usize,
+        to: usize,
+        epoch: u32,
+        payload: Vec<f32>,
+    ) -> Result<()> {
+        ensure!(self.in_flight.is_empty(), "inject_stale_frame while rounds are in flight");
+        ensure!(
+            from < self.n && to < self.n && from != to,
+            "inject_stale_frame {from}->{to} out of range for n={}",
+            self.n
+        );
+        let wire = payload.len() as u64;
+        self.endpoints[from].set_epoch(epoch);
+        let sent = self.endpoints[from].send_billed(to, payload, wire);
+        self.endpoints[from].set_epoch(self.epoch);
+        sent
+    }
 }
 
 impl<W: Wire> CommBackend for BusCore<W> {
@@ -720,6 +1104,11 @@ impl<W: Wire> CommBackend for BusCore<W> {
 
     fn gossip(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommCharge> {
         ensure!(!self.failed, "bus backend is poisoned by an earlier failed collective");
+        ensure!(
+            self.in_flight.is_empty(),
+            "synchronous gossip with {} overlapped round(s) in flight — drain first",
+            self.in_flight.len()
+        );
         let result = self.gossip_inner(params, pool);
         self.failed |= result.is_err();
         result
@@ -731,6 +1120,11 @@ impl<W: Wire> CommBackend for BusCore<W> {
         pool: &WorkerPool,
     ) -> Result<CommCharge> {
         ensure!(!self.failed, "bus backend is poisoned by an earlier failed collective");
+        ensure!(
+            self.in_flight.is_empty(),
+            "global average with {} overlapped round(s) in flight — drain first",
+            self.in_flight.len()
+        );
         // A missing edge set is a clean configuration error, not a
         // half-delivered collective — don't poison for it.
         if !self.global_allowed {
@@ -754,11 +1148,53 @@ impl<W: Wire> CommBackend for BusCore<W> {
         dst: usize,
     ) -> Result<(Vec<f32>, CommStats)> {
         ensure!(!self.failed, "bus backend is poisoned by an earlier failed collective");
+        ensure!(
+            self.in_flight.is_empty(),
+            "push_row with {} overlapped round(s) in flight — drain first",
+            self.in_flight.len()
+        );
         // A failed push leaves the counters half-advanced, so it poisons
         // the backend exactly like a failed collective.
         let result = self.push_row_inner(params, src, dst);
         self.failed |= result.is_err();
         result
+    }
+
+    unsafe fn gossip_async(
+        &mut self,
+        params: &ParamMatrix,
+        pool: &WorkerPool,
+    ) -> Result<Option<PendingComm>> {
+        ensure!(!self.failed, "bus backend is poisoned by an earlier failed collective");
+        if self.compressed() {
+            // Error-feedback residuals must update in transmit order, so
+            // the compressed path stays synchronous (the trainer counts a
+            // fallback round).
+            return Ok(None);
+        }
+        ensure!(
+            self.pipeline_ready(),
+            "gossip_async with the pipeline full (depth {}) — finish the oldest round first",
+            self.depth
+        );
+        let result = self.gossip_async_inner(params, pool);
+        self.failed |= result.is_err();
+        result
+    }
+
+    fn finish(&mut self, params: &mut ParamMatrix, pending: PendingComm) -> Result<CommCharge> {
+        ensure!(!self.failed, "bus backend is poisoned by an earlier failed collective");
+        let result = self.finish_inner(params, pending);
+        // A failed drain leaves the wires (and possibly the slot) half
+        // written; poison until `reset_round` bumps the epoch and purges.
+        self.failed |= result.is_err();
+        result
+    }
+
+    fn supports_overlap(&self) -> bool {
+        // The compressed transmit pass is ordered (error-feedback state),
+        // so only the raw path can overlap.
+        !self.compressed()
     }
 
     fn add_total(&mut self, stats: CommStats) {
@@ -795,6 +1231,9 @@ impl<W: Wire> CommBackend for BusCore<W> {
 
     fn restore_total(&mut self, total: CommStats) {
         self.total = total;
+        // Endpoint counters are not restored by checkpoints; re-baseline
+        // the delta accounting so pre-restore discards aren't recounted.
+        self.stale_seen = self.endpoints.iter().map(|e| e.stale_drops()).sum();
     }
 
     fn export_compressor_state(&self) -> Option<ParamMatrix> {
@@ -817,6 +1256,8 @@ impl<W: Wire> CommBackend for BusCore<W> {
 
     fn drop_node(&mut self, node: usize) -> Result<u64> {
         ensure!(node < self.n, "drop_node {node} out of range for n={}", self.n);
+        // In-flight jobs hold raw views of the membership tables.
+        ensure!(self.in_flight.is_empty(), "drop_node with overlapped rounds in flight");
         ensure!(self.alive[node], "node {node} is already dropped");
         self.alive[node] = false;
         self.muted[node] = false;
@@ -837,6 +1278,7 @@ impl<W: Wire> CommBackend for BusCore<W> {
 
     fn rejoin_node(&mut self, node: usize) -> Result<()> {
         ensure!(node < self.n, "rejoin_node {node} out of range for n={}", self.n);
+        ensure!(self.in_flight.is_empty(), "rejoin_node with overlapped rounds in flight");
         ensure!(!self.alive[node], "node {node} is not dropped");
         self.alive[node] = true;
         self.muted[node] = false;
@@ -849,15 +1291,25 @@ impl<W: Wire> CommBackend for BusCore<W> {
     }
 
     fn reset_round(&mut self) {
+        // Frames already discarded-and-counted fold into the total first;
+        // the purge below throws frames away sight-unseen (never received,
+        // so never counted as stale).
+        self.harvest_stale();
         self.epoch = self.epoch.wrapping_add(1);
         for ep in self.endpoints.iter_mut() {
             ep.reset_epoch(self.epoch);
         }
+        // Abandon any half-issued pipeline state. Contract: the caller
+        // drops its PendingComm handles BEFORE resetting — a dropped
+        // ticket blocks until its jobs retire, so no job still holds raw
+        // views of the endpoints or ring slots by the time we get here.
+        self.in_flight.clear();
         self.failed = false;
     }
 
     fn set_muted(&mut self, node: usize, muted: bool) -> Result<()> {
         ensure!(node < self.n, "set_muted {node} out of range for n={}", self.n);
+        ensure!(self.in_flight.is_empty(), "set_muted with overlapped rounds in flight");
         self.muted[node] = muted;
         Ok(())
     }
@@ -995,6 +1447,151 @@ mod tests {
         bus.reset_round();
         bus.set_recv_deadline(None);
         bus.gossip(&mut params, &pool).unwrap();
+    }
+
+    #[test]
+    fn overlapped_round_matches_sync_bits_and_charge() {
+        // The §Overlap anchor at the unit level: one issued+finished round
+        // is the synchronous round, bit for bit, and its analytic
+        // issue-time bill equals the measured sync charge exactly.
+        for pool_size in [1usize, 4] {
+            let topo = Topology::ring(6);
+            let pool = WorkerPool::new(pool_size);
+            let d = 9;
+            let mut sync = BusBackend::new(&topo, d, &costs(6), d, Compression::None, false);
+            let mut over = BusBackend::new(&topo, d, &costs(6), d, Compression::None, false);
+            assert!(over.supports_overlap());
+            let mut ps = ramp(6, d);
+            let mut po = ramp(6, d);
+            let cs = sync.gossip(&mut ps, &pool).unwrap();
+            let pending = unsafe { over.gossip_async(&po, &pool) }
+                .unwrap()
+                .expect("uncompressed bus overlaps");
+            assert_eq!(over.in_flight_rounds(), 1);
+            let co = over.finish(&mut po, pending).unwrap();
+            assert_eq!(
+                ps.as_slice(),
+                po.as_slice(),
+                "pool={pool_size}: overlapped == sync, bit for bit"
+            );
+            assert_eq!(cs.stats.scalars_sent, co.stats.scalars_sent);
+            assert_eq!(cs.stats.msgs, co.stats.msgs);
+            assert_eq!(cs.stats.sim_seconds.to_bits(), co.stats.sim_seconds.to_bits());
+            assert_eq!(cs.node_seconds, co.node_seconds, "analytic bill == measured bill");
+            assert_eq!(over.gossip_clock, 1);
+            assert_eq!(over.in_flight_rounds(), 0);
+        }
+    }
+
+    #[test]
+    fn depth_k_pipeline_matches_k_sync_rounds() {
+        // Chained issues over a time-varying schedule (one-peer exp, so
+        // the issued-round billing wraps the round table) drain FIFO to
+        // the exact synchronous trajectory, with zero stale frames.
+        for pool_size in [1usize, 4] {
+            let topo = Topology::one_peer_expo(8);
+            let d = 7;
+            let pool = WorkerPool::new(pool_size);
+            let mut sync = BusBackend::new(&topo, d, &costs(8), d, Compression::None, false);
+            let mut over =
+                BusBackend::with_depth(&topo, d, &costs(8), d, Compression::None, false, 3);
+            let mut ps = ramp(8, d);
+            let mut po = ramp(8, d);
+            let total = topo.rounds() + 2;
+            let mut handles = std::collections::VecDeque::new();
+            for _ in 0..total {
+                if !over.pipeline_ready() {
+                    let oldest = handles.pop_front().unwrap();
+                    over.finish(&mut po, oldest).unwrap();
+                }
+                let pending = unsafe { over.gossip_async(&po, &pool) }.unwrap().unwrap();
+                handles.push_back(pending);
+            }
+            while let Some(p) = handles.pop_front() {
+                over.finish(&mut po, p).unwrap();
+            }
+            for _ in 0..total {
+                sync.gossip(&mut ps, &pool).unwrap();
+            }
+            assert_eq!(over.gossip_clock, total);
+            assert_eq!(
+                ps.as_slice(),
+                po.as_slice(),
+                "pool={pool_size}: depth-3 chain == {total} sync rounds"
+            );
+            assert_eq!(sync.total().scalars_sent, over.total().scalars_sent);
+            assert_eq!(sync.total().msgs, over.total().msgs);
+            assert_eq!(over.total().stale_frames_dropped, 0, "clean run drops nothing");
+        }
+    }
+
+    #[test]
+    fn injected_stale_frame_is_discarded_counted_and_bit_harmless() {
+        // Satellite 3 at the unit level: a delayed frame from a dead epoch
+        // is dropped on receipt, shows up in the counter, and leaves both
+        // the sync and the overlapped trajectory bit-unchanged.
+        let topo = Topology::ring(5);
+        let pool = WorkerPool::new(1);
+        let d = 6;
+        let mut clean = BusBackend::new(&topo, d, &costs(5), d, Compression::None, false);
+        let mut dirty = BusBackend::new(&topo, d, &costs(5), d, Compression::None, false);
+        let mut pc = ramp(5, d);
+        let mut pd = ramp(5, d);
+        dirty.inject_stale_frame(1, 2, 77, vec![9.0; d]).unwrap();
+        clean.gossip(&mut pc, &pool).unwrap();
+        dirty.gossip(&mut pd, &pool).unwrap();
+        assert_eq!(pc.as_slice(), pd.as_slice(), "stale frame never reaches the mix");
+        assert_eq!(dirty.total().stale_frames_dropped, 1);
+        assert_eq!(clean.total().stale_frames_dropped, 0);
+        // The overlapped path filters identically.
+        dirty.inject_stale_frame(2, 3, 123, vec![4.0; d]).unwrap();
+        let pending = unsafe { dirty.gossip_async(&pd, &pool) }.unwrap().unwrap();
+        dirty.finish(&mut pd, pending).unwrap();
+        let pending = unsafe { clean.gossip_async(&pc, &pool) }.unwrap().unwrap();
+        clean.finish(&mut pc, pending).unwrap();
+        assert_eq!(pc.as_slice(), pd.as_slice(), "overlapped mix ignores the stale frame too");
+        assert_eq!(dirty.total().stale_frames_dropped, 2);
+    }
+
+    #[test]
+    fn sync_collectives_and_membership_refused_mid_flight() {
+        // In-flight jobs hold raw views of endpoints and tables, so every
+        // operation that would mutate them must refuse (without
+        // poisoning) until the pipeline drains.
+        let topo = Topology::ring(4);
+        let pool = WorkerPool::new(2);
+        let d = 5;
+        let mut bus = BusBackend::with_depth(&topo, d, &costs(4), d, Compression::None, true, 2);
+        let mut params = ramp(4, d);
+        let mut other = ramp(4, d);
+        let pending = unsafe { bus.gossip_async(&params, &pool) }.unwrap().unwrap();
+        for err in [
+            bus.gossip(&mut other, &pool).unwrap_err(),
+            bus.global_average(&mut other, &pool).unwrap_err(),
+            bus.drop_node(1).unwrap_err(),
+            bus.set_muted(1, true).unwrap_err(),
+        ] {
+            assert!(err.to_string().contains("in flight"), "{err}");
+        }
+        // Refusals don't poison: the drain and the next sync round work.
+        bus.finish(&mut params, pending).unwrap();
+        bus.gossip(&mut params, &pool).unwrap();
+    }
+
+    #[test]
+    fn compressed_transmit_declines_overlap() {
+        // Error-feedback residuals update in transmit order; the codec
+        // path must keep the sync fallback rather than pretend to overlap.
+        let topo = Topology::ring(4);
+        let pool = WorkerPool::new(1);
+        let d = 8;
+        let mut bus =
+            BusBackend::new(&topo, d, &costs(4), d, Compression::TopK { frac: 0.5 }, false);
+        assert!(!bus.supports_overlap());
+        let params = ramp(4, d);
+        let pending = unsafe { bus.gossip_async(&params, &pool) }.unwrap();
+        assert!(pending.is_none(), "compressed transmit falls back to sync");
+        assert_eq!(bus.in_flight_rounds(), 0);
     }
 
     #[test]

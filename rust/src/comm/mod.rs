@@ -20,6 +20,11 @@
 //!   [`crate::collective::Endpoint`] per worker, every transmitted vector
 //!   actually sent/received over channels (compression included), traffic
 //!   *measured* at the endpoints and time charged per actual message.
+//!   Uncompressed rounds overlap too: `gossip_async` issues the round-t
+//!   sends immediately and defers the receive+mix to the drain point on a
+//!   depth-K ring of receive buffers keyed by per-round epoch tags
+//!   (stale frames discarded on receipt and counted in
+//!   [`CommStats::stale_frames_dropped`]).
 //! * [`TcpBackend`] — the same message-passing core ([`bus::BusCore`])
 //!   over real loopback sockets ([`crate::collective::tcp`]):
 //!   length-prefixed frames, per-edge streams, OS-assigned ports. The
@@ -82,14 +87,23 @@ pub struct CommStats {
     /// behind the busier hub — as does the bus plane at d % n != 0.
     pub barrier_wait: f64,
     /// Gossip rounds that were REQUESTED asynchronous (overlap mode) but
-    /// executed as the synchronous round because the backend has no
-    /// `gossip_async` (the bus plane; compressed transmit on the shared
-    /// plane). Backends report 0 per action — the trainer, which owns the
-    /// fallback decision, fills this in on the cumulative totals. A
+    /// executed as the synchronous round because the backend cannot
+    /// overlap as configured — since the message-passing planes grew
+    /// `gossip_async`, that is exactly the compressed-transmit
+    /// configurations (error-feedback residuals must update in lockstep
+    /// with the round they compress). Backends report 0 per action — the
+    /// trainer, which owns the fallback decision, fills this in on the
+    /// cumulative totals. A
     /// nonzero count on an overlap run means the configuration lost its
     /// compute/comm overlap — see the README's regime matrix row and the
     /// ROADMAP's async/bus-overlap item.
     pub fallback_rounds: u64,
+    /// Frames discarded on receipt because their epoch tag named an
+    /// aborted or already-drained round (the message-passing planes'
+    /// overlap/retry hygiene; always 0 on the shared backend, which has no
+    /// wire). A nonzero count is normal after a round retry; on a clean
+    /// overlapped run it must stay 0 — asserted by the overlap_wire suite.
+    pub stale_frames_dropped: u64,
 }
 
 impl CommStats {
@@ -100,6 +114,7 @@ impl CommStats {
         self.sim_seconds += other.sim_seconds;
         self.barrier_wait += other.barrier_wait;
         self.fallback_rounds += other.fallback_rounds;
+        self.stale_frames_dropped += other.stale_frames_dropped;
     }
 
     /// Wire bytes (4 bytes per f32-equivalent).
@@ -225,6 +240,9 @@ impl Compression {
 pub(crate) enum PendingPayload {
     /// A [`crate::coordinator::mixer::Mixer::gossip_async`] ticket.
     SharedMix(PendingMix),
+    /// An overlapped round on a message-passing plane ([`BusCore`]):
+    /// sends issued, receive+mix running on the pool into a ring slot.
+    WireRound(bus::PendingWireRound),
 }
 
 /// An in-flight asynchronous gossip round on a [`CommBackend`] (overlap
@@ -269,13 +287,15 @@ pub trait CommBackend: Send {
         -> Result<CommCharge>;
 
     /// Begin an asynchronous gossip round, if this backend supports
-    /// overlap; `Ok(None)` means unsupported and callers fall back to the
-    /// synchronous [`CommBackend::gossip`]. A backend built with a
-    /// pipeline depth > 1 ([`SharedBackend::with_depth`]) accepts up to
-    /// `depth` issued-but-unfinished rounds, chained so round t+1 mixes
-    /// round t's output; [`CommBackend::finish`] must then be called in
-    /// issue order (FIFO), and a fully drained pipeline is bit-identical
-    /// to the same rounds run synchronously.
+    /// overlap; `Ok(None)` means unsupported as configured (today: a
+    /// compressed transmit path) and callers fall back to the synchronous
+    /// [`CommBackend::gossip`]. A backend built with a pipeline depth > 1
+    /// ([`SharedBackend::with_depth`], [`BusBackend::with_depth`],
+    /// [`TcpBackend::new_loopback_with_depth`]) accepts up to `depth`
+    /// issued-but-unfinished rounds, chained so round t+1 mixes round t's
+    /// output; [`CommBackend::finish`] must then be called in issue order
+    /// (FIFO), and a fully drained pipeline is bit-identical to the same
+    /// rounds run synchronously.
     ///
     /// # Safety
     ///
@@ -545,6 +565,7 @@ mod tests {
             sim_seconds: 0.5,
             barrier_wait: 0.1,
             fallback_rounds: 1,
+            stale_frames_dropped: 4,
         };
         a.merge(CommStats {
             scalars_sent: 5,
@@ -552,12 +573,14 @@ mod tests {
             sim_seconds: 0.25,
             barrier_wait: 0.2,
             fallback_rounds: 2,
+            stale_frames_dropped: 3,
         });
         assert_eq!(a.scalars_sent, 15);
         assert_eq!(a.msgs, 3);
         assert!((a.sim_seconds - 0.75).abs() < 1e-12);
         assert!((a.barrier_wait - 0.3).abs() < 1e-12);
         assert_eq!(a.fallback_rounds, 3);
+        assert_eq!(a.stale_frames_dropped, 7);
         assert_eq!(a.bytes_sent(), 60);
     }
 

@@ -172,6 +172,7 @@ impl CommBackend for SharedBackend {
                     sim_seconds: sim,
                     barrier_wait: 0.0,
                     fallback_rounds: 0,
+                    stale_frames_dropped: 0,
                 },
                 node_seconds,
                 barrier: BarrierScope::Neighborhood { round },
@@ -187,6 +188,7 @@ impl CommBackend for SharedBackend {
                     sim_seconds: max_of(&node_seconds),
                     barrier_wait: 0.0,
                     fallback_rounds: 0,
+                    stale_frames_dropped: 0,
                 },
                 node_seconds,
                 barrier: BarrierScope::Neighborhood { round },
@@ -211,6 +213,7 @@ impl CommBackend for SharedBackend {
                 sim_seconds: max_of(&node_seconds),
                 barrier_wait: 0.0,
                 fallback_rounds: 0,
+                stale_frames_dropped: 0,
             },
             node_seconds,
             barrier: BarrierScope::Global,
@@ -246,6 +249,7 @@ impl CommBackend for SharedBackend {
                     sim_seconds: max_of(&node_seconds),
                     barrier_wait: 0.0,
                     fallback_rounds: 0,
+                    stale_frames_dropped: 0,
                 },
                 node_seconds,
                 barrier: BarrierScope::Neighborhood { round },
@@ -255,7 +259,12 @@ impl CommBackend for SharedBackend {
 
     fn finish(&mut self, params: &mut ParamMatrix, pending: PendingComm) -> Result<CommCharge> {
         let charge = pending.charge;
-        let PendingPayload::SharedMix(mix) = pending.payload;
+        let mix = match pending.payload {
+            PendingPayload::SharedMix(mix) => mix,
+            PendingPayload::WireRound(_) => {
+                anyhow::bail!("finish: pending round belongs to a message-passing backend")
+            }
+        };
         self.mixer.finish_gossip(params, mix)?;
         self.total.merge(charge.stats);
         Ok(charge)

@@ -50,6 +50,34 @@ impl BusCore<TcpEndpoint> {
         with_global: bool,
         listen: &str,
     ) -> Result<TcpBackend> {
+        TcpBackend::new_loopback_with_depth(
+            topo,
+            d,
+            costs,
+            cost_dim,
+            compression,
+            with_global,
+            listen,
+            1,
+        )
+    }
+
+    /// [`TcpBackend::new_loopback`] with an async gossip pipeline admitting
+    /// up to `depth` overlapped rounds in flight (`--pipeline-depth`). The
+    /// per-stream reader threads already park tagged frames off the compute
+    /// thread, so kernel socket buffers never backpressure an overlapped
+    /// sender mid-round.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_loopback_with_depth(
+        topo: &Topology,
+        d: usize,
+        costs: &NodeCosts,
+        cost_dim: usize,
+        compression: Compression,
+        with_global: bool,
+        listen: &str,
+        depth: usize,
+    ) -> Result<TcpBackend> {
         let n = topo.n;
         let edges = gossip_union_edges(topo);
         let (endpoints, fabric) =
@@ -83,6 +111,7 @@ impl BusCore<TcpEndpoint> {
             endpoints,
             connector,
             with_global,
+            depth,
         ))
     }
 }
@@ -163,6 +192,76 @@ mod tests {
         let ct = tcp.global_average(&mut pt, &pool).unwrap();
         assert_eq!(pb.as_slice(), pt.as_slice(), "global-average bits");
         assert_eq!(cb.stats, ct.stats, "global-average traffic");
+    }
+
+    #[test]
+    fn overlapped_socket_rounds_match_sync_bits() {
+        // The §Overlap anchor on the real wire: issue+finish (depth 2,
+        // chained) over sockets == the synchronous socket trajectory, bit
+        // for bit, with nothing counted stale on a clean run.
+        let topo = Topology::ring(5);
+        let d = 11;
+        let pool = WorkerPool::new(2);
+        let mk = || {
+            TcpBackend::new_loopback_with_depth(
+                &topo,
+                d,
+                &costs(5),
+                d,
+                Compression::None,
+                false,
+                "127.0.0.1:0",
+                2,
+            )
+            .unwrap()
+        };
+        let mut sync = mk();
+        let mut over = mk();
+        assert!(over.supports_overlap());
+        let mut ps = ramp(5, d);
+        let mut po = ramp(5, d);
+        let mut handles = std::collections::VecDeque::new();
+        for _ in 0..4 {
+            if !over.pipeline_ready() {
+                let oldest = handles.pop_front().unwrap();
+                over.finish(&mut po, oldest).unwrap();
+            }
+            let pending = unsafe { over.gossip_async(&po, &pool) }.unwrap().unwrap();
+            handles.push_back(pending);
+        }
+        while let Some(p) = handles.pop_front() {
+            over.finish(&mut po, p).unwrap();
+        }
+        for _ in 0..4 {
+            sync.gossip(&mut ps, &pool).unwrap();
+        }
+        assert_eq!(ps.as_slice(), po.as_slice(), "overlapped sockets == sync sockets");
+        assert_eq!(sync.total().scalars_sent, over.total().scalars_sent);
+        assert_eq!(over.total().stale_frames_dropped, 0);
+    }
+
+    #[test]
+    fn stale_frame_on_the_socket_is_discarded_and_counted() {
+        // Satellite 3 on the tcp wire: a delayed frame from a dead epoch
+        // rides a real stream, is dropped on receipt, counted, and leaves
+        // the gossip bits untouched.
+        let topo = Topology::ring(4);
+        let d = 6;
+        let pool = WorkerPool::new(1);
+        let mk = || {
+            TcpBackend::new_loopback(&topo, d, &costs(4), d, Compression::None, false, "127.0.0.1:0")
+                .unwrap()
+        };
+        let mut clean = mk();
+        let mut dirty = mk();
+        let mut pc = ramp(4, d);
+        let mut pd = ramp(4, d);
+        dirty.inject_stale_frame(0, 1, 99, vec![7.5; d]).unwrap();
+        clean.gossip(&mut pc, &pool).unwrap();
+        dirty.gossip(&mut pd, &pool).unwrap();
+        assert_eq!(pc.as_slice(), pd.as_slice(), "stale socket frame never reaches the mix");
+        assert_eq!(dirty.total().stale_frames_dropped, 1);
+        assert_eq!(clean.total().stale_frames_dropped, 0);
     }
 
     #[test]

@@ -235,7 +235,8 @@ pub struct ExperimentConfig {
     /// cache-local across rounds. Best-effort where affinity calls fail
     /// (warns once, runs unpinned); bit-identical either way.
     pub pin: bool,
-    /// Max gossip rounds in flight on the shared backend's async pipeline
+    /// Max gossip rounds in flight on any backend's async pipeline —
+    /// shared, bus, and tcp all overlap uncompressed gossip
     /// (`train.pipeline_depth` / `--pipeline-depth`); 1 = the classic
     /// double buffer (default). Drained FIFO at every k·H / eval /
     /// checkpoint boundary, bit-identical to BSP at every drained point.

@@ -23,7 +23,8 @@
 //!   u8 has_slowmo | [d f32 prev | d f32 u] |
 //!   u8 has_rng | [n * 4 u64 worker RNG states] |
 //!   u8 has_comm | [u64 scalars_sent | u64 msgs | f64 comm_sim_seconds |
-//!                  f64 barrier_wait (v4+) | u64 fallback_rounds (v5+)] |
+//!                  f64 barrier_wait (v4+) | u64 fallback_rounds (v5+) |
+//!                  u64 stale_frames_dropped (v8+)] |
 //!   u8 has_ef | [u8 codec (1 = topk, 2 = int8) | f64 topk_frac |
 //!                u64 int8_block | n * d f32 error-feedback residuals] |
 //!   u8 has_clocks | [n f64 node clocks | n f64 node barrier waits] (v4+) |
@@ -66,6 +67,12 @@
 //! run that dropped a stalled peer resumes with the same renormalized
 //! mixing rows instead of silently re-admitting the dead node.
 //!
+//! v8 appends the overlapped-wire stale-frame tally to the comm block
+//! ([`CommStats::stale_frames_dropped`]): frames from aborted or
+//! already-drained epochs that a bus/tcp endpoint discarded on receipt.
+//! Pre-v8 files load with the tally at 0 (those runs predate the
+//! message-passing overlap path, so nothing was ever discarded).
+//!
 //! v1 files (which end after the velocity block), v2 files (which end
 //! after the RNG block), v3 files (which end after the ef block) and v4
 //! files (which end after the clock block) still load; the extra state
@@ -94,7 +101,7 @@ use crate::params::pool::Payload;
 use crate::params::ParamMatrix;
 
 const MAGIC: &[u8; 4] = b"GPGA";
-const VERSION: u32 = 7;
+const VERSION: u32 = 8;
 
 /// SlowMo outer-loop state (Wang et al. 2019): the parameters at the last
 /// global sync and the slow-momentum buffer.
@@ -278,6 +285,7 @@ impl Checkpoint {
             f.write_all(&c.sim_seconds.to_le_bytes())?;
             f.write_all(&c.barrier_wait.to_le_bytes())?;
             f.write_all(&c.fallback_rounds.to_le_bytes())?;
+            f.write_all(&c.stale_frames_dropped.to_le_bytes())?;
         }
         f.write_all(&[self.ef_residuals.is_some() as u8])?;
         if let Some(r) = &self.ef_residuals {
@@ -419,6 +427,7 @@ impl Checkpoint {
                     // carry the earlier accounting.
                     barrier_wait: if version >= 4 { read_f64(&mut f)? } else { 0.0 },
                     fallback_rounds: if version >= 5 { read_u64(&mut f)? } else { 0 },
+                    stale_frames_dropped: if version >= 8 { read_u64(&mut f)? } else { 0 },
                 })
             } else {
                 None
@@ -729,6 +738,7 @@ mod tests {
                 sim_seconds: 4.2,
                 barrier_wait: 0.7,
                 fallback_rounds: 3,
+                stale_frames_dropped: 12,
             }),
             ef_residuals: Some(random_matrix(4, d, 6, 0.01)),
             ef_compression: Some(Compression::TopK { frac: 0.25 }),
@@ -913,6 +923,7 @@ mod tests {
                 sim_seconds: 1.0,
                 barrier_wait: 0.5,
                 fallback_rounds: 0,
+                stale_frames_dropped: 0,
             }),
             ef_residuals: None,
             ef_compression: None,

@@ -211,15 +211,17 @@ pub struct TrainerOptions {
     /// warns once and runs unpinned where affinity calls fail. Bits are
     /// identical pinned or not.
     pub pin: bool,
-    /// Max gossip rounds in flight on the shared backend's async pipeline
-    /// (`train.pipeline_depth` / `--pipeline-depth`; default 1 = the
-    /// classic double buffer). The mixer keeps a depth-k ring of scratch
-    /// matrices and chains rounds through completion latches, drained FIFO
-    /// and bit-identical to BSP at every drained boundary. The step loop
-    /// itself drains before each gradient phase (gradients need the mixed
+    /// Max gossip rounds in flight on the async gossip pipeline of ANY
+    /// backend (`train.pipeline_depth` / `--pipeline-depth`; default 1 =
+    /// the classic double buffer). The shared mixer and the message-passing
+    /// cores (bus, tcp) each keep a depth-k ring of receive planes and
+    /// chain rounds through completion latches, drained FIFO and
+    /// bit-identical to BSP at every drained boundary. The step loop itself
+    /// drains before each gradient phase (gradients need the mixed
     /// iterate), so training keeps at most one round in flight per step;
     /// depth > 1 pipelines back-to-back comm-only round sequences — the
-    /// mixer/backend benches and the pipeline test suite drive it directly.
+    /// mixer/backend benches and the pipeline/overlap test suites drive it
+    /// directly.
     pub pipeline_depth: usize,
     /// Execution regime (`train.regime` / `--regime`):
     /// * [`Regime::Bsp`] — synchronous rounds (the default);
@@ -401,18 +403,19 @@ impl Trainer {
             )),
             // The schedule itself says whether it can ever global-average
             // (pure-gossip schedules skip the all-to-all edge setup).
-            BackendKind::Bus => Box::new(BusBackend::new(
+            BackendKind::Bus => Box::new(BusBackend::with_depth(
                 &opts.topology,
                 d,
                 &node_costs,
                 opts.cost_dim,
                 opts.compression,
                 schedule.uses_global_average(),
+                opts.pipeline_depth.max(1),
             )),
             // Same core, real sockets: loopback listeners at `opts.listen`,
             // one stream per gossip edge, all-to-all streams dialed lazily
             // on the first global average.
-            BackendKind::Tcp => Box::new(TcpBackend::new_loopback(
+            BackendKind::Tcp => Box::new(TcpBackend::new_loopback_with_depth(
                 &opts.topology,
                 d,
                 &node_costs,
@@ -420,6 +423,7 @@ impl Trainer {
                 opts.compression,
                 schedule.uses_global_average(),
                 &opts.listen,
+                opts.pipeline_depth.max(1),
             )?),
         };
         let rounds = if opts.round_timeout > 0.0 {
@@ -435,17 +439,18 @@ impl Trainer {
             None
         };
         let pool = WorkerPool::with_options(opts.threads, opts.stealing, opts.pin);
-        // Overlap without backend support is a silent downgrade to the
-        // synchronous round — surface it once at startup (and count every
-        // fallback in CommStats::fallback_rounds). The ROADMAP's open
-        // item: the bus plane would need per-round message tagging to keep
-        // drains exact.
+        // Every backend overlaps uncompressed gossip now (the bus/tcp core
+        // issues epoch-tagged rounds through the same pipeline contract as
+        // the shared mixer). The only remaining downgrade is compressed
+        // transmit — error-feedback residuals must update in transmit
+        // order — so surface that once at startup and count every fallback
+        // in CommStats::fallback_rounds.
         if opts.regime == Regime::Overlap && !backend.supports_overlap() {
             eprintln!(
-                "warning: the {} backend has no asynchronous gossip{} — overlap rounds will \
-                 run synchronously (counted in comm fallback_rounds)",
-                opts.backend.name(),
-                if opts.compression != Compression::None { " under compression" } else { "" }
+                "warning: compressed transmit cannot overlap (error-feedback state is \
+                 ordered) — overlap rounds on the {} backend will run synchronously \
+                 (counted in comm fallback_rounds)",
+                opts.backend.name()
             );
         }
         let eventsim = if opts.regime == Regime::Async {
@@ -745,8 +750,9 @@ impl Trainer {
                         );
                         self.pending.push_back(pending);
                     }
-                    // Backend without async support (bus, or compressed
-                    // transmit): the schedule falls back to the
+                    // Compressed transmit is the one remaining path with
+                    // no async support (error-feedback residuals update in
+                    // transmit order): the schedule falls back to the
                     // synchronous round, bit-identical either way — but in
                     // overlap mode the lost overlap is COUNTED, not silent
                     // (warned once at startup, tallied in
@@ -1220,6 +1226,7 @@ impl Trainer {
                     link_util: self.link_utilization(),
                     peer_drops: self.peer_drops(),
                     row_renorms: self.row_renorms(),
+                    stale_frames: comm.stale_frames_dropped,
                 });
             }
         }

@@ -88,9 +88,10 @@ fn print_help() {
            train.stealing (work-stealing pool chunking; --stealing is shorthand)\n\
            train.pin (pin pool threads to cores, best-effort; --pin is shorthand.\n\
              Needs train.threads <= available cores; bits identical either way)\n\
-           train.pipeline_depth (max gossip rounds in flight on the shared\n\
-             backend's async pipeline; 1 = classic double buffer, drained at\n\
-             every k·H/eval/checkpoint boundary; --pipeline-depth is shorthand)\n\
+           train.pipeline_depth (max gossip rounds in flight on any backend's\n\
+             async pipeline — shared, bus, and tcp all overlap; 1 = classic\n\
+             double buffer, drained at every k·H/eval/checkpoint boundary;\n\
+             --pipeline-depth is shorthand)\n\
            comm.backend (shared|bus|tcp; --backend is shorthand. tcp = the bus\n\
              core over real loopback sockets — framed streams, measured traffic)\n\
            comm.listen (tcp bind address, host:port; port 0 = OS-assigned;\n\
@@ -310,12 +311,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
     );
     let comm = trainer.comm_stats();
     println!(
-        "# traffic ({} backend): {} msgs | {} scalars ({:.2} MB) | {:.1}s comm sim time",
+        "# traffic ({} backend): {} msgs | {} scalars ({:.2} MB) | {:.1}s comm sim time | {} stale frame(s) dropped",
         trainer.backend_kind().name(),
         comm.msgs,
         comm.scalars_sent,
         comm.bytes_sent() as f64 / 1e6,
-        comm.sim_seconds
+        comm.sim_seconds,
+        comm.stale_frames_dropped
     );
     // Heterogeneous cost tables always get the breakdown; so do runs where
     // structural asymmetry (star hubs, uneven bus chunks) opened real
@@ -334,7 +336,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     }
     if comm.fallback_rounds > 0 {
         println!(
-            "# overlap fallback: {} gossip round(s) ran synchronously (backend has no async path)",
+            "# overlap fallback: {} gossip round(s) ran synchronously (compressed transmit has no async path)",
             comm.fallback_rounds
         );
     }

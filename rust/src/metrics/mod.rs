@@ -57,6 +57,11 @@ pub struct Record {
     /// folds the dead peer's weight back onto every live row that carried
     /// it).
     pub row_renorms: u64,
+    /// Frames discarded on receipt because their epoch tag belonged to an
+    /// aborted or already-drained round (cumulative; bus/tcp only — see
+    /// [`crate::comm::CommStats::stale_frames_dropped`]). Always 0 on a
+    /// clean overlapped run.
+    pub stale_frames: u64,
 }
 
 /// A training history for one run.
@@ -99,11 +104,11 @@ impl History {
         let mut out = String::from(
             "step,loss,consensus,lr,sim_seconds,comm_scalars,comm_msgs,\
              sim_min_seconds,straggler_slack,barrier_wait,\
-             stale_max,stale_mean,link_util,peer_drops,row_renorms\n",
+             stale_max,stale_mean,link_util,peer_drops,row_renorms,stale_frames\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.step,
                 r.loss,
                 r.consensus,
@@ -118,7 +123,8 @@ impl History {
                 r.stale_mean,
                 r.link_util,
                 r.peer_drops,
-                r.row_renorms
+                r.row_renorms,
+                r.stale_frames
             ));
         }
         out
@@ -180,6 +186,10 @@ impl History {
             (
                 "row_renorms",
                 jsonio::u64_arr(&self.records.iter().map(|r| r.row_renorms).collect::<Vec<_>>()),
+            ),
+            (
+                "stale_frames",
+                jsonio::u64_arr(&self.records.iter().map(|r| r.stale_frames).collect::<Vec<_>>()),
             ),
         ])
     }
@@ -501,6 +511,7 @@ mod tests {
                 link_util: i as f64 * 0.125,
                 peer_drops: i as u64 / 2,
                 row_renorms: i as u64,
+                stale_frames: 3 * i as u64,
             });
         }
         assert_eq!(h.first_step_below(0.35).unwrap().step, 2);
@@ -518,9 +529,9 @@ mod tests {
             .lines()
             .next()
             .unwrap()
-            .ends_with("stale_max,stale_mean,link_util,peer_drops,row_renorms"));
+            .ends_with("stale_max,stale_mean,link_util,peer_drops,row_renorms,stale_frames"));
         assert!(csv.lines().nth(3).unwrap().contains(",200,4,"));
-        assert!(csv.lines().nth(3).unwrap().ends_with(",1,1,0.5,2,1,0.25,1,2"));
+        assert!(csv.lines().nth(3).unwrap().ends_with(",1,1,0.5,2,1,0.25,1,2,6"));
         let j = h.to_json().dump();
         assert!(j.contains("\"label\":\"test\""));
         assert!(j.contains("\"comm_scalars\":[0,100,200,300,400]"));
@@ -531,5 +542,6 @@ mod tests {
         assert!(j.contains("\"link_util\":[0,0.125,0.25,0.375,0.5]"));
         assert!(j.contains("\"peer_drops\":[0,0,1,1,2]"));
         assert!(j.contains("\"row_renorms\":[0,1,2,3,4]"));
+        assert!(j.contains("\"stale_frames\":[0,3,6,9,12]"));
     }
 }

@@ -618,12 +618,13 @@ fn restoring_compressed_checkpoint_into_uncompressed_run_is_rejected() {
 }
 
 #[test]
-fn overlap_on_bus_falls_back_to_sync_and_matches_bsp() {
-    // The bus has no async gossip; --overlap must degrade to the exact
-    // synchronous schedule, not fail or fork the trajectory.
+fn overlap_on_bus_runs_async_with_zero_fallbacks_and_matches_bsp() {
+    // ISSUE 9: the bus core overlaps uncompressed gossip for real now —
+    // the old sync downgrade is gone. --overlap must keep the exact BSP
+    // trajectory at every drained boundary AND report zero fallbacks.
     let rt = Arc::new(Runtime::load_default().expect("run `make artifacts` first"));
     let mut bsp = trainer_with_backend(&rt, AlgorithmKind::GossipPga, BackendKind::Bus, 2);
-    let (workload, init) = logreg_workload(rt, 4, 256, true, 17).unwrap();
+    let (workload, init) = logreg_workload(rt.clone(), 4, 256, true, 17).unwrap();
     let opts_overlap = TrainerOptions {
         algorithm: AlgorithmKind::GossipPga,
         topology: Topology::ring(4),
@@ -650,6 +651,10 @@ fn overlap_on_bus_falls_back_to_sync_and_matches_bsp() {
         round_timeout: 0.0,
         listen: "127.0.0.1:0".to_string(),
     };
+    let opts_compressed = TrainerOptions {
+        compression: Compression::TopK { frac: 0.5 },
+        ..opts_overlap.clone()
+    };
     let mut ovl = Trainer::new(workload, init, opts_overlap).unwrap();
     for _ in 0..9 {
         bsp.step_once().unwrap();
@@ -660,9 +665,20 @@ fn overlap_on_bus_falls_back_to_sync_and_matches_bsp() {
         assert_eq!(bsp.worker_params(i), ovl.worker_params(i), "worker {i}");
     }
     assert_eq!(bsp.sim_seconds(), ovl.sim_seconds());
-    // The downgrade is SURFACED, not silent: every gossip round of the 9
-    // steps (H = 4 => 2 global averages) is tallied as a fallback on the
-    // overlap run, and a plain BSP run on the same backend reports none.
-    assert_eq!(ovl.comm_stats().fallback_rounds, 7, "fallback tally");
+    // Zero fallbacks: all 7 gossip rounds of the 9 steps (H = 4 => 2
+    // global averages) went down the real async path, and no stale frame
+    // ever landed on a clean single-process run.
+    assert_eq!(ovl.comm_stats().fallback_rounds, 0, "fallback tally");
+    assert_eq!(ovl.comm_stats().stale_frames_dropped, 0, "stale tally");
     assert_eq!(bsp.comm_stats().fallback_rounds, 0);
+
+    // Compressed transmit is the ONE remaining sync downgrade (error
+    // feedback is ordered): same schedule, every gossip round tallied.
+    let (workload_c, init_c) = logreg_workload(rt, 4, 256, true, 17).unwrap();
+    let mut cmp = Trainer::new(workload_c, init_c, opts_compressed).unwrap();
+    for _ in 0..9 {
+        cmp.step_once().unwrap();
+    }
+    cmp.drain().unwrap();
+    assert_eq!(cmp.comm_stats().fallback_rounds, 7, "compressed fallback tally");
 }

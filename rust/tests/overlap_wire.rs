@@ -1,0 +1,485 @@
+//! Overlap-on-the-wire acceptance suite (`BusCore::gossip_async` /
+//! `finish` on the message-passing backends — `rust/src/comm/bus.rs`
+//! shared by `BusBackend` and `TcpBackend`).
+//!
+//! Three contracts under test:
+//!
+//! * **Bit-equality** — uncompressed overlapped / depth-k pipelined
+//!   gossip on the bus and on real loopback sockets is bit-identical to
+//!   the same schedule run synchronously (BSP) at every drained
+//!   boundary: the k·H global average, eval, checkpoint, and resume.
+//!   `fallback_rounds` stays 0 on those runs — the old "overlap on bus
+//!   runs synchronously" downgrade is gone.
+//! * **Epoch hygiene** — a delayed frame from an aborted or
+//!   already-drained round (a stale epoch tag) is discarded on receipt,
+//!   tallied in `CommStats::stale_frames_dropped`, and never perturbs
+//!   the trajectory — on either wire.
+//! * **Billing** — overlapped rounds are billed analytically at issue
+//!   time on the issued round schedule; the α–β bill must equal the
+//!   measured synchronous charge exactly (asserted via `sim_seconds`).
+//!
+//! The backend replay layers need no AOT artifacts; the trainer-level
+//! tests need `make artifacts` like the other integration suites. Every
+//! socket test binds `127.0.0.1:0` (OS-assigned ports) and runs under a
+//! watchdog so a deadlock regression fails loudly instead of wedging the
+//! suite. `scripts/verify.sh` step 11 runs this suite at
+//! `PROPTEST_CASES=16` under both `GOSSIP_PGA_TEST_THREADS=1` and `=4`.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use gossip_pga::algorithms::AlgorithmKind;
+use gossip_pga::comm::{
+    BackendKind, BusBackend, CommBackend, Compression, PendingComm, TcpBackend,
+};
+use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
+use gossip_pga::costmodel::{CostModel, NodeCosts};
+use gossip_pga::eventsim::Regime;
+use gossip_pga::exec::WorkerPool;
+use gossip_pga::jsonio::Json;
+use gossip_pga::optim::LrSchedule;
+use gossip_pga::params::ParamMatrix;
+use gossip_pga::rng::Rng;
+use gossip_pga::runtime::Runtime;
+use gossip_pga::topology::Topology;
+
+/// Run `f` on a watchdog thread; FAIL (don't hang) if it overruns.
+fn with_timeout(secs: u64, f: impl FnOnce() + Send + 'static) {
+    let (tx, rx) = channel();
+    let h = std::thread::spawn(move || {
+        f();
+        tx.send(()).ok();
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) => h.join().expect("watchdog body"),
+        Err(_) => panic!("timed out after {secs}s — the overlapped wire hung instead of failing"),
+    }
+}
+
+/// The pool sizes the suite sweeps: always 1 (inline execution) plus the
+/// `GOSSIP_PGA_TEST_THREADS` pool (default 4) — the same env contract
+/// `tests/properties.rs` uses, so verify.sh can pin both shapes.
+fn pool_sizes() -> Vec<usize> {
+    let t = std::env::var("GOSSIP_PGA_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(4);
+    if t <= 1 {
+        vec![1]
+    } else {
+        vec![1, t]
+    }
+}
+
+/// Deterministic pseudo-gradient, applied identically on every replica so
+/// any divergence comes from the wire alone.
+fn perturb(params: &mut ParamMatrix, k: u64) {
+    let mut rng = Rng::new(0xD1CE ^ k.wrapping_mul(0x9E37_79B9));
+    let noise = rng.normal_vec(params.n() * params.d(), 0.05);
+    for (p, g) in params.as_mut_slice().iter_mut().zip(&noise) {
+        *p -= g;
+    }
+}
+
+/// Build an uncompressed message-passing backend of `kind` with the given
+/// pipeline depth. Both constructors share `BusCore`, so the suite drives
+/// them through one function and the type-erased trait object.
+fn wire_backend(kind: BackendKind, topo: &Topology, d: usize, depth: usize) -> Box<dyn CommBackend> {
+    let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), topo.n);
+    match kind {
+        BackendKind::Bus => Box::new(BusBackend::with_depth(
+            topo,
+            d,
+            &costs,
+            d,
+            Compression::None,
+            true,
+            depth,
+        )),
+        BackendKind::Tcp => Box::new(
+            TcpBackend::new_loopback_with_depth(
+                topo,
+                d,
+                &costs,
+                d,
+                Compression::None,
+                true,
+                "127.0.0.1:0",
+                depth,
+            )
+            .unwrap(),
+        ),
+        BackendKind::Shared => unreachable!("this suite is about the message-passing wires"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend layer: the k·H schedule, overlapped, on both wires.
+// ---------------------------------------------------------------------------
+
+/// Replay 3 periods of the PGA schedule — H gossip rounds (pipelined when
+/// `depth > 0`, synchronous when `depth == 0`), a full FIFO drain, one
+/// global average, a perturbation — returning the final matrix, the total
+/// billed sim seconds, and the stale-frame tally.
+fn wire_replay(
+    kind: BackendKind,
+    topo: &Topology,
+    d: usize,
+    h: usize,
+    depth: usize,
+    threads: usize,
+) -> (ParamMatrix, f64, u64) {
+    let mut backend = wire_backend(kind, topo, d, depth.max(1));
+    let pool = WorkerPool::new(threads);
+    let mut params = ParamMatrix::random(&mut Rng::new(47), topo.n, d, 1.0);
+    let mut sim = 0.0;
+    let mut pending: VecDeque<PendingComm> = VecDeque::new();
+    for burst in 0..3u64 {
+        for _ in 0..h {
+            if depth == 0 {
+                sim += backend.gossip(&mut params, &pool).unwrap().stats.sim_seconds;
+            } else {
+                if pending.len() == depth {
+                    let oldest = pending.pop_front().unwrap();
+                    sim += backend.finish(&mut params, oldest).unwrap().stats.sim_seconds;
+                }
+                let p = unsafe { backend.gossip_async(&params, &pool).unwrap() }
+                    .expect("uncompressed wire backends support async gossip");
+                pending.push_back(p);
+            }
+        }
+        // The k·H boundary: drain everything FIFO, then the global barrier.
+        while let Some(oldest) = pending.pop_front() {
+            sim += backend.finish(&mut params, oldest).unwrap().stats.sim_seconds;
+        }
+        sim += backend.global_average(&mut params, &pool).unwrap().stats.sim_seconds;
+        perturb(&mut params, burst);
+    }
+    (params, sim, backend.total().stale_frames_dropped)
+}
+
+#[test]
+fn overlapped_bus_matches_bsp_at_every_period_boundary() {
+    let (d, h) = (97, 5); // h > depth forces steady-state ring reuse
+    for mk in [Topology::ring as fn(usize) -> Topology, Topology::one_peer_expo] {
+        let topo = mk(6);
+        for threads in pool_sizes() {
+            let (want, want_sim, _) = wire_replay(BackendKind::Bus, &topo, d, h, 0, threads);
+            for depth in [1usize, 2, 4] {
+                let (got, got_sim, stale) =
+                    wire_replay(BackendKind::Bus, &topo, d, h, depth, threads);
+                assert_eq!(
+                    got.as_slice(),
+                    want.as_slice(),
+                    "{:?} depth={depth} t={threads}: overlapped bus diverged from BSP",
+                    topo.kind
+                );
+                // The analytic issue-time bill must equal the measured
+                // synchronous charge — on a time-varying topology a wrong
+                // round index shows up here even if the bits agree.
+                assert_eq!(got_sim, want_sim, "{:?} depth={depth}: billing drifted", topo.kind);
+                assert_eq!(stale, 0, "a clean run must drop no frames");
+            }
+        }
+    }
+}
+
+#[test]
+fn overlapped_tcp_matches_bsp_at_every_period_boundary() {
+    // Same contract over real loopback sockets; one topology and depth
+    // sweep keeps the socket count civil.
+    with_timeout(240, || {
+        let (d, h) = (61, 4);
+        let topo = Topology::ring(5);
+        for threads in pool_sizes() {
+            let (want, want_sim, _) = wire_replay(BackendKind::Tcp, &topo, d, h, 0, threads);
+            for depth in [1usize, 2, 4] {
+                let (got, got_sim, stale) =
+                    wire_replay(BackendKind::Tcp, &topo, d, h, depth, threads);
+                assert_eq!(
+                    got.as_slice(),
+                    want.as_slice(),
+                    "depth={depth} t={threads}: overlapped tcp diverged from BSP"
+                );
+                assert_eq!(got_sim, want_sim, "depth={depth}: billing drifted");
+                assert_eq!(stale, 0, "a clean run must drop no frames");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Epoch hygiene: the stale-straggler regression, on both wires.
+// ---------------------------------------------------------------------------
+
+/// The regression body, generic over the wire: `BusCore<Endpoint>` (mpsc
+/// channels) and `BusCore<TcpEndpoint>` (loopback sockets) share every
+/// line of the epoch filter, so the test drives both through one closure.
+fn stale_injection_roundtrip<W: gossip_pga::collective::Wire>(
+    topo: &Topology,
+    d: usize,
+    mk: impl Fn() -> gossip_pga::comm::BusCore<W>,
+) {
+    let pool = WorkerPool::new(2);
+    let mut clean = mk();
+    let mut dirty = mk();
+    let mut p_clean = ParamMatrix::random(&mut Rng::new(71), topo.n, d, 1.0);
+    let mut p_dirty = ParamMatrix::random(&mut Rng::new(71), topo.n, d, 1.0);
+
+    // A straggler from a round that never ran (epoch 99 — e.g. an aborted
+    // attempt on a previous incarnation of the run) lands on the 0→1 edge
+    // before an OVERLAPPED round is issued. Same-stream FIFO order means
+    // the receiver must see (and discard) it before its real frame.
+    dirty.inject_stale_frame(0, 1, 99, vec![1e30_f32; d]).unwrap();
+    let pend = unsafe { dirty.gossip_async(&p_dirty, &pool).unwrap() }.expect("async supported");
+    dirty.finish(&mut p_dirty, pend).unwrap();
+    clean.gossip(&mut p_clean, &pool).unwrap();
+    assert_eq!(p_dirty.as_slice(), p_clean.as_slice(), "stale frame perturbed the overlap round");
+    assert_eq!(dirty.total().stale_frames_dropped, 1, "the discard must be tallied");
+    assert_eq!(clean.total().stale_frames_dropped, 0);
+
+    // A straggler from the superseded PRE-OVERLAP epoch (0 — the round
+    // plane the async issue moved past) before a SYNCHRONOUS round: same
+    // discard, same tally. A NaN payload proves discard means "never
+    // touches the mix", not "mixed with weight zero".
+    dirty.inject_stale_frame(0, 1, 0, vec![f32::NAN; d]).unwrap();
+    dirty.gossip(&mut p_dirty, &pool).unwrap();
+    clean.gossip(&mut p_clean, &pool).unwrap();
+    assert_eq!(p_dirty.as_slice(), p_clean.as_slice(), "stale frame perturbed the sync round");
+    assert_eq!(dirty.total().stale_frames_dropped, 2);
+
+    // Everything the backends billed must agree too: injected frames land
+    // outside every round's measurement window (sync rounds snapshot
+    // traffic at entry; overlapped rounds bill analytically), so the
+    // straggler never pollutes the α–β bill.
+    assert_eq!(dirty.total().scalars_sent, clean.total().scalars_sent);
+    assert_eq!(dirty.total().sim_seconds.to_bits(), clean.total().sim_seconds.to_bits());
+}
+
+#[test]
+fn stale_frame_on_the_bus_is_discarded_counted_and_bit_harmless() {
+    let topo = Topology::ring(5);
+    let d = 9;
+    let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), topo.n);
+    stale_injection_roundtrip(&topo, d, || {
+        BusBackend::with_depth(&topo, d, &costs, d, Compression::None, false, 2)
+    });
+}
+
+#[test]
+fn stale_frame_on_the_socket_is_discarded_counted_and_bit_harmless() {
+    with_timeout(240, || {
+        let topo = Topology::ring(5);
+        let d = 9;
+        let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), topo.n);
+        stale_injection_roundtrip(&topo, d, || {
+            TcpBackend::new_loopback_with_depth(
+                &topo,
+                d,
+                &costs,
+                d,
+                Compression::None,
+                false,
+                "127.0.0.1:0",
+                2,
+            )
+            .unwrap()
+        });
+    });
+}
+
+#[test]
+fn restore_total_rebaselines_the_stale_tally() {
+    // Checkpoint-restore overwrites the cumulative counters; the delta
+    // accounting under stale_frames_dropped must re-baseline, not re-count
+    // pre-restore discards or lose post-restore ones.
+    let topo = Topology::ring(4);
+    let d = 6;
+    let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), topo.n);
+    let pool = WorkerPool::new(1);
+    let mut b = BusBackend::with_depth(&topo, d, &costs, d, Compression::None, false, 1);
+    let mut params = ParamMatrix::random(&mut Rng::new(5), topo.n, d, 1.0);
+    b.inject_stale_frame(0, 1, 7, vec![0.0; d]).unwrap();
+    b.gossip(&mut params, &pool).unwrap();
+    assert_eq!(b.total().stale_frames_dropped, 1);
+
+    // The resumed run continues from a checkpointed tally of 40.
+    let mut resumed = b.total();
+    resumed.stale_frames_dropped = 40;
+    b.restore_total(resumed);
+    assert_eq!(b.total().stale_frames_dropped, 40, "restore overwrites the tally");
+    b.inject_stale_frame(0, 1, 7, vec![0.0; d]).unwrap();
+    b.gossip(&mut params, &pool).unwrap();
+    assert_eq!(b.total().stale_frames_dropped, 41, "post-restore discards keep counting");
+}
+
+// ---------------------------------------------------------------------------
+// Trainer layer: --overlap + --pipeline-depth on bus and tcp, with the
+// checkpoint/resume drained boundaries.
+// ---------------------------------------------------------------------------
+
+fn opts(n: usize, backend: BackendKind, depth: usize, regime: Regime) -> TrainerOptions {
+    TrainerOptions {
+        algorithm: AlgorithmKind::GossipPga,
+        topology: Topology::ring(n),
+        period: 4,
+        aga_init_period: 2,
+        aga_warmup: 4,
+        lr: LrSchedule::Const { lr: 0.2 },
+        momentum: 0.9,
+        nesterov: true,
+        seed: 41,
+        slowmo: Default::default(),
+        cost: CostModel::calibrated_resnet50(),
+        cost_dim: 25_500_000,
+        node_costs: None,
+        stealing: false,
+        pin: false,
+        pipeline_depth: depth,
+        log_every: 5,
+        threads: 2,
+        regime,
+        max_staleness: 0,
+        backend,
+        compression: Compression::None,
+        round_timeout: 0.0,
+        listen: "127.0.0.1:0".to_string(),
+    }
+}
+
+fn trainer(rt: &Arc<Runtime>, backend: BackendKind, depth: usize, regime: Regime) -> Trainer {
+    let n = 4;
+    let (workload, init) = logreg_workload(rt.clone(), n, 256, true, 41).unwrap();
+    Trainer::new(workload, init, opts(n, backend, depth, regime)).unwrap()
+}
+
+fn trainer_overlap_matches_bsp(backend: BackendKind) {
+    let rt = Arc::new(Runtime::load_default().expect("run `make artifacts` first"));
+    let steps = 14; // crosses several k·H boundaries
+    let mut bsp = trainer(&rt, backend, 1, Regime::Bsp);
+    for _ in 0..steps {
+        bsp.step_once().unwrap();
+    }
+    let want_loss = bsp.global_loss().unwrap();
+    for depth in [1usize, 2] {
+        let mut t = trainer(&rt, backend, depth, Regime::Overlap);
+        for _ in 0..steps {
+            t.step_once().unwrap();
+        }
+        // global_loss drains first (eval is a drained boundary), so this
+        // is exactly the comparison the contract promises.
+        let got_loss = t.global_loss().unwrap();
+        assert_eq!(t.pending_rounds(), 0, "depth={depth}: eval left rounds in flight");
+        assert_eq!(
+            t.param_matrix().as_slice(),
+            bsp.param_matrix().as_slice(),
+            "{backend:?} depth={depth}: overlap trajectory diverged from BSP"
+        );
+        assert_eq!(got_loss, want_loss, "{backend:?} depth={depth}: loss diverged");
+        assert_eq!(t.sim_seconds(), bsp.sim_seconds(), "{backend:?} depth={depth}: clocks");
+        // The headline satellite: the wire really overlaps now — zero
+        // fallback rounds, zero stale frames on a clean run.
+        let comm = t.comm_stats();
+        assert_eq!(comm.fallback_rounds, 0, "{backend:?} depth={depth}: fallback tally");
+        assert_eq!(comm.stale_frames_dropped, 0, "{backend:?} depth={depth}: stale tally");
+    }
+}
+
+#[test]
+fn trainer_overlap_on_bus_matches_bsp_with_zero_fallbacks() {
+    trainer_overlap_matches_bsp(BackendKind::Bus);
+}
+
+#[test]
+fn trainer_overlap_on_tcp_matches_bsp_with_zero_fallbacks() {
+    with_timeout(480, || trainer_overlap_matches_bsp(BackendKind::Tcp));
+}
+
+fn mid_overlap_checkpoint_resumes_bit_exactly(backend: BackendKind) {
+    // A checkpoint taken while a wire round is in flight must DRAIN the
+    // pipeline (the snapshot is a BSP step boundary), and the restored run
+    // must land where the uninterrupted run does — on a FRESH backend with
+    // fresh channels/sockets, since the frames themselves are never
+    // checkpointed, only the drained parameters.
+    let rt = Arc::new(Runtime::load_default().expect("run `make artifacts` first"));
+    let depth = 2;
+    let mut straight = trainer(&rt, backend, depth, Regime::Overlap);
+    let mut interrupted = trainer(&rt, backend, depth, Regime::Overlap);
+    let mut saw_inflight = false;
+    for _ in 0..9 {
+        straight.step_once().unwrap();
+        interrupted.step_once().unwrap();
+        saw_inflight |= interrupted.pending_rounds() > 0;
+    }
+    assert!(saw_inflight, "schedule never overlapped — the test lost its subject");
+    let ck = interrupted.checkpoint().unwrap();
+    assert_eq!(interrupted.pending_rounds(), 0, "checkpoint must drain, not drop");
+    let mut resumed = trainer(&rt, backend, depth, Regime::Overlap);
+    resumed.restore(&ck).unwrap();
+    for _ in 0..7 {
+        straight.step_once().unwrap();
+        interrupted.step_once().unwrap();
+        resumed.step_once().unwrap();
+    }
+    let _ = straight.global_loss().unwrap(); // drains all three
+    let _ = interrupted.global_loss().unwrap();
+    let _ = resumed.global_loss().unwrap();
+    assert_eq!(
+        interrupted.param_matrix().as_slice(),
+        straight.param_matrix().as_slice(),
+        "{backend:?}: checkpointing mid-run changed the trajectory"
+    );
+    assert_eq!(
+        resumed.param_matrix().as_slice(),
+        straight.param_matrix().as_slice(),
+        "{backend:?}: restore did not resume bit-exactly"
+    );
+    assert_eq!(resumed.gossip_clock(), straight.gossip_clock());
+    assert_eq!(resumed.comm_stats().fallback_rounds, 0, "{backend:?}: fallback after resume");
+}
+
+#[test]
+fn mid_overlap_checkpoint_on_bus_resumes_bit_exactly() {
+    mid_overlap_checkpoint_resumes_bit_exactly(BackendKind::Bus);
+}
+
+#[test]
+fn mid_overlap_checkpoint_on_tcp_resumes_bit_exactly() {
+    with_timeout(480, || mid_overlap_checkpoint_resumes_bit_exactly(BackendKind::Tcp));
+}
+
+// ---------------------------------------------------------------------------
+// BENCH_9 schema gate (same pattern as transport.rs / pipeline.rs).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bench_nine_schema_holds_when_the_artifact_exists() {
+    // The bench may not have run on this box; when BENCH_9.json IS there,
+    // hold it to the schema EXPERIMENTS.md §Overlap on the wire reads.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_9.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!("BENCH_9.json absent — run `cargo bench --bench perf_hotpath` to emit it");
+        return;
+    };
+    let doc = Json::parse(&text).expect("BENCH_9.json parses");
+    assert_eq!(
+        doc.get("bench").and_then(|j| match j {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }),
+        Some("overlap_wire")
+    );
+    let Some(Json::Arr(rows)) = doc.get("overlap_rows") else {
+        panic!("BENCH_9.json missing array 'overlap_rows'");
+    };
+    assert!(!rows.is_empty(), "'overlap_rows' must not be empty");
+    for row in rows {
+        for field in ["backend", "mode", "depth", "rounds", "n", "d", "mean_seconds", "bit_equal"] {
+            assert!(row.get(field).is_some(), "overlap_rows row missing '{field}'");
+        }
+        // The in-bench bit-equality assertions must have actually held.
+        assert_eq!(row.get("bit_equal"), Some(&Json::Bool(true)), "overlap_rows: bit_equal");
+    }
+}

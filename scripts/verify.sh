@@ -46,6 +46,14 @@
 #      BSP at every k*H / eval / checkpoint drain on mixer, backend and
 #      trainer layers, plus the BENCH_8.json schema gate; the kernel and
 #      mixer/backend layers need no AOT artifacts)
+#  11. overlap-on-the-wire smoke at PROPTEST_CASES=16, swept over
+#      GOSSIP_PGA_TEST_THREADS=1 and =4: the message-passing backends'
+#      async gossip — overlapped/pipelined bus and tcp == BSP at every
+#      drained boundary with fallback_rounds == 0, stale epoch-tagged
+#      frames discarded + counted + bit-harmless on both wires, the
+#      checkpoint-restore stale-tally re-baseline, and the BENCH_9.json
+#      schema gate (the backend replay layers need no AOT artifacts;
+#      every socket test binds 127.0.0.1:0 under a watchdog)
 #
 # Usage: scripts/verify.sh [--fast]
 #   --fast   sets GOSSIP_PGA_FAST=1 so bench-derived tests run at reduced
@@ -102,5 +110,11 @@ PROPTEST_CASES=16 cargo test -q --test mix_kernel
 
 echo "==> hot path: depth-k gossip pipelining == BSP at every drained boundary"
 PROPTEST_CASES=16 cargo test -q --test pipeline
+
+echo "==> overlap on the wire: bus + tcp async gossip == BSP, zero fallbacks (threads=1)"
+PROPTEST_CASES=16 GOSSIP_PGA_TEST_THREADS=1 cargo test -q --test overlap_wire
+
+echo "==> overlap on the wire: bus + tcp async gossip == BSP, zero fallbacks (threads=4)"
+PROPTEST_CASES=16 GOSSIP_PGA_TEST_THREADS=4 cargo test -q --test overlap_wire
 
 echo "==> verify OK"
