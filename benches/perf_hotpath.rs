@@ -29,11 +29,15 @@
 //!   * overlap on the wire: bus + tcp async gossip (epoch-tagged frames)
 //!     at depth {1, 2, 4} vs the same burst run BSP — asserts bit-equal
 //!     finals, equal clocks and zero dropped frames
+//!   * tracing overhead: the same gossip burst with the obs trace plane
+//!     disarmed vs armed (`--trace`), on the shared and bus backends —
+//!     asserts bit-equal finals in-bench (probes observe, never perturb)
 //!
 //! The sweep and transport rows land in BENCH_7.json; the kernel, pinning
 //! and pipelining rows land in BENCH_8.json; the overlap-on-the-wire rows
-//! land in BENCH_9.json. All are anchored at CARGO_MANIFEST_DIR (not the
-//! CWD — `cargo bench` runs from wherever).
+//! land in BENCH_9.json; the tracing-overhead rows land in BENCH_10.json.
+//! All are anchored at CARGO_MANIFEST_DIR (not the CWD — `cargo bench`
+//! runs from wherever).
 //!
 //!     cargo bench --bench perf_hotpath
 
@@ -751,6 +755,114 @@ fn main() -> anyhow::Result<()> {
             ("overlap_rows", Json::Arr(std::mem::take(&mut overlap_rows))),
         ]);
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_9.json");
+        std::fs::write(&path, doc.dump() + "\n")?;
+        println!("wrote {}", path.display());
+    }
+
+    // --- BENCH_10: tracing overhead — the obs plane disarmed vs armed -------
+    // The ISSUE 10 headline rows: the same synchronous gossip burst with
+    // tracing off (every probe one relaxed atomic load) and on (spans into
+    // the per-thread ring). The traced finals must stay bit-identical to
+    // the untraced ones — probes read and annotate, never touch the
+    // arithmetic — and the wall-clock ratio is what `--trace` costs.
+    let mut tracing_rows: Vec<Json> = Vec::new();
+    {
+        let n = 16;
+        let dd = if fast { 250_000usize } else { 1_000_000 };
+        let burst = 8usize;
+        let (warmup, iters) = (1usize, 5);
+        let topo = Topology::one_peer_expo(n);
+        let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), n);
+        let obs_pool = WorkerPool::new(threads_avail.clamp(2, 8));
+        let init = random_matrix(&mut rng, n, dd);
+        for backend_name in ["shared", "bus"] {
+            let mk = || -> Box<dyn CommBackend> {
+                match backend_name {
+                    "shared" => Box::new(SharedBackend::new(
+                        &topo,
+                        dd,
+                        &costs,
+                        25_500_000,
+                        Compression::None,
+                    )),
+                    _ => Box::new(BusBackend::new(
+                        &topo,
+                        dd,
+                        &costs,
+                        25_500_000,
+                        Compression::None,
+                        false,
+                    )),
+                }
+            };
+            assert!(!gossip_pga::obs::enabled(), "trace plane left armed");
+            let mut plain_b = mk();
+            let mut p_plain = init.clone();
+            let s_plain = measure(warmup, iters, || {
+                for _ in 0..burst {
+                    plain_b.gossip(&mut p_plain, &obs_pool).unwrap();
+                }
+            });
+            let mut traced_b = mk();
+            let mut p_traced = init.clone();
+            gossip_pga::obs::start(1 << 16);
+            let s_traced = measure(warmup, iters, || {
+                for _ in 0..burst {
+                    traced_b.gossip(&mut p_traced, &obs_pool).unwrap();
+                }
+            });
+            let data = gossip_pga::obs::stop_and_collect();
+            assert_eq!(
+                traced_b.gossip_clock(),
+                plain_b.gossip_clock(),
+                "{backend_name}: traced run covered a different round count"
+            );
+            assert_eq!(p_traced, p_plain, "{backend_name}: tracing perturbed the gossip bits");
+            let spans = data.total_spans();
+            assert_eq!(
+                spans,
+                (warmup + iters) * burst,
+                "{backend_name}: one span per traced gossip round"
+            );
+            t.rowv(vec![
+                format!("gossip burst, untraced ({backend_name})"),
+                format!("one-peer-expo n = {n}, d = {dd}, {burst} rounds/burst"),
+                fmt_duration(s_plain.mean),
+                fmt_duration(s_plain.p95),
+                format!("{:.1} rounds/s", burst as f64 / s_plain.mean),
+            ]);
+            t.rowv(vec![
+                format!("gossip burst, traced ({backend_name})"),
+                format!("one-peer-expo n = {n}, d = {dd}, {burst} rounds/burst"),
+                fmt_duration(s_traced.mean),
+                fmt_duration(s_traced.p95),
+                format!("{:.3}x vs untraced", s_traced.mean / s_plain.mean),
+            ]);
+            for (traced, s) in [(false, &s_plain), (true, &s_traced)] {
+                tracing_rows.push(jsonio::obj(vec![
+                    ("backend", Json::Str(backend_name.into())),
+                    ("traced", Json::Bool(traced)),
+                    ("rounds", Json::Num(burst as f64)),
+                    ("n", Json::Num(n as f64)),
+                    ("d", Json::Num(dd as f64)),
+                    ("mean_seconds", Json::Num(s.mean)),
+                    ("p95_seconds", Json::Num(s.p95)),
+                    ("spans", Json::Num(if traced { spans as f64 } else { 0.0 })),
+                    ("bit_equal", Json::Bool(true)),
+                ]));
+            }
+        }
+    }
+
+    // BENCH_10: the tracing-overhead rows, same anchoring as BENCH_7/8/9,
+    // written before the PJRT sections so artifact-free boxes still emit it.
+    {
+        let doc = jsonio::obj(vec![
+            ("bench", Json::Str("obs_trace".into())),
+            ("fast", Json::Bool(fast)),
+            ("tracing_rows", Json::Arr(std::mem::take(&mut tracing_rows))),
+        ]);
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_10.json");
         std::fs::write(&path, doc.dump() + "\n")?;
         println!("wrote {}", path.display());
     }

@@ -637,6 +637,10 @@ impl<W: Wire> BusCore<W> {
         let per = (n + t - 1) / t;
         let alive = &self.alive;
         let muted = &self.muted;
+        // Sub-phase spans (wall only; the enclosing global-average span
+        // carries the cost-model bill): reduce-scatter covers phases A + B,
+        // all-gather covers phase C.
+        let rs_span = crate::obs::span(crate::obs::Phase::ReduceScatter, crate::obs::CLUSTER);
         // Phase A — reduce-scatter sends: alive node i ships chunk c of
         // its row directly to the chunk's owner ranks[c] (empty chunks
         // ship nothing).
@@ -753,6 +757,8 @@ impl<W: Wire> BusCore<W> {
                     .collect(),
             )?;
         }
+        drop(rs_span);
+        let ag_span = crate::obs::span(crate::obs::Phase::AllGather, crate::obs::CLUSTER);
         // Phase C — assemble: every alive node fills the rest of its mean
         // row from the other owners' reduced chunks (its own is already
         // in place); dead (and defensively muted) nodes carry their
@@ -792,6 +798,7 @@ impl<W: Wire> BusCore<W> {
                     .collect(),
             )?;
         }
+        drop(ag_span);
         params.swap_data(&mut self.ring[head]);
         let charge = self.charge_since(&before, BarrierScope::Global);
         self.total.merge(charge.stats);
@@ -1109,8 +1116,12 @@ impl<W: Wire> CommBackend for BusCore<W> {
             "synchronous gossip with {} overlapped round(s) in flight — drain first",
             self.in_flight.len()
         );
+        let mut sp = crate::obs::span(crate::obs::Phase::Gossip, crate::obs::CLUSTER);
         let result = self.gossip_inner(params, pool);
         self.failed |= result.is_err();
+        if let Ok(charge) = &result {
+            sp.set_sim(charge.stats.sim_seconds);
+        }
         result
     }
 
@@ -1136,8 +1147,12 @@ impl<W: Wire> CommBackend for BusCore<W> {
             self.failed = true;
             return Err(e);
         }
+        let mut sp = crate::obs::span(crate::obs::Phase::GlobalAverage, crate::obs::CLUSTER);
         let result = self.global_average_inner(params, pool);
         self.failed |= result.is_err();
+        if let Ok(charge) = &result {
+            sp.set_sim(charge.stats.sim_seconds);
+        }
         result
     }
 

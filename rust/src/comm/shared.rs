@@ -131,6 +131,7 @@ impl CommBackend for SharedBackend {
     }
 
     fn gossip(&mut self, params: &mut ParamMatrix, pool: &WorkerPool) -> Result<CommCharge> {
+        let mut sp = crate::obs::span(crate::obs::Phase::Gossip, crate::obs::CLUSTER);
         let round = self.mixer.gossip_clock % self.rounds;
         let charge = if self.compressed() {
             // Compressed transmit path: per-node error-feedback codecs feed
@@ -194,6 +195,7 @@ impl CommBackend for SharedBackend {
                 barrier: BarrierScope::Neighborhood { round },
             }
         };
+        sp.set_sim(charge.stats.sim_seconds);
         self.total.merge(charge.stats);
         Ok(charge)
     }
@@ -203,6 +205,7 @@ impl CommBackend for SharedBackend {
         params: &mut ParamMatrix,
         pool: &WorkerPool,
     ) -> Result<CommCharge> {
+        let mut sp = crate::obs::span(crate::obs::Phase::GlobalAverage, crate::obs::CLUSTER);
         self.mixer.global_average(params, pool)?;
         let (scalars, msgs) = self.allreduce_traffic;
         let node_seconds = self.allreduce_node_sim.clone();
@@ -218,6 +221,7 @@ impl CommBackend for SharedBackend {
             node_seconds,
             barrier: BarrierScope::Global,
         };
+        sp.set_sim(charge.stats.sim_seconds);
         self.total.merge(charge.stats);
         Ok(charge)
     }

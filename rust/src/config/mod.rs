@@ -287,6 +287,14 @@ pub struct ExperimentConfig {
     pub topk_frac: f64,
     /// Quantization block size (when compression = "int8").
     pub int8_block: usize,
+    /// Trace output path (`trace.path` / `--trace out.json`): write the
+    /// run's per-phase span timeline as Chrome trace-event JSON. Empty
+    /// (the default) = tracing off — the probes are no-ops and the run
+    /// is byte-for-byte the untraced one.
+    pub trace_path: String,
+    /// Per-worker span ring capacity (`trace.capacity`): oldest spans are
+    /// evicted past this, counted in the `spans_dropped` counter.
+    pub trace_capacity: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -330,6 +338,8 @@ impl Default for ExperimentConfig {
             compression: "none".into(),
             topk_frac: 0.1,
             int8_block: 1024,
+            trace_path: String::new(),
+            trace_capacity: 65536,
         }
     }
 }
@@ -406,6 +416,8 @@ impl ExperimentConfig {
             compression: doc.get_str("comm.compression", &d.compression)?,
             topk_frac: doc.get_f64("comm.topk_frac", d.topk_frac)?,
             int8_block: doc.get_usize("comm.int8_block", d.int8_block)?,
+            trace_path: doc.get_str("trace.path", &d.trace_path)?,
+            trace_capacity: doc.get_usize("trace.capacity", d.trace_capacity)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -499,6 +511,13 @@ impl ExperimentConfig {
             );
         }
         self.compression_kind()?;
+        // Tracing: a zero-capacity ring can hold no span at all — every
+        // probe would evict itself, which is never what the user meant.
+        anyhow::ensure!(
+            self.trace_capacity >= 1,
+            "trace.capacity must be >= 1 spans per worker ring (got 0) — \
+             shrink the traced window instead of the ring"
+        );
         let regime = self.regime_kind()?;
         if self.overlap && regime != Regime::Overlap {
             bail!(
@@ -1114,6 +1133,28 @@ mod tests {
         // allowed when the OS can still migrate threads).
         let doc = Toml::parse(&format!("[train]\nthreads = {}\n", cores + 1)).unwrap();
         ExperimentConfig::from_toml(&doc).unwrap();
+    }
+
+    #[test]
+    fn trace_keys_parse_and_validate() {
+        let doc = Toml::parse("[trace]\npath = \"out.json\"\ncapacity = 128\n").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.trace_path, "out.json");
+        assert_eq!(cfg.trace_capacity, 128);
+        // Defaults: tracing off, a generous ring.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.trace_path, "");
+        assert_eq!(d.trace_capacity, 65536);
+        // A zero-capacity ring can hold no span — rejected with a clear
+        // message, not a mysteriously empty trace.
+        let doc = Toml::parse("[trace]\ncapacity = 0\n").unwrap();
+        let err = ExperimentConfig::from_toml(&doc).unwrap_err().to_string();
+        assert!(err.contains("trace.capacity must be >= 1"), "{err}");
+        // Type errors surface as such.
+        let doc = Toml::parse("[trace]\npath = 7\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err(), "path must be a string");
+        let doc = Toml::parse("[trace]\ncapacity = \"big\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err(), "capacity must be an integer");
     }
 
     #[test]

@@ -82,6 +82,7 @@ use crate::eventsim::{AsyncGossip, Regime};
 use crate::exec::WorkerPool;
 use crate::metrics::{consensus_distance_pooled, History, Record};
 use crate::model;
+use crate::obs::{self, Phase};
 use crate::optim::{LrSchedule, Optimizer};
 use crate::params::ParamMatrix;
 use crate::rng::Rng;
@@ -446,8 +447,9 @@ impl Trainer {
         // order — so surface that once at startup and count every fallback
         // in CommStats::fallback_rounds.
         if opts.regime == Regime::Overlap && !backend.supports_overlap() {
-            eprintln!(
-                "warning: compressed transmit cannot overlap (error-feedback state is \
+            crate::obs::warn_once!(
+                "coordinator.compressed-overlap-fallback",
+                "compressed transmit cannot overlap (error-feedback state is \
                  ordered) — overlap rounds on the {} backend will run synchronously \
                  (counted in comm fallback_rounds)",
                 opts.backend.name()
@@ -602,6 +604,22 @@ impl Trainer {
         total
     }
 
+    /// The run's unified counter registry ([`obs::Counters`]): every
+    /// scattered tally — wire drops, round-machine repairs, overlap
+    /// fallbacks, trace evictions, pool panics — under its stable name.
+    /// This is THE source the CSV columns, the JSON arrays and the
+    /// `# traffic:` line all render from.
+    pub fn counters(&self) -> obs::Counters {
+        obs::Counters {
+            stale_frames: self.backend.total().stale_frames_dropped,
+            peer_drops: self.peer_drops(),
+            row_renorms: self.row_renorms(),
+            fallback_rounds: self.fallback_rounds,
+            spans_dropped: obs::thread_spans_dropped(),
+            pool_panics: self.pool.panic_count(),
+        }
+    }
+
     /// Which execution regime this trainer runs (bsp | overlap | async).
     pub fn regime(&self) -> Regime {
         self.opts.regime
@@ -667,9 +685,16 @@ impl Trainer {
     /// visible state is bit-identical to the BSP schedule at the same
     /// step. No-op when nothing is pending (always, in BSP mode).
     pub fn drain(&mut self) -> Result<()> {
-        while let Some(pending) = self.pending.pop_front() {
-            self.backend.finish(&mut self.params, pending)?;
+        if self.pending.is_empty() {
+            return Ok(());
         }
+        let mut sp = obs::span(Phase::Drain, obs::CLUSTER);
+        let mut sim = 0.0;
+        while let Some(pending) = self.pending.pop_front() {
+            let charge = self.backend.finish(&mut self.params, pending)?;
+            sim += charge.stats.sim_seconds;
+        }
+        sp.set_sim(sim);
         Ok(())
     }
 
@@ -688,11 +713,16 @@ impl Trainer {
         let k = self.step;
         let lr = self.opts.lr.at(k);
         if overlap {
-            self.sample_phase()?;
+            {
+                let _sp = obs::span(Phase::Sample, obs::CLUSTER);
+                self.sample_phase()?;
+            }
             self.drain()?;
+            let _sp = obs::span(Phase::Grad, obs::CLUSTER);
             self.grad_phase(lr, true)?;
         } else {
             debug_assert!(self.pending.is_empty());
+            let _sp = obs::span(Phase::Grad, obs::CLUSTER);
             self.grad_phase(lr, false)?;
         }
         let mean_loss = self.mean_loss();
@@ -720,30 +750,45 @@ impl Trainer {
             {
                 self.slowmo_outer_update(lr);
             }
-            self.clocks.advance(&self.node_costs.compute, &charge.node_seconds, charge.barrier);
+            advance_clocks(
+                &mut self.clocks,
+                &self.node_costs.compute,
+                &charge.node_seconds,
+                charge.barrier,
+            );
             self.step += 1;
             return Ok(action);
         }
         match action {
             CommAction::None => {
-                self.clocks.advance(&self.node_costs.compute, &self.no_comm, BarrierScope::None);
+                advance_clocks(
+                    &mut self.clocks,
+                    &self.node_costs.compute,
+                    &self.no_comm,
+                    BarrierScope::None,
+                );
             }
             CommAction::Gossip => {
                 let mut issued = None;
                 if overlap {
+                    let mut sp = obs::span(Phase::GossipIssue, obs::CLUSTER);
                     // SAFETY: until drain() completes this round, the
                     // trainer never takes &mut to params (accessors are
                     // read-only, every mutating path drains first), never
                     // drops the backend before the pending mix (field
                     // order), and never leaks the PendingComm.
                     issued = unsafe { self.backend.gossip_async(&self.params, &self.pool) }?;
+                    if let Some(pending) = &issued {
+                        sp.set_sim(pending.charge().stats.sim_seconds);
+                    }
                 }
                 match issued {
                     Some(pending) => {
                         // Clocks charge at issue time — the round WILL
                         // complete (or the run fails), same as BSP billing.
                         let charge = pending.charge();
-                        self.clocks.advance(
+                        advance_clocks(
+                            &mut self.clocks,
                             &self.node_costs.compute,
                             &charge.node_seconds,
                             charge.barrier,
@@ -762,7 +807,8 @@ impl Trainer {
                             self.fallback_rounds += 1;
                         }
                         let charge = self.backend.gossip(&mut self.params, &self.pool)?;
-                        self.clocks.advance(
+                        advance_clocks(
+                            &mut self.clocks,
                             &self.node_costs.compute,
                             &charge.node_seconds,
                             charge.barrier,
@@ -775,7 +821,8 @@ impl Trainer {
                 if self.opts.algorithm == AlgorithmKind::SlowMo {
                     self.slowmo_outer_update(lr);
                 }
-                self.clocks.advance(
+                advance_clocks(
+                    &mut self.clocks,
                     &self.node_costs.compute,
                     &charge.node_seconds,
                     charge.barrier,
@@ -1209,6 +1256,7 @@ impl Trainer {
                 let loss =
                     if cheap_eval { self.global_loss()? } else { self.mean_loss() };
                 let comm = self.comm_stats();
+                let counters = self.counters();
                 let (stale_max, stale_mean) = self.staleness();
                 hist.push(Record {
                     step: self.step - 1,
@@ -1224,14 +1272,39 @@ impl Trainer {
                     stale_max,
                     stale_mean,
                     link_util: self.link_utilization(),
-                    peer_drops: self.peer_drops(),
-                    row_renorms: self.row_renorms(),
-                    stale_frames: comm.stale_frames_dropped,
+                    peer_drops: counters.peer_drops,
+                    row_renorms: counters.row_renorms,
+                    stale_frames: counters.stale_frames,
+                    fallback_rounds: counters.fallback_rounds,
+                    spans_dropped: counters.spans_dropped,
+                    pool_panics: counters.pool_panics,
                 });
             }
         }
         self.drain()?;
         Ok(hist)
+    }
+}
+
+/// Advance the per-node clocks by one `compute + comm` charge under
+/// `barrier` and — when tracing — emit the barrier stall the advance
+/// opened as an instant probe. The clock arithmetic is identical traced
+/// or untraced (the probe only reads the before/after wait totals).
+fn advance_clocks(
+    clocks: &mut VirtualClocks,
+    compute: &[f64],
+    comm: &[f64],
+    barrier: BarrierScope,
+) {
+    if obs::enabled() {
+        let before = clocks.total_wait();
+        clocks.advance(compute, comm, barrier);
+        let wait = clocks.total_wait() - before;
+        if wait > 0.0 {
+            obs::instant(Phase::Barrier, obs::CLUSTER, wait);
+        }
+    } else {
+        clocks.advance(compute, comm, barrier);
     }
 }
 

@@ -35,6 +35,7 @@ use crate::collective::stalled_peer;
 use crate::comm::{CommBackend, CommCharge, CommStats};
 use crate::costmodel::BarrierScope;
 use crate::exec::WorkerPool;
+use crate::obs::{self, Phase};
 use crate::params::ParamMatrix;
 
 /// Checkpointable snapshot of the round machine (the v7 block).
@@ -111,7 +112,10 @@ impl RoundMachine {
             });
         }
         // Announce: the deadline is the round's membership budget.
-        backend.set_recv_deadline(Some(self.timeout));
+        {
+            let _sp = obs::span(Phase::RoundAnnounce, obs::CLUSTER);
+            backend.set_recv_deadline(Some(self.timeout));
+        }
         let result = loop {
             ensure!(
                 self.alive.iter().any(|&a| a),
@@ -119,12 +123,21 @@ impl RoundMachine {
                 self.round
             );
             // Gossip: the collective itself, deadline in force.
-            let attempt = match action {
-                CommAction::Gossip => backend.gossip(params, pool),
-                CommAction::GlobalAverage => backend.global_average(params, pool),
-                CommAction::None => unreachable!("handled above"),
+            let attempt = {
+                let mut sp = obs::span(Phase::RoundGossip, obs::CLUSTER);
+                let attempt = match action {
+                    CommAction::Gossip => backend.gossip(params, pool),
+                    CommAction::GlobalAverage => backend.global_average(params, pool),
+                    CommAction::None => unreachable!("handled above"),
+                };
+                if let Ok(charge) = &attempt {
+                    sp.set_sim(charge.stats.sim_seconds);
+                }
+                attempt
             };
-            // Collect: classify the outcome.
+            // Collect: classify the outcome (spans the drop/renorm/reset
+            // repair when a peer stalled; near-zero on a clean round).
+            let _collect = obs::span(Phase::RoundCollect, obs::CLUSTER);
             match attempt {
                 Ok(charge) => break Ok(charge),
                 Err(e) => {
@@ -143,9 +156,12 @@ impl RoundMachine {
             }
         };
         // Commit: disarm; only a successful round advances the counter.
-        backend.set_recv_deadline(None);
-        if result.is_ok() {
-            self.round += 1;
+        {
+            let _sp = obs::span(Phase::RoundCommit, obs::CLUSTER);
+            backend.set_recv_deadline(None);
+            if result.is_ok() {
+                self.round += 1;
+            }
         }
         result
     }

@@ -840,6 +840,18 @@ impl AsyncGossip {
     }
 
     fn record(&mut self, kind: u8, a: usize, b: usize, iter: usize, time: f64) {
+        if crate::obs::enabled() {
+            // Event-plane probes: zero-width instants stamped with the
+            // event's virtual time; deliveries attribute to the receiver,
+            // everything else to the acting node.
+            let (phase, node) = match kind {
+                EV_DELIVER => (crate::obs::Phase::EvDeliver, b),
+                EV_MIX => (crate::obs::Phase::EvMix, a),
+                EV_READY => (crate::obs::Phase::EvReady, a),
+                _ => (crate::obs::Phase::EvChurn, a),
+            };
+            crate::obs::instant(phase, node as u32, time);
+        }
         if let Some(t) = self.trace.as_mut() {
             t.push(TraceEv {
                 kind,

@@ -77,7 +77,7 @@
 //! A size-1 pool has no worker threads, so pinning is a no-op there.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -105,6 +105,10 @@ struct Shared {
     available: Condvar,
     /// Set when any job panics; checked (and refused) on every submission.
     poisoned: AtomicBool,
+    /// How many jobs have panicked (normally 0 — the first one poisons
+    /// the pool; surfaced through [`WorkerPool::panic_count`] into the
+    /// `pool_panics` counter).
+    panics: AtomicU64,
 }
 
 /// A fixed-size pool of parked worker threads (see module docs).
@@ -159,6 +163,7 @@ impl WorkerPool {
             queue: Mutex::new(Queue { tasks: VecDeque::new(), shutdown: false }),
             available: Condvar::new(),
             poisoned: AtomicBool::new(false),
+            panics: AtomicU64::new(0),
         });
         let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
         let handles = if size >= 2 {
@@ -196,6 +201,13 @@ impl WorkerPool {
     /// the request may have fallen back to unpinned with a warning).
     pub fn pinned(&self) -> bool {
         self.pin
+    }
+
+    /// How many jobs have panicked on this pool (normally 0; the first
+    /// panic poisons the pool, so a finished run reporting > 0 means a
+    /// fallback path absorbed it).
+    pub fn panic_count(&self) -> u64 {
+        self.shared.panics.load(Ordering::Relaxed)
     }
 
     /// THE sharding policy: how many ways to split `items` units of work.
@@ -327,6 +339,7 @@ fn execute(shared: &Shared, idx: usize, job: Job<'static>, tx: &Sender<Outcome>)
         Ok(Ok(())) => Ok(()),
         Ok(Err(e)) => Err(format!("{e:#}")),
         Err(payload) => {
+            shared.panics.fetch_add(1, Ordering::Relaxed);
             shared.poisoned.store(true, Ordering::Release);
             Err(format!("job panicked: {}", panic_message(&payload)))
         }
@@ -372,13 +385,11 @@ fn pin_current_thread(_core: usize) {
 }
 
 fn warn_pin_unavailable() {
-    static WARNED: AtomicBool = AtomicBool::new(false);
-    if !WARNED.swap(true, Ordering::Relaxed) {
-        eprintln!(
-            "warning: core pinning unavailable (affinity call failed or unsupported \
-             platform); pool threads run unpinned"
-        );
-    }
+    crate::warn_once!(
+        "exec.pin-unavailable",
+        "core pinning unavailable (affinity call failed or unsupported \
+         platform); pool threads run unpinned"
+    );
 }
 
 /// A countdown latch: `wait` blocks until `count` arrivals have happened.

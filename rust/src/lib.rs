@@ -69,7 +69,12 @@
 //!   (`--round-timeout`: deadline → drop-by-renormalization → rejoin,
 //!   membership in checkpoint v7).
 //! * [`metrics`] — loss curves, consensus distance, transient-stage
-//!   detection, reporters.
+//!   detection, reporters (one [`metrics::COLUMNS`] registry drives the
+//!   CSV header and the JSON keys).
+//! * [`obs`] — the observability plane: per-phase span tracing into
+//!   lock-free per-thread rings (`--trace out.json`, Chrome trace-event /
+//!   Perfetto export, the `trace` subcommand's summary), the unified
+//!   [`obs::Counters`] registry, and the [`obs::warn_once!`] sink.
 //! * [`population`] — the virtual population plane: scenario scripting
 //!   (crash / rejoin / flaky links / region tiers) and the n = 10^5 sweep
 //!   driver over pooled payload storage ([`params::pool`]); select with
@@ -90,6 +95,7 @@ pub mod jsonio;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod params;
 pub mod population;

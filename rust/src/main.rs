@@ -4,9 +4,10 @@
 //!   train [--config exp.toml] [--set key=value ...] [--threads N]
 //!         [--regime bsp|overlap|async] [--max-staleness S]
 //!         [--overlap] [--stealing] [--pin] [--pipeline-depth K]
-//!         [--backend shared|bus|tcp]
+//!         [--backend shared|bus|tcp] [--trace out.json]
 //!         [--listen host:port] [--round-timeout SECS]
 //!         [--straggler idx:factor[,idx:factor...]]    run one experiment
+//!   trace out.json                                    summarize a trace file
 //!   topo  [--n N]                                     topology/beta report
 //!   check                                             verify artifacts load
 //!
@@ -33,6 +34,7 @@ fn run() -> Result<()> {
     match args.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
         Some("topo") => cmd_topo(&args[1..]),
         Some("check") => cmd_check(),
         Some("help") | None => {
@@ -51,9 +53,10 @@ fn print_help() {
            gossip-pga train [--config exp.toml] [--set key=value ...] [--threads N]\n\
                             [--regime bsp|overlap|async] [--max-staleness S]\n\
                             [--overlap] [--stealing] [--pin] [--pipeline-depth K]\n\
-                            [--backend shared|bus|tcp]\n\
+                            [--backend shared|bus|tcp] [--trace out.json]\n\
                             [--listen host:port] [--round-timeout SECS]\n\
                             [--straggler idx:factor[,idx:factor...]]\n\
+           gossip-pga trace out.json\n\
            gossip-pga sweep [--virtual-n N] [--surrogate] [--dim D] [--steps K]\n\
                             [--topology T] [--algo A] [--period H] [--max-staleness S]\n\
                             [--churn SCRIPT] [--churn-pairs P --churn-horizon SECS]\n\
@@ -71,6 +74,11 @@ fn print_help() {
            restore@t:src>dst (comma-separated), or seeded pairs via\n\
            --churn-pairs/--churn-horizon. --regions k:mult slows cross-region\n\
            links by mult.\n\
+         \n\
+         trace: summarize a Chrome trace-event file written by train --trace\n\
+           into a per-phase table (count, p50/p99/total wall, sim seconds, per\n\
+           node) plus the final counter-track values. The file also loads\n\
+           directly in Perfetto (ui.perfetto.dev) or chrome://tracing.\n\
          \n\
          Config keys (TOML paths, also usable with --set):\n\
            cluster.nodes, cluster.topology (ring|grid|star|full|expo|one-peer-expo)\n\
@@ -102,6 +110,11 @@ fn print_help() {
              past it is dropped by renormalizing its mixing row. 0 = off;\n\
              needs bus|tcp; --round-timeout is shorthand)\n\
            comm.compression (none|topk|int8), comm.topk_frac, comm.int8_block\n\
+           trace.path (write per-phase span timeline as Chrome trace-event\n\
+             JSON; --trace out.json is shorthand. Empty = off: every probe is\n\
+             a no-op and the run is byte-for-byte the untraced one)\n\
+           trace.capacity (per-worker span ring size, default 65536; oldest\n\
+             spans evict past it, counted in spans_dropped)\n\
            cost.alpha / cost.theta / cost.compute (scalar or per-node array)\n\
            cost.straggler (\"idx:factor,...\"; --straggler is shorthand and accepts\n\
              a comma-separated list (--straggler 0:4,3:2) or repeats; duplicate\n\
@@ -239,10 +252,22 @@ fn cmd_train(args: &[String]) -> Result<()> {
                     .with_context(|| format!("--max-staleness wants an integer, got '{val}'"))?;
                 doc.values.extend(parsed.values);
             }
+            "trace" => {
+                let parsed = Toml::parse(&format!("trace.path = \"{val}\""))
+                    .with_context(|| format!("--trace wants an output path, got '{val}'"))?;
+                doc.values.extend(parsed.values);
+            }
             other => bail!("unknown flag --{other}"),
         }
     }
     let cfg = ExperimentConfig::from_toml(&doc).context("building experiment config")?;
+    // Trace preflight: fail on an unwritable path BEFORE artifacts load and
+    // the run burns minutes (the real write happens after training).
+    if !cfg.trace_path.is_empty() {
+        let path = std::path::Path::new(&cfg.trace_path);
+        std::fs::File::create(path)
+            .with_context(|| format!("--trace: cannot write trace file '{}'", path.display()))?;
+    }
     let topo = cfg.topology();
     println!(
         "# {} | {} nodes on {} (beta = {}) | H = {} | {} steps | {} thread(s){}{}{}{} | {} backend{}",
@@ -292,9 +317,28 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let opts = TrainerOptions::from_config(&cfg, cost_dim);
     let mut trainer = coordinator::Trainer::new(workload, init, opts)?;
 
+    if !cfg.trace_path.is_empty() {
+        gossip_pga::obs::start(cfg.trace_capacity);
+    }
     let t0 = std::time::Instant::now();
     let hist = trainer.run(cfg.steps, cfg.algorithm.name())?;
     let wall = t0.elapsed().as_secs_f64();
+    // Counters BEFORE stop: spans_dropped reads the live thread ring.
+    let counters = trainer.counters();
+    if !cfg.trace_path.is_empty() {
+        let data = gossip_pga::obs::stop_and_collect();
+        let doc = gossip_pga::obs::chrome::export(&data, &counters);
+        let path = std::path::Path::new(&cfg.trace_path);
+        std::fs::write(path, doc.dump())
+            .with_context(|| format!("writing trace file '{}'", path.display()))?;
+        println!(
+            "# trace: {} span(s) across {} thread(s) ({} dropped) written to {}",
+            data.total_spans(),
+            data.threads.len(),
+            data.total_dropped(),
+            path.display()
+        );
+    }
 
     for r in &hist.records {
         println!(
@@ -311,13 +355,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
     );
     let comm = trainer.comm_stats();
     println!(
-        "# traffic ({} backend): {} msgs | {} scalars ({:.2} MB) | {:.1}s comm sim time | {} stale frame(s) dropped",
-        trainer.backend_kind().name(),
-        comm.msgs,
-        comm.scalars_sent,
-        comm.bytes_sent() as f64 / 1e6,
-        comm.sim_seconds,
-        comm.stale_frames_dropped
+        "{}",
+        gossip_pga::metrics::traffic_line(trainer.backend_kind().name(), &comm, &counters)
     );
     // Heterogeneous cost tables always get the breakdown; so do runs where
     // structural asymmetry (star hubs, uneven bus chunks) opened real
@@ -475,6 +514,16 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         report.write_json(path)?;
         println!("# report written to {}", path.display());
     }
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let path = match args {
+        [p] if !p.starts_with("--") => std::path::Path::new(p),
+        _ => bail!("usage: gossip-pga trace out.json (a file written by train --trace)"),
+    };
+    let doc = gossip_pga::obs::chrome::load(path)?;
+    print!("{}", gossip_pga::obs::chrome::summarize(&doc)?);
     Ok(())
 }
 

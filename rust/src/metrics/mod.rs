@@ -8,9 +8,46 @@
 //! detector: the last iteration after which the algorithm's curve stays
 //! within a relative `tol` band of the parallel-SGD reference.
 
+use crate::comm::CommStats;
 use crate::exec::WorkerPool;
 use crate::jsonio::{self, Json};
+use crate::obs::Counters;
 use crate::params::ParamMatrix;
+
+/// The logged column set, in CSV order — the SINGLE source the CSV
+/// header, the JSON keys, and the column-parity test all read. Adding a
+/// [`Record`] field means adding its name here and its accessor in
+/// [`Record::column`]; nothing else (a mismatch fails the
+/// `columns_cover_every_reporter` test instead of silently skipping a
+/// reporter).
+pub const COLUMNS: [&str; 19] = [
+    "step",
+    "loss",
+    "consensus",
+    "lr",
+    "sim_seconds",
+    "comm_scalars",
+    "comm_msgs",
+    "sim_min_seconds",
+    "straggler_slack",
+    "barrier_wait",
+    "stale_max",
+    "stale_mean",
+    "link_util",
+    "peer_drops",
+    "row_renorms",
+    "stale_frames",
+    "fallback_rounds",
+    "spans_dropped",
+    "pool_panics",
+];
+
+/// A column value: integers stay integers in both the CSV cell and the
+/// JSON array element.
+enum ColValue {
+    U(u64),
+    F(f64),
+}
 
 /// One logged training step.
 #[derive(Clone, Copy, Debug)]
@@ -62,6 +99,43 @@ pub struct Record {
     /// [`crate::comm::CommStats::stale_frames_dropped`]). Always 0 on a
     /// clean overlapped run.
     pub stale_frames: u64,
+    /// Overlap gossip rounds that fell back to the synchronous path
+    /// (cumulative; compressed transmit is the one remaining fallback).
+    pub fallback_rounds: u64,
+    /// Trace spans evicted from the run's ring buffer so far (drop-oldest
+    /// overflow; always 0 when `--trace` is off).
+    pub spans_dropped: u64,
+    /// Worker-pool jobs that panicked (the pool poisons itself on the
+    /// first, so a finished run normally logs 0).
+    pub pool_panics: u64,
+}
+
+impl Record {
+    /// The value of the named [`COLUMNS`] entry.
+    fn column(&self, name: &str) -> ColValue {
+        match name {
+            "step" => ColValue::U(self.step as u64),
+            "loss" => ColValue::F(self.loss),
+            "consensus" => ColValue::F(self.consensus),
+            "lr" => ColValue::F(self.lr),
+            "sim_seconds" => ColValue::F(self.sim_seconds),
+            "comm_scalars" => ColValue::U(self.comm_scalars),
+            "comm_msgs" => ColValue::U(self.comm_msgs),
+            "sim_min_seconds" => ColValue::F(self.sim_min_seconds),
+            "straggler_slack" => ColValue::F(self.straggler_slack),
+            "barrier_wait" => ColValue::F(self.barrier_wait),
+            "stale_max" => ColValue::U(self.stale_max),
+            "stale_mean" => ColValue::F(self.stale_mean),
+            "link_util" => ColValue::F(self.link_util),
+            "peer_drops" => ColValue::U(self.peer_drops),
+            "row_renorms" => ColValue::U(self.row_renorms),
+            "stale_frames" => ColValue::U(self.stale_frames),
+            "fallback_rounds" => ColValue::U(self.fallback_rounds),
+            "spans_dropped" => ColValue::U(self.spans_dropped),
+            "pool_panics" => ColValue::U(self.pool_panics),
+            other => unreachable!("column '{other}' is not in metrics::COLUMNS"),
+        }
+    }
 }
 
 /// A training history for one run.
@@ -100,98 +174,59 @@ impl History {
 
     pub fn to_csv(&self) -> String {
         // New columns append after the PR-3 layout so downstream readers
-        // keyed on the old prefix keep working.
-        let mut out = String::from(
-            "step,loss,consensus,lr,sim_seconds,comm_scalars,comm_msgs,\
-             sim_min_seconds,straggler_slack,barrier_wait,\
-             stale_max,stale_mean,link_util,peer_drops,row_renorms,stale_frames\n",
-        );
+        // keyed on the old prefix keep working; the header IS the
+        // [`COLUMNS`] registry.
+        let mut out = COLUMNS.join(",");
+        out.push('\n');
         for r in &self.records {
-            out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
-                r.step,
-                r.loss,
-                r.consensus,
-                r.lr,
-                r.sim_seconds,
-                r.comm_scalars,
-                r.comm_msgs,
-                r.sim_min_seconds,
-                r.straggler_slack,
-                r.barrier_wait,
-                r.stale_max,
-                r.stale_mean,
-                r.link_util,
-                r.peer_drops,
-                r.row_renorms,
-                r.stale_frames
-            ));
+            let cells: Vec<String> = COLUMNS
+                .iter()
+                .map(|c| match r.column(c) {
+                    ColValue::U(v) => v.to_string(),
+                    ColValue::F(v) => v.to_string(),
+                })
+                .collect();
+            out.push_str(&cells.join(","));
+            out.push('\n');
         }
         out
     }
 
     pub fn to_json(&self) -> Json {
-        jsonio::obj(vec![
-            ("label", Json::Str(self.label.clone())),
-            ("steps", jsonio::num_arr(&self.records.iter().map(|r| r.step as f64).collect::<Vec<_>>())),
-            ("loss", jsonio::num_arr(&self.losses())),
-            (
-                "consensus",
-                jsonio::num_arr(&self.records.iter().map(|r| r.consensus).collect::<Vec<_>>()),
-            ),
-            (
-                "sim_seconds",
-                jsonio::num_arr(&self.records.iter().map(|r| r.sim_seconds).collect::<Vec<_>>()),
-            ),
-            (
-                "comm_scalars",
-                jsonio::u64_arr(&self.records.iter().map(|r| r.comm_scalars).collect::<Vec<_>>()),
-            ),
-            (
-                "comm_msgs",
-                jsonio::u64_arr(&self.records.iter().map(|r| r.comm_msgs).collect::<Vec<_>>()),
-            ),
-            (
-                "sim_min_seconds",
+        // One array per [`COLUMNS`] entry (same registry as the CSV
+        // header); integer columns stay integer arrays.
+        let mut fields: Vec<(&str, Json)> = vec![("label", Json::Str(self.label.clone()))];
+        for name in COLUMNS {
+            let integral = self
+                .records
+                .first()
+                .map_or(true, |r| matches!(r.column(name), ColValue::U(_)));
+            let arr = if integral {
+                jsonio::u64_arr(
+                    &self
+                        .records
+                        .iter()
+                        .map(|r| match r.column(name) {
+                            ColValue::U(v) => v,
+                            ColValue::F(_) => unreachable!("column '{name}' changed kind"),
+                        })
+                        .collect::<Vec<_>>(),
+                )
+            } else {
                 jsonio::num_arr(
-                    &self.records.iter().map(|r| r.sim_min_seconds).collect::<Vec<_>>(),
-                ),
-            ),
-            (
-                "straggler_slack",
-                jsonio::num_arr(
-                    &self.records.iter().map(|r| r.straggler_slack).collect::<Vec<_>>(),
-                ),
-            ),
-            (
-                "barrier_wait",
-                jsonio::num_arr(&self.records.iter().map(|r| r.barrier_wait).collect::<Vec<_>>()),
-            ),
-            (
-                "stale_max",
-                jsonio::u64_arr(&self.records.iter().map(|r| r.stale_max).collect::<Vec<_>>()),
-            ),
-            (
-                "stale_mean",
-                jsonio::num_arr(&self.records.iter().map(|r| r.stale_mean).collect::<Vec<_>>()),
-            ),
-            (
-                "link_util",
-                jsonio::num_arr(&self.records.iter().map(|r| r.link_util).collect::<Vec<_>>()),
-            ),
-            (
-                "peer_drops",
-                jsonio::u64_arr(&self.records.iter().map(|r| r.peer_drops).collect::<Vec<_>>()),
-            ),
-            (
-                "row_renorms",
-                jsonio::u64_arr(&self.records.iter().map(|r| r.row_renorms).collect::<Vec<_>>()),
-            ),
-            (
-                "stale_frames",
-                jsonio::u64_arr(&self.records.iter().map(|r| r.stale_frames).collect::<Vec<_>>()),
-            ),
-        ])
+                    &self
+                        .records
+                        .iter()
+                        .map(|r| match r.column(name) {
+                            ColValue::U(v) => v as f64,
+                            ColValue::F(v) => v,
+                        })
+                        .collect::<Vec<_>>(),
+                )
+            };
+            fields.push((name, arr));
+        }
+        jsonio::obj(fields)
     }
 
     pub fn write_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
@@ -201,6 +236,20 @@ impl History {
         std::fs::write(path, self.to_csv())?;
         Ok(())
     }
+}
+
+/// The CLI's end-of-run `# traffic:` line, rendered from the same
+/// [`Counters`] registry the CSV/JSON columns read (the parity test pins
+/// that every registered counter appears here by name).
+pub fn traffic_line(backend: &str, comm: &CommStats, counters: &Counters) -> String {
+    format!(
+        "# traffic ({backend} backend): {} msgs | {} scalars ({:.2} MB) | {:.1}s comm sim time | {}",
+        comm.msgs,
+        comm.scalars_sent,
+        comm.bytes_sent() as f64 / 1e6,
+        comm.sim_seconds,
+        counters.render()
+    )
 }
 
 /// Consensus distance (1/n) sum_i ||x_i - x_bar||^2 over the contiguous
@@ -512,6 +561,9 @@ mod tests {
                 peer_drops: i as u64 / 2,
                 row_renorms: i as u64,
                 stale_frames: 3 * i as u64,
+                fallback_rounds: 4 * i as u64,
+                spans_dropped: 5 * i as u64,
+                pool_panics: 0,
             });
         }
         assert_eq!(h.first_step_below(0.35).unwrap().step, 2);
@@ -519,21 +571,26 @@ mod tests {
         let csv = h.to_csv();
         assert_eq!(csv.lines().count(), 6);
         assert!(csv.starts_with("step,loss"));
-        // The PR-3 column prefix is stable; the virtual-time columns append.
+        // The PR-3 column prefix is stable; later columns append.
         assert!(csv
             .lines()
             .next()
             .unwrap()
             .starts_with("step,loss,consensus,lr,sim_seconds,comm_scalars,comm_msgs"));
+        assert!(csv.lines().next().unwrap().contains(
+            "stale_max,stale_mean,link_util,peer_drops,row_renorms,stale_frames"
+        ));
         assert!(csv
             .lines()
             .next()
             .unwrap()
-            .ends_with("stale_max,stale_mean,link_util,peer_drops,row_renorms,stale_frames"));
+            .ends_with("stale_frames,fallback_rounds,spans_dropped,pool_panics"));
         assert!(csv.lines().nth(3).unwrap().contains(",200,4,"));
-        assert!(csv.lines().nth(3).unwrap().ends_with(",1,1,0.5,2,1,0.25,1,2,6"));
+        assert!(csv.lines().nth(3).unwrap().ends_with(",1,1,0.5,2,1,0.25,1,2,6,12,15,0"));
         let j = h.to_json().dump();
         assert!(j.contains("\"label\":\"test\""));
+        assert!(j.contains("\"step\":[0,1,2,3,4]"));
+        assert!(j.contains("\"lr\":[0.1,0.1,0.1,0.1,0.1]"));
         assert!(j.contains("\"comm_scalars\":[0,100,200,300,400]"));
         assert!(j.contains("\"comm_msgs\":[0,2,4,6,8]"));
         assert!(j.contains("\"straggler_slack\":[0,0.5,1,1.5,2]"));
@@ -543,5 +600,67 @@ mod tests {
         assert!(j.contains("\"peer_drops\":[0,0,1,1,2]"));
         assert!(j.contains("\"row_renorms\":[0,1,2,3,4]"));
         assert!(j.contains("\"stale_frames\":[0,3,6,9,12]"));
+        assert!(j.contains("\"fallback_rounds\":[0,4,8,12,16]"));
+        assert!(j.contains("\"spans_dropped\":[0,5,10,15,20]"));
+        assert!(j.contains("\"pool_panics\":[0,0,0,0,0]"));
+    }
+
+    #[test]
+    fn columns_cover_every_reporter() {
+        // The parity contract: CSV header, JSON keys and the `# traffic:`
+        // line all enumerate exactly the COLUMNS registry — adding a
+        // counter in one place and not the others fails here.
+        let mut h = History::new("parity");
+        h.push(Record {
+            step: 1,
+            loss: 0.5,
+            consensus: 0.1,
+            lr: 0.05,
+            sim_seconds: 2.0,
+            comm_scalars: 10,
+            comm_msgs: 3,
+            sim_min_seconds: 1.0,
+            straggler_slack: 1.0,
+            barrier_wait: 0.5,
+            stale_max: 1,
+            stale_mean: 0.5,
+            link_util: 0.25,
+            peer_drops: 1,
+            row_renorms: 2,
+            stale_frames: 3,
+            fallback_rounds: 4,
+            spans_dropped: 5,
+            pool_panics: 6,
+        });
+        // CSV header == the registry, verbatim.
+        let csv = h.to_csv();
+        assert_eq!(csv.lines().next().unwrap(), COLUMNS.join(","));
+        // Every data row has exactly one cell per column.
+        assert_eq!(csv.lines().nth(1).unwrap().split(',').count(), COLUMNS.len());
+        // JSON keys == {label} ∪ COLUMNS, each column an array.
+        let j = h.to_json();
+        assert!(j.get("label").is_some());
+        for name in COLUMNS {
+            let arr = j.get(name).and_then(|v| v.as_arr());
+            assert!(arr.is_some_and(|a| a.len() == 1), "JSON missing column '{name}'");
+        }
+        // Every registered counter is a column AND appears by name in the
+        // traffic line.
+        let counters = Counters {
+            stale_frames: 3,
+            peer_drops: 1,
+            row_renorms: 2,
+            fallback_rounds: 4,
+            spans_dropped: 5,
+            pool_panics: 6,
+        };
+        let comm = CommStats::default();
+        let line = traffic_line("shared", &comm, &counters);
+        assert!(line.starts_with("# traffic (shared backend):"));
+        for (name, value) in counters.iter() {
+            assert!(COLUMNS.contains(&name), "counter '{name}' missing from COLUMNS");
+            let cell = format!("{name}={value}");
+            assert!(line.contains(&cell), "traffic line missing '{cell}': {line}");
+        }
     }
 }

@@ -1,0 +1,259 @@
+//! Chrome trace-event JSON: export ([`export`]), schema validation
+//! ([`validate`]), loading with clear CLI errors ([`load`]) and the
+//! `trace` subcommand's per-phase summary ([`summarize`]).
+//!
+//! The emitted document is the subset of the trace-event format Perfetto
+//! and `chrome://tracing` load directly:
+//!
+//! * `ph:"M"` metadata names every process and thread — pid 0 is the
+//!   cluster-wide track, pid i+1 is node i, tid is the recording thread's
+//!   registration order;
+//! * `ph:"X"` complete duration events carry `ts`/`dur` in microseconds
+//!   of wall time plus `args.sim_seconds`, the cost-model bill;
+//! * `ph:"C"` counter events render the [`Counters`] registry as counter
+//!   tracks.
+//!
+//! `X` events are written sorted by `(tid, ts)`, so `ts` is monotone
+//! (non-decreasing) per tid in file order — [`validate`] pins that, and
+//! the round-trip is tested in `rust/tests/obs_trace.rs`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{Counters, TraceData, CLUSTER};
+use crate::harness::{fmt_duration, Table};
+use crate::jsonio::{self, Json};
+
+fn pid_of(node: u32) -> f64 {
+    if node == CLUSTER {
+        0.0
+    } else {
+        node as f64 + 1.0
+    }
+}
+
+fn pid_name(node: u32) -> String {
+    if node == CLUSTER {
+        "cluster".into()
+    } else {
+        format!("node {node}")
+    }
+}
+
+/// Render a collected session (plus the run's counter registry) as a
+/// Perfetto-loadable trace-event document.
+pub fn export(data: &TraceData, counters: &Counters) -> Json {
+    // (tid, start_ns) keyed so the X section is monotone per tid.
+    let mut xs: Vec<(u32, u64, Json)> = Vec::new();
+    let mut nodes: BTreeMap<u64, u32> = BTreeMap::new();
+    let mut end_us = 0.0f64;
+    for th in &data.threads {
+        for s in &th.spans {
+            nodes.entry(pid_of(s.node) as u64).or_insert(s.node);
+            let ts = s.start_ns as f64 / 1e3;
+            let dur = s.dur_ns as f64 / 1e3;
+            end_us = end_us.max(ts + dur);
+            xs.push((
+                th.tid,
+                s.start_ns,
+                jsonio::obj(vec![
+                    ("name", Json::Str(s.phase.name().into())),
+                    ("cat", Json::Str("phase".into())),
+                    ("ph", Json::Str("X".into())),
+                    ("pid", Json::Num(pid_of(s.node))),
+                    ("tid", Json::Num(th.tid as f64)),
+                    ("ts", Json::Num(ts)),
+                    ("dur", Json::Num(dur)),
+                    (
+                        "args",
+                        jsonio::obj(vec![("sim_seconds", Json::Num(s.sim_seconds))]),
+                    ),
+                ]),
+            ));
+        }
+    }
+    xs.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+
+    let mut events: Vec<Json> = Vec::new();
+    for (&pid, &node) in &nodes {
+        events.push(jsonio::obj(vec![
+            ("name", Json::Str("process_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(0.0)),
+            ("ts", Json::Num(0.0)),
+            ("args", jsonio::obj(vec![("name", Json::Str(pid_name(node)))])),
+        ]));
+    }
+    for th in &data.threads {
+        events.push(jsonio::obj(vec![
+            ("name", Json::Str("thread_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::Num(0.0)),
+            ("tid", Json::Num(th.tid as f64)),
+            ("ts", Json::Num(0.0)),
+            (
+                "args",
+                jsonio::obj(vec![("name", Json::Str(format!("worker {}", th.tid)))]),
+            ),
+        ]));
+    }
+    events.extend(xs.into_iter().map(|(_, _, e)| e));
+    for (name, value) in counters.iter() {
+        events.push(jsonio::obj(vec![
+            ("name", Json::Str(name.into())),
+            ("ph", Json::Str("C".into())),
+            ("pid", Json::Num(0.0)),
+            ("tid", Json::Num(0.0)),
+            ("ts", Json::Num(end_us)),
+            ("args", jsonio::obj(vec![(name, Json::Num(value as f64))])),
+        ]));
+    }
+    jsonio::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+/// Schema check: every event is a trace-event object (`name`/`ph`/`pid`/
+/// `tid`/`ts`, `dur >= 0` on `X`), and `X` timestamps are monotone
+/// (non-decreasing) per tid in file order.
+pub fn validate(doc: &Json) -> Result<()> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .context("missing 'traceEvents' array")?;
+    let mut last_ts: BTreeMap<u64, f64> = BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let field = |k: &str| {
+            ev.get(k).with_context(|| format!("event {i}: missing field '{k}'"))
+        };
+        let num = |k: &str| -> Result<f64> {
+            field(k)?.as_f64().with_context(|| format!("event {i}: '{k}' is not a number"))
+        };
+        ensure!(
+            field("name")?.as_str().is_some(),
+            "event {i}: 'name' is not a string"
+        );
+        let ph = field("ph")?
+            .as_str()
+            .with_context(|| format!("event {i}: 'ph' is not a string"))?;
+        ensure!(
+            matches!(ph, "X" | "M" | "C"),
+            "event {i}: unknown phase type '{ph}' (expected X, M or C)"
+        );
+        num("pid")?;
+        let tid = num("tid")?;
+        let ts = num("ts")?;
+        ensure!(ts >= 0.0, "event {i}: negative ts {ts}");
+        if ph == "X" {
+            let dur = num("dur")?;
+            ensure!(dur >= 0.0, "event {i}: negative dur {dur}");
+            let key = tid.to_bits();
+            if let Some(&prev) = last_ts.get(&key) {
+                ensure!(
+                    ts >= prev,
+                    "event {i}: ts {ts} goes backwards on tid {tid} (previous {prev})"
+                );
+            }
+            last_ts.insert(key, ts);
+        }
+    }
+    Ok(())
+}
+
+/// Read + parse + validate a trace file, with errors a CLI user can act
+/// on (missing file, malformed JSON, not a trace-event document).
+pub fn load(path: &std::path::Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("cannot read trace file '{}'", path.display()))?;
+    let doc = Json::parse(&text)
+        .with_context(|| format!("trace file '{}' is not valid JSON", path.display()))?;
+    validate(&doc).with_context(|| {
+        format!("trace file '{}' is not a chrome trace-event document", path.display())
+    })?;
+    Ok(doc)
+}
+
+struct PhaseAgg {
+    durs_us: Vec<f64>,
+    sim: f64,
+}
+
+/// Summarize a validated trace document: one row per (node, phase) with
+/// span count, p50/p99/total wall time and total sim seconds, plus the
+/// final counter-track values.
+pub fn summarize(doc: &Json) -> Result<String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .context("missing 'traceEvents' array")?;
+    // pid → display name from the metadata, falling back to "pid N".
+    let mut pid_names: BTreeMap<u64, String> = BTreeMap::new();
+    let mut groups: BTreeMap<(u64, String), PhaseAgg> = BTreeMap::new();
+    let mut counters: BTreeMap<String, f64> = BTreeMap::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        let name = ev.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string();
+        let pid = ev.get("pid").and_then(|p| p.as_f64()).unwrap_or(0.0) as u64;
+        match ph {
+            "M" if name == "process_name" => {
+                if let Some(n) = ev.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str())
+                {
+                    pid_names.insert(pid, n.to_string());
+                }
+            }
+            "X" => {
+                let dur = ev.get("dur").and_then(|d| d.as_f64()).unwrap_or(0.0);
+                let sim = ev
+                    .get("args")
+                    .and_then(|a| a.get("sim_seconds"))
+                    .and_then(|s| s.as_f64())
+                    .unwrap_or(0.0);
+                let agg = groups
+                    .entry((pid, name))
+                    .or_insert(PhaseAgg { durs_us: Vec::new(), sim: 0.0 });
+                agg.durs_us.push(dur);
+                agg.sim += sim;
+            }
+            "C" => {
+                // Counter tracks: the LAST value per counter name wins.
+                if let Some(args) = ev.get("args") {
+                    if let Some(v) = args.get(&name).and_then(|v| v.as_f64()) {
+                        counters.insert(name, v);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    if groups.is_empty() {
+        bail!("trace contains no duration (ph:\"X\") events to summarize");
+    }
+    let mut table =
+        Table::new(&["node", "phase", "count", "p50", "p99", "total wall", "sim s"]);
+    for ((pid, phase), agg) in &mut groups {
+        agg.durs_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = agg.durs_us.len();
+        let pct = |p: f64| agg.durs_us[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        let total: f64 = agg.durs_us.iter().sum();
+        let node = pid_names.get(pid).cloned().unwrap_or_else(|| format!("pid {pid}"));
+        table.rowv(vec![
+            node,
+            phase.clone(),
+            n.to_string(),
+            fmt_duration(pct(0.5) / 1e6),
+            fmt_duration(pct(0.99) / 1e6),
+            fmt_duration(total / 1e6),
+            crate::harness::fmt_f(agg.sim),
+        ]);
+    }
+    let mut out = table.render();
+    if !counters.is_empty() {
+        let shown: Vec<String> =
+            counters.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        out.push_str(&format!("counters: {}\n", shown.join(" ")));
+    }
+    Ok(out)
+}

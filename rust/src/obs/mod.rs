@@ -1,0 +1,669 @@
+//! `obs` — the observability plane: structured per-phase span tracing,
+//! the unified counter registry, and the warn-once sink.
+//!
+//! ## Trace plane
+//!
+//! A traced run records one [`Span`] per phase execution — sample / grad,
+//! gossip issue, the deferred recv+mix drain, reduce-scatter / all-gather,
+//! barrier stalls, the round machine's announce/gossip/collect/commit
+//! states, eventsim DELIVER/MIX events, sweep chunks — each carrying both
+//! wall nanoseconds and cost-model sim seconds. Spans land in per-thread
+//! fixed-capacity ring buffers ([`Ring`]): the hot path takes **no lock**
+//! (one relaxed atomic load when tracing is off, an owner-thread ring
+//! write when on), overflow drops the OLDEST spans and counts them
+//! (`spans_dropped`), and an untraced run executes byte-for-byte the same
+//! arithmetic — every probe is behind [`enabled`], and no probe ever
+//! touches parameter or clock state.
+//!
+//! Lifecycle: [`start`] arms a session (bumping a global session counter
+//! so stale thread-local rings from a previous session re-register);
+//! [`stop_and_collect`] disarms it and returns the surviving spans per
+//! thread. Call `stop_and_collect` only after the traced run has returned
+//! (threads quiesced) — ring writes are owner-thread-exclusive.
+//! [`chrome::export`] renders the collection as a Perfetto-loadable
+//! Chrome trace-event document (`--trace out.json`), and the `trace` CLI
+//! subcommand summarizes such a file per phase and node.
+//!
+//! ## Counter registry
+//!
+//! [`Counters`] folds the scattered per-run tallies (`stale_frames`,
+//! `peer_drops`, `row_renorms`, `fallback_rounds`, `spans_dropped`,
+//! `pool_panics`) into one struct with stable names
+//! ([`Counters::NAMES`]): the History CSV/JSON columns, the launcher's
+//! `# traffic:` line, and the trace export's counter tracks all render
+//! from this single source (`Trainer::counters`).
+//!
+//! ## Warn-once
+//!
+//! [`warn_once!`] fires a keyed warning exactly once per process through
+//! a swappable sink — stderr in production, a capture buffer under
+//! [`capture_warnings`] so tests assert "warned exactly once" without
+//! scraping stderr.
+
+pub mod chrome;
+
+use std::cell::{RefCell, UnsafeCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// The phases a traced run records. Names are stable (they key the trace
+/// JSON and the `trace` subcommand's summary table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    /// Overlap-mode batch sampling (runs while the previous mix drains).
+    Sample,
+    /// Local gradient + optimizer update (phases 1-2 of Algorithm 1).
+    Grad,
+    /// Issuing an async gossip round (sends on the wire, mix deferred).
+    GossipIssue,
+    /// Draining deferred recv+mix rounds, oldest first.
+    Drain,
+    /// One synchronous gossip collective.
+    Gossip,
+    /// One global average (the k·H barrier).
+    GlobalAverage,
+    /// Bus/tcp global average, scatter + reduce sub-phase.
+    ReduceScatter,
+    /// Bus/tcp global average, broadcast + assemble sub-phase.
+    AllGather,
+    /// Barrier stall: sim seconds nodes spent waiting behind slower peers
+    /// at this synchronization point (wall duration is 0 — the stall is a
+    /// cost-model quantity).
+    Barrier,
+    /// Round machine: arm the per-receive deadline.
+    RoundAnnounce,
+    /// Round machine: the collective attempt, deadline in force.
+    RoundGossip,
+    /// Round machine: classify the outcome (success / stalled peer).
+    RoundCollect,
+    /// Round machine: disarm + advance the round counter.
+    RoundCommit,
+    /// Eventsim: a payload delivery (node = receiver; sim = event time).
+    EvDeliver,
+    /// Eventsim: a bounded-stale mix (node = mixer; sim = event time).
+    EvMix,
+    /// Eventsim: a node ready/compute event.
+    EvReady,
+    /// Eventsim: a churn script event.
+    EvChurn,
+    /// Population plane: one `run_virtual_until` chunk of a sweep.
+    SweepChunk,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 18] = [
+        Phase::Sample,
+        Phase::Grad,
+        Phase::GossipIssue,
+        Phase::Drain,
+        Phase::Gossip,
+        Phase::GlobalAverage,
+        Phase::ReduceScatter,
+        Phase::AllGather,
+        Phase::Barrier,
+        Phase::RoundAnnounce,
+        Phase::RoundGossip,
+        Phase::RoundCollect,
+        Phase::RoundCommit,
+        Phase::EvDeliver,
+        Phase::EvMix,
+        Phase::EvReady,
+        Phase::EvChurn,
+        Phase::SweepChunk,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Sample => "sample",
+            Phase::Grad => "grad",
+            Phase::GossipIssue => "gossip_issue",
+            Phase::Drain => "drain",
+            Phase::Gossip => "gossip",
+            Phase::GlobalAverage => "global_average",
+            Phase::ReduceScatter => "reduce_scatter",
+            Phase::AllGather => "all_gather",
+            Phase::Barrier => "barrier",
+            Phase::RoundAnnounce => "round_announce",
+            Phase::RoundGossip => "round_gossip",
+            Phase::RoundCollect => "round_collect",
+            Phase::RoundCommit => "round_commit",
+            Phase::EvDeliver => "ev_deliver",
+            Phase::EvMix => "ev_mix",
+            Phase::EvReady => "ev_ready",
+            Phase::EvChurn => "ev_churn",
+            Phase::SweepChunk => "sweep_chunk",
+        }
+    }
+}
+
+/// Node sentinel for spans that cover the whole cluster (the coordinator's
+/// sharded phases execute all nodes at once). Exported as pid 0.
+pub const CLUSTER: u32 = u32::MAX;
+
+/// One recorded phase execution: wall time (relative to session start)
+/// AND the cost-model seconds the phase billed (0 for pure-wall phases).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Span {
+    pub phase: Phase,
+    /// Node the span belongs to, or [`CLUSTER`].
+    pub node: u32,
+    /// Wall start, nanoseconds since [`start`].
+    pub start_ns: u64,
+    /// Wall duration in nanoseconds (0 for instant events).
+    pub dur_ns: u64,
+    /// Cost-model seconds: the billed sim time for collectives/barriers,
+    /// the event time for eventsim instants, 0 where the model bills
+    /// nothing.
+    pub sim_seconds: f64,
+}
+
+const ZERO_SPAN: Span =
+    Span { phase: Phase::Sample, node: 0, start_ns: 0, dur_ns: 0, sim_seconds: 0.0 };
+
+/// Fixed-capacity drop-oldest span ring. The owning thread is the only
+/// writer (`push`); `snapshot` reads are taken after [`stop_and_collect`]
+/// disarms the session and the owner has quiesced, so the unsynchronized
+/// buffer access never races.
+pub struct Ring {
+    buf: UnsafeCell<Box<[Span]>>,
+    /// Total pushes ever (monotone); `pushes - capacity` spans were
+    /// dropped once it exceeds the buffer length.
+    pushes: AtomicUsize,
+}
+
+// SAFETY: writes are owner-thread-exclusive and reads happen only after
+// the session is disarmed (see type docs); the atomic push counter
+// publishes the written slots.
+unsafe impl Send for Ring {}
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn new(capacity: usize) -> Ring {
+        Ring {
+            buf: UnsafeCell::new(vec![ZERO_SPAN; capacity.max(1)].into_boxed_slice()),
+            pushes: AtomicUsize::new(0),
+        }
+    }
+
+    fn push(&self, s: Span) {
+        let i = self.pushes.load(Ordering::Relaxed);
+        // SAFETY: owner-thread exclusive (see type docs).
+        let buf = unsafe { &mut *self.buf.get() };
+        buf[i % buf.len()] = s;
+        self.pushes.store(i + 1, Ordering::Release);
+    }
+
+    fn dropped(&self) -> u64 {
+        let total = self.pushes.load(Ordering::Acquire);
+        // SAFETY: reading the length only.
+        let cap = unsafe { &*self.buf.get() }.len();
+        total.saturating_sub(cap) as u64
+    }
+
+    /// Surviving spans in push order plus the drop-oldest tally.
+    fn snapshot(&self) -> (Vec<Span>, u64) {
+        let total = self.pushes.load(Ordering::Acquire);
+        // SAFETY: owner quiesced before collection (see type docs).
+        let buf = unsafe { &*self.buf.get() };
+        let cap = buf.len();
+        let mut out = Vec::with_capacity(total.min(cap));
+        if total <= cap {
+            out.extend_from_slice(&buf[..total]);
+        } else {
+            let head = total % cap;
+            out.extend_from_slice(&buf[head..]);
+            out.extend_from_slice(&buf[..head]);
+        }
+        (out, total.saturating_sub(cap) as u64)
+    }
+}
+
+/// One tracing session: the rings of every thread that recorded a span,
+/// in registration order (registration index = exported tid).
+struct Tracer {
+    capacity: usize,
+    start: Instant,
+    rings: Mutex<Vec<Arc<Ring>>>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SESSION: AtomicU64 = AtomicU64::new(0);
+static TRACER: Mutex<Option<Arc<Tracer>>> = Mutex::new(None);
+
+struct LocalRing {
+    session: u64,
+    ring: Arc<Ring>,
+    start: Instant,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<LocalRing>> = const { RefCell::new(None) };
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Whether a tracing session is armed — ONE relaxed atomic load; every
+/// probe in the codebase is behind this, so untraced runs pay nothing
+/// else.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// An in-flight span: records itself into the current thread's ring on
+/// drop. A no-op (no clock read, no ring touch) when tracing is off.
+pub struct SpanGuard {
+    live: Option<(Phase, u32, Instant, f64)>,
+}
+
+impl SpanGuard {
+    /// Attach the cost-model seconds this phase billed (call once the
+    /// charge is known, before the guard drops).
+    #[inline]
+    pub fn set_sim(&mut self, sim_seconds: f64) {
+        if let Some(l) = self.live.as_mut() {
+            l.3 = sim_seconds;
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((phase, node, t0, sim)) = self.live.take() {
+            record_span(phase, node, t0, t0.elapsed(), sim);
+        }
+    }
+}
+
+/// Open a span for `phase` on `node` (or [`CLUSTER`]). Duration runs
+/// until the returned guard drops.
+#[inline]
+pub fn span(phase: Phase, node: u32) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { live: None };
+    }
+    SpanGuard { live: Some((phase, node, Instant::now(), 0.0)) }
+}
+
+/// Record a zero-duration event (eventsim deliveries/mixes, barrier
+/// stalls) carrying only sim time.
+#[inline]
+pub fn instant(phase: Phase, node: u32, sim_seconds: f64) {
+    if !enabled() {
+        return;
+    }
+    record_span(phase, node, Instant::now(), Duration::ZERO, sim_seconds);
+}
+
+fn record_span(phase: Phase, node: u32, t0: Instant, dur: Duration, sim: f64) {
+    LOCAL.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let session = SESSION.load(Ordering::Acquire);
+        if slot.as_ref().map(|l| l.session != session).unwrap_or(true) {
+            // First span from this thread in this session: register a
+            // fresh ring (cold path — the only lock in the plane).
+            let tracer = lock(&TRACER);
+            let Some(t) = tracer.as_ref() else {
+                return; // raced with stop(); the session is gone
+            };
+            let ring = Arc::new(Ring::new(t.capacity));
+            lock(&t.rings).push(ring.clone());
+            *slot = Some(LocalRing { session, ring, start: t.start });
+        }
+        let l = slot.as_ref().expect("registered above");
+        let start_ns =
+            t0.checked_duration_since(l.start).unwrap_or_default().as_nanos() as u64;
+        l.ring.push(Span {
+            phase,
+            node,
+            start_ns,
+            dur_ns: dur.as_nanos() as u64,
+            sim_seconds: sim,
+        });
+    });
+}
+
+/// Arm a tracing session with per-thread ring capacity `capacity`
+/// (clamped to >= 1; `trace.capacity` validates earlier with a clear
+/// message). Restarting bumps the session counter so rings from the
+/// previous session re-register lazily.
+pub fn start(capacity: usize) {
+    let tracer = Arc::new(Tracer {
+        capacity: capacity.max(1),
+        start: Instant::now(),
+        rings: Mutex::new(Vec::new()),
+    });
+    *lock(&TRACER) = Some(tracer);
+    SESSION.fetch_add(1, Ordering::AcqRel);
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// The spans one thread recorded (tid = registration order).
+pub struct ThreadTrace {
+    pub tid: u32,
+    pub spans: Vec<Span>,
+    pub dropped: u64,
+}
+
+/// Everything a session recorded, per thread.
+pub struct TraceData {
+    pub threads: Vec<ThreadTrace>,
+}
+
+impl TraceData {
+    pub fn total_spans(&self) -> usize {
+        self.threads.iter().map(|t| t.spans.len()).sum()
+    }
+
+    pub fn total_dropped(&self) -> u64 {
+        self.threads.iter().map(|t| t.dropped).sum()
+    }
+}
+
+/// Disarm the session and collect every ring. Call only after the traced
+/// run has returned (ring writes are owner-thread-exclusive; the pool
+/// parks between jobs and the driving thread is the caller).
+pub fn stop_and_collect() -> TraceData {
+    ENABLED.store(false, Ordering::Release);
+    let tracer = lock(&TRACER).take();
+    let Some(t) = tracer else {
+        return TraceData { threads: Vec::new() };
+    };
+    let rings = lock(&t.rings);
+    let threads = rings
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let (spans, dropped) = r.snapshot();
+            ThreadTrace { tid: i as u32, spans, dropped }
+        })
+        .collect();
+    TraceData { threads }
+}
+
+/// Spans the CURRENT thread's ring has dropped in the active session — 0
+/// when tracing is off. A run's spans are pushed from its own driving
+/// thread, so this is the per-run `spans_dropped` counter the trainer
+/// logs (deterministic under parallel test harnesses, unlike a process
+/// global).
+pub fn thread_spans_dropped() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    LOCAL.with(|slot| {
+        let session = SESSION.load(Ordering::Acquire);
+        slot.borrow()
+            .as_ref()
+            .filter(|l| l.session == session)
+            .map(|l| l.ring.dropped())
+            .unwrap_or(0)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Counter registry
+// ---------------------------------------------------------------------------
+
+/// The unified per-run counter registry (see module docs). Field names ==
+/// [`Counters::NAMES`] == the History CSV/JSON column names, so every
+/// reporter renders the same set from the same source.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    /// Frames discarded on receipt for a stale epoch tag (bus/tcp).
+    pub stale_frames: u64,
+    /// Peers dropped by the round machine's per-receive deadline.
+    pub peer_drops: u64,
+    /// Mixing rows renormalized by those drops.
+    pub row_renorms: u64,
+    /// Overlap gossip rounds that fell back to the synchronous path.
+    pub fallback_rounds: u64,
+    /// Trace spans evicted from the run's ring (drop-oldest overflow).
+    pub spans_dropped: u64,
+    /// Worker-pool jobs that panicked (the pool poisons itself on the
+    /// first one, so a finished run normally reports 0).
+    pub pool_panics: u64,
+}
+
+impl Counters {
+    /// Stable names, in [`Counters::values`] order.
+    pub const NAMES: [&'static str; 6] = [
+        "stale_frames",
+        "peer_drops",
+        "row_renorms",
+        "fallback_rounds",
+        "spans_dropped",
+        "pool_panics",
+    ];
+
+    pub fn values(&self) -> [u64; 6] {
+        [
+            self.stale_frames,
+            self.peer_drops,
+            self.row_renorms,
+            self.fallback_rounds,
+            self.spans_dropped,
+            self.pool_panics,
+        ]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, u64)> {
+        Self::NAMES.into_iter().zip(self.values())
+    }
+
+    /// `name=value` list for the `# traffic:` line and trace counter
+    /// tracks.
+    pub fn render(&self) -> String {
+        self.iter().map(|(n, v)| format!("{n}={v}")).collect::<Vec<_>>().join(" ")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Warn-once
+// ---------------------------------------------------------------------------
+
+enum Sink {
+    Stderr,
+    Capture(Vec<String>),
+}
+
+struct WarnState {
+    fired: Vec<&'static str>,
+    sink: Sink,
+}
+
+static WARN: Mutex<WarnState> = Mutex::new(WarnState { fired: Vec::new(), sink: Sink::Stderr });
+static WARN_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Fire a keyed warning at most once per process (see [`warn_once!`]).
+/// Returns whether this call fired. The message closure only runs on the
+/// first call.
+pub fn warn_once_impl(key: &'static str, msg: impl FnOnce() -> String) -> bool {
+    let mut w = lock(&WARN);
+    if w.fired.contains(&key) {
+        return false;
+    }
+    w.fired.push(key);
+    let text = msg();
+    match &mut w.sink {
+        Sink::Stderr => eprintln!("warning: {text}"),
+        Sink::Capture(v) => v.push(format!("[{key}] {text}")),
+    }
+    true
+}
+
+/// Emit a warning exactly once per process, keyed by a stable string:
+/// `obs::warn_once!("exec.pin-unavailable", "core pinning unavailable")`.
+/// Goes to stderr in production and to the capture buffer under
+/// [`capture_warnings`].
+#[macro_export]
+macro_rules! warn_once {
+    ($key:expr, $($fmt:tt)*) => {
+        $crate::obs::warn_once_impl($key, || format!($($fmt)*))
+    };
+}
+pub use crate::warn_once;
+
+/// Test hook: redirect the warn-once sink to a capture buffer and reset
+/// the fired-key set, serialized against other captures (the guard holds
+/// a global test lock). Dropping the guard restores stderr.
+pub fn capture_warnings() -> WarnCapture {
+    let guard = lock(&WARN_TEST_LOCK);
+    let mut w = lock(&WARN);
+    w.fired.clear();
+    w.sink = Sink::Capture(Vec::new());
+    WarnCapture { _guard: guard }
+}
+
+/// Live warning capture (see [`capture_warnings`]).
+pub struct WarnCapture {
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl WarnCapture {
+    /// Take the warnings captured so far (each `"[key] message"`).
+    pub fn drain(&self) -> Vec<String> {
+        match &mut lock(&WARN).sink {
+            Sink::Capture(v) => std::mem::take(v),
+            Sink::Stderr => Vec::new(),
+        }
+    }
+}
+
+impl Drop for WarnCapture {
+    fn drop(&mut self) {
+        lock(&WARN).sink = Sink::Stderr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tracing state is process-global: serialize the tests that arm it.
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_probes_are_noops() {
+        let _g = lock(&SERIAL);
+        assert!(!enabled());
+        let mut sp = span(Phase::Gossip, CLUSTER);
+        sp.set_sim(1.0);
+        drop(sp);
+        instant(Phase::EvMix, 3, 2.0);
+        assert_eq!(thread_spans_dropped(), 0);
+    }
+
+    #[test]
+    fn spans_record_wall_and_sim() {
+        let _g = lock(&SERIAL);
+        start(64);
+        {
+            let mut sp = span(Phase::Gossip, CLUSTER);
+            sp.set_sim(0.25768);
+        }
+        instant(Phase::EvDeliver, 9007, 1.5);
+        let data = stop_and_collect();
+        let spans: Vec<&Span> = data.threads.iter().flat_map(|t| &t.spans).collect();
+        // Discriminate on the exact sim value: parallel lib tests may land
+        // spans of the same phase in this session.
+        let g = spans
+            .iter()
+            .find(|s| s.phase == Phase::Gossip && s.sim_seconds == 0.25768)
+            .expect("gossip span");
+        assert_eq!(g.node, CLUSTER);
+        let d = spans
+            .iter()
+            .find(|s| s.phase == Phase::EvDeliver && s.node == 9007)
+            .expect("deliver span");
+        assert_eq!((d.dur_ns, d.sim_seconds), (0, 1.5));
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let _g = lock(&SERIAL);
+        start(4);
+        // Distinctive node ids: parallel lib tests may trace-register other
+        // threads' rings into this session; ours is the one with these.
+        for i in 0..10u32 {
+            instant(Phase::EvMix, 9000 + i, i as f64);
+        }
+        assert_eq!(thread_spans_dropped(), 6);
+        let data = stop_and_collect();
+        let mine: Vec<&ThreadTrace> = data
+            .threads
+            .iter()
+            .filter(|t| t.spans.iter().any(|s| (9000..9010).contains(&s.node)))
+            .collect();
+        assert_eq!(mine.len(), 1);
+        let t = mine[0];
+        assert_eq!(t.dropped, 6);
+        // Oldest dropped: pushes 6..10 survive, in push order.
+        let nodes: Vec<u32> = t.spans.iter().map(|s| s.node).collect();
+        assert_eq!(nodes, vec![9006, 9007, 9008, 9009]);
+    }
+
+    #[test]
+    fn restart_reregisters_thread_rings() {
+        let _g = lock(&SERIAL);
+        let count = |data: &TraceData, node: u32| {
+            data.threads
+                .iter()
+                .flat_map(|t| &t.spans)
+                .filter(|s| s.phase == Phase::EvReady && s.node == node)
+                .count()
+        };
+        start(8);
+        instant(Phase::EvReady, 9001, 0.0);
+        let first = stop_and_collect();
+        assert_eq!(count(&first, 9001), 1);
+        start(8);
+        instant(Phase::EvReady, 9002, 0.0);
+        let second = stop_and_collect();
+        // The stale thread-local ring re-registered: only the new span.
+        assert_eq!(count(&second, 9001), 0);
+        assert_eq!(count(&second, 9002), 1);
+    }
+
+    #[test]
+    fn counters_registry_is_consistent() {
+        let c = Counters {
+            stale_frames: 1,
+            peer_drops: 2,
+            row_renorms: 3,
+            fallback_rounds: 4,
+            spans_dropped: 5,
+            pool_panics: 6,
+        };
+        assert_eq!(Counters::NAMES.len(), c.values().len());
+        assert_eq!(c.values(), [1, 2, 3, 4, 5, 6]);
+        let rendered = c.render();
+        for (name, value) in c.iter() {
+            assert!(rendered.contains(&format!("{name}={value}")), "{rendered}");
+        }
+    }
+
+    #[test]
+    fn warn_once_fires_exactly_once_per_key() {
+        let cap = capture_warnings();
+        assert!(warn_once!("obs.test-key", "value {}", 42));
+        assert!(!warn_once!("obs.test-key", "value {}", 43));
+        assert!(warn_once!("obs.test-other", "other"));
+        let got = cap.drain();
+        let mine: Vec<&String> =
+            got.iter().filter(|m| m.starts_with("[obs.test")).collect();
+        assert_eq!(mine.len(), 2, "{got:?}");
+        assert!(mine[0].contains("value 42"));
+    }
+
+    #[test]
+    fn phase_names_are_unique_and_total() {
+        let mut names: Vec<&str> = Phase::ALL.iter().map(|p| p.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Phase::ALL.len());
+    }
+}

@@ -322,7 +322,11 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<SweepReport> {
     targets.retain(|&t| t >= 1);
     targets.dedup();
     for &target in &targets {
-        engine.run_virtual_until(target, &mut clocks)?;
+        {
+            let mut sp = crate::obs::span(crate::obs::Phase::SweepChunk, crate::obs::CLUSTER);
+            engine.run_virtual_until(target, &mut clocks)?;
+            sp.set_sim(clocks.max_seconds());
+        }
         curve.push(sample(&engine, &clocks, target));
     }
     let initial = curve.first().map_or(0.0, |p| p.consensus);

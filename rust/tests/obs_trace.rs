@@ -1,0 +1,548 @@
+//! Observability-plane acceptance suite (`rust/src/obs/` — the trace
+//! plane, the chrome exporter, the counter registry and the warn-once
+//! sink).
+//!
+//! Three contracts under test:
+//!
+//! * **Bit-equality** — arming `--trace` changes NOTHING about a run:
+//!   parameters, billed sim seconds and traffic are bit-identical to the
+//!   untraced run on every backend (shared / bus / tcp), synchronous and
+//!   pipelined (`--pipeline-depth` 1 and 4). Probes read and annotate;
+//!   they never touch arithmetic.
+//! * **Ring discipline** — overflow drops the OLDEST spans, the eviction
+//!   is tallied (`spans_dropped`), and the surviving window is the most
+//!   recent pushes in push order.
+//! * **Schema** — the exported document round-trips through
+//!   `dump → parse → validate` (valid trace-event fields, monotone `ts`
+//!   per tid), `summarize` renders a per-phase table from it, and `load`
+//!   reports actionable errors on missing / malformed / non-trace files
+//!   (what the `trace` subcommand surfaces).
+//!
+//! Tracing state is process-global, so every test that arms a session
+//! holds the file-local `SERIAL` mutex (the test binary runs tests on
+//! parallel threads). The backend replay layers need no AOT artifacts;
+//! the trainer-level test skips gracefully when `make artifacts` has not
+//! run. `scripts/verify.sh` step 12 runs this suite at
+//! `PROPTEST_CASES=16`.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use gossip_pga::algorithms::AlgorithmKind;
+use gossip_pga::comm::{
+    BackendKind, BusBackend, CommBackend, CommStats, Compression, PendingComm, SharedBackend,
+    TcpBackend,
+};
+use gossip_pga::coordinator::{logreg_workload, Trainer, TrainerOptions};
+use gossip_pga::costmodel::{CostModel, NodeCosts};
+use gossip_pga::eventsim::Regime;
+use gossip_pga::exec::WorkerPool;
+use gossip_pga::jsonio::Json;
+use gossip_pga::obs::{self, chrome, Counters, Phase};
+use gossip_pga::optim::LrSchedule;
+use gossip_pga::params::ParamMatrix;
+use gossip_pga::rng::Rng;
+use gossip_pga::runtime::Runtime;
+use gossip_pga::topology::Topology;
+
+/// Tracing sessions are process-global; the test harness runs tests on
+/// parallel threads. Every test that arms (or asserts the absence of) a
+/// session holds this.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` on a watchdog thread; FAIL (don't hang) if it overruns.
+fn with_timeout(secs: u64, f: impl FnOnce() + Send + 'static) {
+    let (tx, rx) = channel();
+    let h = std::thread::spawn(move || {
+        f();
+        tx.send(()).ok();
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) => h.join().expect("watchdog body"),
+        Err(_) => panic!("timed out after {secs}s — the traced run hung instead of failing"),
+    }
+}
+
+/// Deterministic pseudo-gradient (same as the overlap_wire suite), applied
+/// identically on every replica so any divergence comes from tracing.
+fn perturb(params: &mut ParamMatrix, k: u64) {
+    let mut rng = Rng::new(0xD1CE ^ k.wrapping_mul(0x9E37_79B9));
+    let noise = rng.normal_vec(params.n() * params.d(), 0.05);
+    for (p, g) in params.as_mut_slice().iter_mut().zip(&noise) {
+        *p -= g;
+    }
+}
+
+/// An uncompressed backend of `kind` with the given pipeline depth — the
+/// three planes behind the one trait object the tracing probes decorate.
+fn backend(kind: BackendKind, topo: &Topology, d: usize, depth: usize) -> Box<dyn CommBackend> {
+    let costs = NodeCosts::homogeneous(CostModel::calibrated_resnet50(), topo.n);
+    match kind {
+        BackendKind::Shared => Box::new(SharedBackend::with_depth(
+            topo,
+            d,
+            &costs,
+            d,
+            Compression::None,
+            depth,
+        )),
+        BackendKind::Bus => Box::new(BusBackend::with_depth(
+            topo,
+            d,
+            &costs,
+            d,
+            Compression::None,
+            true,
+            depth,
+        )),
+        BackendKind::Tcp => Box::new(
+            TcpBackend::new_loopback_with_depth(
+                topo,
+                d,
+                &costs,
+                d,
+                Compression::None,
+                true,
+                "127.0.0.1:0",
+                depth,
+            )
+            .unwrap(),
+        ),
+    }
+}
+
+/// Replay 3 periods of the PGA schedule — H gossip rounds (synchronous
+/// when `depth == 0`, pipelined otherwise), a FIFO drain, one global
+/// average, a perturbation — returning the final matrix, total billed sim
+/// seconds and cumulative traffic. Identical whether or not a tracing
+/// session is armed around the call: that is the contract under test.
+fn replay(
+    kind: BackendKind,
+    topo: &Topology,
+    d: usize,
+    h: usize,
+    depth: usize,
+    threads: usize,
+) -> (ParamMatrix, f64, CommStats) {
+    let mut backend = backend(kind, topo, d, depth.max(1));
+    let pool = WorkerPool::new(threads);
+    let mut params = ParamMatrix::random(&mut Rng::new(47), topo.n, d, 1.0);
+    let mut sim = 0.0;
+    let mut pending: VecDeque<PendingComm> = VecDeque::new();
+    for burst in 0..3u64 {
+        for _ in 0..h {
+            if depth == 0 {
+                sim += backend.gossip(&mut params, &pool).unwrap().stats.sim_seconds;
+            } else {
+                if pending.len() == depth {
+                    let oldest = pending.pop_front().unwrap();
+                    sim += backend.finish(&mut params, oldest).unwrap().stats.sim_seconds;
+                }
+                let p = unsafe { backend.gossip_async(&params, &pool).unwrap() }
+                    .expect("uncompressed backends support async gossip");
+                pending.push_back(p);
+            }
+        }
+        while let Some(oldest) = pending.pop_front() {
+            sim += backend.finish(&mut params, oldest).unwrap().stats.sim_seconds;
+        }
+        sim += backend.global_average(&mut params, &pool).unwrap().stats.sim_seconds;
+        perturb(&mut params, burst);
+    }
+    (params, sim, backend.total())
+}
+
+/// Count the collected spans of one phase (they all land on the replay's
+/// driving thread, but the collection is flattened anyway).
+fn count_phase(data: &obs::TraceData, phase: Phase) -> usize {
+    data.threads.iter().flat_map(|t| &t.spans).filter(|s| s.phase == phase).count()
+}
+
+// ---------------------------------------------------------------------------
+// Bit-equality: tracing observes, never perturbs.
+// ---------------------------------------------------------------------------
+
+/// The headline contract, per backend: the traced replay is bit-identical
+/// to the untraced one (params, billed clocks, traffic), AND the session
+/// actually recorded the phases the schedule ran.
+fn traced_replay_matches_untraced(kind: BackendKind) {
+    let _g = serial();
+    let (d, h) = (33, 3);
+    let topo = Topology::ring(5);
+    for depth in [0usize, 1, 4] {
+        assert!(!obs::enabled(), "a previous test leaked an armed session");
+        let (want, want_sim, want_total) = replay(kind, &topo, d, h, depth, 2);
+
+        obs::start(1 << 16);
+        let (got, got_sim, got_total) = replay(kind, &topo, d, h, depth, 2);
+        let data = obs::stop_and_collect();
+
+        assert_eq!(
+            got.as_slice(),
+            want.as_slice(),
+            "{kind:?} depth={depth}: tracing perturbed the parameters"
+        );
+        assert_eq!(
+            got_sim.to_bits(),
+            want_sim.to_bits(),
+            "{kind:?} depth={depth}: tracing perturbed the billed clocks"
+        );
+        assert_eq!(
+            got_total, want_total,
+            "{kind:?} depth={depth}: tracing perturbed the traffic totals"
+        );
+
+        // The session saw the schedule: one global average per burst, and
+        // on the synchronous sweep every gossip round. Pipelined rounds
+        // are issued/finished below the trait wrappers, so depth > 0
+        // records the boundary collectives only.
+        assert_eq!(count_phase(&data, Phase::GlobalAverage), 3, "{kind:?} depth={depth}");
+        if depth == 0 {
+            assert_eq!(count_phase(&data, Phase::Gossip), 3 * h, "{kind:?}");
+        }
+        if kind != BackendKind::Shared {
+            // The message-passing global average records its sub-phases.
+            assert_eq!(count_phase(&data, Phase::ReduceScatter), 3, "{kind:?}");
+            assert_eq!(count_phase(&data, Phase::AllGather), 3, "{kind:?}");
+        }
+        for s in data.threads.iter().flat_map(|t| &t.spans) {
+            assert_eq!(s.node, obs::CLUSTER, "backend collectives are cluster-wide");
+        }
+    }
+}
+
+#[test]
+fn traced_shared_replay_is_bit_identical_to_untraced() {
+    traced_replay_matches_untraced(BackendKind::Shared);
+}
+
+#[test]
+fn traced_bus_replay_is_bit_identical_to_untraced() {
+    traced_replay_matches_untraced(BackendKind::Bus);
+}
+
+#[test]
+fn traced_tcp_replay_is_bit_identical_to_untraced() {
+    let _g = serial();
+    with_timeout(240, || {
+        // Re-entrant serialization is not possible with a plain Mutex;
+        // the outer guard (held by this test thread) already excludes the
+        // other tests, so the watchdog body runs the shared helper's
+        // logic inline rather than re-locking.
+        let (d, h) = (21, 3);
+        let topo = Topology::ring(4);
+        for depth in [0usize, 4] {
+            let (want, want_sim, want_total) = replay(BackendKind::Tcp, &topo, d, h, depth, 2);
+            obs::start(1 << 16);
+            let (got, got_sim, got_total) = replay(BackendKind::Tcp, &topo, d, h, depth, 2);
+            let data = obs::stop_and_collect();
+            assert_eq!(got.as_slice(), want.as_slice(), "tcp depth={depth}: params");
+            assert_eq!(got_sim.to_bits(), want_sim.to_bits(), "tcp depth={depth}: clocks");
+            assert_eq!(got_total, want_total, "tcp depth={depth}: traffic");
+            assert_eq!(count_phase(&data, Phase::GlobalAverage), 3, "tcp depth={depth}");
+            assert_eq!(count_phase(&data, Phase::ReduceScatter), 3, "tcp depth={depth}");
+        }
+    });
+}
+
+/// Trainer-level contract on top of the backend one: a traced training
+/// run (overlap regime, so the sample/grad/issue/drain probes all fire)
+/// lands bit-identically, and the session covers the coordinator phases.
+/// Skips gracefully when the AOT artifacts are absent.
+#[test]
+fn traced_trainer_run_is_bit_identical_and_covers_coordinator_phases() {
+    let _g = serial();
+    let Ok(rt) = Runtime::load_default() else {
+        eprintln!("artifacts absent — run `make artifacts` to enable the trainer-level test");
+        return;
+    };
+    let rt = Arc::new(rt);
+    let steps = 10;
+    let run = |rt: &Arc<Runtime>| -> Trainer {
+        let n = 4;
+        let (workload, init) = logreg_workload(rt.clone(), n, 256, true, 41).unwrap();
+        let opts = TrainerOptions {
+            algorithm: AlgorithmKind::GossipPga,
+            topology: Topology::ring(n),
+            period: 4,
+            aga_init_period: 2,
+            aga_warmup: 4,
+            lr: LrSchedule::Const { lr: 0.2 },
+            momentum: 0.9,
+            nesterov: true,
+            seed: 41,
+            slowmo: Default::default(),
+            cost: CostModel::calibrated_resnet50(),
+            cost_dim: 25_500_000,
+            node_costs: None,
+            stealing: false,
+            pin: false,
+            pipeline_depth: 2,
+            log_every: 5,
+            threads: 2,
+            regime: Regime::Overlap,
+            max_staleness: 0,
+            backend: BackendKind::Bus,
+            compression: Compression::None,
+            round_timeout: 0.0,
+            listen: "127.0.0.1:0".to_string(),
+        };
+        Trainer::new(workload, init, opts).unwrap()
+    };
+
+    let mut want = run(&rt);
+    for _ in 0..steps {
+        want.step_once().unwrap();
+    }
+    let want_loss = want.global_loss().unwrap(); // drains
+
+    obs::start(1 << 16);
+    let mut got = run(&rt);
+    for _ in 0..steps {
+        got.step_once().unwrap();
+    }
+    let got_loss = got.global_loss().unwrap();
+    let counters = got.counters(); // BEFORE stop: spans_dropped reads the live ring
+    let data = obs::stop_and_collect();
+
+    assert_eq!(
+        got.param_matrix().as_slice(),
+        want.param_matrix().as_slice(),
+        "tracing perturbed the training trajectory"
+    );
+    assert_eq!(got_loss.to_bits(), want_loss.to_bits(), "tracing perturbed the loss");
+    assert_eq!(got.sim_seconds(), want.sim_seconds(), "tracing perturbed the clocks");
+    assert_eq!(got.comm_stats(), want.comm_stats(), "tracing perturbed the traffic");
+    assert_eq!(counters.spans_dropped, 0, "the ring was big enough for this run");
+
+    for phase in [Phase::Sample, Phase::Grad, Phase::GossipIssue, Phase::Drain, Phase::GlobalAverage]
+    {
+        assert!(
+            count_phase(&data, phase) > 0,
+            "traced overlap run recorded no {} spans",
+            phase.name()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ring discipline: drop-oldest, tallied.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ring_overflow_keeps_the_newest_spans_and_counts_the_evicted() {
+    let _g = serial();
+    obs::start(3);
+    for i in 0..8u32 {
+        obs::instant(Phase::EvMix, 7000 + i, i as f64);
+    }
+    assert_eq!(obs::thread_spans_dropped(), 5, "5 of 8 pushes evicted from a 3-ring");
+    let data = obs::stop_and_collect();
+    let mine: Vec<u32> = data
+        .threads
+        .iter()
+        .flat_map(|t| &t.spans)
+        .filter(|s| (7000..7008).contains(&s.node))
+        .map(|s| s.node)
+        .collect();
+    assert_eq!(mine, vec![7005, 7006, 7007], "survivors are the newest, in push order");
+    assert_eq!(data.total_dropped(), 5);
+    // The eviction tally flows into the exported counter track.
+    let counters = Counters { spans_dropped: data.total_dropped(), ..Default::default() };
+    let doc = chrome::export(&data, &counters);
+    let dumped = doc.dump();
+    assert!(dumped.contains("\"spans_dropped\":5"), "{dumped}");
+}
+
+// ---------------------------------------------------------------------------
+// Chrome schema: export → dump → parse → validate → summarize.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chrome_export_round_trips_and_summarizes() {
+    let _g = serial();
+    obs::start(64);
+    {
+        let mut sp = obs::span(Phase::Gossip, obs::CLUSTER);
+        sp.set_sim(0.125);
+    }
+    {
+        let mut sp = obs::span(Phase::GlobalAverage, obs::CLUSTER);
+        sp.set_sim(0.5);
+    }
+    obs::instant(Phase::EvDeliver, 2, 1.75);
+    obs::instant(Phase::EvMix, 2, 2.0);
+    let data = obs::stop_and_collect();
+    assert!(data.total_spans() >= 4);
+
+    let counters = Counters {
+        stale_frames: 1,
+        peer_drops: 2,
+        row_renorms: 3,
+        fallback_rounds: 4,
+        spans_dropped: 0,
+        pool_panics: 0,
+    };
+    let doc = chrome::export(&data, &counters);
+    chrome::validate(&doc).expect("fresh export validates");
+
+    // The canonical round-trip the `trace` subcommand performs.
+    let reparsed = Json::parse(&doc.dump()).expect("dumped trace parses");
+    chrome::validate(&reparsed).expect("reparsed trace validates");
+
+    let summary = chrome::summarize(&reparsed).expect("summary renders");
+    for needle in ["gossip", "global_average", "ev_deliver", "cluster", "node 2", "counters:"] {
+        assert!(summary.contains(needle), "summary missing '{needle}':\n{summary}");
+    }
+    assert!(summary.contains("peer_drops=2"), "{summary}");
+
+    // Every X event names a known phase, and the metadata names pid 0.
+    let events = reparsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+    let known: Vec<&str> = Phase::ALL.iter().map(|p| p.name()).collect();
+    for ev in events {
+        if ev.get("ph").and_then(|p| p.as_str()) == Some("X") {
+            let name = ev.get("name").and_then(|n| n.as_str()).unwrap();
+            assert!(known.contains(&name), "unknown phase '{name}' in export");
+        }
+    }
+    assert!(doc.dump().contains("\"cluster\""), "pid 0 metadata names the cluster track");
+}
+
+#[test]
+fn validate_rejects_non_monotone_and_malformed_events() {
+    // Backwards ts on one tid.
+    let backwards = Json::parse(
+        r#"{"traceEvents":[
+            {"name":"a","ph":"X","pid":0,"tid":0,"ts":10.0,"dur":1.0},
+            {"name":"b","ph":"X","pid":0,"tid":0,"ts":5.0,"dur":1.0}
+        ]}"#,
+    )
+    .unwrap();
+    let err = format!("{:#}", chrome::validate(&backwards).unwrap_err());
+    assert!(err.contains("goes backwards"), "{err}");
+
+    // Interleaved tids are each monotone: fine.
+    let interleaved = Json::parse(
+        r#"{"traceEvents":[
+            {"name":"a","ph":"X","pid":0,"tid":0,"ts":10.0,"dur":1.0},
+            {"name":"b","ph":"X","pid":0,"tid":1,"ts":5.0,"dur":1.0},
+            {"name":"c","ph":"X","pid":0,"tid":0,"ts":11.0,"dur":0.0}
+        ]}"#,
+    )
+    .unwrap();
+    chrome::validate(&interleaved).expect("per-tid monotonicity only");
+
+    // Unknown phase type, missing field, negative dur.
+    for (body, needle) in [
+        (r#"{"traceEvents":[{"name":"a","ph":"Z","pid":0,"tid":0,"ts":0.0}]}"#, "unknown phase"),
+        (r#"{"traceEvents":[{"name":"a","ph":"X","pid":0,"tid":0}]}"#, "missing field 'ts'"),
+        (
+            r#"{"traceEvents":[{"name":"a","ph":"X","pid":0,"tid":0,"ts":0.0,"dur":-1.0}]}"#,
+            "negative dur",
+        ),
+        (r#"{"notTraceEvents":[]}"#, "missing 'traceEvents'"),
+    ] {
+        let doc = Json::parse(body).unwrap();
+        let err = format!("{:#}", chrome::validate(&doc).unwrap_err());
+        assert!(err.contains(needle), "'{needle}' not in '{err}'");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// `trace` subcommand error surface (chrome::load is what it calls).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trace_file_load_reports_actionable_errors() {
+    let dir = std::env::temp_dir();
+    let tag = std::process::id();
+
+    // Missing file.
+    let missing = dir.join(format!("obs_trace_missing_{tag}.json"));
+    let err = format!("{:#}", chrome::load(&missing).unwrap_err());
+    assert!(err.contains("cannot read trace file"), "{err}");
+
+    // Malformed JSON.
+    let malformed = dir.join(format!("obs_trace_malformed_{tag}.json"));
+    std::fs::write(&malformed, "{not json").unwrap();
+    let err = format!("{:#}", chrome::load(&malformed).unwrap_err());
+    assert!(err.contains("not valid JSON"), "{err}");
+    std::fs::remove_file(&malformed).ok();
+
+    // Valid JSON, not a trace document.
+    let nontrace = dir.join(format!("obs_trace_nontrace_{tag}.json"));
+    std::fs::write(&nontrace, "{\"hello\": 1}").unwrap();
+    let err = format!("{:#}", chrome::load(&nontrace).unwrap_err());
+    assert!(err.contains("not a chrome trace-event document"), "{err}");
+    std::fs::remove_file(&nontrace).ok();
+
+    // A real export loads back.
+    let _g = serial();
+    obs::start(8);
+    obs::instant(Phase::EvReady, 1, 0.0);
+    let data = obs::stop_and_collect();
+    let good = dir.join(format!("obs_trace_good_{tag}.json"));
+    std::fs::write(&good, chrome::export(&data, &Counters::default()).dump()).unwrap();
+    let doc = chrome::load(&good).expect("a written trace loads back");
+    assert!(chrome::summarize(&doc).is_ok());
+    std::fs::remove_file(&good).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Warn-once: the swappable sink is assertable from outside the crate.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn warn_once_capture_asserts_exactly_one_firing() {
+    let cap = obs::capture_warnings();
+    assert!(gossip_pga::warn_once!("obs-trace.integration", "fired with value {}", 7));
+    assert!(!gossip_pga::warn_once!("obs-trace.integration", "suppressed"));
+    assert!(!obs::warn_once!("obs-trace.integration", "suppressed via the obs re-export"));
+    let got = cap.drain();
+    let mine: Vec<&String> =
+        got.iter().filter(|m| m.starts_with("[obs-trace.integration]")).collect();
+    assert_eq!(mine.len(), 1, "exactly one firing per key: {got:?}");
+    assert!(mine[0].contains("fired with value 7"));
+}
+
+// ---------------------------------------------------------------------------
+// BENCH_10 schema gate (same pattern as the overlap_wire BENCH_9 gate).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bench_ten_schema_holds_when_the_artifact_exists() {
+    // The bench may not have run on this box; when BENCH_10.json IS there,
+    // hold it to the schema EXPERIMENTS.md §Observability reads.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_10.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!("BENCH_10.json absent — run `cargo bench --bench perf_hotpath` to emit it");
+        return;
+    };
+    let doc = Json::parse(&text).expect("BENCH_10.json parses");
+    assert_eq!(
+        doc.get("bench").and_then(|j| match j {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }),
+        Some("obs_trace")
+    );
+    let Some(Json::Arr(rows)) = doc.get("tracing_rows") else {
+        panic!("BENCH_10.json missing array 'tracing_rows'");
+    };
+    assert!(!rows.is_empty(), "'tracing_rows' must not be empty");
+    for row in rows {
+        for field in
+            ["backend", "traced", "rounds", "n", "d", "mean_seconds", "spans", "bit_equal"]
+        {
+            assert!(row.get(field).is_some(), "tracing_rows row missing '{field}'");
+        }
+        // The in-bench bit-equality assertion must have actually held.
+        assert_eq!(row.get("bit_equal"), Some(&Json::Bool(true)), "tracing_rows: bit_equal");
+    }
+}

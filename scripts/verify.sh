@@ -54,6 +54,13 @@
 #      checkpoint-restore stale-tally re-baseline, and the BENCH_9.json
 #      schema gate (the backend replay layers need no AOT artifacts;
 #      every socket test binds 127.0.0.1:0 under a watchdog)
+#  12. observability smoke at PROPTEST_CASES=16: the trace plane — traced
+#      replays bit-identical to untraced on shared/bus/tcp (sync and
+#      pipelined), drop-oldest ring overflow tallied in spans_dropped,
+#      chrome export round-trips dump -> parse -> validate with monotone
+#      ts per tid, `trace` subcommand error surface, warn-once capture,
+#      and the BENCH_10.json schema gate (the backend replay layers need
+#      no AOT artifacts; the trainer-level test skips without them)
 #
 # Usage: scripts/verify.sh [--fast]
 #   --fast   sets GOSSIP_PGA_FAST=1 so bench-derived tests run at reduced
@@ -116,5 +123,8 @@ PROPTEST_CASES=16 GOSSIP_PGA_TEST_THREADS=1 cargo test -q --test overlap_wire
 
 echo "==> overlap on the wire: bus + tcp async gossip == BSP, zero fallbacks (threads=4)"
 PROPTEST_CASES=16 GOSSIP_PGA_TEST_THREADS=4 cargo test -q --test overlap_wire
+
+echo "==> observability: traced == untraced bit-for-bit + chrome schema + warn-once"
+PROPTEST_CASES=16 cargo test -q --test obs_trace
 
 echo "==> verify OK"
